@@ -1,0 +1,38 @@
+//! Gromov–Wasserstein with FTFI (Appendix D.2 / Fig. 10): the conditional-
+//! gradient GW solver with its inner `C₁·T·C₂` products running through
+//! FTFI vs the dense baseline, on random trees of growing size.
+//!
+//! Run: `cargo run --release --example gw_distance`
+
+use ftfi::bench_util::time_once;
+use ftfi::graph::generators;
+use ftfi::ml::rng::Pcg;
+use ftfi::ot::gw::{gromov_wasserstein, GwBackend, GwParams};
+use ftfi::ot::sinkhorn::uniform_marginal;
+
+fn main() {
+    println!(
+        "{:>6} {:>12} {:>12} {:>10} {:>10} {:>9}",
+        "n", "GW dense", "GW ftfi", "int dense", "int ftfi", "speedup"
+    );
+    let params = GwParams { max_iter: 15, ..Default::default() };
+    for &n in &[50usize, 100, 200, 400] {
+        let mut rng = Pcg::seed(5);
+        let ta = generators::random_tree(n, 0.1, 1.0, &mut rng);
+        let tb = generators::random_tree(n, 0.1, 1.0, &mut rng);
+        let p = uniform_marginal(n);
+        let (rd, _) =
+            time_once(|| gromov_wasserstein(&ta, &tb, &p, &p, GwBackend::Dense, &params));
+        let (rf, _) =
+            time_once(|| gromov_wasserstein(&ta, &tb, &p, &p, GwBackend::Ftfi, &params));
+        println!(
+            "{n:>6} {:>12.5} {:>12.5} {:>9.3}s {:>9.3}s {:>8.1}x",
+            rd.discrepancy,
+            rf.discrepancy,
+            rd.integration_seconds,
+            rf.integration_seconds,
+            rd.integration_seconds / rf.integration_seconds.max(1e-9)
+        );
+    }
+    println!("\n(Fig. 10 claim: FTFI-GW integration 2–6x faster with no accuracy drop.)");
+}

@@ -1,0 +1,3 @@
+# Build-time compile path: JAX/Pallas model definitions lowered once to
+# HLO text by aot.py. Nothing here runs at serving time — the rust
+# coordinator loads the artifacts via PJRT.

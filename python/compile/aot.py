@@ -1,0 +1,110 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts + initial parameters.
+
+HLO text (never `.serialize()`): jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which the runtime's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and DESIGN.md).
+
+Artifacts (under --out-dir, default ./artifacts):
+  topvit_fwd_b{B}.hlo.txt   inference forward (Pallas kernel), batches 1/8
+  topvit_train_b{B}.hlo.txt one SGD train step (reference math), batch 32
+  topvit_init_masked.bin    flat f32 initial parameters (masked variant)
+  topvit_init_unmasked.bin  … with zeroed mask parameters (baseline)
+  topvit_manifest.txt       parameter names/shapes in AOT order
+  sanity_matmul.hlo.txt     tiny artifact for runtime smoke tests
+
+Usage: python -m compile.aot [--out-dir DIR]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>10} chars  {path}")
+
+
+def dump_params(path: str, params: list[np.ndarray]) -> None:
+    flat = np.concatenate([p.ravel() for p in params]).astype("<f4")
+    flat.tofile(path)
+    print(f"wrote {flat.nbytes:>10} bytes  {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--fwd-batches", type=int, nargs="*", default=[1, 8])
+    ap.add_argument("--train-batch", type=int, default=32)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params = model.init_params(seed=0, masked=True)
+    spec = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params]
+
+    # --- inference artifacts (Pallas kernel on the hot path) ---
+    for b in args.fwd_batches:
+        img = jax.ShapeDtypeStruct((b, model.IMG, model.IMG), jnp.float32)
+
+        def fwd(*xs):
+            *p, images = xs
+            return (model.forward(list(p), images),)
+
+        write(
+            os.path.join(args.out_dir, f"topvit_fwd_b{b}.hlo.txt"),
+            to_hlo_text(fwd, *spec, img),
+        )
+
+    # --- train-step artifact (reference math; see kernels/ref.py) ---
+    b = args.train_batch
+    img = jax.ShapeDtypeStruct((b, model.IMG, model.IMG), jnp.float32)
+    lab = jax.ShapeDtypeStruct((b,), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def step(*xs):
+        *p, images, labels, lr = xs
+        return model.train_step(list(p), images, labels, lr)
+
+    write(
+        os.path.join(args.out_dir, f"topvit_train_b{b}.hlo.txt"),
+        to_hlo_text(step, *spec, img, lab, lr),
+    )
+
+    # --- parameters + manifest ---
+    dump_params(os.path.join(args.out_dir, "topvit_init_masked.bin"), params)
+    dump_params(
+        os.path.join(args.out_dir, "topvit_init_unmasked.bin"),
+        model.init_params(seed=0, masked=False),
+    )
+    manifest = "\n".join(
+        f"{name} {' '.join(map(str, shape))}" for name, shape in model.PARAM_SHAPES
+    )
+    write(os.path.join(args.out_dir, "topvit_manifest.txt"), manifest + "\n")
+
+    # --- runtime smoke artifact ---
+    def sanity(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    s = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    write(os.path.join(args.out_dir, "sanity_matmul.hlo.txt"), to_hlo_text(sanity, s, s))
+
+
+if __name__ == "__main__":
+    main()

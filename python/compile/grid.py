@@ -1,0 +1,57 @@
+"""Patch-grid topology for the Topological ViT mask (§4.4).
+
+The image is encoded as a 2-D grid graph over patches; the mask matrix is
+an f-distance matrix on the **minimum spanning tree** of that grid. For a
+unit-weight grid every spanning tree is minimal, so we use the canonical
+serpentine spanning tree (deterministic, matches the rust side's
+`generators::grid_2d` + Kruskal on equal weights only up to tie-breaking;
+what matters for the experiments is that both sides use *a* fixed MST of
+the same grid, and this module is the single source of truth for the
+compiled model's mask distances).
+"""
+
+from collections import deque
+
+import numpy as np
+
+
+def grid_mst_edges(rows: int, cols: int) -> list[tuple[int, int]]:
+    """A deterministic spanning tree of the rows×cols grid.
+
+    Comb shape: the full first column plus every row — a valid MST for
+    unit weights (n-1 edges, connected, all weight 1).
+    """
+    edges = []
+    for r in range(rows - 1):
+        edges.append((r * cols, (r + 1) * cols))  # spine down column 0
+    for r in range(rows):
+        for c in range(cols - 1):
+            edges.append((r * cols + c, r * cols + c + 1))  # teeth
+    assert len(edges) == rows * cols - 1
+    return edges
+
+
+def tree_distance_matrix(n: int, edges: list[tuple[int, int]]) -> np.ndarray:
+    """All-pairs hop distances on the tree via BFS from every vertex."""
+    adj: list[list[int]] = [[] for _ in range(n)]
+    for u, v in edges:
+        adj[u].append(v)
+        adj[v].append(u)
+    dist = np.zeros((n, n), dtype=np.float32)
+    for s in range(n):
+        seen = [False] * n
+        seen[s] = True
+        q = deque([(s, 0)])
+        while q:
+            v, d = q.popleft()
+            dist[s, v] = d
+            for u in adj[v]:
+                if not seen[u]:
+                    seen[u] = True
+                    q.append((u, d + 1))
+    return dist
+
+
+def patch_grid_distances(rows: int, cols: int) -> np.ndarray:
+    """Mask distances for a rows×cols patch grid (float32, (L, L))."""
+    return tree_distance_matrix(rows * cols, grid_mst_edges(rows, cols))

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: fused masked low-rank (performer) attention.
+
+Implements Algorithm 1's hot spot — the mask-weighted numerator and
+denominator contractions — as a single Pallas kernel so the masked
+attention never materialises the L×L attention matrix A = M ⊙ (Q'K'ᵀ) in
+HBM: per query block only the (block, L) mask strip and the (L, m)/(L, d)
+key/value panels stream through VMEM, and both the (m·d) numerator state
+and the denominator accumulate in registers/VMEM scratch.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+  - block shapes are (BLOCK_L, ·) with the trailing dims padded to the
+    (8, 128) VPU lanes; the two einsums map onto the MXU as
+    (block×L)·(L×m·d) matmuls in bf16-friendly layouts;
+  - `interpret=True` everywhere — the CPU PJRT plugin cannot execute
+    Mosaic custom-calls, and the interpreter is bit-faithful for fp32.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of queries processed per grid step. 16 keeps the working set
+# (mask strip + k/v panels + accumulators) ≈ 16·L·4B + L·(m+d)·4B — well
+# under 16 MB VMEM for every shape this repo compiles (L ≤ 1024).
+BLOCK_L = 16
+
+
+def _masked_attention_kernel(qp_ref, kp_ref, v_ref, mask_ref, out_ref):
+    """One grid step: BLOCK_L queries against all L keys."""
+    qp = qp_ref[...]  # (BLOCK_L, m)
+    kp = kp_ref[...]  # (L, m)
+    v = v_ref[...]  # (L, d)
+    mask = mask_ref[...]  # (BLOCK_L, L)
+    # A-block = M ⊙ (Q'K'ᵀ) for this strip only (never the full L×L).
+    a = mask * jnp.dot(qp, kp.T)  # (BLOCK_L, L)
+    num = jnp.dot(a, v)  # (BLOCK_L, d) — MXU matmul
+    den = jnp.sum(a, axis=1, keepdims=True)  # (BLOCK_L, 1)
+    out_ref[...] = num / (den + 1e-6)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_attention(qp, kp, v, mask, interpret=True):
+    """Fused masked performer attention.
+
+    Args:
+      qp: (L, m) φ(q) features. L must be a multiple of BLOCK_L.
+      kp: (L, m) φ(k) features.
+      v: (L, d) values.
+      mask: (L, L) mask matrix.
+
+    Returns:
+      (L, d) masked attention output (same math as
+      `ref.masked_performer_attention_ref`).
+    """
+    L, m = qp.shape
+    d = v.shape[1]
+    assert L % BLOCK_L == 0, f"L={L} must be a multiple of {BLOCK_L}"
+    grid = (L // BLOCK_L,)
+    return pl.pallas_call(
+        _masked_attention_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_L, m), lambda i: (i, 0)),
+            pl.BlockSpec((L, m), lambda i: (0, 0)),
+            pl.BlockSpec((L, d), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_L, L), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_L, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, d), qp.dtype),
+        interpret=interpret,
+    )(qp, kp, v, mask)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the masked low-rank attention kernel.
+
+These are the correctness ground truth for the Pallas kernel
+(`masked_attention.py`), and also the implementation used inside the
+*training* artifact: `pallas_call` has no automatic VJP, so the train-step
+HLO is lowered from this reference math (numerically identical — pytest
+asserts the kernel matches to fp32 tolerance) while the inference
+artifacts use the kernel.
+"""
+
+import jax.numpy as jnp
+
+
+def masked_performer_attention_ref(qp, kp, v, mask):
+    """General masked low-rank attention (Algorithm 1, materialised form).
+
+    Args:
+      qp: (L, m) query features φ(q_i).
+      kp: (L, m) key features φ(k_j).
+      v:  (L, d) values.
+      mask: (L, L) mask matrix M.
+
+    Returns:
+      (L, d) attention output r_i = Σ_j M_ij·(φ(q_i)·φ(k_j))·v_j
+                                   / Σ_j M_ij·(φ(q_i)·φ(k_j)).
+    """
+    a = mask * (qp @ kp.T)  # (L, L) masked attention matrix
+    num = a @ v  # (L, d)
+    den = a.sum(axis=1, keepdims=True)  # (L, 1)
+    return num / (den + 1e-6)
+
+
+def masked_performer_attention_alg1(qp, kp, v, mask):
+    """Algorithm 1 exactly as written: never materialises A = M ⊙ (Q'K'ᵀ).
+
+    V¹_i = vec(φ(k_i)·v_iᵀ) ∈ R^{m·d};  D̃¹ = M·V¹;  D̃² = M·φ(K);
+    r_i = φ(q_i)ᵀ·devec(D̃¹_i) / φ(q_i)ᵀ·D̃²_i.
+    """
+    L, m = qp.shape
+    d = v.shape[1]
+    v1 = (kp[:, :, None] * v[:, None, :]).reshape(L, m * d)
+    d1 = (mask @ v1).reshape(L, m, d)
+    d2 = mask @ kp  # (L, m)
+    num = jnp.einsum("lm,lmd->ld", qp, d1)
+    den = jnp.einsum("lm,lm->l", qp, d2)[:, None]
+    return num / (den + 1e-6)

@@ -1,0 +1,87 @@
+"""L2 correctness: TopViT-mini shapes, masking semantics, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params():
+    return [jnp.asarray(p) for p in model.init_params(seed=0, masked=True)]
+
+
+def _images(b, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((b, model.IMG, model.IMG)), jnp.float32)
+
+
+def test_param_manifest_consistent():
+    params = model.init_params()
+    assert len(params) == len(model.PARAM_SHAPES)
+    for p, (_, shape) in zip(params, model.PARAM_SHAPES):
+        assert p.shape == shape
+    # 3 mask parameters per layer — the paper's headline count.
+    mask_params = [n for n, _ in model.PARAM_SHAPES if n.endswith("mask_a")]
+    assert len(mask_params) == model.N_LAYERS
+
+
+def test_forward_shapes():
+    p = _params()
+    for b in (1, 4):
+        logits = model.forward_ref(p, _images(b))
+        assert logits.shape == (b, model.N_CLASSES)
+        assert bool(jnp.isfinite(logits).all())
+
+
+def test_pallas_and_ref_forward_agree():
+    p = _params()
+    x = _images(2, seed=1)
+    a = model.forward(p, x)  # pallas path
+    b = model.forward_ref(p, x)  # jnp path
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_unmasked_init_gives_uniform_mask():
+    p = model.init_params(masked=False)
+    pd = model.params_dict(p)
+    m = model._mask_matrix(jnp.asarray(pd["blk0_mask_a"]))
+    np.testing.assert_allclose(np.asarray(m), 1.0, rtol=0, atol=0)
+
+
+def test_mask_parameters_change_output():
+    p = _params()
+    x = _images(2, seed=2)
+    base = np.asarray(model.forward_ref(p, x))
+    pd_index = [i for i, (n, _) in enumerate(model.PARAM_SHAPES) if n == "blk0_mask_a"][0]
+    p2 = list(p)
+    p2[pd_index] = jnp.asarray([0.0, -1.5, 0.0], jnp.float32)
+    changed = np.asarray(model.forward_ref(p2, x))
+    assert np.abs(base - changed).max() > 1e-4
+
+
+def test_train_step_reduces_loss():
+    p = _params()
+    rng = np.random.default_rng(3)
+    x = _images(32, seed=3)
+    y = jnp.asarray(rng.integers(0, model.N_CLASSES, 32), jnp.int32)
+    lr = jnp.float32(0.05)
+    l0 = model.loss_fn(list(p), x, y)
+    cur = list(p)
+    for _ in range(10):
+        *cur, loss = model.train_step(cur, x, y, lr)
+        cur = list(cur)
+    assert float(loss) < float(l0), f"{float(loss)} !< {float(l0)}"
+
+
+def test_gradients_flow_to_mask_params():
+    p = _params()
+    rng = np.random.default_rng(4)
+    x = _images(8, seed=4)
+    y = jnp.asarray(rng.integers(0, model.N_CLASSES, 8), jnp.int32)
+    grads = jax.grad(model.loss_fn)(list(p), x, y)
+    names = [n for n, _ in model.PARAM_SHAPES]
+    g_mask = grads[names.index("blk0_mask_a")]
+    assert float(jnp.abs(g_mask).max()) > 0.0

@@ -1,0 +1,68 @@
+//! Fig. 3: runtime of FTFI vs BTFI as a function of vertex count, on
+//! (left) the synthetic path+random-edges graphs and (right) procedural
+//! meshes (the Thingi10K substitute). Reports preprocessing and
+//! integration separately, plus the end-to-end speedup — the paper's
+//! headline claim is 5.7×+ (synthetic ≥10K) and up to 13× (20K meshes).
+//!
+//! Run: `cargo bench --bench fig3_runtime`
+
+use ftfi::bench_util::{banner, time_once, Table};
+use ftfi::ftfi::brute::btfi_streaming;
+use ftfi::ftfi::functions::FDist;
+use ftfi::graph::mesh::mesh_zoo;
+use ftfi::graph::mst::minimum_spanning_tree;
+use ftfi::graph::{generators, Graph};
+use ftfi::linalg::matrix::Matrix;
+use ftfi::ml::rng::Pcg;
+use ftfi::TreeFieldIntegrator;
+
+fn run_point(name: &str, g: &Graph, f: &FDist, table: &Table) {
+    let n = g.n();
+    let mut rng = Pcg::seed(n as u64);
+    let tree = minimum_spanning_tree(g);
+    let x = Matrix::randn(n, 1, &mut rng);
+
+    let (tfi, t_pre) = time_once(|| TreeFieldIntegrator::new(&tree));
+    let (fast, t_int) = time_once(|| tfi.integrate(f, &x));
+    let (slow, t_brute) = time_once(|| btfi_streaming(&tree, f, &x));
+    let rel = fast.frobenius_diff(&slow) / (1.0 + slow.frobenius());
+    let speedup = t_brute / (t_pre + t_int);
+    table.row(&[
+        name.to_string(),
+        n.to_string(),
+        format!("{:.3}", t_pre),
+        format!("{:.3}", t_int),
+        format!("{:.3}", t_brute),
+        format!("{:.1}x", speedup),
+        format!("{rel:.1e}"),
+    ]);
+}
+
+fn main() {
+    let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+
+    banner("Fig 3 (left): synthetic path + random edges, f(x)=e^{-x/2}");
+    let table = Table::new(
+        &["graph", "N", "FTFI pre (s)", "FTFI int (s)", "BTFI (s)", "speedup", "rel err"],
+        &[10, 7, 12, 12, 10, 8, 9],
+    );
+    for &n in &[1000usize, 2000, 5000, 10_000, 20_000] {
+        let mut rng = Pcg::seed(1);
+        let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+        run_point("synth", &g, &f, &table);
+    }
+
+    banner("Fig 3 (right): procedural meshes (Thingi10K substitute)");
+    let table = Table::new(
+        &["mesh", "N", "FTFI pre (s)", "FTFI int (s)", "BTFI (s)", "speedup", "rel err"],
+        &[10, 7, 12, 12, 10, 8, 9],
+    );
+    for &target in &[1000usize, 4000, 10_000, 20_000] {
+        for (name, mesh) in mesh_zoo(target, 7) {
+            if name == "torus" {
+                continue; // one closed + one open surface suffice per size
+            }
+            run_point(&name, &mesh.to_graph(), &f, &table);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Fig. 4: vertex-normal interpolation on meshes — preprocessing time and
+//! cosine similarity for FTFI vs BGFI (exact graph kernel), BTFI
+//! (materialised tree kernel), Bartal and FRT probabilistic trees.
+//!
+//! Run: `cargo bench --bench fig4_mesh`
+
+use ftfi::bench_util::{banner, time_once, Table};
+use ftfi::ftfi::brute::{f_distance_matrix_graph, BruteTreeIntegrator};
+use ftfi::ftfi::functions::FDist;
+use ftfi::graph::mesh::mesh_zoo;
+use ftfi::graph::mst::minimum_spanning_tree;
+use ftfi::linalg::matrix::{cosine_similarity, Matrix};
+use ftfi::ml::rng::Pcg;
+use ftfi::tree::bartal::bartal_tree;
+use ftfi::tree::frt::frt_tree;
+use ftfi::TreeFieldIntegrator;
+
+fn mean_cos(pred: &Matrix, truth: &[[f64; 3]], masked: &[bool]) -> f64 {
+    let mut total = 0.0;
+    let mut count = 0;
+    for (i, &m) in masked.iter().enumerate() {
+        if m {
+            total += cosine_similarity(pred.row(i), &truth[i]);
+            count += 1;
+        }
+    }
+    total / count.max(1) as f64
+}
+
+fn main() {
+    banner("Fig 4: mesh interpolation — preprocessing time vs cosine similarity");
+    let table = Table::new(
+        &["mesh", "N", "method", "preprocess (s)", "cosine"],
+        &[9, 7, 8, 14, 8],
+    );
+    // Grid-search λ per mesh like the paper (small grid keeps runtime sane).
+    let lambdas = [1.0, 4.0, 16.0];
+    for &target in &[1000usize, 3000] {
+        for (name, mesh) in mesh_zoo(target, 42) {
+            let n = mesh.n_vertices();
+            let g = mesh.to_graph();
+            let mut rng = Pcg::seed(5);
+            let mut masked = vec![true; n];
+            for i in rng.sample_distinct(n, n / 5) {
+                masked[i] = false;
+            }
+            let mut field = Matrix::zeros(n, 3);
+            for i in 0..n {
+                if !masked[i] {
+                    field.row_mut(i).copy_from_slice(&mesh.normals[i]);
+                }
+            }
+            let best = |preds: Vec<(f64, Matrix)>| -> (f64, f64) {
+                preds
+                    .into_iter()
+                    .map(|(t, p)| (t, mean_cos(&p, &mesh.normals, &masked)))
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .unwrap()
+            };
+
+            // FTFI on the MST (preprocessing = MST + IT build, reused per λ).
+            let (tree, t_mst) = time_once(|| minimum_spanning_tree(&g));
+            let (tfi, t_it) = time_once(|| TreeFieldIntegrator::new(&tree));
+            let (_, c) = best(
+                lambdas
+                    .iter()
+                    .map(|&l| (0.0, tfi.integrate(&FDist::inverse_quadratic(l), &field)))
+                    .collect(),
+            );
+            table.row(&[name.clone(), n.to_string(), "FTFI".into(), format!("{:.3}", t_mst + t_it), format!("{c:.4}")]);
+
+            // BTFI: materialised tree kernel per λ (preprocess = worst λ).
+            let mut t_btfi = 0.0;
+            let (_, c_btfi) = best(
+                lambdas
+                    .iter()
+                    .map(|&l| {
+                        let (b, t) =
+                            time_once(|| BruteTreeIntegrator::new(&tree, &FDist::inverse_quadratic(l)));
+                        t_btfi += t;
+                        (t, b.integrate(&field))
+                    })
+                    .collect(),
+            );
+            table.row(&[name.clone(), n.to_string(), "BTFI".into(), format!("{t_btfi:.3}"), format!("{c_btfi:.4}")]);
+
+            // BGFI: exact graph kernel per λ.
+            let mut t_bgfi = 0.0;
+            let (_, c_bgfi) = best(
+                lambdas
+                    .iter()
+                    .map(|&l| {
+                        let (k, t) =
+                            time_once(|| f_distance_matrix_graph(&g, &FDist::inverse_quadratic(l)));
+                        t_bgfi += t;
+                        (t, k.matmul(&field))
+                    })
+                    .collect(),
+            );
+            table.row(&[name.clone(), n.to_string(), "BGFI".into(), format!("{t_bgfi:.3}"), format!("{c_bgfi:.4}")]);
+
+            // FRT + Bartal probabilistic trees (preprocess = embedding).
+            let (emb, t_frt) = time_once(|| frt_tree(&g, &mut rng));
+            let frt_int = TreeFieldIntegrator::new(&emb.tree);
+            let (_, c_frt) = best(
+                lambdas
+                    .iter()
+                    .map(|&l| {
+                        (0.0, emb.restrict_field(&frt_int.integrate(&FDist::inverse_quadratic(l), &emb.lift_field(&field))))
+                    })
+                    .collect(),
+            );
+            table.row(&[name.clone(), n.to_string(), "FRT".into(), format!("{t_frt:.3}"), format!("{c_frt:.4}")]);
+
+            let (emb_b, t_bar) = time_once(|| bartal_tree(&g, &mut rng));
+            let bar_int = TreeFieldIntegrator::new(&emb_b.tree);
+            let (_, c_bar) = best(
+                lambdas
+                    .iter()
+                    .map(|&l| {
+                        (0.0, emb_b.restrict_field(&bar_int.integrate(&FDist::inverse_quadratic(l), &emb_b.lift_field(&field))))
+                    })
+                    .collect(),
+            );
+            table.row(&[name, n.to_string(), "Bartal".into(), format!("{t_bar:.3}"), format!("{c_bar:.4}")]);
+        }
+    }
+}

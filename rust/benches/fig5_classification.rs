@@ -1,0 +1,85 @@
+//! Fig. 5 + Table 4: graph classification accuracy vs feature-processing
+//! time, FTFI vs BGFI, over the synthetic TU-style datasets (sizes per
+//! Table 2). 5-fold stratified CV with a random forest over the k
+//! smallest kernel eigenvalues (de Lara & Pineau 2018).
+//!
+//! Run: `cargo bench --bench fig5_classification`
+
+use ftfi::bench_util::{banner, time_once, Table};
+use ftfi::ftfi::brute::f_distance_matrix_graph;
+use ftfi::ftfi::functions::FDist;
+use ftfi::graph::tu_dataset::{generate, standard_specs};
+use ftfi::graph::Graph;
+use ftfi::linalg::eigen::lanczos_smallest;
+use ftfi::ml::dataset::{fold_split, stratified_kfold};
+use ftfi::ml::metrics::{accuracy, mean_std};
+use ftfi::ml::random_forest::{ForestParams, RandomForest};
+use ftfi::ml::rng::Pcg;
+use ftfi::GraphFieldIntegrator;
+
+const K_EIG: usize = 6;
+
+fn features(g: &Graph, use_ftfi: bool, rng: &mut Pcg) -> Vec<f64> {
+    let f = FDist::Identity;
+    let eig = if use_ftfi {
+        let gfi = GraphFieldIntegrator::new(g);
+        lanczos_smallest(
+            g.n(),
+            K_EIG.min(g.n()),
+            |v| gfi.integrate(&f, &ftfi::Matrix::from_vec(v.len(), 1, v.to_vec())).into_vec(),
+            rng,
+        )
+    } else {
+        let m = f_distance_matrix_graph(g, &f);
+        lanczos_smallest(g.n(), K_EIG.min(g.n()), |v| m.matvec(v), rng)
+    };
+    eig.into_iter().chain(std::iter::repeat(0.0)).take(K_EIG).collect()
+}
+
+fn main() {
+    banner("Fig 5 / Table 4: accuracy vs feature-processing time (FTFI vs BGFI)");
+    let table = Table::new(
+        &["dataset", "graphs", "FTFI acc", "±", "BGFI acc", "±", "FTFI fp(s)", "BGFI fp(s)", "Δfp"],
+        &[14, 7, 9, 6, 9, 6, 10, 10, 7],
+    );
+    for spec in standard_specs() {
+        let ds = generate(&spec, 1);
+        let mut row: Vec<String> = vec![ds.name.clone(), ds.graphs.len().to_string()];
+        let mut fp = [0.0f64; 2];
+        for (slot, use_ftfi) in [(0usize, true), (1usize, false)] {
+            let mut rng = Pcg::seed(17);
+            let (feats, fp_time) = time_once(|| {
+                ds.graphs.iter().map(|g| features(g, use_ftfi, &mut rng)).collect::<Vec<_>>()
+            });
+            fp[slot] = fp_time;
+            // 5-fold CV, 3 repeats.
+            let mut accs = Vec::new();
+            for rep in 0..3u64 {
+                let mut r = Pcg::seed(100 + rep);
+                let folds = stratified_kfold(&ds.labels, 5, &mut r);
+                for f in 0..folds.len() {
+                    let (tr, te) = fold_split(&folds, f);
+                    let xtr: Vec<Vec<f64>> = tr.iter().map(|&i| feats[i].clone()).collect();
+                    let ytr: Vec<usize> = tr.iter().map(|&i| ds.labels[i]).collect();
+                    let rf = RandomForest::fit(&xtr, &ytr, &ForestParams::default(), &mut r);
+                    let pred: Vec<usize> = te.iter().map(|&i| rf.predict(&feats[i])).collect();
+                    let truth: Vec<usize> = te.iter().map(|&i| ds.labels[i]).collect();
+                    accs.push(accuracy(&pred, &truth));
+                }
+            }
+            let (m, s) = mean_std(&accs);
+            row.push(format!("{m:.3}"));
+            row.push(format!("{s:.3}"));
+        }
+        let dfp = (fp[1] - fp[0]) / fp[1].max(1e-9) * 100.0;
+        row.push(format!("{:.2}", fp[0]));
+        row.push(format!("{:.2}", fp[1]));
+        row.push(format!("{dfp:+.0}%"));
+        table.row(&row);
+    }
+    println!(
+        "\n(Paper's Fig 5/Table 3: FTFI reduces fp time up to 90% on the large datasets\n\
+         while matching BGFI accuracy within noise; small datasets can be slightly\n\
+         negative — same shape as the paper's MUTAG/PTC rows.)"
+    );
+}

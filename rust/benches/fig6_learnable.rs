@@ -1,0 +1,84 @@
+//! Fig. 6 / Fig. 8: learnable f-distance matrices — relative Frobenius
+//! error vs training iterations for different graph sizes (left), and
+//! rational degrees (middle: synthetic graph, right: mesh graph).
+//!
+//! Run: `cargo bench --bench fig6_learnable`
+
+use ftfi::bench_util::banner;
+use ftfi::graph::mesh::mesh_zoo;
+use ftfi::graph::mst::minimum_spanning_tree;
+use ftfi::graph::{generators, Graph};
+use ftfi::ml::fit_rational::{fit, relative_frobenius_error, sample_pairs, RationalModel};
+use ftfi::ml::rng::Pcg;
+
+/// Error trace at checkpoints during training.
+fn error_curve(g: &Graph, num_deg: usize, den_deg: usize, iters: &[usize]) -> Vec<f64> {
+    let tree = minimum_spanning_tree(g);
+    let mut rng = Pcg::seed(9);
+    let data = sample_pairs(g, &tree, 100, &mut rng);
+    let mut out = Vec::new();
+    let mut model = RationalModel::new(num_deg, den_deg);
+    let mut done = 0;
+    for &it in iters {
+        fit(&mut model, &data, it - done, 0.02);
+        done = it;
+        out.push(relative_frobenius_error(g, &tree, &model.to_fdist()));
+    }
+    out
+}
+
+fn main() {
+    let checkpoints = [0usize, 25, 50, 100, 200, 400];
+
+    banner("Fig 6 (left): rel. Frobenius error vs iterations, quadratic f, sizes n");
+    print!("{:>6}", "n");
+    for c in &checkpoints {
+        print!("{c:>9}");
+    }
+    println!();
+    for &n in &[200usize, 400, 800] {
+        let mut rng = Pcg::seed(1);
+        let g = generators::path_plus_random_edges(n, 3 * n / 4, &mut rng);
+        let curve = error_curve(&g, 2, 2, &checkpoints);
+        print!("{n:>6}");
+        for e in curve {
+            print!("{e:>9.4}");
+        }
+        println!();
+    }
+
+    banner("Fig 6 (middle): degrees sweep on path(800)+600 random edges");
+    print!("{:>12}", "num:den");
+    for c in &checkpoints {
+        print!("{c:>9}");
+    }
+    println!();
+    let mut rng = Pcg::seed(2);
+    let g = generators::path_plus_random_edges(800, 600, &mut rng);
+    for &(nd, dd) in &[(1usize, 1usize), (2, 2), (3, 3), (2, 0)] {
+        let curve = error_curve(&g, nd, dd, &checkpoints);
+        print!("{:>12}", format!("{nd}:{dd}"));
+        for e in curve {
+            print!("{e:>9.4}");
+        }
+        println!();
+    }
+
+    banner("Fig 6 (right) / Fig 8: degrees sweep on mesh graphs");
+    for (name, mesh) in mesh_zoo(700, 11) {
+        let g = mesh.to_graph();
+        print!("{:>12}", name);
+        for c in &checkpoints {
+            print!("{c:>9}");
+        }
+        println!();
+        for &(nd, dd) in &[(1usize, 1usize), (2, 2), (3, 3)] {
+            let curve = error_curve(&g, nd, dd, &checkpoints);
+            print!("{:>12}", format!("{nd}:{dd}"));
+            for e in curve {
+                print!("{e:>9.4}");
+            }
+            println!();
+        }
+    }
+}

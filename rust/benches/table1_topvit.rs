@@ -1,0 +1,80 @@
+//! Table 1 / Fig. 7 (scaled): Topological ViT with tree-based masking vs
+//! the unmasked performer baseline — trained from rust through the AOT
+//! train-step artifact on the synthetic-shapes corpus, evaluated on a
+//! held-out split. The paper's claim is *relative*: the FTFI topological
+//! mask (3 extra learnable parameters per layer, `synced`) beats the
+//! unmasked low-rank-attention baseline by 1–2%.
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench table1_topvit`
+
+use ftfi::bench_util::{banner, Table};
+use ftfi::ml::metrics::accuracy;
+use ftfi::ml::rng::Pcg;
+use ftfi::ml::shapes;
+use ftfi::runtime::topvit::{TopVit, TRAIN_BATCH};
+use ftfi::runtime::Runtime;
+
+const STEPS: usize = 220;
+const LR: f32 = 0.01;
+
+fn train_eval(params_bin: &str, seed: u64) -> anyhow::Result<(f64, f32)> {
+    let rt = Runtime::cpu()?;
+    let mut model = TopVit::load(&rt, "artifacts", params_bin, &[8], true)?;
+    model.freeze_mask = params_bin.contains("unmasked");
+    let mut rng = Pcg::seed(seed);
+    let train = shapes::dataset(64, &mut rng);
+    let test = shapes::dataset(16, &mut rng);
+    let mut last_loss = f32::NAN;
+    for step in 0..STEPS {
+        let (images, labels) = shapes::pack_batch(&train, step * TRAIN_BATCH, TRAIN_BATCH);
+        last_loss = model.train_step(&images, &labels, LR)?;
+    }
+    let mut preds = Vec::new();
+    let mut truth = Vec::new();
+    for chunk in test.chunks(8) {
+        let mut flat = Vec::new();
+        for ex in chunk {
+            flat.extend_from_slice(&ex.pixels);
+        }
+        flat.resize(8 * shapes::IMG * shapes::IMG, 0.0);
+        preds.extend(model.classify(8, &flat)?.into_iter().take(chunk.len()));
+        truth.extend(chunk.iter().map(|e| e.label));
+    }
+    Ok((accuracy(&preds, &truth), last_loss))
+}
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/topvit_train_b32.hlo.txt").exists() {
+        println!("SKIP: artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    banner("Table 1 (scaled): masked TopViT vs unmasked performer (3 seeds)");
+    let table = Table::new(
+        &["variant", "mask params/layer", "acc mean", "acc ±", "loss mean"],
+        &[10, 17, 9, 7, 10],
+    );
+    let mut deltas = Vec::new();
+    let mut rows: Vec<(String, String, Vec<f64>, Vec<f64>)> = vec![
+        ("masked".into(), "3 (synced)".into(), Vec::new(), Vec::new()),
+        ("unmasked".into(), "0 (baseline)".into(), Vec::new(), Vec::new()),
+    ];
+    for seed in [100u64, 200, 300] {
+        let (acc_m, loss_m) = train_eval("topvit_init_masked.bin", seed)?;
+        let (acc_u, loss_u) = train_eval("topvit_init_unmasked.bin", seed)?;
+        rows[0].2.push(acc_m);
+        rows[0].3.push(loss_m as f64);
+        rows[1].2.push(acc_u);
+        rows[1].3.push(loss_u as f64);
+        deltas.push(acc_m - acc_u);
+    }
+    for (name, params, accs, losses) in &rows {
+        let (am, astd) = ftfi::ml::metrics::mean_std(accs);
+        let (lm, _) = ftfi::ml::metrics::mean_std(losses);
+        table.row(&[name.clone(), params.clone(), format!("{am:.3}"), format!("{astd:.3}"), format!("{lm:.4}")]);
+    }
+    let (dm, ds) = ftfi::ml::metrics::mean_std(&deltas);
+    println!(
+        "\nΔacc = {dm:+.3} ± {ds:.3} over 3 seeds (paper: +1.0–1.5% for synced masking\n         at ImageNet/ViT-B scale, +7% at ViT-L; see EXPERIMENTS.md §Table 1)"
+    );
+    Ok(())
+}

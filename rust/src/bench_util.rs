@@ -1,0 +1,113 @@
+//! Minimal benchmark harness.
+//!
+//! The offline environment has no `criterion`, so the `cargo bench`
+//! targets (one per paper table/figure) use this harness: warmup +
+//! repeated timed runs, median/mean/std reporting, and a tiny fixed-width
+//! table printer so every bench emits the same rows/series as the paper's
+//! figures.
+
+use std::time::Instant;
+
+/// Timing summary in seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub median: f64,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub runs: usize,
+}
+
+impl Timing {
+    pub fn format_ms(&self) -> String {
+        format!("{:9.3} ms ±{:6.3}", self.median * 1e3, self.std * 1e3)
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `runs` measured runs.
+/// A `black_box`-style sink prevents the optimiser from deleting work.
+pub fn bench<T>(warmup: usize, runs: usize, mut f: impl FnMut() -> T) -> Timing {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(runs.max(1));
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// Time a single run (for expensive preprocessing phases).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+fn summarize(samples: &[f64]) -> Timing {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len();
+    let mean = s.iter().sum::<f64>() / n as f64;
+    let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Timing { median: s[n / 2], mean, std: var.sqrt(), min: s[0], runs: n }
+}
+
+/// Fixed-width table printer: emits a header then rows.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Self {
+        assert_eq!(headers.len(), widths.len());
+        let mut line = String::new();
+        for (h, w) in headers.iter().zip(widths) {
+            line.push_str(&format!("{:>width$}  ", h, width = w));
+        }
+        println!("{line}");
+        println!("{}", "-".repeat(line.len()));
+        Table { widths: widths.to_vec() }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{:>width$}  ", c, width = w));
+        }
+        println!("{line}");
+    }
+}
+
+/// Section banner for bench output.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_timings() {
+        let t = bench(1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(t.median > 0.0);
+        assert!(t.min <= t.median);
+        assert_eq!(t.runs, 5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

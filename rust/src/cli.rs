@@ -1,0 +1,96 @@
+//! Minimal CLI argument parsing (offline — no clap): positional
+//! subcommands plus `--key value` / `--flag` options.
+//!
+//! Convention: a `--flag` with no value consumes the next token unless it
+//! starts with `--`, so boolean flags should either be written `--flag
+//! true` or placed after all positionals.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(args: impl Iterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = args.peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                out.options.insert(key.to_string(), val);
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_options_positionals() {
+        let a = parse("serve --batch-size 16 input.txt --verbose");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("batch-size", 0), 16);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positional, vec!["input.txt"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("bench");
+        assert_eq!(a.get_usize("n", 42), 42);
+        assert_eq!(a.get_f64("lr", 0.5), 0.5);
+        assert_eq!(a.get_str("mode", "fast"), "fast");
+        assert!(!a.get_flag("quiet"));
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse("");
+        assert!(a.command.is_none());
+    }
+}

@@ -1,0 +1,167 @@
+//! Configuration system: a small INI/TOML-subset parser (offline — no
+//! serde/toml crates) plus typed config structs for the serving
+//! coordinator and the experiment drivers. Files look like:
+//!
+//! ```text
+//! # comment
+//! [server]
+//! batch_size = 8
+//! batch_timeout_ms = 5
+//!
+//! [model]
+//! artifact = "artifacts/topvit_b8.hlo.txt"
+//! ```
+
+use std::collections::HashMap;
+
+/// Parsed config: `section.key -> value` strings.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text. Later keys override earlier ones.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(stripped) = line.strip_prefix('[') {
+                let name = stripped
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            values.insert(key, val);
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| matches!(v, "true" | "1" | "yes" | "on"))
+            .unwrap_or(default)
+    }
+
+    /// Override a value (CLI flags do this on top of file configs).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+}
+
+/// Typed serving configuration (coordinator + runtime).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Max requests fused into one PJRT execution.
+    pub batch_size: usize,
+    /// How long the batcher waits to fill a batch.
+    pub batch_timeout_ms: u64,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// HLO artifact path.
+    pub artifact: String,
+    /// Bounded queue capacity (backpressure beyond this).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batch_size: 8,
+            batch_timeout_ms: 2,
+            workers: 1,
+            artifact: "artifacts/topvit_fwd.hlo.txt".into(),
+            queue_capacity: 1024,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn from_config(c: &Config) -> Self {
+        let d = ServerConfig::default();
+        ServerConfig {
+            batch_size: c.get_usize("server.batch_size", d.batch_size),
+            batch_timeout_ms: c.get_usize("server.batch_timeout_ms", d.batch_timeout_ms as usize)
+                as u64,
+            workers: c.get_usize("server.workers", d.workers),
+            artifact: c.get_or("model.artifact", &d.artifact).to_string(),
+            queue_capacity: c.get_usize("server.queue_capacity", d.queue_capacity),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(
+            "# top\nglobal = 1\n[server]\nbatch_size = 16\nbatch_timeout_ms = 7\n[model]\nartifact = \"a/b.hlo.txt\"\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("global"), Some("1"));
+        assert_eq!(c.get_usize("server.batch_size", 0), 16);
+        assert_eq!(c.get("model.artifact"), Some("a/b.hlo.txt"));
+        assert!(c.get_bool("model.flag", false));
+        assert_eq!(c.get_f64("missing", 2.5), 2.5);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+    }
+
+    #[test]
+    fn server_config_from_file_text() {
+        let c = Config::parse("[server]\nbatch_size = 4\nworkers = 2\n").unwrap();
+        let s = ServerConfig::from_config(&c);
+        assert_eq!(s.batch_size, 4);
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.batch_timeout_ms, 2); // default
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut c = Config::parse("[server]\nbatch_size = 4\n").unwrap();
+        c.set("server.batch_size", "32");
+        assert_eq!(ServerConfig::from_config(&c).batch_size, 32);
+    }
+}

@@ -1,0 +1,155 @@
+//! Serving metrics: request/batch counters and latency percentiles.
+//!
+//! Latencies are recorded into a fixed log-scale histogram (1µs–100s) so
+//! snapshots are cheap and lock contention stays negligible on the
+//! serving hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+const BUCKETS: usize = 160; // 8 per decade over 1e-6..1e2+
+
+fn bucket_of(secs: f64) -> usize {
+    let clamped = secs.clamp(1e-6, 99.0);
+    let log = (clamped / 1e-6).log10(); // 0..8
+    ((log * 20.0) as usize).min(BUCKETS - 1)
+}
+
+fn bucket_upper(idx: usize) -> f64 {
+    1e-6 * 10f64.powf((idx + 1) as f64 / 20.0)
+}
+
+/// Shared metrics registry.
+pub struct MetricsRegistry {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batch_items: AtomicU64,
+    exec_seconds_micro: AtomicU64,
+    latency_hist: Mutex<[u64; BUCKETS]>,
+    started: std::time::Instant,
+}
+
+/// Point-in-time view.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub exec_seconds_total: f64,
+    pub throughput_rps: f64,
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_p99: f64,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_items: AtomicU64::new(0),
+            exec_seconds_micro: AtomicU64::new(0),
+            latency_hist: Mutex::new([0; BUCKETS]),
+            started: std::time::Instant::now(),
+        }
+    }
+
+    pub fn record_batch(&self, items: usize, exec_secs: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_items.fetch_add(items as u64, Ordering::Relaxed);
+        self.exec_seconds_micro
+            .fetch_add((exec_secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, secs: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let mut hist = self.latency_hist.lock().unwrap();
+        hist[bucket_of(secs)] += 1;
+    }
+
+    fn percentile(hist: &[u64; BUCKETS], total: u64, p: f64) -> f64 {
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in hist.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(BUCKETS - 1)
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batch_items.load(Ordering::Relaxed);
+        let hist = self.latency_hist.lock().unwrap();
+        let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            requests,
+            batches,
+            mean_batch_size: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
+            exec_seconds_total: self.exec_seconds_micro.load(Ordering::Relaxed) as f64 / 1e6,
+            throughput_rps: requests as f64 / elapsed,
+            latency_p50: Self::percentile(&hist, requests, 0.50),
+            latency_p95: Self::percentile(&hist, requests, 0.95),
+            latency_p99: Self::percentile(&hist, requests, 0.99),
+        }
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = MetricsRegistry::new();
+        m.record_batch(4, 0.010);
+        m.record_batch(2, 0.005);
+        for _ in 0..6 {
+            m.record_latency(0.002);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
+        assert!((s.exec_seconds_total - 0.015).abs() < 1e-5);
+    }
+
+    #[test]
+    fn percentiles_ordered_and_bracketing() {
+        let m = MetricsRegistry::new();
+        // 90 fast + 10 slow.
+        for _ in 0..90 {
+            m.record_latency(0.001);
+        }
+        for _ in 0..10 {
+            m.record_latency(0.1);
+        }
+        let s = m.snapshot();
+        assert!(s.latency_p50 <= s.latency_p95);
+        assert!(s.latency_p95 <= s.latency_p99);
+        assert!(s.latency_p50 < 0.01, "p50={}", s.latency_p50);
+        assert!(s.latency_p99 > 0.05, "p99={}", s.latency_p99);
+    }
+
+    #[test]
+    fn bucket_monotone() {
+        let mut last = 0;
+        for &s in &[1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0] {
+            let b = bucket_of(s);
+            assert!(b >= last);
+            last = b;
+        }
+    }
+}

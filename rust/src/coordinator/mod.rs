@@ -1,0 +1,22 @@
+//! L3 serving coordinator: request router, dynamic batcher and worker
+//! pool driving AOT-compiled model executables (the Topological-ViT
+//! serving path of §4.4).
+//!
+//! Architecture (vLLM-router-like, scaled to this repo):
+//!
+//! ```text
+//! clients ──submit──▶ bounded queue ──collector──▶ batches ──▶ workers
+//!                      (backpressure)   (size / timeout)        (PJRT)
+//! ```
+//!
+//! Everything is std::thread + channels (no tokio offline); the executor
+//! is a trait so unit tests run against a mock while the examples plug in
+//! the PJRT-backed [`crate::runtime::Executable`].
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatchExecutor, Batcher, BatcherConfig};
+pub use metrics::MetricsRegistry;
+pub use server::{InferenceServer, ServerError};

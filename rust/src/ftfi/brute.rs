@@ -1,0 +1,146 @@
+//! Brute-force baselines: BTFI (tree) and BGFI (general graph).
+//!
+//! Both explicitly materialise the `f`-distance matrix (`O(N²)` time and
+//! memory for preprocessing) and then perform a dense matrix–tensor
+//! multiplication (`O(N²·d)`). They are the comparison targets of
+//! Fig. 3 / Fig. 4 / Table 3, and — because FTFI is exact — they double
+//! as correctness oracles for the whole fast stack.
+
+use crate::ftfi::functions::FDist;
+use crate::graph::shortest_path::all_pairs;
+use crate::graph::Graph;
+use crate::linalg::matrix::Matrix;
+use crate::tree::Tree;
+
+/// Materialise the `f`-distance matrix `M_f^T` of a tree.
+pub fn f_distance_matrix_tree(tree: &Tree, f: &FDist) -> Matrix {
+    let n = tree.n();
+    let d = tree.all_pairs();
+    Matrix::from_vec(n, n, d.into_iter().map(|x| f.eval(x)).collect())
+}
+
+/// Materialise the `f`-distance matrix `M_f^G` of a general graph
+/// (shortest-path metric).
+pub fn f_distance_matrix_graph(g: &Graph, f: &FDist) -> Matrix {
+    let n = g.n();
+    let d = all_pairs(g);
+    Matrix::from_vec(n, n, d.into_iter().map(|x| f.eval(x)).collect())
+}
+
+/// Brute-force tree-field integration: `out = M_f^T · X`.
+pub fn btfi(tree: &Tree, f: &FDist, x: &Matrix) -> Matrix {
+    f_distance_matrix_tree(tree, f).matmul(x)
+}
+
+/// Brute-force graph-field integration: `out = M_f^G · X`.
+pub fn bgfi(g: &Graph, f: &FDist, x: &Matrix) -> Matrix {
+    f_distance_matrix_graph(g, f).matmul(x)
+}
+
+/// Streaming BTFI: O(N) memory (no N×N matrix), O(N²·d) time — the
+/// brute baseline used for the large-N points of Fig. 3 where
+/// materialising the distance matrix would not fit.
+pub fn btfi_streaming(tree: &Tree, f: &FDist, x: &Matrix) -> Matrix {
+    let n = tree.n();
+    let d = x.cols();
+    let mut out = Matrix::zeros(n, d);
+    for v in 0..n {
+        let dist = tree.distances_from(v);
+        let orow = out.row_mut(v);
+        for (j, &dj) in dist.iter().enumerate() {
+            let c = f.eval(dj);
+            if c == 0.0 {
+                continue;
+            }
+            for (o, &xv) in orow.iter_mut().zip(x.row(j)) {
+                *o += c * xv;
+            }
+        }
+    }
+    out
+}
+
+/// BTFI with separated phases, for benchmarking preprocessing vs
+/// integration separately (Fig. 3 reports both).
+pub struct BruteTreeIntegrator {
+    mat: Matrix,
+}
+
+impl BruteTreeIntegrator {
+    /// Preprocessing: O(N²) all-pairs + f-transform.
+    pub fn new(tree: &Tree, f: &FDist) -> Self {
+        BruteTreeIntegrator { mat: f_distance_matrix_tree(tree, f) }
+    }
+
+    /// Integration: O(N²·d) dense multiply.
+    pub fn integrate(&self, x: &Matrix) -> Matrix {
+        self.mat.matmul(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::graph::mst::minimum_spanning_tree;
+    use crate::ml::rng::Pcg;
+
+    #[test]
+    fn btfi_on_two_vertex_tree() {
+        let t = Tree::from_edges(2, &[(0, 1, 2.0)]);
+        let f = FDist::Identity;
+        let x = Matrix::from_vec(2, 1, vec![1.0, 10.0]);
+        let out = btfi(&t, &f, &x);
+        // out[0] = f(0)*1 + f(2)*10 = 20 ; out[1] = f(2)*1 = 2
+        assert!((out.get(0, 0) - 20.0).abs() < 1e-12);
+        assert!((out.get(1, 0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bgfi_equals_btfi_on_trees() {
+        let mut rng = Pcg::seed(1);
+        let t = generators::random_tree(40, 0.5, 1.5, &mut rng);
+        let g = t.to_graph();
+        let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+        let x = Matrix::randn(40, 2, &mut rng);
+        let a = btfi(&t, &f, &x);
+        let b = bgfi(&g, &f, &x);
+        assert!(a.max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn bgfi_uses_graph_metric_not_tree_metric() {
+        // A cycle: graph distance 0→3 is 1 via the closing edge, but the
+        // MST must route the long way.
+        let g = Graph::from_edges(
+            4,
+            &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 0, 1.01)],
+        );
+        let f = FDist::Identity;
+        let x = Matrix::from_vec(4, 1, vec![0.0, 0.0, 0.0, 1.0]);
+        let gout = bgfi(&g, &f, &x);
+        assert!((gout.get(0, 0) - 1.01).abs() < 1e-12);
+        let t = minimum_spanning_tree(&g);
+        let tout = btfi(&t, &f, &x);
+        assert!((tout.get(0, 0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_matches_materialised() {
+        let mut rng = Pcg::seed(3);
+        let t = generators::random_tree(60, 0.2, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let x = Matrix::randn(60, 2, &mut rng);
+        assert!(btfi_streaming(&t, &f, &x).max_abs_diff(&btfi(&t, &f, &x)) < 1e-10);
+    }
+
+    #[test]
+    fn phase_separated_matches_oneshot() {
+        let mut rng = Pcg::seed(2);
+        let t = generators::random_tree(30, 0.1, 1.0, &mut rng);
+        let f = FDist::inverse_quadratic(0.5);
+        let x = Matrix::randn(30, 3, &mut rng);
+        let pre = BruteTreeIntegrator::new(&t, &f);
+        assert!(pre.integrate(&x).max_abs_diff(&btfi(&t, &f, &x)) < 1e-12);
+    }
+}

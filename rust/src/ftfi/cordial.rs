@@ -1,0 +1,333 @@
+//! Strategy dispatch for cross-term multiplication `C·V`,
+//! `C[i][j] = f(x_i + y_j)` — Definition 3.2's "cordiality" made
+//! operational. Each `f` class maps to its fastest exact multiplier;
+//! a cost model arbitrates between the structured paths and the dense
+//! fallback (dense wins for small blocks — the same reason the paper
+//! raises the leaf threshold `t` above the theoretical 6, §4.1).
+
+use crate::ftfi::cauchy::cauchy_cross_apply;
+use crate::ftfi::chebyshev::{adaptive_expansion, ChebExpansion};
+use crate::ftfi::functions::FDist;
+use crate::ftfi::hankel::{detect_lattice, LatticePlan};
+use crate::ftfi::outer::apply_separable;
+use crate::ftfi::rational::{rational_cross_apply, RationalOpts};
+use crate::ftfi::vandermonde::expquad_cross_apply;
+use crate::linalg::matrix::Matrix;
+
+/// Which multiplier handled (or should handle) a cross product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Materialise `C` and multiply — O(a·b·d).
+    Dense,
+    /// Exact low-rank outer products (0-cordial f).
+    Separable,
+    /// Hankel/FFT over a common distance lattice (any f).
+    Lattice,
+    /// Fast rational sums + multipoint evaluation ((2+ε)-cordial f).
+    RationalSum,
+    /// Cauchy-like LDR for e^{λx}/(x+c) (2-cordial).
+    Cauchy,
+    /// diag·Vandermonde·diag for e^{ux²+vx+w} with lattice columns.
+    Vandermonde,
+    /// Barycentric Chebyshev low-rank expansion (smooth f, spectrally
+    /// stable; the practical fast path for rational kernels in f64).
+    Chebyshev,
+}
+
+/// Tunables for strategy selection.
+#[derive(Clone, Debug)]
+pub struct CrossPolicy {
+    /// Below `a·b ≤ dense_cutoff` always multiply densely.
+    pub dense_cutoff: usize,
+    /// Maximum lattice points before the Hankel path is rejected.
+    pub lattice_max_points: usize,
+    /// Rational/Cauchy divide-and-conquer options.
+    pub rational: RationalOpts,
+    /// Probe-error tolerance for accepting a Chebyshev expansion.
+    pub cheb_tol: f64,
+    /// Maximum Chebyshev rank before falling back.
+    pub cheb_max_rank: usize,
+    /// Force one strategy (ablation benches); panics if inapplicable.
+    pub force: Option<Strategy>,
+}
+
+impl Default for CrossPolicy {
+    fn default() -> Self {
+        CrossPolicy {
+            dense_cutoff: 4096,
+            lattice_max_points: 1 << 18,
+            rational: RationalOpts::default(),
+            cheb_tol: 1e-9,
+            cheb_max_rank: 128,
+            force: None,
+        }
+    }
+}
+
+/// Dense reference multiplication (also the fallback). Exact.
+pub fn cross_apply_dense(f: &FDist, xs: &[f64], ys: &[f64], v: &Matrix) -> Matrix {
+    assert_eq!(v.rows(), ys.len());
+    let d = v.cols();
+    let mut out = Matrix::zeros(xs.len(), d);
+    for (i, &x) in xs.iter().enumerate() {
+        let orow = out.row_mut(i);
+        for (j, &y) in ys.iter().enumerate() {
+            let c = f.eval(x + y);
+            if c == 0.0 {
+                continue;
+            }
+            for (o, &vv) in orow.iter_mut().zip(v.row(j)) {
+                *o += c * vv;
+            }
+        }
+    }
+    out
+}
+
+/// An execution plan: the chosen strategy together with any expensive
+/// artifacts built while choosing it (the Chebyshev expansion in
+/// particular — building it twice was the top hot-spot of the first perf
+/// pass, see EXPERIMENTS.md §Perf).
+pub enum Plan {
+    Dense,
+    Separable,
+    Lattice(f64),
+    RationalSum,
+    Cauchy,
+    Vandermonde(f64),
+    Chebyshev(ChebExpansion),
+}
+
+impl Plan {
+    pub fn strategy(&self) -> Strategy {
+        match self {
+            Plan::Dense => Strategy::Dense,
+            Plan::Separable => Strategy::Separable,
+            Plan::Lattice(_) => Strategy::Lattice,
+            Plan::RationalSum => Strategy::RationalSum,
+            Plan::Cauchy => Strategy::Cauchy,
+            Plan::Vandermonde(_) => Strategy::Vandermonde,
+            Plan::Chebyshev(_) => Strategy::Chebyshev,
+        }
+    }
+}
+
+/// Build the execution plan for the given shapes/values.
+pub fn make_plan(f: &FDist, xs: &[f64], ys: &[f64], d: usize, policy: &CrossPolicy) -> Plan {
+    if let Some(s) = policy.force {
+        return match s {
+            Strategy::Dense => Plan::Dense,
+            Strategy::Separable => Plan::Separable,
+            Strategy::Lattice => {
+                let delta = detect_lattice(
+                    xs.iter().chain(ys.iter()).copied(),
+                    policy.lattice_max_points,
+                )
+                .expect("forced lattice strategy without a lattice");
+                Plan::Lattice(delta)
+            }
+            Strategy::RationalSum => Plan::RationalSum,
+            Strategy::Cauchy => Plan::Cauchy,
+            Strategy::Vandermonde => {
+                let delta = detect_lattice(ys.iter().copied(), policy.lattice_max_points)
+                    .expect("forced vandermonde strategy without a column lattice");
+                Plan::Vandermonde(delta)
+            }
+            Strategy::Chebyshev => {
+                match adaptive_expansion(f, xs, ys, policy.cheb_tol, policy.cheb_max_rank) {
+                    Some(exp) => Plan::Chebyshev(exp),
+                    None => Plan::Dense, // forced-but-inapplicable: stay correct
+                }
+            }
+        };
+    }
+    let (a, b) = (xs.len(), ys.len());
+    if a * b <= policy.dense_cutoff {
+        return Plan::Dense;
+    }
+    // Exact low-rank beats everything when available.
+    if f.separable_rank().is_some() {
+        return Plan::Separable;
+    }
+    // A common lattice admits the any-f Hankel path; take it when its
+    // FFT cost undercuts dense.
+    if let Some(delta) =
+        detect_lattice(xs.iter().chain(ys.iter()).copied(), policy.lattice_max_points)
+    {
+        let maxv = xs.iter().chain(ys.iter()).fold(0.0f64, |m, &v| m.max(v));
+        let pts = (maxv / delta).round() as usize + 1;
+        let fft_cost = 4 * pts * (usize::BITS - pts.leading_zeros()) as usize * d.div_ceil(2);
+        let dense_cost = a * b * d;
+        if fft_cost < dense_cost {
+            return Plan::Lattice(delta);
+        }
+    }
+    // Smooth non-separable kernels: Chebyshev low-rank is the stable,
+    // polylog-free-lunch path. Accept it when the adaptive probe converges
+    // — and carry the built expansion so apply never rebuilds it.
+    match f {
+        FDist::Rational { .. }
+        | FDist::ExpOverLinear { .. }
+        | FDist::ExpQuadratic { .. }
+        | FDist::Custom(_) => {
+            if let Some(exp) =
+                adaptive_expansion(f, xs, ys, policy.cheb_tol, policy.cheb_max_rank)
+            {
+                return Plan::Chebyshev(exp);
+            }
+        }
+        _ => {}
+    }
+    match f {
+        FDist::Rational { .. } => Plan::RationalSum,
+        FDist::ExpOverLinear { .. } => Plan::Cauchy,
+        FDist::ExpQuadratic { .. } => {
+            // Vandermonde needs only the *columns* on a lattice.
+            match detect_lattice(ys.iter().copied(), policy.lattice_max_points) {
+                Some(delta) => Plan::Vandermonde(delta),
+                None => Plan::Dense,
+            }
+        }
+        _ => Plan::Dense,
+    }
+}
+
+/// Pick a strategy for the given shapes/values (thin wrapper over
+/// [`make_plan`], kept for the ablation bench and tests).
+pub fn choose_strategy(f: &FDist, xs: &[f64], ys: &[f64], d: usize, policy: &CrossPolicy) -> Strategy {
+    make_plan(f, xs, ys, d, policy).strategy()
+}
+
+/// `C·V` with the best applicable strategy. For `Cᵀ·U` call with the
+/// roles of `xs`/`ys` swapped — `f(x+y)` is symmetric in its arguments.
+pub fn cross_apply(f: &FDist, xs: &[f64], ys: &[f64], v: &Matrix, policy: &CrossPolicy) -> Matrix {
+    let plan = make_plan(f, xs, ys, v.cols(), policy);
+    apply_plan(&plan, f, xs, ys, v, policy)
+}
+
+/// Execute a previously built plan (the IntegratorTree builds one plan
+/// per node side and reuses it across calls via `cross_apply`'s wrapper;
+/// exposed for callers that amortise planning).
+pub fn apply_plan(
+    plan: &Plan,
+    f: &FDist,
+    xs: &[f64],
+    ys: &[f64],
+    v: &Matrix,
+    policy: &CrossPolicy,
+) -> Matrix {
+    match plan {
+        Plan::Dense => cross_apply_dense(f, xs, ys, v),
+        Plan::Separable => {
+            let sep = f.separable_rank().expect("separable strategy for non-separable f");
+            apply_separable(&sep, xs, ys, v)
+        }
+        Plan::Lattice(delta) => LatticePlan::new(f, xs, ys, *delta).apply(xs, ys, v),
+        Plan::RationalSum => match f {
+            FDist::Rational { num, den } => {
+                rational_cross_apply(num, den, xs, ys, v, &policy.rational)
+            }
+            _ => panic!("rational strategy for non-rational f"),
+        },
+        Plan::Cauchy => match f {
+            FDist::ExpOverLinear { lambda, c } => {
+                cauchy_cross_apply(*lambda, *c, xs, ys, v, &policy.rational)
+            }
+            _ => panic!("cauchy strategy for wrong f"),
+        },
+        Plan::Vandermonde(delta) => match f {
+            FDist::ExpQuadratic { u, v: vc, w } => {
+                expquad_cross_apply(*u, *vc, *w, xs, ys, *delta, v)
+            }
+            _ => panic!("vandermonde strategy for wrong f"),
+        },
+        Plan::Chebyshev(exp) => exp.cross_apply(f, xs, ys, v),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::rng::Pcg;
+
+    fn policy_no_dense() -> CrossPolicy {
+        CrossPolicy { dense_cutoff: 0, ..Default::default() }
+    }
+
+    #[test]
+    fn dispatch_matches_dense_across_classes() {
+        let mut rng = Pcg::seed(11);
+        let fs = vec![
+            FDist::Identity,
+            FDist::Polynomial(vec![1.0, 0.5, -0.25]),
+            FDist::Exponential { lambda: -0.4, scale: 1.0 },
+            FDist::Trig { omega: 0.8, phase: 0.0, scale: 1.0 },
+            FDist::Rational { num: vec![1.0], den: vec![1.0, 0.0, 0.5] },
+            FDist::ExpOverLinear { lambda: -0.2, c: 1.0 },
+        ];
+        for f in &fs {
+            let xs = rng.uniform_vec(60, 0.0, 5.0);
+            let ys = rng.uniform_vec(70, 0.0, 5.0);
+            let v = Matrix::randn(70, 2, &mut rng);
+            let want = cross_apply_dense(f, &xs, &ys, &v);
+            let got = cross_apply(f, &xs, &ys, &v, &policy_no_dense());
+            let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+            assert!(rel < 1e-6, "{f:?}: rel={rel}");
+        }
+    }
+
+    #[test]
+    fn lattice_strategy_chosen_for_custom_f_on_integers() {
+        let f = FDist::Custom(std::sync::Arc::new(|x: f64| (x + 1.0).ln()));
+        let xs: Vec<f64> = (0..100).map(|i| (i % 13) as f64).collect();
+        let ys: Vec<f64> = (0..100).map(|i| (i % 17) as f64).collect();
+        let s = choose_strategy(&f, &xs, &ys, 4, &policy_no_dense());
+        assert_eq!(s, Strategy::Lattice);
+        let mut rng = Pcg::seed(3);
+        let v = Matrix::randn(100, 4, &mut rng);
+        let want = cross_apply_dense(&f, &xs, &ys, &v);
+        let got = cross_apply(&f, &xs, &ys, &v, &policy_no_dense());
+        assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-8);
+    }
+
+    #[test]
+    fn small_blocks_go_dense() {
+        let f = FDist::Exponential { lambda: 1.0, scale: 1.0 };
+        let s = choose_strategy(&f, &[1.0, 2.0], &[1.0], 1, &CrossPolicy::default());
+        assert_eq!(s, Strategy::Dense);
+    }
+
+    #[test]
+    fn expquad_vandermonde_on_mixed_lattice() {
+        let mut rng = Pcg::seed(4);
+        let f = FDist::ExpQuadratic { u: -0.1, v: 0.0, w: 0.0 };
+        let xs = rng.uniform_vec(50, 0.0, 3.0); // arbitrary rows
+        let ys: Vec<f64> = (0..60).map(|_| rng.below(10) as f64 * 0.5).collect();
+        // Smooth kernels now prefer Chebyshev by default...
+        let s = choose_strategy(&f, &xs, &ys, 1, &policy_no_dense());
+        assert_eq!(s, Strategy::Chebyshev);
+        // ...but the Vandermonde LDR path must stay exact when forced.
+        let forced = CrossPolicy { force: Some(Strategy::Vandermonde), ..policy_no_dense() };
+        let v = Matrix::randn(60, 1, &mut rng);
+        let want = cross_apply_dense(&f, &xs, &ys, &v);
+        let got = cross_apply(&f, &xs, &ys, &v, &forced);
+        assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-7);
+        let got_cheb = cross_apply(&f, &xs, &ys, &v, &policy_no_dense());
+        assert!(got_cheb.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-7);
+    }
+
+    #[test]
+    fn transpose_via_swap() {
+        let mut rng = Pcg::seed(5);
+        let f = FDist::Polynomial(vec![0.0, 1.0, 0.2]);
+        let xs = rng.uniform_vec(8, 0.0, 2.0);
+        let ys = rng.uniform_vec(6, 0.0, 2.0);
+        let u = Matrix::randn(8, 2, &mut rng);
+        // C^T U computed as cross_apply(ys, xs).
+        let got = cross_apply(&f, &ys, &xs, &u, &CrossPolicy::default());
+        // Reference: build dense C, transpose, multiply.
+        let c = Matrix::from_fn(8, 6, |i, j| f.eval(xs[i] + ys[j]));
+        let want = c.transpose().matmul(&u);
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+}

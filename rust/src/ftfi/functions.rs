@@ -1,0 +1,270 @@
+//! The `f` in `f`-distance matrices: a registry of the function classes
+//! analysed in §3.2.1 / §A.2.3, each knowing its own cordiality class and
+//! therefore which fast cross-term multiplier applies.
+
+use std::fmt;
+use std::sync::Arc;
+
+/// A scalar map `f: R → R` applied elementwise to tree distances.
+#[derive(Clone)]
+pub enum FDist {
+    /// `f(x) = x` — the Shortest Path kernel.
+    Identity,
+    /// `f(x) = Σ_t coeffs[t]·x^t` — 0-cordial (sum of outer products).
+    Polynomial(Vec<f64>),
+    /// `f(x) = scale·e^{λx}` — 0-cordial (rank-1 outer product).
+    Exponential { lambda: f64, scale: f64 },
+    /// `f(x) = (Σ_t coeffs[t] x^t)·e^{λx}` — 0-cordial (Hadamard closure,
+    /// §A.2.3 "products of exponentials and polynomials").
+    PolyExp { coeffs: Vec<f64>, lambda: f64 },
+    /// `f(x) = scale·cos(ωx + φ)` — 0-cordial (two complex exponentials);
+    /// `φ = -π/2` gives `sin`.
+    Trig { omega: f64, phase: f64, scale: f64 },
+    /// `f(x) = P(x)/Q(x)` — (2+ε)-cordial via fast rational-sum
+    /// combination + multipoint evaluation (Cabello 2022). Coefficients
+    /// low→high.
+    Rational { num: Vec<f64>, den: Vec<f64> },
+    /// `f(x) = e^{λx}/(x+c)` — 2-cordial (Cauchy-like LDR, §3.2.1).
+    ExpOverLinear { lambda: f64, c: f64 },
+    /// `f(x) = e^{ux² + vx + w}` — fast on lattice (rational-weight)
+    /// trees via diag·Vandermonde·diag (§3.2.1).
+    ExpQuadratic { u: f64, v: f64, w: f64 },
+    /// Arbitrary black-box `f` — fast only on lattice trees (Hankel path,
+    /// §A.2.3); dense otherwise.
+    Custom(Arc<dyn Fn(f64) -> f64 + Send + Sync>),
+}
+
+impl fmt::Debug for FDist {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FDist::Identity => write!(f, "Identity"),
+            FDist::Polynomial(c) => write!(f, "Polynomial({c:?})"),
+            FDist::Exponential { lambda, scale } => {
+                write!(f, "Exponential(λ={lambda}, s={scale})")
+            }
+            FDist::PolyExp { coeffs, lambda } => write!(f, "PolyExp({coeffs:?}, λ={lambda})"),
+            FDist::Trig { omega, phase, scale } => {
+                write!(f, "Trig(ω={omega}, φ={phase}, s={scale})")
+            }
+            FDist::Rational { num, den } => write!(f, "Rational({num:?}/{den:?})"),
+            FDist::ExpOverLinear { lambda, c } => write!(f, "ExpOverLinear(λ={lambda}, c={c})"),
+            FDist::ExpQuadratic { u, v, w } => write!(f, "ExpQuadratic(u={u}, v={v}, w={w})"),
+            FDist::Custom(_) => write!(f, "Custom(..)"),
+        }
+    }
+}
+
+/// Evaluate a polynomial (coefficients low→high) by Horner's rule.
+#[inline]
+pub fn horner(coeffs: &[f64], x: f64) -> f64 {
+    let mut acc = 0.0;
+    for &c in coeffs.iter().rev() {
+        acc = acc * x + c;
+    }
+    acc
+}
+
+impl FDist {
+    /// Point evaluation.
+    pub fn eval(&self, x: f64) -> f64 {
+        match self {
+            FDist::Identity => x,
+            FDist::Polynomial(c) => horner(c, x),
+            FDist::Exponential { lambda, scale } => scale * (lambda * x).exp(),
+            FDist::PolyExp { coeffs, lambda } => horner(coeffs, x) * (lambda * x).exp(),
+            FDist::Trig { omega, phase, scale } => scale * (omega * x + phase).cos(),
+            FDist::Rational { num, den } => horner(num, x) / horner(den, x),
+            FDist::ExpOverLinear { lambda, c } => (lambda * x).exp() / (x + c),
+            FDist::ExpQuadratic { u, v, w } => (u * x * x + v * x + w).exp(),
+            FDist::Custom(f) => f(x),
+        }
+    }
+
+    /// The paper's mesh-interpolation kernel `f(x) = 1/(1+λx²)` (§4.2).
+    pub fn inverse_quadratic(lambda: f64) -> FDist {
+        FDist::Rational { num: vec![1.0], den: vec![1.0, 0.0, lambda] }
+    }
+
+    /// Gaussian RBF `e^{-γ x²}` as an ExpQuadratic.
+    pub fn gaussian(gamma: f64) -> FDist {
+        FDist::ExpQuadratic { u: -gamma, v: 0.0, w: 0.0 }
+    }
+
+    /// `sin(ωx)` as a Trig.
+    pub fn sin(omega: f64) -> FDist {
+        FDist::Trig { omega, phase: -std::f64::consts::FRAC_PI_2, scale: 1.0 }
+    }
+
+    /// The exact low-rank separable decomposition `f(x+y) = Σ_r g_r(x)·h_r(y)`
+    /// when one exists ("0-cordial" classes). Returns `None` for classes
+    /// that need the FFT/LDR machinery instead.
+    pub fn separable_rank(&self) -> Option<Separable> {
+        match self {
+            FDist::Identity => {
+                // x + y = x·1 + 1·y.
+                Some(Separable {
+                    g: vec![Arc::new(|x: f64| x), Arc::new(|_| 1.0)],
+                    h: vec![Arc::new(|_| 1.0), Arc::new(|y: f64| y)],
+                })
+            }
+            FDist::Polynomial(coeffs) => Some(poly_separable(coeffs, 0.0)),
+            FDist::Exponential { lambda, scale } => {
+                let (l, s) = (*lambda, *scale);
+                Some(Separable {
+                    g: vec![Arc::new(move |x: f64| s * (l * x).exp())],
+                    h: vec![Arc::new(move |y: f64| (l * y).exp())],
+                })
+            }
+            FDist::PolyExp { coeffs, lambda } => {
+                // (Σ a_t (x+y)^t)·e^{λ(x+y)}: take the polynomial separable
+                // pieces and multiply both sides by the exponentials
+                // (Hadamard product of outer products is an outer product).
+                let mut sep = poly_separable(coeffs, 0.0);
+                let l = *lambda;
+                sep.g = sep
+                    .g
+                    .into_iter()
+                    .map(|g| {
+                        let g = g.clone();
+                        Arc::new(move |x: f64| g(x) * (l * x).exp()) as ScalarFn
+                    })
+                    .collect();
+                sep.h = sep
+                    .h
+                    .into_iter()
+                    .map(|h| {
+                        let h = h.clone();
+                        Arc::new(move |y: f64| h(y) * (l * y).exp()) as ScalarFn
+                    })
+                    .collect();
+                Some(sep)
+            }
+            FDist::Trig { omega, phase, scale } => {
+                // cos(ω(x+y)+φ) = cos(ωx+φ)cos(ωy) − sin(ωx+φ)sin(ωy).
+                let (o, p, s) = (*omega, *phase, *scale);
+                Some(Separable {
+                    g: vec![
+                        Arc::new(move |x: f64| s * (o * x + p).cos()),
+                        Arc::new(move |x: f64| -s * (o * x + p).sin()),
+                    ],
+                    h: vec![
+                        Arc::new(move |y: f64| (o * y).cos()),
+                        Arc::new(move |y: f64| (o * y).sin()),
+                    ],
+                })
+            }
+            _ => None,
+        }
+    }
+}
+
+pub type ScalarFn = Arc<dyn Fn(f64) -> f64 + Send + Sync>;
+
+/// An exact separable decomposition `f(x+y) = Σ_r g[r](x)·h[r](y)`.
+pub struct Separable {
+    pub g: Vec<ScalarFn>,
+    pub h: Vec<ScalarFn>,
+}
+
+impl Separable {
+    pub fn rank(&self) -> usize {
+        self.g.len()
+    }
+}
+
+/// Binomial expansion of `Σ_t a_t (x+y)^t` into `Σ_u x^u · h_u(y)` with
+/// `h_u(y) = Σ_{t≥u} a_t·C(t,u)·y^{t−u}` — rank `deg+1`.
+fn poly_separable(coeffs: &[f64], _shift: f64) -> Separable {
+    let deg = coeffs.len().saturating_sub(1);
+    let mut g: Vec<ScalarFn> = Vec::with_capacity(deg + 1);
+    let mut h: Vec<ScalarFn> = Vec::with_capacity(deg + 1);
+    for u in 0..=deg {
+        g.push(Arc::new(move |x: f64| x.powi(u as i32)));
+        // h_u(y) coefficients: for t in u..=deg, a_t * C(t,u) * y^{t-u}.
+        let mut hc = Vec::with_capacity(deg - u + 1);
+        for t in u..=deg {
+            hc.push(coeffs[t] * binomial(t, u));
+        }
+        h.push(Arc::new(move |y: f64| horner(&hc, y)));
+    }
+    Separable { g, h }
+}
+
+/// Binomial coefficient as f64 (exact for the small degrees we use).
+pub fn binomial(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut acc = 1.0f64;
+    for i in 0..k {
+        acc = acc * (n - i) as f64 / (i + 1) as f64;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::rng::Pcg;
+
+    #[test]
+    fn eval_known_values() {
+        assert_eq!(FDist::Identity.eval(3.5), 3.5);
+        assert_eq!(FDist::Polynomial(vec![1.0, 2.0, 3.0]).eval(2.0), 1.0 + 4.0 + 12.0);
+        assert!((FDist::Exponential { lambda: -1.0, scale: 2.0 }.eval(0.0) - 2.0).abs() < 1e-12);
+        assert!((FDist::inverse_quadratic(0.5).eval(2.0) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((FDist::ExpOverLinear { lambda: 0.0, c: 2.0 }.eval(2.0) - 0.25).abs() < 1e-12);
+        assert!((FDist::gaussian(1.0).eval(1.0) - (-1.0f64).exp()).abs() < 1e-12);
+        assert!((FDist::sin(1.0).eval(std::f64::consts::FRAC_PI_2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binomial_values() {
+        assert_eq!(binomial(5, 2), 10.0);
+        assert_eq!(binomial(6, 0), 1.0);
+        assert_eq!(binomial(4, 4), 1.0);
+        assert_eq!(binomial(3, 5), 0.0);
+    }
+
+    /// Every separable decomposition must reproduce f(x+y) exactly.
+    #[test]
+    fn separable_reconstructs_f() {
+        let mut rng = Pcg::seed(1);
+        let fs = vec![
+            FDist::Identity,
+            FDist::Polynomial(vec![0.5, -1.0, 2.0, 0.25]),
+            FDist::Exponential { lambda: 0.3, scale: 1.7 },
+            FDist::PolyExp { coeffs: vec![1.0, -0.5, 0.2], lambda: -0.4 },
+            FDist::Trig { omega: 1.3, phase: 0.4, scale: 0.9 },
+            FDist::sin(0.7),
+        ];
+        for f in &fs {
+            let sep = f.separable_rank().expect("should be separable");
+            for _ in 0..50 {
+                let x = rng.uniform_in(0.0, 3.0);
+                let y = rng.uniform_in(0.0, 3.0);
+                let direct = f.eval(x + y);
+                let via: f64 = sep.g.iter().zip(&sep.h).map(|(g, h)| g(x) * h(y)).sum();
+                assert!(
+                    (direct - via).abs() < 1e-9 * (1.0 + direct.abs()),
+                    "{f:?} at ({x},{y}): {direct} vs {via}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn non_separable_classes_return_none() {
+        assert!(FDist::Rational { num: vec![1.0], den: vec![1.0, 1.0] }.separable_rank().is_none());
+        assert!(FDist::ExpOverLinear { lambda: 1.0, c: 1.0 }.separable_rank().is_none());
+        assert!(FDist::ExpQuadratic { u: -1.0, v: 0.0, w: 0.0 }.separable_rank().is_none());
+        assert!(FDist::Custom(Arc::new(|x| x.sin())).separable_rank().is_none());
+    }
+
+    #[test]
+    fn custom_closure() {
+        let f = FDist::Custom(Arc::new(|x| x * x + 1.0));
+        assert_eq!(f.eval(2.0), 5.0);
+    }
+}

@@ -1,0 +1,240 @@
+//! Hankel (lattice) cross-term multiplication — §A.2.3.
+//!
+//! When all pivot distances lie on a lattice `{s·δ}` (unit-weight trees:
+//! δ=1; positive-rational-weight trees: δ=1/q), the cross matrix
+//! `C[i][j] = f(x_i + y_j)` embeds into a Hankel matrix over the lattice
+//! and `C·V` becomes a correlation of the f-table with the aggregated
+//! field, computed by FFT in `O((T+S) log(T+S) + (a+b)·d)` where `T,S`
+//! are the lattice extents. This path works for **any** `f` — the paper's
+//! route to `O(N log² N)` integration on unweighted trees for arbitrary f.
+
+use crate::ftfi::functions::FDist;
+use crate::linalg::fft::{fft_pow2, ifft_pow2, next_pow2, Complex};
+use crate::linalg::matrix::Matrix;
+
+/// Detect a common lattice spacing δ for the given values (all must be
+/// ≈ non-negative integer multiples of δ). Returns `None` when no lattice
+/// with at most `max_points` points covers the range.
+pub fn detect_lattice(values: impl Iterator<Item = f64> + Clone, max_points: usize) -> Option<f64> {
+    let mut maxv: f64 = 0.0;
+    let mut delta: f64 = 0.0;
+    for v in values.clone() {
+        assert!(v >= -1e-12, "lattice values must be non-negative, got {v}");
+        maxv = maxv.max(v);
+        if v > 1e-12 {
+            delta = if delta == 0.0 { v } else { float_gcd(delta, v, 1e-9 * (1.0 + maxv)) };
+        }
+    }
+    if delta <= 0.0 {
+        // All values ~0 — trivially a lattice with a single point.
+        return Some(1.0);
+    }
+    let points = (maxv / delta).round() as usize + 1;
+    if points > max_points {
+        return None;
+    }
+    // Verify every value sits on the lattice within tolerance.
+    let tol = 1e-7 * delta.max(1e-12);
+    for v in values {
+        let r = v / delta;
+        if (r - r.round()).abs() * delta > tol {
+            return None;
+        }
+    }
+    Some(delta)
+}
+
+/// Euclidean gcd on floats with rounding correction.
+fn float_gcd(mut a: f64, mut b: f64, tol: f64) -> f64 {
+    if a < b {
+        std::mem::swap(&mut a, &mut b);
+    }
+    while b > tol {
+        let q = (a / b).round();
+        let r = (a - q * b).abs();
+        a = b;
+        b = r;
+    }
+    a
+}
+
+/// Pre-planned lattice application: the f-table FFT is computed once and
+/// shared across all `d` channels (and across C / Cᵀ, which use the same
+/// table).
+pub struct LatticePlan {
+    delta: f64,
+    /// FFT of the f-table, length `m` (power of two ≥ table len + max(S,T)).
+    table_fft: Vec<Complex>,
+    m: usize,
+    /// table[s] = f(s·δ) for s = 0..=T+S.
+    t_max: usize,
+    s_max: usize,
+}
+
+impl LatticePlan {
+    /// Build a plan for values `xs` (rows) and `ys` (cols) already known
+    /// to lie on the lattice `δ`.
+    pub fn new(f: &FDist, xs: &[f64], ys: &[f64], delta: f64) -> Self {
+        let t_max = xs.iter().map(|&x| (x / delta).round() as usize).max().unwrap_or(0);
+        let s_max = ys.iter().map(|&y| (y / delta).round() as usize).max().unwrap_or(0);
+        let table: Vec<f64> = (0..=t_max + s_max).map(|s| f.eval(s as f64 * delta)).collect();
+        // Correlation corr[t] = Σ_s table[t+s]·w[s] for a w of length
+        // max(S,T)+1 (both directions share the plan): linear convolution
+        // of `table` with reversed w, so m ≥ table.len() + max(S,T).
+        let m = next_pow2(table.len() + t_max.max(s_max));
+        let mut table_fft = vec![Complex::ZERO; m];
+        for (i, &v) in table.iter().enumerate() {
+            table_fft[i].re = v;
+        }
+        fft_pow2(&mut table_fft, false);
+        LatticePlan { delta, table_fft, m, t_max, s_max }
+    }
+
+    /// `C·V`: rows indexed by `xs`, columns by `ys`, `V` is `ys.len()×d`.
+    pub fn apply(&self, xs: &[f64], ys: &[f64], v: &Matrix) -> Matrix {
+        self.apply_dir(xs, ys, v, self.s_max)
+    }
+
+    /// `Cᵀ·U`: same table with the roles of xs/ys swapped.
+    pub fn apply_t(&self, xs: &[f64], ys: &[f64], u: &Matrix) -> Matrix {
+        self.apply_dir(ys, xs, u, self.t_max)
+    }
+
+    fn apply_dir(&self, out_vals: &[f64], in_vals: &[f64], v: &Matrix, in_max: usize) -> Matrix {
+        assert_eq!(v.rows(), in_vals.len());
+        let d = v.cols();
+        let mut out = Matrix::zeros(out_vals.len(), d);
+        if in_vals.is_empty() || out_vals.is_empty() {
+            return out;
+        }
+        let in_idx: Vec<usize> =
+            in_vals.iter().map(|&y| (y / self.delta).round() as usize).collect();
+        let out_idx: Vec<usize> =
+            out_vals.iter().map(|&x| (x / self.delta).round() as usize).collect();
+        let mut buf = vec![Complex::ZERO; self.m];
+        // Process channels two at a time packed into (re, im) — one FFT
+        // serves two real convolutions.
+        let mut ch = 0;
+        while ch < d {
+            let pair = ch + 1 < d;
+            for c in buf.iter_mut() {
+                *c = Complex::ZERO;
+            }
+            // w[s] aggregated by lattice index; reversed so the
+            // convolution computes a correlation with the table.
+            for (j, &s) in in_idx.iter().enumerate() {
+                let slot = in_max - s;
+                buf[slot].re += v.get(j, ch);
+                if pair {
+                    buf[slot].im += v.get(j, ch + 1);
+                }
+            }
+            fft_pow2(&mut buf, false);
+            for (b, t) in buf.iter_mut().zip(&self.table_fft) {
+                *b = *b * *t;
+            }
+            ifft_pow2(&mut buf);
+            if pair {
+                // Unpack: conv of (w_re + i·w_im) with real table keeps
+                // channels in re/im separately (table is real).
+                for (i, &t) in out_idx.iter().enumerate() {
+                    let c = buf[t + in_max];
+                    out.set(i, ch, c.re);
+                    out.set(i, ch + 1, c.im);
+                }
+                ch += 2;
+            } else {
+                for (i, &t) in out_idx.iter().enumerate() {
+                    out.set(i, ch, buf[t + in_max].re);
+                }
+                ch += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ftfi::cordial::cross_apply_dense;
+    use crate::ml::rng::Pcg;
+    use std::sync::Arc;
+
+    #[test]
+    fn detect_integer_lattice() {
+        let vals = [0.0, 3.0, 1.0, 7.0, 2.0];
+        let d = detect_lattice(vals.iter().copied(), 1000).unwrap();
+        assert!((d - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn detect_rational_lattice() {
+        // multiples of 1/4
+        let vals = [0.25, 1.5, 0.75, 2.0];
+        let d = detect_lattice(vals.iter().copied(), 1000).unwrap();
+        assert!((d - 0.25).abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn reject_irrational_mix() {
+        let vals = [1.0, std::f64::consts::SQRT_2];
+        assert!(detect_lattice(vals.iter().copied(), 1 << 20).is_none());
+    }
+
+    #[test]
+    fn reject_oversized_lattice() {
+        let vals = [1e-6, 1.0];
+        assert!(detect_lattice(vals.iter().copied(), 1000).is_none());
+    }
+
+    #[test]
+    fn lattice_apply_matches_dense_any_f() {
+        let mut rng = Pcg::seed(7);
+        // Black-box f that has no separable or rational structure.
+        let f = FDist::Custom(Arc::new(|x: f64| (x * 1.3).sin() / (1.0 + x * x) + 0.1 * x));
+        for &(a, b, d) in &[(5usize, 9usize, 1usize), (40, 30, 4), (1, 17, 3), (64, 64, 2)] {
+            let xs: Vec<f64> = (0..a).map(|_| rng.below(30) as f64 * 0.5).collect();
+            let ys: Vec<f64> = (0..b).map(|_| rng.below(30) as f64 * 0.5).collect();
+            let v = Matrix::randn(b, d, &mut rng);
+            let delta =
+                detect_lattice(xs.iter().chain(ys.iter()).copied(), 1 << 16).unwrap();
+            let plan = LatticePlan::new(&f, &xs, &ys, delta);
+            let want = cross_apply_dense(&f, &xs, &ys, &v);
+            let got = plan.apply(&xs, &ys, &v);
+            assert!(
+                got.max_abs_diff(&want) < 1e-8 * (1.0 + want.frobenius()),
+                "a={a} b={b} d={d}: {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn lattice_apply_t_matches_dense_transpose() {
+        let mut rng = Pcg::seed(8);
+        let f = FDist::Custom(Arc::new(|x: f64| (-(x)).exp() * (1.0 + x)));
+        let xs: Vec<f64> = (0..13).map(|_| rng.below(20) as f64).collect();
+        let ys: Vec<f64> = (0..11).map(|_| rng.below(20) as f64).collect();
+        let u = Matrix::randn(13, 3, &mut rng);
+        let delta = detect_lattice(xs.iter().chain(ys.iter()).copied(), 1 << 16).unwrap();
+        let plan = LatticePlan::new(&f, &xs, &ys, delta);
+        // Dense transpose: C^T U = apply dense with swapped roles.
+        let want = cross_apply_dense(&f, &ys, &xs, &u);
+        let got = plan.apply_t(&xs, &ys, &u);
+        assert!(got.max_abs_diff(&want) < 1e-8 * (1.0 + want.frobenius()));
+    }
+
+    #[test]
+    fn all_zero_distances() {
+        let f = FDist::Identity;
+        let xs = [0.0, 0.0];
+        let ys = [0.0];
+        let delta = detect_lattice(xs.iter().chain(ys.iter()).copied(), 10).unwrap();
+        let plan = LatticePlan::new(&f, &xs, &ys, delta);
+        let v = Matrix::from_vec(1, 1, vec![5.0]);
+        let got = plan.apply(&xs, &ys, &v);
+        assert_eq!(got.rows(), 2);
+        assert!(got.get(0, 0).abs() < 1e-12); // f(0+0)=0 for identity
+    }
+}

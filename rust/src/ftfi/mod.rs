@@ -1,0 +1,146 @@
+//! Fast Tree-Field Integrators — the paper's core contribution.
+//!
+//! The public entry point is [`TreeFieldIntegrator`]: build once per tree
+//! (`O(N log N)` — §3.1), then integrate any number of tensor fields with
+//! any `f` in polylog-linear time (§3.2). For general graphs use
+//! [`GraphFieldIntegrator`], which routes through the minimum spanning
+//! tree exactly as the paper's experiments do (§4).
+
+pub mod brute;
+pub mod cauchy;
+pub mod chebyshev;
+pub mod cordial;
+pub mod functions;
+pub mod hankel;
+pub mod nufft;
+pub mod outer;
+pub mod rational;
+pub mod rff;
+pub mod vandermonde;
+
+use crate::ftfi::cordial::CrossPolicy;
+use crate::ftfi::functions::FDist;
+use crate::graph::mst::minimum_spanning_tree;
+use crate::graph::Graph;
+use crate::linalg::matrix::Matrix;
+use crate::tree::integrator_tree::{IntegratorTree, ItStats};
+use crate::tree::Tree;
+
+/// Fast exact integration of tensor fields on a weighted tree.
+pub struct TreeFieldIntegrator {
+    it: IntegratorTree,
+    policy: CrossPolicy,
+    n: usize,
+}
+
+impl TreeFieldIntegrator {
+    /// Preprocess the tree with default options.
+    pub fn new(tree: &Tree) -> Self {
+        Self::with_options(tree, 32, CrossPolicy::default())
+    }
+
+    /// Preprocess with an explicit leaf threshold and cross-term policy.
+    pub fn with_options(tree: &Tree, leaf_threshold: usize, policy: CrossPolicy) -> Self {
+        TreeFieldIntegrator {
+            it: IntegratorTree::with_leaf_threshold(tree, leaf_threshold),
+            policy,
+            n: tree.n(),
+        }
+    }
+
+    /// `out[v] = Σ_u f(dist_T(v,u))·x[u]` for a tensor field `x ∈ R^{N×d}`.
+    pub fn integrate(&self, f: &FDist, x: &Matrix) -> Matrix {
+        self.it.integrate(f, x, &self.policy)
+    }
+
+    /// Scalar-field convenience.
+    pub fn integrate_vec(&self, f: &FDist, x: &[f64]) -> Vec<f64> {
+        self.it.integrate_vec(f, x, &self.policy)
+    }
+
+    /// Number of tree vertices.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// IntegratorTree structure statistics.
+    pub fn stats(&self) -> ItStats {
+        self.it.stats()
+    }
+
+    /// Mutable access to the policy (ablation benches flip strategies).
+    pub fn policy_mut(&mut self) -> &mut CrossPolicy {
+        &mut self.policy
+    }
+}
+
+/// Integration on a general graph via its MST metric (the paper's §4
+/// recipe: replace `dist_G` by `dist_MST`, then run FTFI exactly).
+pub struct GraphFieldIntegrator {
+    tree: Tree,
+    inner: TreeFieldIntegrator,
+}
+
+impl GraphFieldIntegrator {
+    /// Build the MST and preprocess it. Requires a connected graph.
+    pub fn new(g: &Graph) -> Self {
+        let tree = minimum_spanning_tree(g);
+        let inner = TreeFieldIntegrator::new(&tree);
+        GraphFieldIntegrator { tree, inner }
+    }
+
+    /// Integrate using the MST metric.
+    pub fn integrate(&self, f: &FDist, x: &Matrix) -> Matrix {
+        self.inner.integrate(f, x)
+    }
+
+    /// The spanning tree in use.
+    pub fn tree(&self) -> &Tree {
+        &self.tree
+    }
+
+    /// The underlying tree integrator.
+    pub fn tree_integrator(&self) -> &TreeFieldIntegrator {
+        &self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ftfi::brute::btfi;
+    use crate::graph::generators;
+    use crate::ml::rng::Pcg;
+
+    #[test]
+    fn graph_integrator_matches_btfi_on_its_mst() {
+        let mut rng = Pcg::seed(1);
+        let g = generators::path_plus_random_edges(120, 60, &mut rng);
+        let gfi = GraphFieldIntegrator::new(&g);
+        let f = FDist::Exponential { lambda: -0.2, scale: 1.0 };
+        let x = Matrix::randn(120, 2, &mut rng);
+        let want = btfi(gfi.tree(), &f, &x);
+        let got = gfi.integrate(&f, &x);
+        assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-9);
+    }
+
+    #[test]
+    fn reusable_across_fields_and_functions() {
+        let mut rng = Pcg::seed(2);
+        let t = generators::random_tree(80, 0.1, 1.0, &mut rng);
+        let tfi = TreeFieldIntegrator::new(&t);
+        for seed in 0..3u64 {
+            let mut r2 = Pcg::seed(seed);
+            let x = Matrix::randn(80, 1, &mut r2);
+            for f in [
+                FDist::Identity,
+                FDist::Polynomial(vec![0.0, 1.0, 0.5]),
+                FDist::Exponential { lambda: -1.0, scale: 1.0 },
+            ] {
+                let got = tfi.integrate(&f, &x);
+                let want = btfi(&t, &f, &x);
+                assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Outer-product ("0-cordial") cross-term multiplication.
+//!
+//! When `f(x+y) = Σ_r g_r(x)·h_r(y)` exactly (polynomial, exponential,
+//! trigonometric f and their products — §3.2.1), the cross matrix
+//! `C[i][j] = f(x_i + y_j)` is a sum of `r` outer products and `C·V`
+//! costs `O((a+b)·d·r)` by associativity (Fig. 2 of the paper).
+
+use crate::ftfi::functions::Separable;
+use crate::linalg::matrix::Matrix;
+
+/// Compute `C·V` where `C[i][j] = Σ_r g_r(xs[i])·h_r(ys[j])` and `V` is
+/// `ys.len() × d`. Output is `xs.len() × d`.
+pub fn apply_separable(sep: &Separable, xs: &[f64], ys: &[f64], v: &Matrix) -> Matrix {
+    assert_eq!(v.rows(), ys.len());
+    let d = v.cols();
+    let mut out = Matrix::zeros(xs.len(), d);
+    // w_r = h_r(ys)^T · V  — a single d-vector per rank-1 term.
+    let mut w = vec![0.0; d];
+    for (g, h) in sep.g.iter().zip(&sep.h) {
+        w.iter_mut().for_each(|x| *x = 0.0);
+        for (j, &yj) in ys.iter().enumerate() {
+            let hy = h(yj);
+            if hy == 0.0 {
+                continue;
+            }
+            for (wc, &vc) in w.iter_mut().zip(v.row(j)) {
+                *wc += hy * vc;
+            }
+        }
+        for (i, &xi) in xs.iter().enumerate() {
+            let gx = g(xi);
+            if gx == 0.0 {
+                continue;
+            }
+            for (o, &wc) in out.row_mut(i).iter_mut().zip(&w) {
+                *o += gx * wc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ftfi::cordial::cross_apply_dense;
+    use crate::ftfi::functions::FDist;
+    use crate::ml::rng::Pcg;
+
+    #[test]
+    fn separable_matches_dense_for_all_zero_cordial_classes() {
+        let mut rng = Pcg::seed(1);
+        let fs = vec![
+            FDist::Identity,
+            FDist::Polynomial(vec![2.0, -1.0, 0.5, 0.1]),
+            FDist::Exponential { lambda: -0.7, scale: 1.3 },
+            FDist::PolyExp { coeffs: vec![1.0, 0.3], lambda: -0.2 },
+            FDist::Trig { omega: 0.9, phase: 0.1, scale: 2.0 },
+        ];
+        for f in &fs {
+            let xs = rng.uniform_vec(17, 0.0, 4.0);
+            let ys = rng.uniform_vec(23, 0.0, 4.0);
+            let v = Matrix::randn(23, 3, &mut rng);
+            let want = cross_apply_dense(f, &xs, &ys, &v);
+            let sep = f.separable_rank().unwrap();
+            let got = apply_separable(&sep, &xs, &ys, &v);
+            assert!(
+                got.max_abs_diff(&want) < 1e-8 * (1.0 + want.frobenius()),
+                "{f:?}: diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn empty_rows_or_cols() {
+        let f = FDist::Polynomial(vec![1.0, 1.0]);
+        let sep = f.separable_rank().unwrap();
+        let v = Matrix::zeros(0, 2);
+        let out = apply_separable(&sep, &[1.0, 2.0], &[], &v);
+        assert_eq!(out.rows(), 2);
+        assert!(out.data().iter().all(|&x| x == 0.0));
+    }
+}

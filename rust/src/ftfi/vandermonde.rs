@@ -1,0 +1,208 @@
+//! Vandermonde cross-term multiplication for exponentiated-quadratic
+//! `f(x) = e^{ux² + vx + w}` on trees whose *column* distances lie on a
+//! lattice (§3.2.1, last paragraph).
+//!
+//! With `y_j = b_j·δ` (b_j ∈ N) the cross matrix factors as
+//! `C = e^w · D1 · V · D2` where `D1 = diag(e^{u x_i² + v x_i})`,
+//! `D2 = diag(e^{u y_j² + v y_j})` and `V[i][j] = r_i^{b_j}` is a
+//! generalized Vandermonde matrix with nodes `r_i = e^{2u x_i δ}`.
+//! The paper's "column embedding" completes the exponent set `{b_j}` to
+//! consecutive integers — operationally:
+//!
+//! - `V·v`  = evaluation of the sparse polynomial `p(t) = Σ_j v_j t^{b_j}`
+//!   at the nodes `r_i`  → fast multipoint evaluation;
+//! - `Vᵀ·u` = the power sums `Σ_i u_i r_i^{b_j}` → coefficients of the
+//!   generating function `Σ_i u_i/(1 − r_i t)`, expanded to degree
+//!   `max b_j` by one polynomial division (numerator/denominator built by
+//!   divide-and-conquer products).
+//!
+//! Crucially the row nodes `x_i` may be **arbitrary reals** — only the
+//! columns need the lattice, which is why this beats the Hankel embedding
+//! when the lattice denominator `p` is large (`p ≫ log N`).
+
+use crate::linalg::fft::Complex;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::polynomial::{multipoint_eval, Poly};
+
+/// `C·V` with `C[i][j] = e^{u(x_i+y_j)² + v(x_i+y_j) + w}`; `ys` must lie
+/// on the lattice `{b·delta}`.
+pub fn expquad_cross_apply(
+    u: f64,
+    vcoef: f64,
+    w: f64,
+    xs: &[f64],
+    ys: &[f64],
+    delta: f64,
+    val: &Matrix,
+) -> Matrix {
+    assert_eq!(val.rows(), ys.len());
+    let d = val.cols();
+    let mut out = Matrix::zeros(xs.len(), d);
+    if xs.is_empty() || ys.is_empty() {
+        return out;
+    }
+    let b: Vec<usize> = ys.iter().map(|&y| (y / delta).round() as usize).collect();
+    let deg = *b.iter().max().unwrap();
+    let nodes: Vec<Complex> =
+        xs.iter().map(|&x| Complex::new((2.0 * u * x * delta).exp(), 0.0)).collect();
+    let d1: Vec<f64> = xs.iter().map(|&x| (u * x * x + vcoef * x + w).exp()).collect();
+    let d2: Vec<f64> = ys.iter().map(|&y| (u * y * y + vcoef * y).exp()).collect();
+    for ch in 0..d {
+        // Sparse polynomial p(t) = Σ_j D2[j]·V[j][ch] · t^{b_j}.
+        let mut coeffs = vec![Complex::ZERO; deg + 1];
+        for (j, &bj) in b.iter().enumerate() {
+            coeffs[bj].re += d2[j] * val.get(j, ch);
+        }
+        let p = Poly::new(coeffs);
+        let evals = multipoint_eval(&p, &nodes, None);
+        for (i, e) in evals.iter().enumerate() {
+            out.set(i, ch, d1[i] * e.re);
+        }
+    }
+    out
+}
+
+/// `Cᵀ·U` for the same matrix: power sums via the generating-function
+/// trick, processed in blocks of `block` rows for stability.
+pub fn expquad_cross_apply_t(
+    u: f64,
+    vcoef: f64,
+    w: f64,
+    xs: &[f64],
+    ys: &[f64],
+    delta: f64,
+    uval: &Matrix,
+    block: usize,
+) -> Matrix {
+    assert_eq!(uval.rows(), xs.len());
+    let d = uval.cols();
+    let mut out = Matrix::zeros(ys.len(), d);
+    if xs.is_empty() || ys.is_empty() {
+        return out;
+    }
+    let b: Vec<usize> = ys.iter().map(|&y| (y / delta).round() as usize).collect();
+    let deg = *b.iter().max().unwrap();
+    let nodes: Vec<f64> = xs.iter().map(|&x| (2.0 * u * x * delta).exp()).collect();
+    let d1: Vec<f64> = xs.iter().map(|&x| (u * x * x + vcoef * x + w).exp()).collect();
+    let d2: Vec<f64> = ys.iter().map(|&y| (u * y * y + vcoef * y).exp()).collect();
+
+    // Accumulate power sums s_ch[e] = Σ_i (D1·U)[i][ch] · r_i^e, e=0..deg.
+    let mut sums = Matrix::zeros(deg + 1, d);
+    for lo in (0..xs.len()).step_by(block.max(1)) {
+        let hi = (lo + block.max(1)).min(xs.len());
+        // B(t) = Π_i (1 - r_i t) by divide-and-conquer.
+        let mut dens: Vec<Poly> = (lo..hi)
+            .map(|i| Poly::new(vec![Complex::ONE, Complex::new(-nodes[i], 0.0)]))
+            .collect();
+        // Per-channel numerators A_ch(t) = Σ_i w_i Π_{k≠i} (1 - r_k t).
+        let mut nums: Vec<Vec<Poly>> = (lo..hi)
+            .map(|i| {
+                (0..d)
+                    .map(|ch| {
+                        Poly::new(vec![Complex::new(d1[i] * uval.get(i, ch), 0.0)])
+                    })
+                    .collect()
+            })
+            .collect();
+        while dens.len() > 1 {
+            let mut nd = Vec::with_capacity(dens.len().div_ceil(2));
+            let mut nn = Vec::with_capacity(dens.len().div_ceil(2));
+            let mut di = dens.into_iter();
+            let mut ni = nums.into_iter();
+            while let Some(da) = di.next() {
+                let na = ni.next().unwrap();
+                match (di.next(), ni.next()) {
+                    (Some(db), Some(nb)) => {
+                        nn.push(
+                            na.iter()
+                                .zip(&nb)
+                                .map(|(x, y)| x.mul(&db).add(&y.mul(&da)))
+                                .collect::<Vec<_>>(),
+                        );
+                        nd.push(da.mul(&db));
+                    }
+                    _ => {
+                        nn.push(na);
+                        nd.push(da);
+                    }
+                }
+            }
+            dens = nd;
+            nums = nn;
+        }
+        let den = dens.pop().unwrap();
+        let chans = nums.pop().unwrap();
+        // Power series A/B mod t^{deg+1}.
+        let inv = den.inverse_mod(deg + 1);
+        for (ch, a) in chans.iter().enumerate() {
+            let series = a.mul(&inv);
+            for e in 0..=deg {
+                if let Some(c) = series.coeffs.get(e) {
+                    sums.add_at(e, ch, c.re);
+                }
+            }
+        }
+    }
+    for (j, &bj) in b.iter().enumerate() {
+        for ch in 0..d {
+            out.set(j, ch, d2[j] * sums.get(bj, ch));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ftfi::cordial::cross_apply_dense;
+    use crate::ftfi::functions::FDist;
+    use crate::ml::rng::Pcg;
+
+    #[test]
+    fn vandermonde_forward_matches_dense() {
+        let mut rng = Pcg::seed(1);
+        let (u, v, w) = (-0.15, 0.05, 0.2);
+        let f = FDist::ExpQuadratic { u, v, w };
+        let delta = 0.25;
+        // xs arbitrary reals, ys on the δ-lattice.
+        let xs = rng.uniform_vec(30, 0.0, 4.0);
+        let ys: Vec<f64> = (0..25).map(|_| rng.below(20) as f64 * delta).collect();
+        let val = Matrix::randn(25, 3, &mut rng);
+        let want = cross_apply_dense(&f, &xs, &ys, &val);
+        let got = expquad_cross_apply(u, v, w, &xs, &ys, delta, &val);
+        let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+        assert!(rel < 1e-8, "rel={rel}");
+    }
+
+    #[test]
+    fn vandermonde_transpose_matches_dense() {
+        let mut rng = Pcg::seed(2);
+        let (u, v, w) = (-0.2, 0.0, 0.0);
+        let f = FDist::ExpQuadratic { u, v, w };
+        let delta = 0.5;
+        let xs = rng.uniform_vec(40, 0.0, 3.0);
+        let ys: Vec<f64> = (0..30).map(|_| rng.below(12) as f64 * delta).collect();
+        let uval = Matrix::randn(40, 2, &mut rng);
+        // Dense C^T U = dense apply with swapped roles.
+        let want = cross_apply_dense(&f, &ys, &xs, &uval);
+        let got = expquad_cross_apply_t(u, v, w, &xs, &ys, delta, &uval, 16);
+        let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+        assert!(rel < 1e-7, "rel={rel}");
+    }
+
+    #[test]
+    fn gaussian_kernel_case() {
+        // Pure Gaussian e^{-γ(x+y)²}: the mask class highlighted for the
+        // best TopViT variants (§4.4).
+        let mut rng = Pcg::seed(3);
+        let f = FDist::gaussian(0.3);
+        let (u, v, w) = (-0.3, 0.0, 0.0);
+        let delta = 1.0; // unit-weight grid MST distances
+        let xs: Vec<f64> = (0..20).map(|_| rng.below(10) as f64).collect();
+        let ys: Vec<f64> = (0..20).map(|_| rng.below(10) as f64).collect();
+        let val = Matrix::randn(20, 1, &mut rng);
+        let want = cross_apply_dense(&f, &xs, &ys, &val);
+        let got = expquad_cross_apply(u, v, w, &xs, &ys, delta, &val);
+        assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-8);
+    }
+}

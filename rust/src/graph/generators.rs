@@ -1,0 +1,205 @@
+//! Synthetic graph generators matching the paper's workloads:
+//! path-plus-random-edges (§4.1 "synthetic graphs"), 2-D grids (the ViT
+//! patch topology of §4.4), random trees, Erdős–Rényi /
+//! Barabási–Albert / community graphs (TU-style dataset classes).
+
+use super::Graph;
+use crate::ml::rng::Pcg;
+use crate::tree::Tree;
+
+/// The §4.1 synthetic family: a weighted path `0-1-…-(n-1)` plus
+/// `extra_edges` random chords; weights uniform in `(0,1)`.
+pub fn path_plus_random_edges(n: usize, extra_edges: usize, rng: &mut Pcg) -> Graph {
+    assert!(n >= 2);
+    let mut edges: Vec<(u32, u32, f64)> = (0..n - 1)
+        .map(|i| (i as u32, i as u32 + 1, rng.uniform_in(1e-3, 1.0)))
+        .collect();
+    let mut added = 0;
+    while added < extra_edges {
+        let u = rng.below(n) as u32;
+        let v = rng.below(n) as u32;
+        if u != v && u.abs_diff(v) != 1 {
+            edges.push((u, v, rng.uniform_in(1e-3, 1.0)));
+            added += 1;
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// A `rows×cols` 2-D grid graph with the given uniform edge weight — the
+/// image-patch topology used by the Topological ViT (§4.4).
+pub fn grid_2d(rows: usize, cols: usize, weight: f64) -> Graph {
+    let idx = |r: usize, c: usize| (r * cols + c) as u32;
+    let mut edges = Vec::with_capacity(2 * rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((idx(r, c), idx(r, c + 1), weight));
+            }
+            if r + 1 < rows {
+                edges.push((idx(r, c), idx(r + 1, c), weight));
+            }
+        }
+    }
+    Graph::from_edges(rows * cols, &edges)
+}
+
+/// A uniformly random labelled tree (random Prüfer-like attachment:
+/// vertex i attaches to a uniform previous vertex), weights in `(lo, hi)`.
+pub fn random_tree(n: usize, lo: f64, hi: f64, rng: &mut Pcg) -> Tree {
+    assert!(n >= 1);
+    let edges: Vec<(u32, u32, f64)> = (1..n)
+        .map(|v| (rng.below(v) as u32, v as u32, rng.uniform_in(lo, hi)))
+        .collect();
+    Tree::from_edges(n, &edges)
+}
+
+/// A random tree whose weights are integer multiples `e/q`, `e ∈ 1..=p`
+/// — the positive-rational-weight regime of §A.2.3 where the Hankel
+/// embedding applies.
+pub fn random_rational_tree(n: usize, p: u32, q: u32, rng: &mut Pcg) -> Tree {
+    assert!(n >= 1 && p >= 1 && q >= 1);
+    let edges: Vec<(u32, u32, f64)> = (1..n)
+        .map(|v| {
+            let e = rng.range(1, p as usize + 1) as f64;
+            (rng.below(v) as u32, v as u32, e / q as f64)
+        })
+        .collect();
+    Tree::from_edges(n, &edges)
+}
+
+/// Erdős–Rényi G(n, p) conditioned on connectivity (retries with a path
+/// patch if disconnected), unit-ish weights jittered for MST uniqueness.
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Pcg) -> Graph {
+    let mut edges = Vec::new();
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            if rng.bool(p) {
+                edges.push((u, v, rng.uniform_in(0.5, 1.5)));
+            }
+        }
+    }
+    // Patch connectivity deterministically: thread a path through any
+    // disconnected remainder (cheap, keeps the degree distribution intact
+    // for the bulk of the graph).
+    let mut g = Graph::from_edges(n, &edges);
+    if !g.is_connected() {
+        for v in 1..n as u32 {
+            edges.push((v - 1, v, rng.uniform_in(0.5, 1.5)));
+        }
+        g = Graph::from_edges(n, &edges);
+    }
+    g
+}
+
+/// Barabási–Albert preferential attachment with `m` edges per new vertex.
+pub fn barabasi_albert(n: usize, m: usize, rng: &mut Pcg) -> Graph {
+    assert!(n > m && m >= 1);
+    let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+    // Repeated-endpoint list: sampling from it is preferential attachment.
+    let mut endpoints: Vec<u32> = Vec::new();
+    // Seed clique of m+1 vertices.
+    for u in 0..=(m as u32) {
+        for v in (u + 1)..=(m as u32) {
+            edges.push((u, v, rng.uniform_in(0.5, 1.5)));
+            endpoints.push(u);
+            endpoints.push(v);
+        }
+    }
+    for v in (m + 1)..n {
+        let mut targets = std::collections::HashSet::new();
+        while targets.len() < m {
+            targets.insert(endpoints[rng.below(endpoints.len())]);
+        }
+        for &t in &targets {
+            edges.push((t, v as u32, rng.uniform_in(0.5, 1.5)));
+            endpoints.push(t);
+            endpoints.push(v as u32);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Planted-partition community graph: `k` communities, intra-community
+/// edge probability `p_in`, inter `p_out`.
+pub fn community_graph(n: usize, k: usize, p_in: f64, p_out: f64, rng: &mut Pcg) -> Graph {
+    let mut edges = Vec::new();
+    let comm: Vec<usize> = (0..n).map(|i| i % k).collect();
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            let p = if comm[u as usize] == comm[v as usize] { p_in } else { p_out };
+            if rng.bool(p) {
+                edges.push((u, v, rng.uniform_in(0.5, 1.5)));
+            }
+        }
+    }
+    let mut g = Graph::from_edges(n, &edges);
+    if !g.is_connected() {
+        for v in 1..n as u32 {
+            edges.push((v - 1, v, rng.uniform_in(0.5, 1.5)));
+        }
+        g = Graph::from_edges(n, &edges);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_plus_edges_connected_with_right_count() {
+        let mut rng = Pcg::seed(1);
+        let g = path_plus_random_edges(100, 60, &mut rng);
+        assert!(g.is_connected());
+        // Duplicates may collapse, but the path backbone is always there.
+        assert!(g.m() >= 99 && g.m() <= 159);
+    }
+
+    #[test]
+    fn grid_shape() {
+        let g = grid_2d(3, 4, 1.0);
+        assert_eq!(g.n(), 12);
+        assert_eq!(g.m(), 3 * 3 + 2 * 4); // horizontal + vertical
+        assert!(g.is_connected());
+        // Corner has degree 2, interior degree 4.
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(5), 4);
+    }
+
+    #[test]
+    fn random_tree_is_tree() {
+        let mut rng = Pcg::seed(2);
+        let t = random_tree(500, 0.1, 1.0, &mut rng);
+        assert_eq!(t.n(), 500);
+        assert_eq!(t.edges().len(), 499);
+    }
+
+    #[test]
+    fn rational_tree_weights_on_lattice() {
+        let mut rng = Pcg::seed(3);
+        let t = random_rational_tree(100, 5, 4, &mut rng);
+        for &(_, _, w) in t.edges() {
+            let scaled = w * 4.0;
+            assert!((scaled - scaled.round()).abs() < 1e-9);
+            assert!(scaled.round() >= 1.0 && scaled.round() <= 5.0);
+        }
+    }
+
+    #[test]
+    fn er_and_ba_connected() {
+        let mut rng = Pcg::seed(4);
+        assert!(erdos_renyi(80, 0.05, &mut rng).is_connected());
+        assert!(barabasi_albert(80, 2, &mut rng).is_connected());
+        assert!(community_graph(60, 3, 0.3, 0.02, &mut rng).is_connected());
+    }
+
+    #[test]
+    fn ba_hub_structure() {
+        let mut rng = Pcg::seed(5);
+        let g = barabasi_albert(300, 2, &mut rng);
+        let max_deg = (0..g.n()).map(|v| g.degree(v)).max().unwrap();
+        // Preferential attachment produces hubs far above the mean degree (~4).
+        assert!(max_deg > 12, "max_deg={max_deg}");
+    }
+}

@@ -1,0 +1,316 @@
+//! Procedural 3-D triangle meshes — the Thingi10K substitute.
+//!
+//! The paper's mesh experiments (Fig. 3 right, Fig. 4, §4.2, Appendix D.3)
+//! use 3-D-printed object scans. Offline we generate procedural meshes
+//! with the same relevant characteristics: closed/open 2-manifold
+//! surfaces, locality (bounded vertex degree), non-trivial curvature
+//! (so vertex normals vary), and sizes from hundreds to tens of
+//! thousands of vertices. Exact analytic vertex normals are carried as
+//! ground truth for the interpolation task. An OFF-format writer/parser
+//! round-trips meshes to disk for the examples.
+
+use super::Graph;
+use crate::ml::rng::Pcg;
+
+/// A triangle mesh: positions, faces, per-vertex unit normals.
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    pub positions: Vec<[f64; 3]>,
+    pub faces: Vec<[u32; 3]>,
+    pub normals: Vec<[f64; 3]>,
+}
+
+fn normalize(v: [f64; 3]) -> [f64; 3] {
+    let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt().max(1e-12);
+    [v[0] / n, v[1] / n, v[2] / n]
+}
+
+impl Mesh {
+    pub fn n_vertices(&self) -> usize {
+        self.positions.len()
+    }
+
+    /// The mesh's edge graph with Euclidean edge lengths — the input to
+    /// MST + FTFI in the interpolation pipeline.
+    pub fn to_graph(&self) -> Graph {
+        let mut edges = Vec::with_capacity(self.faces.len() * 3);
+        for f in &self.faces {
+            for (a, b) in [(f[0], f[1]), (f[1], f[2]), (f[2], f[0])] {
+                let (a, b) = (a.min(b), a.max(b));
+                let pa = self.positions[a as usize];
+                let pb = self.positions[b as usize];
+                let w = ((pa[0] - pb[0]).powi(2)
+                    + (pa[1] - pb[1]).powi(2)
+                    + (pa[2] - pb[2]).powi(2))
+                .sqrt()
+                .max(1e-9);
+                edges.push((a, b, w));
+            }
+        }
+        Graph::from_edges(self.positions.len(), &edges)
+    }
+
+    /// Recompute area-weighted vertex normals from face geometry (used to
+    /// sanity-check the analytic normals of the generators).
+    pub fn face_averaged_normals(&self) -> Vec<[f64; 3]> {
+        let mut acc = vec![[0.0; 3]; self.positions.len()];
+        for f in &self.faces {
+            let [a, b, c] = [
+                self.positions[f[0] as usize],
+                self.positions[f[1] as usize],
+                self.positions[f[2] as usize],
+            ];
+            let u = [b[0] - a[0], b[1] - a[1], b[2] - a[2]];
+            let v = [c[0] - a[0], c[1] - a[1], c[2] - a[2]];
+            let n = [
+                u[1] * v[2] - u[2] * v[1],
+                u[2] * v[0] - u[0] * v[2],
+                u[0] * v[1] - u[1] * v[0],
+            ];
+            for &i in f {
+                for k in 0..3 {
+                    acc[i as usize][k] += n[k];
+                }
+            }
+        }
+        acc.into_iter().map(normalize).collect()
+    }
+
+    /// Serialise as OFF text.
+    pub fn to_off(&self) -> String {
+        let mut s = String::from("OFF\n");
+        s.push_str(&format!("{} {} 0\n", self.positions.len(), self.faces.len()));
+        for p in &self.positions {
+            s.push_str(&format!("{} {} {}\n", p[0], p[1], p[2]));
+        }
+        for f in &self.faces {
+            s.push_str(&format!("3 {} {} {}\n", f[0], f[1], f[2]));
+        }
+        s
+    }
+
+    /// Parse OFF text (triangles only). Normals are recomputed.
+    pub fn from_off(text: &str) -> Result<Mesh, String> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let header = lines.next().ok_or("empty OFF")?;
+        if header != "OFF" {
+            return Err(format!("bad header {header:?}"));
+        }
+        let counts = lines.next().ok_or("missing counts")?;
+        let mut it = counts.split_whitespace();
+        let nv: usize = it.next().ok_or("nv")?.parse().map_err(|e| format!("{e}"))?;
+        let nf: usize = it.next().ok_or("nf")?.parse().map_err(|e| format!("{e}"))?;
+        let mut positions = Vec::with_capacity(nv);
+        for _ in 0..nv {
+            let l = lines.next().ok_or("truncated vertices")?;
+            let xs: Vec<f64> = l.split_whitespace().map(|t| t.parse().unwrap_or(0.0)).collect();
+            if xs.len() < 3 {
+                return Err(format!("bad vertex line {l:?}"));
+            }
+            positions.push([xs[0], xs[1], xs[2]]);
+        }
+        let mut faces = Vec::with_capacity(nf);
+        for _ in 0..nf {
+            let l = lines.next().ok_or("truncated faces")?;
+            let xs: Vec<u32> = l.split_whitespace().map(|t| t.parse().unwrap_or(0)).collect();
+            if xs.len() < 4 || xs[0] != 3 {
+                return Err(format!("non-triangle face {l:?}"));
+            }
+            faces.push([xs[1], xs[2], xs[3]]);
+        }
+        let mut m = Mesh { positions, faces, normals: Vec::new() };
+        m.normals = m.face_averaged_normals();
+        Ok(m)
+    }
+}
+
+/// UV-sphere with `rings×segs` resolution and radial distortion `bump`
+/// (sinusoidal radius modulation gives non-constant curvature).
+pub fn sphere_mesh(rings: usize, segs: usize, bump: f64, rng: &mut Pcg) -> Mesh {
+    assert!(rings >= 3 && segs >= 3);
+    let phase = rng.uniform_in(0.0, std::f64::consts::TAU);
+    let mut positions = Vec::new();
+    positions.push([0.0, 0.0, 1.0]);
+    for r in 1..rings {
+        let theta = std::f64::consts::PI * r as f64 / rings as f64;
+        for s in 0..segs {
+            let phi = std::f64::consts::TAU * s as f64 / segs as f64;
+            let rad = 1.0 + bump * (3.0 * theta + 2.0 * phi + phase).sin();
+            positions.push([
+                rad * theta.sin() * phi.cos(),
+                rad * theta.sin() * phi.sin(),
+                rad * theta.cos(),
+            ]);
+        }
+    }
+    positions.push([0.0, 0.0, -1.0]);
+    let south = (positions.len() - 1) as u32;
+    let idx = |r: usize, s: usize| -> u32 { 1 + ((r - 1) * segs + (s % segs)) as u32 };
+    let mut faces = Vec::new();
+    for s in 0..segs {
+        faces.push([0, idx(1, s), idx(1, s + 1)]);
+        faces.push([south, idx(rings - 1, s + 1), idx(rings - 1, s)]);
+    }
+    for r in 1..rings - 1 {
+        for s in 0..segs {
+            let (a, b, c, d) = (idx(r, s), idx(r, s + 1), idx(r + 1, s + 1), idx(r + 1, s));
+            // Winding chosen so cross products point outward.
+            faces.push([a, c, b]);
+            faces.push([a, d, c]);
+        }
+    }
+    let mut m = Mesh { positions, faces, normals: Vec::new() };
+    m.normals = m.face_averaged_normals();
+    m
+}
+
+/// Torus mesh (major radius 1, minor `minor`), optionally noise-perturbed.
+pub fn torus_mesh(rings: usize, segs: usize, minor: f64, noise: f64, rng: &mut Pcg) -> Mesh {
+    assert!(rings >= 3 && segs >= 3);
+    let mut positions = Vec::with_capacity(rings * segs);
+    for r in 0..rings {
+        let u = std::f64::consts::TAU * r as f64 / rings as f64;
+        for s in 0..segs {
+            let v = std::f64::consts::TAU * s as f64 / segs as f64;
+            let rr = minor * (1.0 + noise * rng.normal() * 0.1);
+            positions.push([
+                (1.0 + rr * v.cos()) * u.cos(),
+                (1.0 + rr * v.cos()) * u.sin(),
+                rr * v.sin(),
+            ]);
+        }
+    }
+    let idx = |r: usize, s: usize| ((r % rings) * segs + (s % segs)) as u32;
+    let mut faces = Vec::with_capacity(2 * rings * segs);
+    for r in 0..rings {
+        for s in 0..segs {
+            let (a, b, c, d) = (idx(r, s), idx(r + 1, s), idx(r + 1, s + 1), idx(r, s + 1));
+            faces.push([a, b, c]);
+            faces.push([a, c, d]);
+        }
+    }
+    let mut m = Mesh { positions, faces, normals: Vec::new() };
+    m.normals = m.face_averaged_normals();
+    m
+}
+
+/// Height-field terrain over a `rows×cols` grid (open surface) — smooth
+/// large-scale structure plus noise, a stand-in for scanned objects.
+pub fn terrain_mesh(rows: usize, cols: usize, roughness: f64, rng: &mut Pcg) -> Mesh {
+    assert!(rows >= 2 && cols >= 2);
+    let (p1, p2) = (rng.uniform_in(0.5, 2.0), rng.uniform_in(0.5, 2.0));
+    let (q1, q2) = (rng.uniform_in(0.0, 6.0), rng.uniform_in(0.0, 6.0));
+    let mut positions = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            let x = r as f64 / (rows - 1) as f64 * 4.0;
+            let y = c as f64 / (cols - 1) as f64 * 4.0;
+            let z =
+                (p1 * x + q1).sin() * (p2 * y + q2).cos() + roughness * rng.normal() * 0.05;
+            positions.push([x, y, z]);
+        }
+    }
+    let idx = |r: usize, c: usize| (r * cols + c) as u32;
+    let mut faces = Vec::new();
+    for r in 0..rows - 1 {
+        for c in 0..cols - 1 {
+            faces.push([idx(r, c), idx(r, c + 1), idx(r + 1, c + 1)]);
+            faces.push([idx(r, c), idx(r + 1, c + 1), idx(r + 1, c)]);
+        }
+    }
+    let mut m = Mesh { positions, faces, normals: Vec::new() };
+    m.normals = m.face_averaged_normals();
+    m
+}
+
+/// The Thingi10K-substitute collection used by Fig. 3/Fig. 4: a mixture
+/// of shapes at a target vertex budget.
+pub fn mesh_zoo(target_vertices: usize, seed: u64) -> Vec<(String, Mesh)> {
+    let mut rng = Pcg::seed(seed);
+    let side = ((target_vertices as f64).sqrt() as usize).max(4);
+    vec![
+        ("sphere".into(), sphere_mesh(side.max(3), side.max(3), 0.15, &mut rng)),
+        ("torus".into(), torus_mesh(side.max(3), side.max(3), 0.35, 0.5, &mut rng)),
+        ("terrain".into(), terrain_mesh(side, side, 1.0, &mut rng)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sphere_connectivity_and_normals() {
+        let mut rng = Pcg::seed(1);
+        let m = sphere_mesh(8, 12, 0.0, &mut rng);
+        assert_eq!(m.n_vertices(), 2 + 7 * 12);
+        let g = m.to_graph();
+        assert!(g.is_connected());
+        // For a perfect sphere the normal equals the position direction.
+        for (p, n) in m.positions.iter().zip(&m.normals) {
+            let pn = normalize(*p);
+            let dot: f64 = pn.iter().zip(n).map(|(a, b)| a * b).sum();
+            assert!(dot > 0.97, "normal misaligned: {dot}");
+        }
+    }
+
+    #[test]
+    fn torus_is_closed_manifold() {
+        let mut rng = Pcg::seed(2);
+        let m = torus_mesh(10, 14, 0.3, 0.0, &mut rng);
+        assert_eq!(m.n_vertices(), 140);
+        // Euler characteristic of a torus: V - E + F = 0.
+        let g = m.to_graph();
+        let euler = m.n_vertices() as i64 - g.m() as i64 + m.faces.len() as i64;
+        assert_eq!(euler, 0);
+        for n in &m.normals {
+            let len = (n[0] * n[0] + n[1] * n[1] + n[2] * n[2]).sqrt();
+            assert!((len - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn terrain_open_surface() {
+        let mut rng = Pcg::seed(3);
+        let m = terrain_mesh(12, 9, 0.0, &mut rng);
+        assert_eq!(m.n_vertices(), 108);
+        // Euler characteristic of a disc: V - E + F = 1.
+        let g = m.to_graph();
+        let euler = m.n_vertices() as i64 - g.m() as i64 + m.faces.len() as i64;
+        assert_eq!(euler, 1);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn off_roundtrip() {
+        let mut rng = Pcg::seed(4);
+        let m = torus_mesh(5, 6, 0.3, 0.0, &mut rng);
+        let text = m.to_off();
+        let back = Mesh::from_off(&text).unwrap();
+        assert_eq!(back.n_vertices(), m.n_vertices());
+        assert_eq!(back.faces, m.faces);
+        for (a, b) in back.positions.iter().zip(&m.positions) {
+            for k in 0..3 {
+                assert!((a[k] - b[k]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn off_rejects_garbage() {
+        assert!(Mesh::from_off("").is_err());
+        assert!(Mesh::from_off("PLY\n1 0 0\n0 0 0\n").is_err());
+    }
+
+    #[test]
+    fn zoo_sizes_scale() {
+        let small = mesh_zoo(100, 7);
+        let large = mesh_zoo(2500, 7);
+        for ((_, s), (_, l)) in small.iter().zip(&large) {
+            assert!(l.n_vertices() > 3 * s.n_vertices());
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Weighted undirected graphs in compressed-sparse-row form, plus the
+//! substrates built on them (shortest paths, MST, generators, meshes,
+//! point clouds, synthetic TU-style datasets).
+
+pub mod generators;
+pub mod mesh;
+pub mod mst;
+pub mod point_cloud;
+pub mod shortest_path;
+pub mod tu_dataset;
+pub mod union_find;
+
+/// An undirected weighted graph stored as CSR. Every undirected edge
+/// `{u,v}` appears twice in the adjacency arrays (once per endpoint).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: usize,
+    offsets: Vec<usize>,
+    neighbors: Vec<u32>,
+    weights: Vec<f64>,
+    /// The unique undirected edge list (u < v) the CSR was built from.
+    edges: Vec<(u32, u32, f64)>,
+}
+
+impl Graph {
+    /// Build from an undirected edge list. Self-loops are dropped;
+    /// duplicate edges keep the smallest weight.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, f64)]) -> Self {
+        let mut dedup: std::collections::HashMap<(u32, u32), f64> =
+            std::collections::HashMap::with_capacity(edges.len());
+        for &(u, v, w) in edges {
+            assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range n={n}");
+            assert!(w > 0.0, "edge weights must be positive, got {w}");
+            if u == v {
+                continue;
+            }
+            let key = (u.min(v), u.max(v));
+            dedup
+                .entry(key)
+                .and_modify(|old| {
+                    if w < *old {
+                        *old = w;
+                    }
+                })
+                .or_insert(w);
+        }
+        let mut uniq: Vec<(u32, u32, f64)> =
+            dedup.into_iter().map(|((u, v), w)| (u, v, w)).collect();
+        uniq.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+
+        let mut deg = vec![0usize; n];
+        for &(u, v, _) in &uniq {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let m2 = offsets[n];
+        let mut neighbors = vec![0u32; m2];
+        let mut weights = vec![0.0f64; m2];
+        let mut cursor = offsets.clone();
+        for &(u, v, w) in &uniq {
+            neighbors[cursor[u as usize]] = v;
+            weights[cursor[u as usize]] = w;
+            cursor[u as usize] += 1;
+            neighbors[cursor[v as usize]] = u;
+            weights[cursor[v as usize]] = w;
+            cursor[v as usize] += 1;
+        }
+        Graph { n, offsets, neighbors, weights, edges: uniq }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Neighbours of `v` with edge weights.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let lo = self.offsets[v];
+        let hi = self.offsets[v + 1];
+        self.neighbors[lo..hi].iter().copied().zip(self.weights[lo..hi].iter().copied())
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// The unique undirected edge list (u < v).
+    #[inline]
+    pub fn edges(&self) -> &[(u32, u32, f64)] {
+        &self.edges
+    }
+
+    /// Is the graph connected? (Empty graphs count as connected.)
+    pub fn is_connected(&self) -> bool {
+        if self.n <= 1 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for (u, _) in self.neighbors(v) {
+                if !seen[u as usize] {
+                    seen[u as usize] = true;
+                    count += 1;
+                    stack.push(u as usize);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Total weight of all edges.
+    pub fn total_weight(&self) -> f64 {
+        self.edges.iter().map(|&(_, _, w)| w).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0), (0, 2, 3.0)])
+    }
+
+    #[test]
+    fn csr_layout() {
+        let g = triangle();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.degree(0), 2);
+        let nbrs: Vec<_> = g.neighbors(1).collect();
+        assert_eq!(nbrs.len(), 2);
+        assert!(nbrs.contains(&(0, 1.0)));
+        assert!(nbrs.contains(&(2, 2.0)));
+    }
+
+    #[test]
+    fn dedup_keeps_min_weight() {
+        let g = Graph::from_edges(2, &[(0, 1, 5.0), (1, 0, 2.0)]);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.edges()[0].2, 2.0);
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = Graph::from_edges(2, &[(0, 0, 1.0), (0, 1, 1.0)]);
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn connectivity() {
+        assert!(triangle().is_connected());
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        assert!(!g.is_connected());
+        assert!(Graph::from_edges(1, &[]).is_connected());
+        assert!(Graph::from_edges(0, &[]).is_connected());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive_weight() {
+        Graph::from_edges(2, &[(0, 1, 0.0)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range() {
+        Graph::from_edges(2, &[(0, 5, 1.0)]);
+    }
+}

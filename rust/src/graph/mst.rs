@@ -1,0 +1,94 @@
+//! Minimum spanning trees. The paper's experiments (§4) all approximate
+//! the graph metric by the metric of its MST, so this is the standard
+//! entry point from a general graph into the tree-field integrators.
+
+use super::union_find::UnionFind;
+use super::Graph;
+use crate::tree::Tree;
+
+/// Kruskal's algorithm. Requires a connected graph; returns the MST as a
+/// [`Tree`] over the same vertex ids.
+pub fn minimum_spanning_tree(g: &Graph) -> Tree {
+    assert!(g.is_connected(), "MST requires a connected graph");
+    let mut edges: Vec<(u32, u32, f64)> = g.edges().to_vec();
+    edges.sort_unstable_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+    let mut uf = UnionFind::new(g.n());
+    let mut tree_edges = Vec::with_capacity(g.n().saturating_sub(1));
+    for (u, v, w) in edges {
+        if uf.union(u as usize, v as usize) {
+            tree_edges.push((u, v, w));
+            if tree_edges.len() + 1 == g.n() {
+                break;
+            }
+        }
+    }
+    Tree::from_edges(g.n(), &tree_edges)
+}
+
+/// Total weight of the MST without materialising the tree (used by tests
+/// and by the near-minimum-spanning-tree distortion experiments).
+pub fn mst_weight(g: &Graph) -> f64 {
+    let mut edges: Vec<(u32, u32, f64)> = g.edges().to_vec();
+    edges.sort_unstable_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+    let mut uf = UnionFind::new(g.n());
+    let mut total = 0.0;
+    for (u, v, w) in edges {
+        if uf.union(u as usize, v as usize) {
+            total += w;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::ml::rng::Pcg;
+
+    #[test]
+    fn mst_of_triangle_drops_heaviest() {
+        let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0), (0, 2, 3.0)]);
+        let t = minimum_spanning_tree(&g);
+        assert_eq!(t.n(), 3);
+        assert!((t.total_weight() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mst_weight_agrees_with_tree() {
+        let mut rng = Pcg::seed(5);
+        let g = generators::path_plus_random_edges(200, 100, &mut rng);
+        let t = minimum_spanning_tree(&g);
+        assert!((t.total_weight() - mst_weight(&g)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mst_is_spanning() {
+        let mut rng = Pcg::seed(6);
+        let g = generators::path_plus_random_edges(50, 30, &mut rng);
+        let t = minimum_spanning_tree(&g);
+        assert_eq!(t.n(), 50);
+        assert_eq!(t.edges().len(), 49);
+    }
+
+    #[test]
+    fn mst_never_heavier_than_any_spanning_tree() {
+        // The path itself is a spanning tree of path_plus_random_edges.
+        let mut rng = Pcg::seed(7);
+        let g = generators::path_plus_random_edges(80, 40, &mut rng);
+        let path_weight: f64 = g
+            .edges()
+            .iter()
+            .filter(|&&(u, v, _)| v == u + 1)
+            .map(|&(_, _, w)| w)
+            .sum();
+        assert!(mst_weight(&g) <= path_weight + 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mst_rejects_disconnected() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        minimum_spanning_tree(&g);
+    }
+}

@@ -1,0 +1,216 @@
+//! Procedural 3-D point clouds + ε-neighbourhood graphs — the ModelNet10
+//! substitute (Appendix D.1).
+//!
+//! Ten parametric solid families (one per "class"), sampled on their
+//! surfaces with noise. The classification pipeline builds an ε-graph per
+//! cloud, takes its MST, runs FTFI with the chosen `f`, and featurises by
+//! the smallest kernel eigenvalues (same recipe as the TU experiments).
+
+use super::Graph;
+use crate::ml::rng::Pcg;
+
+/// A labelled point cloud.
+#[derive(Clone, Debug)]
+pub struct PointCloud {
+    pub points: Vec<[f64; 3]>,
+    pub label: usize,
+}
+
+/// The ten parametric families standing in for ModelNet10's classes.
+pub const N_CLASSES: usize = 10;
+
+/// Sample one cloud of class `label` (0..10) with `n` points.
+pub fn sample_cloud(label: usize, n: usize, noise: f64, rng: &mut Pcg) -> PointCloud {
+    assert!(label < N_CLASSES);
+    let mut points = Vec::with_capacity(n);
+    for _ in 0..n {
+        let u = rng.uniform_in(0.0, std::f64::consts::TAU);
+        let v = rng.uniform_in(-1.0, 1.0);
+        let t = rng.uniform();
+        let p: [f64; 3] = match label {
+            // 0: sphere
+            0 => {
+                let s = (1.0 - v * v).sqrt();
+                [s * u.cos(), s * u.sin(), v]
+            }
+            // 1: cylinder (side)
+            1 => [u.cos(), u.sin(), 2.0 * v],
+            // 2: torus
+            2 => {
+                let w = std::f64::consts::TAU * t;
+                [(1.0 + 0.35 * w.cos()) * u.cos(), (1.0 + 0.35 * w.cos()) * u.sin(), 0.35 * w.sin()]
+            }
+            // 3: cone
+            3 => {
+                let h = t;
+                [(1.0 - h) * u.cos(), (1.0 - h) * u.sin(), 2.0 * h - 1.0]
+            }
+            // 4: cube surface
+            4 => {
+                let face = rng.below(6);
+                let (a, b) = (rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0));
+                match face {
+                    0 => [1.0, a, b],
+                    1 => [-1.0, a, b],
+                    2 => [a, 1.0, b],
+                    3 => [a, -1.0, b],
+                    4 => [a, b, 1.0],
+                    _ => [a, b, -1.0],
+                }
+            }
+            // 5: helix tube
+            5 => {
+                let s = 3.0 * std::f64::consts::TAU * t;
+                [0.8 * s.cos() + 0.1 * u.cos(), 0.8 * s.sin() + 0.1 * u.sin(), s / 6.0 - 1.5]
+            }
+            // 6: two parallel planes
+            6 => [rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0), if rng.bool(0.5) { 0.5 } else { -0.5 }],
+            // 7: cross of three bars
+            7 => {
+                let axis = rng.below(3);
+                let long = rng.uniform_in(-1.5, 1.5);
+                let (a, b) = (rng.uniform_in(-0.2, 0.2), rng.uniform_in(-0.2, 0.2));
+                match axis {
+                    0 => [long, a, b],
+                    1 => [a, long, b],
+                    _ => [a, b, long],
+                }
+            }
+            // 8: paraboloid bowl
+            8 => {
+                let r = t.sqrt();
+                [r * u.cos(), r * u.sin(), r * r - 0.5]
+            }
+            // 9: figure-eight sheet
+            _ => {
+                let w = std::f64::consts::TAU * t;
+                [(0.8 + 0.3 * (2.0 * w).cos()) * w.cos(), (0.8 + 0.3 * (2.0 * w).cos()) * w.sin(), v * 0.4]
+            }
+        };
+        points.push([
+            p[0] + noise * rng.normal(),
+            p[1] + noise * rng.normal(),
+            p[2] + noise * rng.normal(),
+        ]);
+    }
+    PointCloud { points, label }
+}
+
+/// Sample a balanced dataset: `per_class` clouds of `n` points each.
+pub fn sample_dataset(per_class: usize, n: usize, noise: f64, rng: &mut Pcg) -> Vec<PointCloud> {
+    let mut out = Vec::with_capacity(per_class * N_CLASSES);
+    for label in 0..N_CLASSES {
+        for _ in 0..per_class {
+            out.push(sample_cloud(label, n, noise, rng));
+        }
+    }
+    out
+}
+
+/// Build an ε-neighbourhood graph (edges between points within `eps`),
+/// patched to connectivity with nearest-neighbour links between
+/// components when necessary (clouds must be connected for the MST).
+pub fn epsilon_graph(cloud: &PointCloud, eps: f64) -> Graph {
+    let n = cloud.points.len();
+    let d2 = |a: &[f64; 3], b: &[f64; 3]| -> f64 {
+        (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2) + (a[2] - b[2]).powi(2)
+    };
+    let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dd = d2(&cloud.points[i], &cloud.points[j]);
+            if dd <= eps * eps {
+                edges.push((i as u32, j as u32, dd.sqrt().max(1e-9)));
+            }
+        }
+    }
+    let mut g = Graph::from_edges(n, &edges);
+    // Patch components together with their mutual nearest pairs.
+    while !g.is_connected() {
+        let comp = components(&g);
+        // Find the closest cross-component pair (O(n²) — fine at our sizes).
+        let mut best = (0u32, 0u32, f64::INFINITY);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if comp[i] != comp[j] {
+                    let dd = d2(&cloud.points[i], &cloud.points[j]);
+                    if dd < best.2 {
+                        best = (i as u32, j as u32, dd);
+                    }
+                }
+            }
+        }
+        edges.push((best.0, best.1, best.2.sqrt().max(1e-9)));
+        g = Graph::from_edges(n, &edges);
+    }
+    g
+}
+
+fn components(g: &Graph) -> Vec<usize> {
+    let n = g.n();
+    let mut comp = vec![usize::MAX; n];
+    let mut next = 0;
+    for s in 0..n {
+        if comp[s] != usize::MAX {
+            continue;
+        }
+        let mut stack = vec![s];
+        comp[s] = next;
+        while let Some(v) = stack.pop() {
+            for (u, _) in g.neighbors(v) {
+                if comp[u as usize] == usize::MAX {
+                    comp[u as usize] = next;
+                    stack.push(u as usize);
+                }
+            }
+        }
+        next += 1;
+    }
+    comp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clouds_have_requested_shape() {
+        let mut rng = Pcg::seed(1);
+        for label in 0..N_CLASSES {
+            let c = sample_cloud(label, 64, 0.01, &mut rng);
+            assert_eq!(c.points.len(), 64);
+            assert_eq!(c.label, label);
+        }
+    }
+
+    #[test]
+    fn sphere_points_near_unit_radius() {
+        let mut rng = Pcg::seed(2);
+        let c = sample_cloud(0, 200, 0.0, &mut rng);
+        for p in &c.points {
+            let r = (p[0] * p[0] + p[1] * p[1] + p[2] * p[2]).sqrt();
+            assert!((r - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn epsilon_graph_connected() {
+        let mut rng = Pcg::seed(3);
+        for label in [0usize, 4, 7] {
+            let c = sample_cloud(label, 80, 0.02, &mut rng);
+            let g = epsilon_graph(&c, 0.35);
+            assert!(g.is_connected());
+            assert_eq!(g.n(), 80);
+        }
+    }
+
+    #[test]
+    fn dataset_is_balanced() {
+        let mut rng = Pcg::seed(4);
+        let ds = sample_dataset(3, 32, 0.01, &mut rng);
+        assert_eq!(ds.len(), 30);
+        for label in 0..N_CLASSES {
+            assert_eq!(ds.iter().filter(|c| c.label == label).count(), 3);
+        }
+    }
+}

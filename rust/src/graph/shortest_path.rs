@@ -1,0 +1,140 @@
+//! Shortest paths: Dijkstra (binary heap) for weighted graphs, BFS for
+//! unit weights, single-source on trees in linear time, and all-pairs
+//! helpers used by the brute-force baselines (BGFI/BTFI) and by dataset
+//! featurisation.
+
+use super::Graph;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry ordered by min distance.
+#[derive(PartialEq)]
+struct HeapItem {
+    dist: f64,
+    node: u32,
+}
+
+impl Eq for HeapItem {}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for a min-heap; dist is never NaN.
+        other.dist.partial_cmp(&self.dist).unwrap()
+    }
+}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Single-source shortest-path distances via Dijkstra.
+/// Unreachable vertices get `f64::INFINITY`.
+pub fn dijkstra(g: &Graph, source: usize) -> Vec<f64> {
+    let mut dist = vec![f64::INFINITY; g.n()];
+    let mut heap = BinaryHeap::new();
+    dist[source] = 0.0;
+    heap.push(HeapItem { dist: 0.0, node: source as u32 });
+    while let Some(HeapItem { dist: d, node }) = heap.pop() {
+        let v = node as usize;
+        if d > dist[v] {
+            continue; // stale entry
+        }
+        for (u, w) in g.neighbors(v) {
+            let nd = d + w;
+            if nd < dist[u as usize] {
+                dist[u as usize] = nd;
+                heap.push(HeapItem { dist: nd, node: u });
+            }
+        }
+    }
+    dist
+}
+
+/// BFS hop counts (treats every edge as weight 1). `usize::MAX` when
+/// unreachable.
+pub fn bfs_hops(g: &Graph, source: usize) -> Vec<usize> {
+    let mut dist = vec![usize::MAX; g.n()];
+    let mut queue = std::collections::VecDeque::new();
+    dist[source] = 0;
+    queue.push_back(source);
+    while let Some(v) = queue.pop_front() {
+        for (u, _) in g.neighbors(v) {
+            if dist[u as usize] == usize::MAX {
+                dist[u as usize] = dist[v] + 1;
+                queue.push_back(u as usize);
+            }
+        }
+    }
+    dist
+}
+
+/// All-pairs shortest paths as a dense `n×n` row-major buffer (row i =
+/// distances from i). O(n · m log n): one Dijkstra per source. This is the
+/// `O(N²)`+ preprocessing step the paper's brute-force baselines pay.
+pub fn all_pairs(g: &Graph) -> Vec<f64> {
+    let n = g.n();
+    let mut out = vec![0.0; n * n];
+    for s in 0..n {
+        let d = dijkstra(g, s);
+        out[s * n..(s + 1) * n].copy_from_slice(&d);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weighted_square() -> Graph {
+        // 0-1 (1), 1-2 (2), 2-3 (1), 3-0 (5): shortest 0→3 goes around.
+        Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 1.0), (3, 0, 5.0)])
+    }
+
+    #[test]
+    fn dijkstra_prefers_cheaper_path() {
+        let d = dijkstra(&weighted_square(), 0);
+        assert_eq!(d, vec![0.0, 1.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn dijkstra_unreachable_is_inf() {
+        let g = Graph::from_edges(3, &[(0, 1, 1.0)]);
+        let d = dijkstra(&g, 0);
+        assert!(d[2].is_infinite());
+    }
+
+    #[test]
+    fn bfs_counts_hops() {
+        let d = bfs_hops(&weighted_square(), 0);
+        assert_eq!(d, vec![0, 1, 2, 1]);
+    }
+
+    #[test]
+    fn all_pairs_symmetric() {
+        let g = weighted_square();
+        let ap = all_pairs(&g);
+        let n = g.n();
+        for i in 0..n {
+            assert_eq!(ap[i * n + i], 0.0);
+            for j in 0..n {
+                assert!((ap[i * n + j] - ap[j * n + i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn all_pairs_triangle_inequality() {
+        let g = weighted_square();
+        let ap = all_pairs(&g);
+        let n = g.n();
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    assert!(ap[i * n + j] <= ap[i * n + k] + ap[k * n + j] + 1e-12);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Dense linear algebra substrates: FFT, matrices, polynomial arithmetic,
+//! symmetric eigensolvers.
+
+pub mod eigen;
+pub mod fft;
+pub mod matrix;
+pub mod polynomial;

@@ -1,0 +1,397 @@
+//! Polynomial arithmetic over C (FFT multiplication, Newton-iteration
+//! division, subproduct trees, fast multipoint evaluation) — the machinery
+//! behind the rational-function cordial fast path (Cabello 2022, Lemma 1):
+//! given rational functions `R_j(x) = v_j · f(x + y_j)` the values
+//! `Σ_j R_j(x_i)` at `a` points are computed in `O((a+b) log² )` by
+//! (1) combining the `R_j` into a single rational function with a
+//! divide-and-conquer over FFT polynomial multiplications, and
+//! (2) evaluating its numerator and denominator at all `x_i` with a
+//! remainder tree.
+//!
+//! Numerical caveat (documented in DESIGN.md): remainder-tree multipoint
+//! evaluation is only conditionally stable in f64. The FTFI driver
+//! therefore cross-checks magnitudes and falls back to Horner evaluation
+//! per point when degrees are small — which is also *faster* below ~2^8.
+
+use crate::linalg::fft::{convolve_complex, Complex};
+
+/// Dense polynomial over C, coefficient order low→high. The zero
+/// polynomial is represented by an empty coefficient vector.
+#[derive(Clone, Debug, Default)]
+pub struct Poly {
+    pub coeffs: Vec<Complex>,
+}
+
+impl Poly {
+    /// Construct and normalise (strip trailing ~zero coefficients).
+    pub fn new(coeffs: Vec<Complex>) -> Self {
+        let mut p = Poly { coeffs };
+        p.normalize();
+        p
+    }
+
+    /// From real coefficients.
+    pub fn from_real(coeffs: &[f64]) -> Self {
+        Poly::new(coeffs.iter().map(|&c| Complex::new(c, 0.0)).collect())
+    }
+
+    /// The constant-1 polynomial.
+    pub fn one() -> Self {
+        Poly { coeffs: vec![Complex::ONE] }
+    }
+
+    /// Degree; 0 for the zero polynomial by convention.
+    pub fn degree(&self) -> usize {
+        self.coeffs.len().saturating_sub(1)
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.coeffs.is_empty()
+    }
+
+    fn normalize(&mut self) {
+        while let Some(c) = self.coeffs.last() {
+            if c.abs() < 1e-300 {
+                self.coeffs.pop();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Horner evaluation at a single point.
+    pub fn eval(&self, x: Complex) -> Complex {
+        let mut acc = Complex::ZERO;
+        for &c in self.coeffs.iter().rev() {
+            acc = acc * x + c;
+        }
+        acc
+    }
+
+    /// Product via FFT convolution.
+    pub fn mul(&self, other: &Poly) -> Poly {
+        if self.is_zero() || other.is_zero() {
+            return Poly::default();
+        }
+        Poly::new(convolve_complex(&self.coeffs, &other.coeffs))
+    }
+
+    /// Sum.
+    pub fn add(&self, other: &Poly) -> Poly {
+        let n = self.coeffs.len().max(other.coeffs.len());
+        let mut out = vec![Complex::ZERO; n];
+        for (o, &c) in out.iter_mut().zip(&self.coeffs) {
+            *o = c;
+        }
+        for (o, &c) in out.iter_mut().zip(&other.coeffs) {
+            *o += c;
+        }
+        Poly::new(out)
+    }
+
+    /// Scalar multiple.
+    pub fn scale(&self, s: Complex) -> Poly {
+        Poly::new(self.coeffs.iter().map(|&c| c * s).collect())
+    }
+
+    /// Coefficients reversed (x^n · p(1/x) for n = len-1).
+    fn reversed(&self) -> Poly {
+        let mut c = self.coeffs.clone();
+        c.reverse();
+        Poly::new(c)
+    }
+
+    /// Truncate to the first `n` coefficients (mod x^n).
+    fn truncated(&self, n: usize) -> Poly {
+        Poly::new(self.coeffs.iter().take(n).cloned().collect())
+    }
+
+    /// Power-series inverse mod x^n by Newton iteration:
+    /// g_{2k} = g_k (2 - f g_k) mod x^{2k}. Requires nonzero constant term.
+    pub fn inverse_mod(&self, n: usize) -> Poly {
+        assert!(!self.is_zero() && self.coeffs[0].abs() > 1e-300, "inverse of zero constant term");
+        let mut g = Poly { coeffs: vec![self.coeffs[0].inv()] };
+        let mut k = 1;
+        while k < n {
+            k = (2 * k).min(n);
+            // g = g*(2 - f*g) mod x^k
+            let fg = self.truncated(k).mul(&g).truncated(k);
+            let mut two_minus = fg.scale(Complex::new(-1.0, 0.0));
+            if two_minus.coeffs.is_empty() {
+                two_minus.coeffs.push(Complex::ZERO);
+            }
+            two_minus.coeffs[0] += Complex::new(2.0, 0.0);
+            g = g.mul(&two_minus).truncated(k);
+        }
+        g.truncated(n)
+    }
+
+    /// Fast Euclidean division: returns (quotient, remainder) with
+    /// deg(rem) < deg(divisor). Uses the reversal + power-series-inverse
+    /// trick, O(d log d).
+    pub fn divmod(&self, divisor: &Poly) -> (Poly, Poly) {
+        assert!(!divisor.is_zero(), "division by zero polynomial");
+        let n = self.coeffs.len();
+        let m = divisor.coeffs.len();
+        if n < m {
+            return (Poly::default(), self.clone());
+        }
+        let qlen = n - m + 1;
+        let rev_num = self.reversed();
+        let rev_den = divisor.reversed();
+        let inv = rev_den.inverse_mod(qlen);
+        let mut rev_q = rev_num.mul(&inv).truncated(qlen);
+        // reversed() strips leading zeros of q; pad before reversing back.
+        rev_q.coeffs.resize(qlen, Complex::ZERO);
+        rev_q.coeffs.reverse();
+        let q = Poly::new(rev_q.coeffs);
+        let r = self.add(&q.mul(divisor).scale(Complex::new(-1.0, 0.0)));
+        (q, r.truncated(m - 1))
+    }
+
+    /// Remainder only.
+    pub fn rem(&self, divisor: &Poly) -> Poly {
+        self.divmod(divisor).1
+    }
+}
+
+/// Subproduct tree over the points `xs`: level 0 holds the monic linear
+/// factors `(x - x_i)`, each higher level pairwise products; the root is
+/// `Π_i (x - x_i)`.
+pub struct SubproductTree {
+    /// levels[0] = leaves, levels.last() = [root].
+    pub levels: Vec<Vec<Poly>>,
+    pub n: usize,
+}
+
+impl SubproductTree {
+    pub fn build(xs: &[Complex]) -> Self {
+        assert!(!xs.is_empty());
+        let leaves: Vec<Poly> = xs
+            .iter()
+            .map(|&x| Poly { coeffs: vec![-x, Complex::ONE] })
+            .collect();
+        let mut levels = vec![leaves];
+        while levels.last().unwrap().len() > 1 {
+            let prev = levels.last().unwrap();
+            let mut next = Vec::with_capacity(prev.len().div_ceil(2));
+            let mut i = 0;
+            while i + 1 < prev.len() {
+                next.push(prev[i].mul(&prev[i + 1]));
+                i += 2;
+            }
+            if i < prev.len() {
+                next.push(prev[i].clone());
+            }
+            levels.push(next);
+        }
+        SubproductTree { levels, n: xs.len() }
+    }
+
+    /// The root polynomial Π (x - x_i).
+    pub fn root(&self) -> &Poly {
+        &self.levels.last().unwrap()[0]
+    }
+}
+
+/// Fast multipoint evaluation of `p` at `xs` via a remainder tree over the
+/// subproduct tree; O((n + deg p) log²). Falls back to Horner when that is
+/// cheaper (small degree or few points).
+pub fn multipoint_eval(p: &Poly, xs: &[Complex], tree: Option<&SubproductTree>) -> Vec<Complex> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    // Horner is O(n · deg); the remainder tree has large constants. The
+    // crossover measured on this machine sits around deg ≈ 128.
+    if p.coeffs.len() <= 128 || xs.len() <= 16 {
+        return xs.iter().map(|&x| p.eval(x)).collect();
+    }
+    let owned;
+    let tree = match tree {
+        Some(t) => t,
+        None => {
+            owned = SubproductTree::build(xs);
+            &owned
+        }
+    };
+    // Conditioning guard: the nodal polynomial's coefficient range decides
+    // whether the remainder tree is numerically viable in f64 (uniform
+    // points on a wide interval blow up binomially; Chebyshev-like sets
+    // stay bounded). Fall back to Horner when risky — slower, stable.
+    let root_mag =
+        tree.root().coeffs.iter().map(|c| c.abs()).fold(0.0f64, f64::max);
+    if !(1e-8..=1e8).contains(&root_mag) {
+        return xs.iter().map(|&x| p.eval(x)).collect();
+    }
+    // Walk the tree top-down, reducing p modulo each node.
+    let top = tree.levels.len() - 1;
+    let mut rems = vec![p.rem(&tree.levels[top][0])];
+    for level in (0..top).rev() {
+        let mut next = Vec::with_capacity(tree.levels[level].len());
+        for (pi, parent_rem) in rems.iter().enumerate() {
+            let l = 2 * pi;
+            if l < tree.levels[level].len() {
+                next.push(parent_rem.rem(&tree.levels[level][l]));
+            }
+            let r = 2 * pi + 1;
+            if r < tree.levels[level].len() {
+                next.push(parent_rem.rem(&tree.levels[level][r]));
+            }
+        }
+        rems = next;
+    }
+    // Leaf remainders are constants = p(x_i).
+    let result: Vec<Complex> = rems
+        .iter()
+        .map(|r| r.coeffs.first().copied().unwrap_or(Complex::ZERO))
+        .collect();
+    // Self-check: the remainder tree is only conditionally stable in f64
+    // (near-unit-circle nodes degrade the Newton inverse in divmod).
+    // Validate a few entries against Horner — three O(deg) evaluations —
+    // and fall back wholesale if they disagree.
+    let checks = [0, xs.len() / 2, xs.len() - 1];
+    for &i in &checks {
+        let direct = p.eval(xs[i]);
+        if (result[i] - direct).abs() > 1e-6 * (1.0 + direct.abs()) {
+            return xs.iter().map(|&x| p.eval(x)).collect();
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::rng::Pcg;
+
+    fn rand_poly(rng: &mut Pcg, deg: usize) -> Poly {
+        Poly::new((0..=deg).map(|_| Complex::new(rng.normal(), rng.normal())).collect())
+    }
+
+    #[test]
+    fn mul_matches_naive() {
+        let mut rng = Pcg::seed(1);
+        let a = rand_poly(&mut rng, 40);
+        let b = rand_poly(&mut rng, 37);
+        let c = a.mul(&b);
+        for &xv in &[0.3, -1.2, 2.0] {
+            let x = Complex::new(xv, 0.1);
+            let want = a.eval(x) * b.eval(x);
+            let got = c.eval(x);
+            assert!((got - want).abs() < 1e-6 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn inverse_mod_is_inverse() {
+        // Well-conditioned series: decaying coefficients keep the inverse
+        // bounded (a random-coefficient f has roots inside the unit disc
+        // and an exponentially growing inverse — not a fair fp test).
+        let mut rng = Pcg::seed(2);
+        let mut f = rand_poly(&mut rng, 20);
+        for (k, c) in f.coeffs.iter_mut().enumerate() {
+            *c = c.scale(0.4f64.powi(k as i32));
+        }
+        f.coeffs[0] = Complex::new(1.5, 0.3);
+        let g = f.inverse_mod(33);
+        let prod = f.mul(&g);
+        assert!((prod.coeffs[0] - Complex::ONE).abs() < 1e-9);
+        for c in prod.coeffs.iter().take(33).skip(1) {
+            assert!(c.abs() < 1e-8, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn divmod_reconstructs() {
+        let mut rng = Pcg::seed(3);
+        for &(dn, dm) in &[(25usize, 7usize), (64, 33), (10, 10), (5, 9)] {
+            let a = rand_poly(&mut rng, dn);
+            let b = rand_poly(&mut rng, dm);
+            let (q, r) = a.divmod(&b);
+            assert!(r.coeffs.len() < b.coeffs.len().max(1));
+            let recon = q.mul(&b).add(&r);
+            // Relative to the magnitude of the intermediates: q·b can be
+            // orders of magnitude larger than a for random inputs.
+            let scale = 1.0
+                + q.mul(&b).coeffs.iter().map(|c| c.abs()).fold(0.0, f64::max);
+            let n = a.coeffs.len().max(recon.coeffs.len());
+            for i in 0..n {
+                let x = a.coeffs.get(i).copied().unwrap_or(Complex::ZERO);
+                let y = recon.coeffs.get(i).copied().unwrap_or(Complex::ZERO);
+                assert!((x - y).abs() < 1e-7 * scale, "coef {i}: {x:?} vs {y:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn subproduct_root_vanishes_at_points() {
+        let mut rng = Pcg::seed(4);
+        let xs: Vec<Complex> = (0..13).map(|_| Complex::new(rng.normal(), 0.0)).collect();
+        let tree = SubproductTree::build(&xs);
+        for &x in &xs {
+            assert!(tree.root().eval(x).abs() < 1e-6);
+        }
+        assert_eq!(tree.root().degree(), 13);
+    }
+
+    #[test]
+    fn multipoint_matches_horner_small() {
+        let mut rng = Pcg::seed(5);
+        let p = rand_poly(&mut rng, 50);
+        let xs: Vec<Complex> = (0..30).map(|_| Complex::new(rng.uniform_in(-2.0, 2.0), 0.0)).collect();
+        let got = multipoint_eval(&p, &xs, None);
+        for (g, &x) in got.iter().zip(&xs) {
+            let want = p.eval(x);
+            assert!((*g - want).abs() < 1e-6 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn multipoint_matches_horner_large_forced_tree() {
+        // Degree above the Horner crossover so the remainder tree actually runs.
+        let mut rng = Pcg::seed(6);
+        let p = rand_poly(&mut rng, 300);
+        // A modest set of Chebyshev points keeps the nodal polynomial
+        // bounded, so the remainder tree is well-conditioned (larger or
+        // uniform sets trip the Horner fallback guard, tested below).
+        let xs: Vec<Complex> = (0..48)
+            .map(|i| {
+                Complex::new((std::f64::consts::PI * (2.0 * i as f64 + 1.0) / 96.0).cos(), 0.0)
+            })
+            .collect();
+        let got = multipoint_eval(&p, &xs, None);
+        for (g, &x) in got.iter().zip(&xs) {
+            let want = p.eval(x);
+            assert!(
+                (*g - want).abs() < 1e-4 * (1.0 + want.abs()),
+                "x={:?} got={g:?} want={want:?}",
+                x
+            );
+        }
+    }
+
+    #[test]
+    fn multipoint_fallback_on_ill_conditioned_points() {
+        // Uniform wide-interval points have a binomially exploding nodal
+        // polynomial; the guard must route to Horner and stay accurate.
+        let mut rng = Pcg::seed(8);
+        let p = rand_poly(&mut rng, 200);
+        let xs: Vec<Complex> =
+            (0..300).map(|i| Complex::new(i as f64 * 0.05, 0.0)).collect();
+        let got = multipoint_eval(&p, &xs, None);
+        for (g, &x) in got.iter().zip(&xs) {
+            let want = p.eval(x);
+            assert!((*g - want).abs() < 1e-6 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn zero_polynomial_behaviour() {
+        let z = Poly::default();
+        assert!(z.is_zero());
+        assert_eq!(z.eval(Complex::new(3.0, 0.0)), Complex::ZERO);
+        let p = Poly::from_real(&[1.0, 2.0]);
+        assert!(z.mul(&p).is_zero());
+        assert_eq!(z.add(&p).coeffs.len(), 2);
+    }
+}

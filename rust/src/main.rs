@@ -1,0 +1,191 @@
+//! `ftfi` — the leader binary: launcher + CLI over the whole stack.
+//!
+//! ```text
+//! ftfi integrate  --n 5000 --f exp           FTFI vs brute on a synthetic graph
+//! ftfi train      --steps 200 --lr 0.01      train TopViT-mini via PJRT
+//! ftfi serve      --requests 500 --batch 8   run the batched inference server
+//! ftfi gw         --n 300                    Gromov–Wasserstein demo
+//! ftfi info                                  versions, artifact status
+//! ```
+
+use ftfi::bench_util::time_once;
+use ftfi::cli::Args;
+use ftfi::coordinator::{BatchExecutor, BatcherConfig, InferenceServer};
+use ftfi::ftfi::brute::BruteTreeIntegrator;
+use ftfi::ftfi::functions::FDist;
+use ftfi::ftfi::TreeFieldIntegrator;
+use ftfi::graph::{generators, mst::minimum_spanning_tree};
+use ftfi::linalg::matrix::Matrix;
+use ftfi::ml::rng::Pcg;
+use ftfi::ml::shapes;
+use ftfi::ot::gw::{gromov_wasserstein, GwBackend, GwParams};
+use ftfi::ot::sinkhorn::uniform_marginal;
+use ftfi::runtime::topvit::{TopVit, TopVitExecutor, TRAIN_BATCH};
+use ftfi::runtime::Runtime;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.command.as_deref() {
+        Some("integrate") => cmd_integrate(&args),
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("gw") => cmd_gw(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: ftfi <integrate|train|serve|gw|info> [--options]\n\
+                 see the module docs in rust/src/main.rs"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_f(name: &str, lambda: f64) -> FDist {
+    match name {
+        "identity" => FDist::Identity,
+        "exp" => FDist::Exponential { lambda: -lambda, scale: 1.0 },
+        "invquad" => FDist::inverse_quadratic(lambda),
+        "gauss" => FDist::gaussian(lambda),
+        "poly" => FDist::Polynomial(vec![1.0, -lambda, lambda * lambda / 4.0]),
+        other => panic!("unknown f {other:?} (identity|exp|invquad|gauss|poly)"),
+    }
+}
+
+fn cmd_integrate(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 5000);
+    let extra = args.get_usize("extra-edges", n / 2);
+    let d = args.get_usize("channels", 4);
+    let f = parse_f(args.get_str("f", "exp"), args.get_f64("lambda", 0.5));
+    let mut rng = Pcg::seed(args.get_usize("seed", 0) as u64);
+
+    println!("graph: path({n}) + {extra} random edges; field channels = {d}; f = {f:?}");
+    let g = generators::path_plus_random_edges(n, extra, &mut rng);
+    let (tree, t_mst) = time_once(|| minimum_spanning_tree(&g));
+    let x = Matrix::randn(n, d, &mut rng);
+
+    let (tfi, t_pre) = time_once(|| TreeFieldIntegrator::new(&tree));
+    let (fast, t_fast) = time_once(|| tfi.integrate(&f, &x));
+    println!("FTFI:  preprocess {t_pre:.3}s (+ MST {t_mst:.3}s), integrate {t_fast:.4}s");
+
+    let (brute, t_bpre) = time_once(|| BruteTreeIntegrator::new(&tree, &f));
+    let (slow, t_slow) = time_once(|| brute.integrate(&x));
+    println!("BTFI:  preprocess {t_bpre:.3}s, integrate {t_slow:.4}s");
+    let rel = fast.frobenius_diff(&slow) / (1.0 + slow.frobenius());
+    println!(
+        "relative error {rel:.2e}; end-to-end speedup {:.1}x",
+        (t_bpre + t_slow) / (t_pre + t_fast)
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let steps = args.get_usize("steps", 200);
+    let lr = args.get_f64("lr", 0.01) as f32;
+    let masked = !args.get_flag("unmasked");
+    let params_bin =
+        if masked { "topvit_init_masked.bin" } else { "topvit_init_unmasked.bin" };
+    let rt = Runtime::cpu()?;
+    let mut model = TopVit::load(&rt, "artifacts", params_bin, &[], true)?;
+    let mut rng = Pcg::seed(1);
+    let data = shapes::dataset(64, &mut rng);
+    println!(
+        "training TopViT-mini ({}) for {steps} steps, lr {lr}",
+        if masked { "masked" } else { "unmasked" }
+    );
+    for step in 0..steps {
+        let (images, labels) = shapes::pack_batch(&data, step * TRAIN_BATCH, TRAIN_BATCH);
+        let loss = model.train_step(&images, &labels, lr)?;
+        if step % 20 == 0 || step + 1 == steps {
+            println!("step {step:>4}  loss {loss:.4}");
+        }
+    }
+    println!("final mask parameters: {:?}", model.mask_params());
+    if let Some(out) = args.get("save") {
+        model.params.save_bin(out)?;
+        println!("saved parameters to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let n_requests = args.get_usize("requests", 200);
+    let batch = args.get_usize("batch", 8);
+    let server = InferenceServer::start(
+        vec![Box::new(move || {
+            let rt = Runtime::cpu().expect("PJRT client");
+            let model = TopVit::load(&rt, "artifacts", "topvit_init_masked.bin", &[8], false)
+                .expect("load TopViT");
+            Box::new(TopVitExecutor::new(model, 8)) as Box<dyn BatchExecutor>
+        })],
+        BatcherConfig { batch_size: batch.min(8), batch_timeout: Duration::from_millis(2) },
+        1024,
+    );
+    let mut rng = Pcg::seed(3);
+    let data = shapes::dataset(8, &mut rng);
+    println!("submitting {n_requests} requests (batch {batch})...");
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| server.submit_blocking(data[i % data.len()].pixels.clone()).unwrap())
+        .collect();
+    let mut ok = 0;
+    for h in handles {
+        if h.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let m = server.metrics();
+    println!(
+        "served {ok}/{n_requests}: {:.0} req/s, mean batch {:.2}, p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms",
+        m.throughput_rps,
+        m.mean_batch_size,
+        m.latency_p50 * 1e3,
+        m.latency_p95 * 1e3,
+        m.latency_p99 * 1e3
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_gw(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 300);
+    let mut rng = Pcg::seed(5);
+    let ta = generators::random_tree(n, 0.1, 1.0, &mut rng);
+    let tb = generators::random_tree(n, 0.1, 1.0, &mut rng);
+    let p = uniform_marginal(n);
+    for (name, backend) in [("dense", GwBackend::Dense), ("ftfi", GwBackend::Ftfi)] {
+        let (r, total) =
+            time_once(|| gromov_wasserstein(&ta, &tb, &p, &p, backend, &GwParams::default()));
+        println!(
+            "{name:>5}: GW {:.5} in {total:.2}s total, {:.2}s field integration ({} CG iters)",
+            r.discrepancy, r.integration_seconds, r.iterations
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("ftfi {} — Fast Tree-Field Integrators", env!("CARGO_PKG_VERSION"));
+    match Runtime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e:#}"),
+    }
+    for name in [
+        "sanity_matmul.hlo.txt",
+        "topvit_fwd_b1.hlo.txt",
+        "topvit_fwd_b8.hlo.txt",
+        "topvit_train_b32.hlo.txt",
+        "topvit_init_masked.bin",
+    ] {
+        let path = std::path::Path::new("artifacts").join(name);
+        println!(
+            "artifact {name:<28} {}",
+            if path.exists() { "present" } else { "MISSING (run `make artifacts`)" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Train/test splitting and k-fold cross-validation — the evaluation
+//! protocol of §4.2 / Appendix D.4 (Errica et al. 2020: stratified
+//! 10-fold CV, repeated over seeds).
+
+use crate::ml::rng::Pcg;
+
+/// Index-level k-fold split, stratified by label so every fold keeps the
+/// class balance.
+pub fn stratified_kfold(labels: &[usize], k: usize, rng: &mut Pcg) -> Vec<Vec<usize>> {
+    assert!(k >= 2);
+    let n_classes = labels.iter().copied().max().map_or(0, |m| m + 1);
+    let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for c in 0..n_classes {
+        let mut idx: Vec<usize> =
+            (0..labels.len()).filter(|&i| labels[i] == c).collect();
+        rng.shuffle(&mut idx);
+        for (j, i) in idx.into_iter().enumerate() {
+            folds[j % k].push(i);
+        }
+    }
+    folds
+}
+
+/// Train/test indices for fold `f` out of `folds`.
+pub fn fold_split(folds: &[Vec<usize>], f: usize) -> (Vec<usize>, Vec<usize>) {
+    let test = folds[f].clone();
+    let train: Vec<usize> =
+        folds.iter().enumerate().filter(|&(i, _)| i != f).flat_map(|(_, v)| v.iter().copied()).collect();
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_partition_everything() {
+        let labels: Vec<usize> = (0..100).map(|i| i % 3).collect();
+        let mut rng = Pcg::seed(1);
+        let folds = stratified_kfold(&labels, 5, &mut rng);
+        let total: usize = folds.iter().map(|f| f.len()).sum();
+        assert_eq!(total, 100);
+        let mut all: Vec<usize> = folds.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn folds_are_stratified() {
+        let labels: Vec<usize> = (0..90).map(|i| i % 3).collect();
+        let mut rng = Pcg::seed(2);
+        let folds = stratified_kfold(&labels, 5, &mut rng);
+        for f in &folds {
+            for c in 0..3 {
+                let count = f.iter().filter(|&&i| labels[i] == c).count();
+                assert!(count == 6, "class {c} count {count}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_disjoint() {
+        let labels: Vec<usize> = (0..40).map(|i| i % 2).collect();
+        let mut rng = Pcg::seed(3);
+        let folds = stratified_kfold(&labels, 4, &mut rng);
+        let (train, test) = fold_split(&folds, 2);
+        assert_eq!(train.len() + test.len(), 40);
+        for t in &test {
+            assert!(!train.contains(t));
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Learnable `f`-distance matrices (§4.3, Eq. 6–7): fit the coefficients
+//! of a rational `f` so the tree metric `f(dist_T)` matches the graph
+//! metric `dist_G`, by MSE gradient descent (Adam) on sampled vertex
+//! pairs — the light-weight loss that §4.3 shows already shrinks the
+//! relative Frobenius error within ~100 steps.
+
+use crate::ftfi::functions::{horner, FDist};
+use crate::graph::shortest_path::dijkstra;
+use crate::graph::Graph;
+use crate::ml::rng::Pcg;
+use crate::tree::Tree;
+
+/// A trainable rational function `f(x) = P(x)/Q(x)` with `Q(0)=b₀` fixed
+/// to 1 (removes the scale ambiguity of Eq. 7).
+#[derive(Clone, Debug)]
+pub struct RationalModel {
+    /// Numerator coefficients a₀..a_t (low→high).
+    pub num: Vec<f64>,
+    /// Denominator coefficients b₁..b_s (b₀ ≡ 1).
+    pub den_tail: Vec<f64>,
+}
+
+impl RationalModel {
+    /// Identity-like initialisation for the given degrees:
+    /// `P(x) = x`, `Q(x) = 1` padded to the requested lengths.
+    pub fn new(num_degree: usize, den_degree: usize) -> Self {
+        let mut num = vec![0.0; num_degree + 1];
+        if num_degree >= 1 {
+            num[1] = 1.0;
+        } else {
+            num[0] = 1.0;
+        }
+        RationalModel { num, den_tail: vec![0.0; den_degree] }
+    }
+
+    fn den_full(&self) -> Vec<f64> {
+        let mut q = Vec::with_capacity(self.den_tail.len() + 1);
+        q.push(1.0);
+        q.extend_from_slice(&self.den_tail);
+        q
+    }
+
+    /// Evaluate the model.
+    pub fn eval(&self, x: f64) -> f64 {
+        horner(&self.num, x) / horner(&self.den_full(), x)
+    }
+
+    /// Export as an [`FDist`] usable by the integrators.
+    pub fn to_fdist(&self) -> FDist {
+        FDist::Rational { num: self.num.clone(), den: self.den_full() }
+    }
+
+    /// Parameter count (the paper's "3 extra learnable parameters" refers
+    /// to a degree-1 numerator + degree-1 denominator configuration).
+    pub fn n_params(&self) -> usize {
+        self.num.len() + self.den_tail.len()
+    }
+}
+
+/// One training tuple of Eq. 6: `(d_G(v,w), d_T(v,w))`.
+#[derive(Clone, Copy, Debug)]
+pub struct PairSample {
+    pub d_graph: f64,
+    pub d_tree: f64,
+}
+
+/// Sample `n_pairs` random vertex pairs with graph and tree distances
+/// (each sample costs one Dijkstra, i.e. `O(N log N)` as the paper notes).
+pub fn sample_pairs(g: &Graph, tree: &Tree, n_pairs: usize, rng: &mut Pcg) -> Vec<PairSample> {
+    let n = g.n();
+    assert!(n >= 2);
+    let mut out = Vec::with_capacity(n_pairs);
+    // Batch by source to amortise Dijkstra over several targets.
+    let per_source = 8.min(n_pairs.max(1));
+    while out.len() < n_pairs {
+        let v = rng.below(n);
+        let dg = dijkstra(g, v);
+        let dt = tree.distances_from(v);
+        for _ in 0..per_source {
+            if out.len() >= n_pairs {
+                break;
+            }
+            let w = rng.below(n);
+            if w == v {
+                continue;
+            }
+            out.push(PairSample { d_graph: dg[w], d_tree: dt[w] });
+        }
+    }
+    out
+}
+
+/// Adam optimiser state.
+struct Adam {
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+    lr: f64,
+}
+
+impl Adam {
+    fn new(dim: usize, lr: f64) -> Self {
+        Adam { m: vec![0.0; dim], v: vec![0.0; dim], t: 0, lr }
+    }
+
+    fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        const B1: f64 = 0.9;
+        const B2: f64 = 0.999;
+        const EPS: f64 = 1e-8;
+        self.t += 1;
+        let bc1 = 1.0 - B1.powi(self.t as i32);
+        let bc2 = 1.0 - B2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * grads[i];
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * grads[i] * grads[i];
+            params[i] -= self.lr * (self.m[i] / bc1) / ((self.v[i] / bc2).sqrt() + EPS);
+        }
+    }
+}
+
+/// Training record per iteration.
+#[derive(Debug, Clone)]
+pub struct FitTrace {
+    pub loss: Vec<f64>,
+}
+
+/// Fit the rational model on the pair samples by full-batch Adam.
+/// Returns the per-iteration MSE trace (the Fig. 6/8/9 curves).
+pub fn fit(
+    model: &mut RationalModel,
+    data: &[PairSample],
+    iters: usize,
+    lr: f64,
+) -> FitTrace {
+    let np = model.num.len();
+    let nd = model.den_tail.len();
+    let mut adam = Adam::new(np + nd, lr);
+    let mut loss_trace = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let mut grads = vec![0.0; np + nd];
+        let mut loss = 0.0;
+        for s in data {
+            let x = s.d_tree;
+            let p = horner(&model.num, x);
+            let q = horner(&model.den_full(), x);
+            // Guard against denominator collapse during training.
+            let q = if q.abs() < 1e-6 { 1e-6f64.copysign(q) } else { q };
+            let f = p / q;
+            let err = f - s.d_graph;
+            loss += err * err;
+            // d f/d a_k = x^k / q ; d f/d b_k = -p·x^k/q² (k ≥ 1).
+            let mut xk = 1.0;
+            for k in 0..np {
+                grads[k] += 2.0 * err * xk / q;
+                xk *= x;
+            }
+            let mut xk = x;
+            for k in 0..nd {
+                grads[np + k] += 2.0 * err * (-p * xk / (q * q));
+                xk *= x;
+            }
+        }
+        let scale = 1.0 / data.len().max(1) as f64;
+        loss *= scale;
+        grads.iter_mut().for_each(|g| *g *= scale);
+        // Clip the gradient norm: rational gradients explode whenever the
+        // denominator wanders near a root of Q during training.
+        let gnorm = grads.iter().map(|g| g * g).sum::<f64>().sqrt();
+        if gnorm > 10.0 {
+            let c = 10.0 / gnorm;
+            grads.iter_mut().for_each(|g| *g *= c);
+        }
+        let mut params: Vec<f64> =
+            model.num.iter().chain(model.den_tail.iter()).copied().collect();
+        adam.step(&mut params, &grads);
+        model.num.copy_from_slice(&params[..np]);
+        model.den_tail.copy_from_slice(&params[np..]);
+        loss_trace.push(loss);
+    }
+    FitTrace { loss: loss_trace }
+}
+
+/// The §4.3 evaluation metric: relative Frobenius error
+/// `‖M_f^T − M_id^G‖_F / ‖M_id^G‖_F` (O(N²); evaluation only — training
+/// never touches it).
+pub fn relative_frobenius_error(g: &Graph, tree: &Tree, f: &FDist) -> f64 {
+    let n = g.n();
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for v in 0..n {
+        let dg = dijkstra(g, v);
+        let dt = tree.distances_from(v);
+        for w in 0..n {
+            let fd = f.eval(dt[w]);
+            num += (fd - dg[w]) * (fd - dg[w]);
+            den += dg[w] * dg[w];
+        }
+    }
+    (num / den).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::graph::mst::minimum_spanning_tree;
+
+    #[test]
+    fn model_eval_and_export_agree() {
+        let m = RationalModel { num: vec![0.5, 2.0], den_tail: vec![0.25] };
+        let f = m.to_fdist();
+        for &x in &[0.0, 0.7, 3.0] {
+            assert!((m.eval(x) - f.eval(x)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn recovers_identity_when_tree_equals_graph() {
+        // When the graph is its own MST, f(x)=x is optimal; training from
+        // a perturbed start should drive the loss near zero.
+        let mut rng = Pcg::seed(1);
+        let tree = generators::random_tree(60, 0.2, 1.0, &mut rng);
+        let g = tree.to_graph();
+        let mst = minimum_spanning_tree(&g);
+        let data = sample_pairs(&g, &mst, 120, &mut rng);
+        let mut model = RationalModel::new(2, 2);
+        model.num[1] = 0.3; // perturbed start
+        let trace = fit(&mut model, &data, 400, 0.05);
+        let final_loss = *trace.loss.last().unwrap();
+        assert!(final_loss < 0.05, "loss={final_loss}");
+    }
+
+    #[test]
+    fn training_reduces_frobenius_error() {
+        // The paper's core §4.3 claim: MSE training on ~100 pairs reduces
+        // the (expensive, never-trained-on) relative Frobenius error.
+        let mut rng = Pcg::seed(2);
+        let g = generators::path_plus_random_edges(120, 90, &mut rng);
+        let tree = minimum_spanning_tree(&g);
+        let data = sample_pairs(&g, &tree, 100, &mut rng);
+        let mut model = RationalModel::new(2, 2);
+        let before = relative_frobenius_error(&g, &tree, &model.to_fdist());
+        fit(&mut model, &data, 300, 0.03);
+        let after = relative_frobenius_error(&g, &tree, &model.to_fdist());
+        assert!(after < before, "before={before} after={after}");
+    }
+
+    #[test]
+    fn loss_trace_monotone_ish() {
+        let mut rng = Pcg::seed(3);
+        let g = generators::path_plus_random_edges(80, 50, &mut rng);
+        let tree = minimum_spanning_tree(&g);
+        let data = sample_pairs(&g, &tree, 80, &mut rng);
+        let mut model = RationalModel::new(1, 1);
+        let trace = fit(&mut model, &data, 200, 0.02);
+        // End loss well below start loss (not strictly monotone — Adam).
+        assert!(trace.loss.last().unwrap() < &(trace.loss[0] * 0.9));
+    }
+
+    #[test]
+    fn pair_samples_are_consistent_metrics() {
+        let mut rng = Pcg::seed(4);
+        let g = generators::path_plus_random_edges(50, 25, &mut rng);
+        let tree = minimum_spanning_tree(&g);
+        let data = sample_pairs(&g, &tree, 60, &mut rng);
+        for s in &data {
+            // Tree distance dominates graph distance (tree is a subgraph).
+            assert!(s.d_tree + 1e-9 >= s.d_graph);
+            assert!(s.d_graph > 0.0);
+        }
+    }
+}

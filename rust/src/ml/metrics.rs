@@ -1,0 +1,67 @@
+//! Evaluation metrics for the application experiments.
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(truth).filter(|(p, t)| p == t).count() as f64 / pred.len() as f64
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Mean cosine similarity between row pairs of two `n×3` normal fields,
+/// ignoring rows where either side is (near) zero — the Fig. 4 metric.
+pub fn mean_cosine_rows(pred: &crate::linalg::matrix::Matrix, truth: &crate::linalg::matrix::Matrix) -> f64 {
+    assert_eq!(pred.rows(), truth.rows());
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for i in 0..pred.rows() {
+        let c = crate::linalg::matrix::cosine_similarity(pred.row(i), truth.row(i));
+        if c != 0.0 {
+            total += c;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 4]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn mean_std_known() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-12);
+        assert!((s - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_rows() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 0.0, 1.0, 0.0]);
+        // Row 0: cos=1 (counted); row 1: cos=0 (skipped as degenerate).
+        assert!((mean_cosine_rows(&a, &b) - 1.0).abs() < 1e-12);
+    }
+}

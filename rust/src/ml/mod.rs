@@ -1,0 +1,10 @@
+//! Machine-learning substrates: deterministic RNG, random forests,
+//! cross-validation, metrics, and the learnable rational-f trainer (§4.3).
+
+pub mod dataset;
+pub mod fit_rational;
+pub mod metrics;
+pub mod random_forest;
+pub mod shapes;
+pub mod wl_kernel;
+pub mod rng;

@@ -1,0 +1,274 @@
+//! Random forest classifier over dense feature vectors, built from
+//! scratch (no external ML crates offline): CART decision trees with Gini
+//! impurity, feature sub-sampling (√d per split) and bootstrap bagging —
+//! the classifier of the §4.2 graph-classification pipeline (de Lara &
+//! Pineau 2018 use exactly this setup over spectral features).
+
+use crate::ml::rng::Pcg;
+
+/// One node of a decision tree (arena layout).
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf { class: usize },
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+}
+
+/// A single CART tree.
+#[derive(Debug)]
+pub struct DecisionTree {
+    nodes: Vec<Node>,
+    n_classes: usize,
+}
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Features tried per split; 0 = √d.
+    pub max_features: usize,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams { n_trees: 50, max_depth: 12, min_samples_split: 4, max_features: 0 }
+    }
+}
+
+fn majority(labels: &[usize], idx: &[usize], n_classes: usize) -> usize {
+    let mut counts = vec![0usize; n_classes];
+    for &i in idx {
+        counts[labels[i]] += 1;
+    }
+    counts
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, c)| *c)
+        .map(|(k, _)| k)
+        .unwrap_or(0)
+}
+
+fn gini(counts: &[usize], total: usize) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - counts.iter().map(|&c| (c as f64 / t).powi(2)).sum::<f64>()
+}
+
+impl DecisionTree {
+    /// Fit on the rows of `x` (`n×d`, row-major slice accessor) selected
+    /// by `idx`.
+    fn fit(
+        x: &[Vec<f64>],
+        labels: &[usize],
+        idx: Vec<usize>,
+        n_classes: usize,
+        params: &ForestParams,
+        rng: &mut Pcg,
+    ) -> Self {
+        let mut tree = DecisionTree { nodes: Vec::new(), n_classes };
+        tree.grow(x, labels, idx, params, 0, rng);
+        tree
+    }
+
+    fn grow(
+        &mut self,
+        x: &[Vec<f64>],
+        labels: &[usize],
+        idx: Vec<usize>,
+        params: &ForestParams,
+        depth: usize,
+        rng: &mut Pcg,
+    ) -> usize {
+        let node_id = self.nodes.len();
+        let first = labels[idx[0]];
+        let pure = idx.iter().all(|&i| labels[i] == first);
+        if pure || depth >= params.max_depth || idx.len() < params.min_samples_split {
+            self.nodes.push(Node::Leaf { class: majority(labels, &idx, self.n_classes) });
+            return node_id;
+        }
+        let d = x[0].len();
+        let n_try = if params.max_features == 0 {
+            ((d as f64).sqrt().ceil() as usize).clamp(1, d)
+        } else {
+            params.max_features.min(d)
+        };
+        // Find the best (feature, threshold) among random features.
+        let feats = rng.sample_distinct(d, n_try);
+        let mut best: Option<(usize, f64, f64)> = None; // (feature, thr, score)
+        let mut sorted = idx.clone();
+        for &f in &feats {
+            sorted.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+            // Sweep thresholds between consecutive distinct values.
+            let mut left_counts = vec![0usize; self.n_classes];
+            let mut right_counts = vec![0usize; self.n_classes];
+            for &i in &sorted {
+                right_counts[labels[i]] += 1;
+            }
+            for k in 0..sorted.len() - 1 {
+                let i = sorted[k];
+                left_counts[labels[i]] += 1;
+                right_counts[labels[i]] -= 1;
+                let (a, b) = (x[i][f], x[sorted[k + 1]][f]);
+                if b - a < 1e-12 {
+                    continue;
+                }
+                let nl = k + 1;
+                let nr = sorted.len() - nl;
+                let score = (nl as f64 * gini(&left_counts, nl)
+                    + nr as f64 * gini(&right_counts, nr))
+                    / sorted.len() as f64;
+                if best.map_or(true, |(_, _, s)| score < s) {
+                    best = Some((f, 0.5 * (a + b), score));
+                }
+            }
+        }
+        match best {
+            None => {
+                self.nodes.push(Node::Leaf { class: majority(labels, &idx, self.n_classes) });
+                node_id
+            }
+            Some((f, thr, _)) => {
+                let (left_idx, right_idx): (Vec<usize>, Vec<usize>) =
+                    idx.into_iter().partition(|&i| x[i][f] <= thr);
+                self.nodes.push(Node::Leaf { class: 0 }); // placeholder
+                let left = self.grow(x, labels, left_idx, params, depth + 1, rng);
+                let right = self.grow(x, labels, right_idx, params, depth + 1, rng);
+                self.nodes[node_id] = Node::Split { feature: f, threshold: thr, left, right };
+                node_id
+            }
+        }
+    }
+
+    /// Predict the class of one feature vector.
+    pub fn predict(&self, x: &[f64]) -> usize {
+        let mut cur = 0;
+        loop {
+            match &self.nodes[cur] {
+                Node::Leaf { class } => return *class,
+                Node::Split { feature, threshold, left, right } => {
+                    cur = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+/// Bagged random forest.
+pub struct RandomForest {
+    trees: Vec<DecisionTree>,
+    n_classes: usize,
+}
+
+impl RandomForest {
+    /// Fit on feature rows `x` with integer labels.
+    pub fn fit(x: &[Vec<f64>], labels: &[usize], params: &ForestParams, rng: &mut Pcg) -> Self {
+        assert_eq!(x.len(), labels.len());
+        assert!(!x.is_empty(), "empty training set");
+        let n_classes = labels.iter().copied().max().unwrap() + 1;
+        let n = x.len();
+        let trees = (0..params.n_trees)
+            .map(|_| {
+                // Bootstrap sample.
+                let idx: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
+                DecisionTree::fit(x, labels, idx, n_classes, params, rng)
+            })
+            .collect();
+        RandomForest { trees, n_classes }
+    }
+
+    /// Majority vote over the ensemble.
+    pub fn predict(&self, x: &[f64]) -> usize {
+        let mut votes = vec![0usize; self.n_classes];
+        for t in &self.trees {
+            votes[t.predict(x)] += 1;
+        }
+        votes.iter().enumerate().max_by_key(|&(_, v)| *v).map(|(k, _)| k).unwrap_or(0)
+    }
+
+    /// Predict a batch.
+    pub fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<usize> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+
+    /// Two well-separated Gaussian blobs.
+    fn blobs(n: usize, rng: &mut Pcg) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let label = i % 2;
+            let c = if label == 0 { -2.0 } else { 2.0 };
+            x.push(vec![c + rng.normal() * 0.5, c + rng.normal() * 0.5]);
+            y.push(label);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn separable_blobs_high_accuracy() {
+        let mut rng = Pcg::seed(1);
+        let (xtr, ytr) = blobs(200, &mut rng);
+        let (xte, yte) = blobs(100, &mut rng);
+        let rf = RandomForest::fit(&xtr, &ytr, &ForestParams::default(), &mut rng);
+        let acc = accuracy(&rf.predict_batch(&xte), &yte);
+        assert!(acc > 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn xor_needs_depth() {
+        // XOR: linearly inseparable, trees must use both features.
+        let mut rng = Pcg::seed(2);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..400 {
+            let (a, b) = (rng.bool(0.5), rng.bool(0.5));
+            x.push(vec![
+                if a { 1.0 } else { 0.0 } + rng.normal() * 0.1,
+                if b { 1.0 } else { 0.0 } + rng.normal() * 0.1,
+            ]);
+            y.push((a ^ b) as usize);
+        }
+        let rf = RandomForest::fit(
+            &x,
+            &y,
+            &ForestParams { n_trees: 30, max_depth: 6, min_samples_split: 2, max_features: 2 },
+            &mut rng,
+        );
+        let acc = accuracy(&rf.predict_batch(&x), &y);
+        assert!(acc > 0.9, "acc={acc}");
+    }
+
+    #[test]
+    fn multiclass() {
+        let mut rng = Pcg::seed(3);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..300 {
+            let label = i % 3;
+            x.push(vec![label as f64 * 3.0 + rng.normal() * 0.3]);
+            y.push(label);
+        }
+        let rf = RandomForest::fit(&x, &y, &ForestParams::default(), &mut rng);
+        let acc = accuracy(&rf.predict_batch(&x), &y);
+        assert!(acc > 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn constant_features_degrade_gracefully() {
+        let mut rng = Pcg::seed(4);
+        let x = vec![vec![1.0, 1.0]; 20];
+        let y: Vec<usize> = (0..20).map(|i| i % 2).collect();
+        let rf = RandomForest::fit(&x, &y, &ForestParams::default(), &mut rng);
+        // Cannot split; must fall back to majority-vote leaves.
+        let p = rf.predict(&[1.0, 1.0]);
+        assert!(p < 2);
+    }
+}

@@ -1,0 +1,157 @@
+//! Synthetic-shapes image dataset — the ImageNet/Places365 substitute for
+//! the Topological-ViT experiments (Table 1 / Fig. 7).
+//!
+//! Eight procedurally drawn 32×32 grayscale classes with random position/
+//! size jitter and pixel noise. The classes are chosen so that *spatial
+//! topology* carries signal (rings vs discs, crosses vs bars, checkers vs
+//! stripes): exactly the kind of structure a topological RPE mask over
+//! the patch grid can exploit, which is what makes the masked-vs-unmasked
+//! comparison meaningful at this scale.
+
+use crate::ml::rng::Pcg;
+
+/// Image side (must match python/compile/model.py IMG).
+pub const IMG: usize = 32;
+/// Number of classes (must match model N_CLASSES).
+pub const N_CLASSES: usize = 8;
+
+/// One labelled example.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub pixels: Vec<f32>, // IMG*IMG, roughly zero-mean
+    pub label: usize,
+}
+
+/// Draw one example of the given class.
+pub fn draw(label: usize, rng: &mut Pcg) -> Example {
+    assert!(label < N_CLASSES);
+    let mut img = vec![0.0f32; IMG * IMG];
+    let cx = rng.uniform_in(12.0, 20.0);
+    let cy = rng.uniform_in(12.0, 20.0);
+    let r = rng.uniform_in(6.0, 10.0);
+    let set = |img: &mut Vec<f32>, x: usize, y: usize, v: f32| {
+        img[y * IMG + x] = v;
+    };
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let dx = x as f64 - cx;
+            let dy = y as f64 - cy;
+            let dist = (dx * dx + dy * dy).sqrt();
+            let inside = match label {
+                // 0: filled disc
+                0 => dist < r,
+                // 1: ring
+                1 => dist < r && dist > r - 2.5,
+                // 2: filled square
+                2 => dx.abs() < r * 0.8 && dy.abs() < r * 0.8,
+                // 3: hollow square
+                3 => {
+                    let (ax, ay) = (dx.abs(), dy.abs());
+                    ax < r * 0.8 && ay < r * 0.8 && (ax > r * 0.8 - 2.5 || ay > r * 0.8 - 2.5)
+                }
+                // 4: plus / cross
+                4 => (dx.abs() < 1.8 || dy.abs() < 1.8) && dist < r,
+                // 5: diagonal X
+                5 => ((dx - dy).abs() < 2.2 || (dx + dy).abs() < 2.2) && dist < r,
+                // 6: horizontal stripes
+                6 => (y / 4) % 2 == 0 && dist < r,
+                // 7: checkerboard patch
+                _ => ((x / 4) + (y / 4)) % 2 == 0 && dist < r,
+            };
+            if inside {
+                set(&mut img, x, y, 1.0);
+            }
+        }
+    }
+    // Pixel noise + global normalisation.
+    for v in img.iter_mut() {
+        *v += 0.15 * rng.normal() as f32;
+        *v -= 0.15; // rough mean-centering
+    }
+    Example { pixels: img, label }
+}
+
+/// A balanced shuffled dataset of `per_class·N_CLASSES` examples.
+pub fn dataset(per_class: usize, rng: &mut Pcg) -> Vec<Example> {
+    let mut out = Vec::with_capacity(per_class * N_CLASSES);
+    for label in 0..N_CLASSES {
+        for _ in 0..per_class {
+            out.push(draw(label, rng));
+        }
+    }
+    rng.shuffle(&mut out);
+    out
+}
+
+/// Pack `batch` examples starting at `offset` (wrapping) into flat
+/// buffers for the runtime.
+pub fn pack_batch(data: &[Example], offset: usize, batch: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut images = Vec::with_capacity(batch * IMG * IMG);
+    let mut labels = Vec::with_capacity(batch);
+    for k in 0..batch {
+        let ex = &data[(offset + k) % data.len()];
+        images.extend_from_slice(&ex.pixels);
+        labels.push(ex.label as i32);
+    }
+    (images, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_have_correct_size_and_signal() {
+        let mut rng = Pcg::seed(1);
+        for label in 0..N_CLASSES {
+            let ex = draw(label, &mut rng);
+            assert_eq!(ex.pixels.len(), IMG * IMG);
+            // Some foreground pixels must be clearly lit.
+            let lit = ex.pixels.iter().filter(|&&v| v > 0.5).count();
+            assert!(lit > 10, "class {label}: only {lit} lit pixels");
+        }
+    }
+
+    #[test]
+    fn classes_differ_in_expectation() {
+        // Mean images of disc vs ring must differ substantially.
+        let mut rng = Pcg::seed(2);
+        let mean_img = |label: usize, rng: &mut Pcg| -> Vec<f32> {
+            let mut acc = vec![0.0f32; IMG * IMG];
+            for _ in 0..32 {
+                for (a, p) in acc.iter_mut().zip(draw(label, rng).pixels) {
+                    *a += p / 32.0;
+                }
+            }
+            acc
+        };
+        let disc = mean_img(0, &mut rng);
+        let ring = mean_img(1, &mut rng);
+        let diff: f32 =
+            disc.iter().zip(&ring).map(|(a, b)| (a - b).abs()).sum::<f32>() / (IMG * IMG) as f32;
+        assert!(diff > 0.05, "diff={diff}");
+    }
+
+    #[test]
+    fn dataset_balanced_and_shuffled() {
+        let mut rng = Pcg::seed(3);
+        let ds = dataset(10, &mut rng);
+        assert_eq!(ds.len(), 80);
+        for c in 0..N_CLASSES {
+            assert_eq!(ds.iter().filter(|e| e.label == c).count(), 10);
+        }
+        // Shuffled: the first 8 are unlikely to be 8 distinct ascending labels.
+        let ascending = ds.windows(2).take(16).all(|w| w[0].label <= w[1].label);
+        assert!(!ascending);
+    }
+
+    #[test]
+    fn pack_batch_wraps() {
+        let mut rng = Pcg::seed(4);
+        let ds = dataset(1, &mut rng); // 8 examples
+        let (img, lab) = pack_batch(&ds, 6, 4);
+        assert_eq!(img.len(), 4 * IMG * IMG);
+        assert_eq!(lab.len(), 4);
+        assert_eq!(lab[2], ds[0].label as i32); // wrapped
+    }
+}

@@ -1,0 +1,7 @@
+//! Optimal transport substrates: entropic OT via Sinkhorn with FTFI
+//! kernel multiplications (§1 application 2) and Gromov–Wasserstein
+//! discrepancy via conditional gradient with FTFI replacing the dense
+//! cost-matrix products (Appendix D.2, Fig. 10).
+
+pub mod gw;
+pub mod sinkhorn;

@@ -1,0 +1,120 @@
+//! Parameter bundle I/O: the flat little-endian f32 blob + manifest that
+//! `python/compile/aot.py` dumps alongside the HLO artifacts.
+
+use super::TensorF32;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A named, ordered set of parameter tensors matching the AOT signature.
+#[derive(Debug, Clone)]
+pub struct ParamBundle {
+    pub names: Vec<String>,
+    pub tensors: Vec<TensorF32>,
+}
+
+impl ParamBundle {
+    /// Load from `manifest.txt` (lines: `name dim0 dim1 …`) and the flat
+    /// `.bin` blob.
+    pub fn load(manifest: impl AsRef<Path>, bin: impl AsRef<Path>) -> Result<ParamBundle> {
+        let text = std::fs::read_to_string(manifest.as_ref())
+            .with_context(|| format!("reading {:?}", manifest.as_ref()))?;
+        let mut names = Vec::new();
+        let mut shapes: Vec<Vec<usize>> = Vec::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let mut it = line.split_whitespace();
+            let name = it.next().context("empty manifest line")?;
+            let dims: Vec<usize> =
+                it.map(|t| t.parse().context("bad dim")).collect::<Result<_>>()?;
+            names.push(name.to_string());
+            shapes.push(dims);
+        }
+        let bytes =
+            std::fs::read(bin.as_ref()).with_context(|| format!("reading {:?}", bin.as_ref()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("param blob size {} not a multiple of 4", bytes.len());
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        if total != floats.len() {
+            bail!("manifest expects {total} floats, blob has {}", floats.len());
+        }
+        let mut tensors = Vec::with_capacity(shapes.len());
+        let mut off = 0;
+        for shape in shapes {
+            let n: usize = shape.iter().product();
+            tensors.push(TensorF32::new(shape, floats[off..off + n].to_vec()));
+            off += n;
+        }
+        Ok(ParamBundle { names, tensors })
+    }
+
+    /// Save back to a flat blob (checkpointing trained parameters).
+    pub fn save_bin(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut bytes = Vec::new();
+        for t in &self.tensors {
+            for v in &t.data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(path.as_ref(), bytes)
+            .with_context(|| format!("writing {:?}", path.as_ref()))
+    }
+
+    /// Index of a named parameter.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_tempfiles() {
+        let dir = std::env::temp_dir().join(format!("ftfi-params-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = dir.join("m.txt");
+        let bin = dir.join("p.bin");
+        std::fs::write(&manifest, "a 2 2\nscalar\nb 3\n").unwrap();
+        let vals: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&bin, bytes).unwrap();
+
+        let p = ParamBundle::load(&manifest, &bin).unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.tensors[0].shape, vec![2, 2]);
+        assert_eq!(p.tensors[1].shape, Vec::<usize>::new());
+        assert_eq!(p.tensors[1].data, vec![4.0]);
+        assert_eq!(p.index_of("b"), Some(2));
+
+        let out = dir.join("roundtrip.bin");
+        p.save_bin(&out).unwrap();
+        let p2 = ParamBundle::load(&manifest, &out).unwrap();
+        assert_eq!(p2.tensors[2].data, p.tensors[2].data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("ftfi-params-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = dir.join("m.txt");
+        let bin = dir.join("p.bin");
+        std::fs::write(&manifest, "a 4\n").unwrap();
+        std::fs::write(&bin, [0u8; 8]).unwrap(); // 2 floats, need 4
+        assert!(ParamBundle::load(&manifest, &bin).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,179 @@
+//! TopViT-mini driver: the rust-side owner of the AOT-compiled model.
+//!
+//! Wraps three artifacts (fwd b=1, fwd b=8, train b=32) plus the
+//! parameter bundle, exposing classify/train APIs to the coordinator and
+//! the examples. All tensor plumbing is explicit: parameters are a flat
+//! ordered list fed back into every call (the AOT boundary has no state).
+
+use super::params::ParamBundle;
+use super::{Executable, Input, Runtime, TensorF32, TensorI32};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Compile-time model constants — must match python/compile/model.py.
+pub const IMG: usize = 32;
+pub const N_CLASSES: usize = 8;
+pub const TRAIN_BATCH: usize = 32;
+
+/// A loaded TopViT-mini with its parameters.
+pub struct TopVit {
+    fwd: Vec<(usize, Executable)>,
+    train: Option<Executable>,
+    pub params: ParamBundle,
+    /// When set, mask parameters are re-zeroed after every train step —
+    /// the honest *unmasked performer baseline* of Table 1 (otherwise a
+    /// zero-initialised mask would still be learnable).
+    pub freeze_mask: bool,
+}
+
+impl TopVit {
+    /// Load from the artifacts directory. `fwd_batches` lists the batch
+    /// sizes to load forward executables for; `with_train` additionally
+    /// loads the train-step executable.
+    pub fn load(
+        rt: &Runtime,
+        artifacts: impl AsRef<Path>,
+        params_bin: &str,
+        fwd_batches: &[usize],
+        with_train: bool,
+    ) -> Result<TopVit> {
+        let dir = artifacts.as_ref();
+        let params = ParamBundle::load(
+            dir.join("topvit_manifest.txt"),
+            dir.join(params_bin),
+        )?;
+        let mut fwd = Vec::new();
+        for &b in fwd_batches {
+            let exe = rt
+                .load_hlo_text(dir.join(format!("topvit_fwd_b{b}.hlo.txt")))
+                .with_context(|| format!("loading fwd batch {b}"))?;
+            fwd.push((b, exe));
+        }
+        let train = if with_train {
+            Some(rt.load_hlo_text(dir.join(format!("topvit_train_b{TRAIN_BATCH}.hlo.txt")))?)
+        } else {
+            None
+        };
+        Ok(TopVit { fwd, train, params, freeze_mask: false })
+    }
+
+    /// Classify a batch of images (`images.len() == b·IMG·IMG` for one of
+    /// the loaded batch sizes). Returns logits `(b, N_CLASSES)`.
+    pub fn forward(&self, batch: usize, images: &[f32]) -> Result<TensorF32> {
+        let exe = self
+            .fwd
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .map(|(_, e)| e)
+            .with_context(|| format!("no fwd executable for batch {batch}"))?;
+        if images.len() != batch * IMG * IMG {
+            bail!("expected {} pixels, got {}", batch * IMG * IMG, images.len());
+        }
+        let mut inputs: Vec<TensorF32> = self.params.tensors.clone();
+        inputs.push(TensorF32::new(vec![batch, IMG, IMG], images.to_vec()));
+        let mut out = exe.run(&inputs)?;
+        if out.len() != 1 {
+            bail!("fwd returned {} outputs, expected 1", out.len());
+        }
+        Ok(out.remove(0))
+    }
+
+    /// One SGD step on a TRAIN_BATCH batch; updates `self.params` in
+    /// place and returns the loss.
+    pub fn train_step(&mut self, images: &[f32], labels: &[i32], lr: f32) -> Result<f32> {
+        let exe = self.train.as_ref().context("train executable not loaded")?;
+        if images.len() != TRAIN_BATCH * IMG * IMG || labels.len() != TRAIN_BATCH {
+            bail!("train batch shape mismatch");
+        }
+        let mut inputs: Vec<Input> =
+            self.params.tensors.iter().cloned().map(Input::from).collect();
+        inputs.push(TensorF32::new(vec![TRAIN_BATCH, IMG, IMG], images.to_vec()).into());
+        inputs.push(TensorI32::new(vec![TRAIN_BATCH], labels.to_vec()).into());
+        inputs.push(TensorF32::scalar(lr).into());
+        let out = exe.run_mixed(&inputs)?;
+        let n = self.params.tensors.len();
+        if out.len() != n + 1 {
+            bail!("train step returned {} outputs, expected {}", out.len(), n + 1);
+        }
+        let loss = out[n].data[0];
+        for (dst, src) in self.params.tensors.iter_mut().zip(out.into_iter().take(n)) {
+            *dst = src;
+        }
+        if self.freeze_mask {
+            for (name, t) in self.params.names.iter().zip(self.params.tensors.iter_mut()) {
+                if name.ends_with("mask_a") {
+                    t.data.iter_mut().for_each(|v| *v = 0.0);
+                }
+            }
+        }
+        Ok(loss)
+    }
+
+    /// Argmax classification helper.
+    pub fn classify(&self, batch: usize, images: &[f32]) -> Result<Vec<usize>> {
+        let logits = self.forward(batch, images)?;
+        Ok(logits
+            .data
+            .chunks(N_CLASSES)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+
+    /// The per-layer mask parameters (the "3 extra learnable parameters").
+    pub fn mask_params(&self) -> Vec<(String, Vec<f32>)> {
+        self.params
+            .names
+            .iter()
+            .zip(&self.params.tensors)
+            .filter(|(n, _)| n.ends_with("mask_a"))
+            .map(|(n, t)| (n.clone(), t.data.clone()))
+            .collect()
+    }
+}
+
+/// A [`crate::coordinator::BatchExecutor`] over a fixed-batch forward
+/// executable — plugs TopViT into the serving stack.
+pub struct TopVitExecutor {
+    model: TopVit,
+    batch: usize,
+}
+
+impl TopVitExecutor {
+    pub fn new(model: TopVit, batch: usize) -> Self {
+        TopVitExecutor { model, batch }
+    }
+}
+
+impl crate::coordinator::BatchExecutor for TopVitExecutor {
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn execute(&self, inputs: &[Vec<f32>]) -> std::result::Result<Vec<Vec<f32>>, String> {
+        // Pad to the compiled batch, run, slice per request.
+        let mut flat = Vec::with_capacity(self.batch * IMG * IMG);
+        for x in inputs {
+            if x.len() != IMG * IMG {
+                return Err(format!("bad request size {}", x.len()));
+            }
+            flat.extend_from_slice(x);
+        }
+        flat.resize(self.batch * IMG * IMG, 0.0);
+        let logits = self
+            .model
+            .forward(self.batch, &flat)
+            .map_err(|e| format!("{e:#}"))?;
+        Ok(logits
+            .data
+            .chunks(N_CLASSES)
+            .take(inputs.len())
+            .map(|c| c.to_vec())
+            .collect())
+    }
+}

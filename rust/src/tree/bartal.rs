@@ -1,0 +1,157 @@
+//! Bartal probabilistic tree embeddings (Bartal 1996) — the second
+//! low-distortion tree baseline of Fig. 4.
+//!
+//! Recursive randomized low-diameter decomposition: a cluster of diameter
+//! `Δ` is carved into pieces of diameter ≤ `Δ/2` by growing balls of
+//! exponentially-distributed radius around random centres; the recursion
+//! tree (edge weights `Δ`) is the embedding. Like FRT it needs the full
+//! distance matrix, which is why the paper's Fig. 4 shows both orders of
+//! magnitude slower than FTFI's MST preprocessing.
+
+use super::frt::TreeEmbedding;
+use super::Tree;
+use crate::graph::shortest_path::all_pairs;
+use crate::graph::Graph;
+use crate::ml::rng::Pcg;
+
+/// Build a Bartal tree for the shortest-path metric of `g`.
+pub fn bartal_tree(g: &Graph, rng: &mut Pcg) -> TreeEmbedding {
+    let n = g.n();
+    assert!(n >= 1);
+    if n == 1 {
+        return TreeEmbedding { tree: Tree::from_edges(1, &[]), leaf_of: vec![0] };
+    }
+    let d = all_pairs(g);
+    let dist = |i: usize, j: usize| d[i * n + j];
+
+    let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+    let mut leaf_of = vec![u32::MAX; n];
+    let mut n_nodes: u32 = 0;
+
+    // Iterative recursion over (cluster, parent_node, parent_diameter).
+    // HST convention: the edge from a node to its child carries HALF the
+    // node's own diameter, so two vertices split at a node of diameter Δ
+    // end up ≥ Δ apart in the tree — the domination property.
+    struct Item {
+        verts: Vec<usize>,
+        parent: Option<(u32, f64)>,
+    }
+    let mut stack = vec![Item { verts: (0..n).collect(), parent: None }];
+    while let Some(Item { verts, parent }) = stack.pop() {
+        let node = n_nodes;
+        n_nodes += 1;
+        let diam = cluster_diameter(&verts, &dist);
+        if let Some((p, pdiam)) = parent {
+            edges.push((p, node, (0.5 * pdiam).max(1e-9)));
+        }
+        if verts.len() == 1 {
+            leaf_of[verts[0]] = node;
+            continue;
+        }
+        // Ball carving: random centres, exponential radii ~ Δ/8 capped at
+        // Δ/4 so child diameter ≤ Δ/2.
+        let mut remaining = verts;
+        let mut children: Vec<Vec<usize>> = Vec::new();
+        while !remaining.is_empty() {
+            let c = remaining[rng.below(remaining.len())];
+            let radius = (diam / 8.0 * (1.0 + rng.exponential(1.0))).min(diam / 4.0);
+            let (ball, rest): (Vec<usize>, Vec<usize>) =
+                remaining.into_iter().partition(|&v| dist(c, v) <= radius);
+            // Ball always contains the centre, so progress is guaranteed.
+            children.push(ball);
+            remaining = rest;
+        }
+        if children.len() == 1 {
+            // Degenerate carve (everything in one ball): split the
+            // farthest pair apart to guarantee termination.
+            let verts = children.pop().unwrap();
+            let (mut a, mut b, mut best) = (verts[0], verts[0], -1.0);
+            for &u in &verts {
+                for &v in &verts {
+                    if dist(u, v) > best {
+                        best = dist(u, v);
+                        a = u;
+                        b = v;
+                    }
+                }
+            }
+            let (ball, rest): (Vec<usize>, Vec<usize>) =
+                verts.into_iter().partition(|&v| dist(a, v) <= dist(b, v));
+            children.push(ball);
+            children.push(rest);
+        }
+        for ch in children {
+            if !ch.is_empty() {
+                stack.push(Item { verts: ch, parent: Some((node, diam)) });
+            }
+        }
+    }
+    debug_assert!(leaf_of.iter().all(|&l| l != u32::MAX));
+    TreeEmbedding { tree: Tree::from_edges(n_nodes as usize, &edges), leaf_of }
+}
+
+fn cluster_diameter(verts: &[usize], dist: &impl Fn(usize, usize) -> f64) -> f64 {
+    let mut diam = 0.0f64;
+    for (i, &u) in verts.iter().enumerate() {
+        for &v in &verts[i + 1..] {
+            diam = diam.max(dist(u, v));
+        }
+    }
+    diam
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn bartal_covers_all_vertices() {
+        let mut rng = Pcg::seed(1);
+        let g = generators::path_plus_random_edges(50, 25, &mut rng);
+        let emb = bartal_tree(&g, &mut rng);
+        assert_eq!(emb.leaf_of.len(), 50);
+        let set: std::collections::HashSet<_> = emb.leaf_of.iter().collect();
+        assert_eq!(set.len(), 50);
+    }
+
+    #[test]
+    fn bartal_dominates() {
+        // With half-parent-diameter edges the HST dominates the metric.
+        let mut rng = Pcg::seed(2);
+        let g = generators::path_plus_random_edges(30, 10, &mut rng);
+        let d = all_pairs(&g);
+        let emb = bartal_tree(&g, &mut rng);
+        for i in 0..30 {
+            for j in (i + 1)..30 {
+                let dt = emb.distance(i, j);
+                let dg = d[i * 30 + j];
+                assert!(dt + 1e-9 >= dg, "({i},{j}): tree {dt} < graph {dg}");
+            }
+        }
+    }
+
+    #[test]
+    fn distortion_finite_and_modest() {
+        let mut rng = Pcg::seed(3);
+        let g = generators::erdos_renyi(25, 0.2, &mut rng);
+        let d = all_pairs(&g);
+        let emb = bartal_tree(&g, &mut rng);
+        let mut worst = 0.0f64;
+        for i in 0..25 {
+            for j in (i + 1)..25 {
+                worst = worst.max(emb.distance(i, j) / d[i * 25 + j]);
+            }
+        }
+        assert!(worst.is_finite());
+        assert!(worst < 200.0, "worst-case distortion {worst}");
+    }
+
+    #[test]
+    fn two_vertex_graph() {
+        let g = Graph::from_edges(2, &[(0, 1, 3.0)]);
+        let mut rng = Pcg::seed(4);
+        let emb = bartal_tree(&g, &mut rng);
+        assert!(emb.distance(0, 1) > 0.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! FRT probabilistic tree embeddings (Fakcharoenphol, Rao & Talwar 2004)
+//! — one of the low-distortion tree baselines of Fig. 4.
+//!
+//! Produces a 2-HST dominating the input metric with `O(log n)` expected
+//! distortion. The construction requires the full distance matrix
+//! (`O(n²)` preprocessing — exactly the cost the paper's Fig. 4 shows
+//! making these baselines much slower than FTFI's MST route).
+
+use super::Tree;
+use crate::graph::shortest_path::all_pairs;
+use crate::graph::Graph;
+use crate::ml::rng::Pcg;
+
+/// A tree over the original vertices plus Steiner (internal) nodes.
+/// Original vertex `v` lives at tree vertex `leaf_of[v]`.
+#[derive(Debug)]
+pub struct TreeEmbedding {
+    pub tree: Tree,
+    pub leaf_of: Vec<u32>,
+}
+
+impl TreeEmbedding {
+    /// Tree-metric distance between two *original* vertices.
+    pub fn distance(&self, u: usize, v: usize) -> f64 {
+        self.tree.distance(self.leaf_of[u] as usize, self.leaf_of[v] as usize)
+    }
+
+    /// Lift a field on original vertices to the full tree (zeros on
+    /// Steiner nodes) — lets any tree integrator run over the embedding.
+    pub fn lift_field(&self, x: &crate::linalg::matrix::Matrix) -> crate::linalg::matrix::Matrix {
+        let mut out = crate::linalg::matrix::Matrix::zeros(self.tree.n(), x.cols());
+        for (v, &t) in self.leaf_of.iter().enumerate() {
+            out.row_mut(t as usize).copy_from_slice(x.row(v));
+        }
+        out
+    }
+
+    /// Read back the rows of a full-tree field at the original vertices.
+    pub fn restrict_field(
+        &self,
+        y: &crate::linalg::matrix::Matrix,
+    ) -> crate::linalg::matrix::Matrix {
+        let mut out = crate::linalg::matrix::Matrix::zeros(self.leaf_of.len(), y.cols());
+        for (v, &t) in self.leaf_of.iter().enumerate() {
+            out.row_mut(v).copy_from_slice(y.row(t as usize));
+        }
+        out
+    }
+}
+
+/// Build an FRT tree for the shortest-path metric of `g`.
+pub fn frt_tree(g: &Graph, rng: &mut Pcg) -> TreeEmbedding {
+    let n = g.n();
+    assert!(n >= 1);
+    if n == 1 {
+        return TreeEmbedding { tree: Tree::from_edges(1, &[]), leaf_of: vec![0] };
+    }
+    let d = all_pairs(g);
+    let dist = |i: usize, j: usize| d[i * n + j];
+    let diameter = (0..n)
+        .flat_map(|i| (0..n).map(move |j| (i, j)))
+        .map(|(i, j)| dist(i, j))
+        .fold(0.0f64, f64::max);
+    // Levels: radius r_i = β·2^i, from 2^δ ≥ diameter down to below the
+    // minimum positive distance.
+    let beta = rng.uniform_in(1.0, 2.0);
+    let pi = rng.permutation(n);
+    let top = diameter.log2().ceil() as i32 + 1;
+    let min_d = (0..n)
+        .flat_map(|i| (0..n).map(move |j| (i, j)))
+        .filter(|&(i, j)| i != j)
+        .map(|(i, j)| dist(i, j))
+        .fold(f64::INFINITY, f64::min);
+    let bottom = (min_d / 2.0).log2().floor() as i32 - 1;
+
+    // Per level, per vertex: the first centre in π within radius.
+    // Cluster identity at level i = the chain of assignments from the top,
+    // encoded incrementally: clusters refine as the radius shrinks.
+    let mut cluster: Vec<usize> = vec![0; n]; // all together at the top
+    let mut next_cluster_id = 1usize;
+    // Tree construction: node per (level, cluster).
+    let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+    let mut node_of_cluster: std::collections::HashMap<usize, u32> =
+        std::collections::HashMap::new();
+    let mut n_nodes: u32 = 1; // root = node 0 for the top cluster
+    node_of_cluster.insert(0, 0);
+
+    let mut level = top;
+    while level >= bottom {
+        let r = beta * (2.0f64).powi(level);
+        // New sub-cluster = (old cluster, chosen centre).
+        let mut remap: std::collections::HashMap<(usize, usize), usize> =
+            std::collections::HashMap::new();
+        let mut new_cluster = vec![0usize; n];
+        for v in 0..n {
+            let centre = *pi
+                .iter()
+                .find(|&&c| dist(v, c) <= r)
+                .unwrap_or(&v); // r below min distance → own singleton
+            let key = (cluster[v], centre);
+            let id = *remap.entry(key).or_insert_with(|| {
+                let id = next_cluster_id;
+                next_cluster_id += 1;
+                id
+            });
+            new_cluster[v] = id;
+        }
+        // Add tree nodes/edges for refined clusters.
+        for v in 0..n {
+            let parent = node_of_cluster[&cluster[v]];
+            let entry = node_of_cluster.entry(new_cluster[v]).or_insert_with(|| {
+                let id = n_nodes;
+                n_nodes += 1;
+                edges.push((parent, id, r.max(1e-9)));
+                id
+            });
+            let _ = entry;
+        }
+        cluster = new_cluster;
+        level -= 1;
+    }
+    // Attach original vertices as leaves of their final singleton cluster.
+    let mut leaf_of = vec![0u32; n];
+    let r_leaf = beta * (2.0f64).powi(bottom) / 2.0;
+    for v in 0..n {
+        let parent = node_of_cluster[&cluster[v]];
+        let leaf = n_nodes;
+        n_nodes += 1;
+        edges.push((parent, leaf, r_leaf.max(1e-9)));
+        leaf_of[v] = leaf;
+    }
+    TreeEmbedding { tree: Tree::from_edges(n_nodes as usize, &edges), leaf_of }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn frt_dominates_metric() {
+        let mut rng = Pcg::seed(1);
+        let g = generators::path_plus_random_edges(40, 20, &mut rng);
+        let d = all_pairs(&g);
+        let emb = frt_tree(&g, &mut rng);
+        for i in 0..40 {
+            for j in 0..40 {
+                let dt = emb.distance(i, j);
+                let dg = d[i * 40 + j];
+                // Dominating up to fp slack.
+                assert!(dt + 1e-6 >= dg, "({i},{j}): tree {dt} < graph {dg}");
+            }
+        }
+    }
+
+    #[test]
+    fn frt_expected_distortion_reasonable() {
+        // Average (over pairs and seeds) distortion should be modest
+        // (theory: O(log n); for n=30 expect well under ~30x).
+        let mut rng = Pcg::seed(2);
+        let g = generators::path_plus_random_edges(30, 15, &mut rng);
+        let d = all_pairs(&g);
+        let mut total = 0.0;
+        let mut count = 0;
+        for seed in 0..5u64 {
+            let mut r2 = Pcg::seed(seed + 100);
+            let emb = frt_tree(&g, &mut r2);
+            for i in 0..30 {
+                for j in (i + 1)..30 {
+                    total += emb.distance(i, j) / d[i * 30 + j];
+                    count += 1;
+                }
+            }
+        }
+        let avg = total / count as f64;
+        assert!(avg < 40.0, "avg distortion {avg}");
+        assert!(avg >= 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn lift_restrict_roundtrip() {
+        let mut rng = Pcg::seed(3);
+        let g = generators::random_tree(20, 0.5, 1.5, &mut rng).to_graph();
+        let emb = frt_tree(&g, &mut rng);
+        let x = crate::linalg::matrix::Matrix::randn(20, 2, &mut rng);
+        let lifted = emb.lift_field(&x);
+        assert_eq!(lifted.rows(), emb.tree.n());
+        let back = emb.restrict_field(&lifted);
+        assert!(back.max_abs_diff(&x) < 1e-15);
+    }
+
+    #[test]
+    fn singleton_graph() {
+        let g = Graph::from_edges(1, &[]);
+        let mut rng = Pcg::seed(4);
+        let emb = frt_tree(&g, &mut rng);
+        assert_eq!(emb.tree.n(), 1);
+    }
+}

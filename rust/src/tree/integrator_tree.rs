@@ -1,0 +1,460 @@
+//! The IntegratorTree (IT) data structure — §3.1/§3.2 of the paper.
+//!
+//! An IT is a rooted binary decomposition of an input tree `T` built with
+//! balanced separators (Lemma 3.1): each internal node covers a connected
+//! vertex subset `S`, stores a pivot `p` and two children covering
+//! `S_left`/`S_right` with `S_left ∩ S_right = {p}` and `|S_x| ≥ |S|/4`.
+//! It is built **once per tree** and reused for any number of tensor
+//! fields and any `f` (leaves store *raw* distances; `f` is applied at
+//! integration time — this is what makes the learnable-`f` training of
+//! §4.3 cheap, since the coefficients change every step but the IT does
+//! not).
+//!
+//! Per internal node, the paper's eight fields materialise as:
+//! `left_ids` / `right_ids` (child-local → node-local id maps),
+//! `left_d` / `right_d` (sorted distinct pivot distances),
+//! `left_id_d` / `right_id_d` (vertex → distance index), and
+//! `left groups` / `right groups` (CSR: distance index → vertices),
+//! with `*_d[0] = 0` always being the pivot's own singleton group.
+
+use super::separator::{split, SeparatorScratch};
+use super::Tree;
+use crate::ftfi::cordial::{cross_apply, CrossPolicy};
+use crate::ftfi::functions::FDist;
+use crate::linalg::matrix::Matrix;
+
+/// One side (left or right) of an internal IT node.
+#[derive(Debug)]
+pub struct Side {
+    /// Child-local index → node-local index.
+    pub ids: Vec<u32>,
+    /// Sorted distinct distances from the pivot; `d[0] == 0.0` (pivot).
+    pub d: Vec<f64>,
+    /// Child-local vertex → index into `d`.
+    pub id_d: Vec<u32>,
+    /// CSR offsets into `group_items`, one group per distance.
+    pub group_off: Vec<u32>,
+    /// Child-local vertex ids grouped by distance index.
+    pub group_items: Vec<u32>,
+    /// Child-local index of the pivot.
+    pub pivot: u32,
+}
+
+/// IT node: leaf (small sub-tree, dense distance matrix) or internal.
+#[derive(Debug)]
+pub enum ItNode {
+    Leaf {
+        /// Number of vertices.
+        size: usize,
+        /// Raw (not f-transformed) `size×size` distance matrix.
+        dmat: Vec<f64>,
+    },
+    Internal {
+        size: usize,
+        left_child: usize,
+        right_child: usize,
+        left: Side,
+        right: Side,
+    },
+}
+
+/// The IntegratorTree: an arena of [`ItNode`]s, root at index 0.
+pub struct IntegratorTree {
+    nodes: Vec<ItNode>,
+    n: usize,
+    leaf_threshold: usize,
+}
+
+/// Summary statistics (used by the perf log and the ablation benches).
+#[derive(Debug, Clone, Default)]
+pub struct ItStats {
+    pub nodes: usize,
+    pub leaves: usize,
+    pub depth: usize,
+    pub max_leaf_size: usize,
+    pub total_distinct_distances: usize,
+    pub max_distinct_distances: usize,
+}
+
+impl IntegratorTree {
+    /// Build with the default leaf threshold (32 — see the ablation bench;
+    /// the paper likewise uses `t` well above the theoretical minimum 6).
+    pub fn new(tree: &Tree) -> Self {
+        Self::with_leaf_threshold(tree, 32)
+    }
+
+    /// Build with an explicit leaf threshold `t ≥ 2`.
+    pub fn with_leaf_threshold(tree: &Tree, leaf_threshold: usize) -> Self {
+        let t = leaf_threshold.max(2);
+        let n = tree.n();
+        let mut it = IntegratorTree { nodes: Vec::new(), n, leaf_threshold: t };
+        let mut scratch = SeparatorScratch::new(n);
+        let verts: Vec<u32> = (0..n as u32).collect();
+        it.build(tree, verts, &mut scratch);
+        it
+    }
+
+    /// Number of vertices of the underlying tree.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Recursively build the node for `verts`; returns its arena index.
+    fn build(&mut self, tree: &Tree, verts: Vec<u32>, scratch: &mut SeparatorScratch) -> usize {
+        let idx = self.nodes.len();
+        if verts.len() <= self.leaf_threshold || verts.len() < 3 {
+            let dmat = leaf_distances(tree, &verts);
+            self.nodes.push(ItNode::Leaf { size: verts.len(), dmat });
+            return idx;
+        }
+        let s = split(tree, &verts, scratch);
+        // node-local index of each global vertex.
+        let mut local = std::collections::HashMap::with_capacity(verts.len());
+        for (i, &v) in verts.iter().enumerate() {
+            local.insert(v, i as u32);
+        }
+        let left = make_side(tree, &s.left, s.pivot, &local);
+        let right = make_side(tree, &s.right, s.pivot, &local);
+        // Reserve the slot, then recurse.
+        self.nodes.push(ItNode::Leaf { size: 0, dmat: Vec::new() }); // placeholder
+        let left_child = self.build(tree, s.left, scratch);
+        let right_child = self.build(tree, s.right, scratch);
+        self.nodes[idx] =
+            ItNode::Internal { size: verts.len(), left_child, right_child, left, right };
+        idx
+    }
+
+    /// Integrate the tensor field `x` (`n×d`, rows indexed by tree vertex
+    /// id): returns `out[v] = Σ_u f(dist(v,u))·x[u]`. Exact (up to the
+    /// floating-point accuracy of the selected cross-term multiplier).
+    pub fn integrate(&self, f: &FDist, x: &Matrix, policy: &CrossPolicy) -> Matrix {
+        assert_eq!(x.rows(), self.n, "field has {} rows, tree has {}", x.rows(), self.n);
+        if self.n == 0 {
+            return Matrix::zeros(0, x.cols());
+        }
+        self.integrate_node(0, x, f, policy)
+    }
+
+    /// Convenience wrapper for scalar fields.
+    pub fn integrate_vec(&self, f: &FDist, x: &[f64], policy: &CrossPolicy) -> Vec<f64> {
+        let m = Matrix::from_vec(x.len(), 1, x.to_vec());
+        self.integrate(f, &m, policy).into_vec()
+    }
+
+    fn integrate_node(&self, idx: usize, x: &Matrix, f: &FDist, policy: &CrossPolicy) -> Matrix {
+        match &self.nodes[idx] {
+            ItNode::Leaf { size, dmat } => {
+                let d = x.cols();
+                let mut out = Matrix::zeros(*size, d);
+                for i in 0..*size {
+                    let orow = out.row_mut(i);
+                    for j in 0..*size {
+                        let c = f.eval(dmat[i * size + j]);
+                        if c == 0.0 {
+                            continue;
+                        }
+                        for (o, &v) in orow.iter_mut().zip(x.row(j)) {
+                            *o += c * v;
+                        }
+                    }
+                }
+                out
+            }
+            ItNode::Internal { size, left_child, right_child, left, right } => {
+                let d = x.cols();
+                let xl = x.gather_rows(&left.ids);
+                let xr = x.gather_rows(&right.ids);
+                // Inner sums within each side (pivot belongs to both, but
+                // its output is taken from the left side only).
+                let ol = self.integrate_node(*left_child, &xl, f, policy);
+                let or_ = self.integrate_node(*right_child, &xr, f, policy);
+
+                // Aggregated fields per distinct pivot distance (Eq. 3).
+                let xr_agg = aggregate(right, &xr);
+                let xl_agg = aggregate(left, &xl);
+
+                // Cross contribution into the left side (Eq. 4):
+                // C[i][j] = f(left_d[i] + right_d[j]); row τ(v) minus the
+                // pivot group term removes j = p from the sum.
+                let cr = cross_apply(f, &left.d, &right.d, &xr_agg, policy);
+                let mut out = Matrix::zeros(*size, d);
+                for (vloc, &tau) in left.id_d.iter().enumerate() {
+                    let coeff = f.eval(left.d[tau as usize]);
+                    let node_row = left.ids[vloc] as usize;
+                    let dst = out.row_mut(node_row);
+                    let src = ol.row(vloc);
+                    let crr = cr.row(tau as usize);
+                    let piv = xr_agg.row(0);
+                    for c in 0..d {
+                        dst[c] += src[c] + crr[c] - coeff * piv[c];
+                    }
+                }
+                drop(ol);
+                // Cross into the right side with Cᵀ — same f, roles of the
+                // distance arrays swapped. The pivot row is skipped: its
+                // full integral was produced by the left pass.
+                let cl = cross_apply(f, &right.d, &left.d, &xl_agg, policy);
+                for (uloc, &tau) in right.id_d.iter().enumerate() {
+                    if uloc as u32 == right.pivot {
+                        continue;
+                    }
+                    let coeff = f.eval(right.d[tau as usize]);
+                    let node_row = right.ids[uloc] as usize;
+                    let dst = out.row_mut(node_row);
+                    let src = or_.row(uloc);
+                    let clr = cl.row(tau as usize);
+                    let piv = xl_agg.row(0);
+                    for c in 0..d {
+                        dst[c] += src[c] + clr[c] - coeff * piv[c];
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Structure statistics.
+    pub fn stats(&self) -> ItStats {
+        let mut st = ItStats { nodes: self.nodes.len(), ..Default::default() };
+        self.stats_rec(0, 1, &mut st);
+        st
+    }
+
+    fn stats_rec(&self, idx: usize, depth: usize, st: &mut ItStats) {
+        st.depth = st.depth.max(depth);
+        match &self.nodes[idx] {
+            ItNode::Leaf { size, .. } => {
+                st.leaves += 1;
+                st.max_leaf_size = st.max_leaf_size.max(*size);
+            }
+            ItNode::Internal { left_child, right_child, left, right, .. } => {
+                st.total_distinct_distances += left.d.len() + right.d.len();
+                st.max_distinct_distances =
+                    st.max_distinct_distances.max(left.d.len().max(right.d.len()));
+                self.stats_rec(*left_child, depth + 1, st);
+                self.stats_rec(*right_child, depth + 1, st);
+            }
+        }
+    }
+}
+
+/// Distances from `pivot` to every vertex of `side_verts`, restricted to
+/// the side's vertex set; then grouped into the paper's `d`/`id-d`/`s`
+/// arrays.
+fn make_side(
+    tree: &Tree,
+    side_verts: &[u32],
+    pivot: u32,
+    node_local: &std::collections::HashMap<u32, u32>,
+) -> Side {
+    let k = side_verts.len();
+    let mut member = std::collections::HashMap::with_capacity(k);
+    for (i, &v) in side_verts.iter().enumerate() {
+        member.insert(v, i as u32);
+    }
+    // DFS from the pivot inside the side.
+    let mut dist = vec![f64::NAN; k];
+    let pivot_local = member[&pivot];
+    dist[pivot_local as usize] = 0.0;
+    let mut stack = vec![pivot];
+    while let Some(v) = stack.pop() {
+        let dv = dist[member[&v] as usize];
+        for &(u, w) in tree.neighbors(v as usize) {
+            if let Some(&lu) = member.get(&u) {
+                if dist[lu as usize].is_nan() {
+                    dist[lu as usize] = dv + w;
+                    stack.push(u);
+                }
+            }
+        }
+    }
+    debug_assert!(dist.iter().all(|d| !d.is_nan()), "side not connected through pivot");
+
+    // Sort vertices by distance, group equal distances (tolerance scaled
+    // to the magnitude — exact ties happen on lattice-weight trees).
+    let mut order: Vec<u32> = (0..k as u32).collect();
+    order.sort_by(|&a, &b| dist[a as usize].partial_cmp(&dist[b as usize]).unwrap());
+    let maxd = dist.iter().fold(0.0f64, |m, &v| m.max(v));
+    let eps = 1e-9 * (1.0 + maxd);
+    let mut d: Vec<f64> = Vec::new();
+    let mut id_d = vec![0u32; k];
+    let mut group_off: Vec<u32> = vec![0];
+    let mut group_items: Vec<u32> = Vec::with_capacity(k);
+    for &v in &order {
+        let dv = dist[v as usize];
+        if d.is_empty() || dv - *d.last().unwrap() > eps {
+            d.push(dv);
+            group_off.push(group_items.len() as u32);
+        }
+        group_items.push(v);
+        id_d[v as usize] = (d.len() - 1) as u32;
+        *group_off.last_mut().unwrap() += 1;
+    }
+    debug_assert_eq!(d[0], 0.0);
+    debug_assert_eq!(group_off[1] - group_off[0], 1, "pivot group must be a singleton");
+
+    let ids: Vec<u32> = side_verts.iter().map(|v| node_local[v]).collect();
+    Side { ids, d, id_d, group_off, group_items, pivot: pivot_local }
+}
+
+/// Eq. 3: aggregate the side's field rows by distance group.
+fn aggregate(side: &Side, x: &Matrix) -> Matrix {
+    let l = side.d.len();
+    let d = x.cols();
+    let mut out = Matrix::zeros(l, d);
+    for g in 0..l {
+        let lo = side.group_off[g] as usize;
+        let hi = side.group_off[g + 1] as usize;
+        let orow = out.row_mut(g);
+        for &v in &side.group_items[lo..hi] {
+            for (o, &val) in orow.iter_mut().zip(x.row(v as usize)) {
+                *o += val;
+            }
+        }
+    }
+    out
+}
+
+/// Dense all-pairs distances within the sub-tree induced by `verts`
+/// (leaf construction): one restricted DFS per vertex, O(t²).
+fn leaf_distances(tree: &Tree, verts: &[u32]) -> Vec<f64> {
+    let k = verts.len();
+    let mut member = std::collections::HashMap::with_capacity(k);
+    for (i, &v) in verts.iter().enumerate() {
+        member.insert(v, i as u32);
+    }
+    let mut dmat = vec![0.0; k * k];
+    let mut stack = Vec::with_capacity(k);
+    for (si, &s) in verts.iter().enumerate() {
+        let row = &mut dmat[si * k..(si + 1) * k];
+        let mut seen = vec![false; k];
+        seen[si] = true;
+        stack.push((s, 0.0));
+        while let Some((v, dv)) = stack.pop() {
+            for &(u, w) in tree.neighbors(v as usize) {
+                if let Some(&lu) = member.get(&u) {
+                    if !seen[lu as usize] {
+                        seen[lu as usize] = true;
+                        row[lu as usize] = dv + w;
+                        stack.push((u, dv + w));
+                    }
+                }
+            }
+        }
+    }
+    dmat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ftfi::brute::btfi;
+    use crate::graph::generators::{random_rational_tree, random_tree};
+    use crate::ml::rng::Pcg;
+
+    fn check_exact(tree: &Tree, f: &FDist, d: usize, seed: u64, tol: f64) {
+        let mut rng = Pcg::seed(seed);
+        let x = Matrix::randn(tree.n(), d, &mut rng);
+        let want = btfi(tree, f, &x);
+        for &t in &[2usize, 8, 32] {
+            let it = IntegratorTree::with_leaf_threshold(tree, t);
+            let got = it.integrate(f, &x, &CrossPolicy::default());
+            let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+            assert!(rel < tol, "{f:?} t={t} n={}: rel={rel}", tree.n());
+        }
+    }
+
+    #[test]
+    fn matches_brute_small_path() {
+        let tree = Tree::path(&[1.0, 2.0, 0.5, 1.5, 3.0]);
+        check_exact(&tree, &FDist::Identity, 1, 1, 1e-10);
+        check_exact(&tree, &FDist::Exponential { lambda: -0.5, scale: 1.0 }, 3, 2, 1e-10);
+    }
+
+    #[test]
+    fn matches_brute_random_trees_all_f_classes() {
+        let mut rng = Pcg::seed(7);
+        let fs: Vec<(FDist, f64)> = vec![
+            (FDist::Identity, 1e-9),
+            (FDist::Polynomial(vec![1.0, -0.5, 0.25]), 1e-9),
+            (FDist::Exponential { lambda: -0.3, scale: 2.0 }, 1e-9),
+            (FDist::Trig { omega: 0.7, phase: 0.2, scale: 1.0 }, 1e-9),
+            (FDist::Rational { num: vec![1.0], den: vec![1.0, 0.0, 0.4] }, 1e-6),
+            (FDist::ExpOverLinear { lambda: -0.1, c: 1.0 }, 1e-6),
+        ];
+        for &n in &[3usize, 6, 17, 100, 400] {
+            let tree = random_tree(n, 0.05, 1.0, &mut rng);
+            for (f, tol) in &fs {
+                check_exact(&tree, f, 2, n as u64, *tol);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_brute_on_lattice_trees_any_f() {
+        // Rational weights → Hankel path must engage and stay exact.
+        let mut rng = Pcg::seed(8);
+        let tree = random_rational_tree(300, 6, 4, &mut rng);
+        let f = FDist::Custom(std::sync::Arc::new(|x: f64| (0.3 * x).sin() / (1.0 + x)));
+        check_exact(&tree, &f, 2, 99, 1e-8);
+        // Exponentiated quadratic on a lattice tree (§3.2.1 last case).
+        let g = FDist::ExpQuadratic { u: -0.05, v: 0.01, w: 0.1 };
+        check_exact(&tree, &g, 1, 100, 1e-8);
+    }
+
+    #[test]
+    fn unit_weight_tree_gaussian() {
+        let mut rng = Pcg::seed(9);
+        let tree = random_rational_tree(200, 1, 1, &mut rng); // unit weights
+        check_exact(&tree, &FDist::gaussian(0.1), 3, 101, 1e-8);
+    }
+
+    #[test]
+    fn singleton_and_tiny_trees() {
+        let t1 = Tree::from_edges(1, &[]);
+        let it = IntegratorTree::new(&t1);
+        let x = Matrix::from_vec(1, 1, vec![2.0]);
+        let out = it.integrate(&FDist::Exponential { lambda: 1.0, scale: 1.0 }, &x, &CrossPolicy::default());
+        assert!((out.get(0, 0) - 2.0).abs() < 1e-12); // f(0)·x = 1·2
+
+        let t2 = Tree::from_edges(2, &[(0, 1, 3.0)]);
+        let it2 = IntegratorTree::with_leaf_threshold(&t2, 2);
+        let x2 = Matrix::from_vec(2, 1, vec![1.0, 1.0]);
+        let out2 = it2.integrate(&FDist::Identity, &x2, &CrossPolicy::default());
+        assert!((out2.get(0, 0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_balanced_depth() {
+        let mut rng = Pcg::seed(10);
+        let tree = random_tree(1000, 0.1, 1.0, &mut rng);
+        let it = IntegratorTree::with_leaf_threshold(&tree, 8);
+        let st = it.stats();
+        // depth ≤ log_{4/3}(n/t) + slack
+        assert!(st.depth <= 30, "depth={}", st.depth);
+        assert!(st.leaves >= 1000 / 8 / 4);
+        assert!(st.max_leaf_size <= 8);
+    }
+
+    #[test]
+    fn preserves_total_mass_for_constant_f() {
+        // f ≡ 1: every output row equals the column sums of x.
+        let mut rng = Pcg::seed(11);
+        let tree = random_tree(150, 0.2, 1.0, &mut rng);
+        let x = Matrix::randn(150, 2, &mut rng);
+        let it = IntegratorTree::new(&tree);
+        let f = FDist::Polynomial(vec![1.0]);
+        let out = it.integrate(&f, &x, &CrossPolicy::default());
+        let mut colsum = vec![0.0; 2];
+        for i in 0..150 {
+            for c in 0..2 {
+                colsum[c] += x.get(i, c);
+            }
+        }
+        for i in 0..150 {
+            for c in 0..2 {
+                assert!((out.get(i, c) - colsum[c]).abs() < 1e-8);
+            }
+        }
+    }
+}

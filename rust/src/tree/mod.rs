@@ -1,0 +1,209 @@
+//! Weighted trees and the IntegratorTree machinery (§3 of the paper).
+
+pub mod bartal;
+pub mod frt;
+pub mod integrator_tree;
+pub mod separator;
+
+use crate::graph::Graph;
+
+/// A weighted undirected tree on vertices `0..n`. Stored as an adjacency
+/// list; invariant: exactly `n-1` edges and connected (checked at build).
+#[derive(Clone, Debug)]
+pub struct Tree {
+    n: usize,
+    adj: Vec<Vec<(u32, f64)>>,
+    edges: Vec<(u32, u32, f64)>,
+}
+
+impl Tree {
+    /// Build from an edge list; panics unless the edges form a spanning
+    /// tree of `0..n`.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, f64)]) -> Self {
+        assert_eq!(edges.len(), n.saturating_sub(1), "a tree on {n} vertices needs {} edges", n.saturating_sub(1));
+        let mut adj = vec![Vec::new(); n];
+        for &(u, v, w) in edges {
+            assert!((u as usize) < n && (v as usize) < n);
+            assert!(w > 0.0, "tree edge weights must be positive");
+            adj[u as usize].push((v, w));
+            adj[v as usize].push((u, w));
+        }
+        let t = Tree { n, adj, edges: edges.to_vec() };
+        assert!(t.is_connected(), "edge list does not span the vertex set");
+        t
+    }
+
+    /// A path graph 0-1-…-(n-1) with the given edge weights
+    /// (`weights.len() == n-1`).
+    pub fn path(weights: &[f64]) -> Self {
+        let n = weights.len() + 1;
+        let edges: Vec<(u32, u32, f64)> =
+            weights.iter().enumerate().map(|(i, &w)| (i as u32, i as u32 + 1, w)).collect();
+        Tree::from_edges(n, &edges)
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[(u32, f64)] {
+        &self.adj[v]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].len()
+    }
+
+    #[inline]
+    pub fn edges(&self) -> &[(u32, u32, f64)] {
+        &self.edges
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.edges.iter().map(|&(_, _, w)| w).sum()
+    }
+
+    fn is_connected(&self) -> bool {
+        if self.n <= 1 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &(u, _) in &self.adj[v] {
+                if !seen[u as usize] {
+                    seen[u as usize] = true;
+                    count += 1;
+                    stack.push(u as usize);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Single-source distances on the tree in O(n) (DFS).
+    pub fn distances_from(&self, source: usize) -> Vec<f64> {
+        let mut dist = vec![f64::INFINITY; self.n];
+        let mut stack = vec![source];
+        dist[source] = 0.0;
+        while let Some(v) = stack.pop() {
+            for &(u, w) in &self.adj[v] {
+                if dist[u as usize].is_infinite() {
+                    dist[u as usize] = dist[v] + w;
+                    stack.push(u as usize);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Distance between one pair of vertices, O(n).
+    pub fn distance(&self, u: usize, v: usize) -> f64 {
+        self.distances_from(u)[v]
+    }
+
+    /// All-pairs tree distances as a dense row-major buffer — O(n²); this
+    /// is exactly the preprocessing the brute-force BTFI baseline pays.
+    pub fn all_pairs(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.n * self.n];
+        for s in 0..self.n {
+            let d = self.distances_from(s);
+            out[s * self.n..(s + 1) * self.n].copy_from_slice(&d);
+        }
+        out
+    }
+
+    /// View as a [`Graph`] (used by embeddings and tests).
+    pub fn to_graph(&self) -> Graph {
+        Graph::from_edges(self.n, &self.edges)
+    }
+
+    /// Sub-tree induced by `vertices` (must itself be connected). Returns
+    /// the sub-tree with local ids `0..k` plus the local→parent id map
+    /// (which is just `vertices` in order).
+    pub fn induced_subtree(&self, vertices: &[u32]) -> Tree {
+        let mut local = std::collections::HashMap::with_capacity(vertices.len());
+        for (i, &v) in vertices.iter().enumerate() {
+            local.insert(v, i as u32);
+        }
+        let mut edges = Vec::with_capacity(vertices.len().saturating_sub(1));
+        for &v in vertices {
+            for &(u, w) in &self.adj[v as usize] {
+                if u > v {
+                    if let (Some(&lv), Some(&lu)) = (local.get(&v), local.get(&u)) {
+                        edges.push((lv, lu, w));
+                    }
+                }
+            }
+        }
+        Tree::from_edges(vertices.len(), &edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn star() -> Tree {
+        Tree::from_edges(4, &[(0, 1, 1.0), (0, 2, 2.0), (0, 3, 3.0)])
+    }
+
+    #[test]
+    fn path_constructor() {
+        let t = Tree::path(&[1.0, 2.0, 3.0]);
+        assert_eq!(t.n(), 4);
+        assert!((t.distance(0, 3) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distances_on_star() {
+        let t = star();
+        let d = t.distances_from(1);
+        assert_eq!(d, vec![1.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn all_pairs_matches_pointwise() {
+        let t = star();
+        let ap = t.all_pairs();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((ap[i * 4 + j] - t.distance(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn induced_subtree_preserves_weights() {
+        let t = Tree::path(&[1.0, 2.0, 3.0]);
+        let s = t.induced_subtree(&[1, 2, 3]);
+        assert_eq!(s.n(), 3);
+        assert!((s.distance(0, 2) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singleton_tree() {
+        let t = Tree::from_edges(1, &[]);
+        assert_eq!(t.n(), 1);
+        assert_eq!(t.distances_from(0), vec![0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_cycle() {
+        // 3 edges on 3 vertices is not a tree.
+        Tree::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
+        Tree::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0), (0, 2, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_disconnected_forest() {
+        Tree::from_edges(4, &[(0, 1, 1.0), (0, 1, 1.0), (2, 3, 1.0)]);
+    }
+}

@@ -1,0 +1,237 @@
+//! Property-based equivalence suite: FTFI must agree with the brute-force
+//! integrator across randomized trees, fields, function classes, leaf
+//! thresholds and forced strategies. The offline environment has no
+//! proptest crate, so this uses seeded random sweeps (large case counts,
+//! deterministic seeds — failures print the seed for replay).
+
+use ftfi::ftfi::brute::{btfi, btfi_streaming};
+use ftfi::ftfi::cordial::{cross_apply, cross_apply_dense, CrossPolicy, Strategy};
+use ftfi::ftfi::functions::FDist;
+use ftfi::graph::generators::{random_rational_tree, random_tree};
+use ftfi::graph::{generators, mst::minimum_spanning_tree};
+use ftfi::linalg::matrix::Matrix;
+use ftfi::ml::rng::Pcg;
+use ftfi::tree::Tree;
+use ftfi::TreeFieldIntegrator;
+
+fn f_pool(rng: &mut Pcg) -> Vec<(FDist, f64)> {
+    vec![
+        (FDist::Identity, 1e-9),
+        (FDist::Polynomial(vec![rng.normal(), rng.normal(), rng.normal() * 0.3]), 1e-8),
+        (FDist::Exponential { lambda: rng.uniform_in(-1.0, -0.1), scale: 1.0 }, 1e-9),
+        (
+            FDist::PolyExp {
+                coeffs: vec![1.0, rng.uniform_in(-0.5, 0.5)],
+                lambda: rng.uniform_in(-0.8, -0.1),
+            },
+            1e-9,
+        ),
+        (
+            FDist::Trig {
+                omega: rng.uniform_in(0.2, 1.5),
+                phase: rng.uniform_in(0.0, 1.0),
+                scale: 1.0,
+            },
+            1e-9,
+        ),
+        (FDist::inverse_quadratic(rng.uniform_in(0.1, 2.0)), 1e-6),
+        (
+            FDist::ExpOverLinear { lambda: rng.uniform_in(-0.5, 0.0), c: rng.uniform_in(0.5, 2.0) },
+            1e-6,
+        ),
+        (FDist::gaussian(rng.uniform_in(0.05, 0.5)), 1e-6),
+    ]
+}
+
+/// Property: FTFI(tree, f, X) == BTFI(tree, f, X) for random everything.
+#[test]
+fn property_ftfi_equals_brute_random_sweep() {
+    for case in 0..40u64 {
+        let mut rng = Pcg::seed(1000 + case);
+        let n = rng.range(2, 300);
+        let d = rng.range(1, 4);
+        let tree = random_tree(n, 0.05, 1.0, &mut rng);
+        let x = Matrix::randn(n, d, &mut rng);
+        let t = [2usize, 8, 48][rng.below(3)];
+        for (f, tol) in f_pool(&mut rng) {
+            let tfi = TreeFieldIntegrator::with_options(&tree, t, CrossPolicy::default());
+            let got = tfi.integrate(&f, &x);
+            let want = btfi(&tree, &f, &x);
+            let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+            assert!(rel < tol, "case {case} n={n} d={d} t={t} {f:?}: rel {rel}");
+        }
+    }
+}
+
+/// Property: lattice trees make *any* f exact through the Hankel path.
+#[test]
+fn property_lattice_trees_any_f() {
+    for case in 0..15u64 {
+        let mut rng = Pcg::seed(2000 + case);
+        let n = rng.range(20, 400);
+        let p = rng.range(1, 6) as u32;
+        let q = rng.range(1, 5) as u32;
+        let tree = random_rational_tree(n, p, q, &mut rng);
+        let freq = rng.uniform_in(0.1, 0.9);
+        let f = FDist::Custom(std::sync::Arc::new(move |x: f64| {
+            (freq * x).sin() / (1.0 + 0.2 * x)
+        }));
+        let x = Matrix::randn(n, 2, &mut rng);
+        let tfi = TreeFieldIntegrator::new(&tree);
+        let got = tfi.integrate(&f, &x);
+        let want = btfi(&tree, &f, &x);
+        let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+        assert!(rel < 1e-7, "case {case} n={n} p={p} q={q}: rel {rel}");
+    }
+}
+
+/// Property: linearity — integrate(aX + bY) = a·integrate(X) + b·integrate(Y).
+#[test]
+fn property_linearity() {
+    for case in 0..10u64 {
+        let mut rng = Pcg::seed(3000 + case);
+        let n = rng.range(10, 200);
+        let tree = random_tree(n, 0.1, 1.0, &mut rng);
+        let tfi = TreeFieldIntegrator::new(&tree);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let x = Matrix::randn(n, 2, &mut rng);
+        let y = Matrix::randn(n, 2, &mut rng);
+        let (a, b) = (rng.normal(), rng.normal());
+        let mut combo = x.clone();
+        combo.scale(a);
+        combo.axpy(b, &y);
+        let lhs = tfi.integrate(&f, &combo);
+        let mut rhs = tfi.integrate(&f, &x);
+        rhs.scale(a);
+        rhs.axpy(b, &tfi.integrate(&f, &y));
+        assert!(lhs.frobenius_diff(&rhs) / (1.0 + rhs.frobenius()) < 1e-9, "case {case}");
+    }
+}
+
+/// Property: symmetry — for symmetric M_f, xᵀ·(M·y) == yᵀ·(M·x).
+#[test]
+fn property_operator_symmetry() {
+    for case in 0..10u64 {
+        let mut rng = Pcg::seed(4000 + case);
+        let n = rng.range(10, 150);
+        let tree = random_tree(n, 0.2, 1.0, &mut rng);
+        let tfi = TreeFieldIntegrator::new(&tree);
+        let f = FDist::inverse_quadratic(0.7);
+        let x = rng.normal_vec(n);
+        let y = rng.normal_vec(n);
+        let my = tfi.integrate_vec(&f, &y);
+        let mx = tfi.integrate_vec(&f, &x);
+        let lhs: f64 = x.iter().zip(&my).map(|(a, b)| a * b).sum();
+        let rhs: f64 = y.iter().zip(&mx).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-6 * (1.0 + lhs.abs()), "case {case}: {lhs} vs {rhs}");
+    }
+}
+
+/// Property: every forced strategy that applies must agree with dense.
+#[test]
+fn property_forced_strategies_agree() {
+    for case in 0..12u64 {
+        let mut rng = Pcg::seed(5000 + case);
+        let a = rng.range(20, 120);
+        let b = rng.range(20, 120);
+        let d = rng.range(1, 4);
+        let v = Matrix::randn(b, d, &mut rng);
+        // Lattice-valued points so every strategy is applicable.
+        let xs: Vec<f64> = (0..a).map(|_| rng.below(40) as f64 * 0.25).collect();
+        let ys: Vec<f64> = (0..b).map(|_| rng.below(40) as f64 * 0.25).collect();
+        let cases: Vec<(FDist, Vec<Strategy>, f64)> = vec![
+            (
+                FDist::Exponential { lambda: -0.3, scale: 1.0 },
+                vec![Strategy::Separable, Strategy::Lattice],
+                1e-8,
+            ),
+            (
+                FDist::inverse_quadratic(0.4),
+                vec![Strategy::Lattice, Strategy::Chebyshev, Strategy::RationalSum],
+                1e-6,
+            ),
+            (
+                FDist::gaussian(0.2),
+                vec![Strategy::Lattice, Strategy::Chebyshev, Strategy::Vandermonde],
+                1e-6,
+            ),
+        ];
+        for (f, strategies, tol) in cases {
+            let want = cross_apply_dense(&f, &xs, &ys, &v);
+            for s in strategies {
+                let policy = CrossPolicy { force: Some(s), ..Default::default() };
+                let got = cross_apply(&f, &xs, &ys, &v, &policy);
+                let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+                assert!(rel < tol, "case {case} {f:?} {s:?}: rel {rel}");
+            }
+        }
+    }
+}
+
+/// Property: streaming and materialised brute agree (baseline sanity).
+#[test]
+fn property_brute_variants_agree() {
+    for case in 0..8u64 {
+        let mut rng = Pcg::seed(6000 + case);
+        let n = rng.range(5, 120);
+        let tree = random_tree(n, 0.1, 1.0, &mut rng);
+        let f = FDist::Polynomial(vec![0.5, 1.0]);
+        let x = Matrix::randn(n, 2, &mut rng);
+        let a = btfi(&tree, &f, &x);
+        let b = btfi_streaming(&tree, &f, &x);
+        assert!(a.max_abs_diff(&b) < 1e-9, "case {case}");
+    }
+}
+
+/// Property: MST distances dominate graph distances; the graph pipeline
+/// equals BTFI on its MST.
+#[test]
+fn property_graph_pipeline_consistency() {
+    for case in 0..8u64 {
+        let mut rng = Pcg::seed(7000 + case);
+        let n = rng.range(20, 150);
+        let g = generators::path_plus_random_edges(n, n / 3, &mut rng);
+        let tree = minimum_spanning_tree(&g);
+        for _ in 0..10 {
+            let u = rng.below(n);
+            let d_tree: Vec<f64> = tree.distances_from(u);
+            let d_graph = ftfi::graph::shortest_path::dijkstra(&g, u);
+            for v in 0..n {
+                assert!(d_tree[v] + 1e-9 >= d_graph[v], "case {case}: ({u},{v})");
+            }
+        }
+        let gfi = ftfi::GraphFieldIntegrator::new(&g);
+        let x = Matrix::randn(n, 1, &mut rng);
+        let f = FDist::Exponential { lambda: -0.6, scale: 1.0 };
+        let got = gfi.integrate(&f, &x);
+        let want = btfi(gfi.tree(), &f, &x);
+        assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-9);
+    }
+}
+
+/// Regression: pathological tree shapes (paths, stars, caterpillars).
+#[test]
+fn pathological_tree_shapes() {
+    let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+    let mut rng = Pcg::seed(8000);
+    let path = Tree::path(&vec![0.3; 499]);
+    let star_edges: Vec<(u32, u32, f64)> = (1..400).map(|v| (0, v, 1.0)).collect();
+    let star = Tree::from_edges(400, &star_edges);
+    // Caterpillar: path with a leaf hanging off every spine vertex.
+    let mut cat_edges = Vec::new();
+    for i in 0..200u32 {
+        if i > 0 {
+            cat_edges.push((i - 1, i, 0.7));
+        }
+        cat_edges.push((i, 200 + i, 0.2));
+    }
+    let caterpillar = Tree::from_edges(400, &cat_edges);
+    for (name, tree) in [("path", path), ("star", star), ("caterpillar", caterpillar)] {
+        let x = Matrix::randn(tree.n(), 2, &mut rng);
+        let tfi = TreeFieldIntegrator::new(&tree);
+        let got = tfi.integrate(&f, &x);
+        let want = btfi(&tree, &f, &x);
+        let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+        assert!(rel < 1e-9, "{name}: rel {rel}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Cross-module integration tests: the application pipelines composed end
+//! to end (no PJRT required — those live in runtime_integration.rs).
+
+use ftfi::ftfi::functions::FDist;
+use ftfi::graph::mesh::{sphere_mesh, Mesh};
+use ftfi::graph::mst::minimum_spanning_tree;
+use ftfi::graph::point_cloud::{epsilon_graph, sample_cloud};
+use ftfi::graph::tu_dataset::{generate, TuSpec};
+use ftfi::linalg::eigen::lanczos_smallest;
+use ftfi::linalg::matrix::{cosine_similarity, Matrix};
+use ftfi::ml::dataset::{fold_split, stratified_kfold};
+use ftfi::ml::fit_rational::{fit, relative_frobenius_error, sample_pairs, RationalModel};
+use ftfi::ml::metrics::accuracy;
+use ftfi::ml::random_forest::{ForestParams, RandomForest};
+use ftfi::ml::rng::Pcg;
+use ftfi::ot::gw::{gromov_wasserstein, GwBackend, GwParams};
+use ftfi::ot::sinkhorn::{sinkhorn, uniform_marginal, DenseKernel, FtfiKernel};
+use ftfi::{GraphFieldIntegrator, TreeFieldIntegrator};
+
+/// Mesh → graph → MST → FTFI interpolation recovers normals decently on a
+/// smooth surface and beats the zero-prediction baseline massively.
+#[test]
+fn mesh_interpolation_pipeline() {
+    let mut rng = Pcg::seed(1);
+    let mesh = sphere_mesh(18, 24, 0.1, &mut rng);
+    let n = mesh.n_vertices();
+    let g = mesh.to_graph();
+    let tree = minimum_spanning_tree(&g);
+    let tfi = TreeFieldIntegrator::new(&tree);
+
+    let mut masked = vec![true; n];
+    for i in rng.sample_distinct(n, n / 5) {
+        masked[i] = false;
+    }
+    let mut field = Matrix::zeros(n, 3);
+    for i in 0..n {
+        if !masked[i] {
+            field.row_mut(i).copy_from_slice(&mesh.normals[i]);
+        }
+    }
+    let pred = tfi.integrate(&FDist::inverse_quadratic(8.0), &field);
+    let mut total = 0.0;
+    let mut count = 0;
+    for i in 0..n {
+        if masked[i] {
+            total += cosine_similarity(pred.row(i), &mesh.normals[i]);
+            count += 1;
+        }
+    }
+    let cos = total / count as f64;
+    assert!(cos > 0.6, "cosine {cos}");
+}
+
+/// TU dataset → SP-kernel eigenfeatures → random forest beats chance.
+#[test]
+fn graph_classification_pipeline() {
+    let spec = TuSpec { name: "ITEST", n_graphs: 60, avg_nodes: 30, n_classes: 2 };
+    let ds = generate(&spec, 3);
+    let mut rng = Pcg::seed(5);
+    let feats: Vec<Vec<f64>> = ds
+        .graphs
+        .iter()
+        .map(|g| {
+            let gfi = GraphFieldIntegrator::new(g);
+            lanczos_smallest(
+                g.n(),
+                6.min(g.n()),
+                |v| {
+                    gfi.integrate(&FDist::Identity, &Matrix::from_vec(v.len(), 1, v.to_vec()))
+                        .into_vec()
+                },
+                &mut rng,
+            )
+            .into_iter()
+            .chain(std::iter::repeat(0.0))
+            .take(6)
+            .collect()
+        })
+        .collect();
+    let folds = stratified_kfold(&ds.labels, 4, &mut rng);
+    let mut accs = Vec::new();
+    for f in 0..4 {
+        let (tr, te) = fold_split(&folds, f);
+        let xtr: Vec<Vec<f64>> = tr.iter().map(|&i| feats[i].clone()).collect();
+        let ytr: Vec<usize> = tr.iter().map(|&i| ds.labels[i]).collect();
+        let rf = RandomForest::fit(&xtr, &ytr, &ForestParams::default(), &mut rng);
+        let pred: Vec<usize> = te.iter().map(|&i| rf.predict(&feats[i])).collect();
+        let truth: Vec<usize> = te.iter().map(|&i| ds.labels[i]).collect();
+        accs.push(accuracy(&pred, &truth));
+    }
+    let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+    assert!(mean > 0.6, "accuracy {mean} not better than chance");
+}
+
+/// Learnable-f training improves the metric approximation, and the
+/// trained f runs through the fast integrator.
+#[test]
+fn learnable_f_pipeline() {
+    let mut rng = Pcg::seed(7);
+    let g = ftfi::graph::generators::path_plus_random_edges(150, 110, &mut rng);
+    let tree = minimum_spanning_tree(&g);
+    let data = sample_pairs(&g, &tree, 80, &mut rng);
+    let mut model = RationalModel::new(2, 2);
+    let before = relative_frobenius_error(&g, &tree, &model.to_fdist());
+    fit(&mut model, &data, 250, 0.02);
+    let after = relative_frobenius_error(&g, &tree, &model.to_fdist());
+    assert!(after < before * 0.9, "no improvement: {before} -> {after}");
+    // Trained f through FTFI matches brute.
+    let tfi = TreeFieldIntegrator::new(&tree);
+    let x = Matrix::randn(150, 1, &mut rng);
+    let fast = tfi.integrate(&model.to_fdist(), &x);
+    let slow = ftfi::ftfi::brute::btfi(&tree, &model.to_fdist(), &x);
+    assert!(fast.frobenius_diff(&slow) / (1.0 + slow.frobenius()) < 1e-6);
+}
+
+/// Sinkhorn with the FTFI kernel converges and matches the dense kernel.
+#[test]
+fn sinkhorn_pipeline() {
+    let mut rng = Pcg::seed(9);
+    let tree = ftfi::graph::generators::random_tree(80, 0.2, 1.0, &mut rng);
+    let tfi = TreeFieldIntegrator::new(&tree);
+    let a = uniform_marginal(80);
+    let mut b = rng.uniform_vec(80, 0.2, 1.8);
+    let s: f64 = b.iter().sum();
+    b.iter_mut().for_each(|x| *x /= s);
+    let fast = sinkhorn(&FtfiKernel::new(&tfi, 0.6), &a, &b, 1e-9, 400);
+    let dense = sinkhorn(&DenseKernel::new(&tree, 0.6), &a, &b, 1e-9, 400);
+    assert!(fast.marginal_error < 1e-8);
+    assert!((fast.cost - dense.cost).abs() < 1e-6 * (1.0 + dense.cost));
+}
+
+/// Point-cloud ε-graph pipeline stays connected and classifiable shapes
+/// produce different GW discrepancies than same shapes.
+#[test]
+fn point_cloud_gw_pipeline() {
+    let mut rng = Pcg::seed(11);
+    let c_sphere = sample_cloud(0, 40, 0.01, &mut rng);
+    let c_cross = sample_cloud(7, 40, 0.01, &mut rng);
+    let t_sphere = minimum_spanning_tree(&epsilon_graph(&c_sphere, 0.5));
+    let t_cross = minimum_spanning_tree(&epsilon_graph(&c_cross, 0.5));
+    let p = uniform_marginal(40);
+    let params = GwParams { max_iter: 20, ..Default::default() };
+    let self_d =
+        gromov_wasserstein(&t_sphere, &t_sphere, &p, &p, GwBackend::Ftfi, &params).discrepancy;
+    let cross_d =
+        gromov_wasserstein(&t_sphere, &t_cross, &p, &p, GwBackend::Ftfi, &params).discrepancy;
+    assert!(
+        cross_d > self_d,
+        "GW failed to separate shapes: self {self_d} vs cross {cross_d}"
+    );
+}
+
+/// Config + OFF round trip through the filesystem.
+#[test]
+fn config_and_mesh_io() {
+    let dir = std::env::temp_dir().join(format!("ftfi-pipe-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Pcg::seed(13);
+    let mesh = sphere_mesh(6, 8, 0.0, &mut rng);
+    let off = dir.join("m.off");
+    std::fs::write(&off, mesh.to_off()).unwrap();
+    let back = Mesh::from_off(&std::fs::read_to_string(&off).unwrap()).unwrap();
+    assert_eq!(back.n_vertices(), mesh.n_vertices());
+
+    let cfg_path = dir.join("server.cfg");
+    std::fs::write(&cfg_path, "[server]\nbatch_size = 4\n").unwrap();
+    let cfg = ftfi::config::Config::load(cfg_path.to_str().unwrap()).unwrap();
+    assert_eq!(ftfi::config::ServerConfig::from_config(&cfg).batch_size, 4);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,117 @@
+//! Integration tests over the AOT → PJRT boundary: require the artifacts
+//! built by `make artifacts` (skipped with a clear message otherwise) and
+//! exercise the full python-compiled / rust-executed stack.
+
+use ftfi::ml::rng::Pcg;
+use ftfi::ml::shapes;
+use ftfi::runtime::topvit::{TopVit, TRAIN_BATCH};
+use ftfi::runtime::{Runtime, TensorF32};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("sanity_matmul.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn sanity_matmul_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    assert!(!rt.platform().is_empty());
+    let exe = rt.load_hlo_text(dir.join("sanity_matmul.hlo.txt")).expect("load sanity");
+    let x = TensorF32::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    let y = TensorF32::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+    let out = exe.run(&[x, y]).expect("run");
+    assert_eq!(out.len(), 1);
+    // matmul([[1,2],[3,4]], ones) + 2 = [[5,5],[9,9]]
+    assert_eq!(out[0].data, vec![5.0, 5.0, 9.0, 9.0]);
+}
+
+#[test]
+fn topvit_forward_shapes_and_determinism() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = TopVit::load(&rt, &dir, "topvit_init_masked.bin", &[1, 8], false).unwrap();
+    let mut rng = Pcg::seed(7);
+    let img: Vec<f32> = (0..32 * 32).map(|_| rng.normal() as f32).collect();
+    let logits = model.forward(1, &img).unwrap();
+    assert_eq!(logits.shape, vec![1, 8]);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+    // Determinism across calls.
+    let logits2 = model.forward(1, &img).unwrap();
+    assert_eq!(logits.data, logits2.data);
+    // Batch-8 consistency with batch-1 on the first row.
+    let mut batch = img.clone();
+    for _ in 0..7 {
+        batch.extend((0..32 * 32).map(|_| rng.normal() as f32));
+    }
+    let l8 = model.forward(8, &batch).unwrap();
+    assert_eq!(l8.shape, vec![8, 8]);
+    for (a, b) in logits.data.iter().zip(&l8.data[..8]) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn topvit_masked_and_unmasked_differ() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let masked = TopVit::load(&rt, &dir, "topvit_init_masked.bin", &[1], false).unwrap();
+    let unmasked = TopVit::load(&rt, &dir, "topvit_init_unmasked.bin", &[1], false).unwrap();
+    // Same weights except the 3 mask parameters per layer.
+    assert!(!masked.mask_params().is_empty());
+    for (name, vals) in unmasked.mask_params() {
+        assert!(vals.iter().all(|&v| v == 0.0), "{name} not zeroed");
+    }
+    let mut rng = Pcg::seed(9);
+    let img: Vec<f32> = (0..32 * 32).map(|_| rng.normal() as f32).collect();
+    let a = masked.forward(1, &img).unwrap();
+    let b = unmasked.forward(1, &img).unwrap();
+    let diff: f32 =
+        a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+    assert!(diff > 1e-5, "mask parameters had no effect: {diff}");
+}
+
+#[test]
+fn topvit_train_step_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut model = TopVit::load(&rt, &dir, "topvit_init_masked.bin", &[], true).unwrap();
+    let mut rng = Pcg::seed(11);
+    let data = shapes::dataset(8, &mut rng); // 64 examples
+    let (images, labels) = shapes::pack_batch(&data, 0, TRAIN_BATCH);
+    let first = model.train_step(&images, &labels, 0.01).unwrap();
+    let mut last = first;
+    for _ in 0..15 {
+        last = model.train_step(&images, &labels, 0.01).unwrap();
+    }
+    assert!(last.is_finite() && first.is_finite());
+    assert!(
+        last < first,
+        "loss did not decrease on a fixed batch: {first} -> {last}"
+    );
+}
+
+#[test]
+fn topvit_training_moves_mask_params() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut model = TopVit::load(&rt, &dir, "topvit_init_masked.bin", &[], true).unwrap();
+    let before = model.mask_params();
+    let mut rng = Pcg::seed(12);
+    let data = shapes::dataset(4, &mut rng);
+    for step in 0..5 {
+        let (images, labels) = shapes::pack_batch(&data, step * TRAIN_BATCH, TRAIN_BATCH);
+        model.train_step(&images, &labels, 0.01).unwrap();
+    }
+    let after = model.mask_params();
+    let moved = before
+        .iter()
+        .zip(&after)
+        .any(|((_, a), (_, b))| a.iter().zip(b).any(|(x, y)| (x - y).abs() > 1e-7));
+    assert!(moved, "the 3 learnable RPE parameters never moved");
+}
