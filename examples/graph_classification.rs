@@ -23,8 +23,16 @@ const K_EIG: usize = 6;
 fn features(g: &Graph, use_ftfi: bool, rng: &mut Pcg) -> Vec<f64> {
     let f = FDist::Identity; // SP kernel
     if use_ftfi {
-        let gfi = GraphFieldIntegrator::new(g);
-        lanczos_smallest(g.n(), K_EIG.min(g.n()), |v| gfi.integrate(&f, &to_mat(v)).into_vec(), rng)
+        // Prepare once per graph; the Lanczos iteration then hammers the
+        // cached plans instead of re-planning every matvec.
+        let gfi = GraphFieldIntegrator::try_new(g).expect("connected graph");
+        let prepared = gfi.prepare(&f).expect("plannable kernel");
+        lanczos_smallest(
+            g.n(),
+            K_EIG.min(g.n()),
+            |v| prepared.integrate_vec(v).expect("field length matches graph"),
+            rng,
+        )
     } else {
         let m = f_distance_matrix_graph(g, &f);
         lanczos_smallest(g.n(), K_EIG.min(g.n()), |v| m.matvec(v), rng)
@@ -33,10 +41,6 @@ fn features(g: &Graph, use_ftfi: bool, rng: &mut Pcg) -> Vec<f64> {
     .chain(std::iter::repeat(0.0))
     .take(K_EIG)
     .collect()
-}
-
-fn to_mat(v: &[f64]) -> ftfi::Matrix {
-    ftfi::Matrix::from_vec(v.len(), 1, v.to_vec())
 }
 
 fn evaluate(ds: &GraphDataset, use_ftfi: bool) -> (f64, f64) {

@@ -39,9 +39,9 @@ fn main() {
     // is reused — only the function changed.
     let mut model = RationalModel::new(2, 2);
     fit(&mut model, &data, 300, 0.02);
-    let tfi = TreeFieldIntegrator::new(&tree);
+    let tfi = TreeFieldIntegrator::builder(&tree).build().expect("valid MST");
     let x = ftfi::Matrix::randn(n, 2, &mut rng);
-    let out = tfi.integrate(&model.to_fdist(), &x);
+    let out = tfi.try_integrate(&model.to_fdist(), &x).expect("well-shaped field");
     println!(
         "\nintegrated a 2-channel field with the trained f: ‖out‖_F = {:.3}",
         out.frobenius()

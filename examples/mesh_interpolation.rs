@@ -52,9 +52,13 @@ fn main() {
             }
         }
 
-        // FTFI on the MST.
-        let (tfi, t_pre) = time_once(|| TreeFieldIntegrator::new(&tree));
-        let (pred_ftfi, t_int) = time_once(|| tfi.integrate(&f, &field));
+        // FTFI on the MST (fallible builder + prepared kernel).
+        let (tfi, t_pre) = time_once(|| {
+            TreeFieldIntegrator::builder(&tree).build().expect("valid MST")
+        });
+        let prepared = tfi.prepare_with_channels(&f, 3).expect("plannable kernel");
+        let (pred_ftfi, t_int) =
+            time_once(|| prepared.integrate(&field).expect("well-shaped field"));
         let cos_ftfi = evaluate(&pred_ftfi, &m.normals, &masked);
 
         // Brute graph-field integration (exact graph metric).
@@ -64,8 +68,11 @@ fn main() {
 
         // FRT probabilistic-tree baseline.
         let (emb, t_frt) = time_once(|| frt_tree(&g, &mut rng));
-        let frt_int = TreeFieldIntegrator::new(&emb.tree);
-        let pred_frt = emb.restrict_field(&frt_int.integrate(&f, &emb.lift_field(&field)));
+        let frt_int =
+            TreeFieldIntegrator::builder(&emb.tree).build().expect("valid FRT tree");
+        let pred_frt = emb.restrict_field(
+            &frt_int.try_integrate(&f, &emb.lift_field(&field)).expect("well-shaped field"),
+        );
         let cos_frt = evaluate(&pred_frt, &m.normals, &masked);
 
         println!("mesh {name:<8} (n={n}):");

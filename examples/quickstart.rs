@@ -1,16 +1,18 @@
 //! Quickstart: build a graph, take its MST, integrate a tensor field with
 //! several `f` classes through FTFI, and verify exactness against the
-//! brute-force integrator.
+//! brute-force reference — both sides driven through the unified
+//! `FieldIntegrator` trait, with a prepared handle demonstrating the
+//! "plan once, integrate many" path.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use ftfi::bench_util::time_once;
-use ftfi::ftfi::brute::btfi;
+use ftfi::ftfi::brute::BruteForceIntegrator;
 use ftfi::ftfi::functions::FDist;
-use ftfi::graph::{generators, mst::minimum_spanning_tree};
+use ftfi::graph::{generators, mst::try_minimum_spanning_tree};
 use ftfi::linalg::matrix::Matrix;
 use ftfi::ml::rng::Pcg;
-use ftfi::TreeFieldIntegrator;
+use ftfi::{FieldIntegrator, TreeFieldIntegrator};
 
 fn main() {
     let n = 3000;
@@ -20,16 +22,22 @@ fn main() {
     let graph = generators::path_plus_random_edges(n, n / 2, &mut rng);
     println!("graph: {} vertices, {} edges", graph.n(), graph.m());
 
-    // 2. Approximate the graph metric by its MST metric (§4).
-    let tree = minimum_spanning_tree(&graph);
+    // 2. Approximate the graph metric by its MST metric (§4) — a
+    //    disconnected graph would surface as Err(DisconnectedGraph).
+    let tree = try_minimum_spanning_tree(&graph).expect("generator yields connected graphs");
 
     // 3. Preprocess once — reusable across fields AND functions f.
-    let (tfi, secs) = time_once(|| TreeFieldIntegrator::new(&tree));
+    let (tfi, secs) = time_once(|| TreeFieldIntegrator::builder(&tree).build());
+    let tfi = tfi.expect("valid tree");
     let stats = tfi.stats();
     println!(
         "IntegratorTree built in {secs:.3}s: {} nodes, depth {}, {} leaves",
         stats.nodes, stats.depth, stats.leaves
     );
+
+    // The brute-force reference implements the same FieldIntegrator
+    // trait, so the comparison loop below is backend-agnostic.
+    let brute = BruteForceIntegrator::from_tree(tree.clone());
 
     // 4. Integrate a 3-channel tensor field with different f classes.
     let x = Matrix::randn(n, 3, &mut rng);
@@ -40,9 +48,33 @@ fn main() {
         ("gaussian f(x)=e^{-x²/4}", FDist::gaussian(0.25)),
     ];
     for (name, f) in fs {
-        let (fast, t_fast) = time_once(|| tfi.integrate(&f, &x));
-        let (slow, t_slow) = time_once(|| btfi(&tree, &f, &x));
+        let (fast, t_fast) = time_once(|| FieldIntegrator::integrate(&tfi, &f, &x));
+        let fast = fast.expect("well-shaped field");
+        let (slow, t_slow) = time_once(|| brute.integrate(&f, &x));
+        let slow = slow.expect("well-shaped field");
         let rel = fast.frobenius_diff(&slow) / (1.0 + slow.frobenius());
         println!("{name:<30} FTFI {t_fast:>7.4}s  brute {t_slow:>7.4}s  rel.err {rel:.1e}");
     }
+
+    // 5. Repeated integration with one f: prepare once, integrate many.
+    let f = FDist::inverse_quadratic(1.0);
+    let (prepared, t_prep) = time_once(|| tfi.prepare_with_channels(&f, 3));
+    let prepared = prepared.expect("plannable kernel");
+    let k = 8;
+    let (_, t_rep) = time_once(|| {
+        for _ in 0..k {
+            prepared.integrate(&x).expect("well-shaped field");
+        }
+    });
+    let (_, t_replan) = time_once(|| {
+        for _ in 0..k {
+            tfi.try_integrate(&f, &x).expect("well-shaped field");
+        }
+    });
+    println!(
+        "\nprepared handle ({} plans, {t_prep:.3}s prepare): {k} integrations in {t_rep:.3}s \
+         vs {t_replan:.3}s re-planning ({:.1}x)",
+        prepared.plans_built(),
+        t_replan / t_rep.max(1e-12)
+    );
 }

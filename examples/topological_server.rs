@@ -1,5 +1,6 @@
-//! END-TO-END DRIVER (the EXPERIMENTS.md §E2E run): exercises every layer
-//! of the stack on a real small workload.
+//! END-TO-END DRIVER: exercises every layer of the PJRT stack on a real
+//! small workload. Needs the `pjrt` cargo feature (see Cargo.toml for
+//! the external crates it pulls in).
 //!
 //! 1. Loads the AOT-compiled TopViT-mini (JAX/Pallas → HLO text → PJRT).
 //! 2. Trains it from rust for a few hundred steps on the synthetic-shapes
@@ -10,7 +11,7 @@
 //!    (router → dynamic batcher → PJRT workers), reporting throughput and
 //!    latency percentiles.
 //!
-//! Run: `make artifacts && cargo run --release --example topological_server`
+//! Run: `make artifacts && cargo run --release --features pjrt --example topological_server`
 
 use ftfi::coordinator::{BatchExecutor, BatcherConfig, InferenceServer};
 use ftfi::ml::metrics::accuracy;
@@ -129,6 +130,6 @@ fn main() -> anyhow::Result<()> {
     );
     let _ = std::fs::remove_file("artifacts/topvit_trained.bin");
     server.shutdown();
-    println!("\nE2E driver complete — record these numbers in EXPERIMENTS.md.");
+    println!("\nE2E driver complete — record these numbers in DESIGN.md's measurement log.");
     Ok(())
 }

@@ -3,6 +3,8 @@
 //!
 //! - leaf-threshold `t` sweep (§4.1 says practice wants t ≫ the
 //!   theoretical 6);
+//! - prepared-plan reuse vs per-call re-planning (the §3.1 "build once,
+//!   integrate many" claim, measured);
 //! - cross-multiplier strategy crossover on the same tree (separable vs
 //!   lattice vs Chebyshev vs dense);
 //! - RFF feature count vs error (§A.2.1's variance claim);
@@ -38,9 +40,13 @@ fn leaf_threshold_sweep() {
     let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
     let table = Table::new(&["t", "build (s)", "integrate (ms)", "IT depth"], &[6, 10, 14, 9]);
     for &t in &[4usize, 8, 16, 32, 64, 128, 256] {
-        let (tfi, t_build) =
-            time_once(|| TreeFieldIntegrator::with_options(&tree, t, CrossPolicy::default()));
-        let timing = bench(1, 5, || tfi.integrate(&f, &x));
+        let (tfi, t_build) = time_once(|| {
+            TreeFieldIntegrator::builder(&tree)
+                .leaf_threshold(t)
+                .build()
+                .expect("valid tree")
+        });
+        let timing = bench(1, 5, || tfi.try_integrate(&f, &x).expect("integrate"));
         table.row(&[
             t.to_string(),
             format!("{t_build:.3}"),
@@ -48,6 +54,51 @@ fn leaf_threshold_sweep() {
             tfi.stats().depth.to_string(),
         ]);
     }
+}
+
+/// The headline claim of the prepared-plan API: `prepare(&f)` runs
+/// `make_plan` once per cross block, and k repeated `integrate` calls
+/// reuse the cached plans (Chebyshev expansions above all — the probe
+/// loop dominates re-planning for rational kernels). The prepared
+/// column includes the one-off prepare cost, so the speedup shown is
+/// the honest end-to-end one.
+fn prepared_vs_replan() {
+    banner("Ablation: prepared plans vs per-call re-planning (n = 4000, f = 1/(1+x^2/2))");
+    let mut rng = Pcg::seed(4);
+    let g = generators::path_plus_random_edges(4000, 2000, &mut rng);
+    let tree = minimum_spanning_tree(&g);
+    let tfi = TreeFieldIntegrator::builder(&tree).build().expect("valid tree");
+    let f = FDist::inverse_quadratic(0.5); // cross blocks plan via Chebyshev
+    let x = Matrix::randn(4000, 4, &mut rng);
+    let table = Table::new(
+        &["k", "re-plan (ms)", "prepare+k (ms)", "speedup", "plans built"],
+        &[4, 13, 15, 8, 12],
+    );
+    for &k in &[1usize, 4, 8, 16, 32] {
+        let (_, t_replan) = time_once(|| {
+            for _ in 0..k {
+                tfi.try_integrate(&f, &x).expect("integrate");
+            }
+        });
+        let before = tfi.stats().plan_builds;
+        let (prepared, t_prep) =
+            time_once(|| tfi.prepare_with_channels(&f, 4).expect("prepare"));
+        let (_, t_apply) = time_once(|| {
+            for _ in 0..k {
+                prepared.integrate(&x).expect("integrate");
+            }
+        });
+        let built = tfi.stats().plan_builds - before;
+        let t_prepared = t_prep + t_apply;
+        table.row(&[
+            k.to_string(),
+            format!("{:.1}", t_replan * 1e3),
+            format!("{:.1}", t_prepared * 1e3),
+            format!("{:.2}x", t_replan / t_prepared.max(1e-12)),
+            built.to_string(),
+        ]);
+    }
+    println!("(plans built stays constant in k: planning happens once, at prepare time)");
 }
 
 fn strategy_crossover() {
@@ -118,11 +169,14 @@ fn classify(graphs: &[Graph], labels: &[usize], f: &FDist, seed: u64) -> f64 {
     let feats: Vec<Vec<f64>> = graphs
         .iter()
         .map(|g| {
-            let gfi = ftfi::GraphFieldIntegrator::new(g);
+            // One prepared handle per graph: the Lanczos iteration hits
+            // the same (tree, f) pair dozens of times.
+            let gfi = ftfi::GraphFieldIntegrator::try_new(g).expect("connected graph");
+            let prepared = gfi.prepare(f).expect("plannable f");
             lanczos_smallest(
                 g.n(),
                 6.min(g.n()),
-                |v| gfi.integrate(f, &Matrix::from_vec(v.len(), 1, v.to_vec())).into_vec(),
+                |v| prepared.integrate_vec(v).expect("field length matches graph"),
                 &mut rng,
             )
             .into_iter()
@@ -187,6 +241,7 @@ fn pointcloud_modelnet() {
 
 fn main() {
     leaf_threshold_sweep();
+    prepared_vs_replan();
     strategy_crossover();
     rff_sweep();
     fig9_cubes();

@@ -22,8 +22,9 @@ fn run_point(name: &str, g: &Graph, f: &FDist, table: &Table) {
     let tree = minimum_spanning_tree(g);
     let x = Matrix::randn(n, 1, &mut rng);
 
-    let (tfi, t_pre) = time_once(|| TreeFieldIntegrator::new(&tree));
-    let (fast, t_int) = time_once(|| tfi.integrate(f, &x));
+    let (tfi, t_pre) =
+        time_once(|| TreeFieldIntegrator::builder(&tree).build().expect("valid tree"));
+    let (fast, t_int) = time_once(|| tfi.try_integrate(f, &x).expect("well-shaped field"));
     let (slow, t_brute) = time_once(|| btfi_streaming(&tree, f, &x));
     let rel = fast.frobenius_diff(&slow) / (1.0 + slow.frobenius());
     let speedup = t_brute / (t_pre + t_int);

@@ -60,11 +60,14 @@ fn main() {
 
             // FTFI on the MST (preprocessing = MST + IT build, reused per λ).
             let (tree, t_mst) = time_once(|| minimum_spanning_tree(&g));
-            let (tfi, t_it) = time_once(|| TreeFieldIntegrator::new(&tree));
+            let (tfi, t_it) =
+                time_once(|| TreeFieldIntegrator::builder(&tree).build().expect("valid tree"));
             let (_, c) = best(
                 lambdas
                     .iter()
-                    .map(|&l| (0.0, tfi.integrate(&FDist::inverse_quadratic(l), &field)))
+                    .map(|&l| {
+                        (0.0, tfi.try_integrate(&FDist::inverse_quadratic(l), &field).expect("field"))
+                    })
                     .collect(),
             );
             table.row(&[name.clone(), n.to_string(), "FTFI".into(), format!("{:.3}", t_mst + t_it), format!("{c:.4}")]);
@@ -101,24 +104,26 @@ fn main() {
 
             // FRT + Bartal probabilistic trees (preprocess = embedding).
             let (emb, t_frt) = time_once(|| frt_tree(&g, &mut rng));
-            let frt_int = TreeFieldIntegrator::new(&emb.tree);
+            let frt_int =
+                TreeFieldIntegrator::builder(&emb.tree).build().expect("valid tree");
             let (_, c_frt) = best(
                 lambdas
                     .iter()
                     .map(|&l| {
-                        (0.0, emb.restrict_field(&frt_int.integrate(&FDist::inverse_quadratic(l), &emb.lift_field(&field))))
+                        (0.0, emb.restrict_field(&frt_int.try_integrate(&FDist::inverse_quadratic(l), &emb.lift_field(&field)).expect("field")))
                     })
                     .collect(),
             );
             table.row(&[name.clone(), n.to_string(), "FRT".into(), format!("{t_frt:.3}"), format!("{c_frt:.4}")]);
 
             let (emb_b, t_bar) = time_once(|| bartal_tree(&g, &mut rng));
-            let bar_int = TreeFieldIntegrator::new(&emb_b.tree);
+            let bar_int =
+                TreeFieldIntegrator::builder(&emb_b.tree).build().expect("valid tree");
             let (_, c_bar) = best(
                 lambdas
                     .iter()
                     .map(|&l| {
-                        (0.0, emb_b.restrict_field(&bar_int.integrate(&FDist::inverse_quadratic(l), &emb_b.lift_field(&field))))
+                        (0.0, emb_b.restrict_field(&bar_int.try_integrate(&FDist::inverse_quadratic(l), &emb_b.lift_field(&field)).expect("field")))
                     })
                     .collect(),
             );

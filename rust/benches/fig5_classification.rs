@@ -22,11 +22,12 @@ const K_EIG: usize = 6;
 fn features(g: &Graph, use_ftfi: bool, rng: &mut Pcg) -> Vec<f64> {
     let f = FDist::Identity;
     let eig = if use_ftfi {
-        let gfi = GraphFieldIntegrator::new(g);
+        let gfi = GraphFieldIntegrator::try_new(g).expect("connected graph");
+        let prepared = gfi.prepare(&f).expect("plannable kernel");
         lanczos_smallest(
             g.n(),
             K_EIG.min(g.n()),
-            |v| gfi.integrate(&f, &ftfi::Matrix::from_vec(v.len(), 1, v.to_vec())).into_vec(),
+            |v| prepared.integrate_vec(v).expect("field length matches graph"),
             rng,
         )
     } else {

@@ -74,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     }
     let (dm, ds) = ftfi::ml::metrics::mean_std(&deltas);
     println!(
-        "\nΔacc = {dm:+.3} ± {ds:.3} over 3 seeds (paper: +1.0–1.5% for synced masking\n         at ImageNet/ViT-B scale, +7% at ViT-L; see EXPERIMENTS.md §Table 1)"
+        "\nΔacc = {dm:+.3} ± {ds:.3} over 3 seeds (paper: +1.0–1.5% for synced masking\n         at ImageNet/ViT-B scale, +7% at ViT-L; see DESIGN.md measurement log)"
     );
     Ok(())
 }

@@ -52,14 +52,12 @@ fn main() {
             ds.graphs
                 .iter()
                 .map(|g| {
-                    let gfi = GraphFieldIntegrator::new(g);
+                    let gfi = GraphFieldIntegrator::try_new(g).expect("connected graph");
+                    let prepared = gfi.prepare(&f).expect("plannable kernel");
                     lanczos_smallest(
                         g.n(),
                         K_EIG.min(g.n()),
-                        |v| {
-                            gfi.integrate(&f, &ftfi::Matrix::from_vec(v.len(), 1, v.to_vec()))
-                                .into_vec()
-                        },
+                        |v| prepared.integrate_vec(v).expect("field length matches graph"),
                         &mut rng,
                     )
                 })

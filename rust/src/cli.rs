@@ -1,11 +1,20 @@
 //! Minimal CLI argument parsing (offline — no clap): positional
-//! subcommands plus `--key value` / `--flag` options.
+//! subcommands plus `--key value` / `--key=value` / `--flag` options.
 //!
-//! Convention: a `--flag` with no value consumes the next token unless it
-//! starts with `--`, so boolean flags should either be written `--flag
-//! true` or placed after all positionals.
+//! Conventions:
+//!
+//! - `--key=value` always binds `value` to `key` (the safe spelling).
+//! - Known boolean flags ([`BOOL_FLAGS`]: `--verbose`, `--quiet`,
+//!   `--unmasked`) are value-free and never consume the next token —
+//!   `serve --verbose input.txt` keeps `input.txt` positional.
+//! - Any other `--flag` consumes the next token as its value unless that
+//!   token starts with `--`.
 
 use std::collections::HashMap;
+
+/// Flags that never take a value: `--verbose input.txt` must not swallow
+/// the positional. Extend via [`Args::parse_with_bool_flags`].
+pub const BOOL_FLAGS: &[&str] = &["verbose", "quiet", "unmasked"];
 
 /// Parsed command line.
 #[derive(Debug, Default)]
@@ -16,12 +25,31 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// Parse from an iterator of arguments (excluding argv[0]) with the
+    /// default [`BOOL_FLAGS`] set.
     pub fn parse(args: impl Iterator<Item = String>) -> Args {
+        Self::parse_with_bool_flags(args, BOOL_FLAGS)
+    }
+
+    /// Parse with an explicit set of value-free boolean flags.
+    pub fn parse_with_bool_flags(
+        args: impl Iterator<Item = String>,
+        bool_flags: &[&str],
+    ) -> Args {
         let mut out = Args::default();
         let mut it = args.peekable();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
+                // `--key=value` binds unambiguously.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                // Known boolean flags never consume the next token.
+                if bool_flags.contains(&key) {
+                    out.options.insert(key.to_string(), "true".to_string());
+                    continue;
+                }
                 let val = match it.peek() {
                     Some(v) if !v.starts_with("--") => it.next().unwrap(),
                     _ => "true".to_string(),
@@ -92,5 +120,44 @@ mod tests {
     fn empty_args() {
         let a = parse("");
         assert!(a.command.is_none());
+    }
+
+    #[test]
+    fn bool_flags_do_not_swallow_positionals() {
+        // The historical footgun: `--verbose input.txt` used to bind
+        // "input.txt" as the value of --verbose.
+        let a = parse("serve --verbose input.txt");
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positional, vec!["input.txt"]);
+        let b = parse("train --quiet data.bin --unmasked out.bin");
+        assert!(b.get_flag("quiet"));
+        assert!(b.get_flag("unmasked"));
+        assert_eq!(b.positional, vec!["data.bin", "out.bin"]);
+    }
+
+    #[test]
+    fn equals_syntax_binds_values() {
+        let a = parse("integrate --n=5000 --f=exp --lambda=0.25 file.txt");
+        assert_eq!(a.get_usize("n", 0), 5000);
+        assert_eq!(a.get_str("f", ""), "exp");
+        assert!((a.get_f64("lambda", 0.0) - 0.25).abs() < 1e-12);
+        assert_eq!(a.positional, vec!["file.txt"]);
+        // `=` wins even for known boolean flags.
+        let b = parse("serve --verbose=false");
+        assert!(!b.get_flag("verbose"));
+        // Empty value after `=` is preserved as empty.
+        let c = parse("run --name= x");
+        assert_eq!(c.get("name"), Some(""));
+        assert_eq!(c.positional, vec!["x"]);
+    }
+
+    #[test]
+    fn non_bool_flags_still_consume_values() {
+        let a = parse("integrate --n 100 --f exp");
+        assert_eq!(a.get_usize("n", 0), 100);
+        assert_eq!(a.get_str("f", ""), "exp");
+        // Trailing value-less flag defaults to "true".
+        let b = parse("integrate --check");
+        assert!(b.get_flag("check"));
     }
 }

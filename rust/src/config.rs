@@ -12,6 +12,8 @@
 //! artifact = "artifacts/topvit_b8.hlo.txt"
 //! ```
 
+use crate::ftfi::cordial::{CrossPolicy, Strategy};
+use crate::ftfi::FtfiError;
 use std::collections::HashMap;
 
 /// Parsed config: `section.key -> value` strings.
@@ -126,6 +128,91 @@ impl ServerConfig {
     }
 }
 
+/// Typed integrator configuration (`[integrator]` section): everything
+/// the `TreeFieldIntegrator` builder needs, parsed fallibly into a
+/// [`CrossPolicy`].
+#[derive(Debug, Clone)]
+pub struct IntegratorConfig {
+    /// IntegratorTree leaf threshold (`t ≥ 2`).
+    pub leaf_threshold: usize,
+    /// Dense-multiply cutoff `a·b`.
+    pub dense_cutoff: usize,
+    /// Chebyshev probe tolerance.
+    pub cheb_tol: f64,
+    /// Maximum Chebyshev rank.
+    pub cheb_max_rank: usize,
+    /// Maximum lattice points for the Hankel path.
+    pub lattice_max_points: usize,
+    /// Optional forced strategy name (`dense`, `separable`, `lattice`,
+    /// `rational-sum`, `cauchy`, `vandermonde`, `chebyshev`).
+    pub force: Option<String>,
+}
+
+impl Default for IntegratorConfig {
+    fn default() -> Self {
+        let p = CrossPolicy::default();
+        IntegratorConfig {
+            leaf_threshold: 32,
+            dense_cutoff: p.dense_cutoff,
+            cheb_tol: p.cheb_tol,
+            cheb_max_rank: p.cheb_max_rank,
+            lattice_max_points: p.lattice_max_points,
+            force: None,
+        }
+    }
+}
+
+/// Parse a strategy name (as written in config files / CLI flags).
+pub fn parse_strategy(name: &str) -> Result<Strategy, FtfiError> {
+    match name.to_ascii_lowercase().as_str() {
+        "dense" => Ok(Strategy::Dense),
+        "separable" => Ok(Strategy::Separable),
+        "lattice" => Ok(Strategy::Lattice),
+        "rational-sum" | "rational" => Ok(Strategy::RationalSum),
+        "cauchy" => Ok(Strategy::Cauchy),
+        "vandermonde" => Ok(Strategy::Vandermonde),
+        "chebyshev" | "cheb" => Ok(Strategy::Chebyshev),
+        other => Err(FtfiError::InvalidInput(format!(
+            "unknown strategy {other:?} (dense|separable|lattice|rational-sum|cauchy|\
+             vandermonde|chebyshev)"
+        ))),
+    }
+}
+
+impl IntegratorConfig {
+    pub fn from_config(c: &Config) -> Self {
+        let d = IntegratorConfig::default();
+        IntegratorConfig {
+            leaf_threshold: c.get_usize("integrator.leaf_threshold", d.leaf_threshold),
+            dense_cutoff: c.get_usize("integrator.dense_cutoff", d.dense_cutoff),
+            cheb_tol: c.get_f64("integrator.cheb_tol", d.cheb_tol),
+            cheb_max_rank: c.get_usize("integrator.cheb_max_rank", d.cheb_max_rank),
+            lattice_max_points: c
+                .get_usize("integrator.lattice_max_points", d.lattice_max_points),
+            force: c.get("integrator.force").map(|s| s.to_string()),
+        }
+    }
+
+    /// Materialise the [`CrossPolicy`]; fails on an unknown forced
+    /// strategy name instead of silently ignoring it.
+    pub fn to_policy(&self) -> Result<CrossPolicy, FtfiError> {
+        let force = match &self.force {
+            Some(name) => Some(parse_strategy(name)?),
+            None => None,
+        };
+        let policy = CrossPolicy {
+            dense_cutoff: self.dense_cutoff,
+            lattice_max_points: self.lattice_max_points,
+            cheb_tol: self.cheb_tol,
+            cheb_max_rank: self.cheb_max_rank,
+            force,
+            ..CrossPolicy::default()
+        };
+        policy.validate()?;
+        Ok(policy)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,5 +250,27 @@ mod tests {
         let mut c = Config::parse("[server]\nbatch_size = 4\n").unwrap();
         c.set("server.batch_size", "32");
         assert_eq!(ServerConfig::from_config(&c).batch_size, 32);
+    }
+
+    #[test]
+    fn integrator_config_roundtrip() {
+        let c = Config::parse(
+            "[integrator]\nleaf_threshold = 16\ndense_cutoff = 1024\nforce = chebyshev\n",
+        )
+        .unwrap();
+        let ic = IntegratorConfig::from_config(&c);
+        assert_eq!(ic.leaf_threshold, 16);
+        assert_eq!(ic.dense_cutoff, 1024);
+        let policy = ic.to_policy().unwrap();
+        assert_eq!(policy.force, Some(Strategy::Chebyshev));
+        assert_eq!(policy.dense_cutoff, 1024);
+    }
+
+    #[test]
+    fn unknown_strategy_is_a_typed_error() {
+        let ic = IntegratorConfig { force: Some("warp-drive".into()), ..Default::default() };
+        assert!(matches!(ic.to_policy(), Err(FtfiError::InvalidInput(_))));
+        assert!(parse_strategy("rational-sum").is_ok());
+        assert!(parse_strategy("Dense").is_ok());
     }
 }

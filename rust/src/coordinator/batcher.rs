@@ -18,6 +18,20 @@ pub trait BatchExecutor: 'static {
     /// Run `inputs.len() ≤ max_batch` flattened inputs; must return one
     /// output per input (padding handled inside).
     fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String>;
+
+    /// Per-request execution: one `Result` per input, so a malformed
+    /// request can fail alone without poisoning its batch-mates. The
+    /// default fans a batch-level [`BatchExecutor::execute`] error out
+    /// to every request (the only option for executors — like the
+    /// fixed-shape PJRT model runner — that genuinely fail as a unit);
+    /// executors that can isolate failures (the field executors)
+    /// override it.
+    fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
+        match self.execute(inputs) {
+            Ok(outputs) => outputs.into_iter().map(Ok).collect(),
+            Err(e) => inputs.iter().map(|_| Err(e.clone())).collect(),
+        }
+    }
 }
 
 /// Batcher policy.
@@ -74,7 +88,9 @@ impl Batcher {
         Some(batch)
     }
 
-    /// Run one batch through the executor and fan responses out.
+    /// Run one batch through the executor and fan responses out —
+    /// per request, so one bad request cannot fail its batch-mates
+    /// unless the executor genuinely fails as a unit.
     pub fn dispatch(
         &self,
         batch: Vec<PendingRequest>,
@@ -83,22 +99,15 @@ impl Batcher {
     ) {
         let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
         let t0 = Instant::now();
-        let result = exec.execute(&inputs);
+        let results = exec.execute_each(&inputs);
         let exec_secs = t0.elapsed().as_secs_f64();
         metrics.record_batch(batch.len(), exec_secs);
-        match result {
-            Ok(outputs) => {
-                debug_assert_eq!(outputs.len(), batch.len());
-                for (req, out) in batch.into_iter().zip(outputs) {
-                    metrics.record_latency(req.enqueued_at.elapsed().as_secs_f64());
-                    let _ = req.respond.send(Ok(out));
-                }
+        debug_assert_eq!(results.len(), batch.len());
+        for (req, res) in batch.into_iter().zip(results) {
+            if res.is_ok() {
+                metrics.record_latency(req.enqueued_at.elapsed().as_secs_f64());
             }
-            Err(e) => {
-                for req in batch {
-                    let _ = req.respond.send(Err(e.clone()));
-                }
-            }
+            let _ = req.respond.send(res);
         }
     }
 }

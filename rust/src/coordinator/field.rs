@@ -1,0 +1,219 @@
+//! Field-integration serving: a [`BatchExecutor`] that answers
+//! `Σ_u f(dist(v,u))·x[u]` requests over a fixed metric, plugging the
+//! FTFI stack into the coordinator's queue/batcher/worker machinery.
+//!
+//! Two flavours:
+//!
+//! - [`FieldExecutor`] runs any [`FieldIntegrator`] backend (tree,
+//!   MST-of-graph, brute reference) — one planning pass per request.
+//! - [`PreparedFieldExecutor`] owns a [`TreeFieldIntegrator`] plus the
+//!   [`PreparedPlans`] for one `f`, so every request reuses the frozen
+//!   cross-block plans — the "build once, integrate any number of
+//!   fields" serving pattern of §3.1/§3.2.
+//!
+//! Error contract: every [`FtfiError`] (shape mismatches above all) is
+//! stringified into a per-request `Err(String)` via
+//! [`BatchExecutor::execute_each`], which the batcher delivers as
+//! `ServerError::Exec` to that request alone — a malformed request
+//! fails its own response without poisoning its batch-mates, and can
+//! never panic a worker thread.
+
+use super::batcher::BatchExecutor;
+use crate::ftfi::functions::FDist;
+use crate::ftfi::{FieldIntegrator, FtfiError, TreeFieldIntegrator};
+use crate::linalg::matrix::Matrix;
+use crate::tree::integrator_tree::PreparedPlans;
+
+/// Decode one flattened request into an `n×d` field (row-major, rows
+/// indexed by vertex id). The request length must be a non-zero
+/// multiple of `n`.
+fn decode(input: &[f32], n: usize) -> Result<Matrix, FtfiError> {
+    if input.is_empty() || n == 0 || input.len() % n != 0 {
+        return Err(FtfiError::ShapeMismatch { expected: n, got: input.len() });
+    }
+    let d = input.len() / n;
+    Ok(Matrix::from_vec(n, d, input.iter().map(|&v| v as f64).collect()))
+}
+
+fn encode(m: Matrix) -> Vec<f32> {
+    m.data().iter().map(|&v| v as f32).collect()
+}
+
+/// Serve integrations of a fixed `f` through any [`FieldIntegrator`]
+/// backend.
+pub struct FieldExecutor<I: FieldIntegrator + 'static> {
+    integrator: I,
+    f: FDist,
+    max_batch: usize,
+}
+
+impl<I: FieldIntegrator + 'static> FieldExecutor<I> {
+    pub fn new(integrator: I, f: FDist, max_batch: usize) -> Self {
+        FieldExecutor { integrator, f, max_batch: max_batch.max(1) }
+    }
+}
+
+impl<I: FieldIntegrator + 'static> FieldExecutor<I> {
+    fn run_one(&self, input: &[f32]) -> Result<Vec<f32>, String> {
+        let x = decode(input, self.integrator.n()).map_err(|e| e.to_string())?;
+        let out = self.integrator.integrate(&self.f, &x).map_err(|e| e.to_string())?;
+        Ok(encode(out))
+    }
+}
+
+impl<I: FieldIntegrator + 'static> BatchExecutor for FieldExecutor<I> {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        inputs.iter().map(|input| self.run_one(input)).collect()
+    }
+
+    /// Requests fail independently: a malformed request gets its own
+    /// `Err` while its batch-mates still succeed.
+    fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
+        inputs.iter().map(|input| self.run_one(input)).collect()
+    }
+}
+
+/// Serve integrations of a fixed `f` with prepared plans: the Chebyshev
+/// expansions / lattice FFT tables / separable decompositions are built
+/// once at construction and reused for every request.
+pub struct PreparedFieldExecutor {
+    tfi: TreeFieldIntegrator,
+    plans: PreparedPlans,
+    max_batch: usize,
+}
+
+impl PreparedFieldExecutor {
+    /// Freeze `f` (with a `channels` width hint for the planner) into a
+    /// serving executor. Fails with a typed [`FtfiError`] — e.g. a
+    /// forced-but-inapplicable strategy in the integrator's policy —
+    /// instead of panicking inside a worker thread later.
+    pub fn new(
+        tfi: TreeFieldIntegrator,
+        f: &FDist,
+        channels: usize,
+        max_batch: usize,
+    ) -> Result<Self, FtfiError> {
+        let plans = tfi.prepare_plans(f, channels)?;
+        Ok(PreparedFieldExecutor { tfi, plans, max_batch: max_batch.max(1) })
+    }
+
+    /// Number of vertices a request row must cover.
+    pub fn n(&self) -> usize {
+        self.tfi.n()
+    }
+
+    fn run_one(&self, input: &[f32]) -> Result<Vec<f32>, String> {
+        let x = decode(input, self.tfi.n()).map_err(|e| e.to_string())?;
+        let out = self.tfi.integrate_prepared(&x, &self.plans).map_err(|e| e.to_string())?;
+        Ok(encode(out))
+    }
+}
+
+impl BatchExecutor for PreparedFieldExecutor {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        inputs.iter().map(|input| self.run_one(input)).collect()
+    }
+
+    /// Requests fail independently: a malformed request gets its own
+    /// `Err` while its batch-mates still succeed.
+    fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
+        inputs.iter().map(|input| self.run_one(input)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, InferenceServer, ServerError};
+    use crate::ftfi::brute::btfi;
+    use crate::graph::generators;
+    use crate::ml::rng::Pcg;
+    use std::time::Duration;
+
+    #[test]
+    fn prepared_executor_serves_correct_integrals() {
+        let mut rng = Pcg::seed(1);
+        let tree = generators::random_tree(40, 0.2, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+        let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
+        let exec = PreparedFieldExecutor::new(tfi, &f, 1, 8).unwrap();
+        let x: Vec<f32> = (0..40).map(|i| (i as f32 * 0.1).sin()).collect();
+        let out = exec.execute(&[x.clone()]).unwrap();
+        let xm = Matrix::from_vec(40, 1, x.iter().map(|&v| v as f64).collect());
+        let want = btfi(&tree, &f, &xm);
+        for (got, w) in out[0].iter().zip(want.data()) {
+            assert!((*got as f64 - w).abs() < 1e-4 * (1.0 + w.abs()), "{got} vs {w}");
+        }
+    }
+
+    #[test]
+    fn malformed_request_maps_to_exec_error_without_killing_workers() {
+        let mut rng = Pcg::seed(2);
+        let tree = generators::random_tree(24, 0.2, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let server = InferenceServer::start(
+            vec![Box::new(move || {
+                let tfi = TreeFieldIntegrator::builder(&tree).build().expect("valid tree");
+                Box::new(PreparedFieldExecutor::new(tfi, &f, 1, 4).expect("plannable f"))
+                    as Box<dyn BatchExecutor>
+            })],
+            BatcherConfig { batch_size: 1, batch_timeout: Duration::from_millis(1) },
+            64,
+        );
+        // Wrong-length field: must come back as ServerError::Exec (the
+        // FtfiError::ShapeMismatch string), not crash the worker.
+        let bad = server.submit_blocking(vec![1.0f32; 7]).unwrap();
+        match bad.wait() {
+            Err(ServerError::Exec(msg)) => {
+                assert!(msg.contains("shape mismatch"), "unexpected message: {msg}")
+            }
+            other => panic!("expected Exec error, got {other:?}"),
+        }
+        // The worker survived: a well-formed request still succeeds.
+        let good = server.submit_blocking(vec![1.0f32; 24]).unwrap();
+        let out = good.wait().expect("worker should still be alive");
+        assert_eq!(out.len(), 24);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_fails_alone_inside_a_batch() {
+        let mut rng = Pcg::seed(4);
+        let tree = generators::random_tree(16, 0.2, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
+        let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
+        let exec = PreparedFieldExecutor::new(tfi, &f, 1, 4).unwrap();
+        let good = vec![1.0f32; 16];
+        let bad = vec![1.0f32; 7];
+        let results = exec.execute_each(&[good.clone(), bad, good]);
+        assert_eq!(results.len(), 3);
+        assert!(results[0].is_ok());
+        match &results[1] {
+            Err(e) => assert!(e.contains("shape mismatch"), "{e}"),
+            Ok(_) => panic!("malformed request must fail"),
+        }
+        assert!(results[2].is_ok(), "batch-mates must not be poisoned");
+    }
+
+    #[test]
+    fn generic_executor_works_over_any_backend() {
+        use crate::ftfi::GraphFieldIntegrator;
+        let mut rng = Pcg::seed(3);
+        let g = generators::path_plus_random_edges(30, 15, &mut rng);
+        let gfi = GraphFieldIntegrator::try_new(&g).unwrap();
+        let exec = FieldExecutor::new(gfi, FDist::Identity, 4);
+        let x = vec![1.0f32; 30];
+        let out = exec.execute(&[x]).unwrap();
+        assert_eq!(out[0].len(), 30);
+        // Empty input is a shape error, not a panic.
+        assert!(exec.execute(&[vec![]]).is_err());
+    }
+}

@@ -14,9 +14,11 @@
 //! the PJRT-backed [`crate::runtime::Executable`].
 
 pub mod batcher;
+pub mod field;
 pub mod metrics;
 pub mod server;
 
 pub use batcher::{BatchExecutor, Batcher, BatcherConfig};
+pub use field::{FieldExecutor, PreparedFieldExecutor};
 pub use metrics::MetricsRegistry;
 pub use server::{InferenceServer, ServerError};

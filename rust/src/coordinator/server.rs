@@ -31,6 +31,15 @@ impl std::fmt::Display for ServerError {
 
 impl std::error::Error for ServerError {}
 
+/// The server boundary for the FTFI stack: typed integration errors
+/// become execution failures on the response path — a malformed request
+/// fails its own response without taking a worker thread down.
+impl From<crate::ftfi::FtfiError> for ServerError {
+    fn from(e: crate::ftfi::FtfiError) -> Self {
+        ServerError::Exec(e.to_string())
+    }
+}
+
 /// A running inference server. Dropping it (or calling
 /// [`InferenceServer::shutdown`]) drains the queue and joins the threads.
 pub struct InferenceServer {
@@ -193,6 +202,15 @@ mod tests {
 
     fn cfg() -> BatcherConfig {
         BatcherConfig { batch_size: 4, batch_timeout: Duration::from_millis(1) }
+    }
+
+    #[test]
+    fn ftfi_error_converts_to_exec() {
+        let e: ServerError = crate::ftfi::FtfiError::DisconnectedGraph.into();
+        match e {
+            ServerError::Exec(msg) => assert!(msg.contains("disconnected"), "{msg}"),
+            other => panic!("expected Exec, got {other:?}"),
+        }
     }
 
     #[test]

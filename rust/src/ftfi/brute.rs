@@ -60,6 +60,65 @@ pub fn btfi_streaming(tree: &Tree, f: &FDist, x: &Matrix) -> Matrix {
     out
 }
 
+/// Brute-force reference backend behind the unified
+/// [`FieldIntegrator`](crate::ftfi::FieldIntegrator) trait: stores the
+/// raw (not `f`-transformed) all-pairs distance matrix once, then
+/// evaluates `f` per entry at integration time — `O(N²·d)` per call,
+/// any `f`, any metric. The correctness oracle the fast backends are
+/// tested against.
+pub struct BruteForceIntegrator {
+    n: usize,
+    /// Row-major `n×n` raw distances.
+    dmat: Vec<f64>,
+}
+
+impl BruteForceIntegrator {
+    /// Reference integrator over a tree metric.
+    pub fn from_tree(tree: Tree) -> Self {
+        let n = tree.n();
+        BruteForceIntegrator { n, dmat: tree.all_pairs() }
+    }
+
+    /// Reference integrator over a graph's shortest-path metric.
+    pub fn from_graph(g: &Graph) -> Self {
+        BruteForceIntegrator { n: g.n(), dmat: all_pairs(g) }
+    }
+}
+
+impl crate::ftfi::FieldIntegrator for BruteForceIntegrator {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn integrate(
+        &self,
+        f: &FDist,
+        x: &Matrix,
+    ) -> Result<Matrix, crate::ftfi::FtfiError> {
+        if x.rows() != self.n {
+            return Err(crate::ftfi::FtfiError::ShapeMismatch {
+                expected: self.n,
+                got: x.rows(),
+            });
+        }
+        let d = x.cols();
+        let mut out = Matrix::zeros(self.n, d);
+        for i in 0..self.n {
+            let orow = out.row_mut(i);
+            for j in 0..self.n {
+                let c = f.eval(self.dmat[i * self.n + j]);
+                if c == 0.0 {
+                    continue;
+                }
+                for (o, &v) in orow.iter_mut().zip(x.row(j)) {
+                    *o += c * v;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
 /// BTFI with separated phases, for benchmarking preprocessing vs
 /// integration separately (Fig. 3 reports both).
 pub struct BruteTreeIntegrator {
@@ -132,6 +191,22 @@ mod tests {
         let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
         let x = Matrix::randn(60, 2, &mut rng);
         assert!(btfi_streaming(&t, &f, &x).max_abs_diff(&btfi(&t, &f, &x)) < 1e-10);
+    }
+
+    #[test]
+    fn brute_force_integrator_matches_free_functions() {
+        use crate::ftfi::FieldIntegrator;
+        let mut rng = Pcg::seed(4);
+        let t = generators::random_tree(30, 0.2, 1.0, &mut rng);
+        let f = FDist::inverse_quadratic(0.3);
+        let x = Matrix::randn(30, 2, &mut rng);
+        let bi = BruteForceIntegrator::from_tree(t.clone());
+        assert!(bi.integrate(&f, &x).unwrap().max_abs_diff(&btfi(&t, &f, &x)) < 1e-12);
+        let g = t.to_graph();
+        let bg = BruteForceIntegrator::from_graph(&g);
+        assert!(bg.integrate(&f, &x).unwrap().max_abs_diff(&bgfi(&g, &f, &x)) < 1e-12);
+        // Shape mismatch is a typed error, not a panic.
+        assert!(bi.integrate(&f, &Matrix::zeros(29, 1)).is_err());
     }
 
     #[test]

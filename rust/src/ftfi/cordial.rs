@@ -4,10 +4,18 @@
 //! a cost model arbitrates between the structured paths and the dense
 //! fallback (dense wins for small blocks — the same reason the paper
 //! raises the leaf threshold `t` above the theoretical 6, §4.1).
+//!
+//! Planning and execution are split: [`try_make_plan`] does all the
+//! expensive, input-dependent work (Chebyshev probe loops, lattice
+//! detection + FFT tables, separable decompositions) and returns a
+//! [`Plan`] that owns those artifacts; [`apply_plan`] is the cheap,
+//! panic-free execution step. The prepared-integrator API caches `Plan`s
+//! across calls — see `DESIGN.md` §Lifecycle.
 
 use crate::ftfi::cauchy::cauchy_cross_apply;
 use crate::ftfi::chebyshev::{adaptive_expansion, ChebExpansion};
-use crate::ftfi::functions::FDist;
+use crate::ftfi::error::FtfiError;
+use crate::ftfi::functions::{FDist, Separable};
 use crate::ftfi::hankel::{detect_lattice, LatticePlan};
 use crate::ftfi::outer::apply_separable;
 use crate::ftfi::rational::{rational_cross_apply, RationalOpts};
@@ -47,7 +55,8 @@ pub struct CrossPolicy {
     pub cheb_tol: f64,
     /// Maximum Chebyshev rank before falling back.
     pub cheb_max_rank: usize,
-    /// Force one strategy (ablation benches); panics if inapplicable.
+    /// Force one strategy (ablation benches); planning returns
+    /// [`FtfiError::StrategyInapplicable`] if it does not apply.
     pub force: Option<Strategy>,
 }
 
@@ -61,6 +70,30 @@ impl Default for CrossPolicy {
             cheb_max_rank: 128,
             force: None,
         }
+    }
+}
+
+impl CrossPolicy {
+    /// Validate the policy knobs (called by the integrator builders).
+    pub fn validate(&self) -> Result<(), FtfiError> {
+        if !self.cheb_tol.is_finite() || self.cheb_tol <= 0.0 {
+            return Err(FtfiError::InvalidInput(format!(
+                "cheb_tol must be a positive finite number, got {}",
+                self.cheb_tol
+            )));
+        }
+        if self.cheb_max_rank < 2 {
+            return Err(FtfiError::InvalidInput(format!(
+                "cheb_max_rank must be ≥ 2, got {}",
+                self.cheb_max_rank
+            )));
+        }
+        if self.lattice_max_points == 0 {
+            return Err(FtfiError::InvalidInput(
+                "lattice_max_points must be ≥ 1".to_string(),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -84,17 +117,19 @@ pub fn cross_apply_dense(f: &FDist, xs: &[f64], ys: &[f64], v: &Matrix) -> Matri
     out
 }
 
-/// An execution plan: the chosen strategy together with any expensive
-/// artifacts built while choosing it (the Chebyshev expansion in
-/// particular — building it twice was the top hot-spot of the first perf
-/// pass, see EXPERIMENTS.md §Perf).
+/// An execution plan: the chosen strategy together with every expensive
+/// artifact built while choosing it — the Chebyshev expansion, the
+/// lattice FFT table, the separable decomposition, the kernel
+/// parameters. Building these twice was the top hot-spot of the first
+/// perf pass (see `DESIGN.md` §Numerics), and owning them here is what
+/// makes plans cacheable across repeated integrations.
 pub enum Plan {
     Dense,
-    Separable,
-    Lattice(f64),
-    RationalSum,
-    Cauchy,
-    Vandermonde(f64),
+    Separable(Separable),
+    Lattice(LatticePlan),
+    RationalSum { num: Vec<f64>, den: Vec<f64> },
+    Cauchy { lambda: f64, c: f64 },
+    Vandermonde { u: f64, v: f64, w: f64, delta: f64 },
     Chebyshev(ChebExpansion),
 }
 
@@ -102,52 +137,102 @@ impl Plan {
     pub fn strategy(&self) -> Strategy {
         match self {
             Plan::Dense => Strategy::Dense,
-            Plan::Separable => Strategy::Separable,
+            Plan::Separable(_) => Strategy::Separable,
             Plan::Lattice(_) => Strategy::Lattice,
-            Plan::RationalSum => Strategy::RationalSum,
-            Plan::Cauchy => Strategy::Cauchy,
-            Plan::Vandermonde(_) => Strategy::Vandermonde,
+            Plan::RationalSum { .. } => Strategy::RationalSum,
+            Plan::Cauchy { .. } => Strategy::Cauchy,
+            Plan::Vandermonde { .. } => Strategy::Vandermonde,
             Plan::Chebyshev(_) => Strategy::Chebyshev,
         }
     }
 }
 
-/// Build the execution plan for the given shapes/values.
-pub fn make_plan(f: &FDist, xs: &[f64], ys: &[f64], d: usize, policy: &CrossPolicy) -> Plan {
+/// Build the execution plan for the given shapes/values. Returns
+/// [`FtfiError::StrategyInapplicable`] when a forced strategy does not
+/// apply to `f` / the distance structure; with `force: None` the
+/// automatic selection always succeeds (dense is the universal
+/// fallback).
+pub fn try_make_plan(
+    f: &FDist,
+    xs: &[f64],
+    ys: &[f64],
+    d: usize,
+    policy: &CrossPolicy,
+) -> Result<Plan, FtfiError> {
     if let Some(s) = policy.force {
         return match s {
-            Strategy::Dense => Plan::Dense,
-            Strategy::Separable => Plan::Separable,
-            Strategy::Lattice => {
-                let delta = detect_lattice(
-                    xs.iter().chain(ys.iter()).copied(),
-                    policy.lattice_max_points,
-                )
-                .expect("forced lattice strategy without a lattice");
-                Plan::Lattice(delta)
-            }
-            Strategy::RationalSum => Plan::RationalSum,
-            Strategy::Cauchy => Plan::Cauchy,
-            Strategy::Vandermonde => {
-                let delta = detect_lattice(ys.iter().copied(), policy.lattice_max_points)
-                    .expect("forced vandermonde strategy without a column lattice");
-                Plan::Vandermonde(delta)
-            }
+            Strategy::Dense => Ok(Plan::Dense),
+            Strategy::Separable => match f.separable_rank() {
+                Some(sep) => Ok(Plan::Separable(sep)),
+                None => Err(FtfiError::StrategyInapplicable {
+                    strategy: s,
+                    reason: "f has no exact separable decomposition (not 0-cordial)",
+                }),
+            },
+            Strategy::Lattice => match detect_lattice(
+                xs.iter().chain(ys.iter()).copied(),
+                policy.lattice_max_points,
+            ) {
+                Some(delta) => Ok(Plan::Lattice(LatticePlan::new(f, xs, ys, delta))),
+                None => Err(FtfiError::StrategyInapplicable {
+                    strategy: s,
+                    reason: "distances share no common lattice within the point budget",
+                }),
+            },
+            Strategy::RationalSum => match f {
+                FDist::Rational { num, den } => {
+                    Ok(Plan::RationalSum { num: num.clone(), den: den.clone() })
+                }
+                _ => Err(FtfiError::StrategyInapplicable {
+                    strategy: s,
+                    reason: "rational-sum multiplier requires FDist::Rational",
+                }),
+            },
+            Strategy::Cauchy => match f {
+                FDist::ExpOverLinear { lambda, c } => {
+                    Ok(Plan::Cauchy { lambda: *lambda, c: *c })
+                }
+                _ => Err(FtfiError::StrategyInapplicable {
+                    strategy: s,
+                    reason: "Cauchy-LDR multiplier requires FDist::ExpOverLinear",
+                }),
+            },
+            Strategy::Vandermonde => match f {
+                FDist::ExpQuadratic { u, v, w } => {
+                    match detect_lattice(ys.iter().copied(), policy.lattice_max_points) {
+                        Some(delta) => {
+                            Ok(Plan::Vandermonde { u: *u, v: *v, w: *w, delta })
+                        }
+                        None => Err(FtfiError::StrategyInapplicable {
+                            strategy: s,
+                            reason: "column distances are not on a lattice",
+                        }),
+                    }
+                }
+                _ => Err(FtfiError::StrategyInapplicable {
+                    strategy: s,
+                    reason: "Vandermonde multiplier requires FDist::ExpQuadratic",
+                }),
+            },
             Strategy::Chebyshev => {
                 match adaptive_expansion(f, xs, ys, policy.cheb_tol, policy.cheb_max_rank) {
-                    Some(exp) => Plan::Chebyshev(exp),
-                    None => Plan::Dense, // forced-but-inapplicable: stay correct
+                    Some(exp) => Ok(Plan::Chebyshev(exp)),
+                    None => Err(FtfiError::StrategyInapplicable {
+                        strategy: s,
+                        reason: "Chebyshev probe did not converge within cheb_max_rank \
+                                 (pole on the distance range?)",
+                    }),
                 }
             }
         };
     }
     let (a, b) = (xs.len(), ys.len());
     if a * b <= policy.dense_cutoff {
-        return Plan::Dense;
+        return Ok(Plan::Dense);
     }
     // Exact low-rank beats everything when available.
-    if f.separable_rank().is_some() {
-        return Plan::Separable;
+    if let Some(sep) = f.separable_rank() {
+        return Ok(Plan::Separable(sep));
     }
     // A common lattice admits the any-f Hankel path; take it when its
     // FFT cost undercuts dense.
@@ -159,7 +244,7 @@ pub fn make_plan(f: &FDist, xs: &[f64], ys: &[f64], d: usize, policy: &CrossPoli
         let fft_cost = 4 * pts * (usize::BITS - pts.leading_zeros()) as usize * d.div_ceil(2);
         let dense_cost = a * b * d;
         if fft_cost < dense_cost {
-            return Plan::Lattice(delta);
+            return Ok(Plan::Lattice(LatticePlan::new(f, xs, ys, delta)));
         }
     }
     // Smooth non-separable kernels: Chebyshev low-rank is the stable,
@@ -173,41 +258,69 @@ pub fn make_plan(f: &FDist, xs: &[f64], ys: &[f64], d: usize, policy: &CrossPoli
             if let Some(exp) =
                 adaptive_expansion(f, xs, ys, policy.cheb_tol, policy.cheb_max_rank)
             {
-                return Plan::Chebyshev(exp);
+                return Ok(Plan::Chebyshev(exp));
             }
         }
         _ => {}
     }
-    match f {
-        FDist::Rational { .. } => Plan::RationalSum,
-        FDist::ExpOverLinear { .. } => Plan::Cauchy,
-        FDist::ExpQuadratic { .. } => {
+    Ok(match f {
+        FDist::Rational { num, den } => {
+            Plan::RationalSum { num: num.clone(), den: den.clone() }
+        }
+        FDist::ExpOverLinear { lambda, c } => Plan::Cauchy { lambda: *lambda, c: *c },
+        FDist::ExpQuadratic { u, v, w } => {
             // Vandermonde needs only the *columns* on a lattice.
             match detect_lattice(ys.iter().copied(), policy.lattice_max_points) {
-                Some(delta) => Plan::Vandermonde(delta),
+                Some(delta) => Plan::Vandermonde { u: *u, v: *v, w: *w, delta },
                 None => Plan::Dense,
             }
         }
         _ => Plan::Dense,
-    }
+    })
+}
+
+/// Infallible planning shim for callers that know their (forced)
+/// strategy applies; panics otherwise. Prefer [`try_make_plan`].
+pub fn make_plan(f: &FDist, xs: &[f64], ys: &[f64], d: usize, policy: &CrossPolicy) -> Plan {
+    try_make_plan(f, xs, ys, d, policy)
+        .expect("make_plan: forced strategy inapplicable (use try_make_plan for a Result)")
 }
 
 /// Pick a strategy for the given shapes/values (thin wrapper over
-/// [`make_plan`], kept for the ablation bench and tests).
-pub fn choose_strategy(f: &FDist, xs: &[f64], ys: &[f64], d: usize, policy: &CrossPolicy) -> Strategy {
+/// [`try_make_plan`], kept for the ablation bench and tests).
+pub fn choose_strategy(
+    f: &FDist,
+    xs: &[f64],
+    ys: &[f64],
+    d: usize,
+    policy: &CrossPolicy,
+) -> Strategy {
     make_plan(f, xs, ys, d, policy).strategy()
 }
 
 /// `C·V` with the best applicable strategy. For `Cᵀ·U` call with the
 /// roles of `xs`/`ys` swapped — `f(x+y)` is symmetric in its arguments.
-pub fn cross_apply(f: &FDist, xs: &[f64], ys: &[f64], v: &Matrix, policy: &CrossPolicy) -> Matrix {
-    let plan = make_plan(f, xs, ys, v.cols(), policy);
-    apply_plan(&plan, f, xs, ys, v, policy)
+pub fn try_cross_apply(
+    f: &FDist,
+    xs: &[f64],
+    ys: &[f64],
+    v: &Matrix,
+    policy: &CrossPolicy,
+) -> Result<Matrix, FtfiError> {
+    let plan = try_make_plan(f, xs, ys, v.cols(), policy)?;
+    Ok(apply_plan(&plan, f, xs, ys, v, policy))
 }
 
-/// Execute a previously built plan (the IntegratorTree builds one plan
-/// per node side and reuses it across calls via `cross_apply`'s wrapper;
-/// exposed for callers that amortise planning).
+/// Infallible [`try_cross_apply`] shim; panics on a forced-inapplicable
+/// strategy. Kept for benches and tests that force known-good strategies.
+pub fn cross_apply(f: &FDist, xs: &[f64], ys: &[f64], v: &Matrix, policy: &CrossPolicy) -> Matrix {
+    try_cross_apply(f, xs, ys, v, policy)
+        .expect("cross_apply: forced strategy inapplicable (use try_cross_apply for a Result)")
+}
+
+/// Execute a previously built plan. Panic-free: every input-dependent
+/// failure mode was resolved at planning time, and the plan owns its
+/// artifacts (expansion, FFT table, decomposition, kernel parameters).
 pub fn apply_plan(
     plan: &Plan,
     f: &FDist,
@@ -218,29 +331,17 @@ pub fn apply_plan(
 ) -> Matrix {
     match plan {
         Plan::Dense => cross_apply_dense(f, xs, ys, v),
-        Plan::Separable => {
-            let sep = f.separable_rank().expect("separable strategy for non-separable f");
-            apply_separable(&sep, xs, ys, v)
+        Plan::Separable(sep) => apply_separable(sep, xs, ys, v),
+        Plan::Lattice(lp) => lp.apply(xs, ys, v),
+        Plan::RationalSum { num, den } => {
+            rational_cross_apply(num, den, xs, ys, v, &policy.rational)
         }
-        Plan::Lattice(delta) => LatticePlan::new(f, xs, ys, *delta).apply(xs, ys, v),
-        Plan::RationalSum => match f {
-            FDist::Rational { num, den } => {
-                rational_cross_apply(num, den, xs, ys, v, &policy.rational)
-            }
-            _ => panic!("rational strategy for non-rational f"),
-        },
-        Plan::Cauchy => match f {
-            FDist::ExpOverLinear { lambda, c } => {
-                cauchy_cross_apply(*lambda, *c, xs, ys, v, &policy.rational)
-            }
-            _ => panic!("cauchy strategy for wrong f"),
-        },
-        Plan::Vandermonde(delta) => match f {
-            FDist::ExpQuadratic { u, v: vc, w } => {
-                expquad_cross_apply(*u, *vc, *w, xs, ys, *delta, v)
-            }
-            _ => panic!("vandermonde strategy for wrong f"),
-        },
+        Plan::Cauchy { lambda, c } => {
+            cauchy_cross_apply(*lambda, *c, xs, ys, v, &policy.rational)
+        }
+        Plan::Vandermonde { u, v: vc, w, delta } => {
+            expquad_cross_apply(*u, *vc, *w, xs, ys, *delta, v)
+        }
         Plan::Chebyshev(exp) => exp.cross_apply(f, xs, ys, v),
     }
 }
@@ -329,5 +430,51 @@ mod tests {
         let c = Matrix::from_fn(8, 6, |i, j| f.eval(xs[i] + ys[j]));
         let want = c.transpose().matmul(&u);
         assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn forced_inapplicable_strategies_error_not_panic() {
+        let v = Matrix::zeros(3, 1);
+        let xs = [1.0, std::f64::consts::SQRT_2];
+        let ys = [0.5, 1.5, 2.5];
+        // Separable forced on a non-separable f.
+        let p = CrossPolicy {
+            force: Some(Strategy::Separable),
+            ..CrossPolicy::default()
+        };
+        let f = FDist::inverse_quadratic(0.5);
+        assert!(matches!(
+            try_cross_apply(&f, &xs, &ys, &v, &p),
+            Err(FtfiError::StrategyInapplicable { strategy: Strategy::Separable, .. })
+        ));
+        // Lattice forced on irrational points.
+        let p = CrossPolicy { force: Some(Strategy::Lattice), ..CrossPolicy::default() };
+        assert!(matches!(
+            try_cross_apply(&f, &xs, &ys, &v, &p),
+            Err(FtfiError::StrategyInapplicable { strategy: Strategy::Lattice, .. })
+        ));
+        // RationalSum forced on a non-rational f.
+        let p = CrossPolicy { force: Some(Strategy::RationalSum), ..CrossPolicy::default() };
+        let g = FDist::Exponential { lambda: -1.0, scale: 1.0 };
+        assert!(matches!(
+            try_cross_apply(&g, &xs, &ys, &v, &p),
+            Err(FtfiError::StrategyInapplicable { strategy: Strategy::RationalSum, .. })
+        ));
+        // Chebyshev forced with a pole on the range.
+        let p = CrossPolicy { force: Some(Strategy::Chebyshev), ..CrossPolicy::default() };
+        let pole = FDist::Rational { num: vec![1.0], den: vec![0.0, 1.0] };
+        assert!(matches!(
+            try_cross_apply(&pole, &[0.0, 1.0], &[0.0, 1.0, 2.0], &v, &p),
+            Err(FtfiError::StrategyInapplicable { strategy: Strategy::Chebyshev, .. })
+        ));
+    }
+
+    #[test]
+    fn policy_validation() {
+        assert!(CrossPolicy::default().validate().is_ok());
+        let bad = CrossPolicy { cheb_tol: -1.0, ..CrossPolicy::default() };
+        assert!(matches!(bad.validate(), Err(FtfiError::InvalidInput(_))));
+        let bad = CrossPolicy { cheb_max_rank: 1, ..CrossPolicy::default() };
+        assert!(matches!(bad.validate(), Err(FtfiError::InvalidInput(_))));
     }
 }

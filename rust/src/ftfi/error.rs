@@ -1,0 +1,70 @@
+//! The FTFI error taxonomy — the typed failure surface of the fallible
+//! builder / prepare / integrate API (see `DESIGN.md` §Errors).
+//!
+//! Design rule: anything reachable from user input (graph topology,
+//! field shapes, forced strategies, policy knobs) is an [`FtfiError`];
+//! panics are reserved for internal invariant violations. The serving
+//! coordinator maps these into `ServerError::Exec` at the worker
+//! boundary so a malformed request can never take a worker thread down.
+
+use crate::ftfi::cordial::Strategy;
+use std::fmt;
+
+/// Typed errors for the fallible FTFI surface.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FtfiError {
+    /// The input graph is not connected, so no spanning tree (and hence
+    /// no MST metric) exists.
+    DisconnectedGraph,
+    /// A tensor field's row count does not match the integrator's vertex
+    /// count (or an input buffer is not a multiple of it).
+    ShapeMismatch { expected: usize, got: usize },
+    /// A strategy forced through `CrossPolicy::force` does not apply to
+    /// the given `f` / distance structure.
+    StrategyInapplicable { strategy: Strategy, reason: &'static str },
+    /// A structurally invalid input: non-finite edge weights, bad policy
+    /// knobs, unparseable configuration values, …
+    InvalidInput(String),
+}
+
+impl fmt::Display for FtfiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FtfiError::DisconnectedGraph => {
+                write!(f, "graph is disconnected: MST metric requires a connected graph")
+            }
+            FtfiError::ShapeMismatch { expected, got } => {
+                write!(f, "shape mismatch: integrator expects {expected} rows, field has {got}")
+            }
+            FtfiError::StrategyInapplicable { strategy, reason } => {
+                write!(f, "forced strategy {strategy:?} is inapplicable: {reason}")
+            }
+            FtfiError::InvalidInput(msg) => write!(f, "invalid input: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FtfiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = FtfiError::ShapeMismatch { expected: 10, got: 7 };
+        let s = e.to_string();
+        assert!(s.contains("10") && s.contains("7"), "{s}");
+        let e = FtfiError::StrategyInapplicable {
+            strategy: Strategy::Lattice,
+            reason: "no common distance lattice",
+        };
+        assert!(e.to_string().contains("Lattice"));
+    }
+
+    #[test]
+    fn error_trait_object() {
+        let e: Box<dyn std::error::Error> = Box::new(FtfiError::DisconnectedGraph);
+        assert!(e.to_string().contains("disconnected"));
+    }
+}

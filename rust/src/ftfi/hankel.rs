@@ -19,7 +19,11 @@ pub fn detect_lattice(values: impl Iterator<Item = f64> + Clone, max_points: usi
     let mut maxv: f64 = 0.0;
     let mut delta: f64 = 0.0;
     for v in values.clone() {
-        assert!(v >= -1e-12, "lattice values must be non-negative, got {v}");
+        if v < -1e-12 || !v.is_finite() {
+            // Negative or non-finite distances: not a lattice (and not a
+            // valid metric) — report inapplicability instead of panicking.
+            return None;
+        }
         maxv = maxv.max(v);
         if v > 1e-12 {
             delta = if delta == 0.0 { v } else { float_gcd(delta, v, 1e-9 * (1.0 + maxv)) };

@@ -1,15 +1,37 @@
 //! Fast Tree-Field Integrators — the paper's core contribution.
 //!
 //! The public entry point is [`TreeFieldIntegrator`]: build once per tree
-//! (`O(N log N)` — §3.1), then integrate any number of tensor fields with
-//! any `f` in polylog-linear time (§3.2). For general graphs use
+//! (`O(N log N)` — §3.1) through the fallible builder, then integrate any
+//! number of tensor fields with any `f` in polylog-linear time (§3.2).
+//! For repeated integrations with the *same* `f` — the serving
+//! coordinator's pattern, and the inner loops of Sinkhorn / GW — call
+//! [`TreeFieldIntegrator::prepare`] to freeze the per-block cross plans
+//! into a [`PreparedIntegrator`] handle. For general graphs use
 //! [`GraphFieldIntegrator`], which routes through the minimum spanning
 //! tree exactly as the paper's experiments do (§4).
+//!
+//! Lifecycle (`DESIGN.md` §Lifecycle):
+//!
+//! ```text
+//! TreeFieldIntegrator::builder(&tree)      GraphFieldIntegrator::builder(&graph)
+//!     .leaf_threshold(t).policy(p)             .leaf_threshold(t).policy(p)
+//!     .build()?            // structure         .build()?   // MST + structure
+//!        │
+//!        ├─ try_integrate(&f, &x)?             // plans every block, every call
+//!        └─ prepare(&f)? → PreparedIntegrator  // plans once per (f, block)
+//!               ├─ integrate(&x)?              // reuses cached plans
+//!               └─ integrate_batch(&[&x…])?
+//! ```
+//!
+//! Every failure mode reachable from user input is a typed
+//! [`FtfiError`]; the legacy panicking constructors are kept as
+//! deprecated shims.
 
 pub mod brute;
 pub mod cauchy;
 pub mod chebyshev;
 pub mod cordial;
+pub mod error;
 pub mod functions;
 pub mod hankel;
 pub mod nufft;
@@ -18,13 +40,36 @@ pub mod rational;
 pub mod rff;
 pub mod vandermonde;
 
+pub use error::FtfiError;
+
 use crate::ftfi::cordial::CrossPolicy;
 use crate::ftfi::functions::FDist;
-use crate::graph::mst::minimum_spanning_tree;
+use crate::graph::mst::try_minimum_spanning_tree;
 use crate::graph::Graph;
 use crate::linalg::matrix::Matrix;
-use crate::tree::integrator_tree::{IntegratorTree, ItStats};
+use crate::tree::integrator_tree::{IntegratorTree, ItStats, PreparedPlans};
 use crate::tree::Tree;
+
+/// The unified integration interface: everything that can compute
+/// `out[v] = Σ_u f(dist(v,u))·x[u]` over some metric. Implemented by
+/// [`TreeFieldIntegrator`] (tree metric, fast), [`GraphFieldIntegrator`]
+/// (MST metric of a graph, fast) and the brute-force reference
+/// [`brute::BruteForceIntegrator`] — so the coordinator batcher, the
+/// benches and the examples can program against one trait and swap
+/// backends freely.
+pub trait FieldIntegrator {
+    /// Number of vertices of the underlying metric space.
+    fn n(&self) -> usize;
+
+    /// `out[v] = Σ_u f(dist(v,u))·x[u]` for a tensor field `x ∈ R^{N×d}`.
+    fn integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError>;
+
+    /// Scalar-field convenience.
+    fn integrate_vec(&self, f: &FDist, x: &[f64]) -> Result<Vec<f64>, FtfiError> {
+        let m = Matrix::from_vec(x.len(), 1, x.to_vec());
+        Ok(self.integrate(f, &m)?.into_vec())
+    }
+}
 
 /// Fast exact integration of tensor fields on a weighted tree.
 pub struct TreeFieldIntegrator {
@@ -33,29 +78,141 @@ pub struct TreeFieldIntegrator {
     n: usize,
 }
 
+/// Fallible builder for [`TreeFieldIntegrator`] — validates the policy
+/// knobs and the tree weights before paying the `O(N log N)`
+/// preprocessing cost.
+pub struct TreeFieldIntegratorBuilder<'a> {
+    tree: &'a Tree,
+    leaf_threshold: usize,
+    policy: CrossPolicy,
+}
+
+impl<'a> TreeFieldIntegratorBuilder<'a> {
+    /// Leaf threshold `t ≥ 2` of the IntegratorTree (default 32).
+    pub fn leaf_threshold(mut self, t: usize) -> Self {
+        self.leaf_threshold = t;
+        self
+    }
+
+    /// Cross-term strategy policy (default [`CrossPolicy::default`]).
+    pub fn policy(mut self, policy: CrossPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Validate and preprocess. Errors instead of panicking on bad
+    /// policy knobs, a too-small leaf threshold or non-finite weights.
+    pub fn build(self) -> Result<TreeFieldIntegrator, FtfiError> {
+        self.policy.validate()?;
+        if self.leaf_threshold < 2 {
+            return Err(FtfiError::InvalidInput(format!(
+                "leaf_threshold must be ≥ 2, got {}",
+                self.leaf_threshold
+            )));
+        }
+        // `Tree::from_edges` already asserts positive weights, so the
+        // `w <= 0.0` arm is defense-in-depth for future constructors;
+        // the finiteness check is the live one (NaN/±inf distances would
+        // poison lattice detection and the Chebyshev probe).
+        for &(u, v, w) in self.tree.edges() {
+            if !w.is_finite() || w <= 0.0 {
+                return Err(FtfiError::InvalidInput(format!(
+                    "tree edge ({u},{v}) has non-positive or non-finite weight {w}"
+                )));
+            }
+        }
+        Ok(TreeFieldIntegrator {
+            it: IntegratorTree::with_leaf_threshold(self.tree, self.leaf_threshold),
+            policy: self.policy,
+            n: self.tree.n(),
+        })
+    }
+}
+
 impl TreeFieldIntegrator {
+    /// Start building an integrator for `tree`.
+    pub fn builder(tree: &Tree) -> TreeFieldIntegratorBuilder<'_> {
+        TreeFieldIntegratorBuilder { tree, leaf_threshold: 32, policy: CrossPolicy::default() }
+    }
+
     /// Preprocess the tree with default options.
+    #[deprecated(note = "use `TreeFieldIntegrator::builder(&tree).build()` for a Result")]
     pub fn new(tree: &Tree) -> Self {
-        Self::with_options(tree, 32, CrossPolicy::default())
+        Self::builder(tree).build().expect("TreeFieldIntegrator::new: invalid tree")
     }
 
     /// Preprocess with an explicit leaf threshold and cross-term policy.
+    #[deprecated(
+        note = "use `TreeFieldIntegrator::builder(&tree).leaf_threshold(t).policy(p).build()`"
+    )]
     pub fn with_options(tree: &Tree, leaf_threshold: usize, policy: CrossPolicy) -> Self {
-        TreeFieldIntegrator {
-            it: IntegratorTree::with_leaf_threshold(tree, leaf_threshold),
-            policy,
-            n: tree.n(),
-        }
+        Self::builder(tree)
+            .leaf_threshold(leaf_threshold.max(2))
+            .policy(policy)
+            .build()
+            .expect("TreeFieldIntegrator::with_options: invalid tree or policy")
     }
 
-    /// `out[v] = Σ_u f(dist_T(v,u))·x[u]` for a tensor field `x ∈ R^{N×d}`.
-    pub fn integrate(&self, f: &FDist, x: &Matrix) -> Matrix {
-        self.it.integrate(f, x, &self.policy)
+    /// `out[v] = Σ_u f(dist_T(v,u))·x[u]` for a tensor field
+    /// `x ∈ R^{N×d}`. Re-plans every cross block on every call; prefer
+    /// [`TreeFieldIntegrator::prepare`] when `f` is reused.
+    pub fn try_integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError> {
+        self.it.try_integrate(f, x, &self.policy)
     }
 
     /// Scalar-field convenience.
+    pub fn try_integrate_vec(&self, f: &FDist, x: &[f64]) -> Result<Vec<f64>, FtfiError> {
+        let m = Matrix::from_vec(x.len(), 1, x.to_vec());
+        Ok(self.try_integrate(f, &m)?.into_vec())
+    }
+
+    /// Infallible integration shim.
+    #[deprecated(note = "use `try_integrate` (Result) or `prepare` (cached plans)")]
+    pub fn integrate(&self, f: &FDist, x: &Matrix) -> Matrix {
+        self.try_integrate(f, x).expect("integration failed (use try_integrate for a Result)")
+    }
+
+    /// Infallible scalar-field shim.
+    #[deprecated(note = "use `try_integrate_vec`")]
     pub fn integrate_vec(&self, f: &FDist, x: &[f64]) -> Vec<f64> {
-        self.it.integrate_vec(f, x, &self.policy)
+        self.try_integrate_vec(f, x)
+            .expect("integration failed (use try_integrate_vec for a Result)")
+    }
+
+    /// Freeze `f` into a [`PreparedIntegrator`]: every cross-block plan
+    /// (Chebyshev expansion, lattice FFT table, separable decomposition,
+    /// rational options) is built exactly once, here, and reused by all
+    /// subsequent `integrate` calls on the handle.
+    pub fn prepare(&self, f: &FDist) -> Result<PreparedIntegrator<'_>, FtfiError> {
+        self.prepare_with_channels(f, 1)
+    }
+
+    /// [`TreeFieldIntegrator::prepare`] with a field-width hint for the
+    /// planning cost model (`channels` = expected `d`; correctness does
+    /// not depend on it).
+    pub fn prepare_with_channels(
+        &self,
+        f: &FDist,
+        channels: usize,
+    ) -> Result<PreparedIntegrator<'_>, FtfiError> {
+        let plans = self.it.prepare(f, channels, &self.policy)?;
+        Ok(PreparedIntegrator { it: &self.it, plans })
+    }
+
+    /// Lower-level prepare: returns the raw [`PreparedPlans`] (no borrow
+    /// of `self`), for owners that store integrator and plans side by
+    /// side — e.g. the coordinator's field executor.
+    pub fn prepare_plans(&self, f: &FDist, channels: usize) -> Result<PreparedPlans, FtfiError> {
+        self.it.prepare(f, channels, &self.policy)
+    }
+
+    /// Integrate with plans from [`TreeFieldIntegrator::prepare_plans`].
+    pub fn integrate_prepared(
+        &self,
+        x: &Matrix,
+        plans: &PreparedPlans,
+    ) -> Result<Matrix, FtfiError> {
+        self.it.integrate_prepared(x, plans)
     }
 
     /// Number of tree vertices.
@@ -63,14 +220,71 @@ impl TreeFieldIntegrator {
         self.n
     }
 
-    /// IntegratorTree structure statistics.
+    /// IntegratorTree structure statistics (including the plan-build
+    /// counter the prepared path freezes).
     pub fn stats(&self) -> ItStats {
         self.it.stats()
+    }
+
+    /// The active cross-term policy.
+    pub fn policy(&self) -> &CrossPolicy {
+        &self.policy
     }
 
     /// Mutable access to the policy (ablation benches flip strategies).
     pub fn policy_mut(&mut self) -> &mut CrossPolicy {
         &mut self.policy
+    }
+}
+
+impl FieldIntegrator for TreeFieldIntegrator {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError> {
+        self.try_integrate(f, x)
+    }
+}
+
+/// A `(tree, f, policy)` triple with all cross-block plans pre-built:
+/// the product of [`TreeFieldIntegrator::prepare`]. `integrate` /
+/// `integrate_batch` reuse the cached plans and are panic-free on
+/// malformed input.
+pub struct PreparedIntegrator<'a> {
+    it: &'a IntegratorTree,
+    plans: PreparedPlans,
+}
+
+impl PreparedIntegrator<'_> {
+    /// Integrate one tensor field with the frozen `f`.
+    pub fn integrate(&self, x: &Matrix) -> Result<Matrix, FtfiError> {
+        self.it.integrate_prepared(x, &self.plans)
+    }
+
+    /// Integrate a batch of fields, reusing the plans for every one.
+    pub fn integrate_batch(&self, xs: &[&Matrix]) -> Result<Vec<Matrix>, FtfiError> {
+        xs.iter().map(|x| self.integrate(x)).collect()
+    }
+
+    /// Scalar-field convenience.
+    pub fn integrate_vec(&self, x: &[f64]) -> Result<Vec<f64>, FtfiError> {
+        let m = Matrix::from_vec(x.len(), 1, x.to_vec());
+        Ok(self.integrate(&m)?.into_vec())
+    }
+
+    /// The frozen function.
+    pub fn f(&self) -> &FDist {
+        self.plans.f()
+    }
+
+    /// Number of tree vertices.
+    pub fn n(&self) -> usize {
+        self.plans.n()
+    }
+
+    /// Cross-term plans built at prepare time (2 per internal IT node).
+    pub fn plans_built(&self) -> usize {
+        self.plans.plans_built()
     }
 }
 
@@ -81,17 +295,71 @@ pub struct GraphFieldIntegrator {
     inner: TreeFieldIntegrator,
 }
 
+/// Fallible builder for [`GraphFieldIntegrator`].
+pub struct GraphFieldIntegratorBuilder<'a> {
+    graph: &'a Graph,
+    leaf_threshold: usize,
+    policy: CrossPolicy,
+}
+
+impl<'a> GraphFieldIntegratorBuilder<'a> {
+    /// Leaf threshold `t ≥ 2` of the IntegratorTree (default 32).
+    pub fn leaf_threshold(mut self, t: usize) -> Self {
+        self.leaf_threshold = t;
+        self
+    }
+
+    /// Cross-term strategy policy (default [`CrossPolicy::default`]).
+    pub fn policy(mut self, policy: CrossPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Build the MST and preprocess it. Returns
+    /// [`FtfiError::DisconnectedGraph`] instead of asserting when the
+    /// graph has no spanning tree.
+    pub fn build(self) -> Result<GraphFieldIntegrator, FtfiError> {
+        let tree = try_minimum_spanning_tree(self.graph)?;
+        let inner = TreeFieldIntegrator::builder(&tree)
+            .leaf_threshold(self.leaf_threshold)
+            .policy(self.policy)
+            .build()?;
+        Ok(GraphFieldIntegrator { tree, inner })
+    }
+}
+
 impl GraphFieldIntegrator {
-    /// Build the MST and preprocess it. Requires a connected graph.
+    /// Start building an integrator for `graph`.
+    pub fn builder(graph: &Graph) -> GraphFieldIntegratorBuilder<'_> {
+        GraphFieldIntegratorBuilder { graph, leaf_threshold: 32, policy: CrossPolicy::default() }
+    }
+
+    /// Build with default options; `Err(DisconnectedGraph)` if the graph
+    /// is not connected.
+    pub fn try_new(g: &Graph) -> Result<Self, FtfiError> {
+        Self::builder(g).build()
+    }
+
+    /// Build the MST and preprocess it. Panics on a disconnected graph.
+    #[deprecated(note = "use `GraphFieldIntegrator::try_new` or `::builder` for a Result")]
     pub fn new(g: &Graph) -> Self {
-        let tree = minimum_spanning_tree(g);
-        let inner = TreeFieldIntegrator::new(&tree);
-        GraphFieldIntegrator { tree, inner }
+        Self::try_new(g).expect("GraphFieldIntegrator::new: disconnected graph")
     }
 
     /// Integrate using the MST metric.
+    pub fn try_integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError> {
+        self.inner.try_integrate(f, x)
+    }
+
+    /// Infallible integration shim.
+    #[deprecated(note = "use `try_integrate` (Result) or `prepare` (cached plans)")]
     pub fn integrate(&self, f: &FDist, x: &Matrix) -> Matrix {
-        self.inner.integrate(f, x)
+        self.try_integrate(f, x).expect("integration failed (use try_integrate for a Result)")
+    }
+
+    /// Freeze `f` into a prepared handle over the MST metric.
+    pub fn prepare(&self, f: &FDist) -> Result<PreparedIntegrator<'_>, FtfiError> {
+        self.inner.prepare(f)
     }
 
     /// The spanning tree in use.
@@ -105,10 +373,19 @@ impl GraphFieldIntegrator {
     }
 }
 
+impl FieldIntegrator for GraphFieldIntegrator {
+    fn n(&self) -> usize {
+        self.tree.n()
+    }
+    fn integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError> {
+        self.try_integrate(f, x)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ftfi::brute::btfi;
+    use crate::ftfi::brute::{btfi, BruteForceIntegrator};
     use crate::graph::generators;
     use crate::ml::rng::Pcg;
 
@@ -116,11 +393,11 @@ mod tests {
     fn graph_integrator_matches_btfi_on_its_mst() {
         let mut rng = Pcg::seed(1);
         let g = generators::path_plus_random_edges(120, 60, &mut rng);
-        let gfi = GraphFieldIntegrator::new(&g);
+        let gfi = GraphFieldIntegrator::try_new(&g).unwrap();
         let f = FDist::Exponential { lambda: -0.2, scale: 1.0 };
         let x = Matrix::randn(120, 2, &mut rng);
         let want = btfi(gfi.tree(), &f, &x);
-        let got = gfi.integrate(&f, &x);
+        let got = gfi.try_integrate(&f, &x).unwrap();
         assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-9);
     }
 
@@ -128,7 +405,7 @@ mod tests {
     fn reusable_across_fields_and_functions() {
         let mut rng = Pcg::seed(2);
         let t = generators::random_tree(80, 0.1, 1.0, &mut rng);
-        let tfi = TreeFieldIntegrator::new(&t);
+        let tfi = TreeFieldIntegrator::builder(&t).build().unwrap();
         for seed in 0..3u64 {
             let mut r2 = Pcg::seed(seed);
             let x = Matrix::randn(80, 1, &mut r2);
@@ -137,10 +414,84 @@ mod tests {
                 FDist::Polynomial(vec![0.0, 1.0, 0.5]),
                 FDist::Exponential { lambda: -1.0, scale: 1.0 },
             ] {
-                let got = tfi.integrate(&f, &x);
+                let got = tfi.try_integrate(&f, &x).unwrap();
                 let want = btfi(&t, &f, &x);
                 assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn prepared_handle_matches_replanning_path() {
+        let mut rng = Pcg::seed(3);
+        let t = generators::random_tree(200, 0.1, 1.0, &mut rng);
+        let tfi = TreeFieldIntegrator::builder(&t).leaf_threshold(8).build().unwrap();
+        let f = FDist::inverse_quadratic(0.8);
+        let prepared = tfi.prepare(&f).unwrap();
+        assert_eq!(prepared.n(), 200);
+        assert!(prepared.plans_built() > 0);
+        let xs: Vec<Matrix> = (0..4).map(|_| Matrix::randn(200, 2, &mut rng)).collect();
+        let refs: Vec<&Matrix> = xs.iter().collect();
+        let batch = prepared.integrate_batch(&refs).unwrap();
+        for (x, got) in xs.iter().zip(&batch) {
+            let want = tfi.try_integrate(&f, x).unwrap();
+            assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn disconnected_graph_is_an_error() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        assert!(matches!(
+            GraphFieldIntegrator::try_new(&g),
+            Err(FtfiError::DisconnectedGraph)
+        ));
+    }
+
+    #[test]
+    fn builder_rejects_bad_options() {
+        let t = Tree::path(&[1.0, 1.0, 1.0]);
+        assert!(matches!(
+            TreeFieldIntegrator::builder(&t).leaf_threshold(1).build(),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        let bad_policy = CrossPolicy { cheb_max_rank: 0, ..CrossPolicy::default() };
+        assert!(matches!(
+            TreeFieldIntegrator::builder(&t).policy(bad_policy).build(),
+            Err(FtfiError::InvalidInput(_))
+        ));
+    }
+
+    #[test]
+    fn trait_unifies_fast_and_brute_backends() {
+        let mut rng = Pcg::seed(4);
+        let g = generators::path_plus_random_edges(60, 30, &mut rng);
+        let gfi = GraphFieldIntegrator::try_new(&g).unwrap();
+        let brute = BruteForceIntegrator::from_tree(gfi.tree().clone());
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let x = Matrix::randn(60, 2, &mut rng);
+        let backends: Vec<&dyn FieldIntegrator> = vec![&gfi, &brute];
+        let outs: Vec<Matrix> =
+            backends.iter().map(|b| b.integrate(&f, &x).unwrap()).collect();
+        assert_eq!(backends[0].n(), backends[1].n());
+        assert!(outs[0].frobenius_diff(&outs[1]) / (1.0 + outs[1].frobenius()) < 1e-9);
+    }
+
+    /// The legacy panicking constructors keep working (shim coverage).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_work() {
+        let mut rng = Pcg::seed(5);
+        let t = generators::random_tree(40, 0.1, 1.0, &mut rng);
+        let tfi = TreeFieldIntegrator::new(&t);
+        let x = Matrix::randn(40, 1, &mut rng);
+        let f = FDist::Identity;
+        let a = tfi.integrate(&f, &x);
+        let b = tfi.try_integrate(&f, &x).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-15);
+        let g = t.to_graph();
+        let gfi = GraphFieldIntegrator::new(&g);
+        let c = gfi.integrate(&f, &x);
+        assert!(c.max_abs_diff(&a) < 1e-9);
     }
 }

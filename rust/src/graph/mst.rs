@@ -4,12 +4,27 @@
 
 use super::union_find::UnionFind;
 use super::Graph;
+use crate::ftfi::error::FtfiError;
 use crate::tree::Tree;
 
-/// Kruskal's algorithm. Requires a connected graph; returns the MST as a
-/// [`Tree`] over the same vertex ids.
+/// Kruskal's algorithm. Returns [`FtfiError::DisconnectedGraph`] when no
+/// spanning tree exists; otherwise the MST as a [`Tree`] over the same
+/// vertex ids.
+pub fn try_minimum_spanning_tree(g: &Graph) -> Result<Tree, FtfiError> {
+    if !g.is_connected() {
+        return Err(FtfiError::DisconnectedGraph);
+    }
+    Ok(minimum_spanning_tree_unchecked(g))
+}
+
+/// Kruskal's algorithm. Requires a connected graph (panics otherwise);
+/// see [`try_minimum_spanning_tree`] for the fallible variant.
 pub fn minimum_spanning_tree(g: &Graph) -> Tree {
     assert!(g.is_connected(), "MST requires a connected graph");
+    minimum_spanning_tree_unchecked(g)
+}
+
+fn minimum_spanning_tree_unchecked(g: &Graph) -> Tree {
     let mut edges: Vec<(u32, u32, f64)> = g.edges().to_vec();
     edges.sort_unstable_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
     let mut uf = UnionFind::new(g.n());
@@ -90,5 +105,13 @@ mod tests {
     fn mst_rejects_disconnected() {
         let g = Graph::from_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
         minimum_spanning_tree(&g);
+    }
+
+    #[test]
+    fn try_mst_reports_disconnected_as_error() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        assert!(matches!(try_minimum_spanning_tree(&g), Err(FtfiError::DisconnectedGraph)));
+        let ok = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0)]);
+        assert_eq!(try_minimum_spanning_tree(&ok).unwrap().n(), 3);
     }
 }

@@ -8,18 +8,25 @@
 //!
 //! - exact polylog-linear integration of tensor fields on weighted trees
 //!   ([`ftfi::TreeFieldIntegrator`]) and, via MST metrics, on general
-//!   graphs ([`ftfi::GraphFieldIntegrator`]);
+//!   graphs ([`ftfi::GraphFieldIntegrator`]), behind a fallible
+//!   builder / prepare / integrate lifecycle with the typed
+//!   [`ftfi::FtfiError`] taxonomy and the unified
+//!   [`ftfi::FieldIntegrator`] trait;
+//! - prepared-plan handles ([`ftfi::PreparedIntegrator`]) that build the
+//!   per-block cross plans once per `(tree, f)` and amortise them over
+//!   any number of integrations — the serving / Sinkhorn / GW pattern;
 //! - the full cordial-function multiplier suite (outer-product, Hankel/
 //!   FFT, rational multipoint, Cauchy-LDR, Vandermonde) plus the RFF and
 //!   NU-FFT approximate extensions;
 //! - the paper's application stack: mesh interpolation, graph
 //!   classification (eigenfeatures + random forest), learnable rational
-//!   `f`-distance matrices, Gromov–Wasserstein speedups, and Topological
-//!   Vision Transformers served through a rust coordinator over AOT-
-//!   compiled JAX/Pallas models (PJRT).
+//!   `f`-distance matrices, Gromov–Wasserstein speedups, and a batching
+//!   inference coordinator that serves field integrations directly and
+//!   — behind the `pjrt` cargo feature — Topological Vision Transformers
+//!   through AOT-compiled JAX/Pallas models (PJRT).
 //!
-//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md`
-//! for the paper-vs-measured record of every table and figure.
+//! See `DESIGN.md` for the system inventory, the builder/prepare/
+//! integrate lifecycle, the error taxonomy and the numerics notes.
 
 pub mod bench_util;
 pub mod cli;
@@ -30,11 +37,14 @@ pub mod graph;
 pub mod linalg;
 pub mod ml;
 pub mod ot;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tree;
 
 pub use ftfi::functions::FDist;
-pub use ftfi::{GraphFieldIntegrator, TreeFieldIntegrator};
+pub use ftfi::{
+    FieldIntegrator, FtfiError, GraphFieldIntegrator, PreparedIntegrator, TreeFieldIntegrator,
+};
 pub use graph::Graph;
 pub use linalg::matrix::Matrix;
 pub use tree::Tree;

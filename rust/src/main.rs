@@ -1,28 +1,34 @@
 //! `ftfi` — the leader binary: launcher + CLI over the whole stack.
 //!
 //! ```text
-//! ftfi integrate  --n 5000 --f exp           FTFI vs brute on a synthetic graph
-//! ftfi train      --steps 200 --lr 0.01      train TopViT-mini via PJRT
-//! ftfi serve      --requests 500 --batch 8   run the batched inference server
-//! ftfi gw         --n 300                    Gromov–Wasserstein demo
-//! ftfi info                                  versions, artifact status
+//! ftfi integrate  --n 5000 --f exp --repeat 8   FTFI vs brute; prepared-plan reuse
+//! ftfi serve      --requests 500 --batch 8      batched field-integration server
+//! ftfi gw         --n 300                       Gromov–Wasserstein demo
+//! ftfi train      --steps 200 --lr 0.01         train TopViT-mini via PJRT [pjrt]
+//! ftfi info                                     versions, artifact status
 //! ```
+//!
+//! The `train` command and the `--backend topvit` serve path need the
+//! `pjrt` cargo feature (external `xla`/`anyhow` crates); everything
+//! else is dependency-free.
 
 use ftfi::bench_util::time_once;
 use ftfi::cli::Args;
-use ftfi::coordinator::{BatchExecutor, BatcherConfig, InferenceServer};
+use ftfi::config::{Config, IntegratorConfig};
+use ftfi::coordinator::{
+    BatchExecutor, BatcherConfig, InferenceServer, PreparedFieldExecutor,
+};
 use ftfi::ftfi::brute::BruteTreeIntegrator;
 use ftfi::ftfi::functions::FDist;
 use ftfi::ftfi::TreeFieldIntegrator;
-use ftfi::graph::{generators, mst::minimum_spanning_tree};
+use ftfi::graph::{generators, mst::try_minimum_spanning_tree};
 use ftfi::linalg::matrix::Matrix;
 use ftfi::ml::rng::Pcg;
-use ftfi::ml::shapes;
 use ftfi::ot::gw::{gromov_wasserstein, GwBackend, GwParams};
 use ftfi::ot::sinkhorn::uniform_marginal;
-use ftfi::runtime::topvit::{TopVit, TopVitExecutor, TRAIN_BATCH};
-use ftfi::runtime::Runtime;
 use std::time::Duration;
+
+type CliResult = Result<(), Box<dyn std::error::Error>>;
 
 fn main() {
     let args = Args::from_env();
@@ -41,37 +47,87 @@ fn main() {
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
 
-fn parse_f(name: &str, lambda: f64) -> FDist {
+fn parse_f(name: &str, lambda: f64) -> Result<FDist, String> {
     match name {
-        "identity" => FDist::Identity,
-        "exp" => FDist::Exponential { lambda: -lambda, scale: 1.0 },
-        "invquad" => FDist::inverse_quadratic(lambda),
-        "gauss" => FDist::gaussian(lambda),
-        "poly" => FDist::Polynomial(vec![1.0, -lambda, lambda * lambda / 4.0]),
-        other => panic!("unknown f {other:?} (identity|exp|invquad|gauss|poly)"),
+        "identity" => Ok(FDist::Identity),
+        "exp" => Ok(FDist::Exponential { lambda: -lambda, scale: 1.0 }),
+        "invquad" => Ok(FDist::inverse_quadratic(lambda)),
+        "gauss" => Ok(FDist::gaussian(lambda)),
+        "poly" => Ok(FDist::Polynomial(vec![1.0, -lambda, lambda * lambda / 4.0])),
+        other => Err(format!("unknown f {other:?} (identity|exp|invquad|gauss|poly)")),
     }
 }
 
-fn cmd_integrate(args: &Args) -> anyhow::Result<()> {
+/// Resolve the integrator policy from `--config` (the `[integrator]`
+/// section) plus direct CLI overrides.
+fn integrator_config(args: &Args) -> Result<IntegratorConfig, Box<dyn std::error::Error>> {
+    let mut cfg = match args.get("config") {
+        Some(path) => IntegratorConfig::from_config(&Config::load(path)?),
+        None => IntegratorConfig::default(),
+    };
+    if let Some(t) = args.get("leaf-threshold") {
+        cfg.leaf_threshold = t.parse().map_err(|_| format!("bad --leaf-threshold {t:?}"))?;
+    }
+    if let Some(s) = args.get("force") {
+        cfg.force = Some(s.to_string());
+    }
+    Ok(cfg)
+}
+
+fn cmd_integrate(args: &Args) -> CliResult {
     let n = args.get_usize("n", 5000);
     let extra = args.get_usize("extra-edges", n / 2);
     let d = args.get_usize("channels", 4);
-    let f = parse_f(args.get_str("f", "exp"), args.get_f64("lambda", 0.5));
+    let repeat = args.get_usize("repeat", 1).max(1);
+    let f = parse_f(args.get_str("f", "exp"), args.get_f64("lambda", 0.5))?;
+    let icfg = integrator_config(args)?;
+    let policy = icfg.to_policy()?;
     let mut rng = Pcg::seed(args.get_usize("seed", 0) as u64);
 
     println!("graph: path({n}) + {extra} random edges; field channels = {d}; f = {f:?}");
     let g = generators::path_plus_random_edges(n, extra, &mut rng);
-    let (tree, t_mst) = time_once(|| minimum_spanning_tree(&g));
+    let (tree, t_mst) = time_once(|| try_minimum_spanning_tree(&g));
+    let tree = tree?;
     let x = Matrix::randn(n, d, &mut rng);
 
-    let (tfi, t_pre) = time_once(|| TreeFieldIntegrator::new(&tree));
-    let (fast, t_fast) = time_once(|| tfi.integrate(&f, &x));
-    println!("FTFI:  preprocess {t_pre:.3}s (+ MST {t_mst:.3}s), integrate {t_fast:.4}s");
+    let (tfi, t_pre) = time_once(|| {
+        TreeFieldIntegrator::builder(&tree)
+            .leaf_threshold(icfg.leaf_threshold)
+            .policy(policy.clone())
+            .build()
+    });
+    let tfi = tfi?;
+    let (prepared, t_plan) = time_once(|| tfi.prepare_with_channels(&f, d));
+    let prepared = prepared?;
+    let (fast, t_fast) = time_once(|| prepared.integrate(&x));
+    let fast = fast?;
+    println!(
+        "FTFI:  preprocess {t_pre:.3}s (+ MST {t_mst:.3}s), prepare {t_plan:.3}s \
+         ({} plans), integrate {t_fast:.4}s",
+        prepared.plans_built()
+    );
+    if repeat > 1 {
+        let (_, t_rep) = time_once(|| {
+            for _ in 0..repeat - 1 {
+                prepared.integrate(&x).expect("prepared integrate");
+            }
+        });
+        let (_, t_replan) = time_once(|| {
+            for _ in 0..repeat - 1 {
+                tfi.try_integrate(&f, &x).expect("replanning integrate");
+            }
+        });
+        println!(
+            "repeat×{}: prepared {t_rep:.4}s vs re-planning {t_replan:.4}s ({:.1}x)",
+            repeat - 1,
+            t_replan / t_rep.max(1e-12)
+        );
+    }
 
     let (brute, t_bpre) = time_once(|| BruteTreeIntegrator::new(&tree, &f));
     let (slow, t_slow) = time_once(|| brute.integrate(&x));
@@ -79,12 +135,108 @@ fn cmd_integrate(args: &Args) -> anyhow::Result<()> {
     let rel = fast.frobenius_diff(&slow) / (1.0 + slow.frobenius());
     println!(
         "relative error {rel:.2e}; end-to-end speedup {:.1}x",
-        (t_bpre + t_slow) / (t_pre + t_fast)
+        (t_bpre + t_slow) / (t_pre + t_plan + t_fast)
     );
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
+/// Serve FTFI field integrations through the coordinator (default
+/// backend). `--backend topvit` switches to the PJRT model path, which
+/// needs the `pjrt` feature.
+fn cmd_serve(args: &Args) -> CliResult {
+    match args.get_str("backend", "field") {
+        "field" => cmd_serve_field(args),
+        "topvit" => cmd_serve_topvit(args),
+        other => Err(format!("unknown backend {other:?} (field|topvit)").into()),
+    }
+}
+
+fn cmd_serve_field(args: &Args) -> CliResult {
+    let n = args.get_usize("n", 2000);
+    let n_requests = args.get_usize("requests", 200);
+    let batch = args.get_usize("batch", 8);
+    let workers = args.get_usize("workers", 2);
+    let f = parse_f(args.get_str("f", "exp"), args.get_f64("lambda", 0.5))?;
+    let icfg = integrator_config(args)?;
+    let policy = icfg.to_policy()?;
+
+    let mut rng = Pcg::seed(7);
+    let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+    let tree = try_minimum_spanning_tree(&g)?;
+    println!("serving f = {f:?} over an n = {n} MST metric ({workers} workers)");
+
+    let factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>> = (0..workers
+        .max(1))
+        .map(|_| {
+            let tree = tree.clone();
+            let f = f.clone();
+            let policy = policy.clone();
+            let leaf_threshold = icfg.leaf_threshold;
+            Box::new(move || {
+                let tfi = TreeFieldIntegrator::builder(&tree)
+                    .leaf_threshold(leaf_threshold)
+                    .policy(policy)
+                    .build()
+                    .expect("validated tree");
+                Box::new(
+                    PreparedFieldExecutor::new(tfi, &f, 1, 8).expect("validated policy"),
+                ) as Box<dyn BatchExecutor>
+            }) as Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>
+        })
+        .collect();
+    let server = InferenceServer::start(
+        factories,
+        BatcherConfig { batch_size: batch.max(1), batch_timeout: Duration::from_millis(2) },
+        1024,
+    );
+    println!("submitting {n_requests} requests (batch {batch})...");
+    let fields: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| server.submit_blocking(fields[i % fields.len()].clone()).unwrap())
+        .collect();
+    let mut ok = 0;
+    for h in handles {
+        if h.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let m = server.metrics();
+    println!(
+        "served {ok}/{n_requests}: {:.0} req/s, mean batch {:.2}, p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms",
+        m.throughput_rps,
+        m.mean_batch_size,
+        m.latency_p50 * 1e3,
+        m.latency_p95 * 1e3,
+        m.latency_p99 * 1e3
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_gw(args: &Args) -> CliResult {
+    let n = args.get_usize("n", 300);
+    let mut rng = Pcg::seed(5);
+    let ta = generators::random_tree(n, 0.1, 1.0, &mut rng);
+    let tb = generators::random_tree(n, 0.1, 1.0, &mut rng);
+    let p = uniform_marginal(n);
+    for (name, backend) in [("dense", GwBackend::Dense), ("ftfi", GwBackend::Ftfi)] {
+        let (r, total) =
+            time_once(|| gromov_wasserstein(&ta, &tb, &p, &p, backend, &GwParams::default()));
+        println!(
+            "{name:>5}: GW {:.5} in {total:.2}s total, {:.2}s field integration ({} CG iters)",
+            r.discrepancy, r.integration_seconds, r.iterations
+        );
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_train(args: &Args) -> CliResult {
+    use ftfi::ml::shapes;
+    use ftfi::runtime::topvit::{TopVit, TRAIN_BATCH};
+    use ftfi::runtime::Runtime;
     let steps = args.get_usize("steps", 200);
     let lr = args.get_f64("lr", 0.01) as f32;
     let masked = !args.get_flag("unmasked");
@@ -113,7 +265,16 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> CliResult {
+    Err("the `train` command needs the PJRT runtime — rebuild with `--features pjrt`".into())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_serve_topvit(args: &Args) -> CliResult {
+    use ftfi::ml::shapes;
+    use ftfi::runtime::topvit::{TopVit, TopVitExecutor};
+    use ftfi::runtime::Runtime;
     let n_requests = args.get_usize("requests", 200);
     let batch = args.get_usize("batch", 8);
     let server = InferenceServer::start(
@@ -151,29 +312,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_gw(args: &Args) -> anyhow::Result<()> {
-    let n = args.get_usize("n", 300);
-    let mut rng = Pcg::seed(5);
-    let ta = generators::random_tree(n, 0.1, 1.0, &mut rng);
-    let tb = generators::random_tree(n, 0.1, 1.0, &mut rng);
-    let p = uniform_marginal(n);
-    for (name, backend) in [("dense", GwBackend::Dense), ("ftfi", GwBackend::Ftfi)] {
-        let (r, total) =
-            time_once(|| gromov_wasserstein(&ta, &tb, &p, &p, backend, &GwParams::default()));
-        println!(
-            "{name:>5}: GW {:.5} in {total:.2}s total, {:.2}s field integration ({} CG iters)",
-            r.discrepancy, r.integration_seconds, r.iterations
-        );
-    }
-    Ok(())
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve_topvit(_args: &Args) -> CliResult {
+    Err("the TopViT backend needs the PJRT runtime — rebuild with `--features pjrt`".into())
 }
 
-fn cmd_info() -> anyhow::Result<()> {
+fn cmd_info() -> CliResult {
     println!("ftfi {} — Fast Tree-Field Integrators", env!("CARGO_PKG_VERSION"));
-    match Runtime::cpu() {
-        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
-        Err(e) => println!("PJRT unavailable: {e:#}"),
+    #[cfg(feature = "pjrt")]
+    {
+        use ftfi::runtime::Runtime;
+        match Runtime::cpu() {
+            Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+            Err(e) => println!("PJRT unavailable: {e:#}"),
+        }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT runtime: disabled (build with `--features pjrt`)");
     for name in [
         "sanity_matmul.hlo.txt",
         "topvit_fwd_b1.hlo.txt",

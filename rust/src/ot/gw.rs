@@ -11,7 +11,7 @@
 //! runs them in near-linear time.
 
 use crate::ftfi::functions::FDist;
-use crate::ftfi::TreeFieldIntegrator;
+use crate::ftfi::{PreparedIntegrator, TreeFieldIntegrator};
 use crate::linalg::matrix::Matrix;
 use crate::tree::Tree;
 
@@ -51,10 +51,13 @@ pub struct GwResult {
     pub integration_seconds: f64,
 }
 
-/// Internal: one side's distance operator.
+/// Internal: one side's distance operator. The FTFI variant holds
+/// *prepared* handles for both kernels (`f(x)=x`, `f(x)=x²`) — the
+/// conditional-gradient loop integrates with the same two functions on
+/// every iteration, so plans are frozen once up front.
 enum SideOp<'a> {
     Dense { d: Matrix, d2: Matrix },
-    Ftfi { tfi: &'a TreeFieldIntegrator },
+    Ftfi { id: PreparedIntegrator<'a>, sq: PreparedIntegrator<'a> },
 }
 
 impl SideOp<'_> {
@@ -62,14 +65,18 @@ impl SideOp<'_> {
     fn apply_id(&self, x: &Matrix) -> Matrix {
         match self {
             SideOp::Dense { d, .. } => d.matmul(x),
-            SideOp::Ftfi { tfi } => tfi.integrate(&FDist::Identity, x),
+            SideOp::Ftfi { id, .. } => {
+                id.integrate(x).expect("plan shape matches the tree")
+            }
         }
     }
     /// `M_f · X` for f(x)=x².
     fn apply_sq(&self, x: &Matrix) -> Matrix {
         match self {
             SideOp::Dense { d2, .. } => d2.matmul(x),
-            SideOp::Ftfi { tfi } => tfi.integrate(&FDist::Polynomial(vec![0.0, 0.0, 1.0]), x),
+            SideOp::Ftfi { sq, .. } => {
+                sq.integrate(x).expect("plan shape matches the tree")
+            }
         }
     }
 }
@@ -134,9 +141,20 @@ pub fn gromov_wasserstein(
             )
         }
         GwBackend::Ftfi => {
-            tfia = TreeFieldIntegrator::new(ta);
-            tfib = TreeFieldIntegrator::new(tb);
-            (SideOp::Ftfi { tfi: &tfia }, SideOp::Ftfi { tfi: &tfib })
+            let f_id = FDist::Identity;
+            let f_sq = FDist::Polynomial(vec![0.0, 0.0, 1.0]);
+            tfia = TreeFieldIntegrator::builder(ta).build().expect("valid tree metric");
+            tfib = TreeFieldIntegrator::builder(tb).build().expect("valid tree metric");
+            (
+                SideOp::Ftfi {
+                    id: tfia.prepare(&f_id).expect("identity kernel is always plannable"),
+                    sq: tfia.prepare(&f_sq).expect("polynomial kernel is always plannable"),
+                },
+                SideOp::Ftfi {
+                    id: tfib.prepare(&f_id).expect("identity kernel is always plannable"),
+                    sq: tfib.prepare(&f_sq).expect("polynomial kernel is always plannable"),
+                },
+            )
         }
     };
     integration_seconds += t0.elapsed().as_secs_f64();

@@ -6,7 +6,7 @@
 //! near-linear time instead of `O(N²)` (§1, application 2).
 
 use crate::ftfi::functions::FDist;
-use crate::ftfi::TreeFieldIntegrator;
+use crate::ftfi::{PreparedIntegrator, TreeFieldIntegrator};
 use crate::linalg::matrix::Matrix;
 use crate::tree::Tree;
 
@@ -64,32 +64,39 @@ impl KernelOp for DenseKernel {
 
 /// FTFI-backed kernel: `K·v` through the tree integrator with
 /// `f(x) = e^{-x/ε}`; the cost functional uses `f(x) = x·e^{-x/ε}`
-/// (a 0-cordial poly×exp product — still fast).
+/// (a 0-cordial poly×exp product — still fast). Both functions are
+/// frozen into [`PreparedIntegrator`] handles at construction, so the
+/// Sinkhorn iteration loop — the paper's canonical repeated-integration
+/// workload — never re-plans a cross block.
 pub struct FtfiKernel<'a> {
-    tfi: &'a TreeFieldIntegrator,
-    f_kernel: FDist,
-    f_cost: FDist,
+    kernel: PreparedIntegrator<'a>,
+    cost: PreparedIntegrator<'a>,
 }
 
 impl<'a> FtfiKernel<'a> {
-    pub fn new(tfi: &'a TreeFieldIntegrator, eps: f64) -> Self {
-        FtfiKernel {
-            tfi,
-            f_kernel: FDist::Exponential { lambda: -1.0 / eps, scale: 1.0 },
-            f_cost: FDist::PolyExp { coeffs: vec![0.0, 1.0], lambda: -1.0 / eps },
-        }
+    /// Prepare both kernels on the caller's integrator. With the default
+    /// policy this cannot fail (the exponential classes are 0-cordial),
+    /// but a caller-configured forced strategy that does not apply
+    /// surfaces here as a typed error rather than a panic.
+    pub fn new(
+        tfi: &'a TreeFieldIntegrator,
+        eps: f64,
+    ) -> Result<Self, crate::ftfi::FtfiError> {
+        let f_kernel = FDist::Exponential { lambda: -1.0 / eps, scale: 1.0 };
+        let f_cost = FDist::PolyExp { coeffs: vec![0.0, 1.0], lambda: -1.0 / eps };
+        Ok(FtfiKernel { kernel: tfi.prepare(&f_kernel)?, cost: tfi.prepare(&f_cost)? })
     }
 }
 
 impl KernelOp for FtfiKernel<'_> {
     fn apply(&self, v: &[f64]) -> Vec<f64> {
-        self.tfi.integrate_vec(&self.f_kernel, v)
+        self.kernel.integrate_vec(v).expect("marginal length matches the tree")
     }
     fn n(&self) -> usize {
-        self.tfi.n()
+        self.kernel.n()
     }
     fn cost(&self, u: &[f64], v: &[f64]) -> f64 {
-        let kdv = self.tfi.integrate_vec(&self.f_cost, v);
+        let kdv = self.cost.integrate_vec(v).expect("marginal length matches the tree");
         u.iter().zip(&kdv).map(|(a, b)| a * b).sum()
     }
 }
@@ -147,9 +154,9 @@ mod tests {
     fn ftfi_and_dense_kernels_agree() {
         let mut rng = Pcg::seed(1);
         let tree = generators::random_tree(60, 0.1, 1.0, &mut rng);
-        let tfi = TreeFieldIntegrator::new(&tree);
+        let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
         let dense = DenseKernel::new(&tree, 0.5);
-        let fast = FtfiKernel::new(&tfi, 0.5);
+        let fast = FtfiKernel::new(&tfi, 0.5).unwrap();
         let v = rng.uniform_vec(60, 0.1, 1.0);
         let kd = dense.apply(&v);
         let kf = fast.apply(&v);
@@ -166,8 +173,8 @@ mod tests {
     fn sinkhorn_converges_to_marginals() {
         let mut rng = Pcg::seed(2);
         let tree = generators::random_tree(40, 0.2, 1.0, &mut rng);
-        let tfi = TreeFieldIntegrator::new(&tree);
-        let kernel = FtfiKernel::new(&tfi, 0.8);
+        let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
+        let kernel = FtfiKernel::new(&tfi, 0.8).unwrap();
         let a = uniform_marginal(40);
         let mut b = rng.uniform_vec(40, 0.5, 1.5);
         let s: f64 = b.iter().sum();

@@ -10,6 +10,14 @@
 //! §4.3 cheap, since the coefficients change every step but the IT does
 //! not).
 //!
+//! On top of the structure, [`IntegratorTree::prepare`] freezes a
+//! specific `f` into a [`PreparedPlans`] handle: one cross-term [`Plan`]
+//! per internal-node direction plus the `f`-evaluated leaf matrices and
+//! pivot-distance coefficient tables. Repeated integrations with the
+//! same `f` then skip all planning (Chebyshev probe loops, lattice
+//! detection, FFT table construction) — the repeated-integration pattern
+//! of the serving coordinator and of the GW/Sinkhorn inner loops.
+//!
 //! Per internal node, the paper's eight fields materialise as:
 //! `left_ids` / `right_ids` (child-local → node-local id maps),
 //! `left_d` / `right_d` (sorted distinct pivot distances),
@@ -19,9 +27,16 @@
 
 use super::separator::{split, SeparatorScratch};
 use super::Tree;
-use crate::ftfi::cordial::{cross_apply, CrossPolicy};
+use crate::ftfi::cordial::{apply_plan, try_make_plan, CrossPolicy, Plan};
+use crate::ftfi::error::FtfiError;
 use crate::ftfi::functions::FDist;
 use crate::linalg::matrix::Matrix;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Monotonic id source: every built IntegratorTree gets a unique id so
+/// [`PreparedPlans`] can be pinned to the exact instance they were built
+/// for (vertex/node counts alone cannot distinguish same-shape trees).
+static IT_IDS: AtomicU64 = AtomicU64::new(1);
 
 /// One side (left or right) of an internal IT node.
 #[derive(Debug)]
@@ -63,6 +78,13 @@ pub struct IntegratorTree {
     nodes: Vec<ItNode>,
     n: usize,
     leaf_threshold: usize,
+    /// Unique instance id (see [`IT_IDS`]).
+    id: u64,
+    /// Cross-term plans built over this IT's lifetime (both by the
+    /// re-planning `integrate` path — 2 per internal node per call — and
+    /// once by `prepare`). Exposed through [`ItStats::plan_builds`]; the
+    /// prepared-path regression test pins it.
+    plan_builds: AtomicUsize,
 }
 
 /// Summary statistics (used by the perf log and the ablation benches).
@@ -74,6 +96,63 @@ pub struct ItStats {
     pub max_leaf_size: usize,
     pub total_distinct_distances: usize,
     pub max_distinct_distances: usize,
+    /// Total cross-term plans built so far (see
+    /// [`IntegratorTree::prepare`] — a prepared handle freezes this).
+    pub plan_builds: usize,
+}
+
+/// Everything `f`-dependent, frozen at prepare time: per-internal-node
+/// cross plans for both directions, `f`-transformed leaf matrices, and
+/// the `f(d)` coefficient tables used in the recombination step. Built
+/// by [`IntegratorTree::prepare`] / consumed by
+/// [`IntegratorTree::integrate_prepared`].
+enum PreparedNode {
+    Leaf {
+        /// `f`-transformed dense leaf matrix.
+        fmat: Vec<f64>,
+    },
+    Internal {
+        /// Plan for the cross product into the left side (xs = left.d).
+        into_left: Plan,
+        /// Plan for the cross product into the right side (xs = right.d).
+        into_right: Plan,
+        /// `f(left.d[i])` lookup table.
+        left_fd: Vec<f64>,
+        /// `f(right.d[i])` lookup table.
+        right_fd: Vec<f64>,
+    },
+}
+
+/// A frozen (tree, f, policy) integration plan. Cheap to apply, immutable
+/// and `f`-specific; obtain one from [`IntegratorTree::prepare`] (or the
+/// higher-level `TreeFieldIntegrator::prepare`).
+pub struct PreparedPlans {
+    f: FDist,
+    policy: CrossPolicy,
+    nodes: Vec<PreparedNode>,
+    n: usize,
+    /// Id of the IntegratorTree instance these plans were built for —
+    /// plans are not portable across trees, even same-shape ones.
+    tree_id: u64,
+    plans_built: usize,
+}
+
+impl PreparedPlans {
+    /// The function these plans were built for.
+    pub fn f(&self) -> &FDist {
+        &self.f
+    }
+
+    /// Number of tree vertices the plans expect.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// How many cross-term plans were built at prepare time (2 per
+    /// internal IT node).
+    pub fn plans_built(&self) -> usize {
+        self.plans_built
+    }
 }
 
 impl IntegratorTree {
@@ -87,7 +166,13 @@ impl IntegratorTree {
     pub fn with_leaf_threshold(tree: &Tree, leaf_threshold: usize) -> Self {
         let t = leaf_threshold.max(2);
         let n = tree.n();
-        let mut it = IntegratorTree { nodes: Vec::new(), n, leaf_threshold: t };
+        let mut it = IntegratorTree {
+            nodes: Vec::new(),
+            n,
+            leaf_threshold: t,
+            id: IT_IDS.fetch_add(1, Ordering::Relaxed),
+            plan_builds: AtomicUsize::new(0),
+        };
         let mut scratch = SeparatorScratch::new(n);
         let verts: Vec<u32> = (0..n as u32).collect();
         it.build(tree, verts, &mut scratch);
@@ -124,15 +209,32 @@ impl IntegratorTree {
         idx
     }
 
-    /// Integrate the tensor field `x` (`n×d`, rows indexed by tree vertex
-    /// id): returns `out[v] = Σ_u f(dist(v,u))·x[u]`. Exact (up to the
-    /// floating-point accuracy of the selected cross-term multiplier).
-    pub fn integrate(&self, f: &FDist, x: &Matrix, policy: &CrossPolicy) -> Matrix {
-        assert_eq!(x.rows(), self.n, "field has {} rows, tree has {}", x.rows(), self.n);
+    /// Fallible integration: `out[v] = Σ_u f(dist(v,u))·x[u]` for a
+    /// tensor field `x` (`n×d`, rows indexed by tree vertex id). Exact
+    /// (up to the floating-point accuracy of the selected cross-term
+    /// multiplier). Plans every cross block on each call — use
+    /// [`IntegratorTree::prepare`] to amortise planning over repeated
+    /// integrations with the same `f`.
+    pub fn try_integrate(
+        &self,
+        f: &FDist,
+        x: &Matrix,
+        policy: &CrossPolicy,
+    ) -> Result<Matrix, FtfiError> {
+        if x.rows() != self.n {
+            return Err(FtfiError::ShapeMismatch { expected: self.n, got: x.rows() });
+        }
         if self.n == 0 {
-            return Matrix::zeros(0, x.cols());
+            return Ok(Matrix::zeros(0, x.cols()));
         }
         self.integrate_node(0, x, f, policy)
+    }
+
+    /// Infallible [`IntegratorTree::try_integrate`] shim; panics on shape
+    /// mismatch or a forced-inapplicable strategy.
+    pub fn integrate(&self, f: &FDist, x: &Matrix, policy: &CrossPolicy) -> Matrix {
+        self.try_integrate(f, x, policy)
+            .expect("IntegratorTree::integrate failed (use try_integrate for a Result)")
     }
 
     /// Convenience wrapper for scalar fields.
@@ -141,24 +243,85 @@ impl IntegratorTree {
         self.integrate(f, &m, policy).into_vec()
     }
 
-    fn integrate_node(&self, idx: usize, x: &Matrix, f: &FDist, policy: &CrossPolicy) -> Matrix {
+    /// Freeze `f` into a reusable [`PreparedPlans`] handle: runs
+    /// [`try_make_plan`] once per internal-node direction (caching the
+    /// Chebyshev expansions, lattice FFT tables, separable
+    /// decompositions and rational options inside the returned plans)
+    /// and `f`-transforms the leaf distance matrices. `channels` is the
+    /// expected field width `d` (only used by the planning cost model —
+    /// correctness does not depend on it).
+    pub fn prepare(
+        &self,
+        f: &FDist,
+        channels: usize,
+        policy: &CrossPolicy,
+    ) -> Result<PreparedPlans, FtfiError> {
+        policy.validate()?;
+        let mut nodes = Vec::with_capacity(self.nodes.len());
+        let mut built = 0usize;
+        for node in &self.nodes {
+            match node {
+                ItNode::Leaf { dmat, .. } => {
+                    nodes.push(PreparedNode::Leaf {
+                        fmat: dmat.iter().map(|&t| f.eval(t)).collect(),
+                    });
+                }
+                ItNode::Internal { left, right, .. } => {
+                    let into_left = try_make_plan(f, &left.d, &right.d, channels, policy)?;
+                    let into_right = try_make_plan(f, &right.d, &left.d, channels, policy)?;
+                    built += 2;
+                    nodes.push(PreparedNode::Internal {
+                        into_left,
+                        into_right,
+                        left_fd: left.d.iter().map(|&t| f.eval(t)).collect(),
+                        right_fd: right.d.iter().map(|&t| f.eval(t)).collect(),
+                    });
+                }
+            }
+        }
+        self.plan_builds.fetch_add(built, Ordering::Relaxed);
+        Ok(PreparedPlans {
+            f: f.clone(),
+            policy: policy.clone(),
+            nodes,
+            n: self.n,
+            tree_id: self.id,
+            plans_built: built,
+        })
+    }
+
+    /// Integrate using plans frozen by [`IntegratorTree::prepare`]:
+    /// no planning work happens on this path (the `plan_builds` counter
+    /// does not move). Panic-free on malformed input.
+    pub fn integrate_prepared(
+        &self,
+        x: &Matrix,
+        plans: &PreparedPlans,
+    ) -> Result<Matrix, FtfiError> {
+        if plans.tree_id != self.id {
+            return Err(FtfiError::InvalidInput(
+                "prepared plans were built for a different IntegratorTree".to_string(),
+            ));
+        }
+        if x.rows() != self.n {
+            return Err(FtfiError::ShapeMismatch { expected: self.n, got: x.rows() });
+        }
+        if self.n == 0 {
+            return Ok(Matrix::zeros(0, x.cols()));
+        }
+        Ok(self.integrate_prepared_node(0, x, plans))
+    }
+
+    fn integrate_node(
+        &self,
+        idx: usize,
+        x: &Matrix,
+        f: &FDist,
+        policy: &CrossPolicy,
+    ) -> Result<Matrix, FtfiError> {
         match &self.nodes[idx] {
             ItNode::Leaf { size, dmat } => {
-                let d = x.cols();
-                let mut out = Matrix::zeros(*size, d);
-                for i in 0..*size {
-                    let orow = out.row_mut(i);
-                    for j in 0..*size {
-                        let c = f.eval(dmat[i * size + j]);
-                        if c == 0.0 {
-                            continue;
-                        }
-                        for (o, &v) in orow.iter_mut().zip(x.row(j)) {
-                            *o += c * v;
-                        }
-                    }
-                }
-                out
+                Ok(leaf_apply(*size, x, |k| f.eval(dmat[k])))
             }
             ItNode::Internal { size, left_child, right_child, left, right } => {
                 let d = x.cols();
@@ -166,56 +329,68 @@ impl IntegratorTree {
                 let xr = x.gather_rows(&right.ids);
                 // Inner sums within each side (pivot belongs to both, but
                 // its output is taken from the left side only).
-                let ol = self.integrate_node(*left_child, &xl, f, policy);
-                let or_ = self.integrate_node(*right_child, &xr, f, policy);
+                let ol = self.integrate_node(*left_child, &xl, f, policy)?;
+                let or_ = self.integrate_node(*right_child, &xr, f, policy)?;
 
                 // Aggregated fields per distinct pivot distance (Eq. 3).
                 let xr_agg = aggregate(right, &xr);
                 let xl_agg = aggregate(left, &xl);
 
-                // Cross contribution into the left side (Eq. 4):
-                // C[i][j] = f(left_d[i] + right_d[j]); row τ(v) minus the
-                // pivot group term removes j = p from the sum.
-                let cr = cross_apply(f, &left.d, &right.d, &xr_agg, policy);
-                let mut out = Matrix::zeros(*size, d);
-                for (vloc, &tau) in left.id_d.iter().enumerate() {
-                    let coeff = f.eval(left.d[tau as usize]);
-                    let node_row = left.ids[vloc] as usize;
-                    let dst = out.row_mut(node_row);
-                    let src = ol.row(vloc);
-                    let crr = cr.row(tau as usize);
-                    let piv = xr_agg.row(0);
-                    for c in 0..d {
-                        dst[c] += src[c] + crr[c] - coeff * piv[c];
-                    }
-                }
-                drop(ol);
-                // Cross into the right side with Cᵀ — same f, roles of the
-                // distance arrays swapped. The pivot row is skipped: its
-                // full integral was produced by the left pass.
-                let cl = cross_apply(f, &right.d, &left.d, &xl_agg, policy);
-                for (uloc, &tau) in right.id_d.iter().enumerate() {
-                    if uloc as u32 == right.pivot {
-                        continue;
-                    }
-                    let coeff = f.eval(right.d[tau as usize]);
-                    let node_row = right.ids[uloc] as usize;
-                    let dst = out.row_mut(node_row);
-                    let src = or_.row(uloc);
-                    let clr = cl.row(tau as usize);
-                    let piv = xl_agg.row(0);
-                    for c in 0..d {
-                        dst[c] += src[c] + clr[c] - coeff * piv[c];
-                    }
-                }
-                out
+                // Cross contributions (Eq. 4): C[i][j] = f(d_i + d_j) into
+                // the left side, Cᵀ (roles swapped) into the right side.
+                // Plans are rebuilt on every call here — that is exactly
+                // what `prepare` amortises away.
+                let plan_l = try_make_plan(f, &left.d, &right.d, d, policy)?;
+                let plan_r = try_make_plan(f, &right.d, &left.d, d, policy)?;
+                self.plan_builds.fetch_add(2, Ordering::Relaxed);
+                let cr = apply_plan(&plan_l, f, &left.d, &right.d, &xr_agg, policy);
+                let cl = apply_plan(&plan_r, f, &right.d, &left.d, &xl_agg, policy);
+                let left_fd: Vec<f64> = left.d.iter().map(|&t| f.eval(t)).collect();
+                let right_fd: Vec<f64> = right.d.iter().map(|&t| f.eval(t)).collect();
+                Ok(combine_sides(
+                    *size, d, left, right, &ol, &or_, &cr, &cl, &xl_agg, &xr_agg, &left_fd,
+                    &right_fd,
+                ))
             }
+        }
+    }
+
+    fn integrate_prepared_node(&self, idx: usize, x: &Matrix, plans: &PreparedPlans) -> Matrix {
+        match (&self.nodes[idx], &plans.nodes[idx]) {
+            (ItNode::Leaf { size, .. }, PreparedNode::Leaf { fmat }) => {
+                leaf_apply(*size, x, |k| fmat[k])
+            }
+            (
+                ItNode::Internal { size, left_child, right_child, left, right },
+                PreparedNode::Internal { into_left, into_right, left_fd, right_fd },
+            ) => {
+                let d = x.cols();
+                let xl = x.gather_rows(&left.ids);
+                let xr = x.gather_rows(&right.ids);
+                let ol = self.integrate_prepared_node(*left_child, &xl, plans);
+                let or_ = self.integrate_prepared_node(*right_child, &xr, plans);
+                let xr_agg = aggregate(right, &xr);
+                let xl_agg = aggregate(left, &xl);
+                // Cached plans: no probe loops, no lattice detection, no
+                // FFT-table construction on this path.
+                let cr = apply_plan(into_left, &plans.f, &left.d, &right.d, &xr_agg, &plans.policy);
+                let cl = apply_plan(into_right, &plans.f, &right.d, &left.d, &xl_agg, &plans.policy);
+                combine_sides(
+                    *size, d, left, right, &ol, &or_, &cr, &cl, &xl_agg, &xr_agg, left_fd,
+                    right_fd,
+                )
+            }
+            _ => unreachable!("prepared plans desynced from the IntegratorTree arena"),
         }
     }
 
     /// Structure statistics.
     pub fn stats(&self) -> ItStats {
-        let mut st = ItStats { nodes: self.nodes.len(), ..Default::default() };
+        let mut st = ItStats {
+            nodes: self.nodes.len(),
+            plan_builds: self.plan_builds.load(Ordering::Relaxed),
+            ..Default::default()
+        };
         self.stats_rec(0, 1, &mut st);
         st
     }
@@ -236,6 +411,76 @@ impl IntegratorTree {
             }
         }
     }
+}
+
+/// Dense leaf multiply with the coefficient for flat index `i*size+j`
+/// supplied by `coeff` (raw `f.eval` on the re-planning path, the cached
+/// `f`-matrix on the prepared path).
+fn leaf_apply(size: usize, x: &Matrix, coeff: impl Fn(usize) -> f64) -> Matrix {
+    let d = x.cols();
+    let mut out = Matrix::zeros(size, d);
+    for i in 0..size {
+        let orow = out.row_mut(i);
+        for j in 0..size {
+            let c = coeff(i * size + j);
+            if c == 0.0 {
+                continue;
+            }
+            for (o, &v) in orow.iter_mut().zip(x.row(j)) {
+                *o += c * v;
+            }
+        }
+    }
+    out
+}
+
+/// Recombination step shared by the re-planning and prepared paths:
+/// scatter inner sums + cross contributions into node-local rows, with
+/// the pivot-group correction (row τ(v) minus the pivot term removes
+/// j = p from the sum; the pivot row itself is produced by the left
+/// pass only).
+#[allow(clippy::too_many_arguments)]
+fn combine_sides(
+    size: usize,
+    d: usize,
+    left: &Side,
+    right: &Side,
+    ol: &Matrix,
+    or_: &Matrix,
+    cr: &Matrix,
+    cl: &Matrix,
+    xl_agg: &Matrix,
+    xr_agg: &Matrix,
+    left_fd: &[f64],
+    right_fd: &[f64],
+) -> Matrix {
+    let mut out = Matrix::zeros(size, d);
+    for (vloc, &tau) in left.id_d.iter().enumerate() {
+        let coeff = left_fd[tau as usize];
+        let node_row = left.ids[vloc] as usize;
+        let dst = out.row_mut(node_row);
+        let src = ol.row(vloc);
+        let crr = cr.row(tau as usize);
+        let piv = xr_agg.row(0);
+        for c in 0..d {
+            dst[c] += src[c] + crr[c] - coeff * piv[c];
+        }
+    }
+    for (uloc, &tau) in right.id_d.iter().enumerate() {
+        if uloc as u32 == right.pivot {
+            continue;
+        }
+        let coeff = right_fd[tau as usize];
+        let node_row = right.ids[uloc] as usize;
+        let dst = out.row_mut(node_row);
+        let src = or_.row(uloc);
+        let clr = cl.row(tau as usize);
+        let piv = xl_agg.row(0);
+        for c in 0..d {
+            dst[c] += src[c] + clr[c] - coeff * piv[c];
+        }
+    }
+    out
 }
 
 /// Distances from `pivot` to every vertex of `side_verts`, restricted to
@@ -361,6 +606,11 @@ mod tests {
             let got = it.integrate(f, &x, &CrossPolicy::default());
             let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
             assert!(rel < tol, "{f:?} t={t} n={}: rel={rel}", tree.n());
+            // The prepared path must agree with the re-planning path.
+            let plans = it.prepare(f, d, &CrossPolicy::default()).unwrap();
+            let got_p = it.integrate_prepared(&x, &plans).unwrap();
+            let rel_p = got_p.frobenius_diff(&want) / (1.0 + want.frobenius());
+            assert!(rel_p < tol, "prepared {f:?} t={t} n={}: rel={rel_p}", tree.n());
         }
     }
 
@@ -456,5 +706,67 @@ mod tests {
                 assert!((out.get(i, c) - colsum[c]).abs() < 1e-8);
             }
         }
+    }
+
+    #[test]
+    fn prepared_path_builds_plans_exactly_once() {
+        let mut rng = Pcg::seed(12);
+        let tree = random_tree(300, 0.1, 1.0, &mut rng);
+        let it = IntegratorTree::with_leaf_threshold(&tree, 8);
+        let f = FDist::inverse_quadratic(0.5);
+        let policy = CrossPolicy::default();
+        assert_eq!(it.stats().plan_builds, 0);
+        let plans = it.prepare(&f, 2, &policy).unwrap();
+        let after_prepare = it.stats().plan_builds;
+        assert_eq!(after_prepare, plans.plans_built());
+        assert!(after_prepare > 0, "an n=300, t=8 IT must have internal nodes");
+        // Repeated prepared integrations build no further plans…
+        let x = Matrix::randn(300, 2, &mut rng);
+        for _ in 0..5 {
+            it.integrate_prepared(&x, &plans).unwrap();
+        }
+        assert_eq!(it.stats().plan_builds, after_prepare);
+        // …while each re-planning call rebuilds all of them.
+        it.integrate(&f, &x, &policy);
+        assert_eq!(it.stats().plan_builds, 2 * after_prepare);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error_not_a_panic() {
+        let mut rng = Pcg::seed(13);
+        let tree = random_tree(50, 0.1, 1.0, &mut rng);
+        let it = IntegratorTree::new(&tree);
+        let f = FDist::Identity;
+        let x = Matrix::zeros(49, 2);
+        assert!(matches!(
+            it.try_integrate(&f, &x, &CrossPolicy::default()),
+            Err(FtfiError::ShapeMismatch { expected: 50, got: 49 })
+        ));
+        let plans = it.prepare(&f, 2, &CrossPolicy::default()).unwrap();
+        assert!(matches!(
+            it.integrate_prepared(&x, &plans),
+            Err(FtfiError::ShapeMismatch { expected: 50, got: 49 })
+        ));
+    }
+
+    #[test]
+    fn prepared_plans_are_pinned_to_their_tree() {
+        // Two same-shape trees (identical n, weights drawn the same way)
+        // must not accept each other's plans: distance tables differ, so
+        // cross-application would be silently wrong or out of bounds.
+        let mut rng = Pcg::seed(14);
+        let ta = random_tree(120, 0.1, 1.0, &mut rng);
+        let tb = random_tree(120, 0.1, 1.0, &mut rng);
+        let ita = IntegratorTree::with_leaf_threshold(&ta, 8);
+        let itb = IntegratorTree::with_leaf_threshold(&tb, 8);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let plans_a = ita.prepare(&f, 1, &CrossPolicy::default()).unwrap();
+        let x = Matrix::randn(120, 1, &mut rng);
+        assert!(matches!(
+            itb.integrate_prepared(&x, &plans_a),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        // …and the rightful owner still accepts them.
+        assert!(ita.integrate_prepared(&x, &plans_a).is_ok());
     }
 }

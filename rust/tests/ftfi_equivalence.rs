@@ -12,7 +12,7 @@ use ftfi::graph::{generators, mst::minimum_spanning_tree};
 use ftfi::linalg::matrix::Matrix;
 use ftfi::ml::rng::Pcg;
 use ftfi::tree::Tree;
-use ftfi::TreeFieldIntegrator;
+use ftfi::{FtfiError, TreeFieldIntegrator};
 
 fn f_pool(rng: &mut Pcg) -> Vec<(FDist, f64)> {
     vec![
@@ -54,8 +54,8 @@ fn property_ftfi_equals_brute_random_sweep() {
         let x = Matrix::randn(n, d, &mut rng);
         let t = [2usize, 8, 48][rng.below(3)];
         for (f, tol) in f_pool(&mut rng) {
-            let tfi = TreeFieldIntegrator::with_options(&tree, t, CrossPolicy::default());
-            let got = tfi.integrate(&f, &x);
+            let tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(t).build().unwrap();
+            let got = tfi.try_integrate(&f, &x).unwrap();
             let want = btfi(&tree, &f, &x);
             let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
             assert!(rel < tol, "case {case} n={n} d={d} t={t} {f:?}: rel {rel}");
@@ -77,8 +77,8 @@ fn property_lattice_trees_any_f() {
             (freq * x).sin() / (1.0 + 0.2 * x)
         }));
         let x = Matrix::randn(n, 2, &mut rng);
-        let tfi = TreeFieldIntegrator::new(&tree);
-        let got = tfi.integrate(&f, &x);
+        let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
+        let got = tfi.try_integrate(&f, &x).unwrap();
         let want = btfi(&tree, &f, &x);
         let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
         assert!(rel < 1e-7, "case {case} n={n} p={p} q={q}: rel {rel}");
@@ -92,7 +92,7 @@ fn property_linearity() {
         let mut rng = Pcg::seed(3000 + case);
         let n = rng.range(10, 200);
         let tree = random_tree(n, 0.1, 1.0, &mut rng);
-        let tfi = TreeFieldIntegrator::new(&tree);
+        let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
         let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
         let x = Matrix::randn(n, 2, &mut rng);
         let y = Matrix::randn(n, 2, &mut rng);
@@ -100,10 +100,10 @@ fn property_linearity() {
         let mut combo = x.clone();
         combo.scale(a);
         combo.axpy(b, &y);
-        let lhs = tfi.integrate(&f, &combo);
-        let mut rhs = tfi.integrate(&f, &x);
+        let lhs = tfi.try_integrate(&f, &combo).unwrap();
+        let mut rhs = tfi.try_integrate(&f, &x).unwrap();
         rhs.scale(a);
-        rhs.axpy(b, &tfi.integrate(&f, &y));
+        rhs.axpy(b, &tfi.try_integrate(&f, &y).unwrap());
         assert!(lhs.frobenius_diff(&rhs) / (1.0 + rhs.frobenius()) < 1e-9, "case {case}");
     }
 }
@@ -115,12 +115,12 @@ fn property_operator_symmetry() {
         let mut rng = Pcg::seed(4000 + case);
         let n = rng.range(10, 150);
         let tree = random_tree(n, 0.2, 1.0, &mut rng);
-        let tfi = TreeFieldIntegrator::new(&tree);
+        let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
         let f = FDist::inverse_quadratic(0.7);
         let x = rng.normal_vec(n);
         let y = rng.normal_vec(n);
-        let my = tfi.integrate_vec(&f, &y);
-        let mx = tfi.integrate_vec(&f, &x);
+        let my = tfi.try_integrate_vec(&f, &y).unwrap();
+        let mx = tfi.try_integrate_vec(&f, &x).unwrap();
         let lhs: f64 = x.iter().zip(&my).map(|(a, b)| a * b).sum();
         let rhs: f64 = y.iter().zip(&mx).map(|(a, b)| a * b).sum();
         assert!((lhs - rhs).abs() < 1e-6 * (1.0 + lhs.abs()), "case {case}: {lhs} vs {rhs}");
@@ -200,10 +200,10 @@ fn property_graph_pipeline_consistency() {
                 assert!(d_tree[v] + 1e-9 >= d_graph[v], "case {case}: ({u},{v})");
             }
         }
-        let gfi = ftfi::GraphFieldIntegrator::new(&g);
+        let gfi = ftfi::GraphFieldIntegrator::try_new(&g).unwrap();
         let x = Matrix::randn(n, 1, &mut rng);
         let f = FDist::Exponential { lambda: -0.6, scale: 1.0 };
-        let got = gfi.integrate(&f, &x);
+        let got = gfi.try_integrate(&f, &x).unwrap();
         let want = btfi(gfi.tree(), &f, &x);
         assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-9);
     }
@@ -228,10 +228,196 @@ fn pathological_tree_shapes() {
     let caterpillar = Tree::from_edges(400, &cat_edges);
     for (name, tree) in [("path", path), ("star", star), ("caterpillar", caterpillar)] {
         let x = Matrix::randn(tree.n(), 2, &mut rng);
-        let tfi = TreeFieldIntegrator::new(&tree);
-        let got = tfi.integrate(&f, &x);
+        let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
+        let got = tfi.try_integrate(&f, &x).unwrap();
         let want = btfi(&tree, &f, &x);
         let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
         assert!(rel < 1e-9, "{name}: rel {rel}");
     }
+}
+
+/// Satellite sweep: every *applicable* strategy, forced through
+/// `CrossPolicy::force` at the full-integrator level, must agree with
+/// the forced-Dense ground truth on a rational-weight tree (rational
+/// weights make the Lattice/Vandermonde paths applicable). Inapplicable
+/// (f, strategy) combos surface as `StrategyInapplicable` and are
+/// skipped by definition; the test pins a minimum applicable count so
+/// the sweep cannot silently degenerate.
+#[test]
+fn strategy_equivalence_sweep_all_fdist_variants() {
+    use std::sync::Arc;
+    let mut rng = Pcg::seed(9000);
+    let tree = random_rational_tree(160, 3, 4, &mut rng);
+    let x = Matrix::randn(160, 2, &mut rng);
+    let fs: Vec<FDist> = vec![
+        FDist::Identity,
+        FDist::Polynomial(vec![0.4, 1.0, -0.05]),
+        FDist::Exponential { lambda: -0.3, scale: 1.2 },
+        FDist::PolyExp { coeffs: vec![1.0, 0.3], lambda: -0.4 },
+        FDist::Trig { omega: 0.6, phase: 0.3, scale: 1.0 },
+        FDist::Rational { num: vec![1.0], den: vec![1.0, 0.0, 0.5] },
+        FDist::ExpOverLinear { lambda: -0.2, c: 1.5 },
+        FDist::ExpQuadratic { u: -0.05, v: 0.02, w: 0.1 },
+        FDist::Custom(Arc::new(|x: f64| (0.4 * x).sin() / (1.0 + 0.3 * x))),
+    ];
+    let all = [
+        Strategy::Separable,
+        Strategy::Lattice,
+        Strategy::RationalSum,
+        Strategy::Cauchy,
+        Strategy::Vandermonde,
+        Strategy::Chebyshev,
+    ];
+    let mut applicable = 0usize;
+    for f in &fs {
+        // Ground truth: everything forced through the dense multiplier,
+        // itself pinned against the brute-force oracle.
+        let dense = TreeFieldIntegrator::builder(&tree)
+            .leaf_threshold(8)
+            .policy(CrossPolicy { force: Some(Strategy::Dense), ..Default::default() })
+            .build()
+            .unwrap();
+        let want = dense.try_integrate(f, &x).unwrap();
+        let brute = btfi(&tree, f, &x);
+        assert!(
+            want.frobenius_diff(&brute) / (1.0 + brute.frobenius()) < 1e-9,
+            "{f:?}: dense path diverged from brute oracle"
+        );
+        for &s in &all {
+            let policy =
+                CrossPolicy { force: Some(s), dense_cutoff: 0, ..Default::default() };
+            let tfi = TreeFieldIntegrator::builder(&tree)
+                .leaf_threshold(8)
+                .policy(policy)
+                .build()
+                .unwrap();
+            match tfi.prepare(f) {
+                Err(FtfiError::StrategyInapplicable { .. }) => continue,
+                Err(e) => panic!("{f:?} forced {s:?}: unexpected error {e}"),
+                Ok(prepared) => {
+                    applicable += 1;
+                    let got = prepared.integrate(&x).unwrap();
+                    // Exact strategies (separable decompositions, the
+                    // lattice FFT) hold to 1e-9; Chebyshev/Vandermonde
+                    // are spectrally accurate to the probe tolerance,
+                    // and the RationalSum / Cauchy LDR paths are exact
+                    // in exact arithmetic but shed digits in f64
+                    // (DESIGN.md, Numerics).
+                    let tol = match s {
+                        Strategy::RationalSum | Strategy::Cauchy => 5e-6,
+                        Strategy::Chebyshev | Strategy::Vandermonde => 1e-6,
+                        _ => 1e-9,
+                    };
+                    let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+                    assert!(rel < tol, "{f:?} forced {s:?}: rel {rel}");
+                    // The re-planning path must match the prepared path.
+                    let got2 = tfi.try_integrate(f, &x).unwrap();
+                    let drift = got2.frobenius_diff(&got) / (1.0 + got.frobenius());
+                    assert!(drift < 1e-12, "{f:?} forced {s:?}: drift {drift}");
+                }
+            }
+        }
+    }
+    // Separable (5) + Lattice (9) + RationalSum + Cauchy + Vandermonde
+    // alone give 17 applicable combos; Chebyshev adds more. Pin a floor
+    // so the sweep cannot silently degenerate into skipping everything.
+    assert!(applicable >= 17, "only {applicable} (f, strategy) combos were applicable");
+}
+
+/// Satellite error paths: malformed input yields the right `FtfiError`
+/// variant instead of a panic, on every public surface.
+#[test]
+fn error_paths_return_typed_errors() {
+    // Disconnected graph.
+    let g = ftfi::Graph::from_edges(
+        6,
+        &[(0, 1, 1.0), (1, 2, 1.0), (3, 4, 1.0), (4, 5, 1.0)],
+    );
+    assert!(matches!(
+        ftfi::GraphFieldIntegrator::try_new(&g),
+        Err(FtfiError::DisconnectedGraph)
+    ));
+
+    // Shape mismatch through both integrate paths.
+    let mut rng = Pcg::seed(42);
+    let tree = random_tree(60, 0.1, 1.0, &mut rng);
+    let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
+    let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+    let prepared = tfi.prepare(&f).unwrap();
+    let bad = Matrix::zeros(59, 2);
+    assert!(matches!(
+        prepared.integrate(&bad),
+        Err(FtfiError::ShapeMismatch { expected: 60, got: 59 })
+    ));
+    assert!(matches!(
+        tfi.try_integrate(&f, &bad),
+        Err(FtfiError::ShapeMismatch { expected: 60, got: 59 })
+    ));
+
+    // Inapplicable forced strategy: Lattice on an irrational-weight tree.
+    let forced =
+        CrossPolicy { force: Some(Strategy::Lattice), dense_cutoff: 0, ..Default::default() };
+    let tfi = TreeFieldIntegrator::builder(&tree)
+        .leaf_threshold(4)
+        .policy(forced)
+        .build()
+        .unwrap();
+    let err = tfi.prepare(&f).err().expect("lattice must be inapplicable");
+    assert!(matches!(
+        err,
+        FtfiError::StrategyInapplicable { strategy: Strategy::Lattice, .. }
+    ));
+    // …and the re-planning path reports the same typed error.
+    let x = Matrix::randn(60, 1, &mut rng);
+    assert!(matches!(
+        tfi.try_integrate(&f, &x),
+        Err(FtfiError::StrategyInapplicable { strategy: Strategy::Lattice, .. })
+    ));
+
+    // Forced Separable on a non-separable f.
+    let forced = CrossPolicy {
+        force: Some(Strategy::Separable),
+        dense_cutoff: 0,
+        ..Default::default()
+    };
+    let tfi = TreeFieldIntegrator::builder(&tree)
+        .leaf_threshold(4)
+        .policy(forced)
+        .build()
+        .unwrap();
+    let err = tfi
+        .prepare(&FDist::inverse_quadratic(0.5))
+        .err()
+        .expect("separable must be inapplicable");
+    assert!(matches!(
+        err,
+        FtfiError::StrategyInapplicable { strategy: Strategy::Separable, .. }
+    ));
+}
+
+/// Acceptance: `prepare(&f)` builds every plan exactly once; k repeated
+/// `integrate` calls reuse them (the `plan_builds` counter in `ItStats`
+/// does not move) and stay correct against the brute oracle.
+#[test]
+fn prepare_builds_plans_once_and_reuses_them() {
+    let mut rng = Pcg::seed(77);
+    let tree = random_tree(400, 0.1, 1.0, &mut rng);
+    let tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(8).build().unwrap();
+    let f = FDist::inverse_quadratic(0.6);
+    let base = tfi.stats().plan_builds;
+    let prepared = tfi.prepare(&f).unwrap();
+    let after = tfi.stats().plan_builds;
+    assert_eq!(after - base, prepared.plans_built());
+    assert!(prepared.plans_built() > 0);
+    let xs: Vec<Matrix> = (0..6).map(|_| Matrix::randn(400, 2, &mut rng)).collect();
+    for x in &xs {
+        let got = prepared.integrate(x).unwrap();
+        let want = btfi(&tree, &f, x);
+        assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-8);
+    }
+    assert_eq!(tfi.stats().plan_builds, after, "prepared integrations must not re-plan");
+    let refs: Vec<&Matrix> = xs.iter().collect();
+    let batch = prepared.integrate_batch(&refs).unwrap();
+    assert_eq!(batch.len(), xs.len());
+    assert_eq!(tfi.stats().plan_builds, after, "integrate_batch must not re-plan");
 }

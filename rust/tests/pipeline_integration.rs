@@ -26,7 +26,7 @@ fn mesh_interpolation_pipeline() {
     let n = mesh.n_vertices();
     let g = mesh.to_graph();
     let tree = minimum_spanning_tree(&g);
-    let tfi = TreeFieldIntegrator::new(&tree);
+    let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
 
     let mut masked = vec![true; n];
     for i in rng.sample_distinct(n, n / 5) {
@@ -38,7 +38,11 @@ fn mesh_interpolation_pipeline() {
             field.row_mut(i).copy_from_slice(&mesh.normals[i]);
         }
     }
-    let pred = tfi.integrate(&FDist::inverse_quadratic(8.0), &field);
+    let pred = tfi
+        .prepare(&FDist::inverse_quadratic(8.0))
+        .unwrap()
+        .integrate(&field)
+        .unwrap();
     let mut total = 0.0;
     let mut count = 0;
     for i in 0..n {
@@ -61,14 +65,12 @@ fn graph_classification_pipeline() {
         .graphs
         .iter()
         .map(|g| {
-            let gfi = GraphFieldIntegrator::new(g);
+            let gfi = GraphFieldIntegrator::try_new(g).unwrap();
+            let prepared = gfi.prepare(&FDist::Identity).unwrap();
             lanczos_smallest(
                 g.n(),
                 6.min(g.n()),
-                |v| {
-                    gfi.integrate(&FDist::Identity, &Matrix::from_vec(v.len(), 1, v.to_vec()))
-                        .into_vec()
-                },
+                |v| prepared.integrate_vec(v).unwrap(),
                 &mut rng,
             )
             .into_iter()
@@ -106,9 +108,9 @@ fn learnable_f_pipeline() {
     let after = relative_frobenius_error(&g, &tree, &model.to_fdist());
     assert!(after < before * 0.9, "no improvement: {before} -> {after}");
     // Trained f through FTFI matches brute.
-    let tfi = TreeFieldIntegrator::new(&tree);
+    let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
     let x = Matrix::randn(150, 1, &mut rng);
-    let fast = tfi.integrate(&model.to_fdist(), &x);
+    let fast = tfi.try_integrate(&model.to_fdist(), &x).unwrap();
     let slow = ftfi::ftfi::brute::btfi(&tree, &model.to_fdist(), &x);
     assert!(fast.frobenius_diff(&slow) / (1.0 + slow.frobenius()) < 1e-6);
 }
@@ -118,12 +120,12 @@ fn learnable_f_pipeline() {
 fn sinkhorn_pipeline() {
     let mut rng = Pcg::seed(9);
     let tree = ftfi::graph::generators::random_tree(80, 0.2, 1.0, &mut rng);
-    let tfi = TreeFieldIntegrator::new(&tree);
+    let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
     let a = uniform_marginal(80);
     let mut b = rng.uniform_vec(80, 0.2, 1.8);
     let s: f64 = b.iter().sum();
     b.iter_mut().for_each(|x| *x /= s);
-    let fast = sinkhorn(&FtfiKernel::new(&tfi, 0.6), &a, &b, 1e-9, 400);
+    let fast = sinkhorn(&FtfiKernel::new(&tfi, 0.6).unwrap(), &a, &b, 1e-9, 400);
     let dense = sinkhorn(&DenseKernel::new(&tree, 0.6), &a, &b, 1e-9, 400);
     assert!(fast.marginal_error < 1e-8);
     assert!((fast.cost - dense.cost).abs() < 1e-6 * (1.0 + dense.cost));

@@ -1,6 +1,9 @@
 //! Integration tests over the AOT → PJRT boundary: require the artifacts
 //! built by `make artifacts` (skipped with a clear message otherwise) and
 //! exercise the full python-compiled / rust-executed stack.
+//!
+//! This target is gated behind the `pjrt` cargo feature (see Cargo.toml)
+//! — run with `cargo test --features pjrt --test runtime_integration`.
 
 use ftfi::ml::rng::Pcg;
 use ftfi::ml::shapes;
