@@ -5,6 +5,9 @@
 //!   theoretical 6);
 //! - prepared-plan reuse vs per-call re-planning (the §3.1 "build once,
 //!   integrate many" claim, measured);
+//! - parallel scaling of the multi-threaded execution engine (threads ∈
+//!   {1, 2, 4, 8} on an n = 4000 batch-of-8 workload), with a serial
+//!   bit-identity check and a machine-readable `BENCH_parallel.json`;
 //! - cross-multiplier strategy crossover on the same tree (separable vs
 //!   lattice vs Chebyshev vs dense);
 //! - RFF feature count vs error (§A.2.1's variance claim);
@@ -12,7 +15,10 @@
 //!   rational degree of the learnable f;
 //! - ModelNet10-substitute point-cloud classification (Appendix D.1).
 //!
-//! Run: `cargo bench --bench ablations`
+//! Run: `cargo bench --bench ablations`. The CI bench-smoke job runs
+//! `cargo bench --bench ablations -- --quick`, which executes only the
+//! cheap parallel-scaling sweep and emits `BENCH_parallel.json` as the
+//! perf-trajectory artifact.
 
 use ftfi::bench_util::{banner, bench, time_once, Table};
 use ftfi::ftfi::cordial::{cross_apply, cross_apply_dense, CrossPolicy, Strategy};
@@ -99,6 +105,79 @@ fn prepared_vs_replan() {
         ]);
     }
     println!("(plans built stays constant in k: planning happens once, at prepare time)");
+}
+
+/// Tentpole bench: throughput scaling of the multi-threaded execution
+/// engine on the serving workload shape — a prepared handle integrating
+/// a fused batch of 8 tensor fields on an n = 4000 MST metric. The
+/// engine parallelises three axes at once (batch fan-out, IT recursion
+/// forks, and — at prepare time — per-node plan building); outputs are
+/// asserted bit-identical to the serial run before anything is timed.
+/// Always writes `BENCH_parallel.json` for the CI artifact / perf
+/// trajectory.
+fn parallel_scaling(quick: bool) {
+    banner("Ablation: parallel scaling (n = 4000, batch = 8, f = 1/(1+x^2/2))");
+    let mut rng = Pcg::seed(12);
+    let n = 4000;
+    let batch = 8;
+    let d = 4;
+    let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+    let tree = minimum_spanning_tree(&g);
+    let f = FDist::inverse_quadratic(0.5);
+    let xs: Vec<Matrix> = (0..batch).map(|_| Matrix::randn(n, d, &mut rng)).collect();
+    let refs: Vec<&Matrix> = xs.iter().collect();
+    let (warmup, runs) = if quick { (0, 3) } else { (1, 5) };
+    let table = Table::new(
+        &["threads", "batch (ms)", "fields/s", "speedup", "par forks"],
+        &[7, 11, 9, 8, 10],
+    );
+    let mut medians: Vec<(usize, f64)> = Vec::new();
+    let mut reference: Option<Vec<Matrix>> = None;
+    for &threads in &[1usize, 2, 4, 8] {
+        let tfi = TreeFieldIntegrator::builder(&tree)
+            .threads(threads)
+            .build()
+            .expect("valid tree");
+        let prepared = tfi.prepare_with_channels(&f, d).expect("plannable f");
+        let out = prepared.integrate_batch(&refs).expect("batch");
+        match &reference {
+            None => reference = Some(out),
+            Some(want) => {
+                for (got, want) in out.iter().zip(want) {
+                    assert!(
+                        got == want,
+                        "threads={threads}: output must be bit-identical to serial"
+                    );
+                }
+            }
+        }
+        let timing = bench(warmup, runs, || prepared.integrate_batch(&refs).expect("batch"));
+        medians.push((threads, timing.median));
+        let speedup = medians[0].1 / timing.median.max(1e-12);
+        table.row(&[
+            threads.to_string(),
+            format!("{:.1}", timing.median * 1e3),
+            format!("{:.0}", batch as f64 / timing.median),
+            format!("{speedup:.2}x"),
+            tfi.stats().par_forks.to_string(),
+        ]);
+    }
+    let base = medians[0].1;
+    let mut json = String::from("{\n  \"bench\": \"parallel_scaling\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n},\n  \"batch\": {batch},\n  \"channels\": {d},\n  \"quick\": {quick},\n"
+    ));
+    json.push_str("  \"bit_identical_to_serial\": true,\n  \"results\": [\n");
+    for (i, (threads, median)) in medians.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"threads\": {threads}, \"median_s\": {median:.6}, \"speedup\": {:.3}}}{}\n",
+            base / median.max(1e-12),
+            if i + 1 < medians.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_parallel.json", &json).expect("write BENCH_parallel.json");
+    println!("wrote BENCH_parallel.json (outputs bit-identical across thread counts)");
 }
 
 fn strategy_crossover() {
@@ -240,8 +319,15 @@ fn pointcloud_modelnet() {
 }
 
 fn main() {
+    // `cargo bench --bench ablations -- --quick`: the cheap CI smoke
+    // mode — only the parallel-scaling sweep, still emitting the JSON.
+    if std::env::args().any(|a| a == "--quick") {
+        parallel_scaling(true);
+        return;
+    }
     leaf_threshold_sweep();
     prepared_vs_replan();
+    parallel_scaling(false);
     strategy_crossover();
     rff_sweep();
     fig9_cubes();

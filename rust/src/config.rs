@@ -146,6 +146,10 @@ pub struct IntegratorConfig {
     /// Optional forced strategy name (`dense`, `separable`, `lattice`,
     /// `rational-sum`, `cauchy`, `vandermonde`, `chebyshev`).
     pub force: Option<String>,
+    /// Worker threads for the parallel integrate/prepare/batch paths:
+    /// `0` = auto (`FTFI_THREADS` if set, else all cores), `1` = serial.
+    /// Outputs are bit-identical for every setting.
+    pub threads: usize,
 }
 
 impl Default for IntegratorConfig {
@@ -158,6 +162,7 @@ impl Default for IntegratorConfig {
             cheb_max_rank: p.cheb_max_rank,
             lattice_max_points: p.lattice_max_points,
             force: None,
+            threads: 0,
         }
     }
 }
@@ -190,6 +195,7 @@ impl IntegratorConfig {
             lattice_max_points: c
                 .get_usize("integrator.lattice_max_points", d.lattice_max_points),
             force: c.get("integrator.force").map(|s| s.to_string()),
+            threads: c.get_usize("integrator.threads", d.threads),
         }
     }
 
@@ -255,15 +261,19 @@ mod tests {
     #[test]
     fn integrator_config_roundtrip() {
         let c = Config::parse(
-            "[integrator]\nleaf_threshold = 16\ndense_cutoff = 1024\nforce = chebyshev\n",
+            "[integrator]\nleaf_threshold = 16\ndense_cutoff = 1024\nforce = chebyshev\n\
+             threads = 3\n",
         )
         .unwrap();
         let ic = IntegratorConfig::from_config(&c);
         assert_eq!(ic.leaf_threshold, 16);
         assert_eq!(ic.dense_cutoff, 1024);
+        assert_eq!(ic.threads, 3);
         let policy = ic.to_policy().unwrap();
         assert_eq!(policy.force, Some(Strategy::Chebyshev));
         assert_eq!(policy.dense_cutoff, 1024);
+        // `threads` defaults to 0 = auto when the key is absent.
+        assert_eq!(IntegratorConfig::default().threads, 0);
     }
 
     #[test]

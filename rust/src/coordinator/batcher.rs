@@ -174,6 +174,55 @@ mod tests {
         assert!(t0.elapsed() < Duration::from_millis(200));
     }
 
+    /// Boundary case: exactly `batch_size` requests already queued — the
+    /// batch must return full immediately, not wait out the timeout.
+    #[test]
+    fn exact_fill_does_not_wait_for_timeout() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..4 {
+            let (r, keep) = req(i as f32);
+            std::mem::forget(keep);
+            tx.send(r).unwrap();
+        }
+        let b = Batcher::new(BatcherConfig {
+            batch_size: 4,
+            batch_timeout: Duration::from_secs(10),
+        });
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "a full batch must not wait for the timeout"
+        );
+    }
+
+    /// Boundary case: fewer requests than `batch_size` — the batcher
+    /// must hold the partial batch for the whole timeout window (giving
+    /// stragglers a chance) and then release it as-is.
+    #[test]
+    fn timeout_releases_partial_batch_after_full_window() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..3 {
+            let (r, keep) = req(i as f32);
+            std::mem::forget(keep);
+            tx.send(r).unwrap();
+        }
+        let b = Batcher::new(BatcherConfig {
+            batch_size: 8,
+            batch_timeout: Duration::from_millis(40),
+        });
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(35),
+            "partial batch released after {:?} — before the timeout window",
+            t0.elapsed()
+        );
+        drop(tx); // kept alive so the wait could not end on Disconnected
+    }
+
     #[test]
     fn closed_channel_returns_none() {
         let (tx, rx) = mpsc::channel::<PendingRequest>();

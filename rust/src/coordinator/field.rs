@@ -17,12 +17,21 @@
 //! `ServerError::Exec` to that request alone — a malformed request
 //! fails its own response without poisoning its batch-mates, and can
 //! never panic a worker thread.
+//!
+//! Both executors fan fused batches out across a [`WorkPool`] — the
+//! serving batch axis — so one worker drives all cores of its budget.
+//! Responses keep their request order and stay bit-identical to serial
+//! execution (the pool's determinism contract). Share one pool across
+//! workers (builder `.pool(..)` / [`FieldExecutor::with_pool`]) to bound
+//! the process-wide thread count.
 
 use super::batcher::BatchExecutor;
 use crate::ftfi::functions::FDist;
 use crate::ftfi::{FieldIntegrator, FtfiError, TreeFieldIntegrator};
 use crate::linalg::matrix::Matrix;
+use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
 use crate::tree::integrator_tree::PreparedPlans;
+use std::sync::Arc;
 
 /// Decode one flattened request into an `n×d` field (row-major, rows
 /// indexed by vertex id). The request length must be a non-zero
@@ -40,20 +49,34 @@ fn encode(m: Matrix) -> Vec<f32> {
 }
 
 /// Serve integrations of a fixed `f` through any [`FieldIntegrator`]
-/// backend.
-pub struct FieldExecutor<I: FieldIntegrator + 'static> {
+/// backend. `I: Sync` because fused batches fan out across the pool's
+/// threads (every integrator in this crate is `Sync`).
+pub struct FieldExecutor<I: FieldIntegrator + Sync + 'static> {
     integrator: I,
     f: FDist,
     max_batch: usize,
+    pool: Arc<WorkPool>,
 }
 
-impl<I: FieldIntegrator + 'static> FieldExecutor<I> {
+impl<I: FieldIntegrator + Sync + 'static> FieldExecutor<I> {
+    /// Build reusing the integrator's own work pool when it has one
+    /// (so the batch fan-out and the integrator's internal forks share
+    /// one thread budget), else an auto-sized pool (`FTFI_THREADS`,
+    /// else all cores).
     pub fn new(integrator: I, f: FDist, max_batch: usize) -> Self {
-        FieldExecutor { integrator, f, max_batch: max_batch.max(1) }
+        let pool = integrator
+            .work_pool()
+            .cloned()
+            .unwrap_or_else(|| Arc::new(WorkPool::with_auto(0)));
+        Self::with_pool(integrator, f, max_batch, pool)
     }
-}
 
-impl<I: FieldIntegrator + 'static> FieldExecutor<I> {
+    /// Build over a shared work pool (bounds the process-wide thread
+    /// budget when several workers serve side by side).
+    pub fn with_pool(integrator: I, f: FDist, max_batch: usize, pool: Arc<WorkPool>) -> Self {
+        FieldExecutor { integrator, f, max_batch: max_batch.max(1), pool }
+    }
+
     fn run_one(&self, input: &[f32]) -> Result<Vec<f32>, String> {
         let x = decode(input, self.integrator.n()).map_err(|e| e.to_string())?;
         let out = self.integrator.integrate(&self.f, &x).map_err(|e| e.to_string())?;
@@ -61,19 +84,24 @@ impl<I: FieldIntegrator + 'static> FieldExecutor<I> {
     }
 }
 
-impl<I: FieldIntegrator + 'static> BatchExecutor for FieldExecutor<I> {
+impl<I: FieldIntegrator + Sync + 'static> BatchExecutor for FieldExecutor<I> {
     fn max_batch(&self) -> usize {
         self.max_batch
     }
 
     fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
-        inputs.iter().map(|input| self.run_one(input)).collect()
+        self.execute_each(inputs).into_iter().collect()
     }
 
     /// Requests fail independently: a malformed request gets its own
-    /// `Err` while its batch-mates still succeed.
+    /// `Err` while its batch-mates still succeed. Requests fan out
+    /// across the work pool (unless the metric is too small to justify
+    /// helper threads); responses keep the request order.
     fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
-        inputs.iter().map(|input| self.run_one(input)).collect()
+        if self.integrator.n() < PAR_MAP_MIN_N {
+            return inputs.iter().map(|input| self.run_one(input)).collect();
+        }
+        self.pool.map(inputs, |_, input| self.run_one(input))
     }
 }
 
@@ -119,13 +147,19 @@ impl BatchExecutor for PreparedFieldExecutor {
     }
 
     fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
-        inputs.iter().map(|input| self.run_one(input)).collect()
+        self.execute_each(inputs).into_iter().collect()
     }
 
     /// Requests fail independently: a malformed request gets its own
-    /// `Err` while its batch-mates still succeed.
+    /// `Err` while its batch-mates still succeed. Requests fan out
+    /// across the integrator's work pool (set per builder via
+    /// `.threads(..)` / `.pool(..)`) unless the metric is too small to
+    /// justify helper threads; responses keep the request order.
     fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
-        inputs.iter().map(|input| self.run_one(input)).collect()
+        if self.tfi.n() < PAR_MAP_MIN_N {
+            return inputs.iter().map(|input| self.run_one(input)).collect();
+        }
+        self.tfi.pool().map(inputs, |_, input| self.run_one(input))
     }
 }
 
@@ -201,6 +235,41 @@ mod tests {
             Ok(_) => panic!("malformed request must fail"),
         }
         assert!(results[2].is_ok(), "batch-mates must not be poisoned");
+    }
+
+    #[test]
+    fn parallel_execute_each_is_ordered_and_bit_identical_to_serial() {
+        let mut rng = Pcg::seed(5);
+        let tree = generators::random_tree(700, 0.2, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+        let serial = TreeFieldIntegrator::builder(&tree).threads(1).build().unwrap();
+        let par = TreeFieldIntegrator::builder(&tree).threads(4).build().unwrap();
+        let exec_s = PreparedFieldExecutor::new(serial, &f, 1, 8).unwrap();
+        let exec_p = PreparedFieldExecutor::new(par, &f, 1, 8).unwrap();
+        let inputs: Vec<Vec<f32>> = (0..6)
+            .map(|k| (0..700).map(|i| ((i + 137 * k) as f32 * 0.01).sin()).collect())
+            .collect();
+        let a = exec_s.execute_each(&inputs);
+        let b = exec_p.execute_each(&inputs);
+        assert_eq!(a.len(), b.len());
+        for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
+            let (ra, rb) = (ra.as_ref().unwrap(), rb.as_ref().unwrap());
+            assert_eq!(ra, rb, "request {i}: parallel response must be bit-identical");
+        }
+    }
+
+    /// One thread budget end to end: the generic executor must reuse the
+    /// integrator's pool rather than stacking a second auto-sized one.
+    #[test]
+    fn generic_executor_reuses_the_integrator_pool() {
+        use crate::ftfi::GraphFieldIntegrator;
+        let mut rng = Pcg::seed(6);
+        let g = generators::path_plus_random_edges(20, 10, &mut rng);
+        let gfi = GraphFieldIntegrator::builder(&g).threads(3).build().unwrap();
+        let shared = Arc::clone(gfi.tree_integrator().pool());
+        let exec = FieldExecutor::new(gfi, FDist::Identity, 4);
+        assert!(Arc::ptr_eq(&exec.pool, &shared), "executor must reuse the integrator's pool");
+        assert_eq!(exec.pool.threads(), 3);
     }
 
     #[test]

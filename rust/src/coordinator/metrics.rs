@@ -7,7 +7,10 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-const BUCKETS: usize = 160; // 8 per decade over 1e-6..1e2+
+// 20 buckets per decade over the 8 decades 1e-6..1e2 (the `* 20.0` in
+// `bucket_of` / `/ 20.0` in `bucket_upper`), i.e. ~12% resolution: one
+// bucket spans a factor of 10^(1/20) ≈ 1.122.
+const BUCKETS: usize = 160;
 
 fn bucket_of(secs: f64) -> usize {
     let clamped = secs.clamp(1e-6, 99.0);
@@ -150,6 +153,57 @@ mod tests {
             let b = bucket_of(s);
             assert!(b >= last);
             last = b;
+        }
+    }
+
+    /// `bucket_of` / `bucket_upper` round-trip: the geometric midpoint of
+    /// every bucket maps back to that bucket, and each bucket's upper
+    /// edge sits one resolution step (10^(1/20)) above the previous one.
+    #[test]
+    fn bucket_of_and_bucket_upper_round_trip() {
+        let step = 10f64.powf(1.0 / 20.0);
+        for idx in 0..BUCKETS {
+            let mid = 1e-6 * 10f64.powf((idx as f64 + 0.5) / 20.0);
+            if mid < 99.0 {
+                assert_eq!(bucket_of(mid), idx, "midpoint {mid} must map to bucket {idx}");
+            }
+            assert!(bucket_upper(idx) > mid, "upper edge must bound the midpoint");
+            if idx > 0 {
+                let ratio = bucket_upper(idx) / bucket_upper(idx - 1);
+                assert!(
+                    (ratio - step).abs() < 1e-9,
+                    "bucket {idx}: edge ratio {ratio} != 10^(1/20)"
+                );
+            }
+        }
+        // 20 buckets per decade: 1e-6 → bucket 0, 1e-5 → 20, …, 1e-2 → 80.
+        assert_eq!(bucket_of(1e-5 * 1.0001), 20);
+        assert_eq!(bucket_of(1e-2 * 1.0001), 80);
+        // Clamping at both ends.
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(1e-9), 0);
+        assert_eq!(bucket_of(1e9), BUCKETS - 1);
+    }
+
+    /// Percentiles on a known distribution (1ms, 2ms, …, 100ms): each
+    /// reported percentile must land within one bucket width (~12%)
+    /// above the exact order statistic.
+    #[test]
+    fn percentiles_on_known_distribution() {
+        let m = MetricsRegistry::new();
+        for i in 1..=100 {
+            m.record_latency(i as f64 * 1e-3);
+        }
+        let s = m.snapshot();
+        let step = 10f64.powf(1.0 / 20.0);
+        let got = [s.latency_p50, s.latency_p95, s.latency_p99];
+        let exact = [0.050, 0.095, 0.099];
+        for (p, e) in got.iter().zip(exact) {
+            assert!(
+                *p >= e && *p <= e * step * 1.001,
+                "percentile {p} outside [{e}, {}]",
+                e * step
+            );
         }
     }
 }

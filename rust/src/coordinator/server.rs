@@ -282,6 +282,76 @@ mod tests {
         server.shutdown();
     }
 
+    /// Shutdown-drain ordering: every request accepted before `shutdown`
+    /// gets a real response — `shutdown` blocks until the queue is
+    /// drained, so no in-flight request is dropped on the floor.
+    #[test]
+    fn shutdown_drains_every_inflight_request() {
+        struct SlowDoubler;
+        impl BatchExecutor for SlowDoubler {
+            fn max_batch(&self) -> usize {
+                4
+            }
+            fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+                std::thread::sleep(Duration::from_millis(3));
+                Ok(inputs.iter().map(|v| v.iter().map(|x| x * 2.0).collect()).collect())
+            }
+        }
+        let server = InferenceServer::start(
+            vec![Box::new(|| Box::new(SlowDoubler) as Box<dyn BatchExecutor>)],
+            BatcherConfig { batch_size: 4, batch_timeout: Duration::from_millis(1) },
+            64,
+        );
+        let handles: Vec<_> =
+            (0..24).map(|i| server.submit_blocking(vec![i as f32]).unwrap()).collect();
+        server.shutdown();
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(
+                h.wait().unwrap(),
+                vec![2.0 * i as f32],
+                "request {i} was lost during shutdown"
+            );
+        }
+    }
+
+    /// Dropping the server while the bounded queue is under backpressure
+    /// must not deadlock, and every *accepted* request still resolves
+    /// (drained response or a clean `Closed`).
+    #[test]
+    fn drop_under_backpressure_neither_deadlocks_nor_loses_responses() {
+        struct Slow;
+        impl BatchExecutor for Slow {
+            fn max_batch(&self) -> usize {
+                1
+            }
+            fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+                std::thread::sleep(Duration::from_millis(20));
+                Ok(inputs.to_vec())
+            }
+        }
+        let server = InferenceServer::start(
+            vec![Box::new(|| Box::new(Slow) as Box<dyn BatchExecutor>)],
+            BatcherConfig { batch_size: 1, batch_timeout: Duration::from_millis(0) },
+            2,
+        );
+        let mut handles = Vec::new();
+        for i in 0..32 {
+            match server.submit(vec![i as f32]) {
+                Ok(h) => handles.push(h),
+                Err(ServerError::Backpressure) => break,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(!handles.is_empty(), "at least one request must be accepted");
+        drop(server); // implicit shutdown: must join, not hang
+        for h in handles {
+            match h.wait() {
+                Ok(_) | Err(ServerError::Closed) => {}
+                Err(e) => panic!("unexpected response after drop: {e}"),
+            }
+        }
+    }
+
     #[test]
     fn shutdown_then_submit_fails() {
         let server = InferenceServer::start(vec![Box::new(|| Box::new(Doubler) as Box<dyn BatchExecutor>)], cfg(), 8);

@@ -47,8 +47,10 @@ use crate::ftfi::functions::FDist;
 use crate::graph::mst::try_minimum_spanning_tree;
 use crate::graph::Graph;
 use crate::linalg::matrix::Matrix;
+use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
 use crate::tree::integrator_tree::{IntegratorTree, ItStats, PreparedPlans};
 use crate::tree::Tree;
+use std::sync::Arc;
 
 /// The unified integration interface: everything that can compute
 /// `out[v] = Σ_u f(dist(v,u))·x[u]` over some metric. Implemented by
@@ -64,6 +66,14 @@ pub trait FieldIntegrator {
     /// `out[v] = Σ_u f(dist(v,u))·x[u]` for a tensor field `x ∈ R^{N×d}`.
     fn integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError>;
 
+    /// The work pool driving this integrator's parallel paths, when it
+    /// has one. Executors reuse it so their batch fan-out and the
+    /// integrator's internal recursion forks draw on **one** thread
+    /// budget — two stacked auto-sized pools would oversubscribe.
+    fn work_pool(&self) -> Option<&Arc<WorkPool>> {
+        None
+    }
+
     /// Scalar-field convenience.
     fn integrate_vec(&self, f: &FDist, x: &[f64]) -> Result<Vec<f64>, FtfiError> {
         let m = Matrix::from_vec(x.len(), 1, x.to_vec());
@@ -76,6 +86,9 @@ pub struct TreeFieldIntegrator {
     it: IntegratorTree,
     policy: CrossPolicy,
     n: usize,
+    /// The work pool driving every parallel path (recursion forks,
+    /// prepare fan-out, batch fan-out). Shared by prepared handles.
+    pool: Arc<WorkPool>,
 }
 
 /// Fallible builder for [`TreeFieldIntegrator`] — validates the policy
@@ -85,6 +98,8 @@ pub struct TreeFieldIntegratorBuilder<'a> {
     tree: &'a Tree,
     leaf_threshold: usize,
     policy: CrossPolicy,
+    threads: usize,
+    pool: Option<Arc<WorkPool>>,
 }
 
 impl<'a> TreeFieldIntegratorBuilder<'a> {
@@ -97,6 +112,24 @@ impl<'a> TreeFieldIntegratorBuilder<'a> {
     /// Cross-term strategy policy (default [`CrossPolicy::default`]).
     pub fn policy(mut self, policy: CrossPolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Worker threads for the parallel integrate / prepare / batch
+    /// paths. `0` (the default) resolves automatically: `FTFI_THREADS`
+    /// if set, else all available cores. `1` forces serial execution.
+    /// Outputs are bit-identical for every setting.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Share an existing work pool instead of building one — e.g. one
+    /// pool across all serving workers so the process cannot
+    /// oversubscribe the machine. Takes precedence over
+    /// [`TreeFieldIntegratorBuilder::threads`].
+    pub fn pool(mut self, pool: Arc<WorkPool>) -> Self {
+        self.pool = Some(pool);
         self
     }
 
@@ -121,10 +154,13 @@ impl<'a> TreeFieldIntegratorBuilder<'a> {
                 )));
             }
         }
+        let threads = self.threads;
+        let pool = self.pool.unwrap_or_else(|| Arc::new(WorkPool::with_auto(threads)));
         Ok(TreeFieldIntegrator {
             it: IntegratorTree::with_leaf_threshold(self.tree, self.leaf_threshold),
             policy: self.policy,
             n: self.tree.n(),
+            pool,
         })
     }
 }
@@ -132,7 +168,13 @@ impl<'a> TreeFieldIntegratorBuilder<'a> {
 impl TreeFieldIntegrator {
     /// Start building an integrator for `tree`.
     pub fn builder(tree: &Tree) -> TreeFieldIntegratorBuilder<'_> {
-        TreeFieldIntegratorBuilder { tree, leaf_threshold: 32, policy: CrossPolicy::default() }
+        TreeFieldIntegratorBuilder {
+            tree,
+            leaf_threshold: 32,
+            policy: CrossPolicy::default(),
+            threads: 0,
+            pool: None,
+        }
     }
 
     /// Preprocess the tree with default options.
@@ -157,7 +199,7 @@ impl TreeFieldIntegrator {
     /// `x ∈ R^{N×d}`. Re-plans every cross block on every call; prefer
     /// [`TreeFieldIntegrator::prepare`] when `f` is reused.
     pub fn try_integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError> {
-        self.it.try_integrate(f, x, &self.policy)
+        self.it.try_integrate_pooled(f, x, &self.policy, &self.pool)
     }
 
     /// Scalar-field convenience.
@@ -195,15 +237,15 @@ impl TreeFieldIntegrator {
         f: &FDist,
         channels: usize,
     ) -> Result<PreparedIntegrator<'_>, FtfiError> {
-        let plans = self.it.prepare(f, channels, &self.policy)?;
-        Ok(PreparedIntegrator { it: &self.it, plans })
+        let plans = self.it.prepare_pooled(f, channels, &self.policy, &self.pool)?;
+        Ok(PreparedIntegrator { it: &self.it, plans, pool: Arc::clone(&self.pool) })
     }
 
     /// Lower-level prepare: returns the raw [`PreparedPlans`] (no borrow
     /// of `self`), for owners that store integrator and plans side by
     /// side — e.g. the coordinator's field executor.
     pub fn prepare_plans(&self, f: &FDist, channels: usize) -> Result<PreparedPlans, FtfiError> {
-        self.it.prepare(f, channels, &self.policy)
+        self.it.prepare_pooled(f, channels, &self.policy, &self.pool)
     }
 
     /// Integrate with plans from [`TreeFieldIntegrator::prepare_plans`].
@@ -212,7 +254,7 @@ impl TreeFieldIntegrator {
         x: &Matrix,
         plans: &PreparedPlans,
     ) -> Result<Matrix, FtfiError> {
-        self.it.integrate_prepared(x, plans)
+        self.it.integrate_prepared_pooled(x, plans, &self.pool)
     }
 
     /// Number of tree vertices.
@@ -220,10 +262,24 @@ impl TreeFieldIntegrator {
         self.n
     }
 
+    /// The work pool driving this integrator's parallel paths (share it
+    /// via [`TreeFieldIntegratorBuilder::pool`] to bound a process-wide
+    /// thread budget).
+    pub fn pool(&self) -> &Arc<WorkPool> {
+        &self.pool
+    }
+
     /// IntegratorTree structure statistics (including the plan-build
-    /// counter the prepared path freezes).
+    /// counter the prepared path freezes and the work pool's parallelism
+    /// counters). The `par_*` counters are **pool-scoped** lifetime
+    /// aggregates: on a pool shared across integrators they include
+    /// every sharer's activity — compare deltas, not absolutes.
     pub fn stats(&self) -> ItStats {
-        self.it.stats()
+        let mut st = self.it.stats();
+        let ps = self.pool.stats();
+        st.par_forks = ps.forks;
+        st.par_tasks = ps.helper_tasks;
+        st
     }
 
     /// The active cross-term policy.
@@ -244,6 +300,9 @@ impl FieldIntegrator for TreeFieldIntegrator {
     fn integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError> {
         self.try_integrate(f, x)
     }
+    fn work_pool(&self) -> Option<&Arc<WorkPool>> {
+        Some(&self.pool)
+    }
 }
 
 /// A `(tree, f, policy)` triple with all cross-block plans pre-built:
@@ -253,17 +312,25 @@ impl FieldIntegrator for TreeFieldIntegrator {
 pub struct PreparedIntegrator<'a> {
     it: &'a IntegratorTree,
     plans: PreparedPlans,
+    pool: Arc<WorkPool>,
 }
 
 impl PreparedIntegrator<'_> {
     /// Integrate one tensor field with the frozen `f`.
     pub fn integrate(&self, x: &Matrix) -> Result<Matrix, FtfiError> {
-        self.it.integrate_prepared(x, &self.plans)
+        self.it.integrate_prepared_pooled(x, &self.plans, &self.pool)
     }
 
     /// Integrate a batch of fields, reusing the plans for every one.
+    /// Fields fan out across the work pool (the serving batch axis)
+    /// unless the metric is too small to justify helper threads; each
+    /// result is bit-identical to a serial [`Self::integrate`] call,
+    /// and results keep the input order.
     pub fn integrate_batch(&self, xs: &[&Matrix]) -> Result<Vec<Matrix>, FtfiError> {
-        xs.iter().map(|x| self.integrate(x)).collect()
+        if self.plans.n() < PAR_MAP_MIN_N {
+            return xs.iter().map(|x| self.integrate(x)).collect();
+        }
+        self.pool.map(xs, |_, x| self.integrate(x)).into_iter().collect()
     }
 
     /// Scalar-field convenience.
@@ -300,6 +367,8 @@ pub struct GraphFieldIntegratorBuilder<'a> {
     graph: &'a Graph,
     leaf_threshold: usize,
     policy: CrossPolicy,
+    threads: usize,
+    pool: Option<Arc<WorkPool>>,
 }
 
 impl<'a> GraphFieldIntegratorBuilder<'a> {
@@ -315,15 +384,33 @@ impl<'a> GraphFieldIntegratorBuilder<'a> {
         self
     }
 
+    /// Worker threads for the parallel paths (`0` = auto — see
+    /// [`TreeFieldIntegratorBuilder::threads`]).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Share an existing work pool (see
+    /// [`TreeFieldIntegratorBuilder::pool`]).
+    pub fn pool(mut self, pool: Arc<WorkPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
     /// Build the MST and preprocess it. Returns
     /// [`FtfiError::DisconnectedGraph`] instead of asserting when the
     /// graph has no spanning tree.
     pub fn build(self) -> Result<GraphFieldIntegrator, FtfiError> {
         let tree = try_minimum_spanning_tree(self.graph)?;
-        let inner = TreeFieldIntegrator::builder(&tree)
+        let mut builder = TreeFieldIntegrator::builder(&tree)
             .leaf_threshold(self.leaf_threshold)
             .policy(self.policy)
-            .build()?;
+            .threads(self.threads);
+        if let Some(pool) = self.pool {
+            builder = builder.pool(pool);
+        }
+        let inner = builder.build()?;
         Ok(GraphFieldIntegrator { tree, inner })
     }
 }
@@ -331,7 +418,13 @@ impl<'a> GraphFieldIntegratorBuilder<'a> {
 impl GraphFieldIntegrator {
     /// Start building an integrator for `graph`.
     pub fn builder(graph: &Graph) -> GraphFieldIntegratorBuilder<'_> {
-        GraphFieldIntegratorBuilder { graph, leaf_threshold: 32, policy: CrossPolicy::default() }
+        GraphFieldIntegratorBuilder {
+            graph,
+            leaf_threshold: 32,
+            policy: CrossPolicy::default(),
+            threads: 0,
+            pool: None,
+        }
     }
 
     /// Build with default options; `Err(DisconnectedGraph)` if the graph
@@ -379,6 +472,9 @@ impl FieldIntegrator for GraphFieldIntegrator {
     }
     fn integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError> {
         self.try_integrate(f, x)
+    }
+    fn work_pool(&self) -> Option<&Arc<WorkPool>> {
+        Some(self.inner.pool())
     }
 }
 
@@ -475,6 +571,24 @@ mod tests {
             backends.iter().map(|b| b.integrate(&f, &x).unwrap()).collect();
         assert_eq!(backends[0].n(), backends[1].n());
         assert!(outs[0].frobenius_diff(&outs[1]) / (1.0 + outs[1].frobenius()) < 1e-9);
+    }
+
+    #[test]
+    fn threads_knob_and_pool_sharing() {
+        let mut rng = Pcg::seed(6);
+        let t = generators::random_tree(600, 0.1, 1.0, &mut rng);
+        let shared = Arc::new(WorkPool::new(2));
+        let a = TreeFieldIntegrator::builder(&t).pool(Arc::clone(&shared)).build().unwrap();
+        let b = TreeFieldIntegrator::builder(&t).threads(1).build().unwrap();
+        assert_eq!(a.pool().threads(), 2);
+        assert_eq!(b.pool().threads(), 1);
+        let f = FDist::Exponential { lambda: -0.2, scale: 1.0 };
+        let x = Matrix::randn(600, 2, &mut rng);
+        let ya = a.try_integrate(&f, &x).unwrap();
+        let yb = b.try_integrate(&f, &x).unwrap();
+        assert!(ya == yb, "thread count must not change the output bits");
+        assert!(a.stats().par_forks > 0, "n=600 ≥ fork cutoff: the pool must fork");
+        assert_eq!(b.stats().par_forks, 0, "a threads(1) integrator must stay serial");
     }
 
     /// The legacy panicking constructors keep working (shim coverage).

@@ -18,6 +18,11 @@
 //! - the full cordial-function multiplier suite (outer-product, Hankel/
 //!   FFT, rational multipoint, Cauchy-LDR, Vandermonde) plus the RFF and
 //!   NU-FFT approximate extensions;
+//! - a std-only scoped work pool ([`runtime::pool::WorkPool`]) that
+//!   parallelises the IT recursion, plan preparation and batch
+//!   integration across threads with **bit-identical-to-serial** outputs
+//!   (knobs: builder `.threads(..)`, CLI `--threads`, env
+//!   `FTFI_THREADS`, config `integrator.threads`);
 //! - the paper's application stack: mesh interpolation, graph
 //!   classification (eigenfeatures + random forest), learnable rational
 //!   `f`-distance matrices, Gromov–Wasserstein speedups, and a batching
@@ -37,7 +42,6 @@ pub mod graph;
 pub mod linalg;
 pub mod ml;
 pub mod ot;
-#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tree;
 
@@ -47,4 +51,5 @@ pub use ftfi::{
 };
 pub use graph::Graph;
 pub use linalg::matrix::Matrix;
+pub use runtime::pool::WorkPool;
 pub use tree::Tree;

@@ -8,9 +8,12 @@
 //! ftfi info                                     versions, artifact status
 //! ```
 //!
-//! The `train` command and the `--backend topvit` serve path need the
-//! `pjrt` cargo feature (external `xla`/`anyhow` crates); everything
-//! else is dependency-free.
+//! `integrate` and `serve` accept `--threads N` (0 = auto: honour
+//! `FTFI_THREADS`, else all cores; 1 = serial) for the parallel
+//! integrate / prepare / batch engine — outputs are bit-identical for
+//! every setting. The `train` command and the `--backend topvit` serve
+//! path need the `pjrt` cargo feature (external `xla`/`anyhow` crates);
+//! everything else is dependency-free.
 
 use ftfi::bench_util::time_once;
 use ftfi::cli::Args;
@@ -26,6 +29,8 @@ use ftfi::linalg::matrix::Matrix;
 use ftfi::ml::rng::Pcg;
 use ftfi::ot::gw::{gromov_wasserstein, GwBackend, GwParams};
 use ftfi::ot::sinkhorn::uniform_marginal;
+use ftfi::WorkPool;
+use std::sync::Arc;
 use std::time::Duration;
 
 type CliResult = Result<(), Box<dyn std::error::Error>>;
@@ -76,6 +81,9 @@ fn integrator_config(args: &Args) -> Result<IntegratorConfig, Box<dyn std::error
     if let Some(s) = args.get("force") {
         cfg.force = Some(s.to_string());
     }
+    if let Some(t) = args.get("threads") {
+        cfg.threads = t.parse().map_err(|_| format!("bad --threads {t:?}"))?;
+    }
     Ok(cfg)
 }
 
@@ -99,9 +107,11 @@ fn cmd_integrate(args: &Args) -> CliResult {
         TreeFieldIntegrator::builder(&tree)
             .leaf_threshold(icfg.leaf_threshold)
             .policy(policy.clone())
+            .threads(icfg.threads)
             .build()
     });
     let tfi = tfi?;
+    println!("integration threads: {}", tfi.pool().threads());
     let (prepared, t_plan) = time_once(|| tfi.prepare_with_channels(&f, d));
     let prepared = prepared?;
     let (fast, t_fast) = time_once(|| prepared.integrate(&x));
@@ -163,7 +173,14 @@ fn cmd_serve_field(args: &Args) -> CliResult {
     let mut rng = Pcg::seed(7);
     let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
     let tree = try_minimum_spanning_tree(&g)?;
-    println!("serving f = {f:?} over an n = {n} MST metric ({workers} workers)");
+    // One shared pool across all workers: the process-wide integration
+    // thread budget stays bounded no matter how many workers race.
+    let pool = Arc::new(WorkPool::with_auto(icfg.threads));
+    println!(
+        "serving f = {f:?} over an n = {n} MST metric ({workers} workers, {} integration \
+         threads shared)",
+        pool.threads()
+    );
 
     let factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>> = (0..workers
         .max(1))
@@ -172,10 +189,12 @@ fn cmd_serve_field(args: &Args) -> CliResult {
             let f = f.clone();
             let policy = policy.clone();
             let leaf_threshold = icfg.leaf_threshold;
+            let pool = Arc::clone(&pool);
             Box::new(move || {
                 let tfi = TreeFieldIntegrator::builder(&tree)
                     .leaf_threshold(leaf_threshold)
                     .policy(policy)
+                    .pool(pool)
                     .build()
                     .expect("validated tree");
                 Box::new(

@@ -1,0 +1,188 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Python never runs on this path — `make artifacts` lowers the JAX/
+//! Pallas model to HLO **text** once (text, not serialized protos: the
+//! image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction-id
+//! protos, while the text parser reassigns ids — see
+//! /opt/xla-example/README.md), and this module compiles + runs it.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A shaped f32 host tensor crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// A shaped i32 host tensor (labels etc.).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        TensorI32 { shape, data }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// A runtime input of either dtype.
+#[derive(Debug, Clone)]
+pub enum Input {
+    F32(TensorF32),
+    I32(TensorI32),
+}
+
+impl Input {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Input::F32(t) => t.to_literal(),
+            Input::I32(t) => t.to_literal(),
+        }
+    }
+}
+
+impl From<TensorF32> for Input {
+    fn from(t: TensorF32) -> Input {
+        Input::F32(t)
+    }
+}
+
+impl From<TensorI32> for Input {
+    fn from(t: TensorI32) -> Input {
+        Input::I32(t)
+    }
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        TensorF32 { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        TensorF32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        TensorF32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<TensorF32> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(TensorF32 { shape: dims, data })
+    }
+}
+
+/// The PJRT client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform string (e.g. "cpu") — used by health checks.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// One compiled model variant.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with f32 inputs; returns the flattened tuple of f32
+    /// outputs. (aot.py lowers with `return_tuple=True`, so the single
+    /// result literal is always a tuple.)
+    pub fn run(&self, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        let mixed: Vec<Input> = inputs.iter().cloned().map(Input::from).collect();
+        self.run_mixed(&mixed)
+    }
+
+    /// Execute with mixed-dtype inputs (f32 outputs only — all model
+    /// outputs in this repo are f32).
+    pub fn run_mixed(&self, inputs: &[Input]) -> Result<Vec<TensorF32>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("executing {}", self.name))?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(TensorF32::from_literal).collect()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = TensorF32::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        let z = TensorF32::zeros(vec![4]);
+        assert_eq!(z.data, vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_rejects_mismatch() {
+        TensorF32::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs — they
+    // need the artifacts built by `make artifacts` and a working
+    // libxla_extension, so they are integration- not unit-level.
+}

@@ -1,0 +1,305 @@
+//! A dependency-free scoped work pool: the execution engine behind every
+//! parallel FTFI path (the IntegratorTree recursion forks, the `prepare`
+//! plan fan-out, the batch / serving fan-out).
+//!
+//! The offline build has no rayon, so this is a std-only design with two
+//! primitives:
+//!
+//! - [`WorkPool::join`] — structured fork/join for the divide-and-conquer
+//!   IT recursion: run two closures, potentially on two threads, and
+//!   return `(left, right)` in that fixed order.
+//! - [`WorkPool::map`] — an order-preserving parallel map over a slice
+//!   for the flat fan-outs (per-node plan building, per-field batches,
+//!   per-request serving).
+//!
+//! **Determinism contract.** Neither primitive ever reorders a
+//! floating-point reduction: `join` assembles results positionally and
+//! `map` writes each result into its input slot, so outputs are
+//! **bit-identical** to serial execution for any thread count (pinned by
+//! `tests/ftfi_equivalence.rs`). Parallelism only changes *where* work
+//! runs, never the order in which partial results are combined.
+//!
+//! **Oversubscription control.** A pool admits at most `threads − 1`
+//! concurrent helper threads, accounted by a token counter shared by
+//! nested regions: an `integrate_batch` map whose per-field integrations
+//! fork internally stays bounded by the one pool budget. Helpers are
+//! spawned scoped (`std::thread::scope`) per region rather than parked
+//! persistently — that keeps the pool free of `unsafe` lifetime erasure,
+//! and the spawn cost is amortised by the size cutoffs of the callers
+//! (sub-millisecond work is never forked).
+//!
+//! Thread-count resolution (`FTFI_THREADS`, CLI `--threads`, config
+//! `integrator.threads`) lives in [`WorkPool::with_auto`].
+
+use std::panic;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Integration problem size (vertex count) below which one batch item /
+/// serving request is too small to justify a helper thread: a scoped
+/// spawn costs tens of microseconds, so fanning out sub-millisecond
+/// items through [`WorkPool::map`] would make the "parallel" path
+/// slower than serial. The batch and serving axes consult this before
+/// mapping; the recursion axis has its own (larger) fork cutoff.
+pub const PAR_MAP_MIN_N: usize = 256;
+
+/// Scoped work pool with a fixed thread budget. See the module docs for
+/// the determinism and oversubscription contracts.
+#[derive(Debug)]
+pub struct WorkPool {
+    threads: usize,
+    /// Helper-thread tokens still available (starts at `threads − 1`).
+    available: AtomicUsize,
+    /// Fork/join regions that actually ran two-threaded.
+    forks: AtomicUsize,
+    /// Map tasks executed on helper threads (caller-thread tasks are not
+    /// counted — the interesting signal is work that left the caller).
+    helper_tasks: AtomicUsize,
+}
+
+/// Point-in-time parallelism counters (surfaced through `ItStats`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    pub threads: usize,
+    /// Two-way forks that ran on two threads.
+    pub forks: usize,
+    /// Parallel-map tasks executed on helper threads.
+    pub helper_tasks: usize,
+}
+
+/// Releases acquired helper tokens on drop, so a panicking task cannot
+/// permanently shrink the pool.
+struct TokenGuard<'a> {
+    pool: &'a WorkPool,
+    count: usize,
+}
+
+impl Drop for TokenGuard<'_> {
+    fn drop(&mut self) {
+        self.pool.available.fetch_add(self.count, Ordering::AcqRel);
+    }
+}
+
+impl WorkPool {
+    /// A pool admitting up to `threads` concurrent threads (the caller
+    /// plus `threads − 1` helpers). `threads` is clamped to ≥ 1.
+    pub fn new(threads: usize) -> Self {
+        let t = threads.max(1);
+        WorkPool {
+            threads: t,
+            available: AtomicUsize::new(t - 1),
+            forks: AtomicUsize::new(0),
+            helper_tasks: AtomicUsize::new(0),
+        }
+    }
+
+    /// A single-threaded pool: `join` and `map` run strictly inline.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Resolve a user-facing `threads` knob: `0` means "auto" — honour
+    /// `FTFI_THREADS` if set to a positive integer, else use all
+    /// available cores; any other value is taken literally.
+    pub fn with_auto(requested: usize) -> Self {
+        if requested == 0 {
+            Self::new(Self::threads_from_env())
+        } else {
+            Self::new(requested)
+        }
+    }
+
+    /// The "auto" thread count: `FTFI_THREADS` (positive integer) if
+    /// set, else `std::thread::available_parallelism()`, else 1.
+    pub fn threads_from_env() -> usize {
+        match std::env::var("FTFI_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+            Some(t) if t >= 1 => t,
+            _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+
+    /// The pool's thread budget (caller + helpers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Parallelism counters accumulated over the pool's lifetime.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            threads: self.threads,
+            forks: self.forks.load(Ordering::Relaxed),
+            helper_tasks: self.helper_tasks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Try to reserve one helper token.
+    fn try_acquire(&self) -> bool {
+        self.available
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| v.checked_sub(1))
+            .is_ok()
+    }
+
+    /// Run `a` and `b`, on two threads when a helper token is free, and
+    /// return `(a(), b())` — always in that order, so callers' reduction
+    /// order (and hence floating-point output) is independent of the
+    /// thread count. Falls back to inline serial execution when the pool
+    /// is serial or saturated. Panics in either closure propagate to the
+    /// caller.
+    pub fn join<RA, RB, A, B>(&self, a: A, b: B) -> (RA, RB)
+    where
+        A: FnOnce() -> RA + Send,
+        B: FnOnce() -> RB + Send,
+        RA: Send,
+        RB: Send,
+    {
+        if self.threads <= 1 || !self.try_acquire() {
+            return (a(), b());
+        }
+        let _token = TokenGuard { pool: self, count: 1 };
+        self.forks.fetch_add(1, Ordering::Relaxed);
+        std::thread::scope(|s| {
+            let hb = s.spawn(b);
+            let ra = a();
+            let rb = match hb.join() {
+                Ok(v) => v,
+                Err(p) => panic::resume_unwind(p),
+            };
+            (ra, rb)
+        })
+    }
+
+    /// Order-preserving parallel map: `out[i] = f(i, &items[i])`. Work is
+    /// distributed dynamically (an atomic cursor), results are placed by
+    /// index, so the output is identical to the serial map for any thread
+    /// count. Falls back to inline serial execution when the pool is
+    /// serial, the input is trivial, or no helper token is free. Panics
+    /// in `f` propagate to the caller.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.threads <= 1 || n < 2 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let want = (self.threads - 1).min(n - 1);
+        let mut acquired = 0usize;
+        while acquired < want && self.try_acquire() {
+            acquired += 1;
+        }
+        if acquired == 0 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let _tokens = TokenGuard { pool: self, count: acquired };
+        let cursor = AtomicUsize::new(0);
+        let run = || {
+            let mut chunk: Vec<(usize, R)> = Vec::new();
+            loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                chunk.push((i, f(i, &items[i])));
+            }
+            chunk
+        };
+        let chunks: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+            let run_ref = &run;
+            let handles: Vec<_> = (0..acquired).map(|_| s.spawn(run_ref)).collect();
+            let mut all = vec![run()];
+            for h in handles {
+                match h.join() {
+                    Ok(v) => all.push(v),
+                    Err(p) => panic::resume_unwind(p),
+                }
+            }
+            all
+        });
+        let from_helpers: usize = chunks.iter().skip(1).map(|c| c.len()).sum();
+        self.helper_tasks.fetch_add(from_helpers, Ordering::Relaxed);
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for (i, r) in chunks.into_iter().flatten() {
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|o| o.expect("work pool: every map index must be produced")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkPool::new(1);
+        let (a, b) = pool.join(|| 1 + 1, || 2 + 2);
+        assert_eq!((a, b), (2, 4));
+        let items: Vec<usize> = (0..10).collect();
+        let out = pool.map(&items, |_, &v| v * 2);
+        assert_eq!(out, (0..10).map(|v| v * 2).collect::<Vec<_>>());
+        let st = pool.stats();
+        assert_eq!(st.forks, 0, "a serial pool must never fork");
+        assert_eq!(st.helper_tasks, 0, "a serial pool must never offload");
+    }
+
+    #[test]
+    fn map_preserves_order_and_values() {
+        let pool = WorkPool::new(4);
+        let items: Vec<usize> = (0..257).collect();
+        let out = pool.map(&items, |i, &v| {
+            assert_eq!(i, v, "index must match the item's slot");
+            v * 3 + 1
+        });
+        assert_eq!(out, (0..257).map(|v| v * 3 + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn join_runs_both_and_counts_forks() {
+        let pool = WorkPool::new(4);
+        // Nested joins must not deadlock: tokens are non-blocking, so
+        // saturated inner joins degrade to inline execution.
+        fn sum(pool: &WorkPool, lo: u64, hi: u64) -> u64 {
+            if hi - lo <= 64 {
+                return (lo..hi).sum();
+            }
+            let mid = lo + (hi - lo) / 2;
+            let (a, b) = pool.join(|| sum(pool, lo, mid), || sum(pool, mid, hi));
+            a + b
+        }
+        let got = sum(&pool, 0, 10_000);
+        assert_eq!(got, 10_000 * 9_999 / 2);
+        assert!(pool.stats().forks > 0, "a 4-thread pool must fork at least once");
+        // All tokens must have been returned.
+        assert_eq!(pool.available.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn concurrency_is_bounded_by_the_thread_budget() {
+        let pool = WorkPool::new(3);
+        let current = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..64).collect();
+        pool.map(&items, |_, _| {
+            let c = current.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(c, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(1));
+            current.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(
+            peak.load(Ordering::SeqCst) <= 3,
+            "peak concurrency {} exceeded the 3-thread budget",
+            peak.load(Ordering::SeqCst)
+        );
+    }
+
+    #[test]
+    fn with_auto_prefers_the_explicit_request() {
+        assert_eq!(WorkPool::with_auto(5).threads(), 5);
+        assert_eq!(WorkPool::with_auto(1).threads(), 1);
+        assert!(WorkPool::with_auto(0).threads() >= 1);
+        assert_eq!(WorkPool::new(0).threads(), 1, "threads clamp to ≥ 1");
+    }
+}

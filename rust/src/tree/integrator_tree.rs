@@ -31,7 +31,16 @@ use crate::ftfi::cordial::{apply_plan, try_make_plan, CrossPolicy, Plan};
 use crate::ftfi::error::FtfiError;
 use crate::ftfi::functions::FDist;
 use crate::linalg::matrix::Matrix;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Internal nodes at least this large fork their left/right subtree
+/// integrations onto the work pool (Lemma 3.1 guarantees both children
+/// hold ≥ ¼ of the node, so a fork always splits real work). Below the
+/// cutoff the per-fork thread-spawn cost would dominate the subtree
+/// work. The reduction order is unchanged by forking — see the
+/// bit-identical determinism contract in `runtime/pool.rs`.
+const PAR_FORK_MIN_SIZE: usize = 512;
 
 /// Monotonic id source: every built IntegratorTree gets a unique id so
 /// [`PreparedPlans`] can be pinned to the exact instance they were built
@@ -99,6 +108,17 @@ pub struct ItStats {
     /// Total cross-term plans built so far (see
     /// [`IntegratorTree::prepare`] — a prepared handle freezes this).
     pub plan_builds: usize,
+    /// Two-way recursion forks that actually ran on two threads. Zero
+    /// for the bare `IntegratorTree` (which has no pool of its own);
+    /// populated by `TreeFieldIntegrator::stats` from its work pool.
+    /// **Pool-scoped**: lifetime aggregate of that pool — on a shared
+    /// pool this includes every sharer's activity, so compare deltas,
+    /// not absolutes.
+    pub par_forks: usize,
+    /// Parallel-map tasks (plan preparations, batch fields, serving
+    /// requests) executed on helper threads. Populated (and pool-scoped)
+    /// like `par_forks`.
+    pub par_tasks: usize,
 }
 
 /// Everything `f`-dependent, frozen at prepare time: per-internal-node
@@ -221,13 +241,27 @@ impl IntegratorTree {
         x: &Matrix,
         policy: &CrossPolicy,
     ) -> Result<Matrix, FtfiError> {
+        self.try_integrate_pooled(f, x, policy, &WorkPool::serial())
+    }
+
+    /// [`IntegratorTree::try_integrate`] running the recursion on a work
+    /// pool: sub-tree integrations above [`PAR_FORK_MIN_SIZE`] fork onto
+    /// helper threads. The per-block reduction order is identical to the
+    /// serial path, so the output is bit-identical for any thread count.
+    pub fn try_integrate_pooled(
+        &self,
+        f: &FDist,
+        x: &Matrix,
+        policy: &CrossPolicy,
+        pool: &WorkPool,
+    ) -> Result<Matrix, FtfiError> {
         if x.rows() != self.n {
             return Err(FtfiError::ShapeMismatch { expected: self.n, got: x.rows() });
         }
         if self.n == 0 {
             return Ok(Matrix::zeros(0, x.cols()));
         }
-        self.integrate_node(0, x, f, policy)
+        self.integrate_node(0, x, f, policy, pool)
     }
 
     /// Infallible [`IntegratorTree::try_integrate`] shim; panics on shape
@@ -256,27 +290,90 @@ impl IntegratorTree {
         channels: usize,
         policy: &CrossPolicy,
     ) -> Result<PreparedPlans, FtfiError> {
+        self.prepare_pooled(f, channels, policy, &WorkPool::serial())
+    }
+
+    /// [`IntegratorTree::prepare`] with the per-node plan construction
+    /// fanned out over a work pool: the Chebyshev probe loops and FFT
+    /// table builds of different internal nodes are independent, so they
+    /// parallelise embarrassingly. Plans are identical to the serial
+    /// path; on failure a typed error from a failing node is surfaced
+    /// and the remaining per-node work is short-circuited (the serial
+    /// path surfaces the first failing node in arena order).
+    pub fn prepare_pooled(
+        &self,
+        f: &FDist,
+        channels: usize,
+        policy: &CrossPolicy,
+        pool: &WorkPool,
+    ) -> Result<PreparedPlans, FtfiError> {
         policy.validate()?;
-        let mut nodes = Vec::with_capacity(self.nodes.len());
-        let mut built = 0usize;
-        for node in &self.nodes {
+        let build = |node: &ItNode| -> Result<PreparedNode, FtfiError> {
             match node {
-                ItNode::Leaf { dmat, .. } => {
-                    nodes.push(PreparedNode::Leaf {
-                        fmat: dmat.iter().map(|&t| f.eval(t)).collect(),
-                    });
-                }
+                ItNode::Leaf { dmat, .. } => Ok(PreparedNode::Leaf {
+                    fmat: dmat.iter().map(|&t| f.eval(t)).collect(),
+                }),
                 ItNode::Internal { left, right, .. } => {
                     let into_left = try_make_plan(f, &left.d, &right.d, channels, policy)?;
                     let into_right = try_make_plan(f, &right.d, &left.d, channels, policy)?;
-                    built += 2;
-                    nodes.push(PreparedNode::Internal {
+                    Ok(PreparedNode::Internal {
                         into_left,
                         into_right,
                         left_fd: left.d.iter().map(|&t| f.eval(t)).collect(),
                         right_fd: right.d.iter().map(|&t| f.eval(t)).collect(),
-                    });
+                    })
                 }
+            }
+        };
+        let mut nodes = Vec::with_capacity(self.nodes.len());
+        let mut built = 0usize;
+        if pool.threads() <= 1 || self.n < PAR_MAP_MIN_N {
+            // Serial path: plain short-circuiting walk in arena order.
+            for node in &self.nodes {
+                let node = build(node)?;
+                if matches!(node, PreparedNode::Internal { .. }) {
+                    built += 2;
+                }
+                nodes.push(node);
+            }
+        } else {
+            // Parallel fan-out with short-circuit: the map itself cannot
+            // early-return, so after the first failing node every
+            // remaining task bails with the `Ok(None)` sentinel instead
+            // of paying its probe loops / FFT builds. A sentinel can
+            // only exist if some task stored a real `Err` at its own
+            // index, so the scan below always finds a typed error.
+            let failed = AtomicBool::new(false);
+            let prepared = pool.map(&self.nodes, |_, node| {
+                if failed.load(Ordering::Relaxed) {
+                    return Ok(None);
+                }
+                match build(node) {
+                    Ok(p) => Ok(Some(p)),
+                    Err(e) => {
+                        failed.store(true, Ordering::Relaxed);
+                        Err(e)
+                    }
+                }
+            });
+            let mut aborted = false;
+            for slot in prepared {
+                match slot? {
+                    Some(node) => {
+                        if matches!(node, PreparedNode::Internal { .. }) {
+                            built += 2;
+                        }
+                        nodes.push(node);
+                    }
+                    None => aborted = true,
+                }
+            }
+            if aborted {
+                // Defensive: structurally unreachable (see above), but
+                // the prepare surface must stay panic-free.
+                return Err(FtfiError::InvalidInput(
+                    "prepare aborted without a recorded node error".to_string(),
+                ));
             }
         }
         self.plan_builds.fetch_add(built, Ordering::Relaxed);
@@ -298,6 +395,18 @@ impl IntegratorTree {
         x: &Matrix,
         plans: &PreparedPlans,
     ) -> Result<Matrix, FtfiError> {
+        self.integrate_prepared_pooled(x, plans, &WorkPool::serial())
+    }
+
+    /// [`IntegratorTree::integrate_prepared`] running the recursion on a
+    /// work pool (same forking and bit-identity contract as
+    /// [`IntegratorTree::try_integrate_pooled`]).
+    pub fn integrate_prepared_pooled(
+        &self,
+        x: &Matrix,
+        plans: &PreparedPlans,
+        pool: &WorkPool,
+    ) -> Result<Matrix, FtfiError> {
         if plans.tree_id != self.id {
             return Err(FtfiError::InvalidInput(
                 "prepared plans were built for a different IntegratorTree".to_string(),
@@ -309,7 +418,7 @@ impl IntegratorTree {
         if self.n == 0 {
             return Ok(Matrix::zeros(0, x.cols()));
         }
-        Ok(self.integrate_prepared_node(0, x, plans))
+        Ok(self.integrate_prepared_node(0, x, plans, pool))
     }
 
     fn integrate_node(
@@ -318,6 +427,7 @@ impl IntegratorTree {
         x: &Matrix,
         f: &FDist,
         policy: &CrossPolicy,
+        pool: &WorkPool,
     ) -> Result<Matrix, FtfiError> {
         match &self.nodes[idx] {
             ItNode::Leaf { size, dmat } => {
@@ -328,9 +438,22 @@ impl IntegratorTree {
                 let xl = x.gather_rows(&left.ids);
                 let xr = x.gather_rows(&right.ids);
                 // Inner sums within each side (pivot belongs to both, but
-                // its output is taken from the left side only).
-                let ol = self.integrate_node(*left_child, &xl, f, policy)?;
-                let or_ = self.integrate_node(*right_child, &xr, f, policy)?;
+                // its output is taken from the left side only). The two
+                // sub-tree integrations are independent; large nodes fork
+                // them onto the pool, and the `(left, right)` assembly
+                // order keeps the result bit-identical to serial.
+                let (ol, or_) = if *size >= PAR_FORK_MIN_SIZE && pool.threads() > 1 {
+                    pool.join(
+                        || self.integrate_node(*left_child, &xl, f, policy, pool),
+                        || self.integrate_node(*right_child, &xr, f, policy, pool),
+                    )
+                } else {
+                    (
+                        self.integrate_node(*left_child, &xl, f, policy, pool),
+                        self.integrate_node(*right_child, &xr, f, policy, pool),
+                    )
+                };
+                let (ol, or_) = (ol?, or_?);
 
                 // Aggregated fields per distinct pivot distance (Eq. 3).
                 let xr_agg = aggregate(right, &xr);
@@ -355,7 +478,13 @@ impl IntegratorTree {
         }
     }
 
-    fn integrate_prepared_node(&self, idx: usize, x: &Matrix, plans: &PreparedPlans) -> Matrix {
+    fn integrate_prepared_node(
+        &self,
+        idx: usize,
+        x: &Matrix,
+        plans: &PreparedPlans,
+        pool: &WorkPool,
+    ) -> Matrix {
         match (&self.nodes[idx], &plans.nodes[idx]) {
             (ItNode::Leaf { size, .. }, PreparedNode::Leaf { fmat }) => {
                 leaf_apply(*size, x, |k| fmat[k])
@@ -367,8 +496,18 @@ impl IntegratorTree {
                 let d = x.cols();
                 let xl = x.gather_rows(&left.ids);
                 let xr = x.gather_rows(&right.ids);
-                let ol = self.integrate_prepared_node(*left_child, &xl, plans);
-                let or_ = self.integrate_prepared_node(*right_child, &xr, plans);
+                // Same fork rule and assembly order as `integrate_node`.
+                let (ol, or_) = if *size >= PAR_FORK_MIN_SIZE && pool.threads() > 1 {
+                    pool.join(
+                        || self.integrate_prepared_node(*left_child, &xl, plans, pool),
+                        || self.integrate_prepared_node(*right_child, &xr, plans, pool),
+                    )
+                } else {
+                    (
+                        self.integrate_prepared_node(*left_child, &xl, plans, pool),
+                        self.integrate_prepared_node(*right_child, &xr, plans, pool),
+                    )
+                };
                 let xr_agg = aggregate(right, &xr);
                 let xl_agg = aggregate(left, &xl);
                 // Cached plans: no probe loops, no lattice detection, no
@@ -729,6 +868,29 @@ mod tests {
         // …while each re-planning call rebuilds all of them.
         it.integrate(&f, &x, &policy);
         assert_eq!(it.stats().plan_builds, 2 * after_prepare);
+    }
+
+    #[test]
+    fn pooled_recursion_is_bit_identical_to_serial() {
+        // n is comfortably above PAR_FORK_MIN_SIZE so the recursion
+        // actually forks; `forks > 0` pins that the parallel path ran.
+        let mut rng = Pcg::seed(15);
+        let tree = random_tree(1100, 0.1, 1.0, &mut rng);
+        let it = IntegratorTree::with_leaf_threshold(&tree, 32);
+        let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
+        let policy = CrossPolicy::default();
+        let x = Matrix::randn(1100, 2, &mut rng);
+        let pool = WorkPool::new(4);
+        let serial = it.try_integrate_pooled(&f, &x, &policy, &WorkPool::serial()).unwrap();
+        let par = it.try_integrate_pooled(&f, &x, &policy, &pool).unwrap();
+        assert!(serial == par, "pooled re-planning output must be bit-identical");
+        assert!(pool.stats().forks > 0, "the 4-thread recursion never forked");
+        let plans_s = it.prepare(&f, 2, &policy).unwrap();
+        let plans_p = it.prepare_pooled(&f, 2, &policy, &pool).unwrap();
+        let a = it.integrate_prepared_pooled(&x, &plans_s, &WorkPool::serial()).unwrap();
+        let b = it.integrate_prepared_pooled(&x, &plans_p, &pool).unwrap();
+        assert!(a == b, "pooled prepared output must be bit-identical");
+        assert_eq!(plans_s.plans_built(), plans_p.plans_built());
     }
 
     #[test]

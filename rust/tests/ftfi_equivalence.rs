@@ -395,6 +395,128 @@ fn error_paths_return_typed_errors() {
     ));
 }
 
+/// Acceptance (multi-threaded engine): `threads = 1` and `threads = 4`
+/// produce **bit-identical** outputs — the parallel engine never
+/// reorders a floating-point reduction — across the re-planning,
+/// prepared, batch and graph (MST-metric) paths. CI runs the whole
+/// suite under `FTFI_THREADS ∈ {1, 4}`; the explicit `.threads(..)`
+/// knobs below pin both engines regardless of the environment.
+#[test]
+fn threads_serial_and_parallel_are_bit_identical() {
+    let mut rng = Pcg::seed(12000);
+    // Rational weights keep the lattice path applicable for any f; n is
+    // comfortably above the recursion's fork cutoff (512) so the
+    // parallel engine actually engages (pinned via `par_forks`).
+    let tree = random_rational_tree(1200, 3, 4, &mut rng);
+    let x = Matrix::randn(1200, 2, &mut rng);
+    let fs: Vec<FDist> = vec![
+        FDist::Identity,
+        FDist::Exponential { lambda: -0.3, scale: 1.0 },
+        FDist::inverse_quadratic(0.5),
+        FDist::gaussian(0.05),
+        FDist::Custom(std::sync::Arc::new(|t: f64| (0.3 * t).sin() / (1.0 + 0.2 * t))),
+    ];
+    for f in &fs {
+        let serial = TreeFieldIntegrator::builder(&tree).threads(1).build().unwrap();
+        let par = TreeFieldIntegrator::builder(&tree).threads(4).build().unwrap();
+        let a = serial.try_integrate(f, &x).unwrap();
+        let b = par.try_integrate(f, &x).unwrap();
+        assert!(a == b, "{f:?}: re-planning path must be bit-identical");
+        let ps = serial.prepare(f).unwrap();
+        let pp = par.prepare(f).unwrap();
+        let a = ps.integrate(&x).unwrap();
+        let b = pp.integrate(&x).unwrap();
+        assert!(a == b, "{f:?}: prepared path must be bit-identical");
+        assert!(par.stats().par_forks > 0, "{f:?}: the parallel engine never forked");
+    }
+
+    // Batch axis: a parallel `integrate_batch` equals one-by-one serial
+    // integration, in order.
+    let f = FDist::inverse_quadratic(0.5);
+    let serial = TreeFieldIntegrator::builder(&tree).threads(1).build().unwrap();
+    let par = TreeFieldIntegrator::builder(&tree).threads(4).build().unwrap();
+    let ps = serial.prepare(&f).unwrap();
+    let pp = par.prepare(&f).unwrap();
+    let fields: Vec<Matrix> = (0..6).map(|_| Matrix::randn(1200, 2, &mut rng)).collect();
+    let refs: Vec<&Matrix> = fields.iter().collect();
+    let batch = pp.integrate_batch(&refs).unwrap();
+    for (x_i, got) in fields.iter().zip(&batch) {
+        let want = ps.integrate(x_i).unwrap();
+        assert!(*got == want, "batch output must be bit-identical to serial");
+    }
+
+    // Graph (MST-metric) integrators.
+    let g = generators::path_plus_random_edges(900, 450, &mut rng);
+    let gs = ftfi::GraphFieldIntegrator::builder(&g).threads(1).build().unwrap();
+    let gp = ftfi::GraphFieldIntegrator::builder(&g).threads(4).build().unwrap();
+    let xg = Matrix::randn(900, 2, &mut rng);
+    let fg = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+    let a = gs.try_integrate(&fg, &xg).unwrap();
+    let b = gp.try_integrate(&fg, &xg).unwrap();
+    assert!(a == b, "graph integrator must be bit-identical across thread counts");
+}
+
+/// Forced-strategy sweep under the thread matrix: every applicable
+/// `(f, strategy)` combo is bit-identical at `threads = 1` vs
+/// `threads = 4`, and applicability itself does not depend on the
+/// thread count.
+#[test]
+fn threads_bit_identical_across_forced_strategies() {
+    let mut rng = Pcg::seed(12100);
+    let tree = random_rational_tree(700, 3, 4, &mut rng);
+    let x = Matrix::randn(700, 2, &mut rng);
+    let fs: Vec<FDist> = vec![
+        FDist::Exponential { lambda: -0.3, scale: 1.0 },
+        FDist::inverse_quadratic(0.4),
+        FDist::gaussian(0.1),
+        FDist::ExpOverLinear { lambda: -0.2, c: 1.5 },
+    ];
+    let all = [
+        Strategy::Dense,
+        Strategy::Separable,
+        Strategy::Lattice,
+        Strategy::RationalSum,
+        Strategy::Cauchy,
+        Strategy::Vandermonde,
+        Strategy::Chebyshev,
+    ];
+    let mut applicable = 0usize;
+    for f in &fs {
+        for &s in &all {
+            let policy =
+                CrossPolicy { force: Some(s), dense_cutoff: 0, ..Default::default() };
+            let serial = TreeFieldIntegrator::builder(&tree)
+                .threads(1)
+                .policy(policy.clone())
+                .build()
+                .unwrap();
+            let par = TreeFieldIntegrator::builder(&tree)
+                .threads(4)
+                .policy(policy)
+                .build()
+                .unwrap();
+            let (ps, pp) = match (serial.prepare(f), par.prepare(f)) {
+                (Ok(a), Ok(b)) => (a, b),
+                (
+                    Err(FtfiError::StrategyInapplicable { .. }),
+                    Err(FtfiError::StrategyInapplicable { .. }),
+                ) => continue,
+                (a, b) => panic!(
+                    "{f:?} forced {s:?}: applicability diverged across thread counts \
+                     (serial ok={}, parallel ok={})",
+                    a.is_ok(),
+                    b.is_ok()
+                ),
+            };
+            applicable += 1;
+            let a = ps.integrate(&x).unwrap();
+            let b = pp.integrate(&x).unwrap();
+            assert!(a == b, "{f:?} forced {s:?}: outputs must be bit-identical");
+        }
+    }
+    assert!(applicable >= 10, "only {applicable} (f, strategy) combos were applicable");
+}
+
 /// Acceptance: `prepare(&f)` builds every plan exactly once; k repeated
 /// `integrate` calls reuse them (the `plan_builds` counter in `ItStats`
 /// does not move) and stay correct against the brute oracle.
