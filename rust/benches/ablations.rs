@@ -8,6 +8,10 @@
 //! - parallel scaling of the multi-threaded execution engine (threads ∈
 //!   {1, 2, 4, 8} on an n = 4000 batch-of-8 workload), with a serial
 //!   bit-identity check and a machine-readable `BENCH_parallel.json`;
+//! - tree-ensemble scaling (m ∈ {1, 4, 8, 16} random FRT/Bartal
+//!   embeddings): median metric distortion and wall-clock vs the
+//!   single-MST and brute-force backends, with a seed-determinism
+//!   bit-identity check and a machine-readable `BENCH_ensemble.json`;
 //! - cross-multiplier strategy crossover on the same tree (separable vs
 //!   lattice vs Chebyshev vs dense);
 //! - RFF feature count vs error (§A.2.1's variance claim);
@@ -17,8 +21,9 @@
 //!
 //! Run: `cargo bench --bench ablations`. The CI bench-smoke job runs
 //! `cargo bench --bench ablations -- --quick`, which executes only the
-//! cheap parallel-scaling sweep and emits `BENCH_parallel.json` as the
-//! perf-trajectory artifact.
+//! cheap parallel-scaling and ensemble-scaling sweeps and emits
+//! `BENCH_parallel.json` + `BENCH_ensemble.json` as the perf-trajectory
+//! artifacts.
 
 use ftfi::bench_util::{banner, bench, time_once, Table};
 use ftfi::ftfi::cordial::{cross_apply, cross_apply_dense, CrossPolicy, Strategy};
@@ -180,6 +185,156 @@ fn parallel_scaling(quick: bool) {
     println!("wrote BENCH_parallel.json (outputs bit-identical across thread counts)");
 }
 
+/// Tentpole bench (PR 3): the tree-ensemble route — accuracy/cost
+/// scaling in the ensemble size m against the single-MST and brute-force
+/// (exact graph metric) backends. Reports the median pair distortion of
+/// the *averaged* ensemble metric, the prepared-integrate wall-clock and
+/// the relative integration error vs brute force. Asserts the
+/// seed-determinism contract (threads 1 vs 4 bit-identical) before
+/// timing, and always writes `BENCH_ensemble.json` for the CI artifact.
+fn ensemble_scaling(quick: bool) {
+    use ftfi::ftfi::brute::BruteForceIntegrator;
+    use ftfi::ftfi::ensemble::EnsembleMethod;
+    use ftfi::graph::shortest_path::dijkstra;
+    use ftfi::{EnsembleFieldIntegrator, FieldIntegrator, GraphFieldIntegrator};
+
+    let (n, d, ms): (usize, usize, &[usize]) =
+        if quick { (400, 2, &[1, 4]) } else { (1000, 2, &[1, 4, 8, 16]) };
+    banner(&format!("Ablation: tree-ensemble scaling (n = {n}, f = exp, FRT)"));
+    let mut rng = Pcg::seed(31);
+    let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+    let x = Matrix::randn(n, d, &mut rng);
+    let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+
+    // Distortion probe pairs and their true graph distances.
+    let n_pairs = if quick { 100 } else { 300 };
+    let pairs: Vec<(usize, usize)> = (0..n_pairs)
+        .map(|_| {
+            let u = rng.below(n);
+            let mut v = rng.below(n);
+            while v == u {
+                v = rng.below(n);
+            }
+            (u, v)
+        })
+        .collect();
+    let mut graph_d = std::collections::HashMap::new();
+    for &(u, _) in &pairs {
+        graph_d.entry(u).or_insert_with(|| dijkstra(&g, u));
+    }
+    let median = |mut xs: Vec<f64>| -> f64 {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[xs.len() / 2]
+    };
+
+    // Ground truth + baselines.
+    let brute = BruteForceIntegrator::from_graph(&g);
+    let (want, t_brute) = time_once(|| brute.integrate(&f, &x).expect("brute"));
+    let mst = GraphFieldIntegrator::try_new(&g).expect("connected graph");
+    let mst_prep = mst.prepare(&f).expect("plannable f");
+    let mst_timing = bench(0, 3, || mst_prep.integrate(&x).expect("mst integrate"));
+    let mst_out = mst_prep.integrate(&x).expect("mst integrate");
+    let rel_mst = mst_out.frobenius_diff(&want) / (1.0 + want.frobenius());
+    let mst_distortion = median(
+        pairs
+            .iter()
+            .map(|&(u, v)| mst.tree().distance(u, v) / graph_d[&u][v])
+            .collect(),
+    );
+
+    let table = Table::new(
+        &["backend", "m", "distortion", "integrate (ms)", "rel err"],
+        &[10, 4, 11, 15, 10],
+    );
+    table.row(&[
+        "brute".into(),
+        "-".into(),
+        "1.00".into(),
+        format!("{:.1}", t_brute * 1e3),
+        "0".into(),
+    ]);
+    table.row(&[
+        "mst".into(),
+        "1".into(),
+        format!("{mst_distortion:.2}"),
+        format!("{:.1}", mst_timing.median * 1e3),
+        format!("{rel_mst:.2e}"),
+    ]);
+
+    let mut json_rows: Vec<String> = vec![
+        format!(
+            "    {{\"backend\": \"brute\", \"m\": 0, \"distortion\": 1.0, \
+             \"median_s\": {t_brute:.6}, \"rel_err\": 0.0}}"
+        ),
+        format!(
+            "    {{\"backend\": \"mst\", \"m\": 1, \"distortion\": {mst_distortion:.4}, \
+             \"median_s\": {:.6}, \"rel_err\": {rel_mst:.3e}}}",
+            mst_timing.median
+        ),
+    ];
+    for &m in ms {
+        // Determinism gate: fixed (seed, m) must be bit-identical across
+        // thread counts before anything is timed. The parallel build is
+        // then reused as the timed integrator (it is the same ensemble).
+        let serial = EnsembleFieldIntegrator::builder(&g)
+            .trees(m)
+            .seed(97)
+            .method(EnsembleMethod::Frt)
+            .threads(1)
+            .build()
+            .expect("connected graph");
+        let ens = EnsembleFieldIntegrator::builder(&g)
+            .trees(m)
+            .seed(97)
+            .method(EnsembleMethod::Frt)
+            .threads(4)
+            .build()
+            .expect("connected graph");
+        let a = serial.try_integrate(&f, &x).expect("serial");
+        let b = ens.try_integrate(&f, &x).expect("parallel");
+        assert!(a == b, "m={m}: ensemble output must be bit-identical across thread counts");
+
+        let prepared = ens.prepare_with_channels(&f, d).expect("plannable f");
+        let timing = bench(0, 3, || prepared.integrate(&x).expect("ensemble integrate"));
+        let out = prepared.integrate(&x).expect("ensemble integrate");
+        let rel = out.frobenius_diff(&want) / (1.0 + want.frobenius());
+        let distortion = median(
+            pairs
+                .iter()
+                .map(|&(u, v)| {
+                    let avg: f64 = (0..m)
+                        .map(|i| ens.embedding(i).distance(u, v))
+                        .sum::<f64>()
+                        / m as f64;
+                    avg / graph_d[&u][v]
+                })
+                .collect(),
+        );
+        table.row(&[
+            "frt".into(),
+            m.to_string(),
+            format!("{distortion:.2}"),
+            format!("{:.1}", timing.median * 1e3),
+            format!("{rel:.2e}"),
+        ]);
+        json_rows.push(format!(
+            "    {{\"backend\": \"frt\", \"m\": {m}, \"distortion\": {distortion:.4}, \
+             \"median_s\": {:.6}, \"rel_err\": {rel:.3e}}}",
+            timing.median
+        ));
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"ensemble_scaling\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n}, \"channels\": {d}, \"seed\": 97, \"quick\": {quick},\n"
+    ));
+    json.push_str("  \"bit_identical_across_threads\": true,\n  \"results\": [\n");
+    json.push_str(&json_rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    std::fs::write("BENCH_ensemble.json", &json).expect("write BENCH_ensemble.json");
+    println!("wrote BENCH_ensemble.json (fixed (seed, m) bit-identical across thread counts)");
+}
+
 fn strategy_crossover() {
     banner("Ablation: cross-multiplier strategies, C in R^{k x l}, d=4");
     let table =
@@ -320,14 +475,17 @@ fn pointcloud_modelnet() {
 
 fn main() {
     // `cargo bench --bench ablations -- --quick`: the cheap CI smoke
-    // mode — only the parallel-scaling sweep, still emitting the JSON.
+    // mode — only the parallel-scaling and ensemble-scaling sweeps,
+    // still emitting both JSON artifacts.
     if std::env::args().any(|a| a == "--quick") {
         parallel_scaling(true);
+        ensemble_scaling(true);
         return;
     }
     leaf_threshold_sweep();
     prepared_vs_replan();
     parallel_scaling(false);
+    ensemble_scaling(false);
     strategy_crossover();
     rff_sweep();
     fig9_cubes();

@@ -13,6 +13,7 @@
 //! ```
 
 use crate::ftfi::cordial::{CrossPolicy, Strategy};
+use crate::ftfi::ensemble::EnsembleMethod;
 use crate::ftfi::FtfiError;
 use std::collections::HashMap;
 
@@ -219,6 +220,47 @@ impl IntegratorConfig {
     }
 }
 
+/// Typed tree-ensemble configuration (`[ensemble]` section): the knobs
+/// of the [`crate::ftfi::EnsembleFieldIntegrator`] builder. `trees = 0`
+/// (the default) means "disabled — use the single-MST route".
+#[derive(Debug, Clone)]
+pub struct EnsembleConfig {
+    /// Ensemble size `m` (`0` = single-MST route, no ensemble).
+    pub trees: usize,
+    /// Sampling seed — fixed `(seed, trees)` reproduces bit-identically.
+    pub seed: u64,
+    /// Embedding family name (`frt` or `bartal`).
+    pub method: String,
+}
+
+impl Default for EnsembleConfig {
+    fn default() -> Self {
+        EnsembleConfig { trees: 0, seed: 0, method: "frt".into() }
+    }
+}
+
+impl EnsembleConfig {
+    pub fn from_config(c: &Config) -> Self {
+        let d = EnsembleConfig::default();
+        EnsembleConfig {
+            trees: c.get_usize("ensemble.trees", d.trees),
+            seed: c.get_usize("ensemble.seed", d.seed as usize) as u64,
+            method: c.get_or("ensemble.method", &d.method).to_string(),
+        }
+    }
+
+    /// Whether the ensemble route is enabled at all.
+    pub fn enabled(&self) -> bool {
+        self.trees > 0
+    }
+
+    /// Parse the method name; fails on an unknown family instead of
+    /// silently falling back.
+    pub fn to_method(&self) -> Result<EnsembleMethod, FtfiError> {
+        EnsembleMethod::parse(&self.method)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +316,23 @@ mod tests {
         assert_eq!(policy.dense_cutoff, 1024);
         // `threads` defaults to 0 = auto when the key is absent.
         assert_eq!(IntegratorConfig::default().threads, 0);
+    }
+
+    #[test]
+    fn ensemble_config_roundtrip() {
+        let c = Config::parse("[ensemble]\ntrees = 8\nseed = 17\nmethod = bartal\n").unwrap();
+        let ec = EnsembleConfig::from_config(&c);
+        assert!(ec.enabled());
+        assert_eq!(ec.trees, 8);
+        assert_eq!(ec.seed, 17);
+        assert_eq!(ec.to_method().unwrap(), EnsembleMethod::Bartal);
+        // Absent section → disabled, frt default.
+        let d = EnsembleConfig::from_config(&Config::default());
+        assert!(!d.enabled());
+        assert_eq!(d.to_method().unwrap(), EnsembleMethod::Frt);
+        // Unknown family is a typed error.
+        let bad = EnsembleConfig { method: "steiner".into(), ..Default::default() };
+        assert!(matches!(bad.to_method(), Err(FtfiError::InvalidInput(_))));
     }
 
     #[test]

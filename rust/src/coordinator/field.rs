@@ -285,4 +285,62 @@ mod tests {
         // Empty input is a shape error, not a panic.
         assert!(exec.execute(&[vec![]]).is_err());
     }
+
+    /// Ensemble serving path: the generic executor over an
+    /// [`EnsembleFieldIntegrator`] shares the ensemble's pool, fans
+    /// batches out, and isolates per-request failures.
+    #[test]
+    fn ensemble_executor_batch_fanout_and_error_isolation() {
+        use crate::ftfi::ensemble::EnsembleFieldIntegrator;
+        let mut rng = Pcg::seed(21);
+        let g = generators::path_plus_random_edges(30, 15, &mut rng);
+        let ens = EnsembleFieldIntegrator::builder(&g).trees(3).seed(5).build().unwrap();
+        let shared = Arc::clone(ens.pool());
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let exec = FieldExecutor::new(ens, f, 4);
+        assert!(
+            Arc::ptr_eq(&exec.pool, &shared),
+            "executor must reuse the ensemble's pool (one thread budget)"
+        );
+        let good = vec![1.0f32; 30];
+        let bad = vec![1.0f32; 7];
+        let results = exec.execute_each(&[good.clone(), bad, good]);
+        assert_eq!(results.len(), 3);
+        assert!(results[0].is_ok());
+        match &results[1] {
+            Err(e) => assert!(e.contains("shape mismatch"), "{e}"),
+            Ok(_) => panic!("malformed request must fail alone"),
+        }
+        assert!(results[2].is_ok(), "batch-mates must not be poisoned");
+        assert_eq!(results[0].as_ref().unwrap(), results[2].as_ref().unwrap());
+    }
+
+    /// Ensemble serving path: fixed `(seed, trees)` responses are
+    /// bit-identical across thread counts (the CI thread matrix runs
+    /// the whole suite under `FTFI_THREADS ∈ {1, 4}`; the explicit
+    /// `.threads(..)` knobs pin both engines regardless).
+    #[test]
+    fn ensemble_executor_is_seed_deterministic_across_thread_counts() {
+        use crate::ftfi::ensemble::EnsembleFieldIntegrator;
+        let mut rng = Pcg::seed(22);
+        // n ≥ 256 so both the batch fan-out and the tree axis engage.
+        let g = generators::path_plus_random_edges(300, 150, &mut rng);
+        let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+        let build = |threads: usize| {
+            let b = EnsembleFieldIntegrator::builder(&g).trees(3).seed(9).threads(threads);
+            b.build().unwrap()
+        };
+        let exec_s = FieldExecutor::new(build(1), f.clone(), 8);
+        let exec_p = FieldExecutor::new(build(4), f, 8);
+        let inputs: Vec<Vec<f32>> = (0..4)
+            .map(|k| (0..300).map(|i| ((i + 97 * k) as f32 * 0.01).sin()).collect())
+            .collect();
+        let a = exec_s.execute_each(&inputs);
+        let b = exec_p.execute_each(&inputs);
+        assert_eq!(a.len(), b.len());
+        for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
+            let (ra, rb) = (ra.as_ref().unwrap(), rb.as_ref().unwrap());
+            assert_eq!(ra, rb, "request {i}: ensemble response must be bit-identical");
+        }
+    }
 }

@@ -1,0 +1,624 @@
+//! Randomized tree-ensemble field integration — the paper's application
+//! (a): approximating graph-metric integrals by tree-metric ones (Fig.
+//! 4/5), served through an *ensemble* of low-distortion random
+//! embeddings instead of the single MST.
+//!
+//! A single random 2-HST (FRT or Bartal) dominates the graph metric with
+//! `O(log n)` *expected* distortion, but any one sample can be badly
+//! stretched for particular pairs. Averaging the field integration over
+//! `m` independently sampled trees is the classic variance-reduction
+//! move for FRT-style embeddings (Fakcharoenphol–Rao–Talwar; see also
+//! "Efficient Graph Field Integrators Meet Point Clouds"):
+//!
+//! ```text
+//! out = (1/m) · Σ_i restrict_i( FTFI_{T_i}( f, lift_i(x) ) )
+//! ```
+//!
+//! where `lift_i` places the field on tree `T_i`'s leaves (zeros on
+//! Steiner nodes) and `restrict_i` reads the result back at the original
+//! vertices. Each per-tree integration is the exact polylog-linear FTFI
+//! of §3, so the whole ensemble costs `m` fast integrations plus one
+//! `O(n²)` all-pairs preprocessing (shared by every sampled tree).
+//!
+//! **Determinism contract.** Sampling is driven by one [`Pcg`] stream
+//! per ensemble member, derived only from `(seed, member index)` — never
+//! from thread scheduling — and the member outputs are averaged in
+//! member order. Combined with the work pool's bit-exact guarantee for
+//! each per-tree integration, a fixed `(seed, trees)` pair produces
+//! **bit-identical** output for any thread count.
+//!
+//! **Parallelism.** The ensemble adds a fourth fan-out axis — *across
+//! trees* — on the same shared [`WorkPool`] that drives the intra-tree
+//! recursion forks, the prepare fan-out and the batch axis, so stacked
+//! budgets compose instead of oversubscribing (tokens are shared by
+//! nested regions).
+
+use crate::ftfi::cordial::CrossPolicy;
+use crate::ftfi::functions::FDist;
+use crate::ftfi::{FieldIntegrator, FtfiError, TreeFieldIntegrator};
+use crate::graph::shortest_path::all_pairs;
+use crate::graph::Graph;
+use crate::linalg::matrix::Matrix;
+use crate::ml::rng::Pcg;
+use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
+use crate::tree::bartal::bartal_tree_with_dists;
+use crate::tree::frt::{frt_tree_with_dists, TreeEmbedding};
+use crate::tree::integrator_tree::PreparedPlans;
+use std::sync::Arc;
+
+/// Base stream id for per-member [`Pcg`] generators: member `i` samples
+/// from `Pcg::new(seed, ENSEMBLE_STREAM + i)`, so streams are pairwise
+/// distinct and depend only on `(seed, i)`.
+const ENSEMBLE_STREAM: u64 = 0x7f4a_7c15_0bcd_ef17;
+
+/// Which random low-distortion embedding the ensemble samples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnsembleMethod {
+    /// Fakcharoenphol–Rao–Talwar 2-HSTs (`tree/frt.rs`).
+    Frt,
+    /// Bartal low-diameter-decomposition trees (`tree/bartal.rs`).
+    Bartal,
+}
+
+impl EnsembleMethod {
+    /// Parse a method name as written in config files / CLI flags.
+    pub fn parse(name: &str) -> Result<EnsembleMethod, FtfiError> {
+        match name.to_ascii_lowercase().as_str() {
+            "frt" => Ok(EnsembleMethod::Frt),
+            "bartal" => Ok(EnsembleMethod::Bartal),
+            other => Err(FtfiError::InvalidInput(format!(
+                "unknown ensemble method {other:?} (frt|bartal)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for EnsembleMethod {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EnsembleMethod::Frt => write!(f, "frt"),
+            EnsembleMethod::Bartal => write!(f, "bartal"),
+        }
+    }
+}
+
+/// One sampled tree: the embedding plus its preprocessed integrator
+/// (both built once, at ensemble construction).
+struct Member {
+    emb: TreeEmbedding,
+    tfi: TreeFieldIntegrator,
+}
+
+/// Per-ensemble counters (the `ItStats` analogue for the tree axis) —
+/// used by tests to pin that the ensemble engaged its parallel axes and
+/// by the benches to report structure sizes.
+#[derive(Debug, Clone, Default)]
+pub struct EnsembleStats {
+    /// Ensemble size `m`.
+    pub trees: usize,
+    /// Total embedding-tree vertices across members (Steiner included).
+    pub tree_vertices_total: usize,
+    /// Total Steiner (embedding-added) nodes across members.
+    pub steiner_total: usize,
+    /// Cross-term plans built across all members' IntegratorTrees.
+    pub plan_builds: usize,
+    /// Pool-scoped fork counter (see [`crate::tree::integrator_tree::ItStats::par_forks`]).
+    pub par_forks: usize,
+    /// Pool-scoped helper-task counter (tree-axis + batch-axis maps).
+    pub par_tasks: usize,
+}
+
+/// Fallible builder for [`EnsembleFieldIntegrator`].
+pub struct EnsembleFieldIntegratorBuilder<'a> {
+    graph: &'a Graph,
+    trees: usize,
+    seed: u64,
+    method: EnsembleMethod,
+    leaf_threshold: usize,
+    policy: CrossPolicy,
+    threads: usize,
+    pool: Option<Arc<WorkPool>>,
+}
+
+impl<'a> EnsembleFieldIntegratorBuilder<'a> {
+    /// Ensemble size `m ≥ 1` (default 4).
+    pub fn trees(mut self, m: usize) -> Self {
+        self.trees = m;
+        self
+    }
+
+    /// Sampling seed (default 0). Fixed `(seed, trees)` ⇒ bit-identical
+    /// outputs for any thread count.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Embedding family (default [`EnsembleMethod::Frt`]).
+    pub fn method(mut self, method: EnsembleMethod) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Leaf threshold `t ≥ 2` of every member's IntegratorTree
+    /// (default 32).
+    pub fn leaf_threshold(mut self, t: usize) -> Self {
+        self.leaf_threshold = t;
+        self
+    }
+
+    /// Cross-term strategy policy shared by all members.
+    pub fn policy(mut self, policy: CrossPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Worker threads (`0` = auto — see
+    /// [`crate::ftfi::TreeFieldIntegratorBuilder::threads`]). One pool
+    /// drives the tree axis, every member's recursion forks and the
+    /// batch axis.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Share an existing work pool (takes precedence over
+    /// [`EnsembleFieldIntegratorBuilder::threads`]).
+    pub fn pool(mut self, pool: Arc<WorkPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Validate, run all-pairs once, sample `trees` embeddings (fanned
+    /// out across the pool — per-member RNG streams keep the sampling
+    /// independent of scheduling) and preprocess one
+    /// [`TreeFieldIntegrator`] per tree.
+    pub fn build(self) -> Result<EnsembleFieldIntegrator, FtfiError> {
+        if self.trees == 0 {
+            return Err(FtfiError::InvalidInput(
+                "ensemble needs at least one tree (trees ≥ 1)".into(),
+            ));
+        }
+        self.policy.validate()?;
+        if self.leaf_threshold < 2 {
+            return Err(FtfiError::InvalidInput(format!(
+                "leaf_threshold must be ≥ 2, got {}",
+                self.leaf_threshold
+            )));
+        }
+        if !self.graph.is_connected() {
+            return Err(FtfiError::DisconnectedGraph);
+        }
+        let n = self.graph.n();
+        let pool = self.pool.unwrap_or_else(|| Arc::new(WorkPool::with_auto(self.threads)));
+        // One O(n²) all-pairs pass shared by every sampled tree.
+        let dists = all_pairs(self.graph);
+        let idx: Vec<u64> = (0..self.trees as u64).collect();
+        let method = self.method;
+        let seed = self.seed;
+        let leaf_threshold = self.leaf_threshold;
+        let policy = &self.policy;
+        let build_one = |_slot: usize, &member: &u64| -> Result<Member, FtfiError> {
+            let mut rng = Pcg::new(seed, ENSEMBLE_STREAM.wrapping_add(member));
+            let emb = match method {
+                EnsembleMethod::Frt => frt_tree_with_dists(n, &dists, &mut rng),
+                EnsembleMethod::Bartal => bartal_tree_with_dists(n, &dists, &mut rng),
+            };
+            let tfi = TreeFieldIntegrator::builder(&emb.tree)
+                .leaf_threshold(leaf_threshold)
+                .policy(policy.clone())
+                .pool(Arc::clone(&pool))
+                .build()?;
+            Ok(Member { emb, tfi })
+        };
+        let members = pool.map(&idx, build_one);
+        let members: Vec<Member> = members.into_iter().collect::<Result<_, FtfiError>>()?;
+        Ok(EnsembleFieldIntegrator { members, n, seed, method, pool })
+    }
+}
+
+/// Field integration on a general graph via averaging over an ensemble
+/// of random low-distortion tree embeddings (FRT or Bartal). Exposes the
+/// same build → (prepare) → integrate lifecycle as the single-tree
+/// integrators and plugs into everything written against
+/// [`FieldIntegrator`] (the serving executors, the benches, …).
+pub struct EnsembleFieldIntegrator {
+    members: Vec<Member>,
+    /// Original-graph vertex count.
+    n: usize,
+    seed: u64,
+    method: EnsembleMethod,
+    /// One pool for every axis (tree fan-out, recursion forks, prepare
+    /// fan-out, batch fan-out) — shared with every member's integrator.
+    pool: Arc<WorkPool>,
+}
+
+impl EnsembleFieldIntegrator {
+    /// Start building an ensemble integrator for `graph`.
+    pub fn builder(graph: &Graph) -> EnsembleFieldIntegratorBuilder<'_> {
+        EnsembleFieldIntegratorBuilder {
+            graph,
+            trees: 4,
+            seed: 0,
+            method: EnsembleMethod::Frt,
+            leaf_threshold: 32,
+            policy: CrossPolicy::default(),
+            threads: 0,
+            pool: None,
+        }
+    }
+
+    /// Number of original-graph vertices.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Ensemble size `m`.
+    pub fn trees(&self) -> usize {
+        self.members.len()
+    }
+
+    /// The sampling seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The embedding family in use.
+    pub fn method(&self) -> EnsembleMethod {
+        self.method
+    }
+
+    /// The shared work pool.
+    pub fn pool(&self) -> &Arc<WorkPool> {
+        &self.pool
+    }
+
+    /// Member `i`'s embedding (benches measure distortion through it).
+    pub fn embedding(&self, i: usize) -> &TreeEmbedding {
+        &self.members[i].emb
+    }
+
+    /// Per-ensemble counters. The `par_*` fields are pool-scoped
+    /// lifetime aggregates (compare deltas on shared pools).
+    pub fn stats(&self) -> EnsembleStats {
+        let ps = self.pool.stats();
+        let mut st = EnsembleStats {
+            trees: self.members.len(),
+            par_forks: ps.forks,
+            par_tasks: ps.helper_tasks,
+            ..EnsembleStats::default()
+        };
+        for m in &self.members {
+            st.tree_vertices_total += m.emb.tree.n();
+            st.steiner_total += m.emb.n_steiner();
+            st.plan_builds += m.tfi.stats().plan_builds;
+        }
+        st
+    }
+
+    fn check_rows(&self, rows: usize) -> Result<(), FtfiError> {
+        if rows != self.n {
+            return Err(FtfiError::ShapeMismatch { expected: self.n, got: rows });
+        }
+        Ok(())
+    }
+
+    /// Run `per_member` for every member (fanned across the pool when
+    /// the problem is big enough to pay for helper threads) and average
+    /// the results **in member order** — the reduction order never
+    /// depends on the thread count, so outputs stay bit-identical.
+    fn average<F>(&self, cols: usize, per_member: F) -> Result<Matrix, FtfiError>
+    where
+        F: Fn(usize, &Member) -> Result<Matrix, FtfiError> + Sync,
+    {
+        let outs: Vec<Result<Matrix, FtfiError>> =
+            if self.members.len() < 2 || self.n < PAR_MAP_MIN_N {
+                self.members.iter().enumerate().map(|(i, m)| per_member(i, m)).collect()
+            } else {
+                self.pool.map(&self.members, per_member)
+            };
+        let mut acc = Matrix::zeros(self.n, cols);
+        for out in outs {
+            acc.axpy(1.0, &out?);
+        }
+        acc.scale(1.0 / self.members.len() as f64);
+        Ok(acc)
+    }
+
+    /// `out[v] = (1/m)·Σ_i Σ_u f(dist_{T_i}(v,u))·x[u]` — the averaged
+    /// tree-metric approximation of the graph-metric integral. Re-plans
+    /// every member's cross blocks per call; prefer
+    /// [`EnsembleFieldIntegrator::prepare`] when `f` is reused.
+    pub fn try_integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError> {
+        self.check_rows(x.rows())?;
+        self.average(x.cols(), |_, m| {
+            let lifted = m.emb.lift_field(x);
+            let y = m.tfi.try_integrate(f, &lifted)?;
+            Ok(m.emb.restrict_field(&y))
+        })
+    }
+
+    /// Scalar-field convenience.
+    pub fn try_integrate_vec(&self, f: &FDist, x: &[f64]) -> Result<Vec<f64>, FtfiError> {
+        let m = Matrix::from_vec(x.len(), 1, x.to_vec());
+        Ok(self.try_integrate(f, &m)?.into_vec())
+    }
+
+    /// Freeze `f` into per-member prepared plans: every member's cross
+    /// blocks are planned exactly once, here, and reused by all
+    /// subsequent integrations on the handle (the serving pattern).
+    pub fn prepare(&self, f: &FDist) -> Result<PreparedEnsembleIntegrator<'_>, FtfiError> {
+        self.prepare_with_channels(f, 1)
+    }
+
+    /// [`EnsembleFieldIntegrator::prepare`] with a field-width hint for
+    /// the planners' cost model.
+    pub fn prepare_with_channels(
+        &self,
+        f: &FDist,
+        channels: usize,
+    ) -> Result<PreparedEnsembleIntegrator<'_>, FtfiError> {
+        let plans = self.pool.map(&self.members, |_, m| m.tfi.prepare_plans(f, channels));
+        let plans: Vec<PreparedPlans> = plans.into_iter().collect::<Result<_, FtfiError>>()?;
+        Ok(PreparedEnsembleIntegrator { ens: self, plans })
+    }
+}
+
+impl FieldIntegrator for EnsembleFieldIntegrator {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError> {
+        self.try_integrate(f, x)
+    }
+    fn work_pool(&self) -> Option<&Arc<WorkPool>> {
+        Some(&self.pool)
+    }
+}
+
+/// An ensemble with all members' cross-block plans frozen for one `f` —
+/// the product of [`EnsembleFieldIntegrator::prepare`].
+pub struct PreparedEnsembleIntegrator<'a> {
+    ens: &'a EnsembleFieldIntegrator,
+    plans: Vec<PreparedPlans>,
+}
+
+impl PreparedEnsembleIntegrator<'_> {
+    /// Integrate one tensor field with the frozen `f`: lift → per-tree
+    /// prepared integration → restrict → average, fanned across trees.
+    pub fn integrate(&self, x: &Matrix) -> Result<Matrix, FtfiError> {
+        self.ens.check_rows(x.rows())?;
+        self.ens.average(x.cols(), |i, m| {
+            let lifted = m.emb.lift_field(x);
+            let y = m.tfi.integrate_prepared(&lifted, &self.plans[i])?;
+            Ok(m.emb.restrict_field(&y))
+        })
+    }
+
+    /// Integrate a batch of fields, reusing every member's plans. Fields
+    /// fan out across the pool (each field then walks the members
+    /// serially — nested regions share the one token budget); results
+    /// keep the input order and are bit-identical to serial calls.
+    pub fn integrate_batch(&self, xs: &[&Matrix]) -> Result<Vec<Matrix>, FtfiError> {
+        if self.ens.n < PAR_MAP_MIN_N {
+            return xs.iter().map(|x| self.integrate(x)).collect();
+        }
+        self.ens.pool.map(xs, |_, x| self.integrate(x)).into_iter().collect()
+    }
+
+    /// Scalar-field convenience.
+    pub fn integrate_vec(&self, x: &[f64]) -> Result<Vec<f64>, FtfiError> {
+        let m = Matrix::from_vec(x.len(), 1, x.to_vec());
+        Ok(self.integrate(&m)?.into_vec())
+    }
+
+    /// Number of original-graph vertices.
+    pub fn n(&self) -> usize {
+        self.ens.n
+    }
+
+    /// Cross-term plans built at prepare time, summed over members.
+    pub fn plans_built(&self) -> usize {
+        self.plans.iter().map(|p| p.plans_built()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ftfi::brute::btfi;
+    use crate::graph::generators;
+
+    fn test_graph(n: usize, seed: u64) -> Graph {
+        let mut rng = Pcg::seed(seed);
+        generators::path_plus_random_edges(n, n / 2, &mut rng)
+    }
+
+    /// The ensemble output is exactly the member-order average of the
+    /// per-tree integrals (lift → integrate → restrict), each pinned
+    /// against the brute tree oracle.
+    #[test]
+    fn ensemble_average_matches_per_member_oracle() {
+        let g = test_graph(40, 1);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let mut rng = Pcg::seed(2);
+        let x = Matrix::randn(40, 2, &mut rng);
+        for method in [EnsembleMethod::Frt, EnsembleMethod::Bartal] {
+            let ens = EnsembleFieldIntegrator::builder(&g)
+                .trees(3)
+                .seed(7)
+                .method(method)
+                .build()
+                .unwrap();
+            let mut want = Matrix::zeros(40, 2);
+            for i in 0..ens.trees() {
+                let emb = ens.embedding(i);
+                let lifted = emb.lift_field(&x);
+                let y = btfi(&emb.tree, &f, &lifted);
+                want.axpy(1.0, &emb.restrict_field(&y));
+            }
+            want.scale(1.0 / 3.0);
+            let got = ens.try_integrate(&f, &x).unwrap();
+            let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+            assert!(rel < 1e-9, "{method}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn prepared_path_matches_replanning_path_and_batches() {
+        let g = test_graph(60, 3);
+        let ens = EnsembleFieldIntegrator::builder(&g).trees(4).seed(11).build().unwrap();
+        let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
+        let prepared = ens.prepare(&f).unwrap();
+        assert!(prepared.plans_built() > 0, "embedding trees must have cross blocks");
+        assert_eq!(prepared.n(), 60);
+        let mut rng = Pcg::seed(4);
+        let xs: Vec<Matrix> = (0..3).map(|_| Matrix::randn(60, 2, &mut rng)).collect();
+        for x in &xs {
+            let a = ens.try_integrate(&f, x).unwrap();
+            let b = prepared.integrate(x).unwrap();
+            let drift = a.frobenius_diff(&b) / (1.0 + b.frobenius());
+            assert!(drift < 1e-12, "prepared vs replanning drift {drift}");
+        }
+        let refs: Vec<&Matrix> = xs.iter().collect();
+        let batch = prepared.integrate_batch(&refs).unwrap();
+        assert_eq!(batch.len(), xs.len());
+        for (x, got) in xs.iter().zip(&batch) {
+            let want = prepared.integrate(x).unwrap();
+            assert!(*got == want, "batch output must equal the single-field path");
+        }
+        // Per-ensemble counters: structure + planning visible.
+        let st = ens.stats();
+        assert_eq!(st.trees, 4);
+        assert!(st.tree_vertices_total >= 4 * 60);
+        assert!(st.plan_builds > 0);
+    }
+
+    /// Fixed `(seed, m)` reproduces bit-identically; a different seed
+    /// samples different trees.
+    #[test]
+    fn seed_determinism_and_sensitivity() {
+        let g = test_graph(50, 5);
+        let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+        let mut rng = Pcg::seed(6);
+        let x = Matrix::randn(50, 1, &mut rng);
+        let a = EnsembleFieldIntegrator::builder(&g).trees(3).seed(42).build().unwrap();
+        let b = EnsembleFieldIntegrator::builder(&g).trees(3).seed(42).build().unwrap();
+        let ya = a.try_integrate(&f, &x).unwrap();
+        let yb = b.try_integrate(&f, &x).unwrap();
+        assert!(ya == yb, "same (seed, m) must reproduce bit-identically");
+        let c = EnsembleFieldIntegrator::builder(&g).trees(3).seed(43).build().unwrap();
+        let yc = c.try_integrate(&f, &x).unwrap();
+        assert!(
+            ya.max_abs_diff(&yc) > 0.0,
+            "different seeds must sample different ensembles"
+        );
+    }
+
+    /// The acceptance pin: fixed `(seed, m)` ⇒ bit-identical output for
+    /// any thread count, on both embedding families, replanning and
+    /// prepared paths — and the parallel tree axis actually engages.
+    #[test]
+    fn thread_count_bit_identical() {
+        let g = test_graph(300, 8);
+        let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
+        let mut rng = Pcg::seed(9);
+        let x = Matrix::randn(300, 2, &mut rng);
+        for method in [EnsembleMethod::Frt, EnsembleMethod::Bartal] {
+            let serial = EnsembleFieldIntegrator::builder(&g)
+                .trees(4)
+                .seed(21)
+                .method(method)
+                .threads(1)
+                .build()
+                .unwrap();
+            let par = EnsembleFieldIntegrator::builder(&g)
+                .trees(4)
+                .seed(21)
+                .method(method)
+                .threads(4)
+                .build()
+                .unwrap();
+            let a = serial.try_integrate(&f, &x).unwrap();
+            let b = par.try_integrate(&f, &x).unwrap();
+            assert!(a == b, "{method}: replanning path must be bit-identical");
+            let ps = serial.prepare(&f).unwrap();
+            let pp = par.prepare(&f).unwrap();
+            let a = ps.integrate(&x).unwrap();
+            let b = pp.integrate(&x).unwrap();
+            assert!(a == b, "{method}: prepared path must be bit-identical");
+            let st = par.stats();
+            assert!(
+                st.par_forks + st.par_tasks > 0,
+                "{method}: the parallel engine never engaged"
+            );
+            let st = serial.stats();
+            assert_eq!(st.par_forks + st.par_tasks, 0, "threads(1) must stay serial");
+        }
+    }
+
+    #[test]
+    fn error_paths_are_typed() {
+        // trees = 0.
+        let g = test_graph(10, 12);
+        assert!(matches!(
+            EnsembleFieldIntegrator::builder(&g).trees(0).build(),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        // Disconnected graph.
+        let dg = Graph::from_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        assert!(matches!(
+            EnsembleFieldIntegrator::builder(&dg).build(),
+            Err(FtfiError::DisconnectedGraph)
+        ));
+        // Shape mismatch on both integrate paths.
+        let ens = EnsembleFieldIntegrator::builder(&g).trees(2).build().unwrap();
+        let f = FDist::Identity;
+        let bad = Matrix::zeros(9, 1);
+        assert!(matches!(
+            ens.try_integrate(&f, &bad),
+            Err(FtfiError::ShapeMismatch { expected: 10, got: 9 })
+        ));
+        let prepared = ens.prepare(&f).unwrap();
+        assert!(matches!(
+            prepared.integrate(&bad),
+            Err(FtfiError::ShapeMismatch { expected: 10, got: 9 })
+        ));
+    }
+
+    #[test]
+    fn singleton_graph_ensemble() {
+        let g = Graph::from_edges(1, &[]);
+        let ens = EnsembleFieldIntegrator::builder(&g).trees(2).build().unwrap();
+        let f = FDist::Exponential { lambda: -1.0, scale: 2.0 };
+        let out = ens.try_integrate_vec(&f, &[3.0]).unwrap();
+        // Single vertex: out = f(0)·x = 2·3.
+        assert!((out[0] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn works_through_the_field_integrator_trait() {
+        let g = test_graph(30, 14);
+        let ens = EnsembleFieldIntegrator::builder(&g).trees(2).seed(1).build().unwrap();
+        let backend: &dyn FieldIntegrator = &ens;
+        assert_eq!(backend.n(), 30);
+        let mut rng = Pcg::seed(15);
+        let x = Matrix::randn(30, 1, &mut rng);
+        let via_trait = backend.integrate(&FDist::Identity, &x).unwrap();
+        let direct = ens.try_integrate(&FDist::Identity, &x).unwrap();
+        assert!(via_trait == direct);
+        assert!(ens.work_pool().is_some(), "executors must be able to share the pool");
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(EnsembleMethod::parse("frt").unwrap(), EnsembleMethod::Frt);
+        assert_eq!(EnsembleMethod::parse("Bartal").unwrap(), EnsembleMethod::Bartal);
+        assert!(matches!(
+            EnsembleMethod::parse("mst"),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        assert_eq!(EnsembleMethod::Frt.to_string(), "frt");
+        assert_eq!(EnsembleMethod::Bartal.to_string(), "bartal");
+    }
+}

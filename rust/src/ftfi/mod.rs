@@ -8,7 +8,10 @@
 //! [`TreeFieldIntegrator::prepare`] to freeze the per-block cross plans
 //! into a [`PreparedIntegrator`] handle. For general graphs use
 //! [`GraphFieldIntegrator`], which routes through the minimum spanning
-//! tree exactly as the paper's experiments do (§4).
+//! tree exactly as the paper's experiments do (§4), or
+//! [`EnsembleFieldIntegrator`], which averages over an ensemble of
+//! random low-distortion FRT/Bartal embeddings (Fig. 4/5's baselines,
+//! promoted to a servable backend).
 //!
 //! Lifecycle (`DESIGN.md` §Lifecycle):
 //!
@@ -31,6 +34,7 @@ pub mod brute;
 pub mod cauchy;
 pub mod chebyshev;
 pub mod cordial;
+pub mod ensemble;
 pub mod error;
 pub mod functions;
 pub mod hankel;
@@ -40,6 +44,7 @@ pub mod rational;
 pub mod rff;
 pub mod vandermonde;
 
+pub use ensemble::{EnsembleFieldIntegrator, EnsembleMethod, PreparedEnsembleIntegrator};
 pub use error::FtfiError;
 
 use crate::ftfi::cordial::CrossPolicy;
@@ -55,10 +60,11 @@ use std::sync::Arc;
 /// The unified integration interface: everything that can compute
 /// `out[v] = Σ_u f(dist(v,u))·x[u]` over some metric. Implemented by
 /// [`TreeFieldIntegrator`] (tree metric, fast), [`GraphFieldIntegrator`]
-/// (MST metric of a graph, fast) and the brute-force reference
-/// [`brute::BruteForceIntegrator`] — so the coordinator batcher, the
-/// benches and the examples can program against one trait and swap
-/// backends freely.
+/// (MST metric of a graph, fast), [`EnsembleFieldIntegrator`] (averaged
+/// random-tree-ensemble metric of a graph), the brute-force reference
+/// [`brute::BruteForceIntegrator`], and `Arc<I>` for any implementor
+/// (shared backends) — so the coordinator batcher, the benches and the
+/// examples can program against one trait and swap backends freely.
 pub trait FieldIntegrator {
     /// Number of vertices of the underlying metric space.
     fn n(&self) -> usize;
@@ -78,6 +84,24 @@ pub trait FieldIntegrator {
     fn integrate_vec(&self, f: &FDist, x: &[f64]) -> Result<Vec<f64>, FtfiError> {
         let m = Matrix::from_vec(x.len(), 1, x.to_vec());
         Ok(self.integrate(f, &m)?.into_vec())
+    }
+}
+
+/// Shared handles integrate too: serving workers wrap one expensive
+/// backend (e.g. an [`EnsembleFieldIntegrator`] with its sampled trees)
+/// in an `Arc` instead of rebuilding it per worker.
+impl<I: FieldIntegrator + ?Sized> FieldIntegrator for Arc<I> {
+    fn n(&self) -> usize {
+        (**self).n()
+    }
+    fn integrate(&self, f: &FDist, x: &Matrix) -> Result<Matrix, FtfiError> {
+        (**self).integrate(f, x)
+    }
+    fn work_pool(&self) -> Option<&Arc<WorkPool>> {
+        (**self).work_pool()
+    }
+    fn integrate_vec(&self, f: &FDist, x: &[f64]) -> Result<Vec<f64>, FtfiError> {
+        (**self).integrate_vec(f, x)
     }
 }
 

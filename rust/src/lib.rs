@@ -7,10 +7,11 @@
 //! The library provides:
 //!
 //! - exact polylog-linear integration of tensor fields on weighted trees
-//!   ([`ftfi::TreeFieldIntegrator`]) and, via MST metrics, on general
-//!   graphs ([`ftfi::GraphFieldIntegrator`]), behind a fallible
-//!   builder / prepare / integrate lifecycle with the typed
-//!   [`ftfi::FtfiError`] taxonomy and the unified
+//!   ([`ftfi::TreeFieldIntegrator`]) and, via MST metrics or randomized
+//!   FRT/Bartal tree ensembles, on general graphs
+//!   ([`ftfi::GraphFieldIntegrator`], [`ftfi::EnsembleFieldIntegrator`]),
+//!   behind a fallible builder / prepare / integrate lifecycle with the
+//!   typed [`ftfi::FtfiError`] taxonomy and the unified
 //!   [`ftfi::FieldIntegrator`] trait;
 //! - prepared-plan handles ([`ftfi::PreparedIntegrator`]) that build the
 //!   per-block cross plans once per `(tree, f)` and amortise them over
@@ -47,7 +48,8 @@ pub mod tree;
 
 pub use ftfi::functions::FDist;
 pub use ftfi::{
-    FieldIntegrator, FtfiError, GraphFieldIntegrator, PreparedIntegrator, TreeFieldIntegrator,
+    EnsembleFieldIntegrator, EnsembleMethod, FieldIntegrator, FtfiError, GraphFieldIntegrator,
+    PreparedIntegrator, TreeFieldIntegrator,
 };
 pub use graph::Graph;
 pub use linalg::matrix::Matrix;

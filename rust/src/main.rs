@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! ftfi integrate  --n 5000 --f exp --repeat 8   FTFI vs brute; prepared-plan reuse
+//! ftfi integrate  --ensemble-trees 8            FRT/Bartal tree-ensemble route
 //! ftfi serve      --requests 500 --batch 8      batched field-integration server
+//! ftfi serve      --backend ensemble            serve the tree-ensemble backend
 //! ftfi gw         --n 300                       Gromov–Wasserstein demo
 //! ftfi train      --steps 200 --lr 0.01         train TopViT-mini via PJRT [pjrt]
 //! ftfi info                                     versions, artifact status
@@ -11,19 +13,23 @@
 //! `integrate` and `serve` accept `--threads N` (0 = auto: honour
 //! `FTFI_THREADS`, else all cores; 1 = serial) for the parallel
 //! integrate / prepare / batch engine — outputs are bit-identical for
-//! every setting. The `train` command and the `--backend topvit` serve
-//! path need the `pjrt` cargo feature (external `xla`/`anyhow` crates);
+//! every setting — plus the tree-ensemble knobs `--ensemble-trees M`
+//! (0 = single-MST route), `--ensemble-seed S` and
+//! `--ensemble-method frt|bartal` (config: the `[ensemble]` section);
+//! fixed `(seed, trees)` reproduces bit-identically for any thread
+//! count. The `train` command and the `--backend topvit` serve path
+//! need the `pjrt` cargo feature (external `xla`/`anyhow` crates);
 //! everything else is dependency-free.
 
 use ftfi::bench_util::time_once;
 use ftfi::cli::Args;
-use ftfi::config::{Config, IntegratorConfig};
+use ftfi::config::{Config, EnsembleConfig, IntegratorConfig};
 use ftfi::coordinator::{
-    BatchExecutor, BatcherConfig, InferenceServer, PreparedFieldExecutor,
+    BatchExecutor, BatcherConfig, FieldExecutor, InferenceServer, PreparedFieldExecutor,
 };
-use ftfi::ftfi::brute::BruteTreeIntegrator;
+use ftfi::ftfi::brute::{BruteForceIntegrator, BruteTreeIntegrator};
 use ftfi::ftfi::functions::FDist;
-use ftfi::ftfi::TreeFieldIntegrator;
+use ftfi::ftfi::{EnsembleFieldIntegrator, FieldIntegrator, TreeFieldIntegrator};
 use ftfi::graph::{generators, mst::try_minimum_spanning_tree};
 use ftfi::linalg::matrix::Matrix;
 use ftfi::ml::rng::Pcg;
@@ -87,7 +93,100 @@ fn integrator_config(args: &Args) -> Result<IntegratorConfig, Box<dyn std::error
     Ok(cfg)
 }
 
+/// Resolve the tree-ensemble knobs from `--config` (the `[ensemble]`
+/// section) plus direct CLI overrides.
+fn ensemble_config(args: &Args) -> Result<EnsembleConfig, Box<dyn std::error::Error>> {
+    let mut cfg = match args.get("config") {
+        Some(path) => EnsembleConfig::from_config(&Config::load(path)?),
+        None => EnsembleConfig::default(),
+    };
+    if let Some(t) = args.get("ensemble-trees") {
+        cfg.trees = t.parse().map_err(|_| format!("bad --ensemble-trees {t:?}"))?;
+    }
+    if let Some(s) = args.get("ensemble-seed") {
+        cfg.seed = s.parse().map_err(|_| format!("bad --ensemble-seed {s:?}"))?;
+    }
+    if let Some(m) = args.get("ensemble-method") {
+        cfg.method = m.to_string();
+    }
+    Ok(cfg)
+}
+
+/// The tree-ensemble route of `integrate`: average FTFI over `m` random
+/// FRT/Bartal embeddings and compare against the exact graph-metric
+/// integral (brute force) and the single-MST approximation.
+fn cmd_integrate_ensemble(args: &Args, ecfg: &EnsembleConfig) -> CliResult {
+    let n = args.get_usize("n", 2000);
+    let extra = args.get_usize("extra-edges", n / 2);
+    let d = args.get_usize("channels", 4);
+    let f = parse_f(args.get_str("f", "exp"), args.get_f64("lambda", 0.5))?;
+    let icfg = integrator_config(args)?;
+    let policy = icfg.to_policy()?;
+    let method = ecfg.to_method()?;
+    let mut rng = Pcg::seed(args.get_usize("seed", 0) as u64);
+    let g = generators::path_plus_random_edges(n, extra, &mut rng);
+    let x = Matrix::randn(n, d, &mut rng);
+    println!(
+        "graph: path({n}) + {extra} random edges; ensemble {}×{method} (seed {}); f = {f:?}",
+        ecfg.trees, ecfg.seed
+    );
+
+    let (brute, t_bpre) = time_once(|| BruteForceIntegrator::from_graph(&g));
+    let (want, t_brute) = time_once(|| brute.integrate(&f, &x));
+    let want = want?;
+    println!("brute (graph metric): preprocess {t_bpre:.3}s, integrate {t_brute:.4}s");
+
+    let (mst, t_mpre) = time_once(|| {
+        ftfi::GraphFieldIntegrator::builder(&g)
+            .leaf_threshold(icfg.leaf_threshold)
+            .policy(policy.clone())
+            .threads(icfg.threads)
+            .build()
+    });
+    let mst = mst?;
+    let (mst_out, t_mint) = time_once(|| mst.try_integrate(&f, &x));
+    let rel_mst = mst_out?.frobenius_diff(&want) / (1.0 + want.frobenius());
+    println!(
+        "single MST:  preprocess {t_mpre:.3}s, integrate {t_mint:.4}s, rel err {rel_mst:.3e}"
+    );
+
+    let (ens, t_epre) = time_once(|| {
+        EnsembleFieldIntegrator::builder(&g)
+            .trees(ecfg.trees)
+            .seed(ecfg.seed)
+            .method(method)
+            .leaf_threshold(icfg.leaf_threshold)
+            .policy(policy)
+            .threads(icfg.threads)
+            .build()
+    });
+    let ens = ens?;
+    let st = ens.stats();
+    println!(
+        "ensemble:    {} trees sampled in {t_epre:.3}s ({} tree vertices, {} Steiner), \
+         {} integration threads",
+        st.trees,
+        st.tree_vertices_total,
+        st.steiner_total,
+        ens.pool().threads()
+    );
+    let (prepared, t_plan) = time_once(|| ens.prepare_with_channels(&f, d));
+    let prepared = prepared?;
+    let (got, t_eint) = time_once(|| prepared.integrate(&x));
+    let rel_ens = got?.frobenius_diff(&want) / (1.0 + want.frobenius());
+    println!(
+        "ensemble:    prepare {t_plan:.3}s ({} plans), integrate {t_eint:.4}s, \
+         rel err {rel_ens:.3e}",
+        prepared.plans_built()
+    );
+    Ok(())
+}
+
 fn cmd_integrate(args: &Args) -> CliResult {
+    let ecfg = ensemble_config(args)?;
+    if ecfg.enabled() {
+        return cmd_integrate_ensemble(args, &ecfg);
+    }
     let n = args.get_usize("n", 5000);
     let extra = args.get_usize("extra-edges", n / 2);
     let d = args.get_usize("channels", 4);
@@ -156,9 +255,89 @@ fn cmd_integrate(args: &Args) -> CliResult {
 fn cmd_serve(args: &Args) -> CliResult {
     match args.get_str("backend", "field") {
         "field" => cmd_serve_field(args),
+        "ensemble" => cmd_serve_ensemble(args),
         "topvit" => cmd_serve_topvit(args),
-        other => Err(format!("unknown backend {other:?} (field|topvit)").into()),
+        other => Err(format!("unknown backend {other:?} (field|ensemble|topvit)").into()),
     }
+}
+
+/// Serve the tree-ensemble backend: one shared [`EnsembleFieldIntegrator`]
+/// (sampling + preprocessing paid once) behind an `Arc`, every worker
+/// running a [`FieldExecutor`] over it — all on one shared work pool.
+fn cmd_serve_ensemble(args: &Args) -> CliResult {
+    let n = args.get_usize("n", 1000);
+    let n_requests = args.get_usize("requests", 200);
+    let batch = args.get_usize("batch", 8);
+    let workers = args.get_usize("workers", 2);
+    let f = parse_f(args.get_str("f", "exp"), args.get_f64("lambda", 0.5))?;
+    let icfg = integrator_config(args)?;
+    let policy = icfg.to_policy()?;
+    let mut ecfg = ensemble_config(args)?;
+    if !ecfg.enabled() {
+        // `--backend ensemble` implies an ensemble even without the flag.
+        ecfg.trees = 4;
+    }
+    let method = ecfg.to_method()?;
+
+    let mut rng = Pcg::seed(7);
+    let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+    let pool = Arc::new(WorkPool::with_auto(icfg.threads));
+    let ens = Arc::new(
+        EnsembleFieldIntegrator::builder(&g)
+            .trees(ecfg.trees)
+            .seed(ecfg.seed)
+            .method(method)
+            .leaf_threshold(icfg.leaf_threshold)
+            .policy(policy)
+            .pool(Arc::clone(&pool))
+            .build()?,
+    );
+    println!(
+        "serving f = {f:?} over an n = {n} {}×{method} ensemble metric ({workers} workers, \
+         {} integration threads shared)",
+        ens.trees(),
+        pool.threads()
+    );
+
+    let factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>> = (0..workers
+        .max(1))
+        .map(|_| {
+            let ens = Arc::clone(&ens);
+            let f = f.clone();
+            Box::new(move || {
+                Box::new(FieldExecutor::new(ens, f, 8)) as Box<dyn BatchExecutor>
+            }) as Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>
+        })
+        .collect();
+    let server = InferenceServer::start(
+        factories,
+        BatcherConfig { batch_size: batch.max(1), batch_timeout: Duration::from_millis(2) },
+        1024,
+    );
+    println!("submitting {n_requests} requests (batch {batch})...");
+    let fields: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| server.submit_blocking(fields[i % fields.len()].clone()).unwrap())
+        .collect();
+    let mut ok = 0;
+    for h in handles {
+        if h.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let m = server.metrics();
+    println!(
+        "served {ok}/{n_requests}: {:.0} req/s, mean batch {:.2}, p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms",
+        m.throughput_rps,
+        m.mean_batch_size,
+        m.latency_p50 * 1e3,
+        m.latency_p95 * 1e3,
+        m.latency_p99 * 1e3
+    );
+    server.shutdown();
+    Ok(())
 }
 
 fn cmd_serve_field(args: &Args) -> CliResult {

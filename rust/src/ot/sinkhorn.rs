@@ -6,9 +6,10 @@
 //! near-linear time instead of `O(N²)` (§1, application 2).
 
 use crate::ftfi::functions::FDist;
-use crate::ftfi::{PreparedIntegrator, TreeFieldIntegrator};
+use crate::ftfi::{FtfiError, PreparedIntegrator, TreeFieldIntegrator};
 use crate::linalg::matrix::Matrix;
 use crate::tree::Tree;
+use std::fmt;
 
 /// Result of a Sinkhorn solve.
 #[derive(Debug)]
@@ -23,13 +24,49 @@ pub struct SinkhornResult {
     pub marginal_error: f64,
 }
 
+/// Typed failure surface of the Sinkhorn solver: malformed marginals and
+/// kernel (field-integration) failures surface as errors instead of
+/// aborting the solve — the same rule as the rest of the FTFI stack
+/// (anything reachable from user input is an error, panics are for
+/// internal invariants).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SinkhornError {
+    /// A marginal's length does not match the kernel's vertex count.
+    MarginalShape { expected: usize, got: usize },
+    /// A kernel application failed — carries the typed [`FtfiError`]
+    /// (e.g. `ShapeMismatch` for a scaling vector of the wrong length).
+    Kernel(FtfiError),
+}
+
+impl fmt::Display for SinkhornError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SinkhornError::MarginalShape { expected, got } => write!(
+                f,
+                "marginal length {got} does not match the kernel's {expected} vertices"
+            ),
+            SinkhornError::Kernel(e) => write!(f, "kernel application failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SinkhornError {}
+
+impl From<FtfiError> for SinkhornError {
+    fn from(e: FtfiError) -> Self {
+        SinkhornError::Kernel(e)
+    }
+}
+
 /// Abstract kernel multiplication used by the solver (lets the dense
-/// baseline and the FTFI path share the iteration loop).
+/// baseline and the FTFI path share the iteration loop). Applications
+/// are fallible: a scaling vector of the wrong length is a typed
+/// [`FtfiError::ShapeMismatch`], never a panic.
 pub trait KernelOp {
-    fn apply(&self, v: &[f64]) -> Vec<f64>;
+    fn apply(&self, v: &[f64]) -> Result<Vec<f64>, FtfiError>;
     fn n(&self) -> usize;
     /// `Σ_{ij} u_i·K_ij·dist_ij·v_j` — the transport cost functional.
-    fn cost(&self, u: &[f64], v: &[f64]) -> f64;
+    fn cost(&self, u: &[f64], v: &[f64]) -> Result<f64, FtfiError>;
 }
 
 /// Dense kernel baseline (materialises K and K⊙D).
@@ -50,15 +87,25 @@ impl DenseKernel {
 }
 
 impl KernelOp for DenseKernel {
-    fn apply(&self, v: &[f64]) -> Vec<f64> {
-        self.k.matvec(v)
+    fn apply(&self, v: &[f64]) -> Result<Vec<f64>, FtfiError> {
+        if v.len() != self.k.rows() {
+            return Err(FtfiError::ShapeMismatch { expected: self.k.rows(), got: v.len() });
+        }
+        Ok(self.k.matvec(v))
     }
     fn n(&self) -> usize {
         self.k.rows()
     }
-    fn cost(&self, u: &[f64], v: &[f64]) -> f64 {
+    fn cost(&self, u: &[f64], v: &[f64]) -> Result<f64, FtfiError> {
+        let n = self.k.rows();
+        if u.len() != n {
+            return Err(FtfiError::ShapeMismatch { expected: n, got: u.len() });
+        }
+        if v.len() != n {
+            return Err(FtfiError::ShapeMismatch { expected: n, got: v.len() });
+        }
         let kdv = self.kd.matvec(v);
-        u.iter().zip(&kdv).map(|(a, b)| a * b).sum()
+        Ok(u.iter().zip(&kdv).map(|(a, b)| a * b).sum())
     }
 }
 
@@ -89,54 +136,65 @@ impl<'a> FtfiKernel<'a> {
 }
 
 impl KernelOp for FtfiKernel<'_> {
-    fn apply(&self, v: &[f64]) -> Vec<f64> {
-        self.kernel.integrate_vec(v).expect("marginal length matches the tree")
+    fn apply(&self, v: &[f64]) -> Result<Vec<f64>, FtfiError> {
+        // A wrong-length scaling vector surfaces as the integrator's
+        // typed ShapeMismatch instead of aborting the solver.
+        self.kernel.integrate_vec(v)
     }
     fn n(&self) -> usize {
         self.kernel.n()
     }
-    fn cost(&self, u: &[f64], v: &[f64]) -> f64 {
-        let kdv = self.cost.integrate_vec(v).expect("marginal length matches the tree");
-        u.iter().zip(&kdv).map(|(a, b)| a * b).sum()
+    fn cost(&self, u: &[f64], v: &[f64]) -> Result<f64, FtfiError> {
+        if u.len() != self.kernel.n() {
+            return Err(FtfiError::ShapeMismatch { expected: self.kernel.n(), got: u.len() });
+        }
+        let kdv = self.cost.integrate_vec(v)?;
+        Ok(u.iter().zip(&kdv).map(|(a, b)| a * b).sum())
     }
 }
 
 /// Run Sinkhorn until the marginal error drops below `tol` (or max
-/// iterations). `a`, `b` are the source/target marginals (must sum to 1).
+/// iterations). `a`, `b` are the source/target marginals (must sum to
+/// 1). Malformed marginals and kernel failures return a typed
+/// [`SinkhornError`] instead of aborting the solver.
 pub fn sinkhorn(
     kernel: &impl KernelOp,
     a: &[f64],
     b: &[f64],
     tol: f64,
     max_iter: usize,
-) -> SinkhornResult {
+) -> Result<SinkhornResult, SinkhornError> {
     let n = kernel.n();
-    assert_eq!(a.len(), n);
-    assert_eq!(b.len(), n);
+    if a.len() != n {
+        return Err(SinkhornError::MarginalShape { expected: n, got: a.len() });
+    }
+    if b.len() != n {
+        return Err(SinkhornError::MarginalShape { expected: n, got: b.len() });
+    }
     let mut u = vec![1.0; n];
     let mut v = vec![1.0; n];
     let mut err = f64::INFINITY;
     let mut iters = 0;
     for it in 0..max_iter {
         // u = a ./ (K v) ; v = b ./ (Kᵀ u) — K symmetric here.
-        let kv = kernel.apply(&v);
+        let kv = kernel.apply(&v)?;
         for i in 0..n {
             u[i] = a[i] / kv[i].max(1e-300);
         }
-        let ku = kernel.apply(&u);
+        let ku = kernel.apply(&u)?;
         for j in 0..n {
             v[j] = b[j] / ku[j].max(1e-300);
         }
         // Marginal violation on the row side.
-        let kv = kernel.apply(&v);
+        let kv = kernel.apply(&v)?;
         err = (0..n).map(|i| (u[i] * kv[i] - a[i]).abs()).sum();
         iters = it + 1;
         if err < tol {
             break;
         }
     }
-    let cost = kernel.cost(&u, &v);
-    SinkhornResult { u, v, cost, iterations: iters, marginal_error: err }
+    let cost = kernel.cost(&u, &v)?;
+    Ok(SinkhornResult { u, v, cost, iterations: iters, marginal_error: err })
 }
 
 /// Uniform marginal helper.
@@ -158,14 +216,14 @@ mod tests {
         let dense = DenseKernel::new(&tree, 0.5);
         let fast = FtfiKernel::new(&tfi, 0.5).unwrap();
         let v = rng.uniform_vec(60, 0.1, 1.0);
-        let kd = dense.apply(&v);
-        let kf = fast.apply(&v);
+        let kd = dense.apply(&v).unwrap();
+        let kf = fast.apply(&v).unwrap();
         for (a, b) in kd.iter().zip(&kf) {
             assert!((a - b).abs() < 1e-8 * (1.0 + a.abs()), "{a} vs {b}");
         }
         let u = rng.uniform_vec(60, 0.1, 1.0);
-        let cd = dense.cost(&u, &v);
-        let cf = fast.cost(&u, &v);
+        let cd = dense.cost(&u, &v).unwrap();
+        let cf = fast.cost(&u, &v).unwrap();
         assert!((cd - cf).abs() < 1e-7 * (1.0 + cd.abs()));
     }
 
@@ -179,7 +237,7 @@ mod tests {
         let mut b = rng.uniform_vec(40, 0.5, 1.5);
         let s: f64 = b.iter().sum();
         b.iter_mut().for_each(|x| *x /= s);
-        let res = sinkhorn(&kernel, &a, &b, 1e-9, 500);
+        let res = sinkhorn(&kernel, &a, &b, 1e-9, 500).unwrap();
         assert!(res.marginal_error < 1e-8, "err={}", res.marginal_error);
         assert!(res.cost >= 0.0);
     }
@@ -195,9 +253,47 @@ mod tests {
             .iter()
             .map(|&eps| {
                 let dense = DenseKernel::new(&tree, eps);
-                sinkhorn(&dense, &a, &a, 1e-10, 1000).cost
+                sinkhorn(&dense, &a, &a, 1e-10, 1000).unwrap().cost
             })
             .collect();
         assert!(costs[1] < costs[0], "{costs:?}");
+    }
+
+    /// The former panic sites: malformed marginals / scaling vectors
+    /// surface as typed errors (the integrator's `ShapeMismatch` routed
+    /// through `SinkhornError`) instead of aborting the solver.
+    #[test]
+    fn malformed_inputs_are_typed_errors_not_panics() {
+        let mut rng = Pcg::seed(4);
+        let tree = generators::random_tree(20, 0.2, 1.0, &mut rng);
+        let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
+        let kernel = FtfiKernel::new(&tfi, 0.5).unwrap();
+        // Wrong-length marginal: rejected up front.
+        let a = uniform_marginal(19);
+        let b = uniform_marginal(20);
+        assert_eq!(
+            sinkhorn(&kernel, &a, &b, 1e-9, 10).err(),
+            Some(SinkhornError::MarginalShape { expected: 20, got: 19 })
+        );
+        assert_eq!(
+            sinkhorn(&kernel, &b, &a, 1e-9, 10).err(),
+            Some(SinkhornError::MarginalShape { expected: 20, got: 19 })
+        );
+        // Wrong-length kernel application: the typed FtfiError flows
+        // through (this is the path that used to `expect`-abort).
+        assert_eq!(
+            kernel.apply(&[1.0; 19]).err(),
+            Some(FtfiError::ShapeMismatch { expected: 20, got: 19 })
+        );
+        assert!(matches!(
+            kernel.cost(&[1.0; 19], &[1.0; 20]).err(),
+            Some(FtfiError::ShapeMismatch { expected: 20, got: 19 })
+        ));
+        // The dense baseline obeys the same contract.
+        let dense = DenseKernel::new(&tree, 0.5);
+        assert!(dense.apply(&[1.0; 21]).is_err());
+        // A well-formed solve still succeeds after the failed attempts.
+        let ok = sinkhorn(&kernel, &b, &b, 1e-6, 50).unwrap();
+        assert!(ok.marginal_error.is_finite());
     }
 }

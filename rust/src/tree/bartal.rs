@@ -16,12 +16,18 @@ use crate::ml::rng::Pcg;
 
 /// Build a Bartal tree for the shortest-path metric of `g`.
 pub fn bartal_tree(g: &Graph, rng: &mut Pcg) -> TreeEmbedding {
-    let n = g.n();
+    bartal_tree_with_dists(g.n(), &all_pairs(g), rng)
+}
+
+/// [`bartal_tree`] over a precomputed dense `n×n` row-major metric — the
+/// ensemble integrator samples many trees of one graph and pays the
+/// `O(n²)` all-pairs preprocessing once instead of once per tree.
+pub fn bartal_tree_with_dists(n: usize, d: &[f64], rng: &mut Pcg) -> TreeEmbedding {
     assert!(n >= 1);
+    assert_eq!(d.len(), n * n, "distance matrix must be n×n row-major");
     if n == 1 {
         return TreeEmbedding { tree: Tree::from_edges(1, &[]), leaf_of: vec![0] };
     }
-    let d = all_pairs(g);
     let dist = |i: usize, j: usize| d[i * n + j];
 
     let mut edges: Vec<(u32, u32, f64)> = Vec::new();

@@ -25,6 +25,16 @@ impl TreeEmbedding {
         self.tree.distance(self.leaf_of[u] as usize, self.leaf_of[v] as usize)
     }
 
+    /// Number of original (pre-embedding) vertices.
+    pub fn n_original(&self) -> usize {
+        self.leaf_of.len()
+    }
+
+    /// Number of Steiner (internal, added-by-the-embedding) nodes.
+    pub fn n_steiner(&self) -> usize {
+        self.tree.n() - self.leaf_of.len()
+    }
+
     /// Lift a field on original vertices to the full tree (zeros on
     /// Steiner nodes) — lets any tree integrator run over the embedding.
     pub fn lift_field(&self, x: &crate::linalg::matrix::Matrix) -> crate::linalg::matrix::Matrix {
@@ -50,12 +60,18 @@ impl TreeEmbedding {
 
 /// Build an FRT tree for the shortest-path metric of `g`.
 pub fn frt_tree(g: &Graph, rng: &mut Pcg) -> TreeEmbedding {
-    let n = g.n();
+    frt_tree_with_dists(g.n(), &all_pairs(g), rng)
+}
+
+/// [`frt_tree`] over a precomputed dense `n×n` row-major metric — the
+/// ensemble integrator samples many trees of one graph and pays the
+/// `O(n²)` all-pairs preprocessing once instead of once per tree.
+pub fn frt_tree_with_dists(n: usize, d: &[f64], rng: &mut Pcg) -> TreeEmbedding {
     assert!(n >= 1);
+    assert_eq!(d.len(), n * n, "distance matrix must be n×n row-major");
     if n == 1 {
         return TreeEmbedding { tree: Tree::from_edges(1, &[]), leaf_of: vec![0] };
     }
-    let d = all_pairs(g);
     let dist = |i: usize, j: usize| d[i * n + j];
     let diameter = (0..n)
         .flat_map(|i| (0..n).map(move |j| (i, j)))

@@ -1,0 +1,209 @@
+//! Property-based equivalence harness: FTFI vs the brute-force oracle
+//! (`BruteForceIntegrator`) across the size ladder n ∈ {1, 2, 17, 64,
+//! 257} — degenerate singletons, tiny trees, odd non-powers-of-two and
+//! a size above every internal cutoff — with random multi-channel
+//! fields and the full `FDist` × forced-`Strategy` sweep.
+//!
+//! The offline environment has no proptest crate, so this is a seeded
+//! random sweep: every case derives from a deterministic seed, and
+//! every assertion message leads with `REPRO seed=…` so a failure can
+//! be replayed exactly (`Pcg::seed(seed)` regenerates the case).
+
+use ftfi::ftfi::brute::{btfi_streaming, BruteForceIntegrator};
+use ftfi::ftfi::cordial::{CrossPolicy, Strategy};
+use ftfi::ftfi::functions::FDist;
+use ftfi::graph::generators::{path_plus_random_edges, random_rational_tree, random_tree};
+use ftfi::linalg::matrix::Matrix;
+use ftfi::ml::rng::Pcg;
+use ftfi::{
+    EnsembleFieldIntegrator, FieldIntegrator, FtfiError, GraphFieldIntegrator,
+    TreeFieldIntegrator,
+};
+
+/// The size ladder: 1 (singleton), 2 (single edge), 17 (one leaf), 64
+/// (a few IT levels), 257 (above the batch-axis cutoff, odd).
+const SIZES: [usize; 5] = [1, 2, 17, 64, 257];
+
+/// Randomly-parameterised representatives of every `FDist` class, with
+/// the per-class tolerance of the default planning path (exact
+/// separable/lattice classes at 1e-9; Chebyshev/LDR-planned smooth
+/// classes at 1e-6 — see DESIGN.md, Numerics).
+fn f_cases(rng: &mut Pcg) -> Vec<(FDist, f64)> {
+    vec![
+        (FDist::Identity, 1e-9),
+        (FDist::Polynomial(vec![rng.normal(), rng.normal(), rng.normal() * 0.3]), 1e-8),
+        (FDist::Exponential { lambda: rng.uniform_in(-1.0, -0.1), scale: 1.0 }, 1e-9),
+        (
+            FDist::PolyExp {
+                coeffs: vec![1.0, rng.uniform_in(-0.5, 0.5)],
+                lambda: rng.uniform_in(-0.8, -0.1),
+            },
+            1e-9,
+        ),
+        (
+            FDist::Trig {
+                omega: rng.uniform_in(0.2, 1.5),
+                phase: rng.uniform_in(0.0, 1.0),
+                scale: 1.0,
+            },
+            1e-9,
+        ),
+        (FDist::inverse_quadratic(rng.uniform_in(0.1, 2.0)), 1e-6),
+        (
+            FDist::ExpOverLinear { lambda: rng.uniform_in(-0.5, 0.0), c: rng.uniform_in(0.5, 2.0) },
+            1e-6,
+        ),
+        (FDist::gaussian(rng.uniform_in(0.05, 0.5)), 1e-6),
+        (FDist::Custom(std::sync::Arc::new(|x: f64| (0.4 * x).sin() / (1.0 + 0.3 * x))), 1e-6),
+    ]
+}
+
+/// Strategy-specific floors (the LDR paths shed digits in f64).
+fn strategy_tol(s: Strategy) -> f64 {
+    match s {
+        Strategy::RationalSum | Strategy::Cauchy => 5e-5,
+        Strategy::Chebyshev | Strategy::Vandermonde => 5e-6,
+        _ => 1e-9,
+    }
+}
+
+fn rel_err(got: &Matrix, want: &Matrix) -> f64 {
+    got.frobenius_diff(want) / (1.0 + want.frobenius())
+}
+
+/// Property: with the default policy, FTFI equals the brute oracle on
+/// every ladder size, for every function class, for random
+/// multi-channel fields and random leaf thresholds.
+#[test]
+fn property_default_policy_matches_brute_across_size_ladder() {
+    for &n in &SIZES {
+        for case in 0..4u64 {
+            let seed = 100_000 + (n as u64) * 100 + case;
+            let mut rng = Pcg::seed(seed);
+            let d = 1 + rng.below(3);
+            let tree = random_tree(n, 0.05, 1.0, &mut rng);
+            let x = Matrix::randn(n, d, &mut rng);
+            let t = [2usize, 8, 48][rng.below(3)];
+            let brute = BruteForceIntegrator::from_tree(tree.clone());
+            for (f, tol) in f_cases(&mut rng) {
+                let tfi = TreeFieldIntegrator::builder(&tree)
+                    .leaf_threshold(t)
+                    .build()
+                    .unwrap();
+                let got = tfi.try_integrate(&f, &x).unwrap();
+                let want = brute.integrate(&f, &x).unwrap();
+                let rel = rel_err(&got, &want);
+                assert!(
+                    rel < tol,
+                    "REPRO seed={seed} n={n} d={d} t={t} {f:?}: rel {rel}"
+                );
+            }
+        }
+    }
+}
+
+/// Property: every *applicable* forced strategy equals the brute oracle
+/// on every ladder size. Rational-weight trees keep the lattice /
+/// Vandermonde paths applicable; inapplicable `(f, strategy)` combos
+/// surface as the typed `StrategyInapplicable` and are skipped by
+/// definition. A floor on the applicable count pins that the sweep
+/// cannot silently degenerate into skipping everything.
+#[test]
+fn property_every_applicable_forced_strategy_matches_brute() {
+    let all = [
+        Strategy::Dense,
+        Strategy::Separable,
+        Strategy::Lattice,
+        Strategy::RationalSum,
+        Strategy::Cauchy,
+        Strategy::Vandermonde,
+        Strategy::Chebyshev,
+    ];
+    let mut applicable = 0usize;
+    for &n in &SIZES {
+        let seed = 200_000 + n as u64;
+        let mut rng = Pcg::seed(seed);
+        let tree = random_rational_tree(n, 3, 4, &mut rng);
+        let d = 1 + rng.below(3);
+        let x = Matrix::randn(n, d, &mut rng);
+        let brute = BruteForceIntegrator::from_tree(tree.clone());
+        for (f, base_tol) in f_cases(&mut rng) {
+            let want = brute.integrate(&f, &x).unwrap();
+            for &s in &all {
+                let policy =
+                    CrossPolicy { force: Some(s), dense_cutoff: 0, ..Default::default() };
+                let tfi = TreeFieldIntegrator::builder(&tree)
+                    .leaf_threshold(8)
+                    .policy(policy)
+                    .build()
+                    .unwrap();
+                match tfi.prepare(&f) {
+                    Err(FtfiError::StrategyInapplicable { .. }) => continue,
+                    Err(e) => {
+                        panic!("REPRO seed={seed} n={n} {f:?} forced {s:?}: unexpected {e}")
+                    }
+                    Ok(prepared) => {
+                        applicable += 1;
+                        let got = prepared.integrate(&x).unwrap();
+                        let tol = base_tol.max(strategy_tol(s));
+                        let rel = rel_err(&got, &want);
+                        assert!(
+                            rel < tol,
+                            "REPRO seed={seed} n={n} d={d} {f:?} forced {s:?}: rel {rel}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // Sizes 1/2 are leaf-only (every strategy vacuously applies: 9·7
+    // combos each); the larger rational trees keep at least the
+    // Dense/Lattice/Chebyshev columns live. Pin a conservative floor.
+    assert!(applicable >= 60, "only {applicable} (f, strategy) combos were applicable");
+}
+
+/// Property: the graph pipelines agree with their oracles on every
+/// ladder size — the MST route *exactly* (same tree metric), the
+/// ensemble route against the member-order average of per-tree brute
+/// integrals.
+#[test]
+fn property_graph_backends_match_their_oracles() {
+    for &n in &SIZES {
+        let seed = 300_000 + n as u64;
+        let mut rng = Pcg::seed(seed);
+        let g = if n >= 3 {
+            // (n = 2 has no non-adjacent pairs for chord edges.)
+            path_plus_random_edges(n, n / 2, &mut rng)
+        } else {
+            random_tree(n, 0.1, 1.0, &mut rng).to_graph()
+        };
+        let d = 1 + rng.below(3);
+        let x = Matrix::randn(n, d, &mut rng);
+        let f = FDist::Exponential { lambda: rng.uniform_in(-0.8, -0.2), scale: 1.0 };
+
+        // Single-MST route: identical metric to brute-on-the-MST.
+        let gfi = GraphFieldIntegrator::try_new(&g).unwrap();
+        let brute_mst = BruteForceIntegrator::from_tree(gfi.tree().clone());
+        let got = gfi.try_integrate(&f, &x).unwrap();
+        let want = brute_mst.integrate(&f, &x).unwrap();
+        let rel = rel_err(&got, &want);
+        assert!(rel < 1e-9, "REPRO seed={seed} n={n} d={d} MST route: rel {rel}");
+
+        // Ensemble route: member-order average of brute per-tree
+        // integrals (lift → streaming BTFI on the embedding tree —
+        // O(N) memory, embedding trees carry many Steiner nodes —
+        // → restrict).
+        let ens =
+            EnsembleFieldIntegrator::builder(&g).trees(3).seed(seed).build().unwrap();
+        let mut want = Matrix::zeros(n, d);
+        for i in 0..ens.trees() {
+            let emb = ens.embedding(i);
+            let lifted = emb.lift_field(&x);
+            want.axpy(1.0, &emb.restrict_field(&btfi_streaming(&emb.tree, &f, &lifted)));
+        }
+        want.scale(1.0 / ens.trees() as f64);
+        let got = ens.try_integrate(&f, &x).unwrap();
+        let rel = rel_err(&got, &want);
+        assert!(rel < 1e-8, "REPRO seed={seed} n={n} d={d} ensemble route: rel {rel}");
+    }
+}

@@ -125,8 +125,8 @@ fn sinkhorn_pipeline() {
     let mut b = rng.uniform_vec(80, 0.2, 1.8);
     let s: f64 = b.iter().sum();
     b.iter_mut().for_each(|x| *x /= s);
-    let fast = sinkhorn(&FtfiKernel::new(&tfi, 0.6).unwrap(), &a, &b, 1e-9, 400);
-    let dense = sinkhorn(&DenseKernel::new(&tree, 0.6), &a, &b, 1e-9, 400);
+    let fast = sinkhorn(&FtfiKernel::new(&tfi, 0.6).unwrap(), &a, &b, 1e-9, 400).unwrap();
+    let dense = sinkhorn(&DenseKernel::new(&tree, 0.6), &a, &b, 1e-9, 400).unwrap();
     assert!(fast.marginal_error < 1e-8);
     assert!((fast.cost - dense.cost).abs() < 1e-6 * (1.0 + dense.cost));
 }

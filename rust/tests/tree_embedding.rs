@@ -1,0 +1,167 @@
+//! Embedding invariants for the random low-distortion tree embeddings
+//! (`tree/frt.rs`, `tree/bartal.rs`) — the sampling layer under the
+//! tree-ensemble integrator:
+//!
+//! - **domination**: the tree metric never undercuts the graph metric;
+//! - **2-HST level structure**: edge weights decay geometrically along
+//!   every root→leaf path (FRT halves exactly; Bartal never increases
+//!   and is bounded by half the parent cluster's diameter);
+//! - **lift/restrict round-trip**: exact (bitwise) with Steiner rows
+//!   zeroed.
+
+use ftfi::graph::shortest_path::all_pairs;
+use ftfi::graph::{generators, Graph};
+use ftfi::linalg::matrix::Matrix;
+use ftfi::ml::rng::Pcg;
+use ftfi::tree::bartal::bartal_tree;
+use ftfi::tree::frt::{frt_tree, TreeEmbedding};
+
+type Embedder = fn(&Graph, &mut Pcg) -> TreeEmbedding;
+
+fn embedders() -> Vec<(&'static str, Embedder)> {
+    vec![("frt", frt_tree as Embedder), ("bartal", bartal_tree as Embedder)]
+}
+
+/// `(parent_edge_weight, child_edge_weight)` for every non-root edge
+/// pair along the embedding tree, via BFS from the root (vertex 0 in
+/// both constructions).
+fn parent_child_edge_weights(emb: &TreeEmbedding) -> Vec<(f64, f64)> {
+    let t = &emb.tree;
+    let mut incoming = vec![f64::NAN; t.n()];
+    let mut seen = vec![false; t.n()];
+    let mut queue = std::collections::VecDeque::from([0usize]);
+    seen[0] = true;
+    let mut pairs = Vec::new();
+    while let Some(v) = queue.pop_front() {
+        for &(u, w) in t.neighbors(v) {
+            if seen[u as usize] {
+                continue;
+            }
+            seen[u as usize] = true;
+            if !incoming[v].is_nan() {
+                pairs.push((incoming[v], w));
+            }
+            incoming[u as usize] = w;
+            queue.push_back(u as usize);
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "embedding tree must be connected");
+    pairs
+}
+
+/// The tree metric dominates the graph metric on all sampled pairs, for
+/// both embedding families, across several graphs and seeds.
+#[test]
+fn tree_metric_dominates_graph_metric() {
+    for seed in 0..3u64 {
+        let mut rng = Pcg::seed(40 + seed);
+        let n = 35;
+        let g = generators::erdos_renyi(n, 0.15, &mut rng);
+        let d = all_pairs(&g);
+        for (name, build) in embedders() {
+            let emb = build(&g, &mut rng);
+            for i in 0..n {
+                for j in 0..n {
+                    let dt = emb.distance(i, j);
+                    let dg = d[i * n + j];
+                    assert!(
+                        dt + 1e-6 >= dg,
+                        "{name} seed={seed} ({i},{j}): tree {dt} < graph {dg}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// FRT builds a 2-HST: every child edge is exactly half its parent edge
+/// (the level radii are `β·2^level`, and the leaf hook is half the
+/// bottom radius).
+#[test]
+fn frt_edge_weights_halve_along_every_path() {
+    for seed in 0..3u64 {
+        let mut rng = Pcg::seed(50 + seed);
+        // Weights ≥ 0.5 keep every level radius far above the 1e-9
+        // positivity clamp, so the halving is exact.
+        let g = generators::erdos_renyi(30, 0.2, &mut rng);
+        let emb = frt_tree(&g, &mut rng);
+        let pairs = parent_child_edge_weights(&emb);
+        assert!(!pairs.is_empty(), "seed={seed}: tree must have ≥ 2 levels");
+        for (wp, wc) in pairs {
+            assert!(
+                (wc - 0.5 * wp).abs() <= 1e-9 * (1.0 + wp),
+                "seed={seed}: child edge {wc} is not half of parent edge {wp}"
+            );
+        }
+    }
+}
+
+/// Bartal's low-diameter decomposition: edge weights never increase
+/// along a root→leaf path (child clusters are subsets, so their
+/// diameters — and hence their half-diameter hooks — cannot grow).
+#[test]
+fn bartal_edge_weights_never_increase_along_paths() {
+    for seed in 0..3u64 {
+        let mut rng = Pcg::seed(60 + seed);
+        let g = generators::erdos_renyi(30, 0.2, &mut rng);
+        let emb = bartal_tree(&g, &mut rng);
+        for (wp, wc) in parent_child_edge_weights(&emb) {
+            assert!(
+                wc <= wp + 1e-9,
+                "seed={seed}: child edge {wc} grew past parent edge {wp}"
+            );
+        }
+    }
+}
+
+/// `lift_field` / `restrict_field` round-trip exactly (bitwise), with
+/// every Steiner row zeroed and every leaf row a copy of its source.
+#[test]
+fn lift_restrict_roundtrip_is_exact_with_steiner_zeroing() {
+    for (name, build) in embedders() {
+        let mut rng = Pcg::seed(70);
+        let g = generators::path_plus_random_edges(25, 12, &mut rng);
+        let emb = build(&g, &mut rng);
+        assert_eq!(emb.n_original(), 25);
+        assert_eq!(emb.n_steiner(), emb.tree.n() - 25);
+        let x = Matrix::randn(25, 3, &mut rng);
+        let lifted = emb.lift_field(&x);
+        assert_eq!(lifted.rows(), emb.tree.n());
+        assert_eq!(lifted.cols(), 3);
+        let leaf_set: std::collections::HashSet<u32> = emb.leaf_of.iter().copied().collect();
+        assert_eq!(leaf_set.len(), 25, "{name}: leaf slots must be distinct");
+        for (v, &slot) in emb.leaf_of.iter().enumerate() {
+            assert!((slot as usize) < emb.tree.n(), "{name}: leaf slot out of range");
+            assert_eq!(lifted.row(slot as usize), x.row(v), "{name}: leaf row must copy");
+        }
+        for t in 0..emb.tree.n() as u32 {
+            if !leaf_set.contains(&t) {
+                assert!(
+                    lifted.row(t as usize).iter().all(|&v| v == 0.0),
+                    "{name}: Steiner row {t} must be zero"
+                );
+            }
+        }
+        let back = emb.restrict_field(&lifted);
+        assert!(back == x, "{name}: restrict(lift(x)) must be bitwise x");
+    }
+}
+
+/// Degenerate inputs: singleton and two-vertex graphs embed without
+/// panicking and keep the invariants.
+#[test]
+fn degenerate_graphs_embed_cleanly() {
+    for (name, build) in embedders() {
+        let mut rng = Pcg::seed(80);
+        let g1 = Graph::from_edges(1, &[]);
+        let e1 = build(&g1, &mut rng);
+        assert_eq!(e1.n_original(), 1, "{name}");
+        assert_eq!(e1.distance(0, 0), 0.0, "{name}");
+        let g2 = Graph::from_edges(2, &[(0, 1, 3.0)]);
+        let e2 = build(&g2, &mut rng);
+        assert!(e2.distance(0, 1) + 1e-9 >= 3.0, "{name}: must dominate the edge");
+        let x = Matrix::randn(2, 1, &mut rng);
+        let back = e2.restrict_field(&e2.lift_field(&x));
+        assert!(back == x, "{name}: two-vertex round-trip");
+    }
+}
