@@ -19,11 +19,15 @@
 //!   rational degree of the learnable f;
 //! - ModelNet10-substitute point-cloud classification (Appendix D.1).
 //!
+//! - zero-allocation prepared hot path (legacy per-node allocation vs
+//!   nested-dissection workspace): wall clock + allocations/call, with
+//!   a pre-timing bit-identity assert and `BENCH_hotpath.json`;
+//!
 //! Run: `cargo bench --bench ablations`. The CI bench-smoke job runs
 //! `cargo bench --bench ablations -- --quick`, which executes only the
-//! cheap parallel-scaling and ensemble-scaling sweeps and emits
-//! `BENCH_parallel.json` + `BENCH_ensemble.json` as the perf-trajectory
-//! artifacts.
+//! cheap parallel-scaling, ensemble-scaling and hot-path sweeps and
+//! emits `BENCH_parallel.json` + `BENCH_ensemble.json` +
+//! `BENCH_hotpath.json` as the perf-trajectory artifacts.
 
 use ftfi::bench_util::{banner, bench, time_once, Table};
 use ftfi::ftfi::cordial::{cross_apply, cross_apply_dense, CrossPolicy, Strategy};
@@ -41,6 +45,12 @@ use ftfi::ml::metrics::accuracy;
 use ftfi::ml::random_forest::{ForestParams, RandomForest};
 use ftfi::ml::rng::Pcg;
 use ftfi::TreeFieldIntegrator;
+
+/// Thread-local allocation counting for the `hotpath_alloc` ablation
+/// (allocations/call, legacy vs workspace prepared paths); shared
+/// implementation in `ftfi::bench_util`.
+#[global_allocator]
+static ALLOC: ftfi::bench_util::CountingAlloc = ftfi::bench_util::CountingAlloc;
 
 fn leaf_threshold_sweep() {
     banner("Ablation: IntegratorTree leaf threshold t (n = 8000, f = exp)");
@@ -335,6 +345,77 @@ fn ensemble_scaling(quick: bool) {
     println!("wrote BENCH_ensemble.json (fixed (seed, m) bit-identical across thread counts)");
 }
 
+/// Tentpole bench (PR 4): the zero-allocation prepared hot path. One
+/// `(tree, f)` pair, `threads = 1` (the per-call constant is the
+/// single-thread story; the thread axes multiply on top), legacy
+/// (per-node gather/alloc) vs workspace (nested-dissection slabs +
+/// arenas) prepared integration: wall clock and allocations/call.
+/// Outputs are asserted bit-identical before anything is timed. Always
+/// writes `BENCH_hotpath.json` for the CI artifact / perf trajectory.
+fn hotpath_alloc(quick: bool) {
+    banner("Ablation: prepared hot path, legacy vs workspace (threads = 1, f = 1/(1+x^2/2))");
+    let mut rng = Pcg::seed(41);
+    let (warmup, runs) = if quick { (1, 3) } else { (2, 7) };
+    let table = Table::new(
+        &["n", "d", "legacy (ms)", "workspace (ms)", "speedup", "allocs old", "allocs new"],
+        &[6, 3, 12, 15, 8, 11, 11],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for &n in &[1000usize, 4000] {
+        let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+        let tree = minimum_spanning_tree(&g);
+        let f = FDist::inverse_quadratic(0.5);
+        let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().expect("valid tree");
+        for &d in &[1usize, 8] {
+            let plans = tfi.prepare_plans(&f, d).expect("plannable f");
+            let x = Matrix::randn(n, d, &mut rng);
+            // Bit-identity gate before anything is timed or counted.
+            let want = tfi.integrate_prepared_legacy(&x, &plans).expect("legacy");
+            let got = tfi.integrate_prepared(&x, &plans).expect("workspace");
+            assert!(got == want, "n={n} d={d}: workspace path must be bit-identical");
+            let mut out = Matrix::zeros(n, d);
+            tfi.integrate_prepared_into(&x, &plans, &mut out).expect("warm");
+            // Allocations per call (single-threaded → the thread-local
+            // counter sees every allocation of the call).
+            let before = ftfi::bench_util::thread_allocs();
+            tfi.integrate_prepared_legacy(&x, &plans).expect("legacy");
+            let allocs_old = ftfi::bench_util::thread_allocs() - before;
+            let before = ftfi::bench_util::thread_allocs();
+            tfi.integrate_prepared_into(&x, &plans, &mut out).expect("workspace");
+            let allocs_new = ftfi::bench_util::thread_allocs() - before;
+            let t_old = bench(warmup, runs, || {
+                tfi.integrate_prepared_legacy(&x, &plans).expect("legacy")
+            });
+            let t_new = bench(warmup, runs, || {
+                tfi.integrate_prepared_into(&x, &plans, &mut out).expect("workspace")
+            });
+            let speedup = t_old.median / t_new.median.max(1e-12);
+            table.row(&[
+                n.to_string(),
+                d.to_string(),
+                format!("{:.2}", t_old.median * 1e3),
+                format!("{:.2}", t_new.median * 1e3),
+                format!("{speedup:.2}x"),
+                allocs_old.to_string(),
+                allocs_new.to_string(),
+            ]);
+            json_rows.push(format!(
+                "    {{\"n\": {n}, \"d\": {d}, \"legacy_s\": {:.6}, \"workspace_s\": {:.6}, \
+                 \"speedup\": {speedup:.3}, \"allocs_legacy\": {allocs_old}, \
+                 \"allocs_workspace\": {allocs_new}}}",
+                t_old.median, t_new.median
+            ));
+        }
+    }
+    let mut json = String::from("{\n  \"bench\": \"hotpath_alloc\",\n");
+    json.push_str(&format!("  \"threads\": 1, \"quick\": {quick},\n"));
+    json.push_str("  \"bit_identical_to_legacy\": true,\n  \"results\": [\n");
+    json.push_str(&json_rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json (workspace path bit-identical; allocs/call pinned)");
+}
+
 fn strategy_crossover() {
     banner("Ablation: cross-multiplier strategies, C in R^{k x l}, d=4");
     let table =
@@ -480,12 +561,14 @@ fn main() {
     if std::env::args().any(|a| a == "--quick") {
         parallel_scaling(true);
         ensemble_scaling(true);
+        hotpath_alloc(true);
         return;
     }
     leaf_threshold_sweep();
     prepared_vs_replan();
     parallel_scaling(false);
     ensemble_scaling(false);
+    hotpath_alloc(false);
     strategy_crossover();
     rff_sweep();
     fig9_cubes();

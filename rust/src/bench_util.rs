@@ -6,7 +6,55 @@
 //! table printer so every bench emits the same rows/series as the paper's
 //! figures.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::time::Instant;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator with a thread-local allocation counter — the shared
+/// implementation behind the `hotpath_alloc` ablation bench and the
+/// `tests/hotpath_alloc.rs` zero-allocation pins. Install per binary:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static A: ftfi::bench_util::CountingAlloc = ftfi::bench_util::CountingAlloc;
+/// ```
+///
+/// The counter is thread-local (`Cell<u64>` — no destructor, so the TLS
+/// access is safe from inside the allocator even during thread
+/// teardown), so measurements on one thread are never polluted by other
+/// threads; the pass-through adds a few ns per allocation.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// The calling thread's allocation count so far (monotonic; compare
+/// deltas around the region of interest).
+pub fn thread_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
 
 /// Timing summary in seconds.
 #[derive(Debug, Clone, Copy)]

@@ -188,6 +188,30 @@ mod tests {
         }
     }
 
+    /// The executor's request loop runs on the workspace hot path
+    /// (`integrate_prepared`): responses must stay bit-identical to the
+    /// legacy per-node-allocation reference, and repeated requests must
+    /// reuse the plan's workspaces without leaking state across them.
+    #[test]
+    fn prepared_executor_serves_the_workspace_hot_path() {
+        let mut rng = Pcg::seed(7);
+        let tree = generators::random_tree(120, 0.2, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().unwrap();
+        let ref_tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().unwrap();
+        // Same tree → same IT shape, but plans are instance-pinned:
+        // build the reference plans on the reference integrator.
+        let ref_plans = ref_tfi.prepare_plans(&f, 1).unwrap();
+        let exec = PreparedFieldExecutor::new(tfi, &f, 1, 8).unwrap();
+        for k in 0..3 {
+            let input: Vec<f32> = (0..120).map(|i| ((i + 31 * k) as f32 * 0.05).sin()).collect();
+            let got = exec.run_one(&input).unwrap();
+            let x = decode(&input, 120).unwrap();
+            let want = encode(ref_tfi.integrate_prepared_legacy(&x, &ref_plans).unwrap());
+            assert_eq!(got, want, "request {k}: served response must match the legacy path");
+        }
+    }
+
     #[test]
     fn malformed_request_maps_to_exec_error_without_killing_workers() {
         let mut rng = Pcg::seed(2);

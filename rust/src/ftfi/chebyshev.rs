@@ -120,37 +120,63 @@ impl ChebExpansion {
         assert_eq!(v.rows(), ys.len());
         let m = self.rank();
         let d = v.cols();
-        // Aggregate: W[m] = Σ_j L_m(y_j)·V[j,:]  (m×d)
-        let mut w = Matrix::zeros(m, d);
+        let mut out = Matrix::zeros(xs.len(), d);
+        let mut w = vec![0.0; m * d];
         let mut basis = vec![0.0; m];
+        self.cross_apply_into(f, xs, ys, v.data(), d, out.data_mut(), &mut w, &mut basis);
+        out
+    }
+
+    /// [`ChebExpansion::cross_apply`] into caller-provided buffers — the
+    /// allocation-free hot-path variant. `v` is `ys.len()×d` row-major,
+    /// `out` is `xs.len()×d`; `w` (≥ rank·d) and `basis_buf` (≥ rank) are
+    /// scratch and may be dirty on entry.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn cross_apply_into(
+        &self,
+        f: &FDist,
+        xs: &[f64],
+        ys: &[f64],
+        v: &[f64],
+        d: usize,
+        out: &mut [f64],
+        w: &mut [f64],
+        basis_buf: &mut [f64],
+    ) {
+        let m = self.rank();
+        assert_eq!(v.len(), ys.len() * d);
+        assert_eq!(out.len(), xs.len() * d);
+        // Aggregate: W[m] = Σ_j L_m(y_j)·V[j,:]  (m×d)
+        let w = &mut w[..m * d];
+        w.iter_mut().for_each(|x| *x = 0.0);
+        let basis = &mut basis_buf[..m];
         for (j, &y) in ys.iter().enumerate() {
-            self.basis(y, &mut basis);
-            let vrow = v.row(j);
+            self.basis(y, basis);
+            let vrow = &v[j * d..(j + 1) * d];
             for (l, &b) in basis.iter().enumerate() {
                 if b == 0.0 {
                     continue;
                 }
-                let wrow = w.row_mut(l);
+                let wrow = &mut w[l * d..(l + 1) * d];
                 for (o, &vv) in wrow.iter_mut().zip(vrow) {
                     *o += b * vv;
                 }
             }
         }
         // out[i] = Σ_m f(x_i + t_m)·W[m,:]
-        let mut out = Matrix::zeros(xs.len(), d);
+        out.iter_mut().for_each(|o| *o = 0.0);
         for (i, &x) in xs.iter().enumerate() {
-            let orow = out.row_mut(i);
+            let orow = &mut out[i * d..(i + 1) * d];
             for (l, &t) in self.nodes.iter().enumerate() {
                 let c = f.eval(x + t);
                 if c == 0.0 {
                     continue;
                 }
-                for (o, &wv) in orow.iter_mut().zip(w.row(l)) {
+                for (o, &wv) in orow.iter_mut().zip(&w[l * d..(l + 1) * d]) {
                     *o += c * wv;
                 }
             }
         }
-        out
     }
 }
 

@@ -17,9 +17,10 @@ use crate::ftfi::chebyshev::{adaptive_expansion, ChebExpansion};
 use crate::ftfi::error::FtfiError;
 use crate::ftfi::functions::{FDist, Separable};
 use crate::ftfi::hankel::{detect_lattice, LatticePlan};
-use crate::ftfi::outer::apply_separable;
+use crate::ftfi::outer::{apply_separable, apply_separable_into};
 use crate::ftfi::rational::{rational_cross_apply, RationalOpts};
 use crate::ftfi::vandermonde::expquad_cross_apply;
+use crate::linalg::fft::Complex;
 use crate::linalg::matrix::Matrix;
 
 /// Which multiplier handled (or should handle) a cross product.
@@ -102,19 +103,36 @@ pub fn cross_apply_dense(f: &FDist, xs: &[f64], ys: &[f64], v: &Matrix) -> Matri
     assert_eq!(v.rows(), ys.len());
     let d = v.cols();
     let mut out = Matrix::zeros(xs.len(), d);
+    cross_apply_dense_into(f, xs, ys, v.data(), d, out.data_mut());
+    out
+}
+
+/// [`cross_apply_dense`] into a caller-provided buffer — the
+/// allocation-free hot-path variant (bit-identical). `v` is
+/// `ys.len()×d` row-major, `out` is `xs.len()×d`, dirty-on-entry ok.
+pub(crate) fn cross_apply_dense_into(
+    f: &FDist,
+    xs: &[f64],
+    ys: &[f64],
+    v: &[f64],
+    d: usize,
+    out: &mut [f64],
+) {
+    assert_eq!(v.len(), ys.len() * d);
+    assert_eq!(out.len(), xs.len() * d);
+    out.iter_mut().for_each(|o| *o = 0.0);
     for (i, &x) in xs.iter().enumerate() {
-        let orow = out.row_mut(i);
+        let orow = &mut out[i * d..(i + 1) * d];
         for (j, &y) in ys.iter().enumerate() {
             let c = f.eval(x + y);
             if c == 0.0 {
                 continue;
             }
-            for (o, &vv) in orow.iter_mut().zip(v.row(j)) {
+            for (o, &vv) in orow.iter_mut().zip(&v[j * d..(j + 1) * d]) {
                 *o += c * vv;
             }
         }
     }
-    out
 }
 
 /// An execution plan: the chosen strategy together with every expensive
@@ -321,6 +339,10 @@ pub fn cross_apply(f: &FDist, xs: &[f64], ys: &[f64], v: &Matrix, policy: &Cross
 /// Execute a previously built plan. Panic-free: every input-dependent
 /// failure mode was resolved at planning time, and the plan owns its
 /// artifacts (expansion, FFT table, decomposition, kernel parameters).
+/// A plan is bound to the `(xs, ys)` it was planned for — `Lattice`
+/// plans cache their per-point index maps at build time, so applying
+/// one to a different point set is invalid (debug-asserted there); the
+/// prepared integrator upholds this by construction.
 pub fn apply_plan(
     plan: &Plan,
     f: &FDist,
@@ -343,6 +365,92 @@ pub fn apply_plan(
             expquad_cross_apply(*u, *vc, *w, xs, ys, *delta, v)
         }
         Plan::Chebyshev(exp) => exp.cross_apply(f, xs, ys, v),
+    }
+}
+
+/// Reusable per-task scratch for [`apply_plan_into`]: the complex FFT
+/// buffer of the lattice multiplier, the Chebyshev aggregation/basis
+/// buffers and the separable rank-1 accumulator. Sized once (from the
+/// maxima over a prepared plan set) and checked out per integration
+/// task, so the steady-state hot path performs no heap allocation.
+#[derive(Default)]
+pub struct CrossScratch {
+    pub(crate) cplx: Vec<Complex>,
+    pub(crate) cheb_w: Vec<f64>,
+    pub(crate) cheb_basis: Vec<f64>,
+    pub(crate) sep_w: Vec<f64>,
+}
+
+impl CrossScratch {
+    pub fn new() -> Self {
+        CrossScratch::default()
+    }
+
+    /// Grow (never shrink) every buffer to the given plan-set maxima.
+    /// After the first call with the steady-state sizes, further calls
+    /// are no-ops — this is what makes checkout allocation-free.
+    pub(crate) fn ensure(&mut self, fft_len: usize, cheb_rank: usize, d: usize) {
+        if self.cplx.len() < fft_len {
+            self.cplx.resize(fft_len, Complex::ZERO);
+        }
+        if self.cheb_w.len() < cheb_rank * d {
+            self.cheb_w.resize(cheb_rank * d, 0.0);
+        }
+        if self.cheb_basis.len() < cheb_rank {
+            self.cheb_basis.resize(cheb_rank, 0.0);
+        }
+        if self.sep_w.len() < d {
+            self.sep_w.resize(d, 0.0);
+        }
+    }
+}
+
+/// The complex-FFT / Chebyshev-rank scratch demand of one plan — used
+/// to size [`CrossScratch`] arenas at prepare time.
+pub(crate) fn plan_scratch_demand(plan: &Plan) -> (usize, usize) {
+    match plan {
+        Plan::Lattice(lp) => (lp.fft_len(), 0),
+        Plan::Chebyshev(exp) => (0, exp.rank()),
+        _ => (0, 0),
+    }
+}
+
+/// [`apply_plan`] into a caller-provided buffer: the workspace hot path.
+/// `v` is `ys.len()×d` row-major, `out` is `xs.len()×d` (dirty on entry
+/// is fine — every strategy fully overwrites it). Bit-identical to
+/// [`apply_plan`] for every strategy.
+///
+/// The Dense / Separable / Lattice / Chebyshev multipliers — everything
+/// the default policy plans on the prepared hot path — run fully
+/// allocation-free through `scratch`. The RationalSum / Cauchy /
+/// Vandermonde multipliers keep their allocating divide-and-conquer
+/// implementations (they are forced-strategy fallbacks, not hot-path
+/// choices) and are shimmed through a temporary [`Matrix`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn apply_plan_into(
+    plan: &Plan,
+    f: &FDist,
+    xs: &[f64],
+    ys: &[f64],
+    v: &[f64],
+    d: usize,
+    out: &mut [f64],
+    policy: &CrossPolicy,
+    scratch: &mut CrossScratch,
+) {
+    match plan {
+        Plan::Dense => cross_apply_dense_into(f, xs, ys, v, d, out),
+        Plan::Separable(sep) => apply_separable_into(sep, xs, ys, v, d, out, &mut scratch.sep_w),
+        Plan::Lattice(lp) => lp.apply_into(v, d, out, &mut scratch.cplx),
+        Plan::Chebyshev(exp) => {
+            let (w, basis) = (&mut scratch.cheb_w, &mut scratch.cheb_basis);
+            exp.cross_apply_into(f, xs, ys, v, d, out, w, basis)
+        }
+        other => {
+            let vm = Matrix::from_vec(ys.len(), d, v.to_vec());
+            let m = apply_plan(other, f, xs, ys, &vm, policy);
+            out.copy_from_slice(m.data());
+        }
     }
 }
 
@@ -467,6 +575,37 @@ mod tests {
             try_cross_apply(&pole, &[0.0, 1.0], &[0.0, 1.0, 2.0], &v, &p),
             Err(FtfiError::StrategyInapplicable { strategy: Strategy::Chebyshev, .. })
         ));
+    }
+
+    /// The workspace-scratch execution path must be bit-identical to the
+    /// allocating one for every strategy (the prepared hot path swaps
+    /// one for the other under a bit-identity contract).
+    #[test]
+    fn apply_plan_into_is_bit_identical_for_every_strategy() {
+        let mut rng = Pcg::seed(21);
+        let xs: Vec<f64> = (0..40).map(|_| rng.below(30) as f64 * 0.25).collect();
+        let ys: Vec<f64> = (0..35).map(|_| rng.below(30) as f64 * 0.25).collect();
+        let v = Matrix::randn(35, 3, &mut rng);
+        let cases: Vec<(FDist, Strategy)> = vec![
+            (FDist::Exponential { lambda: -0.4, scale: 1.0 }, Strategy::Dense),
+            (FDist::Exponential { lambda: -0.4, scale: 1.0 }, Strategy::Separable),
+            (FDist::inverse_quadratic(0.3), Strategy::Lattice),
+            (FDist::inverse_quadratic(0.3), Strategy::Chebyshev),
+            (FDist::inverse_quadratic(0.3), Strategy::RationalSum),
+            (FDist::ExpOverLinear { lambda: -0.2, c: 1.0 }, Strategy::Cauchy),
+            (FDist::gaussian(0.2), Strategy::Vandermonde),
+        ];
+        for (f, s) in cases {
+            let policy = CrossPolicy { force: Some(s), dense_cutoff: 0, ..Default::default() };
+            let plan = try_make_plan(&f, &xs, &ys, 3, &policy).expect("forced applicable");
+            let want = apply_plan(&plan, &f, &xs, &ys, &v, &policy);
+            let mut out = vec![f64::NAN; xs.len() * 3];
+            let mut scratch = CrossScratch::new();
+            let (fft, cheb) = plan_scratch_demand(&plan);
+            scratch.ensure(fft, cheb, 3);
+            apply_plan_into(&plan, &f, &xs, &ys, v.data(), 3, &mut out, &policy, &mut scratch);
+            assert_eq!(out, want.data(), "{s:?} must be bit-identical");
+        }
     }
 
     #[test]

@@ -421,6 +421,13 @@ impl PreparedEnsembleIntegrator<'_> {
     pub fn plans_built(&self) -> usize {
         self.plans.iter().map(|p| p.plans_built()).sum()
     }
+
+    /// Steady-state workspace footprint for a `d`-channel field, summed
+    /// over the members' reusable arenas (each member's prepared handle
+    /// owns its own slab/scratch pool — see `DESIGN.md` §Memory layout).
+    pub fn workspace_bytes(&self, d: usize) -> usize {
+        self.plans.iter().map(|p| p.workspace_bytes(d)).sum()
+    }
 }
 
 #[cfg(test)]
@@ -471,6 +478,7 @@ mod tests {
         let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
         let prepared = ens.prepare(&f).unwrap();
         assert!(prepared.plans_built() > 0, "embedding trees must have cross blocks");
+        assert!(prepared.workspace_bytes(2) > 0, "members must size their arenas");
         assert_eq!(prepared.n(), 60);
         let mut rng = Pcg::seed(4);
         let xs: Vec<Matrix> = (0..3).map(|_| Matrix::randn(60, 2, &mut rng)).collect();

@@ -9,7 +9,7 @@
 //! route to `O(N log² N)` integration on unweighted trees for arbitrary f.
 
 use crate::ftfi::functions::FDist;
-use crate::linalg::fft::{fft_pow2, ifft_pow2, next_pow2, Complex};
+use crate::linalg::fft::{fft_pow2_cached, ifft_pow2_cached, next_pow2, Complex, TwiddleTable};
 use crate::linalg::matrix::Matrix;
 
 /// Detect a common lattice spacing δ for the given values (all must be
@@ -62,9 +62,12 @@ fn float_gcd(mut a: f64, mut b: f64, tol: f64) -> f64 {
     a
 }
 
-/// Pre-planned lattice application: the f-table FFT is computed once and
-/// shared across all `d` channels (and across C / Cᵀ, which use the same
-/// table).
+/// Pre-planned lattice application: the f-table FFT, the per-point
+/// lattice index maps for both sides, and the FFT twiddle tables are
+/// all computed once and shared across all `d` channels (and across
+/// C / Cᵀ, which use the same table). A plan is bound to the `(xs, ys)`
+/// it was built for — `apply`/`apply_t` must be called with the same
+/// point sets (the prepared integrator's invariant; debug-asserted).
 pub struct LatticePlan {
     delta: f64,
     /// FFT of the f-table, length `m` (power of two ≥ table len + max(S,T)).
@@ -73,49 +76,118 @@ pub struct LatticePlan {
     /// table[s] = f(s·δ) for s = 0..=T+S.
     t_max: usize,
     s_max: usize,
+    /// Lattice index of every `xs` point (the C-row side).
+    row_idx: Vec<u32>,
+    /// Lattice index of every `ys` point (the C-column side).
+    col_idx: Vec<u32>,
+    /// Per-stage twiddles for the length-`m` transforms.
+    twiddles: TwiddleTable,
 }
 
 impl LatticePlan {
     /// Build a plan for values `xs` (rows) and `ys` (cols) already known
     /// to lie on the lattice `δ`.
     pub fn new(f: &FDist, xs: &[f64], ys: &[f64], delta: f64) -> Self {
-        let t_max = xs.iter().map(|&x| (x / delta).round() as usize).max().unwrap_or(0);
-        let s_max = ys.iter().map(|&y| (y / delta).round() as usize).max().unwrap_or(0);
+        let row_idx: Vec<u32> = xs.iter().map(|&x| (x / delta).round() as u32).collect();
+        let col_idx: Vec<u32> = ys.iter().map(|&y| (y / delta).round() as u32).collect();
+        let t_max = row_idx.iter().map(|&x| x as usize).max().unwrap_or(0);
+        let s_max = col_idx.iter().map(|&y| y as usize).max().unwrap_or(0);
         let table: Vec<f64> = (0..=t_max + s_max).map(|s| f.eval(s as f64 * delta)).collect();
         // Correlation corr[t] = Σ_s table[t+s]·w[s] for a w of length
         // max(S,T)+1 (both directions share the plan): linear convolution
         // of `table` with reversed w, so m ≥ table.len() + max(S,T).
         let m = next_pow2(table.len() + t_max.max(s_max));
+        let twiddles = TwiddleTable::new(m);
         let mut table_fft = vec![Complex::ZERO; m];
         for (i, &v) in table.iter().enumerate() {
             table_fft[i].re = v;
         }
-        fft_pow2(&mut table_fft, false);
-        LatticePlan { delta, table_fft, m, t_max, s_max }
+        fft_pow2_cached(&mut table_fft, &twiddles, false);
+        LatticePlan { delta, table_fft, m, t_max, s_max, row_idx, col_idx, twiddles }
+    }
+
+    /// The FFT length — the complex-scratch size [`LatticePlan::apply_into`]
+    /// needs (workspace arenas are sized to the max across a plan set).
+    pub fn fft_len(&self) -> usize {
+        self.m
+    }
+
+    /// Debug-build check that `apply`/`apply_t` were handed the point
+    /// sets the plan was built for: the cached index maps are only
+    /// valid for those (a same-length but different point set would
+    /// silently compute the wrong product).
+    fn debug_check_points(&self, xs: &[f64], ys: &[f64]) {
+        debug_assert!(
+            xs.len() == self.row_idx.len()
+                && xs
+                    .iter()
+                    .zip(&self.row_idx)
+                    .all(|(&x, &i)| (x / self.delta).round() as u32 == i),
+            "LatticePlan applied to xs it was not built for"
+        );
+        debug_assert!(
+            ys.len() == self.col_idx.len()
+                && ys
+                    .iter()
+                    .zip(&self.col_idx)
+                    .all(|(&y, &i)| (y / self.delta).round() as u32 == i),
+            "LatticePlan applied to ys it was not built for"
+        );
     }
 
     /// `C·V`: rows indexed by `xs`, columns by `ys`, `V` is `ys.len()×d`.
+    /// `xs`/`ys` must be the point sets the plan was built for (the
+    /// index maps are cached at build time; checked in debug builds).
     pub fn apply(&self, xs: &[f64], ys: &[f64], v: &Matrix) -> Matrix {
-        self.apply_dir(xs, ys, v, self.s_max)
-    }
-
-    /// `Cᵀ·U`: same table with the roles of xs/ys swapped.
-    pub fn apply_t(&self, xs: &[f64], ys: &[f64], u: &Matrix) -> Matrix {
-        self.apply_dir(ys, xs, u, self.t_max)
-    }
-
-    fn apply_dir(&self, out_vals: &[f64], in_vals: &[f64], v: &Matrix, in_max: usize) -> Matrix {
-        assert_eq!(v.rows(), in_vals.len());
+        self.debug_check_points(xs, ys);
         let d = v.cols();
-        let mut out = Matrix::zeros(out_vals.len(), d);
-        if in_vals.is_empty() || out_vals.is_empty() {
-            return out;
-        }
-        let in_idx: Vec<usize> =
-            in_vals.iter().map(|&y| (y / self.delta).round() as usize).collect();
-        let out_idx: Vec<usize> =
-            out_vals.iter().map(|&x| (x / self.delta).round() as usize).collect();
+        let mut out = Matrix::zeros(xs.len(), d);
         let mut buf = vec![Complex::ZERO; self.m];
+        self.apply_dir(false, v.data(), d, out.data_mut(), &mut buf);
+        out
+    }
+
+    /// `Cᵀ·U`: same table with the roles of xs/ys swapped. Same
+    /// built-points binding as [`LatticePlan::apply`].
+    pub fn apply_t(&self, xs: &[f64], ys: &[f64], u: &Matrix) -> Matrix {
+        self.debug_check_points(xs, ys);
+        let d = u.cols();
+        let mut out = Matrix::zeros(ys.len(), d);
+        let mut buf = vec![Complex::ZERO; self.m];
+        self.apply_dir(true, u.data(), d, out.data_mut(), &mut buf);
+        out
+    }
+
+    /// `C·V` into a caller-provided buffer with caller-provided complex
+    /// scratch (`scratch.len() ≥ self.fft_len()`): the allocation-free
+    /// hot-path variant of [`LatticePlan::apply`], bit-identical to it.
+    /// `v` is `col_idx.len()×d` row-major; `out` is `row_idx.len()×d`.
+    pub(crate) fn apply_into(&self, v: &[f64], d: usize, out: &mut [f64], scratch: &mut [Complex]) {
+        self.apply_dir(false, v, d, out, &mut scratch[..self.m]);
+    }
+
+    /// Shared kernel: `transpose == false` maps columns (`ys`) to rows
+    /// (`xs`), `true` the other way round. Every output element is
+    /// overwritten, so `out` needs no pre-zeroing.
+    fn apply_dir(
+        &self,
+        transpose: bool,
+        v: &[f64],
+        d: usize,
+        out: &mut [f64],
+        buf: &mut [Complex],
+    ) {
+        let (out_idx, in_idx, in_max) = if transpose {
+            (&self.col_idx, &self.row_idx, self.t_max)
+        } else {
+            (&self.row_idx, &self.col_idx, self.s_max)
+        };
+        assert_eq!(v.len(), in_idx.len() * d);
+        assert_eq!(out.len(), out_idx.len() * d);
+        if in_idx.is_empty() || out_idx.is_empty() {
+            out.iter_mut().for_each(|o| *o = 0.0);
+            return;
+        }
         // Process channels two at a time packed into (re, im) — one FFT
         // serves two real convolutions.
         let mut ch = 0;
@@ -127,34 +199,33 @@ impl LatticePlan {
             // w[s] aggregated by lattice index; reversed so the
             // convolution computes a correlation with the table.
             for (j, &s) in in_idx.iter().enumerate() {
-                let slot = in_max - s;
-                buf[slot].re += v.get(j, ch);
+                let slot = in_max - s as usize;
+                buf[slot].re += v[j * d + ch];
                 if pair {
-                    buf[slot].im += v.get(j, ch + 1);
+                    buf[slot].im += v[j * d + ch + 1];
                 }
             }
-            fft_pow2(&mut buf, false);
+            fft_pow2_cached(buf, &self.twiddles, false);
             for (b, t) in buf.iter_mut().zip(&self.table_fft) {
                 *b = *b * *t;
             }
-            ifft_pow2(&mut buf);
+            ifft_pow2_cached(buf, &self.twiddles);
             if pair {
                 // Unpack: conv of (w_re + i·w_im) with real table keeps
                 // channels in re/im separately (table is real).
                 for (i, &t) in out_idx.iter().enumerate() {
-                    let c = buf[t + in_max];
-                    out.set(i, ch, c.re);
-                    out.set(i, ch + 1, c.im);
+                    let c = buf[t as usize + in_max];
+                    out[i * d + ch] = c.re;
+                    out[i * d + ch + 1] = c.im;
                 }
                 ch += 2;
             } else {
                 for (i, &t) in out_idx.iter().enumerate() {
-                    out.set(i, ch, buf[t + in_max].re);
+                    out[i * d + ch] = buf[t as usize + in_max].re;
                 }
                 ch += 1;
             }
         }
-        out
     }
 }
 
@@ -227,6 +298,24 @@ mod tests {
         let want = cross_apply_dense(&f, &ys, &xs, &u);
         let got = plan.apply_t(&xs, &ys, &u);
         assert!(got.max_abs_diff(&want) < 1e-8 * (1.0 + want.frobenius()));
+    }
+
+    #[test]
+    fn apply_into_is_bit_identical_to_apply() {
+        let mut rng = Pcg::seed(9);
+        let f = FDist::Custom(Arc::new(|x: f64| (0.7 * x).cos() / (1.0 + 0.1 * x)));
+        for &(a, b, d) in &[(7usize, 11usize, 1usize), (33, 20, 3), (16, 16, 4)] {
+            let xs: Vec<f64> = (0..a).map(|_| rng.below(25) as f64 * 0.5).collect();
+            let ys: Vec<f64> = (0..b).map(|_| rng.below(25) as f64 * 0.5).collect();
+            let v = Matrix::randn(b, d, &mut rng);
+            let delta = detect_lattice(xs.iter().chain(ys.iter()).copied(), 1 << 16).unwrap();
+            let plan = LatticePlan::new(&f, &xs, &ys, delta);
+            let want = plan.apply(&xs, &ys, &v);
+            let mut out = vec![f64::NAN; a * d]; // dirty: apply_into must overwrite
+            let mut scratch = vec![Complex::new(3.0, -3.0); plan.fft_len() + 5];
+            plan.apply_into(v.data(), d, &mut out, &mut scratch);
+            assert_eq!(out, want.data(), "a={a} b={b} d={d}");
+        }
     }
 
     #[test]

@@ -281,6 +281,30 @@ impl TreeFieldIntegrator {
         self.it.integrate_prepared_pooled(x, plans, &self.pool)
     }
 
+    /// Zero-allocation prepared integration into a caller-provided
+    /// `n×d` matrix (see
+    /// [`crate::tree::integrator_tree::IntegratorTree::integrate_prepared_into_pooled`]).
+    pub fn integrate_prepared_into(
+        &self,
+        x: &Matrix,
+        plans: &PreparedPlans,
+        out: &mut Matrix,
+    ) -> Result<(), FtfiError> {
+        self.it.integrate_prepared_into_pooled(x, plans, &self.pool, out)
+    }
+
+    /// The pre-workspace prepared execution path (gathers and allocates
+    /// per node). Kept only as the bit-identity reference for the
+    /// workspace hot path — equivalence tests and the `hotpath_alloc`
+    /// ablation compare against it; the serving stack never calls it.
+    pub fn integrate_prepared_legacy(
+        &self,
+        x: &Matrix,
+        plans: &PreparedPlans,
+    ) -> Result<Matrix, FtfiError> {
+        self.it.integrate_prepared_legacy_pooled(x, plans, &self.pool)
+    }
+
     /// Number of tree vertices.
     pub fn n(&self) -> usize {
         self.n
@@ -340,9 +364,27 @@ pub struct PreparedIntegrator<'a> {
 }
 
 impl PreparedIntegrator<'_> {
-    /// Integrate one tensor field with the frozen `f`.
+    /// Integrate one tensor field with the frozen `f`. On a warmed
+    /// handle the only heap allocation is the returned matrix — use
+    /// [`PreparedIntegrator::integrate_into`] to eliminate that one too.
     pub fn integrate(&self, x: &Matrix) -> Result<Matrix, FtfiError> {
         self.it.integrate_prepared_pooled(x, &self.plans, &self.pool)
+    }
+
+    /// Zero-allocation integration into a caller-provided `n×d` matrix:
+    /// the steady-state serving hot path. After one warming call with
+    /// the same channel width, a serial call performs **no heap
+    /// allocation** (pinned by `tests/hotpath_alloc.rs`); the parallel
+    /// path is allocation-free once the plan's fork-scratch stock has
+    /// reached its peak concurrency.
+    pub fn integrate_into(&self, x: &Matrix, out: &mut Matrix) -> Result<(), FtfiError> {
+        self.it.integrate_prepared_into_pooled(x, &self.plans, &self.pool, out)
+    }
+
+    /// Bytes of one fully-sized reusable workspace for a `d`-channel
+    /// field (slabs + aggregate arena + cross-multiplier scratch).
+    pub fn workspace_bytes(&self, d: usize) -> usize {
+        self.plans.workspace_bytes(d)
     }
 
     /// Integrate a batch of fields, reusing the plans for every one.
@@ -556,6 +598,30 @@ mod tests {
         for (x, got) in xs.iter().zip(&batch) {
             let want = tfi.try_integrate(&f, x).unwrap();
             assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-12);
+        }
+    }
+
+    /// The zero-allocation `integrate_into` surface agrees bit-for-bit
+    /// with `integrate`, across repeated calls on one handle (workspace
+    /// reuse must not leak state) and with the legacy reference path.
+    #[test]
+    fn integrate_into_matches_integrate_bitwise() {
+        let mut rng = Pcg::seed(7);
+        let t = generators::random_tree(300, 0.1, 1.0, &mut rng);
+        let tfi = TreeFieldIntegrator::builder(&t).leaf_threshold(8).build().unwrap();
+        let f = FDist::inverse_quadratic(0.5);
+        let prepared = tfi.prepare_with_channels(&f, 2).unwrap();
+        assert!(prepared.workspace_bytes(2) > 0);
+        let plans = tfi.prepare_plans(&f, 2).unwrap();
+        let mut out = Matrix::zeros(300, 2);
+        for _ in 0..3 {
+            let x = Matrix::randn(300, 2, &mut rng);
+            let want = prepared.integrate(&x).unwrap();
+            prepared.integrate_into(&x, &mut out).unwrap();
+            assert!(out == want, "integrate_into must be bit-identical to integrate");
+            let legacy = tfi.integrate_prepared_legacy(&x, &plans).unwrap();
+            let new = tfi.integrate_prepared(&x, &plans).unwrap();
+            assert!(new == legacy, "workspace path must be bit-identical to legacy");
         }
     }
 

@@ -134,23 +134,30 @@ pub fn sinc_cross_apply(xs: &[f64], ys: &[f64], v: &Matrix, padding: f64) -> Mat
     let uy: Vec<f64> = ys.iter().map(|&y| (y / span).rem_euclid(1.0)).collect();
     let ux: Vec<f64> = xs.iter().map(|&x| (x / span).rem_euclid(1.0)).collect();
     let dw = 1.0 / span; // quadrature spacing in ω
+    // Channel-loop buffers hoisted out and refilled per channel (the
+    // per-channel body fully overwrites them).
+    let mut coeffs = vec![Complex::ZERO; ys.len()];
+    let mut integ = vec![Complex::ZERO; r];
     for ch in 0..d {
         // R(ω_q) = Σ_j v_j e^{2πi ω_q y_j} = conj(type-1 with coeffs conj(v)).
-        let coeffs: Vec<Complex> = (0..ys.len()).map(|j| Complex::new(v.get(j, ch), 0.0)).collect();
+        for (j, c) in coeffs.iter_mut().enumerate() {
+            *c = Complex::new(v.get(j, ch), 0.0);
+        }
         let rw = nufft1(&uy, &coeffs, r);
         // Multiply by ρ(ω)=1_{|ω|≤1/2} and the quadrature weight.
         // rw[k] = Σ_j v_j·e^{-2πik·u_y} = R(ω_{-k}), so the wanted sum
         // Σ_q R(ω_q)·e^{+2πiq·u_x} rewrites (q = -k) as
         // Σ_k rw[k]·e^{-2πik·u_x} — exactly a type-2 transform of rw
         // itself, no index flip. Trapezoid half-weight at |ω| = 1/2.
-        let mut integ = vec![Complex::ZERO; r];
-        for (i, val) in rw.iter().enumerate() {
+        for (i, (slot, val)) in integ.iter_mut().zip(&rw).enumerate() {
             let k = i as isize - (r / 2) as isize;
             let omega = k as f64 / span;
-            if omega.abs() <= 0.5 + 1e-12 {
+            *slot = if omega.abs() <= 0.5 + 1e-12 {
                 let w = if (omega.abs() - 0.5).abs() < 1e-12 { 0.5 * dw } else { dw };
-                integ[i] = val.scale(w);
-            }
+                val.scale(w)
+            } else {
+                Complex::ZERO
+            };
         }
         // g(x_i) = Σ_k ρR(ω_k)·e^{-2πi ω_k x_i}·dω — a type-2 transform.
         let g = nufft2(&ux, &integ);

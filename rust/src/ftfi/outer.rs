@@ -14,8 +14,28 @@ pub fn apply_separable(sep: &Separable, xs: &[f64], ys: &[f64], v: &Matrix) -> M
     assert_eq!(v.rows(), ys.len());
     let d = v.cols();
     let mut out = Matrix::zeros(xs.len(), d);
-    // w_r = h_r(ys)^T · V  — a single d-vector per rank-1 term.
     let mut w = vec![0.0; d];
+    apply_separable_into(sep, xs, ys, v.data(), d, out.data_mut(), &mut w);
+    out
+}
+
+/// [`apply_separable`] into caller-provided buffers — the
+/// allocation-free hot-path variant. `v` is `ys.len()×d` row-major,
+/// `out` is `xs.len()×d`; `w_buf` (≥ d) is scratch, dirty-on-entry ok.
+pub(crate) fn apply_separable_into(
+    sep: &Separable,
+    xs: &[f64],
+    ys: &[f64],
+    v: &[f64],
+    d: usize,
+    out: &mut [f64],
+    w_buf: &mut [f64],
+) {
+    assert_eq!(v.len(), ys.len() * d);
+    assert_eq!(out.len(), xs.len() * d);
+    out.iter_mut().for_each(|o| *o = 0.0);
+    // w_r = h_r(ys)^T · V  — a single d-vector per rank-1 term.
+    let w = &mut w_buf[..d];
     for (g, h) in sep.g.iter().zip(&sep.h) {
         w.iter_mut().for_each(|x| *x = 0.0);
         for (j, &yj) in ys.iter().enumerate() {
@@ -23,7 +43,7 @@ pub fn apply_separable(sep: &Separable, xs: &[f64], ys: &[f64], v: &Matrix) -> M
             if hy == 0.0 {
                 continue;
             }
-            for (wc, &vc) in w.iter_mut().zip(v.row(j)) {
+            for (wc, &vc) in w.iter_mut().zip(&v[j * d..(j + 1) * d]) {
                 *wc += hy * vc;
             }
         }
@@ -32,12 +52,11 @@ pub fn apply_separable(sep: &Separable, xs: &[f64], ys: &[f64], v: &Matrix) -> M
             if gx == 0.0 {
                 continue;
             }
-            for (o, &wc) in out.row_mut(i).iter_mut().zip(&w) {
+            for (o, &wc) in out[i * d..(i + 1) * d].iter_mut().zip(w.iter()) {
                 *o += gx * wc;
             }
         }
     }
-    out
 }
 
 #[cfg(test)]

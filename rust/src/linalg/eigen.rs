@@ -53,11 +53,11 @@ pub fn jacobi_eigenvalues(m: &Matrix, max_sweeps: usize) -> Vec<f64> {
                     a.set(k, p, c * akp - s * akq);
                     a.set(k, q, s * akp + c * akq);
                 }
-                for k in 0..n {
-                    let apk = a.get(p, k);
-                    let aqk = a.get(q, k);
-                    a.set(p, k, c * apk - s * aqk);
-                    a.set(q, k, s * apk + c * aqk);
+                let (row_p, row_q) = a.row_pair_mut(p, q);
+                for (apk, aqk) in row_p.iter_mut().zip(row_q.iter_mut()) {
+                    let (x, y) = (*apk, *aqk);
+                    *apk = c * x - s * y;
+                    *aqk = s * x + c * y;
                 }
             }
         }

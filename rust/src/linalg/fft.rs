@@ -109,16 +109,29 @@ pub fn next_pow2(n: usize) -> usize {
     n.next_power_of_two()
 }
 
-/// In-place iterative radix-2 FFT. `buf.len()` must be a power of two.
-/// `inverse` applies the conjugate transform *without* the 1/n scaling
-/// (callers that need a true inverse use [`ifft_pow2`]).
-pub fn fft_pow2(buf: &mut [Complex], inverse: bool) {
-    let n = buf.len();
-    assert!(n.is_power_of_two(), "fft_pow2 length {n} not a power of two");
-    if n <= 1 {
-        return;
+/// Concatenated per-stage twiddles for a length-`n` transform (stage
+/// tables of length 1, 2, …, n/2 — `n − 1` entries total). Shared by
+/// the one-shot and cached transforms so there is exactly one twiddle
+/// formula in the crate.
+fn fft_stage_twiddles(n: usize, sign: f64) -> Vec<Complex> {
+    let mut t = Vec::with_capacity(n.saturating_sub(1));
+    let mut len = 2;
+    while len <= n {
+        let half = len / 2;
+        let step = sign * 2.0 * PI / len as f64;
+        for k in 0..half {
+            t.push(Complex::cis(step * k as f64));
+        }
+        len <<= 1;
     }
-    // Bit-reversal permutation.
+    t
+}
+
+/// The shared radix-2 kernel: bit-reversal permutation + butterflies
+/// over a precomputed stage-twiddle table (layout of
+/// [`fft_stage_twiddles`]). `buf.len()` must be a power of two ≥ 2.
+fn fft_kernel(buf: &mut [Complex], stages: &[Complex]) {
+    let n = buf.len();
     let shift = (n.leading_zeros() + 1) as u32;
     for i in 0..n {
         let j = (i.reverse_bits() >> shift) as usize;
@@ -126,37 +139,101 @@ pub fn fft_pow2(buf: &mut [Complex], inverse: bool) {
             buf.swap(i, j);
         }
     }
-    // Butterflies with per-stage twiddle tables (precomputing the table per
-    // stage keeps trig calls at O(n) total and is noticeably faster than
-    // recomputing cis() in the inner loop).
-    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut off = 0;
     let mut len = 2;
-    let mut twiddles: Vec<Complex> = Vec::with_capacity(n / 2);
     while len <= n {
         let half = len / 2;
-        twiddles.clear();
-        let step = sign * 2.0 * PI / len as f64;
-        for k in 0..half {
-            twiddles.push(Complex::cis(step * k as f64));
-        }
+        let twiddles = &stages[off..off + half];
         let mut start = 0;
         while start < n {
-            for k in 0..half {
+            for (k, &w) in twiddles.iter().enumerate() {
                 let u = buf[start + k];
-                let v = buf[start + k + half] * twiddles[k];
+                let v = buf[start + k + half] * w;
                 buf[start + k] = u + v;
                 buf[start + k + half] = u - v;
             }
             start += len;
         }
+        off += half;
         len <<= 1;
     }
+}
+
+/// In-place iterative radix-2 FFT. `buf.len()` must be a power of two.
+/// `inverse` applies the conjugate transform *without* the 1/n scaling
+/// (callers that need a true inverse use [`ifft_pow2`]). Builds its
+/// stage-twiddle table per call — repeated same-length transforms
+/// should precompute a [`TwiddleTable`] and use [`fft_pow2_cached`]
+/// (bit-identical output).
+pub fn fft_pow2(buf: &mut [Complex], inverse: bool) {
+    let n = buf.len();
+    assert!(n.is_power_of_two(), "fft_pow2 length {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let stages = fft_stage_twiddles(n, sign);
+    fft_kernel(buf, &stages);
 }
 
 /// True inverse FFT (power-of-two length): conjugate transform scaled by 1/n.
 pub fn ifft_pow2(buf: &mut [Complex]) {
     let n = buf.len();
     fft_pow2(buf, true);
+    let s = 1.0 / n as f64;
+    for x in buf.iter_mut() {
+        *x = x.scale(s);
+    }
+}
+
+/// Precomputed per-stage twiddle factors for one fixed power-of-two
+/// transform length, both directions. [`fft_pow2`] rebuilds its stage
+/// tables (a `Vec<Complex>` plus O(n) trig calls) on every call; a plan
+/// that runs the same-length transform thousands of times (the lattice
+/// cross multiplier of the prepared hot path) builds a `TwiddleTable`
+/// once and calls [`fft_pow2_cached`] instead. The cached entries are
+/// produced by the exact same `cis(step·k)` formula, so cached and
+/// uncached transforms are bit-identical.
+pub struct TwiddleTable {
+    n: usize,
+    /// Forward twiddles, stages concatenated (len 1, 2, 4, … n/2 — total n−1).
+    fwd: Vec<Complex>,
+    /// Conjugate-transform twiddles, same layout.
+    inv: Vec<Complex>,
+}
+
+impl TwiddleTable {
+    /// Build the tables for transforms of length `n` (a power of two).
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "TwiddleTable length {n} not a power of two");
+        TwiddleTable { n, fwd: fft_stage_twiddles(n, -1.0), inv: fft_stage_twiddles(n, 1.0) }
+    }
+
+    /// The transform length the tables were built for.
+    pub fn fft_len(&self) -> usize {
+        self.n
+    }
+}
+
+/// [`fft_pow2`] with the stage twiddles taken from a precomputed
+/// [`TwiddleTable`] instead of being rebuilt: zero heap traffic per
+/// call, bit-identical output (same [`fft_kernel`], same
+/// [`fft_stage_twiddles`] values). `buf.len()` must equal the table
+/// length.
+pub fn fft_pow2_cached(buf: &mut [Complex], tw: &TwiddleTable, inverse: bool) {
+    let n = buf.len();
+    assert_eq!(n, tw.n, "fft_pow2_cached: buffer length {n} != table length {}", tw.n);
+    if n <= 1 {
+        return;
+    }
+    fft_kernel(buf, if inverse { &tw.inv } else { &tw.fwd });
+}
+
+/// True inverse FFT over a precomputed [`TwiddleTable`] (see
+/// [`fft_pow2_cached`]).
+pub fn ifft_pow2_cached(buf: &mut [Complex], tw: &TwiddleTable) {
+    let n = buf.len();
+    fft_pow2_cached(buf, tw, true);
     let s = 1.0 / n as f64;
     for x in buf.iter_mut() {
         *x = x.scale(s);
@@ -397,5 +474,36 @@ mod tests {
     fn empty_and_degenerate_convolutions() {
         assert!(convolve_real(&[], &[1.0]).is_empty());
         assert_eq!(convolve_real(&[2.0], &[3.0]), vec![6.0]);
+    }
+
+    /// The cached-twiddle transform must be *bit-identical* to the
+    /// rebuilding one in both directions — the prepared hot path swaps
+    /// one for the other and relies on this.
+    #[test]
+    fn cached_twiddles_are_bit_identical() {
+        let mut rng = Pcg::seed(7);
+        for &n in &[1usize, 2, 4, 16, 128, 1024] {
+            let tw = TwiddleTable::new(n);
+            assert_eq!(tw.fft_len(), n);
+            let x: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            for inverse in [false, true] {
+                let mut a = x.clone();
+                let mut b = x.clone();
+                fft_pow2(&mut a, inverse);
+                fft_pow2_cached(&mut b, &tw, inverse);
+                for (p, q) in a.iter().zip(&b) {
+                    assert!(
+                        p.re.to_bits() == q.re.to_bits() && p.im.to_bits() == q.im.to_bits(),
+                        "n={n} inverse={inverse}: {p:?} vs {q:?}"
+                    );
+                }
+            }
+            let mut a = x.clone();
+            let mut b = x.clone();
+            ifft_pow2(&mut a);
+            ifft_pow2_cached(&mut b, &tw);
+            assert_eq!(a, b);
+        }
     }
 }

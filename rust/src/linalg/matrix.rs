@@ -216,11 +216,28 @@ impl Matrix {
     /// Scatter-add rows of `src` into `self` at the given indices.
     pub fn scatter_add_rows(&mut self, idx: &[u32], src: &Matrix) {
         assert_eq!(idx.len(), src.rows());
+        assert_eq!(self.cols, src.cols(), "scatter_add_rows column mismatch");
         for (r, &i) in idx.iter().enumerate() {
-            let dst = i as usize * self.cols;
-            for (c, &v) in src.row(r).iter().enumerate() {
-                self.data[dst + c] += v;
+            let dst = &mut self.data[i as usize * self.cols..(i as usize + 1) * self.cols];
+            for (d, &v) in dst.iter_mut().zip(src.row(r)) {
+                *d += v;
             }
+        }
+    }
+
+    /// Two distinct rows, both mutable — the disjoint borrow needed when
+    /// two rows of one matrix are updated from each other in place (the
+    /// Jacobi row rotation in `linalg/eigen.rs` is the in-crate user).
+    /// Panics if `i == j`.
+    pub fn row_pair_mut(&mut self, i: usize, j: usize) -> (&mut [f64], &mut [f64]) {
+        assert_ne!(i, j, "row_pair_mut needs two distinct rows");
+        let c = self.cols;
+        if i < j {
+            let (a, b) = self.data.split_at_mut(j * c);
+            (&mut a[i * c..(i + 1) * c], &mut b[..c])
+        } else {
+            let (a, b) = self.data.split_at_mut(i * c);
+            (&mut b[..c], &mut a[j * c..(j + 1) * c])
         }
     }
 }
@@ -299,6 +316,35 @@ mod tests {
         for (r, &i) in idx.iter().enumerate() {
             assert_eq!(acc.row(i as usize), g.row(r));
         }
+    }
+
+    #[test]
+    fn row_pair_mut_is_disjoint_and_ordered() {
+        let mut rng = Pcg::seed(7);
+        let mut a = Matrix::randn(5, 4, &mut rng);
+        let want_2 = a.row(2).to_vec();
+        let want_4 = a.row(4).to_vec();
+        {
+            let (r2, r4) = a.row_pair_mut(2, 4);
+            assert_eq!(&r2[..], &want_2[..]);
+            assert_eq!(&r4[..], &want_4[..]);
+            for (x, y) in r2.iter_mut().zip(r4.iter()) {
+                *x += *y;
+            }
+        }
+        // Reversed order returns (row i, row j) in argument order.
+        let (r4, r2) = a.row_pair_mut(4, 2);
+        assert_eq!(&r4[..], &want_4[..]);
+        for (got, (w2, w4)) in r2.iter().zip(want_2.iter().zip(&want_4)) {
+            assert_eq!(*got, w2 + w4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct rows")]
+    fn row_pair_mut_rejects_aliasing() {
+        let mut a = Matrix::zeros(3, 2);
+        let _ = a.row_pair_mut(1, 1);
     }
 
     #[test]

@@ -27,12 +27,16 @@
 
 use super::separator::{split, SeparatorScratch};
 use super::Tree;
-use crate::ftfi::cordial::{apply_plan, try_make_plan, CrossPolicy, Plan};
+use crate::ftfi::cordial::{
+    apply_plan, apply_plan_into, plan_scratch_demand, try_make_plan, CrossPolicy, CrossScratch,
+    Plan,
+};
 use crate::ftfi::error::FtfiError;
 use crate::ftfi::functions::FDist;
 use crate::linalg::matrix::Matrix;
 use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Internal nodes at least this large fork their left/right subtree
 /// integrations onto the work pool (Lemma 3.1 guarantees both children
@@ -79,6 +83,19 @@ pub enum ItNode {
         right_child: usize,
         left: Side,
         right: Side,
+        /// Slot-region size of the left child in the nested-dissection
+        /// layout (see [`IntegratorTree::assign_slots`]). The node's own
+        /// region is `[left region][right region]`, so the recursion
+        /// forks with one `split_at_mut` instead of a gather/scatter.
+        lslots: usize,
+        /// Slot-region size of the right child.
+        rslots: usize,
+        /// Child-local left vertex → slot offset within this node's
+        /// region (all `< lslots`).
+        left_slot: Vec<u32>,
+        /// Child-local right vertex → slot offset within this node's
+        /// region (all `≥ lslots` — the right region follows the left).
+        right_slot: Vec<u32>,
     },
 }
 
@@ -94,6 +111,24 @@ pub struct IntegratorTree {
     /// once by `prepare`). Exposed through [`ItStats::plan_builds`]; the
     /// prepared-path regression test pins it.
     plan_builds: AtomicUsize,
+    /// Nested-dissection layout: slot → original vertex. Each internal
+    /// node duplicates its pivot into both child regions, so
+    /// `total_slots = n + #internal nodes` and every node's vertex set
+    /// is one contiguous slot range. The prepared hot path permutes the
+    /// field into this layout once per call and recurses on disjoint
+    /// sub-slices.
+    slot_src: Vec<u32>,
+    /// Original vertex → its output slot in the root region (pivots
+    /// resolve to their *left* copy — the side that produces their
+    /// output row).
+    root_slot: Vec<u32>,
+    /// `slot_src.len()` (cached).
+    total_slots: usize,
+    /// max over internal nodes of `2·(left.d.len() + right.d.len())` —
+    /// the row capacity of the per-task aggregate bump arena (only one
+    /// node's aggregates are ever live per task: children finish before
+    /// a node's combine step allocates).
+    agg_rows_max: usize,
 }
 
 /// Summary statistics (used by the perf log and the ablation benches).
@@ -119,6 +154,13 @@ pub struct ItStats {
     /// requests) executed on helper threads. Populated (and pool-scoped)
     /// like `par_forks`.
     pub par_tasks: usize,
+    /// Structural workspace footprint of the prepared hot path at d = 1,
+    /// in bytes: the two nested-dissection slabs (`2·total_slots` rows)
+    /// plus the aggregate bump arena (`agg_rows_max` rows). The
+    /// plan-dependent cross-multiplier scratch (FFT buffer, Chebyshev
+    /// aggregation) is on top — `PreparedPlans::workspace_bytes` reports
+    /// the full per-workspace figure for a given channel width.
+    pub workspace_bytes: usize,
 }
 
 /// Everything `f`-dependent, frozen at prepare time: per-internal-node
@@ -143,9 +185,67 @@ enum PreparedNode {
     },
 }
 
+/// Workspace arena sizes for one `(tree, f)` pair, frozen at prepare
+/// time: the slab row count comes from the tree's slot layout, the
+/// aggregate rows from its side tables, the FFT length / Chebyshev rank
+/// from the maxima over the built plans.
+#[derive(Clone, Copy, Debug, Default)]
+struct WorkspaceSizes {
+    /// Rows of each field slab (`total_slots` of the tree).
+    slab_rows: usize,
+    /// Rows of the per-task aggregate bump arena.
+    agg_rows: usize,
+    /// Complex FFT scratch length (max lattice-plan transform size).
+    fft_len: usize,
+    /// Chebyshev aggregation rank (max expansion rank).
+    cheb_rank: usize,
+}
+
+/// Per-task scratch: the aggregate bump arena (one internal node's
+/// `xl_agg`/`xr_agg`/`cr`/`cl` rows — only one node's aggregates are
+/// live per task at any time) plus the cross-multiplier scratch.
+struct NodeScratch {
+    agg: Vec<f64>,
+    cross: CrossScratch,
+}
+
+impl NodeScratch {
+    fn new() -> Self {
+        NodeScratch { agg: Vec::new(), cross: CrossScratch::new() }
+    }
+
+    /// Grow (never shrink) to the steady-state sizes: a no-op once
+    /// warmed, which is what makes checkout allocation-free.
+    fn ensure(&mut self, sizes: &WorkspaceSizes, d: usize) {
+        if self.agg.len() < sizes.agg_rows * d {
+            self.agg.resize(sizes.agg_rows * d, 0.0);
+        }
+        self.cross.ensure(sizes.fft_len, sizes.cheb_rank, d);
+    }
+}
+
+/// One checked-out-per-call workspace: the two nested-dissection field
+/// slabs (permuted input, slot-shaped output) plus the calling task's
+/// scratch. Recursion forks borrow disjoint slab sub-slices and check
+/// out additional [`NodeScratch`] from the plan's fork pool.
+struct Workspace {
+    slab_in: Vec<f64>,
+    slab_out: Vec<f64>,
+    scratch: NodeScratch,
+}
+
+impl Workspace {
+    fn new() -> Self {
+        Workspace { slab_in: Vec::new(), slab_out: Vec::new(), scratch: NodeScratch::new() }
+    }
+}
+
 /// A frozen (tree, f, policy) integration plan. Cheap to apply, immutable
 /// and `f`-specific; obtain one from [`IntegratorTree::prepare`] (or the
-/// higher-level `TreeFieldIntegrator::prepare`).
+/// higher-level `TreeFieldIntegrator::prepare`). Owns a pool of reusable
+/// workspaces, so concurrent `integrate_prepared` calls (the batch /
+/// serving axes) each check one out and the warmed steady state performs
+/// no heap allocation.
 pub struct PreparedPlans {
     f: FDist,
     policy: CrossPolicy,
@@ -155,6 +255,11 @@ pub struct PreparedPlans {
     /// plans are not portable across trees, even same-shape ones.
     tree_id: u64,
     plans_built: usize,
+    sizes: WorkspaceSizes,
+    /// Per-call workspaces (stock grows to the peak call concurrency).
+    workspaces: Mutex<Vec<Workspace>>,
+    /// Per-fork scratch (stock grows to the peak fork concurrency).
+    fork_scratch: Mutex<Vec<NodeScratch>>,
 }
 
 impl PreparedPlans {
@@ -172,6 +277,47 @@ impl PreparedPlans {
     /// internal IT node).
     pub fn plans_built(&self) -> usize {
         self.plans_built
+    }
+
+    /// Bytes of one fully-sized workspace for a `d`-channel field: the
+    /// two slabs, the aggregate arena and the cross-multiplier scratch.
+    /// Tests pin arena sizing through this (and through
+    /// [`ItStats::workspace_bytes`] for the structural part).
+    pub fn workspace_bytes(&self, d: usize) -> usize {
+        // In/out slabs + aggregate arena + Chebyshev w/basis + the
+        // separable accumulator, all f64; the FFT scratch is complex.
+        let f64s = 2 * self.sizes.slab_rows * d
+            + self.sizes.agg_rows * d
+            + self.sizes.cheb_rank * (d + 1)
+            + d;
+        f64s * std::mem::size_of::<f64>() + self.sizes.fft_len * 16
+    }
+
+    fn checkout_workspace(&self, d: usize) -> Workspace {
+        let mut ws = self.workspaces.lock().unwrap().pop().unwrap_or_else(Workspace::new);
+        let rows = self.sizes.slab_rows * d;
+        if ws.slab_in.len() < rows {
+            ws.slab_in.resize(rows, 0.0);
+        }
+        if ws.slab_out.len() < rows {
+            ws.slab_out.resize(rows, 0.0);
+        }
+        ws.scratch.ensure(&self.sizes, d);
+        ws
+    }
+
+    fn return_workspace(&self, ws: Workspace) {
+        self.workspaces.lock().unwrap().push(ws);
+    }
+
+    fn checkout_scratch(&self, d: usize) -> NodeScratch {
+        let mut s = self.fork_scratch.lock().unwrap().pop().unwrap_or_else(NodeScratch::new);
+        s.ensure(&self.sizes, d);
+        s
+    }
+
+    fn return_scratch(&self, s: NodeScratch) {
+        self.fork_scratch.lock().unwrap().push(s);
     }
 }
 
@@ -192,10 +338,15 @@ impl IntegratorTree {
             leaf_threshold: t,
             id: IT_IDS.fetch_add(1, Ordering::Relaxed),
             plan_builds: AtomicUsize::new(0),
+            slot_src: Vec::new(),
+            root_slot: Vec::new(),
+            total_slots: 0,
+            agg_rows_max: 0,
         };
         let mut scratch = SeparatorScratch::new(n);
         let verts: Vec<u32> = (0..n as u32).collect();
         it.build(tree, verts, &mut scratch);
+        it.assign_slots();
         it
     }
 
@@ -224,9 +375,90 @@ impl IntegratorTree {
         self.nodes.push(ItNode::Leaf { size: 0, dmat: Vec::new() }); // placeholder
         let left_child = self.build(tree, s.left, scratch);
         let right_child = self.build(tree, s.right, scratch);
-        self.nodes[idx] =
-            ItNode::Internal { size: verts.len(), left_child, right_child, left, right };
+        self.nodes[idx] = ItNode::Internal {
+            size: verts.len(),
+            left_child,
+            right_child,
+            left,
+            right,
+            // Filled by the `assign_slots` post-pass.
+            lslots: 0,
+            rslots: 0,
+            left_slot: Vec::new(),
+            right_slot: Vec::new(),
+        };
         idx
+    }
+
+    /// Post-build pass: compute the nested-dissection slot layout. Every
+    /// internal node's region is `[left child region][right child
+    /// region]` with the pivot duplicated into both (the children share
+    /// it), so child regions are disjoint *contiguous* ranges and the
+    /// prepared recursion forks with `split_at_mut` instead of
+    /// gather/scatter. Total slots = `n + #internal nodes ≤ 2n − 1`.
+    fn assign_slots(&mut self) {
+        let mut slot_src: Vec<u32> = Vec::new();
+        if self.n > 0 {
+            let verts: Vec<u32> = (0..self.n as u32).collect();
+            // The root's node-local order is the global vertex order, so
+            // its vertex→slot map is exactly the un-permute map.
+            self.root_slot = self.assign_slots_rec(0, &verts, &mut slot_src);
+        }
+        self.total_slots = slot_src.len();
+        self.slot_src = slot_src;
+        let mut agg = 0usize;
+        for node in &self.nodes {
+            if let ItNode::Internal { left, right, .. } = node {
+                agg = agg.max(2 * (left.d.len() + right.d.len()));
+            }
+        }
+        self.agg_rows_max = agg;
+    }
+
+    /// Assign the slot range of node `idx` (covering the global vertices
+    /// `verts`, in node-local order), appending to `slot_src` in DFS
+    /// order so child regions are contiguous. Returns the node's
+    /// vertex→slot map (node-local index → slot offset within the
+    /// node's region; the shared pivot resolves to its *left* copy —
+    /// the side that produces its output row).
+    fn assign_slots_rec(&mut self, idx: usize, verts: &[u32], slot_src: &mut Vec<u32>) -> Vec<u32> {
+        let (left_child, right_child, left_ids, right_ids) = match &self.nodes[idx] {
+            ItNode::Leaf { size, .. } => {
+                debug_assert_eq!(*size, verts.len());
+                slot_src.extend_from_slice(verts);
+                return (0..verts.len() as u32).collect();
+            }
+            ItNode::Internal { left_child, right_child, left, right, .. } => {
+                (*left_child, *right_child, left.ids.clone(), right.ids.clone())
+            }
+        };
+        let left_verts: Vec<u32> = left_ids.iter().map(|&i| verts[i as usize]).collect();
+        let lstart = slot_src.len();
+        let lmap = self.assign_slots_rec(left_child, &left_verts, slot_src);
+        let lslots = slot_src.len() - lstart;
+        let right_verts: Vec<u32> = right_ids.iter().map(|&i| verts[i as usize]).collect();
+        let rstart = slot_src.len();
+        let rmap = self.assign_slots_rec(right_child, &right_verts, slot_src);
+        let rslots = slot_src.len() - rstart;
+        let right_slot: Vec<u32> = rmap.iter().map(|&s| s + lslots as u32).collect();
+        let mut vmap = vec![0u32; verts.len()];
+        for (i, &node_local) in right_ids.iter().enumerate() {
+            vmap[node_local as usize] = right_slot[i];
+        }
+        // Left wins for the pivot: its output row comes from the left pass.
+        for (i, &node_local) in left_ids.iter().enumerate() {
+            vmap[node_local as usize] = lmap[i];
+        }
+        match &mut self.nodes[idx] {
+            ItNode::Internal { lslots: ls, rslots: rs, left_slot, right_slot: rsl, .. } => {
+                *ls = lslots;
+                *rs = rslots;
+                *left_slot = lmap;
+                *rsl = right_slot;
+            }
+            ItNode::Leaf { .. } => unreachable!("leaf handled above"),
+        }
+        vmap
     }
 
     /// Fallible integration: `out[v] = Σ_u f(dist(v,u))·x[u]` for a
@@ -377,6 +609,24 @@ impl IntegratorTree {
             }
         }
         self.plan_builds.fetch_add(built, Ordering::Relaxed);
+        // Freeze the workspace arena sizes: slab/aggregate rows from the
+        // tree structure, FFT length / Chebyshev rank from the maxima
+        // over the plans just built.
+        let mut sizes = WorkspaceSizes {
+            slab_rows: self.total_slots,
+            agg_rows: self.agg_rows_max,
+            fft_len: 0,
+            cheb_rank: 0,
+        };
+        for node in &nodes {
+            if let PreparedNode::Internal { into_left, into_right, .. } = node {
+                for plan in [into_left, into_right] {
+                    let (fft, cheb) = plan_scratch_demand(plan);
+                    sizes.fft_len = sizes.fft_len.max(fft);
+                    sizes.cheb_rank = sizes.cheb_rank.max(cheb);
+                }
+            }
+        }
         Ok(PreparedPlans {
             f: f.clone(),
             policy: policy.clone(),
@@ -384,12 +634,25 @@ impl IntegratorTree {
             n: self.n,
             tree_id: self.id,
             plans_built: built,
+            sizes,
+            workspaces: Mutex::new(Vec::new()),
+            fork_scratch: Mutex::new(Vec::new()),
         })
     }
 
     /// Integrate using plans frozen by [`IntegratorTree::prepare`]:
     /// no planning work happens on this path (the `plan_builds` counter
     /// does not move). Panic-free on malformed input.
+    ///
+    /// This is the *workspace* hot path: the field is permuted once into
+    /// the nested-dissection slot layout, the recursion runs on disjoint
+    /// slab sub-slices with all scratch drawn from the plan's reusable
+    /// arenas, and the result is un-permuted once. A warmed call
+    /// allocates only the returned matrix (use
+    /// [`IntegratorTree::integrate_prepared_into`] for the
+    /// zero-allocation variant). Output is bit-identical to the legacy
+    /// per-node-allocation path, kept as
+    /// [`IntegratorTree::integrate_prepared_legacy`].
     pub fn integrate_prepared(
         &self,
         x: &Matrix,
@@ -407,6 +670,98 @@ impl IntegratorTree {
         plans: &PreparedPlans,
         pool: &WorkPool,
     ) -> Result<Matrix, FtfiError> {
+        let mut out = Matrix::zeros(self.n, x.cols());
+        self.integrate_prepared_into_pooled(x, plans, pool, &mut out)?;
+        Ok(out)
+    }
+
+    /// Zero-allocation prepared integration: writes into a
+    /// caller-provided `n×d` matrix. On a warmed plan handle (one prior
+    /// call with the same channel width) this performs **no heap
+    /// allocation** on the serial path — pinned by the counting-allocator
+    /// test in `tests/hotpath_alloc.rs`.
+    pub fn integrate_prepared_into(
+        &self,
+        x: &Matrix,
+        plans: &PreparedPlans,
+        out: &mut Matrix,
+    ) -> Result<(), FtfiError> {
+        self.integrate_prepared_into_pooled(x, plans, &WorkPool::serial(), out)
+    }
+
+    /// [`IntegratorTree::integrate_prepared_into`] on a work pool. The
+    /// parallel path is allocation-free in steady state too, once the
+    /// fork-scratch stock has grown to the peak fork concurrency.
+    pub fn integrate_prepared_into_pooled(
+        &self,
+        x: &Matrix,
+        plans: &PreparedPlans,
+        pool: &WorkPool,
+        out: &mut Matrix,
+    ) -> Result<(), FtfiError> {
+        if plans.tree_id != self.id {
+            return Err(FtfiError::InvalidInput(
+                "prepared plans were built for a different IntegratorTree".to_string(),
+            ));
+        }
+        if x.rows() != self.n {
+            return Err(FtfiError::ShapeMismatch { expected: self.n, got: x.rows() });
+        }
+        if out.rows() != self.n || out.cols() != x.cols() {
+            return Err(FtfiError::InvalidInput(format!(
+                "output buffer is {}x{}, expected {}x{}",
+                out.rows(),
+                out.cols(),
+                self.n,
+                x.cols()
+            )));
+        }
+        if self.n == 0 {
+            return Ok(());
+        }
+        let d = x.cols();
+        let rows = self.total_slots * d;
+        let mut ws = plans.checkout_workspace(d);
+        {
+            let Workspace { slab_in, slab_out, scratch } = &mut ws;
+            // Permute the field once into the nested-dissection layout:
+            // every IT node then sees its vertex set as one contiguous
+            // row range (pivots are duplicated into both child regions).
+            for (slot, &src) in self.slot_src.iter().enumerate() {
+                slab_in[slot * d..(slot + 1) * d].copy_from_slice(x.row(src as usize));
+            }
+            let (sin, sout) = (&slab_in[..rows], &mut slab_out[..rows]);
+            self.integrate_ws(0, sin, sout, d, plans, scratch, pool);
+            // Un-permute once: vertex v's output lives at its root slot.
+            for (v, &slot) in self.root_slot.iter().enumerate() {
+                let s = slot as usize * d;
+                out.row_mut(v).copy_from_slice(&slab_out[s..s + d]);
+            }
+        }
+        plans.return_workspace(ws);
+        Ok(())
+    }
+
+    /// The pre-workspace (PR-3) prepared execution path: gathers rows
+    /// and allocates fresh aggregate / cross matrices at every internal
+    /// node. Kept as the bit-identity reference for the workspace path
+    /// (`tests/ftfi_equivalence.rs`) and as the "old" side of the
+    /// `hotpath_alloc` ablation; not used by the serving stack.
+    pub fn integrate_prepared_legacy(
+        &self,
+        x: &Matrix,
+        plans: &PreparedPlans,
+    ) -> Result<Matrix, FtfiError> {
+        self.integrate_prepared_legacy_pooled(x, plans, &WorkPool::serial())
+    }
+
+    /// [`IntegratorTree::integrate_prepared_legacy`] on a work pool.
+    pub fn integrate_prepared_legacy_pooled(
+        &self,
+        x: &Matrix,
+        plans: &PreparedPlans,
+        pool: &WorkPool,
+    ) -> Result<Matrix, FtfiError> {
         if plans.tree_id != self.id {
             return Err(FtfiError::InvalidInput(
                 "prepared plans were built for a different IntegratorTree".to_string(),
@@ -418,7 +773,7 @@ impl IntegratorTree {
         if self.n == 0 {
             return Ok(Matrix::zeros(0, x.cols()));
         }
-        Ok(self.integrate_prepared_node(0, x, plans, pool))
+        Ok(self.integrate_prepared_node_legacy(0, x, plans, pool))
     }
 
     fn integrate_node(
@@ -433,7 +788,7 @@ impl IntegratorTree {
             ItNode::Leaf { size, dmat } => {
                 Ok(leaf_apply(*size, x, |k| f.eval(dmat[k])))
             }
-            ItNode::Internal { size, left_child, right_child, left, right } => {
+            ItNode::Internal { size, left_child, right_child, left, right, .. } => {
                 let d = x.cols();
                 let xl = x.gather_rows(&left.ids);
                 let xr = x.gather_rows(&right.ids);
@@ -478,7 +833,7 @@ impl IntegratorTree {
         }
     }
 
-    fn integrate_prepared_node(
+    fn integrate_prepared_node_legacy(
         &self,
         idx: usize,
         x: &Matrix,
@@ -490,7 +845,7 @@ impl IntegratorTree {
                 leaf_apply(*size, x, |k| fmat[k])
             }
             (
-                ItNode::Internal { size, left_child, right_child, left, right },
+                ItNode::Internal { size, left_child, right_child, left, right, .. },
                 PreparedNode::Internal { into_left, into_right, left_fd, right_fd },
             ) => {
                 let d = x.cols();
@@ -499,13 +854,13 @@ impl IntegratorTree {
                 // Same fork rule and assembly order as `integrate_node`.
                 let (ol, or_) = if *size >= PAR_FORK_MIN_SIZE && pool.threads() > 1 {
                     pool.join(
-                        || self.integrate_prepared_node(*left_child, &xl, plans, pool),
-                        || self.integrate_prepared_node(*right_child, &xr, plans, pool),
+                        || self.integrate_prepared_node_legacy(*left_child, &xl, plans, pool),
+                        || self.integrate_prepared_node_legacy(*right_child, &xr, plans, pool),
                     )
                 } else {
                     (
-                        self.integrate_prepared_node(*left_child, &xl, plans, pool),
-                        self.integrate_prepared_node(*right_child, &xr, plans, pool),
+                        self.integrate_prepared_node_legacy(*left_child, &xl, plans, pool),
+                        self.integrate_prepared_node_legacy(*right_child, &xr, plans, pool),
                     )
                 };
                 let xr_agg = aggregate(right, &xr);
@@ -523,15 +878,105 @@ impl IntegratorTree {
         }
     }
 
+    /// The workspace recursion: `input`/`out` are this node's slot
+    /// region (`node_slots × d`, row-major). Child regions are disjoint
+    /// contiguous prefix/suffix slices, so the fork borrows them with
+    /// one `split_at_mut`; all aggregate/cross scratch comes from
+    /// `scratch`. Arithmetic (values *and* reduction order) is identical
+    /// to [`IntegratorTree::integrate_prepared_node_legacy`], so outputs
+    /// are bit-identical — only the memory layout changed.
+    #[allow(clippy::too_many_arguments)]
+    fn integrate_ws(
+        &self,
+        idx: usize,
+        input: &[f64],
+        out: &mut [f64],
+        d: usize,
+        plans: &PreparedPlans,
+        scratch: &mut NodeScratch,
+        pool: &WorkPool,
+    ) {
+        match (&self.nodes[idx], &plans.nodes[idx]) {
+            (ItNode::Leaf { size, .. }, PreparedNode::Leaf { fmat }) => {
+                leaf_apply_into(*size, d, fmat, input, out);
+            }
+            (
+                ItNode::Internal {
+                    size,
+                    left_child,
+                    right_child,
+                    left,
+                    right,
+                    lslots,
+                    left_slot,
+                    right_slot,
+                    ..
+                },
+                PreparedNode::Internal { into_left, into_right, left_fd, right_fd },
+            ) => {
+                let (in_l, in_r) = input.split_at(lslots * d);
+                let (out_l, out_r) = out.split_at_mut(lslots * d);
+                // Same fork rule as the legacy path; the forked branch
+                // checks its own task scratch out of the plan's pool
+                // (slabs are shared through the disjoint sub-slices).
+                if *size >= PAR_FORK_MIN_SIZE && pool.threads() > 1 {
+                    pool.join(
+                        || self.integrate_ws(*left_child, in_l, out_l, d, plans, scratch, pool),
+                        || {
+                            let mut fork = plans.checkout_scratch(d);
+                            let rc = *right_child;
+                            self.integrate_ws(rc, in_r, out_r, d, plans, &mut fork, pool);
+                            plans.return_scratch(fork);
+                        },
+                    );
+                } else {
+                    self.integrate_ws(*left_child, in_l, out_l, d, plans, scratch, pool);
+                    self.integrate_ws(*right_child, in_r, out_r, d, plans, scratch, pool);
+                }
+                // Aggregates and cross products live in the bump arena:
+                // the children are done (their arena use is over), the
+                // parent's combine has not started — only this node's
+                // rows are live per task.
+                let ll = left.d.len();
+                let lr = right.d.len();
+                let NodeScratch { agg, cross } = scratch;
+                let (xl_agg, rest) = agg[..2 * (ll + lr) * d].split_at_mut(ll * d);
+                let (xr_agg, rest) = rest.split_at_mut(lr * d);
+                let (cr, cl) = rest.split_at_mut(ll * d);
+                aggregate_into(right, right_slot, input, d, xr_agg);
+                aggregate_into(left, left_slot, input, d, xl_agg);
+                apply_plan_into(
+                    into_left, &plans.f, &left.d, &right.d, xr_agg, d, cr, &plans.policy, cross,
+                );
+                apply_plan_into(
+                    into_right, &plans.f, &right.d, &left.d, xl_agg, d, cl, &plans.policy, cross,
+                );
+                combine_sides_into(
+                    d, left, right, left_slot, right_slot, out, cr, cl, xl_agg, xr_agg, left_fd,
+                    right_fd,
+                );
+            }
+            _ => unreachable!("prepared plans desynced from the IntegratorTree arena"),
+        }
+    }
+
     /// Structure statistics.
     pub fn stats(&self) -> ItStats {
         let mut st = ItStats {
             nodes: self.nodes.len(),
             plan_builds: self.plan_builds.load(Ordering::Relaxed),
+            workspace_bytes: (2 * self.total_slots + self.agg_rows_max)
+                * std::mem::size_of::<f64>(),
             ..Default::default()
         };
         self.stats_rec(0, 1, &mut st);
         st
+    }
+
+    /// Total slots of the nested-dissection layout
+    /// (`n + #internal nodes`).
+    pub fn total_slots(&self) -> usize {
+        self.total_slots
     }
 
     fn stats_rec(&self, idx: usize, depth: usize, st: &mut ItStats) {
@@ -620,6 +1065,95 @@ fn combine_sides(
         }
     }
     out
+}
+
+/// [`leaf_apply`] on slot-region slices: a leaf's slot range is its
+/// vertex set in leaf-local order (the map is the identity), so the
+/// dense multiply runs directly on the contiguous slab rows.
+/// Bit-identical to [`leaf_apply`].
+fn leaf_apply_into(size: usize, d: usize, fmat: &[f64], input: &[f64], out: &mut [f64]) {
+    let out = &mut out[..size * d];
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for i in 0..size {
+        let orow = &mut out[i * d..(i + 1) * d];
+        for j in 0..size {
+            let c = fmat[i * size + j];
+            if c == 0.0 {
+                continue;
+            }
+            for (o, &v) in orow.iter_mut().zip(&input[j * d..(j + 1) * d]) {
+                *o += c * v;
+            }
+        }
+    }
+}
+
+/// Eq. 3 on the slot layout: aggregate the side's field rows (fetched
+/// through its slot map) by distance group, into an arena slice.
+/// Same accumulation order over the same values as [`aggregate`] —
+/// bit-identical.
+fn aggregate_into(side: &Side, slots: &[u32], input: &[f64], d: usize, out: &mut [f64]) {
+    let l = side.d.len();
+    let out = &mut out[..l * d];
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for g in 0..l {
+        let lo = side.group_off[g] as usize;
+        let hi = side.group_off[g + 1] as usize;
+        let orow = &mut out[g * d..(g + 1) * d];
+        for &v in &side.group_items[lo..hi] {
+            let s = slots[v as usize] as usize * d;
+            for (o, &val) in orow.iter_mut().zip(&input[s..s + d]) {
+                *o += val;
+            }
+        }
+    }
+}
+
+/// [`combine_sides`] on the slot layout, *in place*: each vertex's
+/// child-recursion output already sits at its slot (the child wrote it
+/// there), so the cross contribution and pivot correction are added
+/// where the row lives — no fresh output matrix, no scatter. The update
+/// `out[s] = out[s] + cr[τ] − f(d_τ)·piv` evaluates exactly the
+/// `0 + (src + crr − coeff·piv)` of the legacy path (the leading zero
+/// add is the identity), so outputs are bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn combine_sides_into(
+    d: usize,
+    left: &Side,
+    right: &Side,
+    left_slot: &[u32],
+    right_slot: &[u32],
+    out: &mut [f64],
+    cr: &[f64],
+    cl: &[f64],
+    xl_agg: &[f64],
+    xr_agg: &[f64],
+    left_fd: &[f64],
+    right_fd: &[f64],
+) {
+    for (vloc, &tau) in left.id_d.iter().enumerate() {
+        let coeff = left_fd[tau as usize];
+        let base = left_slot[vloc] as usize * d;
+        let crr = &cr[tau as usize * d..(tau as usize + 1) * d];
+        let piv = &xr_agg[..d];
+        for c in 0..d {
+            let src = out[base + c];
+            out[base + c] = src + crr[c] - coeff * piv[c];
+        }
+    }
+    for (uloc, &tau) in right.id_d.iter().enumerate() {
+        if uloc as u32 == right.pivot {
+            continue;
+        }
+        let coeff = right_fd[tau as usize];
+        let base = right_slot[uloc] as usize * d;
+        let clr = &cl[tau as usize * d..(tau as usize + 1) * d];
+        let piv = &xl_agg[..d];
+        for c in 0..d {
+            let src = out[base + c];
+            out[base + c] = src + clr[c] - coeff * piv[c];
+        }
+    }
 }
 
 /// Distances from `pivot` to every vertex of `side_verts`, restricted to
@@ -891,6 +1425,123 @@ mod tests {
         let b = it.integrate_prepared_pooled(&x, &plans_p, &pool).unwrap();
         assert!(a == b, "pooled prepared output must be bit-identical");
         assert_eq!(plans_s.plans_built(), plans_p.plans_built());
+    }
+
+    /// The nested-dissection slot layout: `n + #internal` slots, every
+    /// leaf region lists its vertices in leaf-local order, every vertex
+    /// has a root slot that round-trips through `slot_src`, and every
+    /// original vertex appears at least once (pivots more than once).
+    #[test]
+    fn slot_layout_invariants() {
+        let mut rng = Pcg::seed(20);
+        for &n in &[1usize, 2, 5, 40, 400] {
+            let tree = random_tree(n, 0.1, 1.0, &mut rng);
+            let it = IntegratorTree::with_leaf_threshold(&tree, 8);
+            let internal = it
+                .nodes
+                .iter()
+                .filter(|nd| matches!(nd, ItNode::Internal { .. }))
+                .count();
+            assert_eq!(it.total_slots(), n + internal, "n={n}");
+            assert_eq!(it.slot_src.len(), it.total_slots());
+            assert_eq!(it.root_slot.len(), n);
+            let mut seen = vec![0usize; n];
+            for &v in &it.slot_src {
+                seen[v as usize] += 1;
+            }
+            assert!(seen.iter().all(|&c| c >= 1), "every vertex needs a slot");
+            for v in 0..n {
+                assert_eq!(
+                    it.slot_src[it.root_slot[v] as usize] as usize, v,
+                    "root slot of {v} must hold {v}"
+                );
+            }
+            // Internal regions: child sizes sum to the node's, side slot
+            // maps stay within their half.
+            for nd in &it.nodes {
+                if let ItNode::Internal { lslots, rslots, left_slot, right_slot, left, right, .. } =
+                    nd
+                {
+                    assert_eq!(left_slot.len(), left.ids.len());
+                    assert_eq!(right_slot.len(), right.ids.len());
+                    assert!(left_slot.iter().all(|&s| (s as usize) < *lslots));
+                    assert!(right_slot
+                        .iter()
+                        .all(|&s| (s as usize) >= *lslots && (s as usize) < lslots + rslots));
+                }
+            }
+        }
+    }
+
+    /// Tentpole acceptance (structure level): the workspace hot path is
+    /// **bit-identical** to the legacy per-node-allocation path, for
+    /// serial and forked recursions, repeated calls on one handle
+    /// (workspace reuse must not leak state between calls), and the
+    /// `_into` variant with a dirty output buffer.
+    #[test]
+    fn workspace_path_bit_identical_to_legacy() {
+        let mut rng = Pcg::seed(21);
+        for &(n, d) in &[(1usize, 1usize), (2, 2), (37, 3), (300, 2), (1100, 2)] {
+            let tree = random_tree(n, 0.1, 1.0, &mut rng);
+            let it = IntegratorTree::with_leaf_threshold(&tree, 16);
+            let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
+            let plans = it.prepare(&f, d, &CrossPolicy::default()).unwrap();
+            let pool = WorkPool::new(4);
+            for trial in 0..3 {
+                let x = Matrix::randn(n, d, &mut rng);
+                let want = it.integrate_prepared_legacy(&x, &plans).unwrap();
+                let got = it.integrate_prepared(&x, &plans).unwrap();
+                assert!(got == want, "n={n} d={d} trial={trial}: serial ws != legacy");
+                let got_p = it.integrate_prepared_pooled(&x, &plans, &pool).unwrap();
+                assert!(got_p == want, "n={n} d={d} trial={trial}: pooled ws != legacy");
+                let mut dirty = Matrix::from_fn(n, d, |_, _| f64::NAN);
+                it.integrate_prepared_into(&x, &plans, &mut dirty).unwrap();
+                assert!(dirty == want, "n={n} d={d} trial={trial}: into != legacy");
+            }
+        }
+    }
+
+    #[test]
+    fn integrate_prepared_into_validates_the_output_buffer() {
+        let mut rng = Pcg::seed(22);
+        let tree = random_tree(30, 0.1, 1.0, &mut rng);
+        let it = IntegratorTree::new(&tree);
+        let f = FDist::Identity;
+        let plans = it.prepare(&f, 2, &CrossPolicy::default()).unwrap();
+        let x = Matrix::randn(30, 2, &mut rng);
+        let mut wrong_rows = Matrix::zeros(29, 2);
+        assert!(matches!(
+            it.integrate_prepared_into(&x, &plans, &mut wrong_rows),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        let mut wrong_cols = Matrix::zeros(30, 3);
+        assert!(matches!(
+            it.integrate_prepared_into(&x, &plans, &mut wrong_cols),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        let mut ok = Matrix::zeros(30, 2);
+        assert!(it.integrate_prepared_into(&x, &plans, &mut ok).is_ok());
+    }
+
+    /// Workspace sizing is surfaced and consistent: the structural part
+    /// through `ItStats`, the full per-channel-width figure through
+    /// `PreparedPlans::workspace_bytes` (monotone in d, and at least the
+    /// structural slab footprint).
+    #[test]
+    fn workspace_sizing_is_pinned() {
+        let mut rng = Pcg::seed(23);
+        let tree = random_tree(500, 0.1, 1.0, &mut rng);
+        let it = IntegratorTree::with_leaf_threshold(&tree, 16);
+        let st = it.stats();
+        assert_eq!(
+            st.workspace_bytes,
+            (2 * it.total_slots() + it.agg_rows_max) * std::mem::size_of::<f64>()
+        );
+        assert!(st.workspace_bytes >= 2 * 500 * 8, "slabs cover at least 2n rows");
+        let f = FDist::inverse_quadratic(0.5);
+        let plans = it.prepare(&f, 4, &CrossPolicy::default()).unwrap();
+        assert!(plans.workspace_bytes(1) >= st.workspace_bytes);
+        assert!(plans.workspace_bytes(4) > plans.workspace_bytes(1));
     }
 
     #[test]

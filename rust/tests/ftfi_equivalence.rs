@@ -517,6 +517,125 @@ fn threads_bit_identical_across_forced_strategies() {
     assert!(applicable >= 10, "only {applicable} (f, strategy) combos were applicable");
 }
 
+/// Tentpole acceptance (PR 4): the zero-allocation workspace hot path
+/// is **bit-identical** to the legacy (pre-workspace) prepared path for
+/// every applicable forced `Strategy` × `FDist` combo, at threads 1 and
+/// 4, including the `integrate_into` surface. The nested-dissection
+/// permutation and the arena-backed kernels change *where* rows live,
+/// never the value or order of any floating-point reduction.
+#[test]
+fn workspace_prepared_path_is_bit_identical_to_legacy() {
+    let mut rng = Pcg::seed(13000);
+    // Rational weights keep the Lattice/Vandermonde paths applicable.
+    let tree = random_rational_tree(700, 3, 4, &mut rng);
+    let x = Matrix::randn(700, 2, &mut rng);
+    let fs: Vec<FDist> = vec![
+        FDist::Exponential { lambda: -0.3, scale: 1.0 },
+        FDist::inverse_quadratic(0.4),
+        FDist::gaussian(0.1),
+        FDist::ExpOverLinear { lambda: -0.2, c: 1.5 },
+        FDist::Custom(std::sync::Arc::new(|t: f64| (0.3 * t).sin() / (1.0 + 0.2 * t))),
+    ];
+    let all = [
+        Strategy::Dense,
+        Strategy::Separable,
+        Strategy::Lattice,
+        Strategy::RationalSum,
+        Strategy::Cauchy,
+        Strategy::Vandermonde,
+        Strategy::Chebyshev,
+    ];
+    let mut applicable = 0usize;
+    for f in &fs {
+        for &s in &all {
+            let policy =
+                CrossPolicy { force: Some(s), dense_cutoff: 0, ..Default::default() };
+            for threads in [1usize, 4] {
+                let tfi = TreeFieldIntegrator::builder(&tree)
+                    .threads(threads)
+                    .policy(policy.clone())
+                    .build()
+                    .unwrap();
+                let plans = match tfi.prepare_plans(f, 2) {
+                    Err(FtfiError::StrategyInapplicable { .. }) => continue,
+                    Err(e) => panic!("{f:?} forced {s:?}: unexpected error {e}"),
+                    Ok(p) => p,
+                };
+                applicable += 1;
+                let want = tfi.integrate_prepared_legacy(&x, &plans).unwrap();
+                let got = tfi.integrate_prepared(&x, &plans).unwrap();
+                assert!(
+                    got == want,
+                    "{f:?} forced {s:?} threads={threads}: workspace path != legacy"
+                );
+                let mut into = Matrix::zeros(700, 2);
+                tfi.integrate_prepared_into(&x, &plans, &mut into).unwrap();
+                assert!(
+                    into == want,
+                    "{f:?} forced {s:?} threads={threads}: integrate_into != legacy"
+                );
+            }
+        }
+    }
+    assert!(applicable >= 24, "only {applicable} (f, strategy, threads) combos applicable");
+}
+
+/// The workspace hot path stays bit-identical to the legacy reference
+/// through the higher-level serving surfaces: the graph (MST-metric)
+/// prepared handle, the prepared batch axis, and the tree-ensemble
+/// average (whose re-planning path runs the legacy arithmetic).
+#[test]
+fn workspace_path_bit_identical_through_graph_batch_and_ensemble() {
+    use ftfi::ftfi::ensemble::EnsembleMethod;
+    use ftfi::EnsembleFieldIntegrator;
+    let mut rng = Pcg::seed(13100);
+
+    // Graph (MST-metric) path, threads 1 and 4.
+    let g = generators::path_plus_random_edges(600, 300, &mut rng);
+    let xg = Matrix::randn(600, 2, &mut rng);
+    let f = FDist::inverse_quadratic(0.5);
+    for threads in [1usize, 4] {
+        let gfi = ftfi::GraphFieldIntegrator::builder(&g).threads(threads).build().unwrap();
+        let tfi = gfi.tree_integrator();
+        let plans = tfi.prepare_plans(&f, 1).unwrap();
+        let want = tfi.integrate_prepared_legacy(&xg, &plans).unwrap();
+        let prepared = gfi.prepare(&f).unwrap();
+        let got = prepared.integrate(&xg).unwrap();
+        assert!(got == want, "threads={threads}: graph prepared path != legacy");
+    }
+
+    // Batch axis: every fused field equals its legacy single-field run.
+    let tfi = TreeFieldIntegrator::builder(&minimum_spanning_tree(&g)).threads(4).build().unwrap();
+    let plans = tfi.prepare_plans(&f, 2).unwrap();
+    let prepared = tfi.prepare_with_channels(&f, 2).unwrap();
+    let fields: Vec<Matrix> = (0..5).map(|_| Matrix::randn(600, 2, &mut rng)).collect();
+    let refs: Vec<&Matrix> = fields.iter().collect();
+    let batch = prepared.integrate_batch(&refs).unwrap();
+    for (x_i, got) in fields.iter().zip(&batch) {
+        let want = tfi.integrate_prepared_legacy(x_i, &plans).unwrap();
+        assert!(*got == want, "batch output must be bit-identical to the legacy path");
+    }
+
+    // Ensemble: the prepared (workspace) average equals the re-planning
+    // average, whose per-tree arithmetic is the legacy reduction order.
+    let xe = Matrix::randn(300, 2, &mut rng);
+    let ge = generators::path_plus_random_edges(300, 150, &mut rng);
+    for threads in [1usize, 4] {
+        let ens = EnsembleFieldIntegrator::builder(&ge)
+            .trees(3)
+            .seed(42)
+            .method(EnsembleMethod::Frt)
+            .threads(threads)
+            .build()
+            .unwrap();
+        let fe = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let prepared = ens.prepare(&fe).unwrap();
+        let got = prepared.integrate(&xe).unwrap();
+        let want = ens.try_integrate(&fe, &xe).unwrap();
+        assert!(got == want, "threads={threads}: ensemble prepared path != re-planning");
+    }
+}
+
 /// Acceptance: `prepare(&f)` builds every plan exactly once; k repeated
 /// `integrate` calls reuse them (the `plan_builds` counter in `ItStats`
 /// does not move) and stay correct against the brute oracle.

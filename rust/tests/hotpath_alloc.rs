@@ -1,0 +1,123 @@
+//! Counting-allocator pin for the zero-allocation prepared hot path.
+//!
+//! Lives in its own test binary because it installs a process-wide
+//! `#[global_allocator]` (the shared `bench_util::CountingAlloc`). The
+//! counter is **thread-local**, so the other tests in this binary (and
+//! libtest's own threads) never pollute a measurement: everything a
+//! warmed serial `integrate_into` does runs on the calling thread, and
+//! that thread's counter must not move.
+//!
+//! The workspace design this pins (see `DESIGN.md` §Memory layout):
+//! `prepare` sizes slab/arena/FFT/Chebyshev scratch once from the tree
+//! shape and the built plans; `integrate_into` checks a workspace out of
+//! the plan's pool, permutes the field once into the nested-dissection
+//! layout, recurses on slices, and un-permutes once. After one warming
+//! call per channel width there is nothing left to allocate.
+
+use ftfi::bench_util::{thread_allocs as allocs, CountingAlloc};
+use ftfi::ftfi::cordial::{CrossPolicy, Strategy};
+use ftfi::ftfi::functions::FDist;
+use ftfi::graph::generators::{random_rational_tree, random_tree};
+use ftfi::linalg::matrix::Matrix;
+use ftfi::ml::rng::Pcg;
+use ftfi::tree::Tree;
+use ftfi::TreeFieldIntegrator;
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Build a `threads(1)` integrator (the whole call runs on this thread,
+/// so the thread-local count sees all of it), warm the workspace pool,
+/// then pin: `integrate_into` allocates nothing, `integrate` allocates
+/// exactly the returned matrix.
+fn assert_zero_alloc(name: &str, tree: &Tree, f: &FDist, policy: CrossPolicy, d: usize) {
+    let tfi = TreeFieldIntegrator::builder(tree)
+        .threads(1)
+        .policy(policy)
+        .build()
+        .expect("valid tree");
+    let prepared = tfi.prepare_with_channels(f, d).expect("plannable f");
+    let mut rng = Pcg::seed(99);
+    let x = Matrix::randn(tree.n(), d, &mut rng);
+    let mut out = Matrix::zeros(tree.n(), d);
+    // Warm: the first call builds the arenas, the second proves reuse.
+    prepared.integrate_into(&x, &mut out).expect("integrate");
+    prepared.integrate_into(&x, &mut out).expect("integrate");
+
+    let before = allocs();
+    prepared.integrate_into(&x, &mut out).expect("integrate");
+    let during = allocs() - before;
+    assert_eq!(during, 0, "{name}: warmed integrate_into performed {during} heap allocations");
+
+    let before = allocs();
+    let y = prepared.integrate(&x).expect("integrate");
+    let during = allocs() - before;
+    assert!(
+        during <= 1,
+        "{name}: warmed integrate performed {during} heap allocations (expected ≤ 1: \
+         the returned matrix)"
+    );
+    assert!(y == out, "{name}: integrate and integrate_into must agree bitwise");
+}
+
+/// Default-policy smooth kernel: the large cross blocks plan through
+/// Chebyshev, the small ones densely — the serving workload shape of
+/// the `hotpath_alloc` ablation.
+#[test]
+fn chebyshev_hot_path_is_allocation_free_when_warmed() {
+    let mut rng = Pcg::seed(1);
+    let tree = random_tree(1200, 0.1, 1.0, &mut rng);
+    assert_zero_alloc(
+        "chebyshev",
+        &tree,
+        &FDist::inverse_quadratic(0.5),
+        CrossPolicy::default(),
+        2,
+    );
+}
+
+/// Forced-lattice on a rational-weight tree: every internal node runs
+/// the FFT multiplier, exercising the cached twiddle tables, the cached
+/// lattice index maps and the complex scratch arena.
+#[test]
+fn lattice_hot_path_is_allocation_free_when_warmed() {
+    let mut rng = Pcg::seed(2);
+    let tree = random_rational_tree(900, 3, 4, &mut rng);
+    let f = FDist::Custom(std::sync::Arc::new(|t: f64| (0.4 * t).sin() / (1.0 + 0.3 * t)));
+    let policy =
+        CrossPolicy { force: Some(Strategy::Lattice), dense_cutoff: 0, ..Default::default() };
+    assert_zero_alloc("lattice", &tree, &f, policy, 3);
+}
+
+/// Forced-separable exponential kernel: the rank-1 outer-product path
+/// with its arena accumulator.
+#[test]
+fn separable_hot_path_is_allocation_free_when_warmed() {
+    let mut rng = Pcg::seed(3);
+    let tree = random_tree(800, 0.1, 1.0, &mut rng);
+    let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+    let policy =
+        CrossPolicy { force: Some(Strategy::Separable), dense_cutoff: 0, ..Default::default() };
+    assert_zero_alloc("separable", &tree, &f, policy, 1);
+}
+
+/// Arena sizing is surfaced so regressions in workspace accounting are
+/// visible: the structural part through `ItStats::workspace_bytes`, the
+/// full figure (monotone in the channel width) through the prepared
+/// handle.
+#[test]
+fn workspace_sizing_is_surfaced_and_monotone() {
+    let mut rng = Pcg::seed(4);
+    let tree = random_tree(600, 0.1, 1.0, &mut rng);
+    let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().unwrap();
+    let st = tfi.stats();
+    assert!(
+        st.workspace_bytes >= 2 * 600 * std::mem::size_of::<f64>(),
+        "slabs must cover at least 2n single-channel rows, got {}",
+        st.workspace_bytes
+    );
+    let prepared = tfi.prepare_with_channels(&FDist::inverse_quadratic(0.5), 1).unwrap();
+    assert!(prepared.workspace_bytes(1) >= st.workspace_bytes);
+    assert!(prepared.workspace_bytes(4) > prepared.workspace_bytes(1));
+    assert!(prepared.workspace_bytes(8) > prepared.workspace_bytes(4));
+}
