@@ -22,12 +22,17 @@
 //! - zero-allocation prepared hot path (legacy per-node allocation vs
 //!   nested-dissection workspace): wall clock + allocations/call, with
 //!   a pre-timing bit-identity assert and `BENCH_hotpath.json`;
+//! - streaming delta integration (sparse k-row update vs full prepared
+//!   re-integration, k ∈ {1, 16, 256, n}): wall clock + max-abs drift,
+//!   with pre-timing superposition / bit-identity asserts and
+//!   `BENCH_delta.json`;
 //!
 //! Run: `cargo bench --bench ablations`. The CI bench-smoke job runs
 //! `cargo bench --bench ablations -- --quick`, which executes only the
-//! cheap parallel-scaling, ensemble-scaling and hot-path sweeps and
-//! emits `BENCH_parallel.json` + `BENCH_ensemble.json` +
-//! `BENCH_hotpath.json` as the perf-trajectory artifacts.
+//! cheap parallel-scaling, ensemble-scaling, hot-path and delta sweeps
+//! and emits `BENCH_parallel.json` + `BENCH_ensemble.json` +
+//! `BENCH_hotpath.json` + `BENCH_delta.json` as the perf-trajectory
+//! artifacts.
 
 use ftfi::bench_util::{banner, bench, time_once, Table};
 use ftfi::ftfi::cordial::{cross_apply, cross_apply_dense, CrossPolicy, Strategy};
@@ -416,6 +421,88 @@ fn hotpath_alloc(quick: bool) {
     println!("wrote BENCH_hotpath.json (workspace path bit-identical; allocs/call pinned)");
 }
 
+/// Tentpole bench (PR 5): streaming delta integration — the sparse
+/// k-row update path vs a full prepared re-integration on the n = 4000
+/// serving metric, k ∈ {1, 16, 256, n}. Before timing, every k asserts
+/// the superposition identity (`base + Δout` vs a full recompute of the
+/// updated field, max-abs drift reported) and the k = n degenerate case
+/// asserts **bit-identity** with a plain prepared integration. Always
+/// writes `BENCH_delta.json` for the CI artifact / perf trajectory.
+/// Acceptance: ≥ 5x wall-clock for k = 1.
+fn delta_scaling(quick: bool) {
+    banner("Ablation: streaming delta vs full re-integration (n = 4000, threads = 1)");
+    let mut rng = Pcg::seed(51);
+    let n = 4000;
+    let d = 4;
+    let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+    let tree = minimum_spanning_tree(&g);
+    let f = FDist::inverse_quadratic(0.5);
+    let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().expect("valid tree");
+    let plans = tfi.prepare_plans(&f, d).expect("plannable f");
+    let x = Matrix::randn(n, d, &mut rng);
+    let mut base = Matrix::zeros(n, d);
+    tfi.integrate_prepared_into(&x, &plans, &mut base).expect("base integrate");
+    let (warmup, runs) = if quick { (1, 3) } else { (2, 7) };
+    let table = Table::new(
+        &["k", "delta (ms)", "full (ms)", "speedup", "max abs drift", "nodes visited"],
+        &[6, 11, 10, 8, 14, 14],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for &k in &[1usize, 16, 256, n] {
+        let (rows, dx) = ftfi::bench_util::sparse_delta(n, d, k, &mut rng);
+        let rows = &rows[..];
+        let mut x2 = x.clone();
+        x2.axpy(1.0, &dx);
+        // Equivalence gates before anything is timed.
+        let full = tfi.integrate_prepared(&x2, &plans).expect("full");
+        let dout = tfi.integrate_delta_prepared(rows, &dx, &plans).expect("delta");
+        let mut approx = base.clone();
+        approx.axpy(1.0, &dout);
+        let drift = approx.max_abs_diff(&full);
+        let rel = drift / (1.0 + full.frobenius());
+        assert!(rel < 1e-8, "k={k}: superposition drifted to rel {rel}");
+        if k == n {
+            let want = tfi.integrate_prepared(&dx, &plans).expect("full of delta");
+            assert!(dout == want, "k=n delta must be bit-identical to integrate(Δ)");
+        }
+        let visited_before = tfi.stats().delta_nodes_visited;
+        let mut dbuf = Matrix::zeros(n, d);
+        let mut fbuf = Matrix::zeros(n, d);
+        let t_delta = bench(warmup, runs, || {
+            tfi.integrate_delta_prepared_into(rows, &dx, &plans, &mut dbuf).expect("delta")
+        });
+        let delta_visits = tfi.stats().delta_nodes_visited - visited_before;
+        let per_call_visits = delta_visits / (warmup + runs);
+        let t_full = bench(warmup, runs, || {
+            tfi.integrate_prepared_into(&x2, &plans, &mut fbuf).expect("full")
+        });
+        let speedup = t_full.median / t_delta.median.max(1e-12);
+        table.row(&[
+            k.to_string(),
+            format!("{:.3}", t_delta.median * 1e3),
+            format!("{:.3}", t_full.median * 1e3),
+            format!("{speedup:.2}x"),
+            format!("{drift:.2e}"),
+            per_call_visits.to_string(),
+        ]);
+        json_rows.push(format!(
+            "    {{\"k\": {k}, \"delta_s\": {:.6}, \"full_s\": {:.6}, \
+             \"speedup\": {speedup:.3}, \"max_abs_drift\": {drift:.3e}, \
+             \"nodes_visited\": {per_call_visits}}}",
+            t_delta.median, t_full.median
+        ));
+    }
+    let mut json = String::from("{\n  \"bench\": \"delta_scaling\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n}, \"channels\": {d}, \"threads\": 1, \"quick\": {quick},\n"
+    ));
+    json.push_str("  \"superposition_asserted\": true,\n  \"results\": [\n");
+    json.push_str(&json_rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    std::fs::write("BENCH_delta.json", &json).expect("write BENCH_delta.json");
+    println!("wrote BENCH_delta.json (equivalence asserted before timing)");
+}
+
 fn strategy_crossover() {
     banner("Ablation: cross-multiplier strategies, C in R^{k x l}, d=4");
     let table =
@@ -562,6 +649,7 @@ fn main() {
         parallel_scaling(true);
         ensemble_scaling(true);
         hotpath_alloc(true);
+        delta_scaling(true);
         return;
     }
     leaf_threshold_sweep();
@@ -569,6 +657,7 @@ fn main() {
     parallel_scaling(false);
     ensemble_scaling(false);
     hotpath_alloc(false);
+    delta_scaling(false);
     strategy_crossover();
     rff_sweep();
     fig9_cubes();

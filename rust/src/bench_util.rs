@@ -134,6 +134,32 @@ pub fn banner(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// `k` distinct vertex rows (partial Fisher–Yates over `0..n`) plus a
+/// dense `n×d` delta field supported on them — the sparse-update
+/// workload shape shared by the `delta_scaling` ablation, the
+/// `integrate --delta-rows` CLI route and the delta test harnesses.
+pub fn sparse_delta(
+    n: usize,
+    d: usize,
+    k: usize,
+    rng: &mut crate::ml::rng::Pcg,
+) -> (Vec<u32>, crate::linalg::matrix::Matrix) {
+    let k = k.min(n);
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    for i in 0..k {
+        let j = i + rng.below(n - i);
+        perm.swap(i, j);
+    }
+    perm.truncate(k);
+    let mut dx = crate::linalg::matrix::Matrix::zeros(n, d);
+    for &v in &perm {
+        for c in 0..d {
+            dx.set(v as usize, c, rng.normal());
+        }
+    }
+    (perm, dx)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -5,8 +5,9 @@
 //!
 //! - `--key=value` always binds `value` to `key` (the safe spelling).
 //! - Known boolean flags ([`BOOL_FLAGS`]: `--verbose`, `--quiet`,
-//!   `--unmasked`) are value-free and never consume the next token —
-//!   `serve --verbose input.txt` keeps `input.txt` positional.
+//!   `--unmasked`, `--streaming`) are value-free and never consume the
+//!   next token — `serve --verbose input.txt` keeps `input.txt`
+//!   positional.
 //! - Any other `--flag` consumes the next token as its value unless that
 //!   token starts with `--`.
 
@@ -14,7 +15,7 @@ use std::collections::HashMap;
 
 /// Flags that never take a value: `--verbose input.txt` must not swallow
 /// the positional. Extend via [`Args::parse_with_bool_flags`].
-pub const BOOL_FLAGS: &[&str] = &["verbose", "quiet", "unmasked"];
+pub const BOOL_FLAGS: &[&str] = &["verbose", "quiet", "unmasked", "streaming"];
 
 /// Parsed command line.
 #[derive(Debug, Default)]
@@ -129,6 +130,11 @@ mod tests {
         let a = parse("serve --verbose input.txt");
         assert!(a.get_flag("verbose"));
         assert_eq!(a.positional, vec!["input.txt"]);
+        // `--streaming` is value-free too: the following option keeps
+        // its own value.
+        let s = parse("serve --streaming --requests 10");
+        assert!(s.get_flag("streaming"));
+        assert_eq!(s.get_usize("requests", 0), 10);
         let b = parse("train --quiet data.bin --unmasked out.bin");
         assert!(b.get_flag("quiet"));
         assert!(b.get_flag("unmasked"));

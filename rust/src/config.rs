@@ -261,6 +261,34 @@ impl EnsembleConfig {
     }
 }
 
+/// Typed streaming-serving configuration (`[streaming]` section): the
+/// knobs of the per-session delta-update path
+/// ([`crate::coordinator::StreamingFieldExecutor`]).
+#[derive(Debug, Clone)]
+pub struct StreamingConfig {
+    /// Drift policy: a session performs a full bit-exact re-integration
+    /// every this many updates (`0` = delta-only, drift unbounded).
+    pub refresh_every: usize,
+    /// Session slots per streaming executor.
+    pub max_sessions: usize,
+}
+
+impl Default for StreamingConfig {
+    fn default() -> Self {
+        StreamingConfig { refresh_every: 64, max_sessions: 16 }
+    }
+}
+
+impl StreamingConfig {
+    pub fn from_config(c: &Config) -> Self {
+        let d = StreamingConfig::default();
+        StreamingConfig {
+            refresh_every: c.get_usize("streaming.refresh_every", d.refresh_every),
+            max_sessions: c.get_usize("streaming.max_sessions", d.max_sessions),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +361,21 @@ mod tests {
         // Unknown family is a typed error.
         let bad = EnsembleConfig { method: "steiner".into(), ..Default::default() };
         assert!(matches!(bad.to_method(), Err(FtfiError::InvalidInput(_))));
+    }
+
+    #[test]
+    fn streaming_config_roundtrip() {
+        let c = Config::parse("[streaming]\nrefresh_every = 8\nmax_sessions = 3\n").unwrap();
+        let sc = StreamingConfig::from_config(&c);
+        assert_eq!(sc.refresh_every, 8);
+        assert_eq!(sc.max_sessions, 3);
+        // Absent section → defaults.
+        let d = StreamingConfig::from_config(&Config::default());
+        assert_eq!(d.refresh_every, 64);
+        assert_eq!(d.max_sessions, 16);
+        // refresh_every = 0 is a legal "never refresh" setting.
+        let z = Config::parse("[streaming]\nrefresh_every = 0\n").unwrap();
+        assert_eq!(StreamingConfig::from_config(&z).refresh_every, 0);
     }
 
     #[test]

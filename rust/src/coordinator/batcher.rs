@@ -34,6 +34,22 @@ pub trait BatchExecutor: 'static {
     }
 }
 
+/// Shared executors: workers wrap one *stateful* executor (e.g. the
+/// streaming session table, or an expensive ensemble backend) in an
+/// `Arc` instead of rebuilding per worker — the state stays global to
+/// the server while every worker thread dispatches into it.
+impl<T: BatchExecutor> BatchExecutor for std::sync::Arc<T> {
+    fn max_batch(&self) -> usize {
+        (**self).max_batch()
+    }
+    fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        (**self).execute(inputs)
+    }
+    fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
+        (**self).execute_each(inputs)
+    }
+}
+
 /// Batcher policy.
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {

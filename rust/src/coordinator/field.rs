@@ -2,7 +2,7 @@
 //! `Σ_u f(dist(v,u))·x[u]` requests over a fixed metric, plugging the
 //! FTFI stack into the coordinator's queue/batcher/worker machinery.
 //!
-//! Two flavours:
+//! Three flavours:
 //!
 //! - [`FieldExecutor`] runs any [`FieldIntegrator`] backend (tree,
 //!   MST-of-graph, brute reference) — one planning pass per request.
@@ -10,6 +10,11 @@
 //!   [`PreparedPlans`] for one `f`, so every request reuses the frozen
 //!   cross-block plans — the "build once, integrate any number of
 //!   fields" serving pattern of §3.1/§3.2.
+//! - [`StreamingFieldExecutor`] serves the *online* workload: stateful
+//!   per-session [`StreamingIntegrator`]s behind one shared tree / plan
+//!   set, answering sparse `apply_update` requests through the delta
+//!   fast path (wire protocol below) with per-update latency
+//!   percentiles in the [`MetricsRegistry`].
 //!
 //! Error contract: every [`FtfiError`] (shape mismatches above all) is
 //! stringified into a per-request `Err(String)` via
@@ -26,12 +31,15 @@
 //! the process-wide thread count.
 
 use super::batcher::BatchExecutor;
+use super::metrics::{MetricsRegistry, MetricsSnapshot};
 use crate::ftfi::functions::FDist;
+use crate::ftfi::streaming::StreamingIntegrator;
 use crate::ftfi::{FieldIntegrator, FtfiError, TreeFieldIntegrator};
 use crate::linalg::matrix::Matrix;
 use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
 use crate::tree::integrator_tree::PreparedPlans;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Decode one flattened request into an `n×d` field (row-major, rows
 /// indexed by vertex id). The request length must be a non-zero
@@ -155,6 +163,179 @@ impl BatchExecutor for PreparedFieldExecutor {
     /// across the integrator's work pool (set per builder via
     /// `.threads(..)` / `.pool(..)`) unless the metric is too small to
     /// justify helper threads; responses keep the request order.
+    fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
+        if self.tfi.n() < PAR_MAP_MIN_N {
+            return inputs.iter().map(|input| self.run_one(input)).collect();
+        }
+        self.tfi.pool().map(inputs, |_, input| self.run_one(input))
+    }
+}
+
+/// Opcode of a streaming request (`input[0]`): install/overwrite a
+/// session's full field.
+pub const STREAM_OP_SET: f32 = 0.0;
+/// Opcode of a streaming request (`input[0]`): sparse row update.
+pub const STREAM_OP_UPDATE: f32 = 1.0;
+
+/// Parse a non-negative integral f32 below `limit` (session ids, row
+/// counts and row indices on the f32 wire; integers are exact in f32 up
+/// to 2²⁴, far above any supported `n`).
+fn parse_index(v: f32, limit: usize, what: &str) -> Result<usize, String> {
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || (v as usize) >= limit {
+        return Err(format!("{what} {v} invalid (expected an integer in 0..{limit})"));
+    }
+    Ok(v as usize)
+}
+
+/// Serve the streaming/online workload: per-session
+/// [`StreamingIntegrator`]s (bounded by `max_sessions`) sharing one
+/// tree, one frozen plan set and one work pool. Requests ride the
+/// coordinator's `Vec<f32>` wire:
+///
+/// ```text
+/// set:    [0.0, session, field…]            field = n·d values, d = len/n
+/// update: [1.0, session, k, row…, values…]  k rows then k·d values
+/// ```
+///
+/// Both return the session's full `n·d` output. Updates run the sparse
+/// delta fast path with the session's `refresh_every` drift policy; a
+/// malformed request (unknown opcode/session, bad row, shape mismatch)
+/// fails alone — the session keeps its state and its batch-mates their
+/// responses. Sessions are `Mutex`-guarded, so concurrent batch fan-out
+/// over *different* sessions parallelises while same-session updates
+/// serialise (arrival order within one fused batch is unspecified —
+/// clients that need ordering submit one in-flight update per session).
+pub struct StreamingFieldExecutor {
+    tfi: Arc<TreeFieldIntegrator>,
+    plans: Arc<PreparedPlans>,
+    refresh_every: usize,
+    max_batch: usize,
+    sessions: Vec<Mutex<Option<StreamingIntegrator>>>,
+    metrics: Arc<MetricsRegistry>,
+}
+
+impl StreamingFieldExecutor {
+    /// Freeze `f` (with a `channels` planner hint) and allocate
+    /// `max_sessions` empty session slots. `refresh_every` is the drift
+    /// policy every session is opened with (`0` = delta-only).
+    pub fn new(
+        tfi: TreeFieldIntegrator,
+        f: &FDist,
+        channels: usize,
+        refresh_every: usize,
+        max_sessions: usize,
+        max_batch: usize,
+    ) -> Result<Self, FtfiError> {
+        let plans = Arc::new(tfi.prepare_plans(f, channels)?);
+        let sessions = (0..max_sessions.max(1)).map(|_| Mutex::new(None)).collect();
+        Ok(StreamingFieldExecutor {
+            tfi: Arc::new(tfi),
+            plans,
+            refresh_every,
+            max_batch: max_batch.max(1),
+            sessions,
+            metrics: Arc::new(MetricsRegistry::new()),
+        })
+    }
+
+    /// Number of vertices a session field must cover.
+    pub fn n(&self) -> usize {
+        self.tfi.n()
+    }
+
+    /// Session slots.
+    pub fn max_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Update-latency percentiles and counters (the streaming SLO);
+    /// share the registry with a dashboard via
+    /// [`StreamingFieldExecutor::metrics_registry`].
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// The executor's metrics registry (update-latency histogram).
+    pub fn metrics_registry(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    fn run_one(&self, input: &[f32]) -> Result<Vec<f32>, String> {
+        if input.len() < 2 {
+            return Err("streaming request needs [op, session, …]".to_string());
+        }
+        let sid = parse_index(input[1], self.sessions.len(), "session")?;
+        if input[0] == STREAM_OP_SET {
+            self.run_set(sid, &input[2..])
+        } else if input[0] == STREAM_OP_UPDATE {
+            let t0 = Instant::now();
+            let out = self.run_update(sid, &input[2..])?;
+            self.metrics.record_update_latency(t0.elapsed().as_secs_f64());
+            Ok(out)
+        } else {
+            Err(format!("unknown streaming opcode {} (0 = set, 1 = update)", input[0]))
+        }
+    }
+
+    fn run_set(&self, sid: usize, payload: &[f32]) -> Result<Vec<f32>, String> {
+        let n = self.tfi.n();
+        if n == 0 || payload.is_empty() || payload.len() % n != 0 {
+            return Err(FtfiError::ShapeMismatch { expected: n, got: payload.len() }.to_string());
+        }
+        let d = payload.len() / n;
+        let field = Matrix::from_vec(n, d, payload.iter().map(|&v| v as f64).collect());
+        let session = StreamingIntegrator::new(
+            Arc::clone(&self.tfi),
+            Arc::clone(&self.plans),
+            field,
+            self.refresh_every,
+        )
+        .map_err(|e| e.to_string())?;
+        let out = session.output().data().iter().map(|&v| v as f32).collect();
+        *self.sessions[sid].lock().unwrap() = Some(session);
+        Ok(out)
+    }
+
+    fn run_update(&self, sid: usize, payload: &[f32]) -> Result<Vec<f32>, String> {
+        let n = self.tfi.n();
+        if payload.is_empty() {
+            return Err("update needs [k, rows…, values…]".to_string());
+        }
+        let k = parse_index(payload[0], n + 1, "row count")?;
+        if payload.len() < 1 + k {
+            return Err(format!("update lists {k} rows but carries {}", payload.len() - 1));
+        }
+        let mut rows = Vec::with_capacity(k);
+        for &r in &payload[1..1 + k] {
+            rows.push(parse_index(r, n, "row")? as u32);
+        }
+        let vals = &payload[1 + k..];
+        let mut guard = self.sessions[sid].lock().unwrap();
+        let session = guard
+            .as_mut()
+            .ok_or_else(|| format!("session {sid} not initialised (send a set request first)"))?;
+        let d = session.channels();
+        if vals.len() != k * d {
+            return Err(FtfiError::ShapeMismatch { expected: k * d, got: vals.len() }.to_string());
+        }
+        let values = Matrix::from_vec(k, d, vals.iter().map(|&v| v as f64).collect());
+        let out = session.apply_update(&rows, &values).map_err(|e| e.to_string())?;
+        Ok(out.data().iter().map(|&v| v as f32).collect())
+    }
+}
+
+impl BatchExecutor for StreamingFieldExecutor {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        self.execute_each(inputs).into_iter().collect()
+    }
+
+    /// Requests fail independently and fan out across the integrator's
+    /// pool; per-session mutexes serialise same-session updates while
+    /// distinct sessions proceed in parallel.
     fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
         if self.tfi.n() < PAR_MAP_MIN_N {
             return inputs.iter().map(|input| self.run_one(input)).collect();
@@ -308,6 +489,137 @@ mod tests {
         assert_eq!(out[0].len(), 30);
         // Empty input is a shape error, not a panic.
         assert!(exec.execute(&[vec![]]).is_err());
+    }
+
+    fn stream_exec(
+        n: usize,
+        refresh_every: usize,
+        slots: usize,
+        seed: u64,
+    ) -> StreamingFieldExecutor {
+        let mut rng = Pcg::seed(seed);
+        let tree = generators::random_tree(n, 0.2, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().unwrap();
+        StreamingFieldExecutor::new(tfi, &f, 1, refresh_every, slots, 8).unwrap()
+    }
+
+    fn set_req(sid: usize, field: &[f32]) -> Vec<f32> {
+        let mut r = vec![STREAM_OP_SET, sid as f32];
+        r.extend_from_slice(field);
+        r
+    }
+
+    fn update_req(sid: usize, rows: &[u32], vals: &[f32]) -> Vec<f32> {
+        let mut r = vec![STREAM_OP_UPDATE, sid as f32, rows.len() as f32];
+        r.extend(rows.iter().map(|&v| v as f32));
+        r.extend_from_slice(vals);
+        r
+    }
+
+    /// Two sessions with different fields: each session's responses
+    /// must track its *own* field, including after interleaved updates
+    /// — no cross-contamination through the shared tree / plans.
+    #[test]
+    fn streaming_sessions_do_not_cross_contaminate() {
+        let n = 32;
+        let exec = stream_exec(n, 4, 4, 11);
+        let fa: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+        let fb: Vec<f32> = (0..n).map(|i| -(i as f32) * 0.2).collect();
+        let outs = exec.execute(&[set_req(0, &fa), set_req(1, &fb)]).unwrap();
+        assert_ne!(outs[0], outs[1]);
+        // Interleave updates; session 1's output must stay what a fresh
+        // session with the same field history produces.
+        let u0 = exec.run_one(&update_req(0, &[3], &[9.0])).unwrap();
+        let u1 = exec.run_one(&update_req(1, &[5], &[-7.0])).unwrap();
+        assert_ne!(u0, u1);
+        let fresh = stream_exec(n, 4, 4, 11); // same tree seed → same metric
+        fresh.run_one(&set_req(0, &fb)).unwrap();
+        let want = fresh.run_one(&update_req(0, &[5], &[-7.0])).unwrap();
+        assert_eq!(u1, want, "session 1 must behave like an isolated session");
+    }
+
+    /// Malformed streaming requests fail alone: the session keeps its
+    /// state, batch-mates keep their responses, and the worker (here:
+    /// the executor) stays serviceable.
+    #[test]
+    fn streaming_malformed_update_fails_alone_without_poisoning_the_session() {
+        let n = 24;
+        let exec = stream_exec(n, 0, 2, 12);
+        let field: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).sin()).collect();
+        let base = exec.run_one(&set_req(0, &field)).unwrap();
+        let bad_cases: Vec<Vec<f32>> = vec![
+            vec![], // no header
+            vec![2.0, 0.0, 1.0], // unknown opcode
+            vec![STREAM_OP_UPDATE, 9.0, 0.0], // unknown session
+            update_req(1, &[], &[]), // session never set
+            update_req(0, &[24], &[1.0]), // row out of range
+            update_req(0, &[0, 1], &[1.0]), // missing values
+            vec![STREAM_OP_UPDATE, 0.0, 2.5, 1.0], // fractional row count
+        ];
+        let good = update_req(0, &[2], &[5.0]);
+        let mut batch = bad_cases.clone();
+        batch.push(good.clone());
+        let results = exec.execute_each(&batch);
+        for (i, r) in results[..bad_cases.len()].iter().enumerate() {
+            assert!(r.is_err(), "malformed request {i} must fail");
+        }
+        let ok = results.last().unwrap().as_ref().expect("good batch-mate must succeed");
+        // The good update saw the *original* session state: none of the
+        // malformed requests may have mutated it.
+        let fresh = stream_exec(n, 0, 2, 12);
+        let fresh_base = fresh.run_one(&set_req(0, &field)).unwrap();
+        assert_eq!(base, fresh_base);
+        let want = fresh.run_one(&good).unwrap();
+        assert_eq!(*ok, want, "failed requests must not have poisoned the session");
+    }
+
+    /// End-to-end through the InferenceServer: streaming workers share
+    /// one session table, shutdown drains every in-flight update, and
+    /// the update-latency percentiles are populated.
+    #[test]
+    fn streaming_server_drains_updates_and_reports_update_latency() {
+        let n = 16;
+        let exec = Arc::new(stream_exec(n, 3, 2, 13));
+        let metrics = Arc::clone(exec.metrics_registry());
+        let factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>> = (0..2)
+            .map(|_| {
+                let exec = Arc::clone(&exec);
+                Box::new(move || {
+                    Box::new(exec) as Box<dyn BatchExecutor>
+                }) as Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>
+            })
+            .collect();
+        let server = InferenceServer::start(
+            factories,
+            BatcherConfig { batch_size: 4, batch_timeout: Duration::from_millis(1) },
+            64,
+        );
+        let field = vec![1.0f32; n];
+        server.submit_blocking(set_req(0, &field)).unwrap().wait().unwrap();
+        let handles: Vec<_> = (0..20)
+            .map(|i| {
+                server
+                    .submit_blocking(update_req(0, &[(i % n) as u32], &[i as f32]))
+                    .unwrap()
+            })
+            .collect();
+        server.shutdown(); // must drain every in-flight update
+        let mut ok = 0;
+        for h in handles {
+            match h.wait() {
+                Ok(out) => {
+                    assert_eq!(out.len(), n);
+                    ok += 1;
+                }
+                Err(e) => panic!("update lost during shutdown: {e}"),
+            }
+        }
+        assert_eq!(ok, 20);
+        let m = metrics.snapshot();
+        assert_eq!(m.updates, 20, "every update must be recorded");
+        assert!(m.update_p50 > 0.0 && m.update_p50 <= m.update_p95);
+        assert!(m.update_p95 <= m.update_p99);
     }
 
     /// Ensemble serving path: the generic executor over an

@@ -29,6 +29,11 @@ pub struct MetricsRegistry {
     batch_items: AtomicU64,
     exec_seconds_micro: AtomicU64,
     latency_hist: Mutex<[u64; BUCKETS]>,
+    /// Streaming field updates (the `apply_update` serving path) get
+    /// their own histogram: update latency is the SLO of the streaming
+    /// workload and must not be averaged into full-integration requests.
+    updates: AtomicU64,
+    update_hist: Mutex<[u64; BUCKETS]>,
     started: std::time::Instant,
 }
 
@@ -43,6 +48,14 @@ pub struct MetricsSnapshot {
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_p99: f64,
+    /// Streaming updates recorded (see
+    /// [`MetricsRegistry::record_update_latency`]).
+    pub updates: u64,
+    /// Streaming update-latency percentiles (0.0 until an update is
+    /// recorded).
+    pub update_p50: f64,
+    pub update_p95: f64,
+    pub update_p99: f64,
 }
 
 impl MetricsRegistry {
@@ -53,6 +66,8 @@ impl MetricsRegistry {
             batch_items: AtomicU64::new(0),
             exec_seconds_micro: AtomicU64::new(0),
             latency_hist: Mutex::new([0; BUCKETS]),
+            updates: AtomicU64::new(0),
+            update_hist: Mutex::new([0; BUCKETS]),
             started: std::time::Instant::now(),
         }
     }
@@ -67,6 +82,14 @@ impl MetricsRegistry {
     pub fn record_latency(&self, secs: f64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         let mut hist = self.latency_hist.lock().unwrap();
+        hist[bucket_of(secs)] += 1;
+    }
+
+    /// Record one streaming field-update latency (the per-session
+    /// `apply_update` wall clock of the streaming executor).
+    pub fn record_update_latency(&self, secs: f64) {
+        self.updates.fetch_add(1, Ordering::Relaxed);
+        let mut hist = self.update_hist.lock().unwrap();
         hist[bucket_of(secs)] += 1;
     }
 
@@ -90,6 +113,8 @@ impl MetricsRegistry {
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batch_items.load(Ordering::Relaxed);
         let hist = self.latency_hist.lock().unwrap();
+        let updates = self.updates.load(Ordering::Relaxed);
+        let uhist = self.update_hist.lock().unwrap();
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
         MetricsSnapshot {
             requests,
@@ -100,6 +125,10 @@ impl MetricsRegistry {
             latency_p50: Self::percentile(&hist, requests, 0.50),
             latency_p95: Self::percentile(&hist, requests, 0.95),
             latency_p99: Self::percentile(&hist, requests, 0.99),
+            updates,
+            update_p50: Self::percentile(&uhist, updates, 0.50),
+            update_p95: Self::percentile(&uhist, updates, 0.95),
+            update_p99: Self::percentile(&uhist, updates, 0.99),
         }
     }
 }
@@ -144,6 +173,31 @@ mod tests {
         assert!(s.latency_p95 <= s.latency_p99);
         assert!(s.latency_p50 < 0.01, "p50={}", s.latency_p50);
         assert!(s.latency_p99 > 0.05, "p99={}", s.latency_p99);
+    }
+
+    /// Streaming update latencies live in their own histogram: they
+    /// must not leak into the request percentiles (and vice versa), and
+    /// an empty update histogram reports zeros.
+    #[test]
+    fn update_latency_percentiles_are_isolated() {
+        let m = MetricsRegistry::new();
+        let empty = m.snapshot();
+        assert_eq!(empty.updates, 0);
+        assert_eq!(empty.update_p50, 0.0);
+        for _ in 0..90 {
+            m.record_update_latency(0.0005);
+        }
+        for _ in 0..10 {
+            m.record_update_latency(0.2);
+        }
+        m.record_latency(10.0); // a slow full request must not pollute updates
+        let s = m.snapshot();
+        assert_eq!(s.updates, 100);
+        assert_eq!(s.requests, 1);
+        assert!(s.update_p50 <= s.update_p95 && s.update_p95 <= s.update_p99);
+        assert!(s.update_p50 < 0.005, "p50={}", s.update_p50);
+        assert!(s.update_p99 > 0.1, "p99={}", s.update_p99);
+        assert!(s.latency_p50 > 5.0, "request percentile must stay separate");
     }
 
     #[test]

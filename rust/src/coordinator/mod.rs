@@ -19,6 +19,6 @@ pub mod metrics;
 pub mod server;
 
 pub use batcher::{BatchExecutor, Batcher, BatcherConfig};
-pub use field::{FieldExecutor, PreparedFieldExecutor};
+pub use field::{FieldExecutor, PreparedFieldExecutor, StreamingFieldExecutor};
 pub use metrics::MetricsRegistry;
 pub use server::{InferenceServer, ServerError};

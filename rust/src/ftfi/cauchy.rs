@@ -14,6 +14,12 @@ use crate::ftfi::rational::{rational_cross_apply, RationalOpts};
 use crate::linalg::matrix::Matrix;
 
 /// Compute `out[i][ch] = Σ_j V[j][ch] · e^{λ(x_i+y_j)}/(x_i + y_j + c)`.
+///
+/// Standalone per-call reference. The prepared hot path uses
+/// [`crate::ftfi::rational::RationalPlan::build_cauchy`] instead, which
+/// freezes the shift products, the denominator-inverse table and the
+/// `e^{λx}`/`e^{λy}` scale vectors at plan time so the apply step is
+/// allocation-free.
 pub fn cauchy_cross_apply(
     lambda: f64,
     c: f64,

@@ -12,13 +12,12 @@
 //! panic-free execution step. The prepared-integrator API caches `Plan`s
 //! across calls — see `DESIGN.md` §Lifecycle.
 
-use crate::ftfi::cauchy::cauchy_cross_apply;
 use crate::ftfi::chebyshev::{adaptive_expansion, ChebExpansion};
 use crate::ftfi::error::FtfiError;
 use crate::ftfi::functions::{FDist, Separable};
 use crate::ftfi::hankel::{detect_lattice, LatticePlan};
 use crate::ftfi::outer::{apply_separable, apply_separable_into};
-use crate::ftfi::rational::{rational_cross_apply, RationalOpts};
+use crate::ftfi::rational::{RationalOpts, RationalPlan};
 use crate::ftfi::vandermonde::expquad_cross_apply;
 use crate::linalg::fft::Complex;
 use crate::linalg::matrix::Matrix;
@@ -145,8 +144,13 @@ pub enum Plan {
     Dense,
     Separable(Separable),
     Lattice(LatticePlan),
-    RationalSum { num: Vec<f64>, den: Vec<f64> },
-    Cauchy { lambda: f64, c: f64 },
+    /// Prepared basis-polynomial rational sums ([`RationalPlan`]): the
+    /// shift products and denominator-inverse tables are frozen here,
+    /// so applying is allocation-free.
+    RationalSum(RationalPlan),
+    /// The Cauchy-LDR case riding the same prepared rational core with
+    /// its exponential factors as per-row/column scales.
+    Cauchy(RationalPlan),
     Vandermonde { u: f64, v: f64, w: f64, delta: f64 },
     Chebyshev(ChebExpansion),
 }
@@ -157,8 +161,8 @@ impl Plan {
             Plan::Dense => Strategy::Dense,
             Plan::Separable(_) => Strategy::Separable,
             Plan::Lattice(_) => Strategy::Lattice,
-            Plan::RationalSum { .. } => Strategy::RationalSum,
-            Plan::Cauchy { .. } => Strategy::Cauchy,
+            Plan::RationalSum(_) => Strategy::RationalSum,
+            Plan::Cauchy(_) => Strategy::Cauchy,
             Plan::Vandermonde { .. } => Strategy::Vandermonde,
             Plan::Chebyshev(_) => Strategy::Chebyshev,
         }
@@ -199,7 +203,8 @@ pub fn try_make_plan(
             },
             Strategy::RationalSum => match f {
                 FDist::Rational { num, den } => {
-                    Ok(Plan::RationalSum { num: num.clone(), den: den.clone() })
+                    let plan = RationalPlan::build(num, den, xs, ys, &policy.rational);
+                    Ok(Plan::RationalSum(plan))
                 }
                 _ => Err(FtfiError::StrategyInapplicable {
                     strategy: s,
@@ -208,7 +213,8 @@ pub fn try_make_plan(
             },
             Strategy::Cauchy => match f {
                 FDist::ExpOverLinear { lambda, c } => {
-                    Ok(Plan::Cauchy { lambda: *lambda, c: *c })
+                    let plan = RationalPlan::build_cauchy(*lambda, *c, xs, ys, &policy.rational);
+                    Ok(Plan::Cauchy(plan))
                 }
                 _ => Err(FtfiError::StrategyInapplicable {
                     strategy: s,
@@ -283,9 +289,11 @@ pub fn try_make_plan(
     }
     Ok(match f {
         FDist::Rational { num, den } => {
-            Plan::RationalSum { num: num.clone(), den: den.clone() }
+            Plan::RationalSum(RationalPlan::build(num, den, xs, ys, &policy.rational))
         }
-        FDist::ExpOverLinear { lambda, c } => Plan::Cauchy { lambda: *lambda, c: *c },
+        FDist::ExpOverLinear { lambda, c } => {
+            Plan::Cauchy(RationalPlan::build_cauchy(*lambda, *c, xs, ys, &policy.rational))
+        }
         FDist::ExpQuadratic { u, v, w } => {
             // Vandermonde needs only the *columns* on a lattice.
             match detect_lattice(ys.iter().copied(), policy.lattice_max_points) {
@@ -340,27 +348,26 @@ pub fn cross_apply(f: &FDist, xs: &[f64], ys: &[f64], v: &Matrix, policy: &Cross
 /// failure mode was resolved at planning time, and the plan owns its
 /// artifacts (expansion, FFT table, decomposition, kernel parameters).
 /// A plan is bound to the `(xs, ys)` it was planned for — `Lattice`
-/// plans cache their per-point index maps at build time, so applying
-/// one to a different point set is invalid (debug-asserted there); the
-/// prepared integrator upholds this by construction.
+/// plans cache their per-point index maps at build time (applying one
+/// to a different point set is debug-asserted there), and
+/// `RationalSum`/`Cauchy` plans freeze their scaled evaluation points
+/// and denominator-inverse tables, so for those variants the `xs`/`ys`
+/// arguments are documentation only: passing different same-length
+/// point sets would silently evaluate at the build-time points. The
+/// prepared integrator upholds the binding by construction.
 pub fn apply_plan(
     plan: &Plan,
     f: &FDist,
     xs: &[f64],
     ys: &[f64],
     v: &Matrix,
-    policy: &CrossPolicy,
+    _policy: &CrossPolicy,
 ) -> Matrix {
     match plan {
         Plan::Dense => cross_apply_dense(f, xs, ys, v),
         Plan::Separable(sep) => apply_separable(sep, xs, ys, v),
         Plan::Lattice(lp) => lp.apply(xs, ys, v),
-        Plan::RationalSum { num, den } => {
-            rational_cross_apply(num, den, xs, ys, v, &policy.rational)
-        }
-        Plan::Cauchy { lambda, c } => {
-            cauchy_cross_apply(*lambda, *c, xs, ys, v, &policy.rational)
-        }
+        Plan::RationalSum(rp) | Plan::Cauchy(rp) => rp.apply(v),
         Plan::Vandermonde { u, v: vc, w, delta } => {
             expquad_cross_apply(*u, *vc, *w, xs, ys, *delta, v)
         }
@@ -379,6 +386,9 @@ pub struct CrossScratch {
     pub(crate) cheb_w: Vec<f64>,
     pub(crate) cheb_basis: Vec<f64>,
     pub(crate) sep_w: Vec<f64>,
+    /// Rational/Cauchy numerator-coefficient accumulator
+    /// ([`RationalPlan::apply_into`]).
+    pub(crate) rat_w: Vec<f64>,
 }
 
 impl CrossScratch {
@@ -389,7 +399,7 @@ impl CrossScratch {
     /// Grow (never shrink) every buffer to the given plan-set maxima.
     /// After the first call with the steady-state sizes, further calls
     /// are no-ops — this is what makes checkout allocation-free.
-    pub(crate) fn ensure(&mut self, fft_len: usize, cheb_rank: usize, d: usize) {
+    pub(crate) fn ensure(&mut self, fft_len: usize, cheb_rank: usize, rat_len: usize, d: usize) {
         if self.cplx.len() < fft_len {
             self.cplx.resize(fft_len, Complex::ZERO);
         }
@@ -402,16 +412,21 @@ impl CrossScratch {
         if self.sep_w.len() < d {
             self.sep_w.resize(d, 0.0);
         }
+        if self.rat_w.len() < rat_len {
+            self.rat_w.resize(rat_len, 0.0);
+        }
     }
 }
 
-/// The complex-FFT / Chebyshev-rank scratch demand of one plan — used
-/// to size [`CrossScratch`] arenas at prepare time.
-pub(crate) fn plan_scratch_demand(plan: &Plan) -> (usize, usize) {
+/// The complex-FFT / Chebyshev-rank / rational-coefficient scratch
+/// demand of one plan — used to size [`CrossScratch`] arenas at prepare
+/// time.
+pub(crate) fn plan_scratch_demand(plan: &Plan) -> (usize, usize, usize) {
     match plan {
-        Plan::Lattice(lp) => (lp.fft_len(), 0),
-        Plan::Chebyshev(exp) => (0, exp.rank()),
-        _ => (0, 0),
+        Plan::Lattice(lp) => (lp.fft_len(), 0, 0),
+        Plan::Chebyshev(exp) => (0, exp.rank(), 0),
+        Plan::RationalSum(rp) | Plan::Cauchy(rp) => (0, 0, rp.coeff_len()),
+        _ => (0, 0, 0),
     }
 }
 
@@ -420,12 +435,17 @@ pub(crate) fn plan_scratch_demand(plan: &Plan) -> (usize, usize) {
 /// is fine — every strategy fully overwrites it). Bit-identical to
 /// [`apply_plan`] for every strategy.
 ///
-/// The Dense / Separable / Lattice / Chebyshev multipliers — everything
-/// the default policy plans on the prepared hot path — run fully
-/// allocation-free through `scratch`. The RationalSum / Cauchy /
-/// Vandermonde multipliers keep their allocating divide-and-conquer
-/// implementations (they are forced-strategy fallbacks, not hot-path
-/// choices) and are shimmed through a temporary [`Matrix`].
+/// The Dense / Separable / Lattice / Chebyshev / RationalSum / Cauchy
+/// multipliers — everything the default policy can plan on the prepared
+/// hot path plus the forced LDR reference paths — run fully
+/// allocation-free through `scratch` (the rational paths via the
+/// basis-polynomial tables their [`RationalPlan`] froze at plan time).
+/// Only the Vandermonde multiplier keeps its allocating implementation
+/// behind a temporary-[`Matrix`] shim: `expquad_cross_apply` rebuilds
+/// its diag·Vandermonde·diag factors from the lattice structure per
+/// call, and arena-ifying that would mean caching a dense `pts×b`
+/// Vandermonde product table of unbounded size for a forced-only path —
+/// not worth the workspace footprint.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn apply_plan_into(
     plan: &Plan,
@@ -445,6 +465,9 @@ pub(crate) fn apply_plan_into(
         Plan::Chebyshev(exp) => {
             let (w, basis) = (&mut scratch.cheb_w, &mut scratch.cheb_basis);
             exp.cross_apply_into(f, xs, ys, v, d, out, w, basis)
+        }
+        Plan::RationalSum(rp) | Plan::Cauchy(rp) => {
+            rp.apply_into(v, d, out, &mut scratch.rat_w)
         }
         other => {
             let vm = Matrix::from_vec(ys.len(), d, v.to_vec());
@@ -601,8 +624,8 @@ mod tests {
             let want = apply_plan(&plan, &f, &xs, &ys, &v, &policy);
             let mut out = vec![f64::NAN; xs.len() * 3];
             let mut scratch = CrossScratch::new();
-            let (fft, cheb) = plan_scratch_demand(&plan);
-            scratch.ensure(fft, cheb, 3);
+            let (fft, cheb, rat) = plan_scratch_demand(&plan);
+            scratch.ensure(fft, cheb, rat, 3);
             apply_plan_into(&plan, &f, &xs, &ys, v.data(), 3, &mut out, &policy, &mut scratch);
             assert_eq!(out, want.data(), "{s:?} must be bit-identical");
         }

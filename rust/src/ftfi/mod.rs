@@ -42,10 +42,12 @@ pub mod nufft;
 pub mod outer;
 pub mod rational;
 pub mod rff;
+pub mod streaming;
 pub mod vandermonde;
 
 pub use ensemble::{EnsembleFieldIntegrator, EnsembleMethod, PreparedEnsembleIntegrator};
 pub use error::FtfiError;
+pub use streaming::StreamingIntegrator;
 
 use crate::ftfi::cordial::CrossPolicy;
 use crate::ftfi::functions::FDist;
@@ -293,6 +295,36 @@ impl TreeFieldIntegrator {
         self.it.integrate_prepared_into_pooled(x, plans, &self.pool, out)
     }
 
+    /// Sparse delta integration with plans from
+    /// [`TreeFieldIntegrator::prepare_plans`]: the exact
+    /// `integrate(Δ)` for a delta field supported on `rows` (`dx` is
+    /// dense `n×d`; only the listed rows are read), touching only the
+    /// O(k log n) IT nodes whose slot regions contain a changed row.
+    /// With every row listed the result is bit-identical to
+    /// [`TreeFieldIntegrator::integrate_prepared`] on `dx`. See
+    /// [`crate::tree::integrator_tree::IntegratorTree::integrate_delta_prepared`].
+    pub fn integrate_delta_prepared(
+        &self,
+        rows: &[u32],
+        dx: &Matrix,
+        plans: &PreparedPlans,
+    ) -> Result<Matrix, FtfiError> {
+        self.it.integrate_delta_prepared_pooled(rows, dx, plans, &self.pool)
+    }
+
+    /// Zero-allocation sparse delta integration into a caller-provided
+    /// `n×d` matrix — the streaming hot path (a warmed serial k = 1
+    /// update performs no heap allocation).
+    pub fn integrate_delta_prepared_into(
+        &self,
+        rows: &[u32],
+        dx: &Matrix,
+        plans: &PreparedPlans,
+        out: &mut Matrix,
+    ) -> Result<(), FtfiError> {
+        self.it.integrate_delta_prepared_into_pooled(rows, dx, plans, &self.pool, out)
+    }
+
     /// The pre-workspace prepared execution path (gathers and allocates
     /// per node). Kept only as the bit-identity reference for the
     /// workspace hot path — equivalence tests and the `hotpath_alloc`
@@ -385,6 +417,26 @@ impl PreparedIntegrator<'_> {
     /// field (slabs + aggregate arena + cross-multiplier scratch).
     pub fn workspace_bytes(&self, d: usize) -> usize {
         self.plans.workspace_bytes(d)
+    }
+
+    /// Sparse delta integration against the frozen plans: the exact
+    /// `integrate(Δ)` for a delta supported on `rows` (see
+    /// [`TreeFieldIntegrator::integrate_delta_prepared`]). Linearity
+    /// makes `integrate(x + Δ) = integrate(x) + integrate_delta(rows, Δ)`
+    /// up to float rounding — the streaming update identity.
+    pub fn integrate_delta(&self, rows: &[u32], dx: &Matrix) -> Result<Matrix, FtfiError> {
+        self.it.integrate_delta_prepared_pooled(rows, dx, &self.plans, &self.pool)
+    }
+
+    /// Zero-allocation [`PreparedIntegrator::integrate_delta`] into a
+    /// caller-provided `n×d` matrix.
+    pub fn integrate_delta_into(
+        &self,
+        rows: &[u32],
+        dx: &Matrix,
+        out: &mut Matrix,
+    ) -> Result<(), FtfiError> {
+        self.it.integrate_delta_prepared_into_pooled(rows, dx, &self.plans, &self.pool, out)
     }
 
     /// Integrate a batch of fields, reusing the plans for every one.
@@ -623,6 +675,40 @@ mod tests {
             let new = tfi.integrate_prepared(&x, &plans).unwrap();
             assert!(new == legacy, "workspace path must be bit-identical to legacy");
         }
+    }
+
+    /// The prepared handle's delta surface: superposition holds at
+    /// rounding scale and a full-rows delta is bit-identical to a full
+    /// integration (no branch of the sparse pass skips).
+    #[test]
+    fn prepared_delta_superposes_and_degenerates_to_full_integration() {
+        let mut rng = Pcg::seed(8);
+        let t = generators::random_tree(200, 0.1, 1.0, &mut rng);
+        let tfi = TreeFieldIntegrator::builder(&t).leaf_threshold(8).build().unwrap();
+        let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
+        let prepared = tfi.prepare_with_channels(&f, 2).unwrap();
+        let x = Matrix::randn(200, 2, &mut rng);
+        let rows = [3u32, 77, 150];
+        let mut dx = Matrix::zeros(200, 2);
+        for &v in &rows {
+            for c in 0..2 {
+                dx.set(v as usize, c, rng.normal());
+            }
+        }
+        let mut x2 = x.clone();
+        x2.axpy(1.0, &dx);
+        let full = prepared.integrate(&x2).unwrap();
+        let mut approx = prepared.integrate(&x).unwrap();
+        approx.axpy(1.0, &prepared.integrate_delta(&rows, &dx).unwrap());
+        let rel = approx.frobenius_diff(&full) / (1.0 + full.frobenius());
+        assert!(rel < 1e-11, "superposition drifted to rel {rel}");
+        let all: Vec<u32> = (0..200).collect();
+        let want = prepared.integrate(&dx).unwrap();
+        let got = prepared.integrate_delta(&all, &dx).unwrap();
+        assert!(got == want, "full-rows delta must be bit-identical");
+        let mut out = Matrix::zeros(200, 2);
+        prepared.integrate_delta_into(&all, &dx, &mut out).unwrap();
+        assert!(out == want, "integrate_delta_into must agree bitwise");
     }
 
     #[test]

@@ -23,6 +23,12 @@
 //! stable Chebyshev low-rank path (`ftfi::chebyshev`) for smooth rational
 //! kernels; this module remains the *exact-in-exact-arithmetic* reference
 //! implementation of the paper's (2+ε)-cordial claim.
+//!
+//! For the prepared/workspace hot path, [`RationalPlan`] hoists every
+//! field-independent artifact (shifted-basis numerator polynomials,
+//! denominator-inverse tables, the scaled domain) to plan time, so a
+//! frozen `Plan::RationalSum`/`Plan::Cauchy` applies with zero heap
+//! allocations (`tests/hotpath_alloc.rs` pins this).
 
 use crate::linalg::matrix::Matrix;
 use crate::linalg::polynomial::{multipoint_eval, Poly, SubproductTree};
@@ -75,6 +81,225 @@ pub fn taylor_shift(coeffs: &[f64], c: f64) -> Vec<f64> {
         }
     }
     out
+}
+
+/// Real (non-FFT) polynomial product, low→high coefficients. Degrees on
+/// this path are tiny (`deg(P) + block·deg(Q)`), so the O(deg²)
+/// schoolbook convolution beats the complex-FFT product in both speed
+/// and rounding.
+fn poly_mul_real(a: &[f64], b: &[f64]) -> Vec<f64> {
+    if a.is_empty() || b.is_empty() {
+        return Vec::new();
+    }
+    let mut out = vec![0.0; a.len() + b.len() - 1];
+    for (i, &ai) in a.iter().enumerate() {
+        if ai == 0.0 {
+            continue;
+        }
+        for (j, &bj) in b.iter().enumerate() {
+            out[i + j] += ai * bj;
+        }
+    }
+    out
+}
+
+/// A *prepared* rational-sum cross-application for one fixed
+/// `(P/Q, xs, ys)` block: everything that does not involve the field is
+/// hoisted to plan time, so the per-call apply is allocation-free (the
+/// `*_into` form the workspace hot path demands — see
+/// `cordial::apply_plan_into`).
+///
+/// Derivation: within a shift block `B`, the rational sum factors over a
+/// shared denominator,
+/// `Σ_{j∈B} v_j·P(x+y_j)/Q(x+y_j) = (Σ_j v_j·B_j(x)) / D(x)` with
+/// `D = Π_{l∈B} Q(x+y_l)` and basis numerators
+/// `B_j = P(x+y_j)·Π_{l≠j} Q(x+y_l)`. `D` and every `B_j` depend only
+/// on `(P, Q, ys, xs-domain)` — built here once, in the scaled variable
+/// `u = (x−c0)/s ∈ [−1,1]` with per-shift power-of-two normalisation
+/// (exact: the same factor scales `B_j` and `D`, so the ratio is
+/// unchanged). Applying is then a per-channel coefficient combination
+/// `w = Σ_j v_j·B_j` (O(block·deg)) plus Horner evaluations against the
+/// precomputed `1/D(u_i)` table — no divide-and-conquer merge, no
+/// complex FFT, no heap traffic.
+///
+/// The free functions [`rational_cross_apply`] / `cauchy_cross_apply`
+/// keep the original per-call D&C + multipoint-evaluation machinery as
+/// the standalone reference; this plan is what `Plan::RationalSum` /
+/// `Plan::Cauchy` freeze at prepare time.
+pub struct RationalPlan {
+    /// Scaled evaluation points `u_i = (x_i − c0)/s`.
+    u: Vec<f64>,
+    blocks: Vec<RatBlock>,
+    rows: usize,
+    cols: usize,
+    /// Max basis length over blocks — the per-task coefficient-scratch
+    /// demand (`CrossScratch::rat_w`).
+    coeff_len: usize,
+    /// Per-column weights folded into the field (the Cauchy `e^{λy_j}`).
+    col_scale: Option<Vec<f64>>,
+    /// Per-row output scales (the Cauchy `e^{λx_i}`).
+    row_scale: Option<Vec<f64>>,
+}
+
+struct RatBlock {
+    /// First shift (column) index this block covers.
+    j0: usize,
+    /// Basis numerators `B_j`, coefficients low→high in `u`.
+    basis: Vec<Vec<f64>>,
+    /// `1 / D(u_i)` per evaluation point.
+    inv_den: Vec<f64>,
+}
+
+impl RationalPlan {
+    /// Build the plan for `f = P/Q` over the cross block `(xs, ys)`.
+    pub fn build(num: &[f64], den: &[f64], xs: &[f64], ys: &[f64], opts: &RationalOpts) -> Self {
+        let rows = xs.len();
+        let cols = ys.len();
+        let mut plan = RationalPlan {
+            u: Vec::new(),
+            blocks: Vec::new(),
+            rows,
+            cols,
+            coeff_len: 1,
+            col_scale: None,
+            row_scale: None,
+        };
+        if rows == 0 || cols == 0 {
+            return plan;
+        }
+        // Same scaled domain as `rational_cross_apply`: evaluating at
+        // |u| ≤ 1 is what keeps coefficient-basis polynomials usable in
+        // f64.
+        let (lo, hi) = xs
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+        let c0 = 0.5 * (lo + hi);
+        let s = (0.5 * (hi - lo)).max(1.0);
+        plan.u = xs.iter().map(|&x| (x - c0) / s).collect();
+        let shift_scale = |poly: &[f64], y: f64| -> Vec<f64> {
+            let mut cs = taylor_shift(poly, c0 + y);
+            let mut sk = 1.0;
+            for coef in cs.iter_mut() {
+                *coef *= sk;
+                sk *= s;
+            }
+            cs
+        };
+        let block = opts.block.max(1);
+        for j0 in (0..cols).step_by(block) {
+            let hi_j = (j0 + block).min(cols);
+            let m = hi_j - j0;
+            // Per-shift scaled numerator/denominator, with an exact
+            // power-of-two normalisation of each Q-shift (applied to the
+            // matching P-shift, so every ratio is untouched).
+            let mut ps: Vec<Vec<f64>> = Vec::with_capacity(m);
+            let mut qs: Vec<Vec<f64>> = Vec::with_capacity(m);
+            for j in j0..hi_j {
+                let mut q = shift_scale(den, ys[j]);
+                let mut p = shift_scale(num, ys[j]);
+                let mx = q.iter().fold(0.0f64, |a, &c| a.max(c.abs()));
+                if mx.is_finite() && mx > 0.0 {
+                    let alpha = (-mx.log2().round()).exp2();
+                    q.iter_mut().for_each(|c| *c *= alpha);
+                    p.iter_mut().for_each(|c| *c *= alpha);
+                }
+                ps.push(p);
+                qs.push(q);
+            }
+            // Prefix/suffix products of the Q-shifts give every
+            // `Π_{l≠j} Q_l` in O(m) polynomial products.
+            let mut pre: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
+            pre.push(vec![1.0]);
+            for q in &qs {
+                let next = poly_mul_real(pre.last().unwrap(), q);
+                pre.push(next);
+            }
+            let mut suf: Vec<Vec<f64>> = vec![Vec::new(); m + 1];
+            suf[m] = vec![1.0];
+            for i in (0..m).rev() {
+                suf[i] = poly_mul_real(&qs[i], &suf[i + 1]);
+            }
+            let dpoly = pre[m].clone();
+            let basis: Vec<Vec<f64>> = (0..m)
+                .map(|i| poly_mul_real(&poly_mul_real(&pre[i], &suf[i + 1]), &ps[i]))
+                .collect();
+            for b in &basis {
+                plan.coeff_len = plan.coeff_len.max(b.len());
+            }
+            let inv_den: Vec<f64> = plan
+                .u
+                .iter()
+                .map(|&ui| 1.0 / crate::ftfi::functions::horner(&dpoly, ui))
+                .collect();
+            plan.blocks.push(RatBlock { j0, basis, inv_den });
+        }
+        plan
+    }
+
+    /// Build the Cauchy-LDR plan for `f(x) = e^{λx}/(x+c)`: the rational
+    /// core `1/(x+c)` with the exponential factored into per-column
+    /// field weights and per-row output scales
+    /// (`e^{λ(x+y)} = e^{λx}·e^{λy}`).
+    pub fn build_cauchy(lambda: f64, c: f64, xs: &[f64], ys: &[f64], opts: &RationalOpts) -> Self {
+        let mut plan = Self::build(&[1.0], &[c, 1.0], xs, ys, opts);
+        plan.col_scale = Some(ys.iter().map(|&y| (lambda * y).exp()).collect());
+        plan.row_scale = Some(xs.iter().map(|&x| (lambda * x).exp()).collect());
+        plan
+    }
+
+    /// Coefficient-scratch demand of the apply step.
+    pub fn coeff_len(&self) -> usize {
+        self.coeff_len
+    }
+
+    /// Allocation-free apply: `v` is `cols×d` row-major, `out` is
+    /// `rows×d` (fully overwritten, dirty-on-entry ok), `w` is the
+    /// caller's coefficient scratch (`≥ coeff_len`). Bit-identical to
+    /// [`RationalPlan::apply`] — same code path.
+    pub(crate) fn apply_into(&self, v: &[f64], d: usize, out: &mut [f64], w: &mut [f64]) {
+        assert_eq!(v.len(), self.cols * d);
+        assert_eq!(out.len(), self.rows * d);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let w = &mut w[..self.coeff_len];
+        for blk in &self.blocks {
+            for ch in 0..d {
+                w.iter_mut().for_each(|x| *x = 0.0);
+                for (jj, bpoly) in blk.basis.iter().enumerate() {
+                    let j = blk.j0 + jj;
+                    let mut coef = v[j * d + ch];
+                    if let Some(cs) = &self.col_scale {
+                        coef *= cs[j];
+                    }
+                    if coef == 0.0 {
+                        continue;
+                    }
+                    for (wc, &bc) in w.iter_mut().zip(bpoly) {
+                        *wc += coef * bc;
+                    }
+                }
+                for (i, (&ui, &idv)) in self.u.iter().zip(&blk.inv_den).enumerate() {
+                    out[i * d + ch] += crate::ftfi::functions::horner(w, ui) * idv;
+                }
+            }
+        }
+        if let Some(rs) = &self.row_scale {
+            for (i, &r) in rs.iter().enumerate() {
+                for o in &mut out[i * d..(i + 1) * d] {
+                    *o *= r;
+                }
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over [`RationalPlan::apply_into`].
+    pub fn apply(&self, v: &Matrix) -> Matrix {
+        assert_eq!(v.rows(), self.cols);
+        let d = v.cols();
+        let mut out = Matrix::zeros(self.rows, d);
+        let mut w = vec![0.0; self.coeff_len];
+        self.apply_into(v.data(), d, out.data_mut(), &mut w);
+        out
+    }
 }
 
 /// One node of the D&C merge: shared denominator + per-channel numerators,
@@ -274,6 +499,59 @@ mod tests {
         );
         let rel_loose = loose.frobenius_diff(&want) / (1.0 + want.frobenius());
         assert!(rel_loose > rel, "expected degradation, got {rel} vs {rel_loose}");
+    }
+
+    /// The prepared plan (basis-polynomial form) matches the dense
+    /// reference on the same cases the legacy D&C path is pinned on, and
+    /// its `apply` / `apply_into` surfaces agree bitwise.
+    #[test]
+    fn rational_plan_matches_dense_and_its_into_form() {
+        let mut rng = Pcg::seed(12);
+        let num = vec![1.0];
+        let den = vec![1.0, 0.0, 0.3];
+        let f = FDist::Rational { num: num.clone(), den: den.clone() };
+        for &(a, b, d) in &[(7usize, 9usize, 1usize), (30, 25, 3), (1, 40, 2), (150, 300, 2)] {
+            let xs = rng.uniform_vec(a, 0.0, 5.0);
+            let ys = rng.uniform_vec(b, 0.0, 5.0);
+            let v = Matrix::randn(b, d, &mut rng);
+            let want = cross_apply_dense(&f, &xs, &ys, &v);
+            let plan = RationalPlan::build(&num, &den, &xs, &ys, &RationalOpts::default());
+            let got = plan.apply(&v);
+            let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+            assert!(rel < 1e-6, "a={a} b={b} d={d}: rel={rel}");
+            let mut out = vec![f64::NAN; a * d];
+            let mut w = vec![0.0; plan.coeff_len()];
+            plan.apply_into(v.data(), d, &mut out, &mut w);
+            assert_eq!(out, got.data(), "apply_into must be bit-identical to apply");
+        }
+    }
+
+    /// The Cauchy plan (exp weights folded into the rational core).
+    #[test]
+    fn cauchy_plan_matches_dense() {
+        let mut rng = Pcg::seed(13);
+        let (lambda, c) = (-0.3, 1.5);
+        let f = FDist::ExpOverLinear { lambda, c };
+        for &(a, b, d) in &[(9usize, 12usize, 1usize), (50, 40, 3), (200, 180, 2)] {
+            let xs = rng.uniform_vec(a, 0.0, 6.0);
+            let ys = rng.uniform_vec(b, 0.0, 6.0);
+            let v = Matrix::randn(b, d, &mut rng);
+            let want = cross_apply_dense(&f, &xs, &ys, &v);
+            let plan = RationalPlan::build_cauchy(lambda, c, &xs, &ys, &RationalOpts::default());
+            let got = plan.apply(&v);
+            let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
+            assert!(rel < 1e-6, "a={a} b={b} d={d}: rel={rel}");
+        }
+    }
+
+    #[test]
+    fn rational_plan_degenerate_shapes() {
+        let plan = RationalPlan::build(&[1.0], &[1.0, 1.0], &[], &[1.0], &RationalOpts::default());
+        assert_eq!(plan.apply(&Matrix::zeros(1, 2)).rows(), 0);
+        let plan = RationalPlan::build(&[1.0], &[1.0, 1.0], &[1.0], &[], &RationalOpts::default());
+        let out = plan.apply(&Matrix::zeros(0, 2));
+        assert_eq!(out.rows(), 1);
+        assert!(out.data().iter().all(|&x| x == 0.0));
     }
 
     #[test]

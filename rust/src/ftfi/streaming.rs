@@ -1,0 +1,389 @@
+//! Streaming field integration: a stateful session that owns the
+//! current field and its cached integral and serves sparse updates
+//! through the delta fast path.
+//!
+//! FTFI is linear in the field, so a client that mutates `k` rows per
+//! tick (the robotics-masking / interactive-mesh serving scenario) does
+//! not need a full `O(n · polylog(n) · d)` re-integration: the exact
+//! change of the output is `integrate(Δ)`, and the sparse delta pass
+//! ([`crate::tree::integrator_tree::IntegratorTree::integrate_delta_prepared_into_pooled`])
+//! computes it touching only the `O(k log n)` IntegratorTree nodes
+//! whose slot regions contain a changed row, for
+//! `O(k · polylog(n) · d + n · d)` per update.
+//!
+//! **Drift policy.** Each delta application adds one float-rounding
+//! layer to the cached output (the delta is exact in real arithmetic,
+//! so drift grows only at machine-epsilon scale per update — the
+//! superposition harness in `tests/ftfi_delta.rs` states the per-update
+//! ULP budget). To keep it bounded *and testable*, the session counts
+//! updates and performs a full bit-exact re-integration every
+//! `refresh_every` updates; the state right after a refresh is
+//! **bit-identical** to a cold `integrate` of the current field (pinned
+//! by the mutation-sequence tests). `refresh_every = 0` disables the
+//! policy (delta-only, drift unbounded).
+
+use crate::ftfi::error::FtfiError;
+use crate::ftfi::TreeFieldIntegrator;
+use crate::linalg::matrix::Matrix;
+use crate::tree::integrator_tree::{ItStats, PreparedPlans};
+use std::sync::Arc;
+
+/// A streaming session over one `(tree, f)` pair: owns the current
+/// field and the cached output, applies sparse row updates through the
+/// delta fast path, and refreshes bit-exactly every `refresh_every`
+/// updates. Shares its integrator and prepared plans via `Arc`, so many
+/// sessions (the serving executor's `max_sessions`) ride one tree, one
+/// plan set and one work pool.
+pub struct StreamingIntegrator {
+    tfi: Arc<TreeFieldIntegrator>,
+    plans: Arc<PreparedPlans>,
+    /// Current field (`n×d`); row assignments are exact, so this always
+    /// equals the field a rebuild-from-scratch oracle would hold.
+    field: Matrix,
+    /// Cached `integrate(field)` (exact after a refresh, within the
+    /// accumulated-rounding drift budget between refreshes).
+    out: Matrix,
+    /// Dense delta staging: only the rows touched by the current update
+    /// are meaningful; they are re-zeroed on first touch per update.
+    dx: Matrix,
+    /// Delta-output buffer (`Δout = integrate(Δ)`).
+    dout: Matrix,
+    /// Unique rows touched by the current update.
+    dirty: Vec<u32>,
+    /// Per-vertex epoch stamps deduplicating rows within one update.
+    stamp: Vec<u32>,
+    epoch: u32,
+    refresh_every: usize,
+    since_refresh: usize,
+    updates: usize,
+    refreshes: usize,
+}
+
+impl StreamingIntegrator {
+    /// Open a session: validates the initial field against the
+    /// integrator/plans pair and pays one full integration to seed the
+    /// cached output.
+    pub fn new(
+        tfi: Arc<TreeFieldIntegrator>,
+        plans: Arc<PreparedPlans>,
+        field: Matrix,
+        refresh_every: usize,
+    ) -> Result<Self, FtfiError> {
+        let n = tfi.n();
+        if field.rows() != n {
+            return Err(FtfiError::ShapeMismatch { expected: n, got: field.rows() });
+        }
+        if field.cols() == 0 {
+            return Err(FtfiError::InvalidInput(
+                "streaming session needs at least one field channel".to_string(),
+            ));
+        }
+        let d = field.cols();
+        let mut out = Matrix::zeros(n, d);
+        tfi.integrate_prepared_into(&field, &plans, &mut out)?;
+        Ok(StreamingIntegrator {
+            tfi,
+            plans,
+            field,
+            out,
+            dx: Matrix::zeros(n, d),
+            dout: Matrix::zeros(n, d),
+            dirty: Vec::new(),
+            stamp: vec![0; n],
+            epoch: 0,
+            refresh_every,
+            since_refresh: 0,
+            updates: 0,
+            refreshes: 0,
+        })
+    }
+
+    /// Apply a sparse update: set the listed field rows to `values`
+    /// (`rows.len()×d`; duplicate rows within one call apply in order,
+    /// last write wins) and return the refreshed output. Runs the delta
+    /// fast path unless this update hits the `refresh_every` boundary,
+    /// in which case the output is recomputed bit-exactly from the
+    /// current field. A failed update (bad row / shape) changes nothing
+    /// — the session stays serviceable.
+    pub fn apply_update(&mut self, rows: &[u32], values: &Matrix) -> Result<&Matrix, FtfiError> {
+        let n = self.field.rows();
+        let d = self.field.cols();
+        if values.rows() != rows.len() {
+            return Err(FtfiError::ShapeMismatch { expected: rows.len(), got: values.rows() });
+        }
+        if values.cols() != d {
+            return Err(FtfiError::InvalidInput(format!(
+                "update has {} channels, session field has {d}",
+                values.cols()
+            )));
+        }
+        for &v in rows {
+            if v as usize >= n {
+                return Err(FtfiError::InvalidInput(format!(
+                    "update row {v} out of range (n = {n})"
+                )));
+            }
+        }
+        // Stage: Δ row = new − old (accumulated across duplicates), and
+        // the field row itself is *assigned* — the session field always
+        // bit-matches a rebuild-from-scratch oracle's.
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        }
+        self.dirty.clear();
+        for (i, &v) in rows.iter().enumerate() {
+            let vi = v as usize;
+            if self.stamp[vi] != self.epoch {
+                self.stamp[vi] = self.epoch;
+                self.dirty.push(v);
+                self.dx.row_mut(vi).iter_mut().for_each(|x| *x = 0.0);
+            }
+            let new_row = values.row(i);
+            let old_row = self.field.row_mut(vi);
+            let dx_row = &mut self.dx.data_mut()[vi * d..(vi + 1) * d];
+            for c in 0..d {
+                dx_row[c] += new_row[c] - old_row[c];
+                old_row[c] = new_row[c];
+            }
+        }
+        self.updates += 1;
+        self.since_refresh += 1;
+        if self.refresh_every > 0 && self.since_refresh >= self.refresh_every {
+            self.refresh()?;
+        } else if !self.dirty.is_empty() {
+            self.tfi.integrate_delta_prepared_into(
+                &self.dirty,
+                &self.dx,
+                &self.plans,
+                &mut self.dout,
+            )?;
+            self.out.axpy(1.0, &self.dout);
+        }
+        Ok(&self.out)
+    }
+
+    /// Force a full bit-exact re-integration of the current field (the
+    /// drift policy calls this automatically every `refresh_every`
+    /// updates).
+    pub fn refresh(&mut self) -> Result<&Matrix, FtfiError> {
+        self.tfi.integrate_prepared_into(&self.field, &self.plans, &mut self.out)?;
+        self.since_refresh = 0;
+        self.refreshes += 1;
+        Ok(&self.out)
+    }
+
+    /// The cached output (`integrate(field)` up to the bounded drift).
+    pub fn output(&self) -> &Matrix {
+        &self.out
+    }
+
+    /// The current field.
+    pub fn field(&self) -> &Matrix {
+        &self.field
+    }
+
+    /// Vertices of the underlying metric.
+    pub fn n(&self) -> usize {
+        self.field.rows()
+    }
+
+    /// Field channels this session was opened with.
+    pub fn channels(&self) -> usize {
+        self.field.cols()
+    }
+
+    /// The configured refresh cadence (`0` = never).
+    pub fn refresh_every(&self) -> usize {
+        self.refresh_every
+    }
+
+    /// Updates applied over the session lifetime.
+    pub fn updates_applied(&self) -> usize {
+        self.updates
+    }
+
+    /// Full re-integrations performed (drift policy + explicit
+    /// [`StreamingIntegrator::refresh`] calls).
+    pub fn refreshes(&self) -> usize {
+        self.refreshes
+    }
+
+    /// Updates since the last full re-integration (the current drift
+    /// depth).
+    pub fn updates_since_refresh(&self) -> usize {
+        self.since_refresh
+    }
+
+    /// Integrator statistics with the streaming counters filled in:
+    /// `delta_nodes_visited` from the shared tree (pool-scoped lifetime
+    /// aggregate — compare deltas), `delta_refreshes` from this session.
+    pub fn stats(&self) -> ItStats {
+        let mut st = self.tfi.stats();
+        st.delta_refreshes = self.refreshes;
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ftfi::brute::BruteForceIntegrator;
+    use crate::ftfi::functions::FDist;
+    use crate::ftfi::FieldIntegrator;
+    use crate::graph::generators::random_tree;
+    use crate::ml::rng::Pcg;
+
+    fn session(
+        n: usize,
+        d: usize,
+        refresh_every: usize,
+        seed: u64,
+    ) -> (StreamingIntegrator, BruteForceIntegrator, FDist) {
+        let mut rng = Pcg::seed(seed);
+        let tree = random_tree(n, 0.1, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(8).build().unwrap();
+        let tfi = Arc::new(tfi);
+        let plans = Arc::new(tfi.prepare_plans(&f, d).unwrap());
+        let brute = BruteForceIntegrator::from_tree(tree);
+        let field = Matrix::randn(n, d, &mut rng);
+        let s = StreamingIntegrator::new(tfi, plans, field, refresh_every).unwrap();
+        (s, brute, f)
+    }
+
+    #[test]
+    fn updates_track_the_brute_oracle() {
+        let (mut s, brute, f) = session(120, 2, 8, 1);
+        let mut rng = Pcg::seed(2);
+        for step in 0..20 {
+            let k = [0usize, 1, 3, 7][rng.below(4)];
+            let mut rows = Vec::new();
+            while rows.len() < k {
+                let v = rng.below(120) as u32;
+                if !rows.contains(&v) {
+                    rows.push(v);
+                }
+            }
+            let vals = Matrix::randn(k, 2, &mut rng);
+            let out = s.apply_update(&rows, &vals).unwrap().clone();
+            let want = brute.integrate(&f, s.field()).unwrap();
+            let rel = out.frobenius_diff(&want) / (1.0 + want.frobenius());
+            assert!(rel < 1e-8, "step {step}: drifted to rel {rel}");
+        }
+        assert_eq!(s.updates_applied(), 20);
+        assert!(s.stats().delta_refreshes >= 2, "refresh_every=8 over 20 updates");
+    }
+
+    #[test]
+    fn refresh_boundary_is_bit_identical_to_cold_integrate() {
+        let mut rng = Pcg::seed(3);
+        let tree = random_tree(150, 0.1, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(8).build().unwrap();
+        let tfi = Arc::new(tfi);
+        let plans = Arc::new(tfi.prepare_plans(&f, 2).unwrap());
+        let field = Matrix::randn(150, 2, &mut rng);
+        let mut s =
+            StreamingIntegrator::new(Arc::clone(&tfi), Arc::clone(&plans), field, 5).unwrap();
+        let mut rng = Pcg::seed(4);
+        for step in 1..=11 {
+            let rows = [rng.below(150) as u32];
+            let vals = Matrix::randn(1, 2, &mut rng);
+            s.apply_update(&rows, &vals).unwrap();
+            let cold = tfi.integrate_prepared(s.field(), &plans).unwrap();
+            if step % 5 == 0 {
+                assert!(
+                    *s.output() == cold,
+                    "step {step}: post-refresh state must be bit-identical to cold integrate"
+                );
+            } else {
+                // Between refreshes drift stays at rounding scale.
+                let rel = s.output().frobenius_diff(&cold) / (1.0 + cold.frobenius());
+                assert!(rel < 1e-11, "step {step}: rel {rel}");
+            }
+        }
+        assert_eq!(s.refreshes(), 2);
+        assert_eq!(s.updates_since_refresh(), 1);
+    }
+
+    #[test]
+    fn duplicate_rows_in_one_update_apply_in_order() {
+        let (mut s, brute, f) = session(40, 1, 0, 5);
+        // Same row three times: last write wins on the field.
+        let rows = [7u32, 7, 7];
+        let vals = Matrix::from_vec(3, 1, vec![1.0, -2.0, 5.0]);
+        s.apply_update(&rows, &vals).unwrap();
+        assert_eq!(s.field().get(7, 0), 5.0);
+        let want = brute.integrate(&f, s.field()).unwrap();
+        let rel = s.output().frobenius_diff(&want) / (1.0 + want.frobenius());
+        assert!(rel < 1e-9, "rel {rel}");
+    }
+
+    #[test]
+    fn degenerate_sessions_and_updates() {
+        // n = 1 singleton metric.
+        let (mut s, brute, f) = session(1, 2, 2, 6);
+        let out = s.apply_update(&[0], &Matrix::from_vec(1, 2, vec![3.0, -1.0])).unwrap();
+        let want = brute.integrate(&f, &Matrix::from_vec(1, 2, vec![3.0, -1.0])).unwrap();
+        assert!(out.frobenius_diff(&want) < 1e-12);
+        // k = 0 no-op still counts toward the refresh cadence.
+        s.apply_update(&[], &Matrix::zeros(0, 2)).unwrap();
+        assert_eq!(s.refreshes(), 1, "the second update must have hit refresh_every = 2");
+        // k = n full-row update.
+        let (mut s, brute, f) = session(30, 1, 0, 7);
+        let rows: Vec<u32> = (0..30).collect();
+        let mut rng = Pcg::seed(8);
+        let vals = Matrix::randn(30, 1, &mut rng);
+        s.apply_update(&rows, &vals).unwrap();
+        let want = brute.integrate(&f, &vals).unwrap();
+        let rel = s.output().frobenius_diff(&want) / (1.0 + want.frobenius());
+        assert!(rel < 1e-9, "rel {rel}");
+    }
+
+    #[test]
+    fn malformed_updates_fail_without_corrupting_the_session() {
+        let (mut s, brute, f) = session(50, 2, 0, 9);
+        let before = s.output().clone();
+        // Row out of range.
+        assert!(matches!(
+            s.apply_update(&[50], &Matrix::zeros(1, 2)),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        // Shape mismatches.
+        assert!(matches!(
+            s.apply_update(&[0], &Matrix::zeros(2, 2)),
+            Err(FtfiError::ShapeMismatch { .. })
+        ));
+        assert!(matches!(
+            s.apply_update(&[0], &Matrix::zeros(1, 3)),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        assert!(*s.output() == before, "failed updates must not move the output");
+        assert_eq!(s.updates_applied(), 0);
+        // The session still serves good updates.
+        let out = s.apply_update(&[0], &Matrix::from_vec(1, 2, vec![1.0, 2.0])).unwrap().clone();
+        let want = brute.integrate(&f, s.field()).unwrap();
+        assert!(out.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-8);
+    }
+
+    #[test]
+    fn new_validates_the_initial_field() {
+        let mut rng = Pcg::seed(10);
+        let tree = random_tree(20, 0.1, 1.0, &mut rng);
+        let f = FDist::Identity;
+        let tfi = Arc::new(TreeFieldIntegrator::builder(&tree).build().unwrap());
+        let plans = Arc::new(tfi.prepare_plans(&f, 1).unwrap());
+        assert!(matches!(
+            StreamingIntegrator::new(
+                Arc::clone(&tfi),
+                Arc::clone(&plans),
+                Matrix::zeros(19, 1),
+                4
+            ),
+            Err(FtfiError::ShapeMismatch { expected: 20, got: 19 })
+        ));
+        assert!(StreamingIntegrator::new(tfi, plans, Matrix::zeros(20, 1), 4).is_ok());
+    }
+}

@@ -16,6 +16,11 @@
 //! - prepared-plan handles ([`ftfi::PreparedIntegrator`]) that build the
 //!   per-block cross plans once per `(tree, f)` and amortise them over
 //!   any number of integrations — the serving / Sinkhorn / GW pattern;
+//! - streaming delta integration ([`ftfi::StreamingIntegrator`], the
+//!   `integrate_delta*` family): a k-row field update refreshes the
+//!   cached integral exactly in O(k·polylog(n)·d + n·d) by linearity,
+//!   with a configurable bit-exact full-refresh drift policy — the
+//!   online/interactive serving scenario (`serve --streaming`);
 //! - the full cordial-function multiplier suite (outer-product, Hankel/
 //!   FFT, rational multipoint, Cauchy-LDR, Vandermonde) plus the RFF and
 //!   NU-FFT approximate extensions;
@@ -49,7 +54,7 @@ pub mod tree;
 pub use ftfi::functions::FDist;
 pub use ftfi::{
     EnsembleFieldIntegrator, EnsembleMethod, FieldIntegrator, FtfiError, GraphFieldIntegrator,
-    PreparedIntegrator, TreeFieldIntegrator,
+    PreparedIntegrator, StreamingIntegrator, TreeFieldIntegrator,
 };
 pub use graph::Graph;
 pub use linalg::matrix::Matrix;

@@ -3,12 +3,20 @@
 //! ```text
 //! ftfi integrate  --n 5000 --f exp --repeat 8   FTFI vs brute; prepared-plan reuse
 //! ftfi integrate  --ensemble-trees 8            FRT/Bartal tree-ensemble route
+//! ftfi integrate  --delta-rows 16               sparse-delta vs full re-integration
 //! ftfi serve      --requests 500 --batch 8      batched field-integration server
 //! ftfi serve      --backend ensemble            serve the tree-ensemble backend
+//! ftfi serve      --streaming --sessions 4      per-session sparse-update serving
 //! ftfi gw         --n 300                       Gromov–Wasserstein demo
 //! ftfi train      --steps 200 --lr 0.01         train TopViT-mini via PJRT [pjrt]
 //! ftfi info                                     versions, artifact status
 //! ```
+//!
+//! `serve --streaming` opens `[streaming]`-configured sessions
+//! (`--refresh-every R`, `--max-sessions S`) that own a field and its
+//! cached integral and answer k-row updates through the delta fast
+//! path; `integrate --delta-rows k` compares one such update against a
+//! full prepared re-integration.
 //!
 //! `integrate` and `serve` accept `--threads N` (0 = auto: honour
 //! `FTFI_THREADS`, else all cores; 1 = serial) for the parallel
@@ -23,9 +31,10 @@
 
 use ftfi::bench_util::time_once;
 use ftfi::cli::Args;
-use ftfi::config::{Config, EnsembleConfig, IntegratorConfig};
+use ftfi::config::{Config, EnsembleConfig, IntegratorConfig, StreamingConfig};
 use ftfi::coordinator::{
     BatchExecutor, BatcherConfig, FieldExecutor, InferenceServer, PreparedFieldExecutor,
+    StreamingFieldExecutor,
 };
 use ftfi::ftfi::brute::{BruteForceIntegrator, BruteTreeIntegrator};
 use ftfi::ftfi::functions::FDist;
@@ -182,10 +191,91 @@ fn cmd_integrate_ensemble(args: &Args, ecfg: &EnsembleConfig) -> CliResult {
     Ok(())
 }
 
+/// Resolve the streaming knobs from `--config` (the `[streaming]`
+/// section) plus direct CLI overrides.
+fn streaming_config(args: &Args) -> Result<StreamingConfig, Box<dyn std::error::Error>> {
+    let mut cfg = match args.get("config") {
+        Some(path) => StreamingConfig::from_config(&Config::load(path)?),
+        None => StreamingConfig::default(),
+    };
+    if let Some(r) = args.get("refresh-every") {
+        cfg.refresh_every = r.parse().map_err(|_| format!("bad --refresh-every {r:?}"))?;
+    }
+    if let Some(s) = args.get("max-sessions") {
+        cfg.max_sessions = s.parse().map_err(|_| format!("bad --max-sessions {s:?}"))?;
+    }
+    Ok(cfg)
+}
+
+/// The sparse-delta route of `integrate`: apply a k-row update to an
+/// already-integrated field and compare the delta fast path against a
+/// full prepared re-integration — wall clock and superposition drift.
+fn cmd_integrate_delta(args: &Args, k: usize) -> CliResult {
+    let n = args.get_usize("n", 4000);
+    let d = args.get_usize("channels", 4);
+    let repeat = args.get_usize("repeat", 16).max(1);
+    let k = k.min(n);
+    let f = parse_f(args.get_str("f", "invquad"), args.get_f64("lambda", 0.5))?;
+    let icfg = integrator_config(args)?;
+    let policy = icfg.to_policy()?;
+    let mut rng = Pcg::seed(args.get_usize("seed", 0) as u64);
+    let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+    let tree = try_minimum_spanning_tree(&g)?;
+    let tfi = TreeFieldIntegrator::builder(&tree)
+        .leaf_threshold(icfg.leaf_threshold)
+        .policy(policy)
+        .threads(icfg.threads)
+        .build()?;
+    let plans = tfi.prepare_plans(&f, d)?;
+    let x = Matrix::randn(n, d, &mut rng);
+    let mut base = Matrix::zeros(n, d);
+    tfi.integrate_prepared_into(&x, &plans, &mut base)?;
+
+    // k distinct dirty rows + their delta field.
+    let (rows, dx) = ftfi::bench_util::sparse_delta(n, d, k, &mut rng);
+    let mut x2 = x.clone();
+    x2.axpy(1.0, &dx);
+
+    let mut dout = Matrix::zeros(n, d);
+    let mut full = Matrix::zeros(n, d);
+    let visits_before = tfi.stats().delta_nodes_visited;
+    let (_, t_delta) = time_once(|| {
+        for _ in 0..repeat {
+            tfi.integrate_delta_prepared_into(&rows, &dx, &plans, &mut dout)
+                .expect("delta integrate");
+        }
+    });
+    let visits = (tfi.stats().delta_nodes_visited - visits_before) / repeat;
+    let (_, t_full) = time_once(|| {
+        for _ in 0..repeat {
+            tfi.integrate_prepared_into(&x2, &plans, &mut full).expect("full integrate");
+        }
+    });
+    let mut approx = base.clone();
+    approx.axpy(1.0, &dout);
+    let drift = approx.max_abs_diff(&full);
+    println!(
+        "delta update: n = {n}, d = {d}, k = {k}, f = {f:?} ({} threads)",
+        tfi.pool().threads()
+    );
+    println!(
+        "delta {:.3} ms/update vs full {:.3} ms/recompute ({:.1}x), max abs drift {drift:.2e}, \
+         {visits} delta node visits/update",
+        t_delta / repeat as f64 * 1e3,
+        t_full / repeat as f64 * 1e3,
+        t_full / t_delta.max(1e-12)
+    );
+    Ok(())
+}
+
 fn cmd_integrate(args: &Args) -> CliResult {
     let ecfg = ensemble_config(args)?;
     if ecfg.enabled() {
         return cmd_integrate_ensemble(args, &ecfg);
+    }
+    if let Some(k) = args.get("delta-rows") {
+        let k: usize = k.parse().map_err(|_| format!("bad --delta-rows {k:?}"))?;
+        return cmd_integrate_delta(args, k);
     }
     let n = args.get_usize("n", 5000);
     let extra = args.get_usize("extra-edges", n / 2);
@@ -253,12 +343,111 @@ fn cmd_integrate(args: &Args) -> CliResult {
 /// backend). `--backend topvit` switches to the PJRT model path, which
 /// needs the `pjrt` feature.
 fn cmd_serve(args: &Args) -> CliResult {
+    if args.get_flag("streaming") {
+        return cmd_serve_streaming(args);
+    }
     match args.get_str("backend", "field") {
         "field" => cmd_serve_field(args),
         "ensemble" => cmd_serve_ensemble(args),
         "topvit" => cmd_serve_topvit(args),
         other => Err(format!("unknown backend {other:?} (field|ensemble|topvit)").into()),
     }
+}
+
+/// Serve the streaming workload: one shared [`StreamingFieldExecutor`]
+/// (session table, tree, frozen plans, work pool — all global to the
+/// server) behind an `Arc`, every worker dispatching set/update
+/// requests into it. Each simulated client opens a session and then
+/// mutates `--delta-rows` rows per tick.
+fn cmd_serve_streaming(args: &Args) -> CliResult {
+    let n = args.get_usize("n", 2000);
+    let n_requests = args.get_usize("requests", 200);
+    let batch = args.get_usize("batch", 8);
+    let workers = args.get_usize("workers", 2);
+    let k = args.get_usize("delta-rows", 4).min(n);
+    let f = parse_f(args.get_str("f", "exp"), args.get_f64("lambda", 0.5))?;
+    let icfg = integrator_config(args)?;
+    let policy = icfg.to_policy()?;
+    let scfg = streaming_config(args)?;
+    let sessions = args.get_usize("sessions", 4).clamp(1, scfg.max_sessions.max(1));
+
+    let mut rng = Pcg::seed(7);
+    let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+    let tree = try_minimum_spanning_tree(&g)?;
+    let pool = Arc::new(WorkPool::with_auto(icfg.threads));
+    let tfi = TreeFieldIntegrator::builder(&tree)
+        .leaf_threshold(icfg.leaf_threshold)
+        .policy(policy)
+        .pool(Arc::clone(&pool))
+        .build()?;
+    let exec = Arc::new(StreamingFieldExecutor::new(
+        tfi,
+        &f,
+        1,
+        scfg.refresh_every,
+        scfg.max_sessions,
+        batch.max(1),
+    )?);
+    println!(
+        "streaming serve: f = {f:?}, n = {n}, {sessions} sessions (refresh every {}, \
+         {workers} workers, {} integration threads shared)",
+        scfg.refresh_every,
+        pool.threads()
+    );
+
+    let factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>> = (0..workers
+        .max(1))
+        .map(|_| {
+            let exec = Arc::clone(&exec);
+            Box::new(move || {
+                Box::new(exec) as Box<dyn BatchExecutor>
+            }) as Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>
+        })
+        .collect();
+    let server = InferenceServer::start(
+        factories,
+        BatcherConfig { batch_size: batch.max(1), batch_timeout: Duration::from_millis(2) },
+        1024,
+    );
+
+    // Open every session (full-field set), then stream updates.
+    for s in 0..sessions {
+        let mut req = vec![0.0f32, s as f32];
+        req.extend((0..n).map(|_| rng.normal() as f32));
+        server.submit_blocking(req).unwrap().wait().map_err(|e| e.to_string())?;
+    }
+    println!("submitting {n_requests} updates of k = {k} rows (batch {batch})...");
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let mut req = vec![1.0f32, (i % sessions) as f32, k as f32];
+            // Rows i·k.. wrap around the vertex set: distinct within one
+            // update, drifting across updates.
+            req.extend((0..k).map(|j| ((i * k + j) % n) as f32));
+            req.extend((0..k).map(|_| rng.normal() as f32));
+            server.submit_blocking(req).unwrap()
+        })
+        .collect();
+    let mut ok = 0;
+    for h in handles {
+        if h.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let m = server.metrics();
+    let um = exec.metrics();
+    println!(
+        "served {ok}/{n_requests}: {:.0} req/s, request p50 {:.1}ms p95 {:.1}ms; \
+         update p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms ({} updates recorded)",
+        m.throughput_rps,
+        m.latency_p50 * 1e3,
+        m.latency_p95 * 1e3,
+        um.update_p50 * 1e3,
+        um.update_p95 * 1e3,
+        um.update_p99 * 1e3,
+        um.updates
+    );
+    server.shutdown();
+    Ok(())
 }
 
 /// Serve the tree-ensemble backend: one shared [`EnsembleFieldIntegrator`]

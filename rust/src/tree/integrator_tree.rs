@@ -18,6 +18,13 @@
 //! detection, FFT table construction) — the repeated-integration pattern
 //! of the serving coordinator and of the GW/Sinkhorn inner loops.
 //!
+//! On top of the prepared path, [`IntegratorTree::integrate_delta_prepared`]
+//! serves the streaming scenario: integration is linear in the field,
+//! so a k-row update needs only the sparse twin of the workspace
+//! recursion over the O(k log n) nodes whose slot regions contain a
+//! changed row (dirty-slot prefix sums over the nested-dissection
+//! layout), in O(k·polylog(n)·d + n·d).
+//!
 //! Per internal node, the paper's eight fields materialise as:
 //! `left_ids` / `right_ids` (child-local → node-local id maps),
 //! `left_d` / `right_d` (sorted distinct pivot distances),
@@ -129,6 +136,18 @@ pub struct IntegratorTree {
     /// node's aggregates are ever live per task: children finish before
     /// a node's combine step allocates).
     agg_rows_max: usize,
+    /// CSR offsets of the inverse slot map: vertex `v`'s slot copies are
+    /// `vert_slot_items[vert_slot_off[v]..vert_slot_off[v+1]]` (pivots
+    /// have one copy per level they pivot at). The delta path uses this
+    /// to mark exactly the dirty slots of a sparse field update.
+    vert_slot_off: Vec<u32>,
+    /// CSR items of the inverse slot map (see [`Self::vert_slot_off`]).
+    vert_slot_items: Vec<u32>,
+    /// IT nodes actually processed (not skipped as clean) by the sparse
+    /// delta passes over this tree's lifetime. Exposed through
+    /// [`ItStats::delta_nodes_visited`]; the sparsity tests pin that a
+    /// k = 1 update visits far fewer nodes than a full integration.
+    delta_nodes_visited: AtomicUsize,
 }
 
 /// Summary statistics (used by the perf log and the ablation benches).
@@ -161,6 +180,17 @@ pub struct ItStats {
     /// aggregation) is on top — `PreparedPlans::workspace_bytes` reports
     /// the full per-workspace figure for a given channel width.
     pub workspace_bytes: usize,
+    /// IT nodes actually processed (not skipped as clean) by sparse
+    /// delta integrations (`integrate_delta_prepared*`). **Lifetime
+    /// aggregate** of the tree instance — compare deltas, not absolutes.
+    /// A k-row update visits only the O(k log n) nodes whose slot
+    /// regions contain a changed row.
+    pub delta_nodes_visited: usize,
+    /// Full bit-exact re-integrations triggered by a
+    /// [`crate::ftfi::streaming::StreamingIntegrator`]'s drift policy.
+    /// Zero at the bare-tree level (trees do not refresh); populated by
+    /// `StreamingIntegrator::stats` from its session counter.
+    pub delta_refreshes: usize,
 }
 
 /// Everything `f`-dependent, frozen at prepare time: per-internal-node
@@ -199,6 +229,9 @@ struct WorkspaceSizes {
     fft_len: usize,
     /// Chebyshev aggregation rank (max expansion rank).
     cheb_rank: usize,
+    /// Rational/Cauchy numerator-coefficient scratch length (max
+    /// prepared basis degree + 1 over the rational plans).
+    rat_len: usize,
 }
 
 /// Per-task scratch: the aggregate bump arena (one internal node's
@@ -220,7 +253,7 @@ impl NodeScratch {
         if self.agg.len() < sizes.agg_rows * d {
             self.agg.resize(sizes.agg_rows * d, 0.0);
         }
-        self.cross.ensure(sizes.fft_len, sizes.cheb_rank, d);
+        self.cross.ensure(sizes.fft_len, sizes.cheb_rank, sizes.rat_len, d);
     }
 }
 
@@ -232,11 +265,21 @@ struct Workspace {
     slab_in: Vec<f64>,
     slab_out: Vec<f64>,
     scratch: NodeScratch,
+    /// Per-slot dirty prefix sums for the sparse delta pass
+    /// (`total_slots + 1` entries): a slot range `[a, b)` contains a
+    /// changed row iff `dirty_prefix[b] > dirty_prefix[a]`. Rebuilt per
+    /// delta call; unused (stale) on full-field calls.
+    dirty_prefix: Vec<u32>,
 }
 
 impl Workspace {
     fn new() -> Self {
-        Workspace { slab_in: Vec::new(), slab_out: Vec::new(), scratch: NodeScratch::new() }
+        Workspace {
+            slab_in: Vec::new(),
+            slab_out: Vec::new(),
+            scratch: NodeScratch::new(),
+            dirty_prefix: Vec::new(),
+        }
     }
 }
 
@@ -285,12 +328,16 @@ impl PreparedPlans {
     /// [`ItStats::workspace_bytes`] for the structural part).
     pub fn workspace_bytes(&self, d: usize) -> usize {
         // In/out slabs + aggregate arena + Chebyshev w/basis + the
-        // separable accumulator, all f64; the FFT scratch is complex.
+        // separable accumulator + the rational coefficient scratch, all
+        // f64; the FFT scratch is complex; the delta dirty-prefix is u32.
         let f64s = 2 * self.sizes.slab_rows * d
             + self.sizes.agg_rows * d
             + self.sizes.cheb_rank * (d + 1)
+            + self.sizes.rat_len
             + d;
-        f64s * std::mem::size_of::<f64>() + self.sizes.fft_len * 16
+        f64s * std::mem::size_of::<f64>()
+            + self.sizes.fft_len * 16
+            + (self.sizes.slab_rows + 1) * std::mem::size_of::<u32>()
     }
 
     fn checkout_workspace(&self, d: usize) -> Workspace {
@@ -301,6 +348,9 @@ impl PreparedPlans {
         }
         if ws.slab_out.len() < rows {
             ws.slab_out.resize(rows, 0.0);
+        }
+        if ws.dirty_prefix.len() < self.sizes.slab_rows + 1 {
+            ws.dirty_prefix.resize(self.sizes.slab_rows + 1, 0);
         }
         ws.scratch.ensure(&self.sizes, d);
         ws
@@ -342,6 +392,9 @@ impl IntegratorTree {
             root_slot: Vec::new(),
             total_slots: 0,
             agg_rows_max: 0,
+            vert_slot_off: Vec::new(),
+            vert_slot_items: Vec::new(),
+            delta_nodes_visited: AtomicUsize::new(0),
         };
         let mut scratch = SeparatorScratch::new(n);
         let verts: Vec<u32> = (0..n as u32).collect();
@@ -413,6 +466,24 @@ impl IntegratorTree {
             }
         }
         self.agg_rows_max = agg;
+        // Invert the slot map into a vertex → slot-copies CSR (counting
+        // sort over `slot_src`): the delta path marks a changed vertex
+        // dirty by touching exactly its slot copies.
+        let mut off = vec![0u32; self.n + 1];
+        for &v in &self.slot_src {
+            off[v as usize + 1] += 1;
+        }
+        for i in 0..self.n {
+            off[i + 1] += off[i];
+        }
+        let mut items = vec![0u32; self.slot_src.len()];
+        let mut cursor: Vec<u32> = off[..self.n].to_vec();
+        for (s, &v) in self.slot_src.iter().enumerate() {
+            items[cursor[v as usize] as usize] = s as u32;
+            cursor[v as usize] += 1;
+        }
+        self.vert_slot_off = off;
+        self.vert_slot_items = items;
     }
 
     /// Assign the slot range of node `idx` (covering the global vertices
@@ -617,13 +688,15 @@ impl IntegratorTree {
             agg_rows: self.agg_rows_max,
             fft_len: 0,
             cheb_rank: 0,
+            rat_len: 0,
         };
         for node in &nodes {
             if let PreparedNode::Internal { into_left, into_right, .. } = node {
                 for plan in [into_left, into_right] {
-                    let (fft, cheb) = plan_scratch_demand(plan);
+                    let (fft, cheb, rat) = plan_scratch_demand(plan);
                     sizes.fft_len = sizes.fft_len.max(fft);
                     sizes.cheb_rank = sizes.cheb_rank.max(cheb);
+                    sizes.rat_len = sizes.rat_len.max(rat);
                 }
             }
         }
@@ -723,7 +796,7 @@ impl IntegratorTree {
         let rows = self.total_slots * d;
         let mut ws = plans.checkout_workspace(d);
         {
-            let Workspace { slab_in, slab_out, scratch } = &mut ws;
+            let Workspace { slab_in, slab_out, scratch, .. } = &mut ws;
             // Permute the field once into the nested-dissection layout:
             // every IT node then sees its vertex set as one contiguous
             // row range (pivots are duplicated into both child regions).
@@ -774,6 +847,149 @@ impl IntegratorTree {
             return Ok(Matrix::zeros(0, x.cols()));
         }
         Ok(self.integrate_prepared_node_legacy(0, x, plans, pool))
+    }
+
+    /// Sparse delta integration: the exact change of the integral under
+    /// a sparse field update. Field integration is linear in the field,
+    /// so for `x' = x + Δ` with `Δ` supported on `rows`,
+    /// `integrate(x') = integrate(x) + integrate(Δ)` — and `Δ`'s own
+    /// integral only needs the upward work (leaf multiplies, aggregates,
+    /// cross-applications) of the O(k log n) IT nodes whose slot regions
+    /// contain a changed row. Clean sub-trees contribute exact zeros and
+    /// are skipped (their output regions are zeroed); clean-side cross
+    /// terms are zero and are skipped too. Cost:
+    /// O(k · polylog(n) · d + n · d) against the full path's
+    /// O(n · polylog(n) · d).
+    ///
+    /// `rows` are the changed vertex ids (must be unique and `< n`);
+    /// `dx` is the **dense** `n×d` delta field of which only the listed
+    /// rows are read (the serving session stages deltas densely, and a
+    /// full-rows call is then literally the full integration). Returns
+    /// `Δout = integrate(Δ)`, exact up to the multiplier accuracy: with
+    /// every row listed the pass skips nothing and is **bit-identical**
+    /// to [`IntegratorTree::integrate_prepared`] on `dx`.
+    pub fn integrate_delta_prepared(
+        &self,
+        rows: &[u32],
+        dx: &Matrix,
+        plans: &PreparedPlans,
+    ) -> Result<Matrix, FtfiError> {
+        self.integrate_delta_prepared_pooled(rows, dx, plans, &WorkPool::serial())
+    }
+
+    /// [`IntegratorTree::integrate_delta_prepared`] on a work pool (same
+    /// forking and bit-identity contract as the full prepared path).
+    pub fn integrate_delta_prepared_pooled(
+        &self,
+        rows: &[u32],
+        dx: &Matrix,
+        plans: &PreparedPlans,
+        pool: &WorkPool,
+    ) -> Result<Matrix, FtfiError> {
+        let mut out = Matrix::zeros(self.n, dx.cols());
+        self.integrate_delta_prepared_into_pooled(rows, dx, plans, pool, &mut out)?;
+        Ok(out)
+    }
+
+    /// Zero-allocation sparse delta integration into a caller-provided
+    /// `n×d` matrix: the streaming hot path. On a warmed plan handle a
+    /// serial k = 1 update performs **no heap allocation** (pinned by
+    /// `tests/hotpath_alloc.rs`).
+    pub fn integrate_delta_prepared_into(
+        &self,
+        rows: &[u32],
+        dx: &Matrix,
+        plans: &PreparedPlans,
+        out: &mut Matrix,
+    ) -> Result<(), FtfiError> {
+        self.integrate_delta_prepared_into_pooled(rows, dx, plans, &WorkPool::serial(), out)
+    }
+
+    /// [`IntegratorTree::integrate_delta_prepared_into`] on a work pool.
+    pub fn integrate_delta_prepared_into_pooled(
+        &self,
+        rows: &[u32],
+        dx: &Matrix,
+        plans: &PreparedPlans,
+        pool: &WorkPool,
+        out: &mut Matrix,
+    ) -> Result<(), FtfiError> {
+        if plans.tree_id != self.id {
+            return Err(FtfiError::InvalidInput(
+                "prepared plans were built for a different IntegratorTree".to_string(),
+            ));
+        }
+        if dx.rows() != self.n {
+            return Err(FtfiError::ShapeMismatch { expected: self.n, got: dx.rows() });
+        }
+        if out.rows() != self.n || out.cols() != dx.cols() {
+            return Err(FtfiError::InvalidInput(format!(
+                "output buffer is {}x{}, expected {}x{}",
+                out.rows(),
+                out.cols(),
+                self.n,
+                dx.cols()
+            )));
+        }
+        for &v in rows {
+            if v as usize >= self.n {
+                return Err(FtfiError::InvalidInput(format!(
+                    "delta row {v} out of range (n = {})",
+                    self.n
+                )));
+            }
+        }
+        if self.n == 0 || dx.cols() == 0 {
+            return Ok(());
+        }
+        let d = dx.cols();
+        let total = self.total_slots;
+        let slab_rows = total * d;
+        let mut ws = plans.checkout_workspace(d);
+        let mut duplicate = None;
+        {
+            let Workspace { slab_in, slab_out, scratch, dirty_prefix } = &mut ws;
+            // Mark dirty slots (0/1 per slot, shifted by one so the same
+            // buffer turns into prefix sums below) and stage the delta
+            // rows: a clean slot keeps an exact-zero field row.
+            let prefix = &mut dirty_prefix[..total + 1];
+            prefix.iter_mut().for_each(|p| *p = 0);
+            slab_in[..slab_rows].iter_mut().for_each(|x| *x = 0.0);
+            'mark: for &v in rows {
+                let v = v as usize;
+                let lo = self.vert_slot_off[v] as usize;
+                let hi = self.vert_slot_off[v + 1] as usize;
+                for &s in &self.vert_slot_items[lo..hi] {
+                    let s = s as usize;
+                    if prefix[s + 1] != 0 {
+                        // A slot belongs to exactly one vertex, so a
+                        // re-marked slot means a duplicate update row.
+                        duplicate = Some(v);
+                        break 'mark;
+                    }
+                    prefix[s + 1] = 1;
+                    slab_in[s * d..(s + 1) * d].copy_from_slice(dx.row(v));
+                }
+            }
+            if duplicate.is_none() {
+                for i in 0..total {
+                    prefix[i + 1] += prefix[i];
+                }
+                let (sin, sout) = (&slab_in[..slab_rows], &mut slab_out[..slab_rows]);
+                self.integrate_ws_delta(0, 0, sin, sout, d, plans, scratch, prefix, pool);
+                for (v, &slot) in self.root_slot.iter().enumerate() {
+                    let s = slot as usize * d;
+                    out.row_mut(v).copy_from_slice(&slab_out[s..s + d]);
+                }
+            }
+        }
+        plans.return_workspace(ws);
+        match duplicate {
+            Some(v) => Err(FtfiError::InvalidInput(format!(
+                "duplicate delta row {v} (aggregate updates per row before integrating)"
+            ))),
+            None => Ok(()),
+        }
     }
 
     fn integrate_node(
@@ -960,11 +1176,133 @@ impl IntegratorTree {
         }
     }
 
+    /// The sparse-delta twin of [`IntegratorTree::integrate_ws`]:
+    /// identical arithmetic and reduction order, but a node whose slot
+    /// region holds no dirty slot is *skipped* (its output region is
+    /// zeroed — its subtree integral of an all-zero field is exactly
+    /// zero), and a clean side's aggregate / cross-application / combine
+    /// half is skipped (a zero aggregate cross-applies to exact zeros).
+    /// With every slot dirty no branch skips, so the pass degenerates to
+    /// [`IntegratorTree::integrate_ws`] bit for bit — the harness pins
+    /// `integrate_delta(full rows) == integrate(Δ)` exactly.
+    ///
+    /// `slot_base` is this node's offset into the global slot layout;
+    /// `prefix[a..=b]` are dirty-slot prefix sums, so region `[a, b)` is
+    /// clean iff `prefix[b] == prefix[a]`.
+    #[allow(clippy::too_many_arguments)]
+    fn integrate_ws_delta(
+        &self,
+        idx: usize,
+        slot_base: usize,
+        input: &[f64],
+        out: &mut [f64],
+        d: usize,
+        plans: &PreparedPlans,
+        scratch: &mut NodeScratch,
+        prefix: &[u32],
+        pool: &WorkPool,
+    ) {
+        let slots = out.len() / d;
+        if prefix[slot_base + slots] == prefix[slot_base] {
+            out.iter_mut().for_each(|o| *o = 0.0);
+            return;
+        }
+        self.delta_nodes_visited.fetch_add(1, Ordering::Relaxed);
+        match (&self.nodes[idx], &plans.nodes[idx]) {
+            (ItNode::Leaf { size, .. }, PreparedNode::Leaf { fmat }) => {
+                leaf_apply_into(*size, d, fmat, input, out);
+            }
+            (
+                ItNode::Internal {
+                    size,
+                    left_child,
+                    right_child,
+                    left,
+                    right,
+                    lslots,
+                    left_slot,
+                    right_slot,
+                    ..
+                },
+                PreparedNode::Internal { into_left, into_right, left_fd, right_fd },
+            ) => {
+                let (in_l, in_r) = input.split_at(lslots * d);
+                let (out_l, out_r) = out.split_at_mut(lslots * d);
+                let lbase = slot_base;
+                let rbase = slot_base + lslots;
+                let left_dirty = prefix[rbase] > prefix[lbase];
+                let right_dirty = prefix[slot_base + slots] > prefix[rbase];
+                // Fork only when BOTH children hold real work: a clean
+                // child just memsets its region, and spawning a helper
+                // thread for that would cost more than the whole sparse
+                // update (a k = 1 path has one dirty child per level).
+                // The output is unchanged either way — the pool's
+                // determinism contract makes fork vs serial bit-equal.
+                if *size >= PAR_FORK_MIN_SIZE && pool.threads() > 1 && left_dirty && right_dirty {
+                    pool.join(
+                        || {
+                            self.integrate_ws_delta(
+                                *left_child, lbase, in_l, out_l, d, plans, scratch, prefix, pool,
+                            )
+                        },
+                        || {
+                            let mut fork = plans.checkout_scratch(d);
+                            let rc = *right_child;
+                            self.integrate_ws_delta(
+                                rc, rbase, in_r, out_r, d, plans, &mut fork, prefix, pool,
+                            );
+                            plans.return_scratch(fork);
+                        },
+                    );
+                } else {
+                    self.integrate_ws_delta(
+                        *left_child, lbase, in_l, out_l, d, plans, scratch, prefix, pool,
+                    );
+                    self.integrate_ws_delta(
+                        *right_child, rbase, in_r, out_r, d, plans, scratch, prefix, pool,
+                    );
+                }
+                let ll = left.d.len();
+                let lr = right.d.len();
+                let NodeScratch { agg, cross } = scratch;
+                let (xl_agg, rest) = agg[..2 * (ll + lr) * d].split_at_mut(ll * d);
+                let (xr_agg, rest) = rest.split_at_mut(lr * d);
+                let (cr, cl) = rest.split_at_mut(ll * d);
+                // Skipped sides leave stale arena rows behind — safe,
+                // because the matching combine half is skipped too, so
+                // stale aggregates / cross rows are never read. The four
+                // dirty-side operations write disjoint buffers (each
+                // cross-apply reads only its own side's aggregate), so
+                // grouping them per side keeps every value bit-identical
+                // to the full path's aggregate-aggregate-apply-apply
+                // order.
+                let fi = &plans.f;
+                let pol = &plans.policy;
+                if right_dirty {
+                    aggregate_into(right, right_slot, input, d, xr_agg);
+                    apply_plan_into(into_left, fi, &left.d, &right.d, xr_agg, d, cr, pol, cross);
+                }
+                if left_dirty {
+                    aggregate_into(left, left_slot, input, d, xl_agg);
+                    apply_plan_into(into_right, fi, &right.d, &left.d, xl_agg, d, cl, pol, cross);
+                }
+                if right_dirty {
+                    combine_left_into(d, left, left_slot, out, cr, xr_agg, left_fd);
+                }
+                if left_dirty {
+                    combine_right_into(d, right, right_slot, out, cl, xl_agg, right_fd);
+                }
+            }
+            _ => unreachable!("prepared plans desynced from the IntegratorTree arena"),
+        }
+    }
+
     /// Structure statistics.
     pub fn stats(&self) -> ItStats {
         let mut st = ItStats {
             nodes: self.nodes.len(),
             plan_builds: self.plan_builds.load(Ordering::Relaxed),
+            delta_nodes_visited: self.delta_nodes_visited.load(Ordering::Relaxed),
             workspace_bytes: (2 * self.total_slots + self.agg_rows_max)
                 * std::mem::size_of::<f64>(),
             ..Default::default()
@@ -1131,6 +1469,24 @@ fn combine_sides_into(
     left_fd: &[f64],
     right_fd: &[f64],
 ) {
+    combine_left_into(d, left, left_slot, out, cr, xr_agg, left_fd);
+    combine_right_into(d, right, right_slot, out, cl, xl_agg, right_fd);
+}
+
+/// The left-side half of [`combine_sides_into`]: adds the cross
+/// contribution from the *right* aggregates (plus the pivot-group
+/// correction) onto every left-side row. The delta path calls it only
+/// when the right region is dirty — a clean right side contributes
+/// exact zeros, so skipping it preserves the integral exactly.
+fn combine_left_into(
+    d: usize,
+    left: &Side,
+    left_slot: &[u32],
+    out: &mut [f64],
+    cr: &[f64],
+    xr_agg: &[f64],
+    left_fd: &[f64],
+) {
     for (vloc, &tau) in left.id_d.iter().enumerate() {
         let coeff = left_fd[tau as usize];
         let base = left_slot[vloc] as usize * d;
@@ -1141,6 +1497,21 @@ fn combine_sides_into(
             out[base + c] = src + crr[c] - coeff * piv[c];
         }
     }
+}
+
+/// The right-side half of [`combine_sides_into`] (cross contribution
+/// from the *left* aggregates; the pivot row is produced by the left
+/// pass only and is skipped here). Delta-path masking as in
+/// [`combine_left_into`].
+fn combine_right_into(
+    d: usize,
+    right: &Side,
+    right_slot: &[u32],
+    out: &mut [f64],
+    cl: &[f64],
+    xl_agg: &[f64],
+    right_fd: &[f64],
+) {
     for (uloc, &tau) in right.id_d.iter().enumerate() {
         if uloc as u32 == right.pivot {
             continue;
@@ -1560,6 +1931,129 @@ mod tests {
             it.integrate_prepared(&x, &plans),
             Err(FtfiError::ShapeMismatch { expected: 50, got: 49 })
         ));
+    }
+
+    /// Tentpole pin (value level): the sparse delta pass equals the full
+    /// prepared integration of the same delta field *exactly* — skipped
+    /// clean sub-trees / cross halves contribute exact zeros, so no
+    /// value can differ (only zero signs may).
+    #[test]
+    fn delta_pass_is_value_identical_to_full_integration_of_the_delta() {
+        let mut rng = Pcg::seed(31);
+        for &(n, d) in &[(1usize, 1usize), (2, 2), (37, 3), (300, 2), (1100, 2)] {
+            let tree = random_tree(n, 0.1, 1.0, &mut rng);
+            let it = IntegratorTree::with_leaf_threshold(&tree, 16);
+            let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
+            let plans = it.prepare(&f, d, &CrossPolicy::default()).unwrap();
+            let pool = WorkPool::new(4);
+            for &k in &[0usize, 1, (n / 3).max(1).min(n), n] {
+                let (perm, dx) = crate::bench_util::sparse_delta(n, d, k, &mut rng);
+                let rows = &perm[..];
+                let want = it.integrate_prepared(&dx, &plans).unwrap();
+                let got = it.integrate_delta_prepared(rows, &dx, &plans).unwrap();
+                assert!(
+                    got.max_abs_diff(&want) == 0.0,
+                    "n={n} d={d} k={k}: delta pass must be value-identical"
+                );
+                let got_p = it.integrate_delta_prepared_pooled(rows, &dx, &plans, &pool);
+                let got_p = got_p.unwrap();
+                assert!(
+                    got_p.max_abs_diff(&want) == 0.0,
+                    "n={n} d={d} k={k}: pooled delta pass must be value-identical"
+                );
+            }
+        }
+    }
+
+    /// Tentpole pin (bit level): with every row listed the delta pass
+    /// skips nothing and must be **bit-identical** to the full prepared
+    /// integration — same kernels, same reduction order.
+    #[test]
+    fn delta_with_all_rows_is_bit_identical_to_full_integration() {
+        let mut rng = Pcg::seed(32);
+        for &n in &[1usize, 2, 37, 300, 1100] {
+            let tree = random_tree(n, 0.1, 1.0, &mut rng);
+            let it = IntegratorTree::with_leaf_threshold(&tree, 16);
+            let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+            let plans = it.prepare(&f, 2, &CrossPolicy::default()).unwrap();
+            let rows: Vec<u32> = (0..n as u32).collect();
+            let dx = Matrix::randn(n, 2, &mut rng);
+            let want = it.integrate_prepared(&dx, &plans).unwrap();
+            let got = it.integrate_delta_prepared(&rows, &dx, &plans).unwrap();
+            assert!(got == want, "n={n}: full-rows delta must be bit-identical");
+            let pool = WorkPool::new(4);
+            let got_p = it.integrate_delta_prepared_pooled(&rows, &dx, &plans, &pool).unwrap();
+            assert!(got_p == want, "n={n}: pooled full-rows delta must be bit-identical");
+        }
+    }
+
+    /// Sparsity pin: a k = 1 update visits only the nodes on one
+    /// root-path (plus their leaves), far fewer than the full arena; a
+    /// k = 0 update visits none and returns exact zeros.
+    #[test]
+    fn delta_visits_only_dirty_nodes() {
+        let mut rng = Pcg::seed(33);
+        let tree = random_tree(1000, 0.1, 1.0, &mut rng);
+        let it = IntegratorTree::with_leaf_threshold(&tree, 8);
+        let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
+        let plans = it.prepare(&f, 1, &CrossPolicy::default()).unwrap();
+        let dx = Matrix::zeros(1000, 1);
+        let before = it.stats().delta_nodes_visited;
+        let out = it.integrate_delta_prepared(&[], &dx, &plans).unwrap();
+        assert_eq!(it.stats().delta_nodes_visited, before, "k=0 must visit no node");
+        assert!(out.data().iter().all(|&v| v == 0.0));
+        let mut dx = Matrix::zeros(1000, 1);
+        dx.set(123, 0, 1.0);
+        let before = it.stats().delta_nodes_visited;
+        it.integrate_delta_prepared(&[123], &dx, &plans).unwrap();
+        let visited = it.stats().delta_nodes_visited - before;
+        let total = it.stats().nodes;
+        assert!(visited >= 1, "a dirty row must visit its root path");
+        assert!(
+            visited * 2 < total,
+            "k=1 visited {visited} of {total} nodes — the sparse pass is not sparse"
+        );
+    }
+
+    #[test]
+    fn delta_validates_rows_shapes_and_plan_ownership() {
+        let mut rng = Pcg::seed(34);
+        let tree = random_tree(50, 0.1, 1.0, &mut rng);
+        let it = IntegratorTree::new(&tree);
+        let f = FDist::Identity;
+        let plans = it.prepare(&f, 2, &CrossPolicy::default()).unwrap();
+        let dx = Matrix::zeros(50, 2);
+        // Out-of-range row.
+        assert!(matches!(
+            it.integrate_delta_prepared(&[50], &dx, &plans),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        // Duplicate row.
+        assert!(matches!(
+            it.integrate_delta_prepared(&[3, 3], &dx, &plans),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        // Wrong delta-field height.
+        let short = Matrix::zeros(49, 2);
+        assert!(matches!(
+            it.integrate_delta_prepared(&[0], &short, &plans),
+            Err(FtfiError::ShapeMismatch { expected: 50, got: 49 })
+        ));
+        // Wrong output buffer.
+        let mut bad_out = Matrix::zeros(50, 3);
+        assert!(matches!(
+            it.integrate_delta_prepared_into(&[0], &dx, &plans, &mut bad_out),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        // Foreign plans.
+        let other = IntegratorTree::new(&random_tree(50, 0.1, 1.0, &mut rng));
+        let foreign = other.prepare(&f, 2, &CrossPolicy::default()).unwrap();
+        assert!(matches!(
+            it.integrate_delta_prepared(&[0], &dx, &foreign),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        // A failed call must not poison the handle.
+        assert!(it.integrate_delta_prepared(&[0, 1], &dx, &plans).is_ok());
     }
 
     #[test]

@@ -1,0 +1,316 @@
+//! Superposition / mutation harness for the streaming delta subsystem.
+//!
+//! Field integration is linear in the field, so
+//! `integrate(x + Δ) = integrate(x) + integrate_delta(rows(Δ), Δ)` up
+//! to float rounding. The harness pins that identity across the size
+//! ladder n ∈ {1, 2, 17, 64, 257} × every applicable forced `Strategy`
+//! × the `FDist` classes × threads ∈ {1, 4}, plus the degenerate
+//! **bit-identity** case: a delta listing *every* row skips nothing and
+//! must reproduce `integrate(Δ)` bit for bit (same kernels, same
+//! reduction order).
+//!
+//! **ULP budget.** Both sides evaluate the same prepared plans, so the
+//! only divergence is rounding non-linearity (`fl(a+b)` integrated vs
+//! `fl(∫a) + fl(∫b)`). We bound the *relative Frobenius* deviation by
+//! `2²⁴·ε ≈ 3.7e-9` for the exactly-planned classes (observed drift is
+//! orders of magnitude below; the budget leaves headroom for
+//! cancellation-heavy fields) and loosen to the per-strategy floors of
+//! `tests/ftfi_property.rs` for the LDR paths (their coefficient-basis
+//! pipelines amplify rounding, not linearity).
+//!
+//! No proptest offline: seeded sweeps, every assertion leading with
+//! `REPRO seed=…` so `Pcg::seed(seed)` replays the exact case.
+
+use ftfi::ftfi::brute::BruteForceIntegrator;
+use ftfi::ftfi::cordial::{CrossPolicy, Strategy};
+use ftfi::ftfi::functions::FDist;
+use ftfi::graph::generators::{random_rational_tree, random_tree};
+use ftfi::linalg::matrix::Matrix;
+use ftfi::ml::rng::Pcg;
+use ftfi::tree::integrator_tree::PreparedPlans;
+use ftfi::{FieldIntegrator, FtfiError, StreamingIntegrator, TreeFieldIntegrator};
+use std::sync::Arc;
+
+/// The size ladder of `tests/ftfi_property.rs`: singleton, single edge,
+/// one leaf, a few IT levels, above the batch-axis cutoff (odd).
+const SIZES: [usize; 5] = [1, 2, 17, 64, 257];
+
+/// Superposition budget for the exactly-planned classes: 2²⁴ ulps of
+/// the output scale.
+const ULP_BUDGET: f64 = (1 << 24) as f64 * f64::EPSILON;
+
+/// Per-class `FDist` representatives (mirrors `ftfi_property.rs`).
+fn f_cases(rng: &mut Pcg) -> Vec<FDist> {
+    vec![
+        FDist::Identity,
+        FDist::Polynomial(vec![rng.normal(), rng.normal(), rng.normal() * 0.3]),
+        FDist::Exponential { lambda: rng.uniform_in(-1.0, -0.1), scale: 1.0 },
+        FDist::Trig {
+            omega: rng.uniform_in(0.2, 1.5),
+            phase: rng.uniform_in(0.0, 1.0),
+            scale: 1.0,
+        },
+        FDist::inverse_quadratic(rng.uniform_in(0.1, 2.0)),
+        FDist::ExpOverLinear { lambda: rng.uniform_in(-0.5, 0.0), c: rng.uniform_in(0.5, 2.0) },
+        FDist::gaussian(rng.uniform_in(0.05, 0.5)),
+        FDist::Custom(std::sync::Arc::new(|x: f64| (0.4 * x).sin() / (1.0 + 0.3 * x))),
+    ]
+}
+
+/// Strategy-specific superposition budgets: the LDR coefficient
+/// pipelines amplify per-op rounding (see `ftfi_property::strategy_tol`).
+fn strategy_budget(s: Strategy) -> f64 {
+    match s {
+        Strategy::RationalSum | Strategy::Cauchy => 5e-6,
+        Strategy::Chebyshev | Strategy::Vandermonde => 1e-8,
+        _ => ULP_BUDGET,
+    }
+}
+
+fn rel_err(got: &Matrix, want: &Matrix) -> f64 {
+    got.frobenius_diff(want) / (1.0 + want.frobenius())
+}
+
+/// k distinct rows (partial Fisher–Yates) plus a dense delta field
+/// supported on them — the shared `bench_util` staging helper.
+fn random_delta(n: usize, d: usize, k: usize, rng: &mut Pcg) -> (Vec<u32>, Matrix) {
+    ftfi::bench_util::sparse_delta(n, d, k, rng)
+}
+
+/// Superposition check on one prepared handle: `integrate(x + Δ)` vs
+/// `integrate(x) + integrate_delta(Δ)` within `tol`, and `Δ` over all
+/// rows bit-identical to a plain integration.
+fn check_superposition(
+    tfi: &TreeFieldIntegrator,
+    plans: &PreparedPlans,
+    n: usize,
+    d: usize,
+    tol: f64,
+    rng: &mut Pcg,
+    label: &str,
+) {
+    let x = Matrix::randn(n, d, rng);
+    for &k in &[1usize.min(n), (n / 3).max(1), n] {
+        let (rows, dx) = random_delta(n, d, k, rng);
+        let mut x2 = x.clone();
+        x2.axpy(1.0, &dx);
+        let full = tfi.integrate_prepared(&x2, plans).unwrap();
+        let mut approx = tfi.integrate_prepared(&x, plans).unwrap();
+        let dout = tfi.integrate_delta_prepared(&rows, &dx, plans).unwrap();
+        approx.axpy(1.0, &dout);
+        let rel = rel_err(&approx, &full);
+        assert!(rel < tol, "{label} k={k}: superposition rel {rel} > {tol}");
+        if k == n {
+            let want = tfi.integrate_prepared(&dx, plans).unwrap();
+            assert!(
+                dout == want,
+                "{label}: full-rows delta must be bit-identical to integrate(Δ)"
+            );
+        }
+    }
+}
+
+/// Property: superposition holds on every ladder size for every default
+/// policy function class, for threads ∈ {1, 4}, and the full-rows delta
+/// is bit-identical to a plain integration.
+#[test]
+fn property_superposition_default_policy_across_size_ladder() {
+    for &n in &SIZES {
+        for &threads in &[1usize, 4] {
+            let seed = 400_000 + (n as u64) * 10 + threads as u64;
+            let mut rng = Pcg::seed(seed);
+            let d = 1 + rng.below(3);
+            let tree = random_tree(n, 0.05, 1.0, &mut rng);
+            let t = [2usize, 8, 48][rng.below(3)];
+            for f in f_cases(&mut rng) {
+                let tfi = TreeFieldIntegrator::builder(&tree)
+                    .leaf_threshold(t)
+                    .threads(threads)
+                    .build()
+                    .unwrap();
+                let plans = tfi.prepare_plans(&f, d).unwrap();
+                // Default-policy plans may route smooth classes through
+                // Chebyshev/LDR blocks: use the loosest matching budget.
+                let tol = 1e-8f64.max(ULP_BUDGET);
+                let label = format!("REPRO seed={seed} n={n} d={d} t={t} thr={threads} {f:?}");
+                check_superposition(&tfi, &plans, n, d, tol, &mut rng, &label);
+            }
+        }
+    }
+}
+
+/// Property: superposition holds for every *applicable* forced strategy
+/// on rational-weight trees (the ladder sweep of
+/// `ftfi_property::property_every_applicable_forced_strategy_matches_brute`,
+/// pointed at the delta path), for threads ∈ {1, 4}. Inapplicable
+/// combos surface as the typed `StrategyInapplicable` and are skipped;
+/// a floor pins the sweep cannot degenerate into skipping everything.
+#[test]
+fn property_superposition_every_applicable_forced_strategy() {
+    let all = [
+        Strategy::Dense,
+        Strategy::Separable,
+        Strategy::Lattice,
+        Strategy::RationalSum,
+        Strategy::Cauchy,
+        Strategy::Vandermonde,
+        Strategy::Chebyshev,
+    ];
+    let mut applicable = 0usize;
+    for &n in &SIZES {
+        for &threads in &[1usize, 4] {
+            let seed = 500_000 + (n as u64) * 10 + threads as u64;
+            let mut rng = Pcg::seed(seed);
+            let tree = random_rational_tree(n, 3, 4, &mut rng);
+            let d = 1 + rng.below(3);
+            for f in f_cases(&mut rng) {
+                for &s in &all {
+                    let policy =
+                        CrossPolicy { force: Some(s), dense_cutoff: 0, ..Default::default() };
+                    let tfi = TreeFieldIntegrator::builder(&tree)
+                        .leaf_threshold(8)
+                        .policy(policy)
+                        .threads(threads)
+                        .build()
+                        .unwrap();
+                    match tfi.prepare_plans(&f, d) {
+                        Err(FtfiError::StrategyInapplicable { .. }) => continue,
+                        Err(e) => panic!(
+                            "REPRO seed={seed} n={n} {f:?} forced {s:?}: unexpected {e}"
+                        ),
+                        Ok(plans) => {
+                            applicable += 1;
+                            let label = format!(
+                                "REPRO seed={seed} n={n} d={d} threads={threads} {f:?} \
+                                 forced {s:?}"
+                            );
+                            check_superposition(
+                                &tfi,
+                                &plans,
+                                n,
+                                d,
+                                strategy_budget(s),
+                                &mut rng,
+                                &label,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(applicable >= 100, "only {applicable} (f, strategy) combos were applicable");
+}
+
+/// Threads must not change delta outputs: the sparse pass forks on the
+/// same rule as the full pass, under the pool's bit-identity contract.
+#[test]
+fn delta_outputs_are_bit_identical_across_thread_counts() {
+    let seed = 600_001u64;
+    let mut rng = Pcg::seed(seed);
+    // n above the fork cutoff so the recursion actually forks.
+    let n = 1100;
+    let tree = random_tree(n, 0.1, 1.0, &mut rng);
+    let f = FDist::inverse_quadratic(0.5);
+    let serial = TreeFieldIntegrator::builder(&tree).threads(1).build().unwrap();
+    let par = TreeFieldIntegrator::builder(&tree).threads(4).build().unwrap();
+    let plans_s = serial.prepare_plans(&f, 2).unwrap();
+    let plans_p = par.prepare_plans(&f, 2).unwrap();
+    for &k in &[1usize, 16, 256, n] {
+        let (rows, dx) = random_delta(n, 2, k, &mut rng);
+        let a = serial.integrate_delta_prepared(&rows, &dx, &plans_s).unwrap();
+        let b = par.integrate_delta_prepared(&rows, &dx, &plans_p).unwrap();
+        assert!(a == b, "REPRO seed={seed} k={k}: delta must be bit-identical across threads");
+    }
+}
+
+/// Mutation sequences: random interleavings of `apply_update` / full
+/// `refresh` on a [`StreamingIntegrator`] tracked against a
+/// rebuild-from-scratch [`BruteForceIntegrator`] oracle, including the
+/// degenerate updates (k = 0, k = n, repeated same-row, n = 1).
+#[test]
+fn property_mutation_sequences_track_the_brute_oracle() {
+    for &n in &SIZES {
+        for &threads in &[1usize, 4] {
+            let seed = 700_000 + (n as u64) * 10 + threads as u64;
+            let mut rng = Pcg::seed(seed);
+            let d = 1 + rng.below(2);
+            let tree = random_tree(n, 0.1, 1.0, &mut rng);
+            let f = FDist::Exponential { lambda: rng.uniform_in(-0.8, -0.2), scale: 1.0 };
+            let builder = TreeFieldIntegrator::builder(&tree).leaf_threshold(8);
+            let tfi = Arc::new(builder.threads(threads).build().unwrap());
+            let plans = Arc::new(tfi.prepare_plans(&f, d).unwrap());
+            let brute = BruteForceIntegrator::from_tree(tree.clone());
+            let refresh_every = 1 + rng.below(6);
+            let field = Matrix::randn(n, d, &mut rng);
+            let mut session = StreamingIntegrator::new(
+                Arc::clone(&tfi),
+                Arc::clone(&plans),
+                field,
+                refresh_every,
+            )
+            .unwrap();
+            for step in 0..15 {
+                let op = rng.below(8);
+                if op == 0 {
+                    session.refresh().unwrap();
+                } else {
+                    // k = 0, 1, n and "repeated same row" all occur.
+                    let k = [0usize, 1, 1 + rng.below(n), n][rng.below(4)].min(n);
+                    let (mut rows, _) = random_delta(n, d, k, &mut rng);
+                    if !rows.is_empty() && rng.below(3) == 0 {
+                        let dup = rows[0];
+                        rows.push(dup); // same row twice in one update
+                    }
+                    let vals = Matrix::randn(rows.len(), d, &mut rng);
+                    session.apply_update(&rows, &vals).unwrap();
+                }
+                let want = brute.integrate(&f, session.field()).unwrap();
+                let rel = rel_err(session.output(), &want);
+                assert!(
+                    rel < 1e-8,
+                    "REPRO seed={seed} n={n} threads={threads} step={step}: \
+                     session drifted to rel {rel}"
+                );
+            }
+        }
+    }
+}
+
+/// Drift-policy pin: the state right after the `refresh_every`-th
+/// update is **bit-identical** to a cold prepared integration of the
+/// current field, for threads ∈ {1, 4}.
+#[test]
+fn refresh_cadence_restores_bit_exact_state() {
+    for &threads in &[1usize, 4] {
+        let seed = 800_000 + threads as u64;
+        let mut rng = Pcg::seed(seed);
+        let n = 300;
+        let r = 4;
+        let tree = random_tree(n, 0.1, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
+        let tfi = TreeFieldIntegrator::builder(&tree).threads(threads).build().unwrap();
+        let tfi = Arc::new(tfi);
+        let plans = Arc::new(tfi.prepare_plans(&f, 2).unwrap());
+        let field = Matrix::randn(n, 2, &mut rng);
+        let mut session =
+            StreamingIntegrator::new(Arc::clone(&tfi), Arc::clone(&plans), field, r).unwrap();
+        for round in 1..=3 {
+            for _ in 0..r - 1 {
+                let (rows, _) = random_delta(n, 2, 1 + rng.below(4), &mut rng);
+                let vals = Matrix::randn(rows.len(), 2, &mut rng);
+                session.apply_update(&rows, &vals).unwrap();
+                assert_eq!(session.stats().delta_refreshes, round - 1);
+            }
+            let (rows, _) = random_delta(n, 2, 1, &mut rng);
+            let vals = Matrix::randn(1, 2, &mut rng);
+            session.apply_update(&rows, &vals).unwrap();
+            let cold = tfi.integrate_prepared(session.field(), &plans).unwrap();
+            assert!(
+                *session.output() == cold,
+                "REPRO seed={seed} round={round}: post-refresh state must be bit-identical"
+            );
+            assert_eq!(session.stats().delta_refreshes, round);
+        }
+    }
+}

@@ -89,6 +89,76 @@ fn lattice_hot_path_is_allocation_free_when_warmed() {
     assert_zero_alloc("lattice", &tree, &f, policy, 3);
 }
 
+/// Forced-RationalSum on a rational kernel: every internal node runs
+/// the prepared basis-polynomial rational multiplier
+/// (`RationalPlan::apply_into` — shift products and denominator-inverse
+/// tables frozen at plan time, coefficient accumulation in the
+/// `CrossScratch::rat_w` arena). PR 4 left this path on an allocating
+/// `Matrix` shim; it is now a first-class zero-allocation citizen.
+#[test]
+fn rational_hot_path_is_allocation_free_when_warmed() {
+    let mut rng = Pcg::seed(5);
+    let tree = random_tree(700, 0.1, 1.0, &mut rng);
+    let f = FDist::Rational { num: vec![1.0], den: vec![1.0, 0.0, 0.5] };
+    let policy =
+        CrossPolicy { force: Some(Strategy::RationalSum), dense_cutoff: 0, ..Default::default() };
+    assert_zero_alloc("rational", &tree, &f, policy, 2);
+}
+
+/// Forced-Cauchy (`e^{λx}/(x+c)`): the same prepared rational core with
+/// its exponential row/column scale tables.
+#[test]
+fn cauchy_hot_path_is_allocation_free_when_warmed() {
+    let mut rng = Pcg::seed(6);
+    let tree = random_tree(600, 0.1, 1.0, &mut rng);
+    let f = FDist::ExpOverLinear { lambda: -0.2, c: 1.0 };
+    let policy =
+        CrossPolicy { force: Some(Strategy::Cauchy), dense_cutoff: 0, ..Default::default() };
+    assert_zero_alloc("cauchy", &tree, &f, policy, 2);
+}
+
+/// The streaming delta path: a warmed k = 1 update must not allocate —
+/// neither the raw `integrate_delta_prepared_into` (slab fill, dirty
+/// prefix, sparse recursion all live in the plan's workspace pool) nor
+/// the full `StreamingIntegrator::apply_update` session surface
+/// (delta staging, cached-output accumulation).
+#[test]
+fn delta_update_hot_path_is_allocation_free_when_warmed() {
+    use ftfi::StreamingIntegrator;
+    use std::sync::Arc;
+    let mut rng = Pcg::seed(7);
+    let tree = random_tree(900, 0.1, 1.0, &mut rng);
+    let f = FDist::inverse_quadratic(0.5);
+    let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().expect("valid tree");
+    let tfi = Arc::new(tfi);
+    let plans = Arc::new(tfi.prepare_plans(&f, 2).expect("plannable f"));
+    let x = Matrix::randn(900, 2, &mut rng);
+    let mut dout = Matrix::zeros(900, 2);
+    let mut dx = Matrix::zeros(900, 2);
+    dx.set(123, 0, 1.5);
+    dx.set(123, 1, -0.5);
+    let rows = [123u32];
+    // Raw core path: warm twice (arena build, then reuse), then pin.
+    tfi.integrate_delta_prepared_into(&rows, &dx, &plans, &mut dout).expect("delta");
+    tfi.integrate_delta_prepared_into(&rows, &dx, &plans, &mut dout).expect("delta");
+    let before = allocs();
+    tfi.integrate_delta_prepared_into(&rows, &dx, &plans, &mut dout).expect("delta");
+    let during = allocs() - before;
+    assert_eq!(during, 0, "warmed k=1 delta performed {during} heap allocations");
+
+    // Session surface: refresh_every = 0 keeps every update on the
+    // delta path; two warmed updates grow the dirty-list capacity.
+    let mut session = StreamingIntegrator::new(Arc::clone(&tfi), Arc::clone(&plans), x, 0)
+        .expect("valid session");
+    let vals = Matrix::from_vec(1, 2, vec![0.25, -1.0]);
+    session.apply_update(&rows, &vals).expect("update");
+    session.apply_update(&rows, &vals).expect("update");
+    let before = allocs();
+    session.apply_update(&rows, &vals).expect("update");
+    let during = allocs() - before;
+    assert_eq!(during, 0, "warmed apply_update performed {during} heap allocations");
+}
+
 /// Forced-separable exponential kernel: the rank-1 outer-product path
 /// with its arena accumulator.
 #[test]
