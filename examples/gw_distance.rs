@@ -27,6 +27,7 @@ fn main() {
             time_once(|| gromov_wasserstein(&ta, &tb, &p, &p, GwBackend::Dense, &params));
         let (rf, _) =
             time_once(|| gromov_wasserstein(&ta, &tb, &p, &p, GwBackend::Ftfi, &params));
+        let (rd, rf) = (rd.expect("dense GW on well-formed inputs"), rf.expect("ftfi GW"));
         println!(
             "{n:>6} {:>12.5} {:>12.5} {:>9.3}s {:>9.3}s {:>8.1}x",
             rd.discrepancy,

@@ -26,8 +26,10 @@ fn main() {
             let ta = generators::random_tree(n, 0.1, 1.0, &mut rng);
             let tb = generators::random_tree(n, 0.1, 1.0, &mut rng);
             let p = uniform_marginal(n);
-            let rd = gromov_wasserstein(&ta, &tb, &p, &p, GwBackend::Dense, &params);
-            let rf = gromov_wasserstein(&ta, &tb, &p, &p, GwBackend::Ftfi, &params);
+            let rd = gromov_wasserstein(&ta, &tb, &p, &p, GwBackend::Dense, &params)
+                .expect("bench inputs are well-formed");
+            let rf = gromov_wasserstein(&ta, &tb, &p, &p, GwBackend::Ftfi, &params)
+                .expect("bench inputs are well-formed");
             td += rd.integration_seconds;
             tf += rf.integration_seconds;
             dgap = dgap

@@ -6,6 +6,11 @@
 //! table printer so every bench emits the same rows/series as the paper's
 //! figures.
 
+// One of the crate's two allowed `unsafe` sites (see DESIGN.md
+// "Verification & static analysis"): a pass-through `GlobalAlloc` that
+// counts allocations for the zero-alloc hot-path pins.
+#![allow(unsafe_code)]
+
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::time::Instant;

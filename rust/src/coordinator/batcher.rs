@@ -78,8 +78,10 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    pub fn new(cfg: BatcherConfig) -> Self {
-        assert!(cfg.batch_size >= 1);
+    /// `batch_size` is clamped to ≥ 1 (a zero-sized batch could never
+    /// release a request) — same convention as the executors' `max_batch`.
+    pub fn new(mut cfg: BatcherConfig) -> Self {
+        cfg.batch_size = cfg.batch_size.max(1);
         Batcher { cfg }
     }
 

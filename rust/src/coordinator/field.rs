@@ -37,8 +37,11 @@ use crate::ftfi::streaming::StreamingIntegrator;
 use crate::ftfi::{FieldIntegrator, FtfiError, TreeFieldIntegrator};
 use crate::linalg::matrix::Matrix;
 use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
+// Session locks come from the crate-wide sync shim so loom can model the
+// set-vs-update race; Arc deliberately stays `std` (see `crate::sync`).
+use crate::sync::Mutex;
 use crate::tree::integrator_tree::PreparedPlans;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Decode one flattened request into an `n×d` field (row-major, rows
@@ -292,7 +295,12 @@ impl StreamingFieldExecutor {
         )
         .map_err(|e| e.to_string())?;
         let out = session.output().data().iter().map(|&v| v as f32).collect();
-        *self.sessions[sid].lock().unwrap() = Some(session);
+        // A poisoned slot means another request panicked mid-session;
+        // fail this request instead of cascading the panic.
+        let mut guard = self.sessions[sid]
+            .lock()
+            .map_err(|_| format!("session {sid} poisoned by an earlier panic"))?;
+        *guard = Some(session);
         Ok(out)
     }
 
@@ -310,7 +318,9 @@ impl StreamingFieldExecutor {
             rows.push(parse_index(r, n, "row")? as u32);
         }
         let vals = &payload[1 + k..];
-        let mut guard = self.sessions[sid].lock().unwrap();
+        let mut guard = self.sessions[sid]
+            .lock()
+            .map_err(|_| format!("session {sid} poisoned by an earlier panic"))?;
         let session = guard
             .as_mut()
             .ok_or_else(|| format!("session {sid} not initialised (send a set request first)"))?;

@@ -81,7 +81,10 @@ impl MetricsRegistry {
 
     pub fn record_latency(&self, secs: f64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let mut hist = self.latency_hist.lock().unwrap();
+        // Poison recovery: the histogram is a plain counter array that
+        // stays valid even if a recording thread panicked elsewhere, so
+        // metrics keep flowing instead of cascading the panic.
+        let mut hist = self.latency_hist.lock().unwrap_or_else(|e| e.into_inner());
         hist[bucket_of(secs)] += 1;
     }
 
@@ -89,7 +92,7 @@ impl MetricsRegistry {
     /// `apply_update` wall clock of the streaming executor).
     pub fn record_update_latency(&self, secs: f64) {
         self.updates.fetch_add(1, Ordering::Relaxed);
-        let mut hist = self.update_hist.lock().unwrap();
+        let mut hist = self.update_hist.lock().unwrap_or_else(|e| e.into_inner());
         hist[bucket_of(secs)] += 1;
     }
 
@@ -112,9 +115,9 @@ impl MetricsRegistry {
         let requests = self.requests.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batch_items.load(Ordering::Relaxed);
-        let hist = self.latency_hist.lock().unwrap();
+        let hist = self.latency_hist.lock().unwrap_or_else(|e| e.into_inner());
         let updates = self.updates.load(Ordering::Relaxed);
-        let uhist = self.update_hist.lock().unwrap();
+        let uhist = self.update_hist.lock().unwrap_or_else(|e| e.into_inner());
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
         MetricsSnapshot {
             requests,

@@ -3,8 +3,12 @@
 
 use super::batcher::{BatchExecutor, Batcher, BatcherConfig, PendingRequest};
 use super::metrics::MetricsRegistry;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+// Mutex and the closing flag come from the crate-wide sync shim so loom
+// builds model the worker handoff; Arc and mpsc stay `std` deliberately
+// (see `crate::sync` module docs).
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::Mutex;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -61,6 +65,9 @@ impl InferenceServer {
         cfg: BatcherConfig,
         queue_capacity: usize,
     ) -> Self {
+        // lint: allow(unchecked-panic) — a documented construction
+        // precondition: a server with zero workers can never serve, and
+        // failing at startup (not at first submit) is the useful spot.
         assert!(!factories.is_empty());
         let metrics = Arc::new(MetricsRegistry::new());
         let (submit_tx, submit_rx) = mpsc::sync_channel::<PendingRequest>(queue_capacity);
@@ -80,6 +87,8 @@ impl InferenceServer {
                     }
                 }
             })
+            // lint: allow(unchecked-panic) — OS thread-spawn failure at
+            // server startup is unrecoverable for the caller anyway.
             .expect("spawn collector");
 
         // Workers: batches → responses.
@@ -96,9 +105,12 @@ impl InferenceServer {
                         let exec = factory();
                         let batcher = Batcher::new(cfg);
                         loop {
-                            let batch = {
-                                let guard = rx.lock().unwrap();
-                                guard.recv()
+                            // A poisoned receiver lock means a sibling
+                            // worker died mid-recv; exit cleanly instead
+                            // of cascading the panic through the pool.
+                            let batch = match rx.lock() {
+                                Ok(guard) => guard.recv(),
+                                Err(_) => break,
                             };
                             match batch {
                                 Ok(b) => batcher.dispatch(b, exec.as_ref(), &m),
@@ -106,6 +118,8 @@ impl InferenceServer {
                             }
                         }
                     })
+                    // lint: allow(unchecked-panic) — OS thread-spawn
+                    // failure at server startup is unrecoverable.
                     .expect("spawn worker")
             })
             .collect();

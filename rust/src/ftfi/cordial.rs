@@ -369,7 +369,12 @@ pub fn apply_plan(
         Plan::Lattice(lp) => lp.apply(xs, ys, v),
         Plan::RationalSum(rp) | Plan::Cauchy(rp) => rp.apply(v),
         Plan::Vandermonde { u, v: vc, w, delta } => {
+            // lint: infallible because the only failure mode is
+            // `v.rows() != ys.len()`, which planning already validated —
+            // `try_make_plan` is handed `v.cols()` against the same
+            // `(xs, ys)` this plan is bound to.
             expquad_cross_apply(*u, *vc, *w, xs, ys, *delta, v)
+                .expect("Vandermonde plan bound to these points")
         }
         Plan::Chebyshev(exp) => exp.cross_apply(f, xs, ys, v),
     }
@@ -470,6 +475,11 @@ pub(crate) fn apply_plan_into(
             rp.apply_into(v, d, out, &mut scratch.rat_w)
         }
         other => {
+            // lint: allow(alloc-in-hot-path) — the documented Vandermonde
+            // shim (see the fn doc above): this arm materialises a
+            // temporary Matrix because the multiplier rebuilds its
+            // factors per call; arena-ifying it is not worth the
+            // workspace footprint.
             let vm = Matrix::from_vec(ys.len(), d, v.to_vec());
             let m = apply_plan(other, f, xs, ys, &vm, policy);
             out.copy_from_slice(m.data());

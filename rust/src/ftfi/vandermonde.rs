@@ -20,12 +20,16 @@
 //! columns need the lattice, which is why this beats the Hankel embedding
 //! when the lattice denominator `p` is large (`p ≫ log N`).
 
+use crate::ftfi::error::FtfiError;
 use crate::linalg::fft::Complex;
 use crate::linalg::matrix::Matrix;
 use crate::linalg::polynomial::{multipoint_eval, Poly};
 
 /// `C·V` with `C[i][j] = e^{u(x_i+y_j)² + v(x_i+y_j) + w}`; `ys` must lie
 /// on the lattice `{b·delta}`.
+///
+/// Fails with [`FtfiError::ShapeMismatch`] when `val` does not have one
+/// row per column node.
 pub fn expquad_cross_apply(
     u: f64,
     vcoef: f64,
@@ -34,14 +38,18 @@ pub fn expquad_cross_apply(
     ys: &[f64],
     delta: f64,
     val: &Matrix,
-) -> Matrix {
-    assert_eq!(val.rows(), ys.len());
+) -> Result<Matrix, FtfiError> {
+    if val.rows() != ys.len() {
+        return Err(FtfiError::ShapeMismatch { expected: ys.len(), got: val.rows() });
+    }
     let d = val.cols();
     let mut out = Matrix::zeros(xs.len(), d);
     if xs.is_empty() || ys.is_empty() {
-        return out;
+        return Ok(out);
     }
     let b: Vec<usize> = ys.iter().map(|&y| (y / delta).round() as usize).collect();
+    // lint: infallible because the ys-emptiness early-return above
+    // guarantees `b` is non-empty.
     let deg = *b.iter().max().unwrap();
     let nodes: Vec<Complex> =
         xs.iter().map(|&x| Complex::new((2.0 * u * x * delta).exp(), 0.0)).collect();
@@ -59,11 +67,14 @@ pub fn expquad_cross_apply(
             out.set(i, ch, d1[i] * e.re);
         }
     }
-    out
+    Ok(out)
 }
 
 /// `Cᵀ·U` for the same matrix: power sums via the generating-function
 /// trick, processed in blocks of `block` rows for stability.
+///
+/// Fails with [`FtfiError::ShapeMismatch`] when `uval` does not have one
+/// row per row node.
 pub fn expquad_cross_apply_t(
     u: f64,
     vcoef: f64,
@@ -73,14 +84,18 @@ pub fn expquad_cross_apply_t(
     delta: f64,
     uval: &Matrix,
     block: usize,
-) -> Matrix {
-    assert_eq!(uval.rows(), xs.len());
+) -> Result<Matrix, FtfiError> {
+    if uval.rows() != xs.len() {
+        return Err(FtfiError::ShapeMismatch { expected: xs.len(), got: uval.rows() });
+    }
     let d = uval.cols();
     let mut out = Matrix::zeros(ys.len(), d);
     if xs.is_empty() || ys.is_empty() {
-        return out;
+        return Ok(out);
     }
     let b: Vec<usize> = ys.iter().map(|&y| (y / delta).round() as usize).collect();
+    // lint: infallible because the ys-emptiness early-return above
+    // guarantees `b` is non-empty.
     let deg = *b.iter().max().unwrap();
     let nodes: Vec<f64> = xs.iter().map(|&x| (2.0 * u * x * delta).exp()).collect();
     let d1: Vec<f64> = xs.iter().map(|&x| (u * x * x + vcoef * x + w).exp()).collect();
@@ -110,6 +125,8 @@ pub fn expquad_cross_apply_t(
             let mut di = dens.into_iter();
             let mut ni = nums.into_iter();
             while let Some(da) = di.next() {
+                // lint: infallible because `nums` is built with exactly
+                // one entry per `dens` entry and both shrink in lockstep.
                 let na = ni.next().unwrap();
                 match (di.next(), ni.next()) {
                     (Some(db), Some(nb)) => {
@@ -130,6 +147,8 @@ pub fn expquad_cross_apply_t(
             dens = nd;
             nums = nn;
         }
+        // lint: infallible because the halving loop above only exits
+        // once exactly one denominator (and numerator set) remains.
         let den = dens.pop().unwrap();
         let chans = nums.pop().unwrap();
         // Power series A/B mod t^{deg+1}.
@@ -148,7 +167,7 @@ pub fn expquad_cross_apply_t(
             out.set(j, ch, d2[j] * sums.get(bj, ch));
         }
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -169,7 +188,7 @@ mod tests {
         let ys: Vec<f64> = (0..25).map(|_| rng.below(20) as f64 * delta).collect();
         let val = Matrix::randn(25, 3, &mut rng);
         let want = cross_apply_dense(&f, &xs, &ys, &val);
-        let got = expquad_cross_apply(u, v, w, &xs, &ys, delta, &val);
+        let got = expquad_cross_apply(u, v, w, &xs, &ys, delta, &val).unwrap();
         let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
         assert!(rel < 1e-8, "rel={rel}");
     }
@@ -185,7 +204,7 @@ mod tests {
         let uval = Matrix::randn(40, 2, &mut rng);
         // Dense C^T U = dense apply with swapped roles.
         let want = cross_apply_dense(&f, &ys, &xs, &uval);
-        let got = expquad_cross_apply_t(u, v, w, &xs, &ys, delta, &uval, 16);
+        let got = expquad_cross_apply_t(u, v, w, &xs, &ys, delta, &uval, 16).unwrap();
         let rel = got.frobenius_diff(&want) / (1.0 + want.frobenius());
         assert!(rel < 1e-7, "rel={rel}");
     }
@@ -202,7 +221,16 @@ mod tests {
         let ys: Vec<f64> = (0..20).map(|_| rng.below(10) as f64).collect();
         let val = Matrix::randn(20, 1, &mut rng);
         let want = cross_apply_dense(&f, &xs, &ys, &val);
-        let got = expquad_cross_apply(u, v, w, &xs, &ys, delta, &val);
+        let got = expquad_cross_apply(u, v, w, &xs, &ys, delta, &val).unwrap();
         assert!(got.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-8);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error_not_a_panic() {
+        let val = Matrix::zeros(3, 1);
+        let err = expquad_cross_apply(-0.1, 0.0, 0.0, &[0.0, 1.0], &[0.0, 1.0], 1.0, &val);
+        assert!(matches!(err, Err(FtfiError::ShapeMismatch { expected: 2, got: 3 })));
+        let err = expquad_cross_apply_t(-0.1, 0.0, 0.0, &[0.0, 1.0], &[0.0], 1.0, &val, 8);
+        assert!(matches!(err, Err(FtfiError::ShapeMismatch { expected: 2, got: 3 })));
     }
 }

@@ -107,7 +107,13 @@ pub fn barabasi_albert(n: usize, m: usize, rng: &mut Pcg) -> Graph {
         }
     }
     for v in (m + 1)..n {
-        let mut targets = std::collections::HashSet::new();
+        // BTreeSet, not HashSet: the set is *iterated* below, and its
+        // order decides both edge weights (rng draw order) and future
+        // sampling (via `endpoints`). Hash iteration order is seeded per
+        // instance, so the HashSet version produced a different graph on
+        // every run despite the seeded Pcg; sorted iteration makes the
+        // generator reproducible (pinned by `barabasi_is_deterministic`).
+        let mut targets = std::collections::BTreeSet::new();
         while targets.len() < m {
             targets.insert(endpoints[rng.below(endpoints.len())]);
         }
@@ -146,6 +152,22 @@ pub fn community_graph(n: usize, k: usize, p_in: f64, p_out: f64, rng: &mut Pcg)
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn barabasi_is_deterministic() {
+        // Two builds from the same seed must agree bit for bit. The old
+        // HashSet target buffer broke this *within one process* (each
+        // set instance draws its own hasher seed, and iteration order
+        // feeds the edge list and the preferential-attachment buffer).
+        let a = barabasi_albert(60, 3, &mut Pcg::seed(9));
+        let b = barabasi_albert(60, 3, &mut Pcg::seed(9));
+        assert_eq!(a.edges().len(), b.edges().len());
+        for (ea, eb) in a.edges().iter().zip(b.edges()) {
+            assert_eq!((ea.0, ea.1), (eb.0, eb.1));
+            assert_eq!(ea.2.to_bits(), eb.2.to_bits());
+        }
+        assert!(a.is_connected());
+    }
 
     #[test]
     fn path_plus_edges_connected_with_right_count() {

@@ -26,8 +26,14 @@ impl Graph {
     /// Build from an undirected edge list. Self-loops are dropped;
     /// duplicate edges keep the smallest weight.
     pub fn from_edges(n: usize, edges: &[(u32, u32, f64)]) -> Self {
-        let mut dedup: std::collections::HashMap<(u32, u32), f64> =
-            std::collections::HashMap::with_capacity(edges.len());
+        // Ordered map: iterating it yields edges already sorted by
+        // (u, v), which both replaces the explicit sort the HashMap
+        // version needed and keeps the CSR layout (and so every
+        // downstream floating-point reduction) independent of hasher
+        // state. Bit-identical to the old HashMap + sort construction —
+        // pinned by `from_edges_matches_the_hashmap_reference` below.
+        let mut dedup: std::collections::BTreeMap<(u32, u32), f64> =
+            std::collections::BTreeMap::new();
         for &(u, v, w) in edges {
             assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range n={n}");
             assert!(w > 0.0, "edge weights must be positive, got {w}");
@@ -44,9 +50,9 @@ impl Graph {
                 })
                 .or_insert(w);
         }
-        let mut uniq: Vec<(u32, u32, f64)> =
+        let uniq: Vec<(u32, u32, f64)> =
             dedup.into_iter().map(|((u, v), w)| (u, v, w)).collect();
-        uniq.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        debug_assert!(uniq.windows(2).all(|p| (p[0].0, p[0].1) < (p[1].0, p[1].1)));
 
         let mut deg = vec![0usize; n];
         for &(u, v, _) in &uniq {
@@ -171,6 +177,46 @@ mod tests {
         assert!(!g.is_connected());
         assert!(Graph::from_edges(1, &[]).is_connected());
         assert!(Graph::from_edges(0, &[]).is_connected());
+    }
+
+    #[test]
+    fn from_edges_matches_the_hashmap_reference() {
+        // Bit-identity pin for the HashMap → BTreeMap swap: a reference
+        // dedup with the old semantics (hash map keyed by (min,max),
+        // keep-min weight, then sort by (u,v)) must produce the same
+        // edge list bit for bit, on a messy input with duplicates,
+        // self-loops and both orientations.
+        let raw: Vec<(u32, u32, f64)> = vec![
+            (4, 1, 0.75),
+            (1, 4, 0.5),
+            (2, 2, 9.0),
+            (0, 3, 1.25),
+            (3, 0, 2.0),
+            (5, 0, 0.125),
+            (1, 4, 1.0),
+            (4, 5, 3.5),
+        ];
+        let mut reference: std::collections::HashMap<(u32, u32), f64> =
+            std::collections::HashMap::new();
+        for &(u, v, w) in &raw {
+            if u == v {
+                continue;
+            }
+            let key = (u.min(v), u.max(v));
+            let e = reference.entry(key).or_insert(w);
+            if w < *e {
+                *e = w;
+            }
+        }
+        let mut want: Vec<(u32, u32, f64)> =
+            reference.into_iter().map(|((u, v), w)| (u, v, w)).collect();
+        want.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let g = Graph::from_edges(6, &raw);
+        assert_eq!(g.edges().len(), want.len());
+        for (got, exp) in g.edges().iter().zip(&want) {
+            assert_eq!((got.0, got.1), (exp.0, exp.1));
+            assert_eq!(got.2.to_bits(), exp.2.to_bits(), "weights must match bit for bit");
+        }
     }
 
     #[test]

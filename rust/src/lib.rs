@@ -39,6 +39,12 @@
 //! See `DESIGN.md` for the system inventory, the builder/prepare/
 //! integrate lifecycle, the error taxonomy and the numerics notes.
 
+// Unsafe inventory (see DESIGN.md "Verification & static analysis"):
+// the crate is `unsafe`-free except for two explicitly allowed sites —
+// the counting test allocator in `bench_util` and the loom-only scoped
+// spawn shim in `sync`.
+#![deny(unsafe_code)]
+
 pub mod bench_util;
 pub mod cli;
 pub mod config;
@@ -49,6 +55,7 @@ pub mod linalg;
 pub mod ml;
 pub mod ot;
 pub mod runtime;
+pub mod sync;
 pub mod tree;
 
 pub use ftfi::functions::FDist;

@@ -611,6 +611,7 @@ fn cmd_gw(args: &Args) -> CliResult {
     for (name, backend) in [("dense", GwBackend::Dense), ("ftfi", GwBackend::Ftfi)] {
         let (r, total) =
             time_once(|| gromov_wasserstein(&ta, &tb, &p, &p, backend, &GwParams::default()));
+        let r = r?;
         println!(
             "{name:>5}: GW {:.5} in {total:.2}s total, {:.2}s field integration ({} CG iters)",
             r.discrepancy, r.integration_seconds, r.iterations

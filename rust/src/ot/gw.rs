@@ -11,7 +11,7 @@
 //! runs them in near-linear time.
 
 use crate::ftfi::functions::FDist;
-use crate::ftfi::{PreparedIntegrator, TreeFieldIntegrator};
+use crate::ftfi::{FtfiError, PreparedIntegrator, TreeFieldIntegrator};
 use crate::linalg::matrix::Matrix;
 use crate::tree::Tree;
 
@@ -62,21 +62,17 @@ enum SideOp<'a> {
 
 impl SideOp<'_> {
     /// `M_f · X` for f(x)=x.
-    fn apply_id(&self, x: &Matrix) -> Matrix {
+    fn apply_id(&self, x: &Matrix) -> Result<Matrix, FtfiError> {
         match self {
-            SideOp::Dense { d, .. } => d.matmul(x),
-            SideOp::Ftfi { id, .. } => {
-                id.integrate(x).expect("plan shape matches the tree")
-            }
+            SideOp::Dense { d, .. } => Ok(d.matmul(x)),
+            SideOp::Ftfi { id, .. } => id.integrate(x),
         }
     }
     /// `M_f · X` for f(x)=x².
-    fn apply_sq(&self, x: &Matrix) -> Matrix {
+    fn apply_sq(&self, x: &Matrix) -> Result<Matrix, FtfiError> {
         match self {
-            SideOp::Dense { d2, .. } => d2.matmul(x),
-            SideOp::Ftfi { sq, .. } => {
-                sq.integrate(x).expect("plan shape matches the tree")
-            }
+            SideOp::Dense { d2, .. } => Ok(d2.matmul(x)),
+            SideOp::Ftfi { sq, .. } => sq.integrate(x),
         }
     }
 }
@@ -104,6 +100,10 @@ fn sinkhorn_direction(g: &Matrix, p: &[f64], q: &[f64], eps: f64, iters: usize) 
 }
 
 /// Solve GW between the metrics of `ta` and `tb` with marginals `p`, `q`.
+///
+/// Fails with [`FtfiError::ShapeMismatch`] when a marginal's length does
+/// not match its tree's vertex count (and propagates any FTFI planning
+/// error from the chosen backend).
 pub fn gromov_wasserstein(
     ta: &Tree,
     tb: &Tree,
@@ -111,11 +111,15 @@ pub fn gromov_wasserstein(
     q: &[f64],
     backend: GwBackend,
     params: &GwParams,
-) -> GwResult {
+) -> Result<GwResult, FtfiError> {
     let n = ta.n();
     let m = tb.n();
-    assert_eq!(p.len(), n);
-    assert_eq!(q.len(), m);
+    if p.len() != n {
+        return Err(FtfiError::ShapeMismatch { expected: n, got: p.len() });
+    }
+    if q.len() != m {
+        return Err(FtfiError::ShapeMismatch { expected: m, got: q.len() });
+    }
 
     // Build backends (preprocessing cost included in integration time for
     // the dense baseline, since materialisation IS its integration step).
@@ -143,17 +147,11 @@ pub fn gromov_wasserstein(
         GwBackend::Ftfi => {
             let f_id = FDist::Identity;
             let f_sq = FDist::Polynomial(vec![0.0, 0.0, 1.0]);
-            tfia = TreeFieldIntegrator::builder(ta).build().expect("valid tree metric");
-            tfib = TreeFieldIntegrator::builder(tb).build().expect("valid tree metric");
+            tfia = TreeFieldIntegrator::builder(ta).build()?;
+            tfib = TreeFieldIntegrator::builder(tb).build()?;
             (
-                SideOp::Ftfi {
-                    id: tfia.prepare(&f_id).expect("identity kernel is always plannable"),
-                    sq: tfia.prepare(&f_sq).expect("polynomial kernel is always plannable"),
-                },
-                SideOp::Ftfi {
-                    id: tfib.prepare(&f_id).expect("identity kernel is always plannable"),
-                    sq: tfib.prepare(&f_sq).expect("polynomial kernel is always plannable"),
-                },
+                SideOp::Ftfi { id: tfia.prepare(&f_id)?, sq: tfia.prepare(&f_sq)? },
+                SideOp::Ftfi { id: tfib.prepare(&f_id)?, sq: tfib.prepare(&f_sq)? },
             )
         }
     };
@@ -162,18 +160,18 @@ pub fn gromov_wasserstein(
     // Constant part of the square-loss decomposition:
     // cst = (C₁∘C₁)·p·1ᵀ + 1·qᵀ·(C₂∘C₂)ᵀ.
     let t0 = std::time::Instant::now();
-    let c1sq_p = opa.apply_sq(&Matrix::from_vec(n, 1, p.to_vec()));
-    let c2sq_q = opb.apply_sq(&Matrix::from_vec(m, 1, q.to_vec()));
+    let c1sq_p = opa.apply_sq(&Matrix::from_vec(n, 1, p.to_vec()))?;
+    let c2sq_q = opb.apply_sq(&Matrix::from_vec(m, 1, q.to_vec()))?;
     integration_seconds += t0.elapsed().as_secs_f64();
 
     // `C₁·T·C₂` through the chosen backend; T is n×m.
-    let mut apply_c1_t_c2 = |t: &Matrix| -> Matrix {
+    let mut apply_c1_t_c2 = |t: &Matrix| -> Result<Matrix, FtfiError> {
         let t0 = std::time::Instant::now();
         // (T·C₂) = (C₂·Tᵀ)ᵀ — C₂ symmetric.
-        let tc2 = opb.apply_id(&t.transpose()).transpose();
-        let out = opa.apply_id(&tc2);
+        let tc2 = opb.apply_id(&t.transpose())?.transpose();
+        let out = opa.apply_id(&tc2)?;
         integration_seconds += t0.elapsed().as_secs_f64();
-        out
+        Ok(out)
     };
 
     let loss = |t: &Matrix, c1tc2: &Matrix| -> f64 {
@@ -203,7 +201,7 @@ pub fn gromov_wasserstein(
             *v *= c;
         }
     }
-    let mut c1tc2 = apply_c1_t_c2(&t);
+    let mut c1tc2 = apply_c1_t_c2(&t)?;
     let mut cur_loss = loss(&t, &c1tc2);
     let mut iterations = 0;
     for it in 0..params.max_iter {
@@ -215,16 +213,16 @@ pub fn gromov_wasserstein(
         let dir = sinkhorn_direction(&grad, p, q, params.inner_eps, params.inner_iters);
         // Quadratic line search on T + α(D−T), α ∈ [0,1]: evaluate the
         // true objective at three points and minimise the fitted parabola.
-        let mut tryat = |alpha: f64| -> (Matrix, Matrix, f64) {
+        let mut tryat = |alpha: f64| -> Result<(Matrix, Matrix, f64), FtfiError> {
             let mut cand = t.clone();
             cand.scale(1.0 - alpha);
             cand.axpy(alpha, &dir);
-            let c = apply_c1_t_c2(&cand);
+            let c = apply_c1_t_c2(&cand)?;
             let l = loss(&cand, &c);
-            (cand, c, l)
+            Ok((cand, c, l))
         };
-        let (t_half, c_half, l_half) = tryat(0.5);
-        let (t_one, c_one, l_one) = tryat(1.0);
+        let (t_half, c_half, l_half) = tryat(0.5)?;
+        let (t_one, c_one, l_one) = tryat(1.0)?;
         // Parabola through (0, cur), (0.5, half), (1, one). When the
         // segment is concave (a ≤ 0) the minimum is at an endpoint, so
         // always compare the interior stationary point against both
@@ -234,11 +232,16 @@ pub fn gromov_wasserstein(
         let mut candidates = vec![(t_half, c_half, l_half), (t_one, c_one, l_one)];
         if a > 1e-15 {
             let alpha_star = (-b / (2.0 * a)).clamp(0.0, 1.0);
-            if alpha_star > 1e-9 && (alpha_star - 0.5).abs() > 1e-9 && (alpha_star - 1.0).abs() > 1e-9 {
-                candidates.push(tryat(alpha_star));
+            let interior = alpha_star > 1e-9
+                && (alpha_star - 0.5).abs() > 1e-9
+                && (alpha_star - 1.0).abs() > 1e-9;
+            if interior {
+                candidates.push(tryat(alpha_star)?);
             }
         }
-        candidates.sort_by(|x, y| x.2.partial_cmp(&y.2).unwrap());
+        // total_cmp: losses can be NaN only if the input weights were,
+        // and a total order keeps the selection deterministic either way.
+        candidates.sort_by(|x, y| x.2.total_cmp(&y.2));
         let mut improved = false;
         if let Some((tc, cc, lc)) = candidates.into_iter().next() {
             if lc < cur_loss - params.tol * (1.0 + cur_loss.abs()) {
@@ -252,7 +255,7 @@ pub fn gromov_wasserstein(
             break;
         }
     }
-    GwResult { plan: t, discrepancy: cur_loss.max(0.0), iterations, integration_seconds }
+    Ok(GwResult { plan: t, discrepancy: cur_loss.max(0.0), iterations, integration_seconds })
 }
 
 #[cfg(test)]
@@ -269,8 +272,9 @@ mod tests {
         let tb = generators::random_tree(20, 0.2, 1.0, &mut rng);
         let p = uniform_marginal(24);
         let q = uniform_marginal(20);
-        let rd = gromov_wasserstein(&ta, &tb, &p, &q, GwBackend::Dense, &GwParams::default());
-        let rf = gromov_wasserstein(&ta, &tb, &p, &q, GwBackend::Ftfi, &GwParams::default());
+        let params = GwParams::default();
+        let rd = gromov_wasserstein(&ta, &tb, &p, &q, GwBackend::Dense, &params).unwrap();
+        let rf = gromov_wasserstein(&ta, &tb, &p, &q, GwBackend::Ftfi, &params).unwrap();
         let rel = (rd.discrepancy - rf.discrepancy).abs() / (1.0 + rd.discrepancy);
         assert!(rel < 1e-6, "dense {} vs ftfi {}", rd.discrepancy, rf.discrepancy);
     }
@@ -281,7 +285,7 @@ mod tests {
         let mut rng = Pcg::seed(2);
         let t = generators::random_tree(16, 0.5, 1.0, &mut rng);
         let p = uniform_marginal(16);
-        let r = gromov_wasserstein(&t, &t, &p, &p, GwBackend::Dense, &GwParams::default());
+        let r = gromov_wasserstein(&t, &t, &p, &p, GwBackend::Dense, &GwParams::default()).unwrap();
         // Entropic inner solves keep it from exact zero; expect small.
         let scale: f64 = t.all_pairs().iter().map(|d| d * d).sum::<f64>() / (16.0 * 16.0);
         assert!(r.discrepancy < 0.35 * scale, "gw={} scale={scale}", r.discrepancy);
@@ -296,8 +300,10 @@ mod tests {
         let star = Tree::from_edges(16, &star_edges);
         let p = uniform_marginal(16);
         let params = GwParams::default();
-        let self_d = gromov_wasserstein(&path, &path, &p, &p, GwBackend::Dense, &params);
-        let cross = gromov_wasserstein(&path, &star, &p, &p, GwBackend::Dense, &params);
+        let self_d =
+            gromov_wasserstein(&path, &path, &p, &p, GwBackend::Dense, &params).unwrap();
+        let cross =
+            gromov_wasserstein(&path, &star, &p, &p, GwBackend::Dense, &params).unwrap();
         assert!(
             cross.discrepancy > 2.0 * self_d.discrepancy,
             "cross {} vs self {}",
@@ -313,7 +319,7 @@ mod tests {
         let tb = generators::random_tree(14, 0.5, 1.0, &mut rng);
         let p = uniform_marginal(12);
         let q = uniform_marginal(14);
-        let r = gromov_wasserstein(&ta, &tb, &p, &q, GwBackend::Ftfi, &GwParams::default());
+        let r = gromov_wasserstein(&ta, &tb, &p, &q, GwBackend::Ftfi, &GwParams::default()).unwrap();
         // Marginals approximately honoured (entropic inner solves).
         for i in 0..12 {
             let row: f64 = (0..14).map(|j| r.plan.get(i, j)).sum();

@@ -30,9 +30,14 @@
 //!
 //! Thread-count resolution (`FTFI_THREADS`, CLI `--threads`, config
 //! `integrator.threads`) lives in [`WorkPool::with_auto`].
+//!
+//! The pool's primitives come from [`crate::sync`], so the CI loom job
+//! (`--cfg loom`) model-checks the exact token and scope code that ships
+//! — see `tests/loom_models.rs`.
 
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::thread;
 use std::panic;
-use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Integration problem size (vertex count) below which one batch item /
 /// serving request is too small to justify a helper thread: a scoped
@@ -131,11 +136,26 @@ impl WorkPool {
         }
     }
 
-    /// Try to reserve one helper token.
+    /// Try to reserve one helper token. A plain CAS loop (equivalent to
+    /// `fetch_update` with `checked_sub`) so the same code compiles
+    /// against both `std` and loom atomics.
     fn try_acquire(&self) -> bool {
-        self.available
-            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| v.checked_sub(1))
-            .is_ok()
+        let mut cur = self.available.load(Ordering::Acquire);
+        loop {
+            let next = match cur.checked_sub(1) {
+                Some(next) => next,
+                None => return false,
+            };
+            match self.available.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return true,
+                Err(actual) => cur = actual,
+            }
+        }
     }
 
     /// Run `a` and `b`, on two threads when a helper token is free, and
@@ -156,7 +176,7 @@ impl WorkPool {
         }
         let _token = TokenGuard { pool: self, count: 1 };
         self.forks.fetch_add(1, Ordering::Relaxed);
-        std::thread::scope(|s| {
+        thread::scope(|s| {
             let hb = s.spawn(b);
             let ra = a();
             let rb = match hb.join() {
@@ -204,7 +224,7 @@ impl WorkPool {
             }
             chunk
         };
-        let chunks: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let chunks: Vec<Vec<(usize, R)>> = thread::scope(|s| {
             let run_ref = &run;
             let handles: Vec<_> = (0..acquired).map(|_| s.spawn(run_ref)).collect();
             let mut all = vec![run()];
@@ -223,6 +243,8 @@ impl WorkPool {
         for (i, r) in chunks.into_iter().flatten() {
             slots[i] = Some(r);
         }
+        // lint: infallible because the atomic cursor hands out every index in
+        // 0..n exactly once and each produced chunk entry is placed by index.
         slots.into_iter().map(|o| o.expect("work pool: every map index must be produced")).collect()
     }
 }
@@ -301,5 +323,65 @@ mod tests {
         assert_eq!(WorkPool::with_auto(1).threads(), 1);
         assert!(WorkPool::with_auto(0).threads() >= 1);
         assert_eq!(WorkPool::new(0).threads(), 1, "threads clamp to ≥ 1");
+    }
+
+    #[test]
+    fn zero_thread_pool_behaves_like_serial() {
+        let pool = WorkPool::new(0);
+        let (a, b) = pool.join(|| "l", || "r");
+        assert_eq!((a, b), ("l", "r"));
+        let items: Vec<i64> = (0..7).collect();
+        assert_eq!(pool.map(&items, |_, &v| -v), (0..7).map(|v| -v).collect::<Vec<_>>());
+        assert_eq!(pool.stats().forks, 0);
+        assert_eq!(pool.stats().helper_tasks, 0);
+    }
+
+    #[test]
+    fn join_degrades_to_inline_when_tokens_are_exhausted() {
+        let pool = WorkPool::new(2); // one helper token
+        assert!(pool.try_acquire(), "the single token must be acquirable");
+        assert!(!pool.try_acquire(), "no second token exists");
+        // Saturated: join must still run both closures, inline, without
+        // forking or touching the (empty) token pool.
+        let forks_before = pool.stats().forks;
+        let (a, b) = pool.join(|| 10, || 20);
+        assert_eq!((a, b), (10, 20));
+        assert_eq!(pool.stats().forks, forks_before, "saturated join must not fork");
+        assert_eq!(pool.available.load(Ordering::SeqCst), 0);
+        pool.available.fetch_add(1, Ordering::AcqRel); // hand the token back
+        assert_eq!(pool.available.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn panic_in_map_task_poisons_neither_pool_nor_results() {
+        let pool = WorkPool::new(4);
+        let items: Vec<usize> = (0..512).collect();
+        let caught = panic::catch_unwind(panic::AssertUnwindSafe(|| {
+            pool.map(&items, |_, &v| {
+                if v == 3 {
+                    panic!("injected task failure");
+                }
+                v * 2
+            })
+        }));
+        assert!(caught.is_err(), "the task panic must propagate to the caller");
+        // Every helper token must have been returned by the guard...
+        assert_eq!(pool.available.load(Ordering::SeqCst), 3);
+        // ...and the pool must keep producing bit-identical results.
+        let out = pool.map(&items, |_, &v| (v as f64) * 0.1);
+        let serial: Vec<f64> = items.iter().map(|&v| (v as f64) * 0.1).collect();
+        assert_eq!(out, serial);
+    }
+
+    #[test]
+    fn panic_in_join_helper_propagates_and_restores_tokens() {
+        let pool = WorkPool::new(2);
+        let caught = panic::catch_unwind(panic::AssertUnwindSafe(|| {
+            pool.join(|| 1, || -> i32 { panic!("helper side failed") })
+        }));
+        assert!(caught.is_err());
+        assert_eq!(pool.available.load(Ordering::SeqCst), 1, "token restored after panic");
+        let (a, b) = pool.join(|| 5, || 6);
+        assert_eq!((a, b), (5, 6));
     }
 }

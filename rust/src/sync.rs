@@ -1,0 +1,248 @@
+//! Synchronization shim: the one import path for every primitive the
+//! engine's concurrent components use ([`WorkPool`](crate::WorkPool)
+//! fork/join, the prepared-plan workspace pools, the coordinator's
+//! session table and shutdown flag).
+//!
+//! Normally this is a plain re-export of `std::sync` / `std::thread`.
+//! Under `--cfg loom` (the CI model-checking job; loom is added there
+//! with `cargo add`, it is not a dependency of the offline build) the
+//! same names resolve to `loom` equivalents, so `tests/loom_models.rs`
+//! can exhaustively explore the interleavings of the real pool and
+//! arena code rather than of a copy that can drift.
+//!
+//! What is deliberately **not** shimmed:
+//!
+//! - `Arc` — plain reference counting with no interesting interleavings
+//!   of its own; keeping `std::sync::Arc` everywhere avoids splitting
+//!   shared types (`Arc<WorkPool>`, `Arc<TreeFieldIntegrator>`) between
+//!   two `Arc` definitions across the modules loom does not model.
+//! - `std::sync::mpsc` — loom cannot model channels, so the batcher's
+//!   `recv_timeout` handoff is covered by the integration tests and the
+//!   sanitizer CI jobs instead (see DESIGN.md "Verification & static
+//!   analysis").
+//!
+//! Loom's primitives panic when used outside `loom::model`, and its
+//! constructors are not `const`, so process-lifetime statics (e.g. the
+//! integrator-tree id counter) intentionally stay on `std::sync::atomic`.
+
+/// Atomic types and orderings (`loom::sync::atomic` under `cfg(loom)`).
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(not(loom))]
+pub use std::sync::{Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Mutex, MutexGuard};
+
+/// Scoped/plain threads (`loom::thread` under `cfg(loom)`, with a
+/// hand-rolled `scope` because loom has no structured-spawn API).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{scope, yield_now, Scope, ScopedJoinHandle};
+
+    #[cfg(loom)]
+    pub use self::loom_scope::{scope, Scope, ScopedJoinHandle};
+    #[cfg(loom)]
+    pub use loom::thread::yield_now;
+
+    /// Minimal `std::thread::scope` lookalike on top of `loom::thread::spawn`.
+    ///
+    /// Loom only offers free-standing `'static` spawns, so this shim
+    /// erases the `'scope` lifetime of the closure with a `transmute`
+    /// and restores the soundness argument dynamically: every spawned
+    /// thread is joined before its `ScopedJoinHandle` is gone — either
+    /// by an explicit `join()` or by the handle's `Drop` — and the
+    /// handle itself cannot outlive `'scope`. (Leaking a handle with
+    /// `mem::forget` would break this; the engine never does, and this
+    /// code only exists inside loom models.) The closure's result
+    /// travels through a `std::sync` mutex slot that is written before
+    /// the loom join and read after it, so it is never contended and
+    /// adds no interleavings to the model.
+    #[cfg(loom)]
+    #[allow(unsafe_code)]
+    mod loom_scope {
+        use std::marker::PhantomData;
+        use std::sync::{Arc, Mutex};
+
+        pub struct Scope<'scope, 'env: 'scope> {
+            _scope: PhantomData<&'scope mut &'scope ()>,
+            _env: PhantomData<&'env mut &'env ()>,
+        }
+
+        pub struct ScopedJoinHandle<'scope, T> {
+            handle: Option<loom::thread::JoinHandle<()>>,
+            result: Arc<Mutex<Option<T>>>,
+            _marker: PhantomData<&'scope ()>,
+        }
+
+        pub fn scope<'env, F, T>(f: F) -> T
+        where
+            F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
+        {
+            let s = Scope { _scope: PhantomData, _env: PhantomData };
+            f(&s)
+        }
+
+        impl<'scope, 'env> Scope<'scope, 'env> {
+            pub fn spawn<F, T>(&'scope self, f: F) -> ScopedJoinHandle<'scope, T>
+            where
+                F: FnOnce() -> T + Send + 'scope,
+                T: Send + 'scope,
+            {
+                let result: Arc<Mutex<Option<T>>> = Arc::new(Mutex::new(None));
+                let slot = Arc::clone(&result);
+                let task: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                    let value = f();
+                    match slot.lock() {
+                        Ok(mut guard) => *guard = Some(value),
+                        Err(poisoned) => *poisoned.into_inner() = Some(value),
+                    }
+                });
+                // SAFETY: the `'scope` borrows inside `task` stay valid
+                // until the thread is joined, and the join happens (in
+                // `join()` or in `Drop`) strictly before the handle —
+                // which cannot outlive `'scope` — is gone.
+                let task: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(task) };
+                let handle = loom::thread::spawn(move || task());
+                ScopedJoinHandle { handle: Some(handle), result, _marker: PhantomData }
+            }
+        }
+
+        impl<'scope, T> ScopedJoinHandle<'scope, T> {
+            pub fn join(mut self) -> std::thread::Result<T> {
+                let handle = self.handle.take().expect("scoped handle joined twice");
+                match handle.join() {
+                    Ok(()) => {
+                        let value = match self.result.lock() {
+                            Ok(mut guard) => guard.take(),
+                            Err(poisoned) => poisoned.into_inner().take(),
+                        };
+                        Ok(value.expect("scoped thread finished without storing a result"))
+                    }
+                    Err(panic) => Err(panic),
+                }
+            }
+        }
+
+        impl<T> Drop for ScopedJoinHandle<'_, T> {
+            fn drop(&mut self) {
+                if let Some(handle) = self.handle.take() {
+                    // Upholds the 'scope lifetime erased in `spawn`.
+                    let _ = handle.join();
+                }
+            }
+        }
+    }
+}
+
+/// A lock-protected stack of reusable arenas (workspaces, scratch
+/// buffers): `checkout` pops one or builds a fresh one, `put_back`
+/// returns it for the next caller. Extracted from `PreparedPlans` so
+/// the checkout/return protocol itself is loom-model-checkable with
+/// small mock payloads (`tests/loom_models.rs`), independently of the
+/// heavyweight real arenas.
+///
+/// The pool never blocks progress on correctness: a poisoned lock (a
+/// panic while pushing/popping) is recovered by taking the inner value,
+/// which is safe because the stack only ever holds *idle* arenas —
+/// every checked-out arena is resized/zeroed by its consumer before
+/// use, so a half-pushed stack cannot corrupt results.
+#[derive(Debug)]
+pub struct ArenaPool<T> {
+    stock: Mutex<Vec<T>>,
+}
+
+impl<T> Default for ArenaPool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> ArenaPool<T> {
+    pub fn new() -> Self {
+        ArenaPool { stock: Mutex::new(Vec::new()) }
+    }
+
+    /// Pop an idle arena, or build one with `make` if none is stocked.
+    pub fn checkout(&self, make: impl FnOnce() -> T) -> T {
+        self.lock_stock().pop().unwrap_or_else(make)
+    }
+
+    /// Return an arena to the stock for reuse.
+    pub fn put_back(&self, arena: T) {
+        self.lock_stock().push(arena);
+    }
+
+    /// Number of idle arenas currently stocked (tests/metrics only).
+    pub fn idle(&self) -> usize {
+        self.lock_stock().len()
+    }
+
+    #[cfg(not(loom))]
+    fn lock_stock(&self) -> MutexGuard<'_, Vec<T>> {
+        match self.stock.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    // Loom models never poison (a panicking model thread fails the
+    // whole model), and loom's poison type differs from std's.
+    #[cfg(loom)]
+    fn lock_stock(&self) -> MutexGuard<'_, Vec<T>> {
+        self.stock.lock().expect("arena pool lock")
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::ArenaPool;
+
+    #[test]
+    fn checkout_prefers_stocked_arenas() {
+        let pool: ArenaPool<Vec<u8>> = ArenaPool::new();
+        assert_eq!(pool.idle(), 0);
+        let fresh = pool.checkout(|| vec![1, 2, 3]);
+        assert_eq!(fresh, vec![1, 2, 3]);
+        pool.put_back(vec![9; 8]);
+        pool.put_back(vec![7; 4]);
+        assert_eq!(pool.idle(), 2);
+        // LIFO: the most recently returned (warmest) arena comes back first.
+        assert_eq!(pool.checkout(Vec::new), vec![7; 4]);
+        assert_eq!(pool.checkout(Vec::new), vec![9; 8]);
+        assert_eq!(pool.checkout(Vec::new), Vec::<u8>::new());
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn contended_checkout_returns_distinct_arenas() {
+        let pool: ArenaPool<Vec<u64>> = ArenaPool::new();
+        for i in 0..4u64 {
+            pool.put_back(vec![i; 16]);
+        }
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    s.spawn(|| {
+                        let a = pool.checkout(|| vec![u64::MAX; 16]);
+                        assert_eq!(a.len(), 16);
+                        let tag = a[0];
+                        pool.put_back(a);
+                        tag
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("arena checkout thread");
+            }
+        });
+        assert_eq!(pool.idle(), 4, "every arena must be returned");
+    }
+}

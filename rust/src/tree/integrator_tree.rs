@@ -32,6 +32,7 @@
 //! `left groups` / `right groups` (CSR: distance index → vertices),
 //! with `*_d[0] = 0` always being the pivot's own singleton group.
 
+use super::invariants;
 use super::separator::{split, SeparatorScratch};
 use super::Tree;
 use crate::ftfi::cordial::{
@@ -42,8 +43,12 @@ use crate::ftfi::error::FtfiError;
 use crate::ftfi::functions::FDist;
 use crate::linalg::matrix::Matrix;
 use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::ArenaPool;
+// The id counter is a process-lifetime static, so it stays on the std
+// atomics (loom's constructors are not `const` and panic outside a
+// model); everything else synchronizes through `crate::sync`.
+use std::sync::atomic::{AtomicU64, Ordering as StdOrdering};
 
 /// Internal nodes at least this large fork their left/right subtree
 /// integrations onto the work pool (Lemma 3.1 guarantees both children
@@ -107,9 +112,11 @@ pub enum ItNode {
 }
 
 /// The IntegratorTree: an arena of [`ItNode`]s, root at index 0.
+/// (Structural fields are `pub(crate)` so [`super::invariants`] can
+/// audit the slot layout without going through accessors.)
 pub struct IntegratorTree {
-    nodes: Vec<ItNode>,
-    n: usize,
+    pub(crate) nodes: Vec<ItNode>,
+    pub(crate) n: usize,
     leaf_threshold: usize,
     /// Unique instance id (see [`IT_IDS`]).
     id: u64,
@@ -124,25 +131,25 @@ pub struct IntegratorTree {
     /// is one contiguous slot range. The prepared hot path permutes the
     /// field into this layout once per call and recurses on disjoint
     /// sub-slices.
-    slot_src: Vec<u32>,
+    pub(crate) slot_src: Vec<u32>,
     /// Original vertex → its output slot in the root region (pivots
     /// resolve to their *left* copy — the side that produces their
     /// output row).
-    root_slot: Vec<u32>,
+    pub(crate) root_slot: Vec<u32>,
     /// `slot_src.len()` (cached).
-    total_slots: usize,
+    pub(crate) total_slots: usize,
     /// max over internal nodes of `2·(left.d.len() + right.d.len())` —
     /// the row capacity of the per-task aggregate bump arena (only one
     /// node's aggregates are ever live per task: children finish before
     /// a node's combine step allocates).
-    agg_rows_max: usize,
+    pub(crate) agg_rows_max: usize,
     /// CSR offsets of the inverse slot map: vertex `v`'s slot copies are
     /// `vert_slot_items[vert_slot_off[v]..vert_slot_off[v+1]]` (pivots
     /// have one copy per level they pivot at). The delta path uses this
     /// to mark exactly the dirty slots of a sparse field update.
-    vert_slot_off: Vec<u32>,
+    pub(crate) vert_slot_off: Vec<u32>,
     /// CSR items of the inverse slot map (see [`Self::vert_slot_off`]).
-    vert_slot_items: Vec<u32>,
+    pub(crate) vert_slot_items: Vec<u32>,
     /// IT nodes actually processed (not skipped as clean) by the sparse
     /// delta passes over this tree's lifetime. Exposed through
     /// [`ItStats::delta_nodes_visited`]; the sparsity tests pin that a
@@ -220,18 +227,18 @@ enum PreparedNode {
 /// aggregate rows from its side tables, the FFT length / Chebyshev rank
 /// from the maxima over the built plans.
 #[derive(Clone, Copy, Debug, Default)]
-struct WorkspaceSizes {
+pub(crate) struct WorkspaceSizes {
     /// Rows of each field slab (`total_slots` of the tree).
-    slab_rows: usize,
+    pub(crate) slab_rows: usize,
     /// Rows of the per-task aggregate bump arena.
-    agg_rows: usize,
+    pub(crate) agg_rows: usize,
     /// Complex FFT scratch length (max lattice-plan transform size).
-    fft_len: usize,
+    pub(crate) fft_len: usize,
     /// Chebyshev aggregation rank (max expansion rank).
-    cheb_rank: usize,
+    pub(crate) cheb_rank: usize,
     /// Rational/Cauchy numerator-coefficient scratch length (max
     /// prepared basis degree + 1 over the rational plans).
-    rat_len: usize,
+    pub(crate) rat_len: usize,
 }
 
 /// Per-task scratch: the aggregate bump arena (one internal node's
@@ -300,9 +307,9 @@ pub struct PreparedPlans {
     plans_built: usize,
     sizes: WorkspaceSizes,
     /// Per-call workspaces (stock grows to the peak call concurrency).
-    workspaces: Mutex<Vec<Workspace>>,
+    workspaces: ArenaPool<Workspace>,
     /// Per-fork scratch (stock grows to the peak fork concurrency).
-    fork_scratch: Mutex<Vec<NodeScratch>>,
+    fork_scratch: ArenaPool<NodeScratch>,
 }
 
 impl PreparedPlans {
@@ -341,7 +348,7 @@ impl PreparedPlans {
     }
 
     fn checkout_workspace(&self, d: usize) -> Workspace {
-        let mut ws = self.workspaces.lock().unwrap().pop().unwrap_or_else(Workspace::new);
+        let mut ws = self.workspaces.checkout(Workspace::new);
         let rows = self.sizes.slab_rows * d;
         if ws.slab_in.len() < rows {
             ws.slab_in.resize(rows, 0.0);
@@ -357,17 +364,17 @@ impl PreparedPlans {
     }
 
     fn return_workspace(&self, ws: Workspace) {
-        self.workspaces.lock().unwrap().push(ws);
+        self.workspaces.put_back(ws);
     }
 
     fn checkout_scratch(&self, d: usize) -> NodeScratch {
-        let mut s = self.fork_scratch.lock().unwrap().pop().unwrap_or_else(NodeScratch::new);
+        let mut s = self.fork_scratch.checkout(NodeScratch::new);
         s.ensure(&self.sizes, d);
         s
     }
 
     fn return_scratch(&self, s: NodeScratch) {
-        self.fork_scratch.lock().unwrap().push(s);
+        self.fork_scratch.put_back(s);
     }
 }
 
@@ -386,7 +393,7 @@ impl IntegratorTree {
             nodes: Vec::new(),
             n,
             leaf_threshold: t,
-            id: IT_IDS.fetch_add(1, Ordering::Relaxed),
+            id: IT_IDS.fetch_add(1, StdOrdering::Relaxed),
             plan_builds: AtomicUsize::new(0),
             slot_src: Vec::new(),
             root_slot: Vec::new(),
@@ -400,6 +407,9 @@ impl IntegratorTree {
         let verts: Vec<u32> = (0..n as u32).collect();
         it.build(tree, verts, &mut scratch);
         it.assign_slots();
+        if invariants::enabled() {
+            invariants::check_tree(&it);
+        }
         it
     }
 
@@ -417,8 +427,10 @@ impl IntegratorTree {
             return idx;
         }
         let s = split(tree, &verts, scratch);
-        // node-local index of each global vertex.
-        let mut local = std::collections::HashMap::with_capacity(verts.len());
+        // node-local index of each global vertex. BTreeMap (not HashMap):
+        // construction-side maps must never be a nondeterminism hazard,
+        // even though this one is only ever looked up, never iterated.
+        let mut local = std::collections::BTreeMap::new();
         for (i, &v) in verts.iter().enumerate() {
             local.insert(v, i as u32);
         }
@@ -700,6 +712,16 @@ impl IntegratorTree {
                 }
             }
         }
+        if invariants::enabled() {
+            let mut demands: Vec<(usize, usize, usize)> = Vec::new();
+            for node in &nodes {
+                if let PreparedNode::Internal { into_left, into_right, .. } = node {
+                    demands.push(plan_scratch_demand(into_left));
+                    demands.push(plan_scratch_demand(into_right));
+                }
+            }
+            invariants::check_workspace_sizes(self, &sizes, &demands);
+        }
         Ok(PreparedPlans {
             f: f.clone(),
             policy: policy.clone(),
@@ -708,8 +730,8 @@ impl IntegratorTree {
             tree_id: self.id,
             plans_built: built,
             sizes,
-            workspaces: Mutex::new(Vec::new()),
-            fork_scratch: Mutex::new(Vec::new()),
+            workspaces: ArenaPool::new(),
+            fork_scratch: ArenaPool::new(),
         })
     }
 
@@ -772,6 +794,8 @@ impl IntegratorTree {
         pool: &WorkPool,
         out: &mut Matrix,
     ) -> Result<(), FtfiError> {
+        // lint: allow(alloc-in-hot-path) — cold validation/error path,
+        // never reached by a warmed steady-state call.
         if plans.tree_id != self.id {
             return Err(FtfiError::InvalidInput(
                 "prepared plans were built for a different IntegratorTree".to_string(),
@@ -781,6 +805,7 @@ impl IntegratorTree {
             return Err(FtfiError::ShapeMismatch { expected: self.n, got: x.rows() });
         }
         if out.rows() != self.n || out.cols() != x.cols() {
+            // lint: allow(alloc-in-hot-path) — cold validation/error path.
             return Err(FtfiError::InvalidInput(format!(
                 "output buffer is {}x{}, expected {}x{}",
                 out.rows(),
@@ -914,6 +939,8 @@ impl IntegratorTree {
         pool: &WorkPool,
         out: &mut Matrix,
     ) -> Result<(), FtfiError> {
+        // lint: allow(alloc-in-hot-path) — cold validation/error path,
+        // never reached by a warmed steady-state call.
         if plans.tree_id != self.id {
             return Err(FtfiError::InvalidInput(
                 "prepared plans were built for a different IntegratorTree".to_string(),
@@ -923,6 +950,7 @@ impl IntegratorTree {
             return Err(FtfiError::ShapeMismatch { expected: self.n, got: dx.rows() });
         }
         if out.rows() != self.n || out.cols() != dx.cols() {
+            // lint: allow(alloc-in-hot-path) — cold validation/error path.
             return Err(FtfiError::InvalidInput(format!(
                 "output buffer is {}x{}, expected {}x{}",
                 out.rows(),
@@ -933,6 +961,7 @@ impl IntegratorTree {
         }
         for &v in rows {
             if v as usize >= self.n {
+                // lint: allow(alloc-in-hot-path) — cold validation/error path.
                 return Err(FtfiError::InvalidInput(format!(
                     "delta row {v} out of range (n = {})",
                     self.n
@@ -975,6 +1004,11 @@ impl IntegratorTree {
                 for i in 0..total {
                     prefix[i + 1] += prefix[i];
                 }
+                if invariants::enabled() {
+                    // Allocation-free by design: this guard runs on the
+                    // debug-mode zero-alloc hot path (tests/hotpath_alloc).
+                    invariants::check_dirty_prefix(prefix, rows.len());
+                }
                 let (sin, sout) = (&slab_in[..slab_rows], &mut slab_out[..slab_rows]);
                 self.integrate_ws_delta(0, 0, sin, sout, d, plans, scratch, prefix, pool);
                 for (v, &slot) in self.root_slot.iter().enumerate() {
@@ -985,6 +1019,7 @@ impl IntegratorTree {
         }
         plans.return_workspace(ws);
         match duplicate {
+            // lint: allow(alloc-in-hot-path) — cold error path (malformed input).
             Some(v) => Err(FtfiError::InvalidInput(format!(
                 "duplicate delta row {v} (aggregate updates per row before integrating)"
             ))),
@@ -1534,10 +1569,10 @@ fn make_side(
     tree: &Tree,
     side_verts: &[u32],
     pivot: u32,
-    node_local: &std::collections::HashMap<u32, u32>,
+    node_local: &std::collections::BTreeMap<u32, u32>,
 ) -> Side {
     let k = side_verts.len();
-    let mut member = std::collections::HashMap::with_capacity(k);
+    let mut member = std::collections::BTreeMap::new();
     for (i, &v) in side_verts.iter().enumerate() {
         member.insert(v, i as u32);
     }
@@ -1562,7 +1597,9 @@ fn make_side(
     // Sort vertices by distance, group equal distances (tolerance scaled
     // to the magnitude — exact ties happen on lattice-weight trees).
     let mut order: Vec<u32> = (0..k as u32).collect();
-    order.sort_by(|&a, &b| dist[a as usize].partial_cmp(&dist[b as usize]).unwrap());
+    // total_cmp is bit-identical to partial_cmp here (the DFS above
+    // leaves no NaNs and distances are non-negative, so no -0.0 ties).
+    order.sort_by(|&a, &b| dist[a as usize].total_cmp(&dist[b as usize]));
     let maxd = dist.iter().fold(0.0f64, |m, &v| m.max(v));
     let eps = 1e-9 * (1.0 + maxd);
     let mut d: Vec<f64> = Vec::new();
@@ -1608,7 +1645,7 @@ fn aggregate(side: &Side, x: &Matrix) -> Matrix {
 /// (leaf construction): one restricted DFS per vertex, O(t²).
 fn leaf_distances(tree: &Tree, verts: &[u32]) -> Vec<f64> {
     let k = verts.len();
-    let mut member = std::collections::HashMap::with_capacity(k);
+    let mut member = std::collections::BTreeMap::new();
     for (i, &v) in verts.iter().enumerate() {
         member.insert(v, i as u32);
     }

@@ -1,0 +1,215 @@
+//! Runtime audits of the structural invariants the prepared hot paths
+//! silently rely on. The fast recursion never bounds-checks its slot
+//! arithmetic semantically — it trusts that the nested-dissection
+//! layout produced by `assign_slots` is exactly what the module docs
+//! claim. This module re-derives those claims from first principles and
+//! asserts them:
+//!
+//! - every internal node's slot region is its children's regions,
+//!   contiguous and disjoint, tiling `[0, total_slots)` exactly;
+//! - `total_slots = n + #internal nodes ≤ 2n − 1`;
+//! - the vertex → slot-copies CSR round-trips the slot permutation;
+//! - a delta call's `dirty_prefix` is monotone with unit steps;
+//! - the frozen workspace sizes dominate every plan's declared scratch
+//!   demand.
+//!
+//! Checks run when [`enabled`] is true — debug builds (so the entire
+//! existing test and property-harness suite exercises them for free)
+//! and release builds with the `ftfi_invariants` cargo feature. The
+//! guard is a runtime constant, so release builds without the feature
+//! compile the calls out entirely. [`check_dirty_prefix`] is on the
+//! zero-allocation delta hot path and therefore performs no allocation
+//! on success (the hotpath pins run in debug mode with these checks
+//! live).
+//!
+//! This module is the crate's assertion machinery, so the unchecked-
+//! panic lint exempts it wholesale (see `xtask`).
+
+use super::integrator_tree::{IntegratorTree, ItNode, WorkspaceSizes};
+
+/// Are the invariant audits active in this build/run?
+#[inline]
+pub(crate) fn enabled() -> bool {
+    cfg!(any(debug_assertions, feature = "ftfi_invariants"))
+}
+
+/// Audit the slot layout of a freshly built [`IntegratorTree`]
+/// (called at the end of construction).
+pub(crate) fn check_tree(it: &IntegratorTree) {
+    if it.n == 0 {
+        assert_eq!(it.total_slots, 0, "an empty tree must have no slots");
+        assert!(it.slot_src.is_empty() && it.root_slot.is_empty());
+        return;
+    }
+    let internal = it.nodes.iter().filter(|n| matches!(n, ItNode::Internal { .. })).count();
+    assert_eq!(
+        it.total_slots,
+        it.n + internal,
+        "total_slots must be n + #internal nodes (one pivot copy per level)"
+    );
+    assert!(
+        it.total_slots <= 2 * it.n - 1,
+        "total_slots {} exceeds the 2n−1 bound (n = {})",
+        it.total_slots,
+        it.n
+    );
+    assert_eq!(it.slot_src.len(), it.total_slots);
+    assert!(
+        it.slot_src.iter().all(|&v| (v as usize) < it.n),
+        "slot_src refers to an out-of-range vertex"
+    );
+
+    // Sibling regions are disjoint, contiguous, and tile the parent:
+    // walk the arena re-deriving each node's region from the recorded
+    // child region sizes and check they compose exactly.
+    check_regions(it, 0, 0, it.total_slots);
+
+    // The vertex → slot-copies CSR round-trips the slot permutation.
+    assert_eq!(it.vert_slot_off.len(), it.n + 1);
+    assert_eq!(it.vert_slot_off[0], 0);
+    assert_eq!(it.vert_slot_off[it.n] as usize, it.total_slots);
+    assert_eq!(it.vert_slot_items.len(), it.total_slots);
+    for v in 0..it.n {
+        let lo = it.vert_slot_off[v] as usize;
+        let hi = it.vert_slot_off[v + 1] as usize;
+        assert!(lo < hi, "vertex {v} has no slot copy");
+        for &s in &it.vert_slot_items[lo..hi] {
+            assert_eq!(
+                it.slot_src[s as usize] as usize, v,
+                "CSR lists slot {s} under vertex {v}, but the slot belongs elsewhere"
+            );
+        }
+    }
+
+    // root_slot is an injective section of the permutation: every
+    // vertex's output slot really holds that vertex.
+    assert_eq!(it.root_slot.len(), it.n);
+    let mut taken = vec![false; it.total_slots];
+    for (v, &slot) in it.root_slot.iter().enumerate() {
+        let s = slot as usize;
+        assert!(s < it.total_slots, "root_slot[{v}] out of range");
+        assert_eq!(it.slot_src[s] as usize, v, "root_slot[{v}] points at another vertex's slot");
+        assert!(!taken[s], "two vertices share output slot {s}");
+        taken[s] = true;
+    }
+}
+
+/// Recursively verify that node `idx` owns exactly `[start, start+len)`
+/// in the slot layout, composed of its children's contiguous regions.
+fn check_regions(it: &IntegratorTree, idx: usize, start: usize, len: usize) {
+    match &it.nodes[idx] {
+        ItNode::Leaf { size, .. } => {
+            assert_eq!(*size, len, "leaf {idx}: region size must equal its vertex count");
+        }
+        ItNode::Internal {
+            size,
+            left_child,
+            right_child,
+            left,
+            right,
+            lslots,
+            rslots,
+            left_slot,
+            right_slot,
+        } => {
+            assert_eq!(
+                lslots + rslots,
+                len,
+                "internal {idx}: child regions must tile the node's region exactly"
+            );
+            assert_eq!(
+                left.ids.len() + right.ids.len(),
+                *size + 1,
+                "internal {idx}: sides must partition the node plus one shared pivot"
+            );
+            // The side → slot maps land inside the correct half-regions
+            // and never collide (pivot copies are per-side, so the two
+            // maps are injective individually and jointly disjoint).
+            assert_eq!(left_slot.len(), left.ids.len());
+            assert_eq!(right_slot.len(), right.ids.len());
+            let mut seen = vec![false; len];
+            for &s in left_slot {
+                let s = s as usize;
+                assert!(s < *lslots, "internal {idx}: left slot {s} outside the left region");
+                assert!(!seen[s], "internal {idx}: left slot {s} assigned twice");
+                seen[s] = true;
+            }
+            for &s in right_slot {
+                let s = s as usize;
+                assert!(
+                    s >= *lslots && s < len,
+                    "internal {idx}: right slot {s} outside the right region"
+                );
+                assert!(!seen[s], "internal {idx}: right slot {s} assigned twice");
+                seen[s] = true;
+            }
+            check_regions(it, *left_child, start, *lslots);
+            check_regions(it, *right_child, start + lslots, *rslots);
+        }
+    }
+}
+
+/// Audit a delta call's freshly built dirty-slot prefix sums: monotone,
+/// unit steps, and at least one dirty slot per (distinct) updated row.
+/// Allocation-free — runs on the zero-alloc streaming hot path.
+pub(crate) fn check_dirty_prefix(prefix: &[u32], updated_rows: usize) {
+    assert!(!prefix.is_empty() && prefix[0] == 0, "dirty prefix must start at 0");
+    for i in 1..prefix.len() {
+        let step = prefix[i].wrapping_sub(prefix[i - 1]);
+        assert!(step <= 1, "dirty prefix must be monotone with unit steps (slot {})", i - 1);
+    }
+    assert!(
+        prefix[prefix.len() - 1] as usize >= updated_rows,
+        "fewer dirty slots than updated rows"
+    );
+}
+
+/// Audit the workspace sizes frozen at prepare time: the slabs cover
+/// the slot layout, the aggregate arena covers the widest node, and the
+/// cross-multiplier scratch dominates every plan's declared demand
+/// (`(fft_len, cheb_rank, rat_len)` triples from `plan_scratch_demand`).
+pub(crate) fn check_workspace_sizes(
+    it: &IntegratorTree,
+    sizes: &WorkspaceSizes,
+    demands: &[(usize, usize, usize)],
+) {
+    assert_eq!(sizes.slab_rows, it.total_slots, "slab rows must cover the slot layout");
+    assert_eq!(sizes.agg_rows, it.agg_rows_max, "aggregate rows must cover the widest node");
+    for &(fft, cheb, rat) in demands {
+        assert!(sizes.fft_len >= fft, "a plan demands more FFT scratch than the workspace");
+        assert!(sizes.cheb_rank >= cheb, "a plan demands more Chebyshev rank than the workspace");
+        assert!(sizes.rat_len >= rat, "a plan demands more rational scratch than the workspace");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ftfi::cordial::CrossPolicy;
+    use crate::ftfi::functions::FDist;
+    use crate::graph::generators::random_tree;
+    use crate::ml::rng::Pcg;
+
+    #[test]
+    fn audits_pass_on_random_trees_and_prepare() {
+        assert!(enabled(), "tests run in debug mode, so the audits must be live");
+        let mut rng = Pcg::seed(11);
+        for &(n, t) in &[(1usize, 2usize), (2, 2), (5, 2), (64, 4), (300, 8)] {
+            let tree = random_tree(n, 0.2, 1.5, &mut rng);
+            let it = IntegratorTree::with_leaf_threshold(&tree, t);
+            check_tree(&it); // explicit call on top of the build-time one
+            // prepare runs check_workspace_sizes internally.
+            let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+            it.prepare(&f, 2, &CrossPolicy::default()).expect("prepare on a valid tree");
+        }
+    }
+
+    #[test]
+    fn dirty_prefix_audit_accepts_valid_and_rejects_corrupt() {
+        check_dirty_prefix(&[0, 0, 1, 1, 2], 2);
+        let corrupt = std::panic::catch_unwind(|| check_dirty_prefix(&[0, 2, 2], 1));
+        assert!(corrupt.is_err(), "a non-unit step must fail the audit");
+        let backwards = std::panic::catch_unwind(|| check_dirty_prefix(&[0, 1, 0], 1));
+        assert!(backwards.is_err(), "a decreasing prefix must fail the audit");
+    }
+}

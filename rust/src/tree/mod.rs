@@ -3,6 +3,7 @@
 pub mod bartal;
 pub mod frt;
 pub mod integrator_tree;
+pub(crate) mod invariants;
 pub mod separator;
 
 use crate::graph::Graph;
@@ -127,7 +128,7 @@ impl Tree {
     /// the sub-tree with local ids `0..k` plus the local→parent id map
     /// (which is just `vertices` in order).
     pub fn induced_subtree(&self, vertices: &[u32]) -> Tree {
-        let mut local = std::collections::HashMap::with_capacity(vertices.len());
+        let mut local = std::collections::BTreeMap::new();
         for (i, &v) in vertices.iter().enumerate() {
             local.insert(v, i as u32);
         }

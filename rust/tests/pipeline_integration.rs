@@ -142,10 +142,12 @@ fn point_cloud_gw_pipeline() {
     let t_cross = minimum_spanning_tree(&epsilon_graph(&c_cross, 0.5));
     let p = uniform_marginal(40);
     let params = GwParams { max_iter: 20, ..Default::default() };
-    let self_d =
-        gromov_wasserstein(&t_sphere, &t_sphere, &p, &p, GwBackend::Ftfi, &params).discrepancy;
-    let cross_d =
-        gromov_wasserstein(&t_sphere, &t_cross, &p, &p, GwBackend::Ftfi, &params).discrepancy;
+    let self_d = gromov_wasserstein(&t_sphere, &t_sphere, &p, &p, GwBackend::Ftfi, &params)
+        .unwrap()
+        .discrepancy;
+    let cross_d = gromov_wasserstein(&t_sphere, &t_cross, &p, &p, GwBackend::Ftfi, &params)
+        .unwrap()
+        .discrepancy;
     assert!(
         cross_d > self_d,
         "GW failed to separate shapes: self {self_d} vs cross {cross_d}"

@@ -1,0 +1,861 @@
+//! `cargo xtask` — repo automation as plain Rust (no shell, no deps).
+//!
+//! The one command that matters for CI is `cargo xtask lint`: a
+//! contract linter that machine-checks the determinism, zero-alloc and
+//! panic-freedom conventions DESIGN.md promises, on the real source
+//! tree. It is deliberately token/structure-based (a scrubbing lexer
+//! plus brace matching, not a full parser): cheap, dependency-free and
+//! precise enough once comments/strings are blanked out.
+//!
+//! Rules (see DESIGN.md "Verification & static analysis"):
+//!
+//! * `nondet-map` — `HashMap`/`HashSet` in the numeric modules
+//!   (`ftfi/`, `tree/`, `linalg/`, `ot/`, `graph/`). Iteration order of
+//!   hashed containers is seeded per process, and PR 6 turned exactly
+//!   that into a cross-process nondeterminism bug twice; numeric code
+//!   uses `BTreeMap`/`BTreeSet` or sorted `Vec`s instead.
+//! * `alloc-in-hot-path` — allocation-capable calls inside the
+//!   zero-alloc contract surface: any `fn` whose name ends in `_into`
+//!   plus the hot-path manifest below. Cold validation/error arms are
+//!   annotated in place.
+//! * `unchecked-panic` — `.unwrap(` / `.expect(` / `panic!` /
+//!   `assert!`-family in non-test library code. Strict (CI-failing) in
+//!   the burned-down modules; advisory elsewhere; `debug_assert*` is
+//!   always fine (that is what the invariants layer is made of).
+//! * `unordered-float-reduction` — float reductions (`.sum`/`.fold`/
+//!   `.product`) over a variable declared as a hashed container: order
+//!   nondeterminism straight into a float accumulator.
+//!
+//! Suppression: a `// lint: allow(<rule>) — reason` or
+//! `// lint: infallible because <proof>` comment on the offending line
+//! or up to [`SUPPRESS_WINDOW`] lines above it. The reason is part of
+//! the grammar on purpose: every allowlisted site carries its own
+//! justification in the diff.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// A directive covers findings on `[directive_line, directive_line + SUPPRESS_WINDOW]`,
+/// so a multi-line justification comment still reaches the code below it.
+const SUPPRESS_WINDOW: usize = 5;
+
+/// Hot-path functions under the zero-alloc contract that do not carry
+/// the `_into` suffix (the recursive workspace walkers and the pooled
+/// entry points), pinned by `tests/hotpath_alloc.rs`.
+const HOT_PATH_MANIFEST: [&str; 4] = [
+    "integrate_ws",
+    "integrate_ws_delta",
+    "integrate_prepared_into_pooled",
+    "integrate_delta_prepared_into_pooled",
+];
+
+/// Tokens that can allocate. `checkout_workspace`/`checkout_scratch`
+/// are deliberately NOT tokens: growing the arena stock is the defined
+/// warm-up, and the counting-allocator test pins the warmed steady
+/// state.
+const ALLOC_TOKENS: [&str; 12] = [
+    "Vec::new(",
+    "vec![",
+    ".to_vec(",
+    ".collect(",
+    ".clone(",
+    ".cloned(",
+    "format!(",
+    ".to_string(",
+    "String::new(",
+    "Box::new(",
+    ".to_owned(",
+    "with_capacity(",
+];
+
+/// Numeric modules where hashed containers are banned outright.
+const NONDET_MAP_DIRS: [&str; 5] = ["ftfi/", "tree/", "linalg/", "ot/", "graph/"];
+
+/// Modules where `unchecked-panic` fails CI (the completed burn-down
+/// surface: fallible APIs exist, every remaining site is annotated).
+fn panic_strict(rel: &str) -> bool {
+    rel == "ftfi/vandermonde.rs"
+        || rel.starts_with("ot/")
+        || rel.starts_with("coordinator/")
+        || rel == "runtime/pool.rs"
+}
+
+/// Modules exempt from `unchecked-panic` entirely: the invariants layer
+/// IS assertions by design, and bench_util's counting allocator aborts
+/// on misuse on purpose.
+fn panic_exempt(rel: &str) -> bool {
+    rel == "tree/invariants.rs" || rel == "bench_util.rs"
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Finding {
+    rule: &'static str,
+    line: usize,
+    strict: bool,
+    msg: String,
+}
+
+// ---------------------------------------------------------------------
+// Scrubbing lexer
+// ---------------------------------------------------------------------
+
+/// Blank comments and string/char-literal contents with spaces,
+/// preserving newlines (and therefore line numbers) exactly. Handles
+/// line comments, nested block comments, escapes, raw strings
+/// (`r"…"` / `r#"…"#` / `br#"…"#`) and char-literal vs lifetime
+/// disambiguation. String delimiters are kept so call tokens like
+/// `.expect(` stay visible while their payload does not.
+fn scrub(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    let blank = |out: &mut String, c: char| out.push(if c == '\n' { '\n' } else { ' ' });
+    while i < b.len() {
+        let c = b[i];
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (and byte-raw) strings: r"…", r#"…"#, br##"…"##.
+        if (c == 'r' || c == 'b') && !prev_is_ident(&b, i) {
+            let mut j = i;
+            if b[j] == 'b' && b.get(j + 1) == Some(&'r') {
+                j += 1;
+            }
+            if b[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while b.get(k) == Some(&'#') {
+                    hashes += 1;
+                    k += 1;
+                }
+                if b.get(k) == Some(&'"') {
+                    for &p in &b[i..=k] {
+                        out.push(p);
+                    }
+                    i = k + 1;
+                    while i < b.len() {
+                        if b[i] == '"' && b[i + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes {
+                            out.push('"');
+                            for _ in 0..hashes {
+                                out.push('#');
+                            }
+                            i += 1 + hashes;
+                            break;
+                        }
+                        blank(&mut out, b[i]);
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+        }
+        if c == '"' {
+            out.push('"');
+            i += 1;
+            while i < b.len() {
+                if b[i] == '\\' && i + 1 < b.len() {
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '"' {
+                    out.push('"');
+                    i += 1;
+                    break;
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if c == '\'' {
+            if b.get(i + 1) == Some(&'\\') {
+                // Escaped char literal: '\n', '\u{7f}', …
+                out.push('\'');
+                i += 1;
+                while i < b.len() && b[i] != '\'' {
+                    if b[i] == '\\' && i + 1 < b.len() {
+                        out.push_str("  ");
+                        i += 2;
+                    } else {
+                        blank(&mut out, b[i]);
+                        i += 1;
+                    }
+                }
+                if i < b.len() {
+                    out.push('\'');
+                    i += 1;
+                }
+            } else if b.get(i + 2) == Some(&'\'') && b.get(i + 1) != Some(&'\'') {
+                // Plain char literal 'x'.
+                out.push_str("' '");
+                i += 3;
+            } else {
+                // Lifetime: keep as-is.
+                out.push('\'');
+                i += 1;
+            }
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+// ---------------------------------------------------------------------
+// Structure: test spans, fn extents, directives
+// ---------------------------------------------------------------------
+
+/// Inclusive 1-indexed line spans of `#[cfg(…test…)]` / `#[test]`
+/// items (computed on scrubbed text so braces in strings cannot
+/// confuse the matcher).
+fn test_spans(scrubbed: &str) -> Vec<(usize, usize)> {
+    let b: Vec<char> = scrubbed.chars().collect();
+    let line_of = line_index(&b);
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i + 1 < b.len() {
+        if !(b[i] == '#' && b[i + 1] == '[') {
+            i += 1;
+            continue;
+        }
+        let attr_start = i;
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut content = String::new();
+        while j < b.len() && depth > 0 {
+            match b[j] {
+                '[' => depth += 1,
+                ']' => depth -= 1,
+                c => content.push(c),
+            }
+            j += 1;
+        }
+        let is_test_attr = {
+            let t = content.trim();
+            t == "test" || (t.starts_with("cfg") && has_word(&content, "test"))
+        };
+        if !is_test_attr {
+            i = j;
+            continue;
+        }
+        // Item extent: forward to the first `{` (brace-match) or `;`.
+        let mut k = j;
+        while k < b.len() && b[k] != '{' && b[k] != ';' {
+            k += 1;
+        }
+        let end = if k < b.len() && b[k] == '{' {
+            let mut d = 1usize;
+            let mut m = k + 1;
+            while m < b.len() && d > 0 {
+                match b[m] {
+                    '{' => d += 1,
+                    '}' => d -= 1,
+                    _ => {}
+                }
+                m += 1;
+            }
+            m.saturating_sub(1)
+        } else {
+            k.min(b.len().saturating_sub(1))
+        };
+        spans.push((line_of[attr_start], line_of[end.min(line_of.len() - 1)]));
+        i = j;
+    }
+    spans
+}
+
+#[derive(Debug)]
+struct FnExtent {
+    name: String,
+    start: usize,
+    end: usize,
+}
+
+/// Extents (inclusive 1-indexed line ranges) of every `fn` item, for
+/// innermost-function attribution of hot-path findings. Closures do
+/// not open a new extent — a closure inside a `_into` fn is still on
+/// the hot path; a nested helper `fn` is not.
+fn fn_extents(scrubbed: &str) -> Vec<FnExtent> {
+    let b: Vec<char> = scrubbed.chars().collect();
+    let line_of = line_index(&b);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 1 < b.len() {
+        let word_fn = b[i] == 'f'
+            && b[i + 1] == 'n'
+            && !prev_is_ident(&b, i)
+            && b.get(i + 2).map_or(true, |c| !(c.is_alphanumeric() || *c == '_'));
+        if !word_fn {
+            i += 1;
+            continue;
+        }
+        let start_line = line_of[i];
+        let mut j = i + 2;
+        while j < b.len() && b[j].is_whitespace() {
+            j += 1;
+        }
+        let mut name = String::new();
+        while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+            name.push(b[j]);
+            j += 1;
+        }
+        if name.is_empty() {
+            // `fn(..)` pointer type, not an item.
+            i = j.max(i + 2);
+            continue;
+        }
+        // Signature → first `{` (body) or `;` (trait declaration).
+        let mut k = j;
+        while k < b.len() && b[k] != '{' && b[k] != ';' {
+            k += 1;
+        }
+        if k >= b.len() || b[k] == ';' {
+            i = k.min(b.len());
+            continue;
+        }
+        let mut d = 1usize;
+        let mut m = k + 1;
+        while m < b.len() && d > 0 {
+            match b[m] {
+                '{' => d += 1,
+                '}' => d -= 1,
+                _ => {}
+            }
+            m += 1;
+        }
+        let end_line = line_of[m.saturating_sub(1).min(line_of.len() - 1)];
+        out.push(FnExtent { name, start: start_line, end: end_line });
+        i = j;
+    }
+    out
+}
+
+/// For every char index, the 1-indexed line it sits on.
+fn line_index(b: &[char]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(b.len());
+    let mut line = 1usize;
+    for &c in b {
+        out.push(line);
+        if c == '\n' {
+            line += 1;
+        }
+    }
+    if out.is_empty() {
+        out.push(1);
+    }
+    out
+}
+
+#[derive(Debug)]
+struct Directive {
+    line: usize,
+    rule: String,
+}
+
+/// `// lint:` directives, collected from the RAW source (the scrubber
+/// blanks them). `infallible` is shorthand for `allow(unchecked-panic)`.
+fn collect_directives(src: &str) -> Vec<Directive> {
+    let mut out = Vec::new();
+    for (idx, line) in src.lines().enumerate() {
+        let Some(pos) = line.find("// lint:") else { continue };
+        let rest = line[pos + "// lint:".len()..].trim_start();
+        let rule = if rest.starts_with("infallible") {
+            "unchecked-panic".to_string()
+        } else if let Some(a) = rest.find("allow(") {
+            rest[a + "allow(".len()..].split(')').next().unwrap_or("").trim().to_string()
+        } else {
+            continue;
+        };
+        out.push(Directive { line: idx + 1, rule });
+    }
+    out
+}
+
+fn suppressed(directives: &[Directive], rule: &str, line: usize) -> bool {
+    directives
+        .iter()
+        .any(|d| d.rule == rule && d.line <= line && line <= d.line + SUPPRESS_WINDOW)
+}
+
+// ---------------------------------------------------------------------
+// Token helpers
+// ---------------------------------------------------------------------
+
+/// Whole-word occurrence (non-identifier chars on both sides).
+fn has_word(hay: &str, word: &str) -> bool {
+    let hb = hay.as_bytes();
+    let mut start = 0;
+    while let Some(p) = hay[start..].find(word) {
+        let abs = start + p;
+        let left_ok = abs == 0 || !(hb[abs - 1].is_ascii_alphanumeric() || hb[abs - 1] == b'_');
+        let r = abs + word.len();
+        let right_ok = r >= hb.len() || !(hb[r].is_ascii_alphanumeric() || hb[r] == b'_');
+        if left_ok && right_ok {
+            return true;
+        }
+        start = abs + word.len();
+    }
+    false
+}
+
+/// First panic-capable token on the line, if any. `debug_assert*` never
+/// matches (the `assert!` family is checked with a left word boundary),
+/// and `.unwrap_or*` / `.expect_err(` never match the `(`-anchored
+/// method tokens.
+fn panic_token(line: &str) -> Option<&'static str> {
+    for t in [".unwrap(", ".expect("] {
+        if line.contains(t) {
+            return Some(t);
+        }
+    }
+    let lb = line.as_bytes();
+    for t in ["panic!", "assert!", "assert_eq!", "assert_ne!"] {
+        let mut start = 0;
+        while let Some(p) = line[start..].find(t) {
+            let abs = start + p;
+            let left_ok =
+                abs == 0 || !(lb[abs - 1].is_ascii_alphanumeric() || lb[abs - 1] == b'_');
+            if left_ok {
+                return Some(t);
+            }
+            start = abs + t.len();
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// The linter core
+// ---------------------------------------------------------------------
+
+/// Lint one file. `rel` is the path relative to `src/` with `/`
+/// separators (e.g. `"tree/integrator_tree.rs"`).
+fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let scrubbed = scrub(src);
+    let directives = collect_directives(src);
+    let tests = test_spans(&scrubbed);
+    let fns = fn_extents(&scrubbed);
+    let in_test = |line: usize| tests.iter().any(|&(s, e)| s <= line && line <= e);
+    let innermost = |line: usize| {
+        fns.iter()
+            .filter(|f| f.start <= line && line <= f.end)
+            .max_by_key(|f| f.start)
+    };
+    let hot = |name: &str| name.ends_with("_into") || HOT_PATH_MANIFEST.contains(&name);
+
+    let numeric = NONDET_MAP_DIRS.iter().any(|d| rel.starts_with(*d));
+    let r3_strict = panic_strict(rel);
+    let r3_exempt = panic_exempt(rel);
+
+    // R4 preparation: variables declared with a hashed-container type.
+    let mut hashed_vars: Vec<String> = Vec::new();
+    for line in scrubbed.lines() {
+        if (line.contains("HashMap") || line.contains("HashSet")) && has_word(line, "let") {
+            let after = line.split_once("let ").map(|(_, a)| a).unwrap_or("");
+            let after = after.strip_prefix("mut ").unwrap_or(after);
+            let name: String = after
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                hashed_vars.push(name);
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    for (idx, line) in scrubbed.lines().enumerate() {
+        let lno = idx + 1;
+        if in_test(lno) {
+            continue;
+        }
+        // R1: nondeterministic containers in numeric modules.
+        if numeric && (has_word(line, "HashMap") || has_word(line, "HashSet")) {
+            if !suppressed(&directives, "nondet-map", lno) {
+                findings.push(Finding {
+                    rule: "nondet-map",
+                    line: lno,
+                    strict: true,
+                    msg: "hashed container in a numeric module (iteration order is \
+                          process-seeded; use BTreeMap/BTreeSet or a sorted Vec)"
+                        .to_string(),
+                });
+            }
+        }
+        // R2: allocation inside the zero-alloc contract surface.
+        if let Some(f) = innermost(lno) {
+            if hot(&f.name) {
+                for t in ALLOC_TOKENS {
+                    if line.contains(t) && !suppressed(&directives, "alloc-in-hot-path", lno) {
+                        findings.push(Finding {
+                            rule: "alloc-in-hot-path",
+                            line: lno,
+                            strict: true,
+                            msg: format!(
+                                "`{t}` inside hot-path fn `{}` (zero-alloc contract; annotate \
+                                 cold error arms with `// lint: allow(alloc-in-hot-path)`)",
+                                f.name
+                            ),
+                        });
+                        break;
+                    }
+                }
+            }
+        }
+        // R3: unchecked panics in library code.
+        if !r3_exempt {
+            if let Some(t) = panic_token(line) {
+                if !suppressed(&directives, "unchecked-panic", lno) {
+                    findings.push(Finding {
+                        rule: "unchecked-panic",
+                        line: lno,
+                        strict: r3_strict,
+                        msg: format!(
+                            "`{t}` in non-test library code (return FtfiError/ServerError, or \
+                             justify with `// lint: infallible because …`)"
+                        ),
+                    });
+                }
+            }
+        }
+        // R4: float reduction over a hashed container.
+        let reduces =
+            line.contains(".sum(") || line.contains(".fold(") || line.contains(".product(");
+        if reduces {
+            let over_hashed = hashed_vars.iter().any(|v| {
+                let mut s = 0;
+                let needle = format!("{v}.");
+                while let Some(p) = line[s..].find(&needle) {
+                    let abs = s + p;
+                    let lb = line.as_bytes();
+                    if abs == 0 || !(lb[abs - 1].is_ascii_alphanumeric() || lb[abs - 1] == b'_') {
+                        return true;
+                    }
+                    s = abs + needle.len();
+                }
+                false
+            });
+            if over_hashed && !suppressed(&directives, "unordered-float-reduction", lno) {
+                findings.push(Finding {
+                    rule: "unordered-float-reduction",
+                    line: lno,
+                    strict: true,
+                    msg: "reduction over a hashed container (iteration order is nondeterministic \
+                          and float addition is not associative)"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn lint_command() -> ExitCode {
+    let src_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives one level under the cargo root")
+        .join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files);
+    files.sort();
+    let (mut strict_n, mut warn_n, mut checked) = (0usize, 0usize, 0usize);
+    for path in &files {
+        let Ok(src) = fs::read_to_string(path) else {
+            eprintln!("xtask lint: unreadable file {}", path.display());
+            return ExitCode::from(2);
+        };
+        let rel: String = path
+            .strip_prefix(&src_root)
+            .expect("walked file under src root")
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        checked += 1;
+        for f in lint_source(&rel, &src) {
+            let sev = if f.strict { "error" } else { "warn " };
+            println!("[{sev}] src/{rel}:{} {}: {}", f.line, f.rule, f.msg);
+            if f.strict {
+                strict_n += 1;
+            } else {
+                warn_n += 1;
+            }
+        }
+    }
+    println!(
+        "xtask lint: {checked} files, {strict_n} contract violation(s), {warn_n} advisory warning(s)"
+    );
+    if strict_n > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: cargo xtask <command>\n\n\
+         commands:\n  \
+         lint    check the determinism / zero-alloc / panic-freedom contracts\n  \
+         help    this message"
+    );
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        None | Some("lint") => lint_command(),
+        Some("help") | Some("--help") => {
+            print_usage();
+            ExitCode::SUCCESS
+        }
+        Some(other) => {
+            eprintln!("xtask: unknown command `{other}`");
+            print_usage();
+            ExitCode::from(2)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Seeded-violation tests: every rule must demonstrably fire on a
+// violation and stay quiet on the annotated / out-of-scope variant.
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // -- scrubber -----------------------------------------------------
+
+    #[test]
+    fn scrub_blanks_comments_and_strings_but_keeps_lines() {
+        let src = "let a = 1; // has .unwrap( in a comment\nlet b = \".unwrap(\";\n";
+        let s = scrub(src);
+        assert_eq!(s.lines().count(), src.lines().count());
+        assert!(!s.contains(".unwrap("));
+        assert!(s.contains("let a = 1;"));
+        assert!(s.contains("let b = \"")); // delimiters survive
+    }
+
+    #[test]
+    fn scrub_handles_raw_strings_nested_comments_chars_and_lifetimes() {
+        let src = r##"let r = r#"HashMap "quoted" inside"#;
+        /* outer /* nested HashMap */ still comment */
+        let c: char = '{';
+        fn life<'a>(x: &'a str) -> &'a str { x }"##;
+        let s = scrub(src);
+        assert!(!s.contains("HashMap"));
+        assert!(s.contains("fn life<'a>"), "lifetimes must survive verbatim");
+        // The char-literal '{' is blanked, so braces stay balanced.
+        let opens = s.matches('{').count();
+        let closes = s.matches('}').count();
+        assert_eq!(opens, closes, "scrubbed text must be brace-balanced:\n{s}");
+    }
+
+    // -- R1: nondet-map ----------------------------------------------
+
+    const R1_BAD: &str = "use std::collections::HashMap;\n\
+                          pub fn f() -> HashMap<u32, f64> { HashMap::new() }\n";
+
+    #[test]
+    fn nondet_map_fires_in_numeric_modules() {
+        let f = lint_source("ftfi/foo.rs", R1_BAD);
+        assert!(rules(&f).contains(&"nondet-map"), "{f:?}");
+        assert!(f.iter().all(|x| x.strict));
+    }
+
+    #[test]
+    fn nondet_map_ignores_non_numeric_modules_and_tests() {
+        assert!(rules(&lint_source("coordinator/foo.rs", R1_BAD))
+            .iter()
+            .all(|r| *r != "nondet-map"));
+        let in_test = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n\
+                       fn f() { let _m: HashMap<u32, u32> = HashMap::new(); }\n}\n";
+        assert!(lint_source("tree/foo.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn nondet_map_respects_allow_annotation() {
+        let src = "// lint: allow(nondet-map) — scratch map, drained sorted below.\n\
+                   pub fn f() { let _m = std::collections::HashMap::<u32, u32>::new(); }\n";
+        assert!(lint_source("graph/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn nondet_map_not_fooled_by_comments_or_strings() {
+        let src = "// HashMap would be wrong here\npub fn f() -> &'static str { \"HashMap\" }\n";
+        assert!(lint_source("linalg/foo.rs", src).is_empty());
+    }
+
+    // -- R2: alloc-in-hot-path ---------------------------------------
+
+    #[test]
+    fn alloc_fires_inside_into_fns_and_manifest_fns() {
+        let src = "pub fn frob_into(out: &mut [f64]) {\n    let v = Vec::new();\n}\n";
+        let f = lint_source("ftfi/foo.rs", src);
+        assert_eq!(rules(&f), vec!["alloc-in-hot-path"], "{f:?}");
+        let src = "fn integrate_ws(&self) {\n    let v = vec![0.0; 4];\n}\n";
+        assert!(rules(&lint_source("tree/foo.rs", src)).contains(&"alloc-in-hot-path"));
+    }
+
+    #[test]
+    fn alloc_ignores_cold_fns_and_nested_helpers() {
+        let src = "pub fn frob(out: &mut [f64]) {\n    let v = Vec::new();\n}\n";
+        assert!(lint_source("ftfi/foo.rs", src).is_empty());
+        // Innermost-fn attribution: a nested plain helper inside a hot
+        // fn is its own (cold) extent.
+        let src = "pub fn frob_into(out: &mut [f64]) {\n\
+                   \x20   fn helper() -> Vec<f64> {\n\
+                   \x20       Vec::new()\n\
+                   \x20   }\n\
+                   \x20   helper();\n}\n";
+        assert!(lint_source("ftfi/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn alloc_respects_cold_path_annotation() {
+        let src = "pub fn frob_into(out: &mut [f64]) -> Result<(), String> {\n\
+                   \x20   // lint: allow(alloc-in-hot-path) — cold error path.\n\
+                   \x20   Err(format!(\"bad\"))\n}\n";
+        assert!(lint_source("ftfi/foo.rs", src).is_empty());
+    }
+
+    // -- R3: unchecked-panic -----------------------------------------
+
+    #[test]
+    fn unchecked_panic_is_strict_in_burned_down_modules() {
+        let src = "pub fn f(v: &[u32]) -> u32 {\n    *v.iter().max().unwrap()\n}\n";
+        let f = lint_source("ot/foo.rs", src);
+        assert_eq!(rules(&f), vec!["unchecked-panic"]);
+        assert!(f[0].strict);
+        // …and advisory elsewhere.
+        let f = lint_source("ml/foo.rs", src);
+        assert_eq!(rules(&f), vec!["unchecked-panic"]);
+        assert!(!f[0].strict);
+    }
+
+    #[test]
+    fn unchecked_panic_skips_debug_asserts_unwrap_or_and_exempt_files() {
+        let src = "pub fn f(a: usize, v: Option<u32>) -> u32 {\n\
+                   \x20   debug_assert!(a > 0);\n\
+                   \x20   debug_assert_eq!(a, a);\n\
+                   \x20   v.unwrap_or(0)\n}\n";
+        assert!(lint_source("coordinator/foo.rs", src).is_empty());
+        let src = "pub fn f(a: usize) { assert!(a > 0); }\n";
+        assert!(lint_source("tree/invariants.rs", src).is_empty());
+        assert!(lint_source("bench_util.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unchecked_panic_respects_infallible_annotation() {
+        let src = "pub fn f(v: &[u32]) -> u32 {\n\
+                   \x20   // lint: infallible because the caller checked non-emptiness.\n\
+                   \x20   *v.iter().max().unwrap()\n}\n";
+        assert!(lint_source("ot/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn suppression_window_is_bounded() {
+        // A directive more than SUPPRESS_WINDOW lines above must NOT
+        // reach the finding.
+        let src = "// lint: infallible because of reasons far away.\n\n\n\n\n\n\n\
+                   pub fn f(v: &[u32]) -> u32 { *v.iter().max().unwrap() }\n";
+        let f = lint_source("ot/foo.rs", src);
+        assert_eq!(rules(&f), vec!["unchecked-panic"]);
+    }
+
+    // -- R4: unordered-float-reduction -------------------------------
+
+    #[test]
+    fn unordered_reduction_fires_on_hashed_sources_only() {
+        let src = "pub fn f() -> f64 {\n\
+                   \x20   let m: std::collections::HashMap<u32, f64> = Default::default();\n\
+                   \x20   m.values().sum()\n}\n";
+        let f = lint_source("coordinator/foo.rs", src);
+        assert!(rules(&f).contains(&"unordered-float-reduction"), "{f:?}");
+        let src = "pub fn f(v: &[f64]) -> f64 { v.iter().sum() }\n";
+        assert!(lint_source("coordinator/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unordered_reduction_respects_allow_annotation() {
+        let src = "pub fn f() -> f64 {\n\
+                   \x20   let m: std::collections::HashMap<u32, f64> = Default::default();\n\
+                   \x20   // lint: allow(unordered-float-reduction) — counts, not floats.\n\
+                   \x20   m.values().sum()\n}\n";
+        let f = lint_source("coordinator/foo.rs", src);
+        assert!(!rules(&f).contains(&"unordered-float-reduction"), "{f:?}");
+    }
+
+    // -- structure helpers -------------------------------------------
+
+    #[test]
+    fn fn_extents_track_nesting_and_skip_fn_pointer_types() {
+        let src = "fn outer() {\n    fn inner() {}\n}\ntype F = fn(usize) -> u8;\nfn last() {}\n";
+        let e = fn_extents(&scrub(src));
+        let names: Vec<&str> = e.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner", "last"]);
+        assert_eq!((e[0].start, e[0].end), (1, 3));
+        assert_eq!((e[1].start, e[1].end), (2, 2));
+    }
+
+    #[test]
+    fn test_spans_cover_cfg_test_mods_and_test_fns() {
+        let src = "fn live() {}\n#[cfg(all(test, not(loom)))]\nmod tests {\n    fn t() {}\n}\n";
+        let spans = test_spans(&scrub(src));
+        assert_eq!(spans, vec![(2, 5)]);
+        let src = "#[cfg(feature = \"pjrt\")]\nfn gated() {}\n";
+        assert!(test_spans(&scrub(src)).is_empty(), "a non-test cfg is not a test span");
+    }
+}
