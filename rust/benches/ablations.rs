@@ -26,13 +26,19 @@
 //!   re-integration, k ∈ {1, 16, 256, n}): wall clock + max-abs drift,
 //!   with pre-timing superposition / bit-identity asserts and
 //!   `BENCH_delta.json`;
+//! - SIMD lane kernels (lane-chunked inner loops vs the scalar
+//!   reference kernels, d ∈ {1, 8, 64}) + f32-serving-tier drift, with
+//!   pre-timing f64 bit-identity / f32-budget asserts and
+//!   `BENCH_simd.json`;
 //!
 //! Run: `cargo bench --bench ablations`. The CI bench-smoke job runs
 //! `cargo bench --bench ablations -- --quick`, which executes only the
-//! cheap parallel-scaling, ensemble-scaling, hot-path and delta sweeps
-//! and emits `BENCH_parallel.json` + `BENCH_ensemble.json` +
-//! `BENCH_hotpath.json` + `BENCH_delta.json` as the perf-trajectory
-//! artifacts.
+//! cheap parallel-scaling, ensemble-scaling, hot-path, delta and
+//! lane-kernel sweeps and emits `BENCH_parallel.json` +
+//! `BENCH_ensemble.json` + `BENCH_hotpath.json` + `BENCH_delta.json` +
+//! `BENCH_simd.json` as the perf-trajectory artifacts; `cargo xtask
+//! bench-gate` then checks every artifact against
+//! `benches/thresholds.json`.
 
 use ftfi::bench_util::{banner, bench, time_once, Table};
 use ftfi::ftfi::cordial::{cross_apply, cross_apply_dense, CrossPolicy, Strategy};
@@ -503,6 +509,147 @@ fn delta_scaling(quick: bool) {
     println!("wrote BENCH_delta.json (equivalence asserted before timing)");
 }
 
+/// Tentpole bench (PR 7): lane-structured inner kernels + the f32
+/// serving tier. Times the chunked lane kernels (`linalg::lanes` — the
+/// default path of every prepared inner loop since this PR) against
+/// the scalar reference kernels (`lanes::*_scalar`, the PR-6-style
+/// elementwise loops kept as the bit-identity oracle) on an n = 4000
+/// single-thread workload, d ∈ {1, 8, 64}. Before anything is timed it
+/// asserts (a) the f64 lane path is bit-identical to the scalar
+/// reference — per kernel on real field rows AND end-to-end via the
+/// legacy-vs-workspace prepared integration — and (b) the opt-in f32
+/// serving tier stays inside its relative error budget against the f64
+/// oracle. Always writes `BENCH_simd.json` for the CI artifact; the
+/// bench-gate step checks its speedups, f32 drift and allocation
+/// counts against `benches/thresholds.json`.
+fn simd_scaling(quick: bool) {
+    use ftfi::linalg::lanes::{self, Precision};
+    use std::hint::black_box;
+
+    let n = 4000;
+    banner(&format!(
+        "Ablation: lane kernels vs scalar reference (n = {n}, threads = 1, lane width = {})",
+        lanes::LANE_WIDTH
+    ));
+    let mut rng = Pcg::seed(61);
+    let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+    let tree = minimum_spanning_tree(&g);
+    let f = FDist::inverse_quadratic(0.5);
+    let (warmup, runs) = if quick { (1, 3) } else { (2, 7) };
+    let table = Table::new(
+        &["d", "scalar (ms)", "lane (ms)", "speedup", "f32 rel err", "allocs new"],
+        &[4, 12, 10, 8, 12, 11],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for &d in &[1usize, 8, 64] {
+        let x = Matrix::randn(n, d, &mut rng);
+        let coeffs = rng.uniform_vec(n, -1.0, 1.0);
+
+        // (a) f64 bit-identity gate, kernel level: the lane-chunked
+        // axpy/combine against their scalar references on real rows.
+        {
+            let mut got = vec![0.0f64; n * d];
+            let mut want = vec![0.0f64; n * d];
+            for i in 0..n {
+                let (s, e) = (i * d, (i + 1) * d);
+                lanes::axpy(coeffs[i], &x.data()[s..e], &mut got[s..e]);
+                lanes::axpy_scalar(coeffs[i], &x.data()[s..e], &mut want[s..e]);
+            }
+            let pivot: Vec<f64> = x.data()[..d].to_vec();
+            for i in 1..n {
+                let (s, e) = (i * d, (i + 1) * d);
+                let (head, tail) = got.split_at_mut(d);
+                lanes::combine(&mut tail[s - d..e - d], &head[..d], coeffs[i], &pivot);
+                let (head_w, tail_w) = want.split_at_mut(d);
+                lanes::combine_scalar(&mut tail_w[s - d..e - d], &head_w[..d], coeffs[i], &pivot);
+            }
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "d={d}: lane kernels must be bit-identical to the scalar reference"
+            );
+        }
+
+        // …and end-to-end: the lane-kernel workspace path against the
+        // legacy prepared path.
+        let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().expect("valid tree");
+        let plans = tfi.prepare_plans(&f, d).expect("plannable f");
+        let want = tfi.integrate_prepared_legacy(&x, &plans).expect("legacy");
+        let got = tfi.integrate_prepared(&x, &plans).expect("workspace");
+        assert!(got == want, "d={d}: f64 lane path must stay bit-identical");
+
+        // (b) f32-tier budget gate vs the f64 oracle (the fine-grained
+        // per-strategy ULP sweep lives in tests/ftfi_precision.rs; this
+        // is the end-to-end drift on the serving workload).
+        let tfi32 = TreeFieldIntegrator::builder(&tree)
+            .threads(1)
+            .precision(Precision::F32)
+            .build()
+            .expect("valid tree");
+        let plans32 = tfi32.prepare_plans(&f, d).expect("plannable f");
+        let got32 = tfi32.integrate_prepared(&x, &plans32).expect("f32 tier");
+        let f32_rel = got32.frobenius_diff(&want) / (1.0 + want.frobenius());
+        assert!(
+            f32_rel < 5e-4,
+            "d={d}: f32 tier rel err {f32_rel:.3e} exceeds the serving budget"
+        );
+
+        // Zero-allocation contract on the warmed lane-path call.
+        let mut out = Matrix::zeros(n, d);
+        tfi.integrate_prepared_into(&x, &plans, &mut out).expect("warm");
+        let before = ftfi::bench_util::thread_allocs();
+        tfi.integrate_prepared_into(&x, &plans, &mut out).expect("workspace");
+        let allocs_new = ftfi::bench_util::thread_allocs() - before;
+        assert_eq!(allocs_new, 0, "d={d}: warmed lane path must stay allocation-free");
+
+        // Timing: one sweep = axpy + combine over every row — the same
+        // memory traffic through both kernel families.
+        let mut acc = vec![0.0f64; n * d];
+        let pivot: Vec<f64> = x.data()[..d].to_vec();
+        let t_scalar = bench(warmup, runs, || {
+            for i in 0..n {
+                let (s, e) = (i * d, (i + 1) * d);
+                lanes::axpy_scalar(coeffs[i], &x.data()[s..e], &mut acc[s..e]);
+                lanes::combine_scalar(&mut acc[s..e], &x.data()[s..e], coeffs[i], &pivot);
+            }
+            black_box(&mut acc);
+        });
+        acc.iter_mut().for_each(|v| *v = 0.0);
+        let t_lane = bench(warmup, runs, || {
+            for i in 0..n {
+                let (s, e) = (i * d, (i + 1) * d);
+                lanes::axpy(coeffs[i], &x.data()[s..e], &mut acc[s..e]);
+                lanes::combine(&mut acc[s..e], &x.data()[s..e], coeffs[i], &pivot);
+            }
+            black_box(&mut acc);
+        });
+        let speedup = t_scalar.median / t_lane.median.max(1e-12);
+        table.row(&[
+            d.to_string(),
+            format!("{:.3}", t_scalar.median * 1e3),
+            format!("{:.3}", t_lane.median * 1e3),
+            format!("{speedup:.2}x"),
+            format!("{f32_rel:.2e}"),
+            allocs_new.to_string(),
+        ]);
+        json_rows.push(format!(
+            "    {{\"d\": {d}, \"scalar_s\": {:.6}, \"lane_s\": {:.6}, \
+             \"speedup\": {speedup:.3}, \"f32_rel_err\": {f32_rel:.3e}, \
+             \"allocs_new\": {allocs_new}}}",
+            t_scalar.median, t_lane.median
+        ));
+    }
+    let mut json = String::from("{\n  \"bench\": \"simd_scaling\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n}, \"threads\": 1, \"lane_width\": {}, \"quick\": {quick},\n",
+        lanes::LANE_WIDTH
+    ));
+    json.push_str("  \"bit_identical_f64\": true,\n  \"results\": [\n");
+    json.push_str(&json_rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    std::fs::write("BENCH_simd.json", &json).expect("write BENCH_simd.json");
+    println!("wrote BENCH_simd.json (f64 bit-identity + f32 budget asserted before timing)");
+}
+
 fn strategy_crossover() {
     banner("Ablation: cross-multiplier strategies, C in R^{k x l}, d=4");
     let table =
@@ -650,6 +797,7 @@ fn main() {
         ensemble_scaling(true);
         hotpath_alloc(true);
         delta_scaling(true);
+        simd_scaling(true);
         return;
     }
     leaf_threshold_sweep();
@@ -658,6 +806,7 @@ fn main() {
     ensemble_scaling(false);
     hotpath_alloc(false);
     delta_scaling(false);
+    simd_scaling(false);
     strategy_crossover();
     rff_sweep();
     fig9_cubes();

@@ -158,6 +158,23 @@ mod tests {
     }
 
     #[test]
+    fn precision_flag_binds_a_tier_name() {
+        // Both spellings reach `integrator.precision` (main.rs wires
+        // the override); the flag takes a value and must not swallow a
+        // following option or get mistaken for a boolean.
+        let a = parse("integrate --precision f32 --n 100 file.txt");
+        assert_eq!(a.get_str("precision", "f64"), "f32");
+        assert_eq!(a.get_usize("n", 0), 100);
+        assert_eq!(a.positional, vec!["file.txt"]);
+        let b = parse("serve --precision=f32 --streaming");
+        assert_eq!(b.get_str("precision", "f64"), "f32");
+        assert!(b.get_flag("streaming"));
+        // Absent → the f64 default tier.
+        let c = parse("integrate file.txt");
+        assert_eq!(c.get_str("precision", "f64"), "f64");
+    }
+
+    #[test]
     fn non_bool_flags_still_consume_values() {
         let a = parse("integrate --n 100 --f exp");
         assert_eq!(a.get_usize("n", 0), 100);

@@ -15,6 +15,7 @@
 use crate::ftfi::cordial::{CrossPolicy, Strategy};
 use crate::ftfi::ensemble::EnsembleMethod;
 use crate::ftfi::FtfiError;
+use crate::linalg::lanes::Precision;
 use std::collections::HashMap;
 
 /// Parsed config: `section.key -> value` strings.
@@ -151,6 +152,10 @@ pub struct IntegratorConfig {
     /// `0` = auto (`FTFI_THREADS` if set, else all cores), `1` = serial.
     /// Outputs are bit-identical for every setting.
     pub threads: usize,
+    /// Compute tier name (`"f64"` — the default, bit-identical path —
+    /// or `"f32"`, the opt-in serving tier: f32 products, f64
+    /// accumulation; tree backend only).
+    pub precision: String,
 }
 
 impl Default for IntegratorConfig {
@@ -164,6 +169,7 @@ impl Default for IntegratorConfig {
             lattice_max_points: p.lattice_max_points,
             force: None,
             threads: 0,
+            precision: "f64".into(),
         }
     }
 }
@@ -197,7 +203,19 @@ impl IntegratorConfig {
                 .get_usize("integrator.lattice_max_points", d.lattice_max_points),
             force: c.get("integrator.force").map(|s| s.to_string()),
             threads: c.get_usize("integrator.threads", d.threads),
+            precision: c.get_or("integrator.precision", &d.precision).to_string(),
         }
+    }
+
+    /// Parse the precision-tier name; fails on an unknown tier instead
+    /// of silently falling back to f64.
+    pub fn to_precision(&self) -> Result<Precision, FtfiError> {
+        Precision::parse(&self.precision).ok_or_else(|| {
+            FtfiError::InvalidInput(format!(
+                "unknown precision {:?} (f64|f32)",
+                self.precision
+            ))
+        })
     }
 
     /// Materialise the [`CrossPolicy`]; fails on an unknown forced
@@ -376,6 +394,20 @@ mod tests {
         // refresh_every = 0 is a legal "never refresh" setting.
         let z = Config::parse("[streaming]\nrefresh_every = 0\n").unwrap();
         assert_eq!(StreamingConfig::from_config(&z).refresh_every, 0);
+    }
+
+    #[test]
+    fn precision_key_roundtrip() {
+        // Absent key → the f64 default tier.
+        let d = IntegratorConfig::from_config(&Config::default());
+        assert_eq!(d.precision, "f64");
+        assert_eq!(d.to_precision().unwrap(), Precision::F64);
+        let c = Config::parse("[integrator]\nprecision = \"f32\"\n").unwrap();
+        let ic = IntegratorConfig::from_config(&c);
+        assert_eq!(ic.to_precision().unwrap(), Precision::F32);
+        // Unknown tier is a typed error, not a silent fallback.
+        let bad = IntegratorConfig { precision: "f16".into(), ..Default::default() };
+        assert!(matches!(bad.to_precision(), Err(FtfiError::InvalidInput(_))));
     }
 
     #[test]

@@ -251,6 +251,13 @@ impl StreamingFieldExecutor {
         self.sessions.len()
     }
 
+    /// The serving tier inherited from the integrator at plan-freeze
+    /// time (`TreeFieldIntegratorBuilder::precision`): every session's
+    /// full integrations, delta updates and refreshes run this tier.
+    pub fn precision(&self) -> crate::linalg::lanes::Precision {
+        self.plans.precision()
+    }
+
     /// Update-latency percentiles and counters (the streaming SLO);
     /// share the registry with a dashboard via
     /// [`StreamingFieldExecutor::metrics_registry`].

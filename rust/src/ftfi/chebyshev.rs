@@ -20,6 +20,7 @@
 //! the same asymptotic cost. DESIGN.md §Numerics discusses the tradeoff.
 
 use crate::ftfi::functions::FDist;
+use crate::linalg::lanes::{self, Precision};
 use crate::linalg::matrix::Matrix;
 
 /// A rank-`M` Chebyshev expansion of `f(x+y)` valid for `y ∈ [lo, hi]`.
@@ -38,6 +39,7 @@ impl ChebExpansion {
         // Chebyshev points of the second kind (Clenshaw–Curtis nodes):
         // barycentric weights are ±1 with halved endpoints — optimally
         // stable (Berrut & Trefethen 2004).
+        // lint: allow(mixed-precision-cast) — node-index to angle, planning path
         let nodes: Vec<f64> = (0..m)
             .map(|j| {
                 let t = (std::f64::consts::PI * j as f64 / (m - 1) as f64).cos();
@@ -99,6 +101,7 @@ impl ChebExpansion {
         let x_samples: Vec<f64> = vec![xlo, 0.5 * (xlo + xhi), xhi];
         for &x in &x_samples {
             for p in 0..probes {
+                // lint: allow(mixed-precision-cast) — probe-index to coordinate, planning path
                 let y = ys_lo + (ys_hi - ys_lo) * (p as f64 + 0.37) / probes as f64;
                 self.basis(y, &mut basis);
                 let approx: f64 = self
@@ -123,14 +126,27 @@ impl ChebExpansion {
         let mut out = Matrix::zeros(xs.len(), d);
         let mut w = vec![0.0; m * d];
         let mut basis = vec![0.0; m];
-        self.cross_apply_into(f, xs, ys, v.data(), d, out.data_mut(), &mut w, &mut basis);
+        self.cross_apply_into(
+            f,
+            xs,
+            ys,
+            v.data(),
+            d,
+            out.data_mut(),
+            &mut w,
+            &mut basis,
+            Precision::F64,
+        );
         out
     }
 
     /// [`ChebExpansion::cross_apply`] into caller-provided buffers — the
     /// allocation-free hot-path variant. `v` is `ys.len()×d` row-major,
     /// `out` is `xs.len()×d`; `w` (≥ rank·d) and `basis_buf` (≥ rank) are
-    /// scratch and may be dirty on entry.
+    /// scratch and may be dirty on entry. Both Horner-style accumulation
+    /// stages (basis gather, node scatter) are lane-chunked over the
+    /// d-channel axis; at [`Precision::F64`] this is bit-identical to
+    /// [`ChebExpansion::cross_apply`].
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn cross_apply_into(
         &self,
@@ -142,6 +158,7 @@ impl ChebExpansion {
         out: &mut [f64],
         w: &mut [f64],
         basis_buf: &mut [f64],
+        prec: Precision,
     ) {
         let m = self.rank();
         assert_eq!(v.len(), ys.len() * d);
@@ -157,10 +174,7 @@ impl ChebExpansion {
                 if b == 0.0 {
                     continue;
                 }
-                let wrow = &mut w[l * d..(l + 1) * d];
-                for (o, &vv) in wrow.iter_mut().zip(vrow) {
-                    *o += b * vv;
-                }
+                lanes::axpy_prec(prec, b, vrow, &mut w[l * d..(l + 1) * d]);
             }
         }
         // out[i] = Σ_m f(x_i + t_m)·W[m,:]
@@ -172,9 +186,7 @@ impl ChebExpansion {
                 if c == 0.0 {
                     continue;
                 }
-                for (o, &wv) in orow.iter_mut().zip(&w[l * d..(l + 1) * d]) {
-                    *o += c * wv;
-                }
+                lanes::axpy_prec(prec, c, &w[l * d..(l + 1) * d], orow);
             }
         }
     }

@@ -20,6 +20,7 @@ use crate::ftfi::outer::{apply_separable, apply_separable_into};
 use crate::ftfi::rational::{RationalOpts, RationalPlan};
 use crate::ftfi::vandermonde::expquad_cross_apply;
 use crate::linalg::fft::Complex;
+use crate::linalg::lanes::{self, Precision};
 use crate::linalg::matrix::Matrix;
 
 /// Which multiplier handled (or should handle) a cross product.
@@ -102,13 +103,15 @@ pub fn cross_apply_dense(f: &FDist, xs: &[f64], ys: &[f64], v: &Matrix) -> Matri
     assert_eq!(v.rows(), ys.len());
     let d = v.cols();
     let mut out = Matrix::zeros(xs.len(), d);
-    cross_apply_dense_into(f, xs, ys, v.data(), d, out.data_mut());
+    cross_apply_dense_into(f, xs, ys, v.data(), d, out.data_mut(), Precision::F64);
     out
 }
 
 /// [`cross_apply_dense`] into a caller-provided buffer — the
-/// allocation-free hot-path variant (bit-identical). `v` is
-/// `ys.len()×d` row-major, `out` is `xs.len()×d`, dirty-on-entry ok.
+/// allocation-free hot-path variant. `v` is `ys.len()×d` row-major,
+/// `out` is `xs.len()×d`, dirty-on-entry ok. The inner axpy is
+/// lane-chunked over the d-channel axis (`linalg/lanes.rs`); at
+/// [`Precision::F64`] it is bit-identical to [`cross_apply_dense`].
 pub(crate) fn cross_apply_dense_into(
     f: &FDist,
     xs: &[f64],
@@ -116,6 +119,7 @@ pub(crate) fn cross_apply_dense_into(
     v: &[f64],
     d: usize,
     out: &mut [f64],
+    prec: Precision,
 ) {
     assert_eq!(v.len(), ys.len() * d);
     assert_eq!(out.len(), xs.len() * d);
@@ -127,9 +131,7 @@ pub(crate) fn cross_apply_dense_into(
             if c == 0.0 {
                 continue;
             }
-            for (o, &vv) in orow.iter_mut().zip(&v[j * d..(j + 1) * d]) {
-                *o += c * vv;
-            }
+            lanes::axpy_prec(prec, c, &v[j * d..(j + 1) * d], orow);
         }
     }
 }
@@ -451,6 +453,13 @@ pub(crate) fn plan_scratch_demand(plan: &Plan) -> (usize, usize, usize) {
 /// call, and arena-ifying that would mean caching a dense `pts×b`
 /// Vandermonde product table of unbounded size for a forced-only path —
 /// not worth the workspace footprint.
+///
+/// `prec` selects the compute tier of the elementwise product kernels
+/// (Dense / Separable / Chebyshev / RationalSum / Cauchy). The Lattice
+/// multiplier's FFT and the Vandermonde shim stay f64 at both tiers:
+/// their intermediates feed back into further products (FFT stages,
+/// Horner steps over the transform), so per-product f32 rounding would
+/// compound instead of rounding once per output — see DESIGN.md.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn apply_plan_into(
     plan: &Plan,
@@ -462,17 +471,20 @@ pub(crate) fn apply_plan_into(
     out: &mut [f64],
     policy: &CrossPolicy,
     scratch: &mut CrossScratch,
+    prec: Precision,
 ) {
     match plan {
-        Plan::Dense => cross_apply_dense_into(f, xs, ys, v, d, out),
-        Plan::Separable(sep) => apply_separable_into(sep, xs, ys, v, d, out, &mut scratch.sep_w),
+        Plan::Dense => cross_apply_dense_into(f, xs, ys, v, d, out, prec),
+        Plan::Separable(sep) => {
+            apply_separable_into(sep, xs, ys, v, d, out, &mut scratch.sep_w, prec)
+        }
         Plan::Lattice(lp) => lp.apply_into(v, d, out, &mut scratch.cplx),
         Plan::Chebyshev(exp) => {
             let (w, basis) = (&mut scratch.cheb_w, &mut scratch.cheb_basis);
-            exp.cross_apply_into(f, xs, ys, v, d, out, w, basis)
+            exp.cross_apply_into(f, xs, ys, v, d, out, w, basis, prec)
         }
         Plan::RationalSum(rp) | Plan::Cauchy(rp) => {
-            rp.apply_into(v, d, out, &mut scratch.rat_w)
+            rp.apply_into(v, d, out, &mut scratch.rat_w, prec)
         }
         other => {
             // lint: allow(alloc-in-hot-path) — the documented Vandermonde
@@ -636,7 +648,18 @@ mod tests {
             let mut scratch = CrossScratch::new();
             let (fft, cheb, rat) = plan_scratch_demand(&plan);
             scratch.ensure(fft, cheb, rat, 3);
-            apply_plan_into(&plan, &f, &xs, &ys, v.data(), 3, &mut out, &policy, &mut scratch);
+            apply_plan_into(
+                &plan,
+                &f,
+                &xs,
+                &ys,
+                v.data(),
+                3,
+                &mut out,
+                &policy,
+                &mut scratch,
+                Precision::F64,
+            );
             assert_eq!(out, want.data(), "{s:?} must be bit-identical");
         }
     }

@@ -38,6 +38,7 @@ use crate::ftfi::functions::FDist;
 use crate::ftfi::{FieldIntegrator, FtfiError, TreeFieldIntegrator};
 use crate::graph::shortest_path::all_pairs;
 use crate::graph::Graph;
+use crate::linalg::lanes::Precision;
 use crate::linalg::matrix::Matrix;
 use crate::ml::rng::Pcg;
 use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
@@ -117,6 +118,7 @@ pub struct EnsembleFieldIntegratorBuilder<'a> {
     leaf_threshold: usize,
     policy: CrossPolicy,
     threads: usize,
+    precision: Precision,
     pool: Option<Arc<WorkPool>>,
 }
 
@@ -169,6 +171,15 @@ impl<'a> EnsembleFieldIntegratorBuilder<'a> {
         self
     }
 
+    /// Serving tier. The ensemble backend only supports the default
+    /// [`Precision::F64`] tier — member averaging has not been
+    /// qualified against f32 products — so `build()` rejects
+    /// [`Precision::F32`] with [`FtfiError::InvalidInput`].
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
     /// Validate, run all-pairs once, sample `trees` embeddings (fanned
     /// out across the pool — per-member RNG streams keep the sampling
     /// independent of scheduling) and preprocess one
@@ -178,6 +189,12 @@ impl<'a> EnsembleFieldIntegratorBuilder<'a> {
             return Err(FtfiError::InvalidInput(
                 "ensemble needs at least one tree (trees ≥ 1)".into(),
             ));
+        }
+        if self.precision != Precision::F64 {
+            return Err(FtfiError::InvalidInput(format!(
+                "the ensemble backend only supports the f64 tier, got precision = {}",
+                self.precision.as_str()
+            )));
         }
         self.policy.validate()?;
         if self.leaf_threshold < 2 {
@@ -244,6 +261,7 @@ impl EnsembleFieldIntegrator {
             leaf_threshold: 32,
             policy: CrossPolicy::default(),
             threads: 0,
+            precision: Precision::F64,
             pool: None,
         }
     }
@@ -321,6 +339,7 @@ impl EnsembleFieldIntegrator {
         for out in outs {
             acc.axpy(1.0, &out?);
         }
+        // lint: allow(mixed-precision-cast) — member-count averaging, not a tier cast
         acc.scale(1.0 / self.members.len() as f64);
         Ok(acc)
     }

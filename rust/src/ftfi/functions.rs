@@ -198,6 +198,7 @@ pub fn binomial(n: usize, k: usize) -> f64 {
     let k = k.min(n - k);
     let mut acc = 1.0f64;
     for i in 0..k {
+        // lint: allow(mixed-precision-cast) — integer combinatorics, not field data
         acc = acc * (n - i) as f64 / (i + 1) as f64;
     }
     acc

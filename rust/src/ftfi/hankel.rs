@@ -92,6 +92,7 @@ impl LatticePlan {
         let col_idx: Vec<u32> = ys.iter().map(|&y| (y / delta).round() as u32).collect();
         let t_max = row_idx.iter().map(|&x| x as usize).max().unwrap_or(0);
         let s_max = col_idx.iter().map(|&y| y as usize).max().unwrap_or(0);
+        // lint: allow(mixed-precision-cast) — lattice index to coordinate, planning path
         let table: Vec<f64> = (0..=t_max + s_max).map(|s| f.eval(s as f64 * delta)).collect();
         // Correlation corr[t] = Σ_s table[t+s]·w[s] for a w of length
         // max(S,T)+1 (both directions share the plan): linear convolution

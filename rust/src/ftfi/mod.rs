@@ -48,6 +48,7 @@ pub mod vandermonde;
 pub use ensemble::{EnsembleFieldIntegrator, EnsembleMethod, PreparedEnsembleIntegrator};
 pub use error::FtfiError;
 pub use streaming::StreamingIntegrator;
+pub use crate::linalg::lanes::Precision;
 
 use crate::ftfi::cordial::CrossPolicy;
 use crate::ftfi::functions::FDist;
@@ -112,6 +113,8 @@ pub struct TreeFieldIntegrator {
     it: IntegratorTree,
     policy: CrossPolicy,
     n: usize,
+    /// Serving tier frozen into every plan this integrator prepares.
+    precision: Precision,
     /// The work pool driving every parallel path (recursion forks,
     /// prepare fan-out, batch fan-out). Shared by prepared handles.
     pool: Arc<WorkPool>,
@@ -125,6 +128,7 @@ pub struct TreeFieldIntegratorBuilder<'a> {
     leaf_threshold: usize,
     policy: CrossPolicy,
     threads: usize,
+    precision: Precision,
     pool: Option<Arc<WorkPool>>,
 }
 
@@ -159,6 +163,17 @@ impl<'a> TreeFieldIntegratorBuilder<'a> {
         self
     }
 
+    /// Serving tier for the prepared hot path (default
+    /// [`Precision::F64`]). [`Precision::F32`] computes cross-term
+    /// products in f32 while accumulating in f64 — faster on
+    /// bandwidth-bound fields, accurate to the ULP budgets pinned in
+    /// `tests/ftfi_precision.rs`. The default tier stays bit-identical
+    /// to the pre-tier kernels.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
     /// Validate and preprocess. Errors instead of panicking on bad
     /// policy knobs, a too-small leaf threshold or non-finite weights.
     pub fn build(self) -> Result<TreeFieldIntegrator, FtfiError> {
@@ -186,6 +201,7 @@ impl<'a> TreeFieldIntegratorBuilder<'a> {
             it: IntegratorTree::with_leaf_threshold(self.tree, self.leaf_threshold),
             policy: self.policy,
             n: self.tree.n(),
+            precision: self.precision,
             pool,
         })
     }
@@ -199,6 +215,7 @@ impl TreeFieldIntegrator {
             leaf_threshold: 32,
             policy: CrossPolicy::default(),
             threads: 0,
+            precision: Precision::F64,
             pool: None,
         }
     }
@@ -263,7 +280,8 @@ impl TreeFieldIntegrator {
         f: &FDist,
         channels: usize,
     ) -> Result<PreparedIntegrator<'_>, FtfiError> {
-        let plans = self.it.prepare_pooled(f, channels, &self.policy, &self.pool)?;
+        let plans =
+            self.it.prepare_pooled_with(f, channels, &self.policy, self.precision, &self.pool)?;
         Ok(PreparedIntegrator { it: &self.it, plans, pool: Arc::clone(&self.pool) })
     }
 
@@ -271,7 +289,7 @@ impl TreeFieldIntegrator {
     /// of `self`), for owners that store integrator and plans side by
     /// side — e.g. the coordinator's field executor.
     pub fn prepare_plans(&self, f: &FDist, channels: usize) -> Result<PreparedPlans, FtfiError> {
-        self.it.prepare_pooled(f, channels, &self.policy, &self.pool)
+        self.it.prepare_pooled_with(f, channels, &self.policy, self.precision, &self.pool)
     }
 
     /// Integrate with plans from [`TreeFieldIntegrator::prepare_plans`].
@@ -360,6 +378,11 @@ impl TreeFieldIntegrator {
         st.par_forks = ps.forks;
         st.par_tasks = ps.helper_tasks;
         st
+    }
+
+    /// The serving tier frozen into plans this integrator prepares.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// The active cross-term policy.
@@ -471,6 +494,11 @@ impl PreparedIntegrator<'_> {
     pub fn plans_built(&self) -> usize {
         self.plans.plans_built()
     }
+
+    /// The serving tier frozen into these plans.
+    pub fn precision(&self) -> Precision {
+        self.plans.precision()
+    }
 }
 
 /// Integration on a general graph via its MST metric (the paper's §4
@@ -486,6 +514,7 @@ pub struct GraphFieldIntegratorBuilder<'a> {
     leaf_threshold: usize,
     policy: CrossPolicy,
     threads: usize,
+    precision: Precision,
     pool: Option<Arc<WorkPool>>,
 }
 
@@ -516,10 +545,25 @@ impl<'a> GraphFieldIntegratorBuilder<'a> {
         self
     }
 
+    /// Serving tier. The graph backend only supports the default
+    /// [`Precision::F64`] tier — its MST accuracy envelope has not been
+    /// qualified for f32 products — so `build()` rejects
+    /// [`Precision::F32`] with [`FtfiError::InvalidInput`].
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
     /// Build the MST and preprocess it. Returns
     /// [`FtfiError::DisconnectedGraph`] instead of asserting when the
     /// graph has no spanning tree.
     pub fn build(self) -> Result<GraphFieldIntegrator, FtfiError> {
+        if self.precision != Precision::F64 {
+            return Err(FtfiError::InvalidInput(format!(
+                "the graph backend only supports the f64 tier, got precision = {}",
+                self.precision.as_str()
+            )));
+        }
         let tree = try_minimum_spanning_tree(self.graph)?;
         let mut builder = TreeFieldIntegrator::builder(&tree)
             .leaf_threshold(self.leaf_threshold)
@@ -541,6 +585,7 @@ impl GraphFieldIntegrator {
             leaf_threshold: 32,
             policy: CrossPolicy::default(),
             threads: 0,
+            precision: Precision::F64,
             pool: None,
         }
     }

@@ -29,6 +29,7 @@ pub fn nufft1(x: &[f64], c: &[Complex], m: usize) -> Vec<Complex> {
     let mr = 2 * m; // oversampled fine grid
     // Greengard–Lee optimal width for oversampling R=2, translated to
     // the e^{2\u03c0ikx} convention: \u03c4 = Msp/(12\u03c0m\u00b2) (correction \u2264 e^{\u03c0} at k=m/2).
+    // lint: allow(mixed-precision-cast) — grid-size to spreading width, not field data
     let tau = MSP as f64 / (12.0 * std::f64::consts::PI * (m * m) as f64);
     let mut fine = vec![Complex::ZERO; mr];
     // Spread each source onto the fine grid with the Gaussian kernel.
@@ -38,6 +39,7 @@ pub fn nufft1(x: &[f64], c: &[Complex], m: usize) -> Vec<Complex> {
         let center = (xj / h).round() as isize;
         for l in -(MSP as isize)..=(MSP as isize) {
             let idx = (center + l).rem_euclid(mr as isize) as usize;
+            // lint: allow(mixed-precision-cast) — grid index to coordinate, not field data
             let t = xj - (center + l) as f64 * h;
             let w = (-t * t / (4.0 * tau)).exp();
             fine[idx] += cj.scale(w);
@@ -49,11 +51,13 @@ pub fn nufft1(x: &[f64], c: &[Complex], m: usize) -> Vec<Complex> {
     // FINE[k] = Σ_n fine[n]·e^{-2πik·x_n} ≈ (1/h)·(F·ĝ)(k) with
     // ĝ(k) = √(4πτ)·e^{-(2πk)²τ}, so F(k) = FINE[k]·e^{(2πk)²τ}/(mr·√(4πτ)).
     fft_pow2(&mut fine, false);
+    // lint: allow(mixed-precision-cast) — grid-size normalisation, not field data
     let norm = 1.0 / ((4.0 * std::f64::consts::PI * tau).sqrt() * mr as f64);
     (0..m)
         .map(|i| {
             let k = i as isize - (m / 2) as isize;
             let idx = (k.rem_euclid(mr as isize)) as usize;
+            // lint: allow(mixed-precision-cast) — frequency index to angle, not field data
             let corr = ((2.0 * std::f64::consts::PI * k as f64).powi(2) * tau).exp();
             fine[idx].scale(corr * norm)
         })
@@ -67,11 +71,13 @@ pub fn nufft2(x: &[f64], f: &[Complex]) -> Vec<Complex> {
     let mr = 2 * m;
     // Greengard–Lee optimal width for oversampling R=2, translated to
     // the e^{2\u03c0ikx} convention: \u03c4 = Msp/(12\u03c0m\u00b2) (correction \u2264 e^{\u03c0} at k=m/2).
+    // lint: allow(mixed-precision-cast) — grid-size to spreading width, not field data
     let tau = MSP as f64 / (12.0 * std::f64::consts::PI * (m * m) as f64);
     // Deconvolve, place on the fine grid spectrum, inverse-transform.
     let mut spec = vec![Complex::ZERO; mr];
     for i in 0..m {
         let k = i as isize - (m / 2) as isize;
+        // lint: allow(mixed-precision-cast) — frequency index to angle, not field data
         let corr = ((2.0 * std::f64::consts::PI * k as f64).powi(2) * tau).exp();
         let idx = k.rem_euclid(mr as isize) as usize;
         spec[idx] = f[i].scale(corr);
@@ -80,6 +86,7 @@ pub fn nufft2(x: &[f64], f: &[Complex]) -> Vec<Complex> {
     // fine[n] = Σ_k spec[k] e^{-2πi k n / mr} — a forward DFT of spec.
     fft_pow2(&mut spec, false);
     let fine = spec;
+    // lint: allow(mixed-precision-cast) — grid spacing from grid size, not field data
     let h = 1.0 / mr as f64;
     // g(x_i) = (h/√(4πτ))·Σ_n fine[n]·g_τ(x_i - x_n): the quadrature of
     // the smoothed spectrum against the spreading Gaussian.
@@ -91,6 +98,7 @@ pub fn nufft2(x: &[f64], f: &[Complex]) -> Vec<Complex> {
             let mut acc = Complex::ZERO;
             for l in -(MSP as isize)..=(MSP as isize) {
                 let idx = (center + l).rem_euclid(mr as isize) as usize;
+                // lint: allow(mixed-precision-cast) — grid index to coordinate, not field data
                 let t = xi - (center + l) as f64 * h;
                 let w = (-t * t / (4.0 * tau)).exp();
                 acc += fine[idx].scale(w);
@@ -151,6 +159,7 @@ pub fn sinc_cross_apply(xs: &[f64], ys: &[f64], v: &Matrix, padding: f64) -> Mat
         // itself, no index flip. Trapezoid half-weight at |ω| = 1/2.
         for (i, (slot, val)) in integ.iter_mut().zip(&rw).enumerate() {
             let k = i as isize - (r / 2) as isize;
+            // lint: allow(mixed-precision-cast) — quadrature index to frequency, not field data
             let omega = k as f64 / span;
             *slot = if omega.abs() <= 0.5 + 1e-12 {
                 let w = if (omega.abs() - 0.5).abs() < 1e-12 { 0.5 * dw } else { dw };

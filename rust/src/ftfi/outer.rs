@@ -6,6 +6,7 @@
 //! costs `O((a+b)·d·r)` by associativity (Fig. 2 of the paper).
 
 use crate::ftfi::functions::Separable;
+use crate::linalg::lanes::{self, Precision};
 use crate::linalg::matrix::Matrix;
 
 /// Compute `C·V` where `C[i][j] = Σ_r g_r(xs[i])·h_r(ys[j])` and `V` is
@@ -15,13 +16,18 @@ pub fn apply_separable(sep: &Separable, xs: &[f64], ys: &[f64], v: &Matrix) -> M
     let d = v.cols();
     let mut out = Matrix::zeros(xs.len(), d);
     let mut w = vec![0.0; d];
-    apply_separable_into(sep, xs, ys, v.data(), d, out.data_mut(), &mut w);
+    apply_separable_into(sep, xs, ys, v.data(), d, out.data_mut(), &mut w, Precision::F64);
     out
 }
 
 /// [`apply_separable`] into caller-provided buffers — the
 /// allocation-free hot-path variant. `v` is `ys.len()×d` row-major,
 /// `out` is `xs.len()×d`; `w_buf` (≥ d) is scratch, dirty-on-entry ok.
+/// Both axpy stages (the `h` gather and the `g` scatter) are
+/// lane-chunked over the d-channel axis (`linalg/lanes.rs`); at
+/// [`Precision::F64`] the function is bit-identical to
+/// [`apply_separable`].
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn apply_separable_into(
     sep: &Separable,
     xs: &[f64],
@@ -30,6 +36,7 @@ pub(crate) fn apply_separable_into(
     d: usize,
     out: &mut [f64],
     w_buf: &mut [f64],
+    prec: Precision,
 ) {
     assert_eq!(v.len(), ys.len() * d);
     assert_eq!(out.len(), xs.len() * d);
@@ -43,18 +50,14 @@ pub(crate) fn apply_separable_into(
             if hy == 0.0 {
                 continue;
             }
-            for (wc, &vc) in w.iter_mut().zip(&v[j * d..(j + 1) * d]) {
-                *wc += hy * vc;
-            }
+            lanes::axpy_prec(prec, hy, &v[j * d..(j + 1) * d], w);
         }
         for (i, &xi) in xs.iter().enumerate() {
             let gx = g(xi);
             if gx == 0.0 {
                 continue;
             }
-            for (o, &wc) in out[i * d..(i + 1) * d].iter_mut().zip(w.iter()) {
-                *o += gx * wc;
-            }
+            lanes::axpy_prec(prec, gx, w, &mut out[i * d..(i + 1) * d]);
         }
     }
 }

@@ -30,6 +30,7 @@
 //! frozen `Plan::RationalSum`/`Plan::Cauchy` applies with zero heap
 //! allocations (`tests/hotpath_alloc.rs` pins this).
 
+use crate::linalg::lanes::{self, Precision};
 use crate::linalg::matrix::Matrix;
 use crate::linalg::polynomial::{multipoint_eval, Poly, SubproductTree};
 use crate::linalg::fft::Complex;
@@ -254,9 +255,14 @@ impl RationalPlan {
 
     /// Allocation-free apply: `v` is `cols×d` row-major, `out` is
     /// `rows×d` (fully overwritten, dirty-on-entry ok), `w` is the
-    /// caller's coefficient scratch (`≥ coeff_len`). Bit-identical to
-    /// [`RationalPlan::apply`] — same code path.
-    pub(crate) fn apply_into(&self, v: &[f64], d: usize, out: &mut [f64], w: &mut [f64]) {
+    /// caller's coefficient scratch (`≥ coeff_len`). At
+    /// [`Precision::F64`] this is bit-identical to
+    /// [`RationalPlan::apply`] — same code path. The coefficient
+    /// combination `w = Σ_j v_j·B_j` is lane-chunked
+    /// (`linalg/lanes.rs`); the Horner evaluation against `1/D(u_i)`
+    /// stays scalar f64 at both tiers (its intermediates feed further
+    /// multiplies, so f32 rounding would compound).
+    pub(crate) fn apply_into(&self, v: &[f64], d: usize, out: &mut [f64], w: &mut [f64], prec: Precision) {
         assert_eq!(v.len(), self.cols * d);
         assert_eq!(out.len(), self.rows * d);
         out.iter_mut().for_each(|o| *o = 0.0);
@@ -273,9 +279,7 @@ impl RationalPlan {
                     if coef == 0.0 {
                         continue;
                     }
-                    for (wc, &bc) in w.iter_mut().zip(bpoly) {
-                        *wc += coef * bc;
-                    }
+                    lanes::axpy_prec(prec, coef, bpoly, &mut w[..bpoly.len()]);
                 }
                 for (i, (&ui, &idv)) in self.u.iter().zip(&blk.inv_den).enumerate() {
                     out[i * d + ch] += crate::ftfi::functions::horner(w, ui) * idv;
@@ -297,7 +301,7 @@ impl RationalPlan {
         let d = v.cols();
         let mut out = Matrix::zeros(self.rows, d);
         let mut w = vec![0.0; self.coeff_len];
-        self.apply_into(v.data(), d, out.data_mut(), &mut w);
+        self.apply_into(v.data(), d, out.data_mut(), &mut w, Precision::F64);
         out
     }
 }
@@ -521,7 +525,7 @@ mod tests {
             assert!(rel < 1e-6, "a={a} b={b} d={d}: rel={rel}");
             let mut out = vec![f64::NAN; a * d];
             let mut w = vec![0.0; plan.coeff_len()];
-            plan.apply_into(v.data(), d, &mut out, &mut w);
+            plan.apply_into(v.data(), d, &mut out, &mut w, Precision::F64);
             assert_eq!(out, got.data(), "apply_into must be bit-identical to apply");
         }
     }

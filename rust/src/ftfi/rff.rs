@@ -35,6 +35,7 @@ impl RffExpansion {
         let omegas: Vec<f64> = (0..m).map(|_| rng.normal_ms(0.0, sigma)).collect();
         // τ(ω)/p(ω) = √(π/γ)·e^{-π²ω²/γ} / (N(0,σ²) pdf) = const = 1
         // after normalisation; the constant folds into amps.
+        // lint: allow(mixed-precision-cast) — feature-count normalisation, not field data
         let amp = (1.0 / m as f64).sqrt();
         RffExpansion { omegas, amps: vec![amp; m] }
     }
@@ -55,6 +56,7 @@ impl RffExpansion {
                 }
             })
             .collect();
+        // lint: allow(mixed-precision-cast) — feature-count normalisation, not field data
         let amp = (1.0 / m as f64).sqrt();
         RffExpansion { omegas, amps: vec![amp; m] }
     }

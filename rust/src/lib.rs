@@ -61,7 +61,7 @@ pub mod tree;
 pub use ftfi::functions::FDist;
 pub use ftfi::{
     EnsembleFieldIntegrator, EnsembleMethod, FieldIntegrator, FtfiError, GraphFieldIntegrator,
-    PreparedIntegrator, StreamingIntegrator, TreeFieldIntegrator,
+    Precision, PreparedIntegrator, StreamingIntegrator, TreeFieldIntegrator,
 };
 pub use graph::Graph;
 pub use linalg::matrix::Matrix;

@@ -7,6 +7,7 @@
 //! available offline, so the transform is implemented from scratch; it is
 //! exercised heavily by the property tests at the bottom of this file.
 
+use crate::linalg::lanes;
 use std::f64::consts::PI;
 
 /// A complex number. Minimal by design — only the operations the FFT and
@@ -118,8 +119,11 @@ fn fft_stage_twiddles(n: usize, sign: f64) -> Vec<Complex> {
     let mut len = 2;
     while len <= n {
         let half = len / 2;
+        // lint: allow(mixed-precision-cast) — exact usize→f64 twiddle
+        // angle construction, not a precision-tier rounding.
         let step = sign * 2.0 * PI / len as f64;
         for k in 0..half {
+            // lint: allow(mixed-precision-cast) — exact small-int widen.
             t.push(Complex::cis(step * k as f64));
         }
         len <<= 1;
@@ -144,15 +148,17 @@ fn fft_kernel(buf: &mut [Complex], stages: &[Complex]) {
     while len <= n {
         let half = len / 2;
         let twiddles = &stages[off..off + half];
-        let mut start = 0;
-        while start < n {
-            for (k, &w) in twiddles.iter().enumerate() {
-                let u = buf[start + k];
-                let v = buf[start + k + half] * w;
-                buf[start + k] = u + v;
-                buf[start + k + half] = u - v;
-            }
-            start += len;
+        // Walk the stage as disjoint `len`-wide blocks and hand each
+        // block's lo/hi halves to the lane-chunked butterfly. Per-k
+        // arithmetic is unchanged, so output stays bit-identical to the
+        // pre-lane indexed loop (pinned by `cached_twiddles_are_bit_identical`
+        // and the naive-DFT property tests below).
+        let mut rest = &mut buf[..];
+        while !rest.is_empty() {
+            let (block, tail) = rest.split_at_mut(len);
+            let (lo, hi) = block.split_at_mut(half);
+            lanes::butterfly(lo, hi, twiddles);
+            rest = tail;
         }
         off += half;
         len <<= 1;
@@ -180,6 +186,7 @@ pub fn fft_pow2(buf: &mut [Complex], inverse: bool) {
 pub fn ifft_pow2(buf: &mut [Complex]) {
     let n = buf.len();
     fft_pow2(buf, true);
+    // lint: allow(mixed-precision-cast) — exact 1/n scaling constant.
     let s = 1.0 / n as f64;
     for x in buf.iter_mut() {
         *x = x.scale(s);
@@ -234,6 +241,7 @@ pub fn fft_pow2_cached(buf: &mut [Complex], tw: &TwiddleTable, inverse: bool) {
 pub fn ifft_pow2_cached(buf: &mut [Complex], tw: &TwiddleTable) {
     let n = buf.len();
     fft_pow2_cached(buf, tw, true);
+    // lint: allow(mixed-precision-cast) — exact 1/n scaling constant.
     let s = 1.0 / n as f64;
     for x in buf.iter_mut() {
         *x = x.scale(s);
@@ -250,6 +258,7 @@ pub fn fft_any(x: &[Complex]) -> Vec<Complex> {
 pub fn ifft_any(x: &[Complex]) -> Vec<Complex> {
     let n = x.len();
     let mut y = czt(x, true);
+    // lint: allow(mixed-precision-cast) — exact 1/n scaling constant.
     let s = 1.0 / n as f64;
     for v in y.iter_mut() {
         *v = v.scale(s);
@@ -274,6 +283,8 @@ fn czt(x: &[Complex], inverse: bool) -> Vec<Complex> {
     // avoid precision loss from huge arguments.
     let chirp: Vec<Complex> = (0..n)
         .map(|k| {
+            // lint: allow(mixed-precision-cast) — exact int→f64 chirp
+            // angle (k² mod 2n < 2n fits f64 exactly at our sizes).
             let kk = ((k as u128 * k as u128) % (2 * n as u128)) as f64;
             Complex::cis(sign * PI * kk / n as f64)
         })

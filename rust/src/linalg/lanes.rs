@@ -1,0 +1,433 @@
+//! Fixed-width lane helpers for the prepared-path inner kernels.
+//!
+//! Every inner slice loop of the prepared hot path — leaf multiply,
+//! distance-group aggregation, cross-term application (dense /
+//! separable / Chebyshev / rational), combine, and the cached-twiddle
+//! FFT butterflies — is elementwise over the d-channel axis: output
+//! element `i` depends only on input element `i` (plus loop-invariant
+//! scalars), so the reduction order per element is independent of how
+//! the axis is chunked. This module exploits that: each helper walks
+//! its slices as a main loop over [`LANE_WIDTH`]-wide `chunks_exact`
+//! blocks plus a scalar tail, the shape LLVM's autovectorizer maps onto
+//! SIMD registers. Because chunking cannot change any per-element
+//! expression tree (no FMA contraction — `mul_add` is never used — and
+//! no reassociation), the lane kernels are **bit-identical** to the
+//! scalar loops they replace for any `LANE_WIDTH`; the unit tests at
+//! the bottom pin this against the retained `*_scalar` references,
+//! which are also the "PR-6 kernel" baseline the `simd_scaling`
+//! ablation times against.
+//!
+//! The module is std-only and `unsafe`-free by design: lane structure
+//! comes from `chunks_exact(_mut)`, not intrinsics, so the default
+//! build stays dependency-free and portable. The `simd` cargo feature
+//! only *widens* the lane (8 instead of 4) for AVX-class targets —
+//! lanes themselves are always on, which is what lets the default f64
+//! path keep its bit-identity contract while running the new shape.
+//!
+//! ## The f32 serving tier
+//!
+//! [`Precision`] selects between the default f64 kernels and an opt-in
+//! mixed-precision tier: every *product* is computed in f32 (both
+//! factors rounded to f32, multiplied, widened back) while every *sum*
+//! accumulates in f64. Pure-addition kernels ([`add_assign`]) are
+//! therefore identical in both tiers. The tier matches the serving
+//! wire: the coordinator's field protocol is f32 end to end, so inputs
+//! already carry only f32 information and the tier's products lose
+//! nothing the wire had — see DESIGN.md §"SIMD lanes & precision
+//! tiers" for the ULP contract. This module is the *only* place the
+//! tier's f32↔f64 casts live (the `mixed-precision-cast` xtask rule
+//! fences every other numeric module).
+
+use crate::linalg::fft::Complex;
+
+/// Lane width of the chunked main loops. 4 f64s (one AVX2 register) by
+/// default; the `simd` feature widens to 8 (AVX-512 or two fused AVX2
+/// ops). Outputs are bit-identical for every width — the feature is a
+/// pure codegen hint, never a semantics switch.
+pub const LANE_WIDTH: usize = if cfg!(feature = "simd") { 8 } else { 4 };
+
+/// Compute tier of the prepared kernels. Carried by
+/// `WorkspaceSizes`/`PreparedPlans` from the builder down to every
+/// inner kernel, so one plan set runs one tier consistently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f64 compute — bit-identical to the pre-lane kernels.
+    #[default]
+    F64,
+    /// f32 products / f64 accumulation — the opt-in serving tier.
+    F32,
+}
+
+impl Precision {
+    /// Parse a config/CLI spelling (`"f64"` / `"f32"`).
+    pub fn parse(name: &str) -> Option<Precision> {
+        match name {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+
+    /// The canonical config spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
+/// `out[i] += src[i]`. Pure addition: the same kernel serves both
+/// precision tiers (there is no product to round).
+#[inline]
+pub fn add_assign(out: &mut [f64], src: &[f64]) {
+    debug_assert_eq!(out.len(), src.len());
+    let mut oc = out.chunks_exact_mut(LANE_WIDTH);
+    let mut sc = src.chunks_exact(LANE_WIDTH);
+    for (o, s) in (&mut oc).zip(&mut sc) {
+        for i in 0..LANE_WIDTH {
+            o[i] += s[i];
+        }
+    }
+    for (o, s) in oc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *o += *s;
+    }
+}
+
+/// `out[i] += c * src[i]` — the axpy at the heart of every cross/leaf
+/// multiply. No `mul_add`: the separate multiply-then-add is exactly
+/// the scalar kernels' expression tree, which is what keeps the lane
+/// path bit-identical.
+#[inline]
+pub fn axpy(c: f64, src: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(out.len(), src.len());
+    let mut oc = out.chunks_exact_mut(LANE_WIDTH);
+    let mut sc = src.chunks_exact(LANE_WIDTH);
+    for (o, s) in (&mut oc).zip(&mut sc) {
+        for i in 0..LANE_WIDTH {
+            o[i] += c * s[i];
+        }
+    }
+    for (o, s) in oc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *o += c * *s;
+    }
+}
+
+/// The f32-tier axpy: the product is computed in f32 (both factors
+/// rounded, multiplied, widened back), the accumulation stays f64.
+#[inline]
+pub fn axpy_f32(c: f64, src: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(out.len(), src.len());
+    let cf = c as f32;
+    let mut oc = out.chunks_exact_mut(LANE_WIDTH);
+    let mut sc = src.chunks_exact(LANE_WIDTH);
+    for (o, s) in (&mut oc).zip(&mut sc) {
+        for i in 0..LANE_WIDTH {
+            o[i] += (cf * s[i] as f32) as f64;
+        }
+    }
+    for (o, s) in oc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *o += (cf * *s as f32) as f64;
+    }
+}
+
+/// Tier dispatch for the axpy kernels.
+#[inline]
+pub fn axpy_prec(prec: Precision, c: f64, src: &[f64], out: &mut [f64]) {
+    match prec {
+        Precision::F64 => axpy(c, src, out),
+        Precision::F32 => axpy_f32(c, src, out),
+    }
+}
+
+/// The combine update of the nested-dissection recombination:
+/// `out[i] = (out[i] + add[i]) - c * sub[i]` — exactly the
+/// `src + crr[c] - coeff·piv[c]` expression (left-to-right: the sum
+/// first, then the product subtracted) of the pre-lane combine halves.
+#[inline]
+pub fn combine(out: &mut [f64], add: &[f64], c: f64, sub: &[f64]) {
+    debug_assert_eq!(out.len(), add.len());
+    debug_assert_eq!(out.len(), sub.len());
+    let mut oc = out.chunks_exact_mut(LANE_WIDTH);
+    let mut ac = add.chunks_exact(LANE_WIDTH);
+    let mut bc = sub.chunks_exact(LANE_WIDTH);
+    for ((o, a), s) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for i in 0..LANE_WIDTH {
+            o[i] = o[i] + a[i] - c * s[i];
+        }
+    }
+    for ((o, a), s) in
+        oc.into_remainder().iter_mut().zip(ac.remainder()).zip(bc.remainder())
+    {
+        *o = *o + *a - c * *s;
+    }
+}
+
+/// The f32-tier combine: the pivot-correction product `c·sub[i]` is
+/// computed in f32, the sums stay f64.
+#[inline]
+pub fn combine_f32(out: &mut [f64], add: &[f64], c: f64, sub: &[f64]) {
+    debug_assert_eq!(out.len(), add.len());
+    debug_assert_eq!(out.len(), sub.len());
+    let cf = c as f32;
+    let mut oc = out.chunks_exact_mut(LANE_WIDTH);
+    let mut ac = add.chunks_exact(LANE_WIDTH);
+    let mut bc = sub.chunks_exact(LANE_WIDTH);
+    for ((o, a), s) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for i in 0..LANE_WIDTH {
+            o[i] = o[i] + a[i] - (cf * s[i] as f32) as f64;
+        }
+    }
+    for ((o, a), s) in
+        oc.into_remainder().iter_mut().zip(ac.remainder()).zip(bc.remainder())
+    {
+        *o = *o + *a - (cf * *s as f32) as f64;
+    }
+}
+
+/// Tier dispatch for the combine kernels.
+#[inline]
+pub fn combine_prec(prec: Precision, out: &mut [f64], add: &[f64], c: f64, sub: &[f64]) {
+    match prec {
+        Precision::F64 => combine(out, add, c, sub),
+        Precision::F32 => combine_f32(out, add, c, sub),
+    }
+}
+
+/// One FFT stage block: `lo[k], hi[k] ← lo[k] + hi[k]·tw[k],
+/// lo[k] − hi[k]·tw[k]`, lane-chunked. Per-`k` arithmetic is exactly
+/// the classic butterfly (complex multiply then sum/difference), so
+/// the chunked walk is bit-identical to the index loop it replaces.
+/// The FFT stays f64 in both precision tiers: its butterflies reuse
+/// intermediate values across stages, so rounding products to f32
+/// would compound per stage instead of once per output — see DESIGN.md.
+#[inline]
+pub fn butterfly(lo: &mut [Complex], hi: &mut [Complex], tw: &[Complex]) {
+    debug_assert_eq!(lo.len(), hi.len());
+    debug_assert_eq!(lo.len(), tw.len());
+    let mut lc = lo.chunks_exact_mut(LANE_WIDTH);
+    let mut hc = hi.chunks_exact_mut(LANE_WIDTH);
+    let mut tc = tw.chunks_exact(LANE_WIDTH);
+    for ((l, h), t) in (&mut lc).zip(&mut hc).zip(&mut tc) {
+        for i in 0..LANE_WIDTH {
+            let u = l[i];
+            let v = h[i] * t[i];
+            l[i] = u + v;
+            h[i] = u - v;
+        }
+    }
+    for ((l, h), t) in
+        lc.into_remainder().iter_mut().zip(hc.into_remainder().iter_mut()).zip(tc.remainder())
+    {
+        let u = *l;
+        let v = *h * *t;
+        *l = u + v;
+        *h = u - v;
+    }
+}
+
+// ---- scalar references ---------------------------------------------------
+//
+// The pre-lane loop shapes, kept verbatim: (a) the oracle the unit tests
+// pin lane bit-identity against, (b) the "PR-6 kernels" baseline the
+// `simd_scaling` ablation times the lane path over.
+
+/// Scalar reference for [`add_assign`] (the pre-lane zip loop).
+pub fn add_assign_scalar(out: &mut [f64], src: &[f64]) {
+    for (o, &s) in out.iter_mut().zip(src) {
+        *o += s;
+    }
+}
+
+/// Scalar reference for [`axpy`] (the pre-lane zip loop).
+pub fn axpy_scalar(c: f64, src: &[f64], out: &mut [f64]) {
+    for (o, &v) in out.iter_mut().zip(src) {
+        *o += c * v;
+    }
+}
+
+/// Scalar reference for [`combine`] (the pre-lane indexed loop).
+pub fn combine_scalar(out: &mut [f64], add: &[f64], c: f64, sub: &[f64]) {
+    for i in 0..out.len() {
+        let src = out[i];
+        out[i] = src + add[i] - c * sub[i];
+    }
+}
+
+/// Scalar reference for [`butterfly`] (the pre-lane indexed loop).
+pub fn butterfly_scalar(lo: &mut [Complex], hi: &mut [Complex], tw: &[Complex]) {
+    for (k, &w) in tw.iter().enumerate() {
+        let u = lo[k];
+        let v = hi[k] * w;
+        lo[k] = u + v;
+        hi[k] = u - v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::rng::Pcg;
+
+    /// Lengths that hit the empty, tail-only, exactly-one-lane,
+    /// lanes-plus-tail and many-lane shapes for either LANE_WIDTH.
+    const SIZES: [usize; 8] = [0, 1, 3, 4, 8, 9, 64, 257];
+
+    fn randv(n: usize, rng: &mut Pcg) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn lane_add_assign_is_bit_identical_to_scalar() {
+        let mut rng = Pcg::seed(1);
+        for &n in &SIZES {
+            let src = randv(n, &mut rng);
+            let base = randv(n, &mut rng);
+            let mut a = base.clone();
+            let mut b = base.clone();
+            add_assign(&mut a, &src);
+            add_assign_scalar(&mut b, &src);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "REPRO n={n}: lane add_assign diverged from scalar"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_axpy_is_bit_identical_to_scalar() {
+        let mut rng = Pcg::seed(2);
+        for &n in &SIZES {
+            for &c in &[0.0, 1.0, -0.37, 1e-12, 3.5e11] {
+                let src = randv(n, &mut rng);
+                let base = randv(n, &mut rng);
+                let mut a = base.clone();
+                let mut b = base.clone();
+                axpy(c, &src, &mut a);
+                axpy_scalar(c, &src, &mut b);
+                assert!(
+                    a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "REPRO n={n} c={c}: lane axpy diverged from scalar"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lane_combine_is_bit_identical_to_scalar() {
+        let mut rng = Pcg::seed(3);
+        for &n in &SIZES {
+            let add = randv(n, &mut rng);
+            let sub = randv(n, &mut rng);
+            let base = randv(n, &mut rng);
+            let c = rng.normal();
+            let mut a = base.clone();
+            let mut b = base.clone();
+            combine(&mut a, &add, c, &sub);
+            combine_scalar(&mut b, &add, c, &sub);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "REPRO n={n}: lane combine diverged from scalar"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_butterfly_is_bit_identical_to_scalar() {
+        let mut rng = Pcg::seed(4);
+        for &n in &SIZES {
+            let tw: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            let lo0: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            let hi0: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            let (mut la, mut ha) = (lo0.clone(), hi0.clone());
+            let (mut lb, mut hb) = (lo0, hi0);
+            butterfly(&mut la, &mut ha, &tw);
+            butterfly_scalar(&mut lb, &mut hb, &tw);
+            let same = |p: &[Complex], q: &[Complex]| {
+                p.iter().zip(q).all(|(x, y)| {
+                    x.re.to_bits() == y.re.to_bits() && x.im.to_bits() == y.im.to_bits()
+                })
+            };
+            assert!(same(&la, &lb) && same(&ha, &hb), "REPRO n={n}: butterfly diverged");
+        }
+    }
+
+    /// The f32 tier computes exactly "round both factors to f32,
+    /// multiply in f32, widen, accumulate in f64" — element by element,
+    /// lane main loop and scalar tail alike.
+    #[test]
+    fn f32_tier_matches_elementwise_definition() {
+        let mut rng = Pcg::seed(5);
+        for &n in &SIZES {
+            let src = randv(n, &mut rng);
+            let base = randv(n, &mut rng);
+            let c = rng.normal();
+            let mut got = base.clone();
+            axpy_f32(c, &src, &mut got);
+            for i in 0..n {
+                let want = base[i] + (c as f32 * src[i] as f32) as f64;
+                assert!(
+                    got[i].to_bits() == want.to_bits(),
+                    "REPRO n={n} i={i}: axpy_f32 deviates from its definition"
+                );
+            }
+            let add = randv(n, &mut rng);
+            let sub = randv(n, &mut rng);
+            let mut got = base.clone();
+            combine_f32(&mut got, &add, c, &sub);
+            for i in 0..n {
+                let want = base[i] + add[i] - (c as f32 * sub[i] as f32) as f64;
+                assert!(
+                    got[i].to_bits() == want.to_bits(),
+                    "REPRO n={n} i={i}: combine_f32 deviates from its definition"
+                );
+            }
+        }
+    }
+
+    /// Tier dispatch: F64 routes to the bit-identical kernels, F32 to
+    /// the mixed-precision ones (they genuinely differ on generic data).
+    #[test]
+    fn precision_dispatch_routes_both_tiers() {
+        let mut rng = Pcg::seed(6);
+        let n = 33;
+        let src = randv(n, &mut rng);
+        let base = randv(n, &mut rng);
+        let c = 0.7300001;
+        let mut f64_out = base.clone();
+        let mut f32_out = base.clone();
+        axpy_prec(Precision::F64, c, &src, &mut f64_out);
+        axpy_prec(Precision::F32, c, &src, &mut f32_out);
+        let mut want = base.clone();
+        axpy(c, &src, &mut want);
+        assert!(f64_out.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(
+            f64_out.iter().zip(&f32_out).any(|(x, y)| x.to_bits() != y.to_bits()),
+            "the f32 tier must actually engage (outputs identical to f64)"
+        );
+        let mut a = base.clone();
+        let mut b = base.clone();
+        combine_prec(Precision::F64, &mut a, &src, c, &want);
+        combine(&mut b, &src, c, &want);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn precision_parses_and_round_trips() {
+        assert_eq!(Precision::parse("f64"), Some(Precision::F64));
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(Precision::parse(""), None);
+        assert_eq!(Precision::parse(Precision::F64.as_str()), Some(Precision::F64));
+        assert_eq!(Precision::parse(Precision::F32.as_str()), Some(Precision::F32));
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn lane_width_is_a_positive_power_of_two() {
+        assert!(LANE_WIDTH.is_power_of_two() && LANE_WIDTH >= 2);
+    }
+}

@@ -3,5 +3,6 @@
 
 pub mod eigen;
 pub mod fft;
+pub mod lanes;
 pub mod matrix;
 pub mod polynomial;

@@ -21,7 +21,11 @@
 //! `integrate` and `serve` accept `--threads N` (0 = auto: honour
 //! `FTFI_THREADS`, else all cores; 1 = serial) for the parallel
 //! integrate / prepare / batch engine — outputs are bit-identical for
-//! every setting — plus the tree-ensemble knobs `--ensemble-trees M`
+//! every setting — and `--precision f64|f32` (config:
+//! `integrator.precision`) selecting the compute tier: `f64` is the
+//! bit-identical default, `f32` the opt-in serving tier (f32 products,
+//! f64 accumulation; tree backend only — the graph/ensemble backends
+//! reject it with a typed error) — plus the tree-ensemble knobs `--ensemble-trees M`
 //! (0 = single-MST route), `--ensemble-seed S` and
 //! `--ensemble-method frt|bartal` (config: the `[ensemble]` section);
 //! fixed `(seed, trees)` reproduces bit-identically for any thread
@@ -99,6 +103,9 @@ fn integrator_config(args: &Args) -> Result<IntegratorConfig, Box<dyn std::error
     if let Some(t) = args.get("threads") {
         cfg.threads = t.parse().map_err(|_| format!("bad --threads {t:?}"))?;
     }
+    if let Some(p) = args.get("precision") {
+        cfg.precision = p.to_string();
+    }
     Ok(cfg)
 }
 
@@ -131,6 +138,9 @@ fn cmd_integrate_ensemble(args: &Args, ecfg: &EnsembleConfig) -> CliResult {
     let f = parse_f(args.get_str("f", "exp"), args.get_f64("lambda", 0.5))?;
     let icfg = integrator_config(args)?;
     let policy = icfg.to_policy()?;
+    // The graph/ensemble backends only run the f64 tier; parsing here
+    // surfaces `--precision f32` as a typed build error below.
+    let precision = icfg.to_precision()?;
     let method = ecfg.to_method()?;
     let mut rng = Pcg::seed(args.get_usize("seed", 0) as u64);
     let g = generators::path_plus_random_edges(n, extra, &mut rng);
@@ -150,6 +160,7 @@ fn cmd_integrate_ensemble(args: &Args, ecfg: &EnsembleConfig) -> CliResult {
             .leaf_threshold(icfg.leaf_threshold)
             .policy(policy.clone())
             .threads(icfg.threads)
+            .precision(precision)
             .build()
     });
     let mst = mst?;
@@ -167,6 +178,7 @@ fn cmd_integrate_ensemble(args: &Args, ecfg: &EnsembleConfig) -> CliResult {
             .leaf_threshold(icfg.leaf_threshold)
             .policy(policy)
             .threads(icfg.threads)
+            .precision(precision)
             .build()
     });
     let ens = ens?;
@@ -225,6 +237,7 @@ fn cmd_integrate_delta(args: &Args, k: usize) -> CliResult {
         .leaf_threshold(icfg.leaf_threshold)
         .policy(policy)
         .threads(icfg.threads)
+        .precision(icfg.to_precision()?)
         .build()?;
     let plans = tfi.prepare_plans(&f, d)?;
     let x = Matrix::randn(n, d, &mut rng);
@@ -297,6 +310,7 @@ fn cmd_integrate(args: &Args) -> CliResult {
             .leaf_threshold(icfg.leaf_threshold)
             .policy(policy.clone())
             .threads(icfg.threads)
+            .precision(icfg.to_precision()?)
             .build()
     });
     let tfi = tfi?;
@@ -379,6 +393,7 @@ fn cmd_serve_streaming(args: &Args) -> CliResult {
         .leaf_threshold(icfg.leaf_threshold)
         .policy(policy)
         .pool(Arc::clone(&pool))
+        .precision(icfg.to_precision()?)
         .build()?;
     let exec = Arc::new(StreamingFieldExecutor::new(
         tfi,
@@ -479,6 +494,7 @@ fn cmd_serve_ensemble(args: &Args) -> CliResult {
             .leaf_threshold(icfg.leaf_threshold)
             .policy(policy)
             .pool(Arc::clone(&pool))
+            .precision(icfg.to_precision()?)
             .build()?,
     );
     println!(
@@ -537,6 +553,7 @@ fn cmd_serve_field(args: &Args) -> CliResult {
     let f = parse_f(args.get_str("f", "exp"), args.get_f64("lambda", 0.5))?;
     let icfg = integrator_config(args)?;
     let policy = icfg.to_policy()?;
+    let precision = icfg.to_precision()?;
 
     let mut rng = Pcg::seed(7);
     let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
@@ -563,6 +580,7 @@ fn cmd_serve_field(args: &Args) -> CliResult {
                     .leaf_threshold(leaf_threshold)
                     .policy(policy)
                     .pool(pool)
+                    .precision(precision)
                     .build()
                     .expect("validated tree");
                 Box::new(

@@ -41,6 +41,7 @@ use crate::ftfi::cordial::{
 };
 use crate::ftfi::error::FtfiError;
 use crate::ftfi::functions::FDist;
+use crate::linalg::lanes::{self, Precision};
 use crate::linalg::matrix::Matrix;
 use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
 use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -239,6 +240,12 @@ pub(crate) struct WorkspaceSizes {
     /// Rational/Cauchy numerator-coefficient scratch length (max
     /// prepared basis degree + 1 over the rational plans).
     pub(crate) rat_len: usize,
+    /// Compute tier every kernel of this plan set runs at. `F64` (the
+    /// default) is bit-identical to the pre-lane kernels; `F32` is the
+    /// opt-in serving tier (f32 products, f64 accumulation) — see
+    /// `linalg/lanes.rs`. Frozen at prepare time so one plan handle
+    /// can never mix tiers across calls.
+    pub(crate) precision: Precision,
 }
 
 /// Per-task scratch: the aggregate bump arena (one internal node's
@@ -327,6 +334,13 @@ impl PreparedPlans {
     /// internal IT node).
     pub fn plans_built(&self) -> usize {
         self.plans_built
+    }
+
+    /// The compute tier these plans were frozen at (see
+    /// [`Precision`]): every integration through this handle — full,
+    /// delta, pooled or not — runs its inner kernels at this tier.
+    pub fn precision(&self) -> Precision {
+        self.sizes.precision
     }
 
     /// Bytes of one fully-sized workspace for a `d`-channel field: the
@@ -622,6 +636,24 @@ impl IntegratorTree {
         policy: &CrossPolicy,
         pool: &WorkPool,
     ) -> Result<PreparedPlans, FtfiError> {
+        self.prepare_pooled_with(f, channels, policy, Precision::F64, pool)
+    }
+
+    /// [`IntegratorTree::prepare_pooled`] with an explicit compute tier
+    /// for the resulting plans. `Precision::F64` reproduces the default
+    /// path bit for bit; `Precision::F32` freezes the mixed-precision
+    /// serving tier into the handle (see [`Precision`] and the ULP
+    /// contract in DESIGN.md). Planning itself (probe loops, lattice
+    /// detection, `f` evaluation) always runs in f64 — the tier only
+    /// selects the integration kernels.
+    pub fn prepare_pooled_with(
+        &self,
+        f: &FDist,
+        channels: usize,
+        policy: &CrossPolicy,
+        precision: Precision,
+        pool: &WorkPool,
+    ) -> Result<PreparedPlans, FtfiError> {
         policy.validate()?;
         let build = |node: &ItNode| -> Result<PreparedNode, FtfiError> {
             match node {
@@ -701,6 +733,7 @@ impl IntegratorTree {
             fft_len: 0,
             cheb_rank: 0,
             rat_len: 0,
+            precision,
         };
         for node in &nodes {
             if let PreparedNode::Internal { into_left, into_right, .. } = node {
@@ -1147,9 +1180,10 @@ impl IntegratorTree {
         scratch: &mut NodeScratch,
         pool: &WorkPool,
     ) {
+        let prec = plans.sizes.precision;
         match (&self.nodes[idx], &plans.nodes[idx]) {
             (ItNode::Leaf { size, .. }, PreparedNode::Leaf { fmat }) => {
-                leaf_apply_into(*size, d, fmat, input, out);
+                leaf_apply_into(*size, d, fmat, input, out, prec);
             }
             (
                 ItNode::Internal {
@@ -1198,13 +1232,15 @@ impl IntegratorTree {
                 aggregate_into(left, left_slot, input, d, xl_agg);
                 apply_plan_into(
                     into_left, &plans.f, &left.d, &right.d, xr_agg, d, cr, &plans.policy, cross,
+                    prec,
                 );
                 apply_plan_into(
                     into_right, &plans.f, &right.d, &left.d, xl_agg, d, cl, &plans.policy, cross,
+                    prec,
                 );
                 combine_sides_into(
                     d, left, right, left_slot, right_slot, out, cr, cl, xl_agg, xr_agg, left_fd,
-                    right_fd,
+                    right_fd, prec,
                 );
             }
             _ => unreachable!("prepared plans desynced from the IntegratorTree arena"),
@@ -1243,9 +1279,10 @@ impl IntegratorTree {
             return;
         }
         self.delta_nodes_visited.fetch_add(1, Ordering::Relaxed);
+        let prec = plans.sizes.precision;
         match (&self.nodes[idx], &plans.nodes[idx]) {
             (ItNode::Leaf { size, .. }, PreparedNode::Leaf { fmat }) => {
-                leaf_apply_into(*size, d, fmat, input, out);
+                leaf_apply_into(*size, d, fmat, input, out, prec);
             }
             (
                 ItNode::Internal {
@@ -1315,17 +1352,21 @@ impl IntegratorTree {
                 let pol = &plans.policy;
                 if right_dirty {
                     aggregate_into(right, right_slot, input, d, xr_agg);
-                    apply_plan_into(into_left, fi, &left.d, &right.d, xr_agg, d, cr, pol, cross);
+                    apply_plan_into(
+                        into_left, fi, &left.d, &right.d, xr_agg, d, cr, pol, cross, prec,
+                    );
                 }
                 if left_dirty {
                     aggregate_into(left, left_slot, input, d, xl_agg);
-                    apply_plan_into(into_right, fi, &right.d, &left.d, xl_agg, d, cl, pol, cross);
+                    apply_plan_into(
+                        into_right, fi, &right.d, &left.d, xl_agg, d, cl, pol, cross, prec,
+                    );
                 }
                 if right_dirty {
-                    combine_left_into(d, left, left_slot, out, cr, xr_agg, left_fd);
+                    combine_left_into(d, left, left_slot, out, cr, xr_agg, left_fd, prec);
                 }
                 if left_dirty {
-                    combine_right_into(d, right, right_slot, out, cl, xl_agg, right_fd);
+                    combine_right_into(d, right, right_slot, out, cl, xl_agg, right_fd, prec);
                 }
             }
             _ => unreachable!("prepared plans desynced from the IntegratorTree arena"),
@@ -1442,9 +1483,17 @@ fn combine_sides(
 
 /// [`leaf_apply`] on slot-region slices: a leaf's slot range is its
 /// vertex set in leaf-local order (the map is the identity), so the
-/// dense multiply runs directly on the contiguous slab rows.
-/// Bit-identical to [`leaf_apply`].
-fn leaf_apply_into(size: usize, d: usize, fmat: &[f64], input: &[f64], out: &mut [f64]) {
+/// dense multiply runs directly on the contiguous slab rows. The inner
+/// axpy is lane-chunked over the d-channel axis (`linalg/lanes.rs`);
+/// at [`Precision::F64`] it is bit-identical to [`leaf_apply`].
+fn leaf_apply_into(
+    size: usize,
+    d: usize,
+    fmat: &[f64],
+    input: &[f64],
+    out: &mut [f64],
+    prec: Precision,
+) {
     let out = &mut out[..size * d];
     out.iter_mut().for_each(|o| *o = 0.0);
     for i in 0..size {
@@ -1454,9 +1503,7 @@ fn leaf_apply_into(size: usize, d: usize, fmat: &[f64], input: &[f64], out: &mut
             if c == 0.0 {
                 continue;
             }
-            for (o, &v) in orow.iter_mut().zip(&input[j * d..(j + 1) * d]) {
-                *o += c * v;
-            }
+            lanes::axpy_prec(prec, c, &input[j * d..(j + 1) * d], orow);
         }
     }
 }
@@ -1475,9 +1522,9 @@ fn aggregate_into(side: &Side, slots: &[u32], input: &[f64], d: usize, out: &mut
         let orow = &mut out[g * d..(g + 1) * d];
         for &v in &side.group_items[lo..hi] {
             let s = slots[v as usize] as usize * d;
-            for (o, &val) in orow.iter_mut().zip(&input[s..s + d]) {
-                *o += val;
-            }
+            // Pure addition: tier-independent (no product to round),
+            // so both precision tiers share this kernel.
+            lanes::add_assign(orow, &input[s..s + d]);
         }
     }
 }
@@ -1503,9 +1550,10 @@ fn combine_sides_into(
     xr_agg: &[f64],
     left_fd: &[f64],
     right_fd: &[f64],
+    prec: Precision,
 ) {
-    combine_left_into(d, left, left_slot, out, cr, xr_agg, left_fd);
-    combine_right_into(d, right, right_slot, out, cl, xl_agg, right_fd);
+    combine_left_into(d, left, left_slot, out, cr, xr_agg, left_fd, prec);
+    combine_right_into(d, right, right_slot, out, cl, xl_agg, right_fd, prec);
 }
 
 /// The left-side half of [`combine_sides_into`]: adds the cross
@@ -1513,6 +1561,7 @@ fn combine_sides_into(
 /// correction) onto every left-side row. The delta path calls it only
 /// when the right region is dirty — a clean right side contributes
 /// exact zeros, so skipping it preserves the integral exactly.
+#[allow(clippy::too_many_arguments)]
 fn combine_left_into(
     d: usize,
     left: &Side,
@@ -1521,16 +1570,16 @@ fn combine_left_into(
     cr: &[f64],
     xr_agg: &[f64],
     left_fd: &[f64],
+    prec: Precision,
 ) {
     for (vloc, &tau) in left.id_d.iter().enumerate() {
         let coeff = left_fd[tau as usize];
         let base = left_slot[vloc] as usize * d;
         let crr = &cr[tau as usize * d..(tau as usize + 1) * d];
         let piv = &xr_agg[..d];
-        for c in 0..d {
-            let src = out[base + c];
-            out[base + c] = src + crr[c] - coeff * piv[c];
-        }
+        // (out + cr[τ]) − f(d_τ)·piv, lane-chunked; same per-element
+        // expression order as the pre-lane loop (bit-identical at F64).
+        lanes::combine_prec(prec, &mut out[base..base + d], crr, coeff, piv);
     }
 }
 
@@ -1538,6 +1587,7 @@ fn combine_left_into(
 /// from the *left* aggregates; the pivot row is produced by the left
 /// pass only and is skipped here). Delta-path masking as in
 /// [`combine_left_into`].
+#[allow(clippy::too_many_arguments)]
 fn combine_right_into(
     d: usize,
     right: &Side,
@@ -1546,6 +1596,7 @@ fn combine_right_into(
     cl: &[f64],
     xl_agg: &[f64],
     right_fd: &[f64],
+    prec: Precision,
 ) {
     for (uloc, &tau) in right.id_d.iter().enumerate() {
         if uloc as u32 == right.pivot {
@@ -1555,10 +1606,7 @@ fn combine_right_into(
         let base = right_slot[uloc] as usize * d;
         let clr = &cl[tau as usize * d..(tau as usize + 1) * d];
         let piv = &xl_agg[..d];
-        for c in 0..d {
-            let src = out[base + c];
-            out[base + c] = src + clr[c] - coeff * piv[c];
-        }
+        lanes::combine_prec(prec, &mut out[base..base + d], clr, coeff, piv);
     }
 }
 

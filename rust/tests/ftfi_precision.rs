@@ -1,0 +1,280 @@
+//! Mixed-precision serving tier: ULP-budget sweep of the opt-in f32
+//! tier (f32 products, f64 accumulation — `linalg::lanes`) against the
+//! f64 oracle, across every applicable forced strategy × f-distance ×
+//! thread count; plus streaming-session drift, in-tier bit-identity
+//! contracts, and the backend rejection surface.
+//!
+//! Budget convention: budgets are *relative Frobenius* errors stated in
+//! units of `ULP_F32 = f32::EPSILON as f64` (one f32 ulp at 1.0,
+//! ≈ 1.19e-7). The f32 tier rounds each product once (accumulation
+//! stays f64), so error scales with the number of products per output
+//! and the conditioning of the strategy's basis:
+//!
+//! | strategy                | budget (× ULP_F32) | why                              |
+//! |-------------------------|--------------------|----------------------------------|
+//! | Dense/Separable/Lattice | 1024               | one rounded product per term     |
+//! | Chebyshev / Vandermonde | 4096               | spectral-coefficient amplification|
+//! | RationalSum / Cauchy    | 65536              | ill-conditioned rational basis   |
+//!
+//! (The same constants are tabulated in DESIGN.md "SIMD lanes &
+//! precision tiers".)
+
+use std::sync::Arc;
+
+use ftfi::ftfi::cordial::{CrossPolicy, Strategy};
+use ftfi::ftfi::functions::FDist;
+use ftfi::graph::generators::{self, random_rational_tree, random_tree};
+use ftfi::linalg::matrix::Matrix;
+use ftfi::ml::rng::Pcg;
+use ftfi::{
+    EnsembleFieldIntegrator, FtfiError, GraphFieldIntegrator, Precision, StreamingIntegrator,
+    TreeFieldIntegrator,
+};
+
+/// One f32 ulp at 1.0, as the f64 the comparisons run in.
+const ULP_F32: f64 = f32::EPSILON as f64;
+
+/// Per-strategy relative-error budget for the f32 tier vs the f64
+/// oracle (same strategy, same plans — only the tier differs, so the
+/// budget is pure rounding × basis conditioning; see module doc).
+fn tier_budget(s: Strategy) -> f64 {
+    match s {
+        Strategy::RationalSum | Strategy::Cauchy => 65536.0 * ULP_F32,
+        Strategy::Chebyshev | Strategy::Vandermonde => 4096.0 * ULP_F32,
+        _ => 1024.0 * ULP_F32,
+    }
+}
+
+fn rel_err(got: &Matrix, want: &Matrix) -> f64 {
+    got.frobenius_diff(want) / (1.0 + want.frobenius())
+}
+
+/// The tentpole sweep: every applicable forced strategy × f-distance ×
+/// threads ∈ {1, 4}. For each case the f32-tier prepared integration
+/// must (a) stay inside its stated budget against the f64-tier oracle
+/// with the same forced strategy, and (b) be bit-identical across
+/// thread counts — the determinism contract holds per tier. A minimum
+/// applicable-pair count pins the sweep against silent degeneration.
+#[test]
+fn f32_tier_ulp_budget_sweep_forced_strategies() {
+    let mut rng = Pcg::seed(7100);
+    // Rational edge weights keep the Lattice / Vandermonde paths
+    // applicable, mirroring the equivalence sweep.
+    let tree = random_rational_tree(160, 3, 4, &mut rng);
+    let x = Matrix::randn(160, 2, &mut rng);
+    let fs: Vec<FDist> = vec![
+        FDist::Identity,
+        FDist::Polynomial(vec![0.4, 1.0, -0.05]),
+        FDist::Exponential { lambda: -0.3, scale: 1.2 },
+        FDist::Trig { omega: 0.6, phase: 0.3, scale: 1.0 },
+        FDist::Rational { num: vec![1.0], den: vec![1.0, 0.0, 0.5] },
+        FDist::ExpQuadratic { u: -0.05, v: 0.02, w: 0.1 },
+    ];
+    let all = [
+        Strategy::Dense,
+        Strategy::Separable,
+        Strategy::Lattice,
+        Strategy::RationalSum,
+        Strategy::Cauchy,
+        Strategy::Vandermonde,
+        Strategy::Chebyshev,
+    ];
+    let mut applicable = 0usize;
+    for f in &fs {
+        for &s in &all {
+            let build = |prec: Precision, threads: usize| {
+                TreeFieldIntegrator::builder(&tree)
+                    .leaf_threshold(8)
+                    .policy(CrossPolicy { force: Some(s), dense_cutoff: 0, ..Default::default() })
+                    .threads(threads)
+                    .precision(prec)
+                    .build()
+                    .unwrap()
+            };
+            let oracle = build(Precision::F64, 1);
+            let want = match oracle.prepare(f) {
+                Err(FtfiError::StrategyInapplicable { .. }) => continue,
+                Err(e) => panic!("{f:?} forced {s:?}: unexpected error {e}"),
+                Ok(prepared) => prepared.integrate(&x).unwrap(),
+            };
+            applicable += 1;
+            // Planning is tier-independent, so the fast tier must be
+            // applicable whenever the oracle is.
+            let fast1 = build(Precision::F32, 1);
+            let got1 = fast1.prepare(f).expect("tier must not change applicability");
+            let got1 = got1.integrate(&x).unwrap();
+            let fast4 = build(Precision::F32, 4);
+            let got4 = fast4.prepare(f).unwrap().integrate(&x).unwrap();
+            assert!(
+                got1 == got4,
+                "{f:?} forced {s:?}: f32 tier must be bit-identical across thread counts"
+            );
+            let rel = rel_err(&got1, &want);
+            let budget = tier_budget(s);
+            assert!(
+                rel < budget,
+                "{f:?} forced {s:?}: f32-tier rel err {rel:.3e} exceeds budget {budget:.3e} \
+                 ({:.0} ULP_F32)",
+                budget / ULP_F32
+            );
+        }
+    }
+    assert!(applicable >= 12, "sweep degenerated: only {applicable} applicable (f, strategy) pairs");
+}
+
+/// The fast tier must actually engage: on a generic workload its output
+/// differs bitwise from the f64 tier (while staying inside budget). A
+/// tier that silently no-ops would pass every budget test — this pins
+/// the other direction.
+#[test]
+fn f32_tier_actually_differs_from_f64_tier() {
+    let mut rng = Pcg::seed(7200);
+    let tree = random_tree(220, 0.1, 1.0, &mut rng);
+    let x = Matrix::randn(220, 4, &mut rng);
+    let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+    let f64_out = TreeFieldIntegrator::builder(&tree)
+        .build()
+        .unwrap()
+        .try_integrate(&f, &x)
+        .unwrap();
+    let f32_out = TreeFieldIntegrator::builder(&tree)
+        .precision(Precision::F32)
+        .build()
+        .unwrap()
+        .try_integrate(&f, &x)
+        .unwrap();
+    assert!(
+        f32_out != f64_out,
+        "f32 tier produced bit-identical output — the tier is not reaching the kernels"
+    );
+    let rel = rel_err(&f32_out, &f64_out);
+    assert!(rel < 1024.0 * ULP_F32, "f32 tier drifted to rel {rel:.3e}");
+}
+
+/// In-tier delta consistency: at the f32 tier, the k = n degenerate
+/// delta must stay bit-identical to a plain prepared integration of the
+/// delta field — the same contract the f64 tier pins in the delta
+/// ablation. Both paths run the same tier, so bit-identity survives.
+#[test]
+fn f32_tier_full_rows_delta_is_bit_identical_in_tier() {
+    let mut rng = Pcg::seed(7300);
+    let n = 200;
+    let d = 2;
+    let tree = random_tree(n, 0.1, 1.0, &mut rng);
+    let f = FDist::inverse_quadratic(0.5);
+    let tfi = TreeFieldIntegrator::builder(&tree)
+        .threads(1)
+        .precision(Precision::F32)
+        .build()
+        .unwrap();
+    let plans = tfi.prepare_plans(&f, d).unwrap();
+    let dx = Matrix::randn(n, d, &mut rng);
+    let rows: Vec<u32> = (0..n as u32).collect();
+    let dout = tfi.integrate_delta_prepared(&rows, &dx, &plans).unwrap();
+    let want = tfi.integrate_prepared(&dx, &plans).unwrap();
+    assert!(dout == want, "k=n delta must be bit-identical to integrate(Δ) within the f32 tier");
+}
+
+/// Streaming drift: run the same update stream through an f64-tier and
+/// an f32-tier session. Row assignments are exact in any tier, so the
+/// fields stay bitwise equal; at every refresh boundary the f32 session
+/// must (a) restore the f64-tier refresh state within the serving
+/// budget and (b) match its own tier's cold recompute bit-exactly (the
+/// bit-exact-refresh drift policy, per tier).
+#[test]
+fn streaming_refresh_restores_f64_refresh_state_within_budget() {
+    let mut rng = Pcg::seed(7400);
+    let n = 300;
+    let d = 3;
+    let tree = random_tree(n, 0.1, 1.0, &mut rng);
+    let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+    let field = Matrix::randn(n, d, &mut rng);
+    let refresh_every = 4;
+    let make = |prec: Precision| {
+        let tfi = Arc::new(
+            TreeFieldIntegrator::builder(&tree).threads(1).precision(prec).build().unwrap(),
+        );
+        let plans = Arc::new(tfi.prepare_plans(&f, d).unwrap());
+        (tfi, plans)
+    };
+    let (tfi64, plans64) = make(Precision::F64);
+    let (tfi32, plans32) = make(Precision::F32);
+    let mut s64 =
+        StreamingIntegrator::new(Arc::clone(&tfi64), Arc::clone(&plans64), field.clone(), refresh_every)
+            .unwrap();
+    let mut s32 =
+        StreamingIntegrator::new(Arc::clone(&tfi32), Arc::clone(&plans32), field.clone(), refresh_every)
+            .unwrap();
+    for round in 1..=3 {
+        for _ in 0..refresh_every {
+            let k = 1 + rng.below(8);
+            let rows: Vec<u32> = (0..k).map(|_| rng.below(n) as u32).collect();
+            let vals = Matrix::randn(k, d, &mut rng);
+            s64.apply_update(&rows, &vals).unwrap();
+            s32.apply_update(&rows, &vals).unwrap();
+        }
+        // The refresh_every-th update just recomputed both sessions
+        // from their (bitwise equal) fields.
+        assert!(s32.field() == s64.field(), "round {round}: fields must stay bitwise equal");
+        let rel = rel_err(s32.output(), s64.output());
+        assert!(
+            rel < 1024.0 * ULP_F32,
+            "round {round}: post-refresh f32 state drifted to rel {rel:.3e} from the f64 tier"
+        );
+        let cold = tfi32.integrate_prepared(s32.field(), &plans32).unwrap();
+        assert!(
+            *s32.output() == cold,
+            "round {round}: f32-tier refresh must be bit-exact within its own tier"
+        );
+    }
+}
+
+/// The fast tier is a tree-backend feature: the graph and ensemble
+/// builders accept `.precision(..)` for uniformity but reject anything
+/// other than the f64 tier at `build()` with `InvalidInput`.
+#[test]
+fn fast_tier_rejected_on_graph_and_ensemble_backends() {
+    let mut rng = Pcg::seed(7500);
+    let g = generators::path_plus_random_edges(60, 30, &mut rng);
+    match GraphFieldIntegrator::builder(&g).precision(Precision::F32).build() {
+        Err(FtfiError::InvalidInput(msg)) => {
+            assert!(msg.contains("f64"), "rejection must name the supported tier: {msg}")
+        }
+        Err(e) => panic!("graph backend: wrong error kind for the f32 tier: {e}"),
+        Ok(_) => panic!("graph backend must reject the f32 tier"),
+    }
+    match EnsembleFieldIntegrator::builder(&g).trees(2).seed(7).precision(Precision::F32).build() {
+        Err(FtfiError::InvalidInput(msg)) => {
+            assert!(msg.contains("f64"), "rejection must name the supported tier: {msg}")
+        }
+        Err(e) => panic!("ensemble backend: wrong error kind for the f32 tier: {e}"),
+        Ok(_) => panic!("ensemble backend must reject the f32 tier"),
+    }
+    // The default tier stays accepted on both.
+    assert!(GraphFieldIntegrator::builder(&g).precision(Precision::F64).build().is_ok());
+    assert!(EnsembleFieldIntegrator::builder(&g)
+        .trees(2)
+        .seed(7)
+        .precision(Precision::F64)
+        .build()
+        .is_ok());
+}
+
+/// Accessor round-trip: the tier set on the builder is visible on the
+/// integrator and on every prepared handle derived from it.
+#[test]
+fn precision_threads_through_builder_and_prepared_handles() {
+    let mut rng = Pcg::seed(7600);
+    let tree = random_tree(50, 0.1, 1.0, &mut rng);
+    let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
+    let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
+    assert_eq!(tfi.precision(), Precision::F64, "f64 is the default tier");
+    let tfi = TreeFieldIntegrator::builder(&tree).precision(Precision::F32).build().unwrap();
+    assert_eq!(tfi.precision(), Precision::F32);
+    let prepared = tfi.prepare(&f).unwrap();
+    assert_eq!(prepared.precision(), Precision::F32);
+    assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+    assert_eq!(Precision::parse("f64"), Some(Precision::F64));
+    assert_eq!(Precision::parse("f16"), None);
+    assert_eq!(Precision::F32.as_str(), "f32");
+}

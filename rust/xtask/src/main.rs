@@ -25,6 +25,21 @@
 //! * `unordered-float-reduction` — float reductions (`.sum`/`.fold`/
 //!   `.product`) over a variable declared as a hashed container: order
 //!   nondeterminism straight into a float accumulator.
+//! * `mixed-precision-cast` — bare `as f32` / `as f64` casts in the
+//!   numeric core (`ftfi/`, `tree/`, `linalg/`) outside
+//!   `linalg/lanes.rs`. The mixed-precision serving tier funnels every
+//!   f32↔f64 tier cast through the lane-kernel module so the f32
+//!   compute / f64 accumulate semantics are auditable in one place; an
+//!   ad-hoc cast anywhere else silently changes a tier's rounding.
+//!   Int→float index/size casts are fine but must say so in an
+//!   annotation.
+//!
+//! `cargo xtask bench-gate [artifacts-dir] [thresholds.json]` checks
+//! the machine-readable `BENCH_*.json` artifacts the ablation benches
+//! emit against committed thresholds (min speedups, max drift,
+//! allocation counts). Missing files, missing fields, empty selector
+//! matches and non-finite values all fail the gate — a bench that
+//! stops reporting a number is treated as a regression, not a pass.
 //!
 //! Suppression: a `// lint: allow(<rule>) — reason` or
 //! `// lint: infallible because <proof>` comment on the offending line
@@ -71,6 +86,17 @@ const ALLOC_TOKENS: [&str; 12] = [
 
 /// Numeric modules where hashed containers are banned outright.
 const NONDET_MAP_DIRS: [&str; 5] = ["ftfi/", "tree/", "linalg/", "ot/", "graph/"];
+
+/// The numeric core the precision tiers run through: bare `as f32` /
+/// `as f64` casts here must either live in the lane-kernel module or
+/// carry an annotation saying why they are not a tier cast.
+const PRECISION_CAST_DIRS: [&str; 3] = ["ftfi/", "tree/", "linalg/"];
+
+/// The one module allowed to cast between tiers without annotation:
+/// every f32-tier product cast is funnelled through the lane kernels.
+fn precision_cast_exempt(rel: &str) -> bool {
+    rel == "linalg/lanes.rs"
+}
 
 /// Modules where `unchecked-panic` fails CI (the completed burn-down
 /// surface: fallible APIs exist, every remaining site is annotated).
@@ -476,6 +502,8 @@ fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
     let numeric = NONDET_MAP_DIRS.iter().any(|d| rel.starts_with(*d));
     let r3_strict = panic_strict(rel);
     let r3_exempt = panic_exempt(rel);
+    let r5_scope =
+        PRECISION_CAST_DIRS.iter().any(|d| rel.starts_with(*d)) && !precision_cast_exempt(rel);
 
     // R4 preparation: variables declared with a hashed-container type.
     let mut hashed_vars: Vec<String> = Vec::new();
@@ -576,8 +604,406 @@ fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
                 });
             }
         }
+        // R5: bare tier casts outside the lane-kernel module.
+        if r5_scope
+            && (has_word(line, "as f32") || has_word(line, "as f64"))
+            && !suppressed(&directives, "mixed-precision-cast", lno)
+        {
+            findings.push(Finding {
+                rule: "mixed-precision-cast",
+                line: lno,
+                strict: true,
+                msg: "bare `as f32`/`as f64` in the numeric core (tier casts belong in \
+                      linalg/lanes.rs; annotate int→float index/size casts with \
+                      `// lint: allow(mixed-precision-cast) — reason`)"
+                    .to_string(),
+            });
+        }
     }
     findings
+}
+
+// ---------------------------------------------------------------------
+// bench-gate: check BENCH_*.json artifacts against committed thresholds
+// ---------------------------------------------------------------------
+//
+// The ablation benches emit flat, hand-written JSON; this is a
+// correspondingly small hand-written parser (std-only, like the rest
+// of xtask) for exactly that dialect: objects, arrays, strings without
+// escapes-we-care-about, bools, null, and numbers including exponent
+// notation. Bare `NaN` / `inf` tokens (what `format!` prints for
+// non-finite f64s) parse as their float values so the *gate* — not the
+// parser — gets to reject them with a useful message.
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn new(src: &'a str) -> Self {
+        Self { bytes: src.as_bytes(), pos: 0 }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected `{}` at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn eat_word(&mut self, w: &str) -> bool {
+        self.skip_ws();
+        if self.bytes[self.pos..].starts_with(w.as_bytes()) {
+            self.pos += w.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b't') if self.eat_word("true") => Ok(Json::Bool(true)),
+            Some(b'f') if self.eat_word("false") => Ok(Json::Bool(false)),
+            Some(b'n') if self.eat_word("null") => Ok(Json::Null),
+            Some(b'N') if self.eat_word("NaN") => Ok(Json::Num(f64::NAN)),
+            Some(b'i') if self.eat_word("inf") => Ok(Json::Num(f64::INFINITY)),
+            Some(_) => self.number(),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut pairs = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            let key = self.string()?;
+            self.eat(b':')?;
+            pairs.push((key, self.value()?));
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected `,` or `}}` at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected `,` or `]` at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let start = self.pos;
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b'"' {
+                let s = std::str::from_utf8(&self.bytes[start..self.pos])
+                    .map_err(|_| "invalid utf-8 in string".to_string())?
+                    .to_string();
+                self.pos += 1;
+                return Ok(s);
+            }
+            if b == b'\\' {
+                return Err("escape sequences unsupported in bench JSON".to_string());
+            }
+            self.pos += 1;
+        }
+        Err("unterminated string".to_string())
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        let start = self.pos;
+        if self.bytes.get(self.pos) == Some(&b'-') {
+            self.pos += 1;
+            if self.eat_word("inf") {
+                return Ok(Json::Num(f64::NEG_INFINITY));
+            }
+            if self.eat_word("NaN") {
+                return Ok(Json::Num(f64::NAN));
+            }
+        }
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b.is_ascii_digit() || matches!(b, b'.' | b'e' | b'E' | b'+' | b'-') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| "invalid utf-8 in number".to_string())?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number `{text}` at byte {start}"))
+    }
+}
+
+fn parse_json(src: &str) -> Result<Json, String> {
+    let mut p = JsonParser::new(src);
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!("trailing garbage at byte {}", p.pos));
+    }
+    Ok(v)
+}
+
+/// One threshold check: a field selector into a bench artifact plus
+/// optional lower/upper bounds. Selector grammar (dot-separated):
+/// `name`, `name[N]`, `name[last]`, `name[*]` — e.g.
+/// `results[*].speedup` bounds every row, `results[0].speedup` just
+/// the first.
+struct Check {
+    file: String,
+    field: String,
+    min: Option<f64>,
+    max: Option<f64>,
+}
+
+/// Resolve a selector against a parsed artifact. Returns every f64 the
+/// selector matches; any structural mismatch (missing key, index out of
+/// range, non-numeric leaf) is an error, not an empty match.
+fn select(value: &Json, selector: &str) -> Result<Vec<f64>, String> {
+    let mut current: Vec<&Json> = vec![value];
+    for seg in selector.split('.') {
+        let (name, index) = match seg.find('[') {
+            Some(open) => {
+                let close = seg
+                    .rfind(']')
+                    .ok_or_else(|| format!("unclosed `[` in selector segment `{seg}`"))?;
+                (&seg[..open], Some(&seg[open + 1..close]))
+            }
+            None => (seg, None),
+        };
+        if !name.is_empty() {
+            current = current
+                .iter()
+                .map(|v| v.get(name).ok_or_else(|| format!("missing field `{name}`")))
+                .collect::<Result<Vec<_>, _>>()?;
+        }
+        if let Some(idx) = index {
+            let mut next = Vec::new();
+            for v in &current {
+                let Json::Arr(items) = v else {
+                    return Err(format!("selector `{seg}` indexes a non-array"));
+                };
+                match idx {
+                    "*" => next.extend(items.iter()),
+                    "last" => next.push(
+                        items.last().ok_or_else(|| format!("`{seg}` on an empty array"))?,
+                    ),
+                    n => {
+                        let i: usize =
+                            n.parse().map_err(|_| format!("bad index `{n}` in `{seg}`"))?;
+                        next.push(
+                            items.get(i).ok_or_else(|| format!("index {i} out of range"))?,
+                        );
+                    }
+                }
+            }
+            current = next;
+        }
+    }
+    current
+        .iter()
+        .map(|v| match v {
+            Json::Num(x) => Ok(*x),
+            other => Err(format!("selector leaf is not a number: {other:?}")),
+        })
+        .collect()
+}
+
+/// Evaluate one check against a loaded artifact. Every failure mode —
+/// unparseable file, missing field, empty match, non-finite value,
+/// out-of-bounds value — returns `Err` so a bench that stops reporting
+/// a number reads as a regression rather than a pass.
+fn evaluate_check(check: &Check, artifact: &str) -> Result<(), String> {
+    let value =
+        parse_json(artifact).map_err(|e| format!("{}: unparseable JSON: {e}", check.file))?;
+    let selected = select(&value, &check.field)
+        .map_err(|e| format!("{}: `{}`: {e}", check.file, check.field))?;
+    if selected.is_empty() {
+        return Err(format!("{}: `{}` matched no values", check.file, check.field));
+    }
+    for (i, &x) in selected.iter().enumerate() {
+        if !x.is_finite() {
+            return Err(format!(
+                "{}: `{}`[{i}] is non-finite ({x})",
+                check.file, check.field
+            ));
+        }
+        if let Some(min) = check.min {
+            if x < min {
+                return Err(format!(
+                    "{}: `{}`[{i}] = {x} below minimum {min}",
+                    check.file, check.field
+                ));
+            }
+        }
+        if let Some(max) = check.max {
+            if x > max {
+                return Err(format!(
+                    "{}: `{}`[{i}] = {x} above maximum {max}",
+                    check.file, check.field
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn parse_thresholds(src: &str) -> Result<Vec<Check>, String> {
+    let root = parse_json(src).map_err(|e| format!("thresholds: unparseable JSON: {e}"))?;
+    let Some(Json::Arr(entries)) = root.get("checks") else {
+        return Err("thresholds: missing `checks` array".to_string());
+    };
+    let mut checks = Vec::new();
+    for entry in entries {
+        let field_str = |key: &str| -> Result<String, String> {
+            match entry.get(key) {
+                Some(Json::Str(s)) => Ok(s.clone()),
+                _ => Err(format!("thresholds: check missing string `{key}`")),
+            }
+        };
+        let bound = |key: &str| -> Result<Option<f64>, String> {
+            match entry.get(key) {
+                Some(Json::Num(x)) if x.is_finite() => Ok(Some(*x)),
+                Some(_) => Err(format!("thresholds: `{key}` must be a finite number")),
+                None => Ok(None),
+            }
+        };
+        let check = Check {
+            file: field_str("file")?,
+            field: field_str("field")?,
+            min: bound("min")?,
+            max: bound("max")?,
+        };
+        if check.min.is_none() && check.max.is_none() {
+            return Err(format!(
+                "thresholds: check on {}:`{}` has neither min nor max",
+                check.file, check.field
+            ));
+        }
+        checks.push(check);
+    }
+    if checks.is_empty() {
+        return Err("thresholds: empty `checks` array".to_string());
+    }
+    Ok(checks)
+}
+
+/// Run every check; the loader is injected so tests can gate in-memory
+/// artifacts. A missing artifact file is itself a gate failure.
+fn run_gate<F>(checks: &[Check], load: F) -> Vec<String>
+where
+    F: Fn(&str) -> Option<String>,
+{
+    let mut failures = Vec::new();
+    for check in checks {
+        match load(&check.file) {
+            None => failures.push(format!("{}: artifact missing", check.file)),
+            Some(artifact) => {
+                if let Err(msg) = evaluate_check(check, &artifact) {
+                    failures.push(msg);
+                }
+            }
+        }
+    }
+    failures
+}
+
+fn bench_gate_command(args: &[String]) -> ExitCode {
+    let dir = args.first().map(String::as_str).unwrap_or(".");
+    let thresholds_path =
+        args.get(1).map(String::as_str).unwrap_or("benches/thresholds.json");
+    let thresholds_src = match fs::read_to_string(thresholds_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("xtask bench-gate: cannot read {thresholds_path}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let checks = match parse_thresholds(&thresholds_src) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("xtask bench-gate: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let dir = PathBuf::from(dir);
+    let failures = run_gate(&checks, |file| fs::read_to_string(dir.join(file)).ok());
+    for f in &failures {
+        println!("[gate] {f}");
+    }
+    println!(
+        "xtask bench-gate: {} check(s), {} failure(s)",
+        checks.len(),
+        failures.len()
+    );
+    if failures.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -642,8 +1068,10 @@ fn print_usage() {
     eprintln!(
         "usage: cargo xtask <command>\n\n\
          commands:\n  \
-         lint    check the determinism / zero-alloc / panic-freedom contracts\n  \
-         help    this message"
+         lint        check the determinism / zero-alloc / panic-freedom contracts\n  \
+         bench-gate  [artifacts-dir] [thresholds.json] — gate BENCH_*.json\n              \
+         artifacts against committed regression thresholds\n  \
+         help        this message"
     );
 }
 
@@ -651,6 +1079,7 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         None | Some("lint") => lint_command(),
+        Some("bench-gate") => bench_gate_command(&args[1..]),
         Some("help") | Some("--help") => {
             print_usage();
             ExitCode::SUCCESS
@@ -857,5 +1286,172 @@ mod tests {
         assert_eq!(spans, vec![(2, 5)]);
         let src = "#[cfg(feature = \"pjrt\")]\nfn gated() {}\n";
         assert!(test_spans(&scrub(src)).is_empty(), "a non-test cfg is not a test span");
+    }
+
+    // -- R5: mixed-precision-cast ------------------------------------
+
+    const R5_BAD: &str = "pub fn f(x: f64) -> f64 {\n    (x as f32) as f64\n}\n";
+
+    #[test]
+    fn mixed_precision_cast_fires_in_numeric_core() {
+        let f = lint_source("ftfi/foo.rs", R5_BAD);
+        assert!(rules(&f).contains(&"mixed-precision-cast"), "{f:?}");
+        assert!(f.iter().all(|x| x.strict));
+        assert!(rules(&lint_source("tree/foo.rs", "fn g(n: usize) -> f64 { n as f64 }\n"))
+            .contains(&"mixed-precision-cast"));
+    }
+
+    #[test]
+    fn mixed_precision_cast_exempts_lane_module_and_other_dirs() {
+        // linalg/lanes.rs is where the tier casts are supposed to live.
+        assert!(lint_source("linalg/lanes.rs", R5_BAD).is_empty());
+        // Outside the numeric core the rule does not apply at all.
+        assert!(lint_source("coordinator/foo.rs", R5_BAD).is_empty());
+        assert!(lint_source("ml/foo.rs", R5_BAD).is_empty());
+    }
+
+    #[test]
+    fn mixed_precision_cast_respects_allow_annotation_and_tests() {
+        let src = "pub fn f(n: usize) -> f64 {\n\
+                   \x20   // lint: allow(mixed-precision-cast) — index to coordinate.\n\
+                   \x20   n as f64\n}\n";
+        assert!(lint_source("ftfi/foo.rs", src).is_empty());
+        let in_test =
+            "#[cfg(test)]\nmod tests {\n    fn t(n: usize) -> f64 { n as f64 }\n}\n";
+        assert!(lint_source("linalg/foo.rs", in_test).is_empty());
+        // Comments and strings are scrubbed before matching.
+        let doc = "/// Binomial coefficient as f64.\npub fn f() {}\n";
+        assert!(lint_source("ftfi/foo.rs", doc).is_empty());
+    }
+
+    // -- bench-gate: JSON parser + selector --------------------------
+
+    #[test]
+    fn json_parser_handles_bench_dialect() {
+        let src = "{\"bench\": \"x\", \"quick\": true, \"rel_err\": 1.234e-10,\n\
+                   \"results\": [{\"speedup\": 2.5}, {\"speedup\": -0.5}], \"pad\": null}";
+        let v = parse_json(src).unwrap();
+        assert_eq!(v.get("bench"), Some(&Json::Str("x".to_string())));
+        assert_eq!(v.get("quick"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("rel_err"), Some(&Json::Num(1.234e-10)));
+        assert_eq!(select(&v, "results[*].speedup").unwrap(), vec![2.5, -0.5]);
+        assert_eq!(select(&v, "results[0].speedup").unwrap(), vec![2.5]);
+        assert_eq!(select(&v, "results[last].speedup").unwrap(), vec![-0.5]);
+        // Bare NaN (what format! prints for f64::NAN) must parse, so
+        // the gate — not the parser — rejects it.
+        let v = parse_json("{\"x\": NaN, \"y\": -inf}").unwrap();
+        assert!(matches!(v.get("x"), Some(Json::Num(x)) if x.is_nan()));
+        assert!(matches!(v.get("y"), Some(Json::Num(x)) if *x == f64::NEG_INFINITY));
+        assert!(parse_json("{\"x\": }").is_err());
+        assert!(parse_json("{\"x\": 1} trailing").is_err());
+    }
+
+    #[test]
+    fn selector_errors_on_missing_structure() {
+        let v = parse_json("{\"results\": [{\"speedup\": 1.0}]}").unwrap();
+        assert!(select(&v, "results[*].missing").is_err());
+        assert!(select(&v, "absent[*].speedup").is_err());
+        assert!(select(&v, "results[7].speedup").is_err());
+        let empty = parse_json("{\"results\": []}").unwrap();
+        assert!(select(&empty, "results[last].speedup").is_err());
+        assert_eq!(select(&empty, "results[*].speedup").unwrap(), Vec::<f64>::new());
+    }
+
+    // -- bench-gate: evaluation --------------------------------------
+
+    const GOOD_BENCH: &str = "{\"bench\": \"hotpath_alloc\", \"results\": [\n\
+        {\"speedup\": 1.8, \"allocs_workspace\": 0},\n\
+        {\"speedup\": 2.4, \"allocs_workspace\": 0}]}";
+
+    #[test]
+    fn gate_passes_on_good_artifact() {
+        let speedup = Check {
+            file: "BENCH_hotpath.json".to_string(),
+            field: "results[*].speedup".to_string(),
+            min: Some(1.0),
+            max: None,
+        };
+        let allocs = Check {
+            file: "BENCH_hotpath.json".to_string(),
+            field: "results[*].allocs_workspace".to_string(),
+            min: None,
+            max: Some(0.0),
+        };
+        assert!(evaluate_check(&speedup, GOOD_BENCH).is_ok());
+        assert!(evaluate_check(&allocs, GOOD_BENCH).is_ok());
+    }
+
+    #[test]
+    fn gate_trips_on_seeded_regression() {
+        // A speedup below the committed floor is the canonical seeded
+        // regression: the gate must fail, not warn.
+        let check = Check {
+            file: "BENCH_hotpath.json".to_string(),
+            field: "results[*].speedup".to_string(),
+            min: Some(2.0),
+            max: None,
+        };
+        let err = evaluate_check(&check, GOOD_BENCH).unwrap_err();
+        assert!(err.contains("below minimum"), "{err}");
+        // …and an allocation creeping back in trips the max bound.
+        let regressed = "{\"results\": [{\"allocs_workspace\": 3}]}";
+        let check = Check {
+            file: "BENCH_hotpath.json".to_string(),
+            field: "results[*].allocs_workspace".to_string(),
+            min: None,
+            max: Some(0.0),
+        };
+        assert!(evaluate_check(&check, regressed).unwrap_err().contains("above maximum"));
+    }
+
+    #[test]
+    fn gate_fails_on_missing_field_nan_and_empty_match() {
+        let check = |field: &str| Check {
+            file: "b.json".to_string(),
+            field: field.to_string(),
+            min: Some(0.0),
+            max: None,
+        };
+        assert!(evaluate_check(&check("results[*].speedup"), "{\"results\": [{}]}").is_err());
+        assert!(evaluate_check(&check("speedup"), "{\"speedup\": NaN}")
+            .unwrap_err()
+            .contains("non-finite"));
+        assert!(evaluate_check(&check("results[*].speedup"), "{\"results\": []}")
+            .unwrap_err()
+            .contains("matched no values"));
+        assert!(evaluate_check(&check("speedup"), "not json at all").is_err());
+    }
+
+    #[test]
+    fn gate_fails_on_missing_artifact_file() {
+        let checks = vec![Check {
+            file: "BENCH_gone.json".to_string(),
+            field: "results[*].speedup".to_string(),
+            min: Some(1.0),
+            max: None,
+        }];
+        let failures = run_gate(&checks, |_| None);
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("artifact missing"));
+        // Injected in-memory artifact: same checks, good data, no failures.
+        let failures = run_gate(&checks, |_| {
+            Some("{\"results\": [{\"speedup\": 1.5}]}".to_string())
+        });
+        assert!(failures.is_empty(), "{failures:?}");
+    }
+
+    #[test]
+    fn thresholds_parser_rejects_malformed_entries() {
+        let good = "{\"checks\": [\
+            {\"file\": \"BENCH_x.json\", \"field\": \"results[*].speedup\", \"min\": 1.0}]}";
+        let checks = parse_thresholds(good).unwrap();
+        assert_eq!(checks.len(), 1);
+        assert_eq!(checks[0].min, Some(1.0));
+        assert!(parse_thresholds("{\"checks\": []}").is_err());
+        assert!(parse_thresholds("{}").is_err());
+        // A check with neither bound can never fail — reject it.
+        let unbounded =
+            "{\"checks\": [{\"file\": \"a.json\", \"field\": \"results[*].speedup\"}]}";
+        assert!(parse_thresholds(unbounded).is_err());
     }
 }
