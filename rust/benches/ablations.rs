@@ -26,6 +26,10 @@
 //!   re-integration, k ∈ {1, 16, 256, n}): wall clock + max-abs drift,
 //!   with pre-timing superposition / bit-identity asserts and
 //!   `BENCH_delta.json`;
+//! - in-place edge re-plans (k reweighted edges via the O(log n)
+//!   separator walk vs a full rebuild + re-prepare, k ∈ {1, 4, 16,
+//!   64}): wall clock + nodes visited per replan, with a pre-timing
+//!   rebuild bit-identity assert and `BENCH_replan.json`;
 //! - SIMD lane kernels (lane-chunked inner loops vs the scalar
 //!   reference kernels, d ∈ {1, 8, 64}) + f32-serving-tier drift, with
 //!   pre-timing f64 bit-identity / f32-budget asserts and
@@ -33,12 +37,12 @@
 //!
 //! Run: `cargo bench --bench ablations`. The CI bench-smoke job runs
 //! `cargo bench --bench ablations -- --quick`, which executes only the
-//! cheap parallel-scaling, ensemble-scaling, hot-path, delta and
-//! lane-kernel sweeps and emits `BENCH_parallel.json` +
+//! cheap parallel-scaling, ensemble-scaling, hot-path, delta, replan
+//! and lane-kernel sweeps and emits `BENCH_parallel.json` +
 //! `BENCH_ensemble.json` + `BENCH_hotpath.json` + `BENCH_delta.json` +
-//! `BENCH_simd.json` as the perf-trajectory artifacts; `cargo xtask
-//! bench-gate` then checks every artifact against
-//! `benches/thresholds.json`.
+//! `BENCH_replan.json` + `BENCH_simd.json` as the perf-trajectory
+//! artifacts; `cargo xtask bench-gate` then checks every artifact
+//! against `benches/thresholds.json`.
 
 use ftfi::bench_util::{banner, bench, time_once, Table};
 use ftfi::ftfi::cordial::{cross_apply, cross_apply_dense, CrossPolicy, Strategy};
@@ -509,6 +513,110 @@ fn delta_scaling(quick: bool) {
     println!("wrote BENCH_delta.json (equivalence asserted before timing)");
 }
 
+/// Tentpole bench (PR 8): in-place edge re-plans — reweighting k tree
+/// edges through `TreeFieldIntegrator::replan_edge_prepared` (the
+/// O(log n) separator walk rebuilding only the affected pivot-distance
+/// tables and per-node plans) vs a full rebuild-from-scratch +
+/// re-prepare, k ∈ {1, 4, 16, 64} on the n = 4000 serving metric.
+/// Before timing, every k asserts that the replanned handle serves
+/// **bit-identical** output to a from-scratch rebuild on the mutated
+/// tree (the separator hierarchy is weight-independent, so the re-plan
+/// is exact, not approximate). Reports nodes visited per replan (the
+/// O(log n) invalidation footprint). Always writes `BENCH_replan.json`
+/// for the CI artifact / perf trajectory. Acceptance: ≥ 5x wall-clock
+/// for k = 1 vs rebuild+prepare.
+fn replan_scaling(quick: bool) {
+    banner("Ablation: in-place edge re-plan vs rebuild+prepare (n = 4000, threads = 1)");
+    let mut rng = Pcg::seed(71);
+    let n = 4000;
+    let d = 4;
+    let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+    let mut tree = minimum_spanning_tree(&g);
+    let f = FDist::inverse_quadratic(0.5);
+    let mut tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().expect("valid tree");
+    let mut plans = tfi.prepare_plans(&f, d).expect("plannable f");
+    let x = Matrix::randn(n, d, &mut rng);
+    let (warmup, runs) = if quick { (1, 3) } else { (2, 7) };
+    let table = Table::new(
+        &["k", "replan (ms)", "rebuild (ms)", "speedup", "nodes visited"],
+        &[6, 12, 13, 9, 14],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for &k in &[1usize, 4, 16, 64] {
+        // k distinct edges; each timed pass flips them between their
+        // current weight and 1.5× (a same-weight replan is a validated
+        // no-op that rebuilds nothing, so alternation keeps every timed
+        // call on the real re-plan path).
+        let picks: Vec<(usize, usize, f64)> = rng
+            .sample_distinct(tree.edges().len(), k)
+            .into_iter()
+            .map(|i| {
+                let (u, v, w) = tree.edges()[i];
+                (u as usize, v as usize, w)
+            })
+            .collect();
+        // Rebuild-equivalence gate before anything is timed: after
+        // replanning all k edges, the handle must serve bit-identical
+        // output to a from-scratch build on the mutated tree.
+        for &(u, v, w) in &picks {
+            tfi.replan_edge_prepared(u, v, w * 1.5, &mut plans).expect("replan edge");
+            assert!(tree.set_edge_weight(u, v, w * 1.5).is_some(), "pick must be a tree edge");
+        }
+        let got = tfi.integrate_prepared(&x, &plans).expect("replanned integrate");
+        let oracle =
+            TreeFieldIntegrator::builder(&tree).threads(1).build().expect("valid tree");
+        let oplans = oracle.prepare_plans(&f, d).expect("plannable f");
+        let want = oracle.integrate_prepared(&x, &oplans).expect("rebuilt integrate");
+        assert!(got == want, "k={k}: replanned handle must match a from-scratch rebuild");
+
+        let visits_before = tfi.stats().replan_nodes_visited;
+        let mut pass = 0usize;
+        let t_replan = bench(warmup, runs, || {
+            pass += 1;
+            let scale = if pass % 2 == 1 { 1.0 } else { 1.5 };
+            for &(u, v, w) in &picks {
+                tfi.replan_edge_prepared(u, v, w * scale, &mut plans).expect("replan edge");
+            }
+        });
+        let per_replan_visits =
+            (tfi.stats().replan_nodes_visited - visits_before) / ((warmup + runs) * k);
+        // Leave the shared tree mirror in sync with the final timed pass.
+        let final_scale = if (warmup + runs) % 2 == 1 { 1.0 } else { 1.5 };
+        for &(u, v, w) in &picks {
+            assert!(tree.set_edge_weight(u, v, w * final_scale).is_some());
+        }
+        let t_full = bench(warmup, runs, || {
+            let t = TreeFieldIntegrator::builder(&tree)
+                .threads(1)
+                .build()
+                .expect("valid tree");
+            t.prepare_plans(&f, d).expect("plannable f");
+        });
+        let speedup = t_full.median / t_replan.median.max(1e-12);
+        table.row(&[
+            k.to_string(),
+            format!("{:.3}", t_replan.median * 1e3),
+            format!("{:.3}", t_full.median * 1e3),
+            format!("{speedup:.2}x"),
+            per_replan_visits.to_string(),
+        ]);
+        json_rows.push(format!(
+            "    {{\"k\": {k}, \"replan_s\": {:.6}, \"rebuild_s\": {:.6}, \
+             \"speedup\": {speedup:.3}, \"nodes_visited\": {per_replan_visits}}}",
+            t_replan.median, t_full.median
+        ));
+    }
+    let mut json = String::from("{\n  \"bench\": \"replan_scaling\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n}, \"channels\": {d}, \"threads\": 1, \"quick\": {quick},\n"
+    ));
+    json.push_str("  \"rebuild_bit_identity_asserted\": true,\n  \"results\": [\n");
+    json.push_str(&json_rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    std::fs::write("BENCH_replan.json", &json).expect("write BENCH_replan.json");
+    println!("wrote BENCH_replan.json (rebuild bit-identity asserted before timing)");
+}
+
 /// Tentpole bench (PR 7): lane-structured inner kernels + the f32
 /// serving tier. Times the chunked lane kernels (`linalg::lanes` — the
 /// default path of every prepared inner loop since this PR) against
@@ -797,6 +905,7 @@ fn main() {
         ensemble_scaling(true);
         hotpath_alloc(true);
         delta_scaling(true);
+        replan_scaling(true);
         simd_scaling(true);
         return;
     }
@@ -806,6 +915,7 @@ fn main() {
     ensemble_scaling(false);
     hotpath_alloc(false);
     delta_scaling(false);
+    replan_scaling(false);
     simd_scaling(false);
     strategy_crossover();
     rff_sweep();

@@ -33,8 +33,9 @@
 use super::batcher::BatchExecutor;
 use super::metrics::{MetricsRegistry, MetricsSnapshot};
 use crate::ftfi::functions::FDist;
-use crate::ftfi::streaming::StreamingIntegrator;
+use crate::ftfi::streaming::{SharedPlans, StreamingIntegrator};
 use crate::ftfi::{FieldIntegrator, FtfiError, TreeFieldIntegrator};
+use crate::linalg::lanes::Precision;
 use crate::linalg::matrix::Matrix;
 use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
 // Session locks come from the crate-wide sync shim so loom can model the
@@ -179,6 +180,9 @@ impl BatchExecutor for PreparedFieldExecutor {
 pub const STREAM_OP_SET: f32 = 0.0;
 /// Opcode of a streaming request (`input[0]`): sparse row update.
 pub const STREAM_OP_UPDATE: f32 = 1.0;
+/// Opcode of a streaming request (`input[0]`): reweight one tree edge
+/// of the shared metric (every session sees the change).
+pub const STREAM_OP_REPLAN: f32 = 2.0;
 
 /// Parse a non-negative integral f32 below `limit` (session ids, row
 /// counts and row indices on the f32 wire; integers are exact in f32 up
@@ -198,19 +202,32 @@ fn parse_index(v: f32, limit: usize, what: &str) -> Result<usize, String> {
 /// ```text
 /// set:    [0.0, session, field…]            field = n·d values, d = len/n
 /// update: [1.0, session, k, row…, values…]  k rows then k·d values
+/// replan: [2.0, session, u, v, w]           reweight tree edge {u, v}
 /// ```
 ///
-/// Both return the session's full `n·d` output. Updates run the sparse
-/// delta fast path with the session's `refresh_every` drift policy; a
-/// malformed request (unknown opcode/session, bad row, shape mismatch)
-/// fails alone — the session keeps its state and its batch-mates their
+/// All three return the session's full `n·d` output. Updates run the
+/// sparse delta fast path with the session's `refresh_every` drift
+/// policy; replans reweight one edge of the *shared* metric in place
+/// (the O(log n) in-place re-plan, see DESIGN.md "Dynamic graphs & edge
+/// re-plans") — the issuing session's output is refreshed eagerly and
+/// returned, sibling sessions refresh lazily on their next request. A
+/// malformed request (unknown opcode/session, bad row, non-tree edge,
+/// bad weight, shape mismatch) fails alone — the session keeps its
+/// state, the shared plans stay untouched, and batch-mates keep their
 /// responses. Sessions are `Mutex`-guarded, so concurrent batch fan-out
 /// over *different* sessions parallelises while same-session updates
 /// serialise (arrival order within one fused batch is unspecified —
 /// clients that need ordering submit one in-flight update per session).
+/// Lock ordering: the session mutex is always taken before the shared
+/// plan lock (never the reverse), so update/replan interleavings cannot
+/// deadlock.
 pub struct StreamingFieldExecutor {
-    tfi: Arc<TreeFieldIntegrator>,
-    plans: Arc<PreparedPlans>,
+    shared: Arc<SharedPlans>,
+    /// Cached from the integrator at construction (the integrator now
+    /// lives inside the plan cell; these never change afterwards).
+    n: usize,
+    precision: Precision,
+    pool: Arc<WorkPool>,
     refresh_every: usize,
     max_batch: usize,
     sessions: Vec<Mutex<Option<StreamingIntegrator>>>,
@@ -229,11 +246,16 @@ impl StreamingFieldExecutor {
         max_sessions: usize,
         max_batch: usize,
     ) -> Result<Self, FtfiError> {
-        let plans = Arc::new(tfi.prepare_plans(f, channels)?);
+        let plans = tfi.prepare_plans(f, channels)?;
+        let n = tfi.n();
+        let precision = plans.precision();
+        let pool = Arc::clone(tfi.pool());
         let sessions = (0..max_sessions.max(1)).map(|_| Mutex::new(None)).collect();
         Ok(StreamingFieldExecutor {
-            tfi: Arc::new(tfi),
-            plans,
+            shared: Arc::new(SharedPlans::new(tfi, plans)),
+            n,
+            precision,
+            pool,
             refresh_every,
             max_batch: max_batch.max(1),
             sessions,
@@ -243,7 +265,7 @@ impl StreamingFieldExecutor {
 
     /// Number of vertices a session field must cover.
     pub fn n(&self) -> usize {
-        self.tfi.n()
+        self.n
     }
 
     /// Session slots.
@@ -254,8 +276,8 @@ impl StreamingFieldExecutor {
     /// The serving tier inherited from the integrator at plan-freeze
     /// time (`TreeFieldIntegratorBuilder::precision`): every session's
     /// full integrations, delta updates and refreshes run this tier.
-    pub fn precision(&self) -> crate::linalg::lanes::Precision {
-        self.plans.precision()
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Update-latency percentiles and counters (the streaming SLO);
@@ -282,25 +304,23 @@ impl StreamingFieldExecutor {
             let out = self.run_update(sid, &input[2..])?;
             self.metrics.record_update_latency(t0.elapsed().as_secs_f64());
             Ok(out)
+        } else if input[0] == STREAM_OP_REPLAN {
+            self.run_replan(sid, &input[2..])
         } else {
-            Err(format!("unknown streaming opcode {} (0 = set, 1 = update)", input[0]))
+            Err(format!("unknown streaming opcode {} (0 = set, 1 = update, 2 = replan)", input[0]))
         }
     }
 
     fn run_set(&self, sid: usize, payload: &[f32]) -> Result<Vec<f32>, String> {
-        let n = self.tfi.n();
+        let n = self.n;
         if n == 0 || payload.is_empty() || payload.len() % n != 0 {
             return Err(FtfiError::ShapeMismatch { expected: n, got: payload.len() }.to_string());
         }
         let d = payload.len() / n;
         let field = Matrix::from_vec(n, d, payload.iter().map(|&v| v as f64).collect());
-        let session = StreamingIntegrator::new(
-            Arc::clone(&self.tfi),
-            Arc::clone(&self.plans),
-            field,
-            self.refresh_every,
-        )
-        .map_err(|e| e.to_string())?;
+        let session =
+            StreamingIntegrator::new(Arc::clone(&self.shared), field, self.refresh_every)
+                .map_err(|e| e.to_string())?;
         let out = session.output().data().iter().map(|&v| v as f32).collect();
         // A poisoned slot means another request panicked mid-session;
         // fail this request instead of cascading the panic.
@@ -311,8 +331,29 @@ impl StreamingFieldExecutor {
         Ok(out)
     }
 
+    /// `[u, v, w]` payload: reweight the tree edge `{u, v}` to `w`.
+    /// The session mutex is taken *before* the shared plan lock (the
+    /// crate-wide lock order); validation failures surface as this
+    /// request's error with the plans and every session untouched.
+    fn run_replan(&self, sid: usize, payload: &[f32]) -> Result<Vec<f32>, String> {
+        if payload.len() != 3 {
+            return Err(format!("replan needs [u, v, w], got {} values", payload.len()));
+        }
+        let u = parse_index(payload[0], self.n, "vertex")?;
+        let v = parse_index(payload[1], self.n, "vertex")?;
+        let w = payload[2] as f64;
+        let mut guard = self.sessions[sid]
+            .lock()
+            .map_err(|_| format!("session {sid} poisoned by an earlier panic"))?;
+        let session = guard
+            .as_mut()
+            .ok_or_else(|| format!("session {sid} not initialised (send a set request first)"))?;
+        session.update_edge(u, v, w).map_err(|e| e.to_string())?;
+        Ok(session.output().data().iter().map(|&v| v as f32).collect())
+    }
+
     fn run_update(&self, sid: usize, payload: &[f32]) -> Result<Vec<f32>, String> {
-        let n = self.tfi.n();
+        let n = self.n;
         if payload.is_empty() {
             return Err("update needs [k, rows…, values…]".to_string());
         }
@@ -354,10 +395,10 @@ impl BatchExecutor for StreamingFieldExecutor {
     /// pool; per-session mutexes serialise same-session updates while
     /// distinct sessions proceed in parallel.
     fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
-        if self.tfi.n() < PAR_MAP_MIN_N {
+        if self.n < PAR_MAP_MIN_N {
             return inputs.iter().map(|input| self.run_one(input)).collect();
         }
-        self.tfi.pool().map(inputs, |_, input| self.run_one(input))
+        self.pool.map(inputs, |_, input| self.run_one(input))
     }
 }
 
@@ -567,12 +608,16 @@ mod tests {
         let base = exec.run_one(&set_req(0, &field)).unwrap();
         let bad_cases: Vec<Vec<f32>> = vec![
             vec![], // no header
-            vec![2.0, 0.0, 1.0], // unknown opcode
+            vec![3.0, 0.0, 1.0], // unknown opcode
             vec![STREAM_OP_UPDATE, 9.0, 0.0], // unknown session
             update_req(1, &[], &[]), // session never set
             update_req(0, &[24], &[1.0]), // row out of range
             update_req(0, &[0, 1], &[1.0]), // missing values
             vec![STREAM_OP_UPDATE, 0.0, 2.5, 1.0], // fractional row count
+            vec![STREAM_OP_REPLAN, 0.0, 0.0, 1.0], // truncated replan (needs u, v, w)
+            vec![STREAM_OP_REPLAN, 0.0, 99.0, 0.0, 1.0], // replan vertex out of range
+            vec![STREAM_OP_REPLAN, 0.0, 0.0, 1.0, f32::NAN], // replan weight not finite
+            vec![STREAM_OP_REPLAN, 1.0, 0.0, 1.0, 2.0], // replan on a never-set session
         ];
         let good = update_req(0, &[2], &[5.0]);
         let mut batch = bad_cases.clone();
@@ -589,6 +634,38 @@ mod tests {
         assert_eq!(base, fresh_base);
         let want = fresh.run_one(&good).unwrap();
         assert_eq!(*ok, want, "failed requests must not have poisoned the session");
+    }
+
+    /// A replan request reweights the shared metric in place; the
+    /// response must be **bit-identical** to a fresh executor built
+    /// over the already-mutated tree (the in-place re-plan's rebuild
+    /// equivalence, end to end through the wire protocol).
+    #[test]
+    fn streaming_replan_requests_reweight_the_shared_metric() {
+        let n = 28;
+        let mut rng = Pcg::seed(14);
+        let tree = generators::random_tree(n, 0.2, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().unwrap();
+        let exec = StreamingFieldExecutor::new(tfi, &f, 1, 0, 2, 8).unwrap();
+        let field: Vec<f32> = (0..n).map(|i| (i as f32 * 0.2).cos()).collect();
+        let base = exec.run_one(&set_req(0, &field)).unwrap();
+        let (eu, ev, ew) = tree.edges()[3];
+        let w = (ew * 4.0) as f32;
+        let got =
+            exec.run_one(&[STREAM_OP_REPLAN, 0.0, eu as f32, ev as f32, w].to_vec()).unwrap();
+        assert_ne!(got, base, "reweighting an edge must move the output");
+        // Replaying the same weight is a no-op returning the same output.
+        let again =
+            exec.run_one(&[STREAM_OP_REPLAN, 0.0, eu as f32, ev as f32, w].to_vec()).unwrap();
+        assert_eq!(got, again, "same-weight replan must be a no-op");
+        // Oracle: a fresh executor over the mutated tree.
+        let mut mt = tree.clone();
+        assert!(mt.set_edge_weight(eu as usize, ev as usize, w as f64).is_some());
+        let tfi2 = TreeFieldIntegrator::builder(&mt).threads(1).build().unwrap();
+        let exec2 = StreamingFieldExecutor::new(tfi2, &f, 1, 0, 2, 8).unwrap();
+        let want = exec2.run_one(&set_req(0, &field)).unwrap();
+        assert_eq!(got, want, "post-replan output must match a rebuilt executor bit-for-bit");
     }
 
     /// End-to-end through the InferenceServer: streaming workers share

@@ -47,8 +47,9 @@ pub mod vandermonde;
 
 pub use ensemble::{EnsembleFieldIntegrator, EnsembleMethod, PreparedEnsembleIntegrator};
 pub use error::FtfiError;
-pub use streaming::StreamingIntegrator;
+pub use streaming::{SharedPlans, StreamingIntegrator};
 pub use crate::linalg::lanes::Precision;
+pub use crate::tree::integrator_tree::ReplanStats;
 
 use crate::ftfi::cordial::CrossPolicy;
 use crate::ftfi::functions::FDist;
@@ -341,6 +342,36 @@ impl TreeFieldIntegrator {
         out: &mut Matrix,
     ) -> Result<(), FtfiError> {
         self.it.integrate_delta_prepared_into_pooled(rows, dx, plans, &self.pool, out)
+    }
+
+    /// Reweight one existing tree edge in place (§ "Dynamic graphs &
+    /// edge re-plans" in DESIGN.md): only the O(log n) separator nodes
+    /// whose pivot-distance tables see the edge are recomputed; slot
+    /// layout, vertex→slot maps and workspace sizing survive untouched.
+    /// Outstanding [`PreparedPlans`] handles are invalidated (their next
+    /// use returns a typed staleness error) — use
+    /// [`TreeFieldIntegrator::replan_edge_prepared`] to patch a handle
+    /// in lockstep instead. Validation failures (out-of-range vertex,
+    /// non-tree edge, non-finite/non-positive weight) return
+    /// [`FtfiError::InvalidInput`] and leave everything untouched;
+    /// reassigning the current weight is a no-op.
+    pub fn replan_edge(&mut self, u: usize, v: usize, w: f64) -> Result<ReplanStats, FtfiError> {
+        self.it.replan_edge(u, v, w)
+    }
+
+    /// [`TreeFieldIntegrator::replan_edge`] that also rebuilds exactly
+    /// the affected per-node plans inside `plans`, keeping the handle
+    /// valid across the replan (two-phase: a planning failure leaves
+    /// both the tree and the handle untouched). The handle must have
+    /// been built by this integrator and be current.
+    pub fn replan_edge_prepared(
+        &mut self,
+        u: usize,
+        v: usize,
+        w: f64,
+        plans: &mut PreparedPlans,
+    ) -> Result<ReplanStats, FtfiError> {
+        plans.replan_edge(&mut self.it, u, v, w)
     }
 
     /// The pre-workspace prepared execution path (gathers and allocates

@@ -25,18 +25,86 @@
 use crate::ftfi::error::FtfiError;
 use crate::ftfi::TreeFieldIntegrator;
 use crate::linalg::matrix::Matrix;
-use crate::tree::integrator_tree::{ItStats, PreparedPlans};
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::RwLock;
+use crate::tree::integrator_tree::{ItStats, PreparedPlans, ReplanStats};
 use std::sync::Arc;
+
+/// One `(integrator, plans)` pair shared — read-mostly — by every
+/// streaming session riding the same tree. Integrations take the read
+/// lock; an edge re-plan takes the write lock, patches the tree and the
+/// plans in lockstep ([`TreeFieldIntegrator::replan_edge_prepared`],
+/// so the handle never goes stale relative to its tree) and bumps a
+/// generation counter sessions use to notice that their *cached output*
+/// no longer reflects the current edge weights.
+///
+/// Lock ordering (shared with the coordinator): a session mutex is
+/// always acquired **before** this lock, and this lock is never held
+/// while acquiring a session mutex.
+pub struct SharedPlans {
+    cell: RwLock<(TreeFieldIntegrator, PreparedPlans)>,
+    epoch: AtomicU64,
+}
+
+impl SharedPlans {
+    /// Wrap an integrator and the plans it prepared.
+    pub fn new(tfi: TreeFieldIntegrator, plans: PreparedPlans) -> Self {
+        SharedPlans { cell: RwLock::new((tfi, plans)), epoch: AtomicU64::new(0) }
+    }
+
+    /// Generation counter: bumped once per weight-changing re-plan
+    /// (validation failures and same-weight no-ops leave it unmoved).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Run `f` against the current integrator/plans pair under the read
+    /// lock. Errors only when the lock is poisoned (a panic mid-replan).
+    pub fn with<R>(
+        &self,
+        f: impl FnOnce(&TreeFieldIntegrator, &PreparedPlans) -> R,
+    ) -> Result<R, FtfiError> {
+        let guard = self.cell.read().map_err(|_| poisoned())?;
+        let (tfi, plans) = &*guard;
+        Ok(f(tfi, plans))
+    }
+
+    /// Reweight one existing tree edge under the write lock, rebuilding
+    /// exactly the affected per-node plans (two-phase: a validation or
+    /// planning failure leaves both halves untouched and the epoch
+    /// unmoved).
+    pub fn replan_edge(&self, u: usize, v: usize, w: f64) -> Result<ReplanStats, FtfiError> {
+        let mut guard = self.cell.write().map_err(|_| poisoned())?;
+        let (tfi, plans) = &mut *guard;
+        let st = tfi.replan_edge_prepared(u, v, w, plans)?;
+        if st.changed {
+            // Published while the write lock is still held, so a reader
+            // holding the read lock always sees an epoch consistent
+            // with the pair it observes.
+            self.epoch.fetch_add(1, Ordering::Release);
+        }
+        Ok(st)
+    }
+}
+
+fn poisoned() -> FtfiError {
+    FtfiError::InvalidInput("shared plan cell poisoned by a panicked re-plan".to_string())
+}
 
 /// A streaming session over one `(tree, f)` pair: owns the current
 /// field and the cached output, applies sparse row updates through the
 /// delta fast path, and refreshes bit-exactly every `refresh_every`
-/// updates. Shares its integrator and prepared plans via `Arc`, so many
-/// sessions (the serving executor's `max_sessions`) ride one tree, one
-/// plan set and one work pool.
+/// updates. Shares its integrator and prepared plans through a
+/// [`SharedPlans`] cell, so many sessions (the serving executor's
+/// `max_sessions`) ride one tree, one plan set and one work pool — and
+/// all of them observe an edge re-plan issued through any one of them.
 pub struct StreamingIntegrator {
-    tfi: Arc<TreeFieldIntegrator>,
-    plans: Arc<PreparedPlans>,
+    shared: Arc<SharedPlans>,
+    /// The [`SharedPlans::epoch`] the cached output was computed under;
+    /// when the cell has moved past it (an edge re-plan elsewhere), the
+    /// next update recomputes the output bit-exactly instead of
+    /// applying a delta against weights that no longer exist.
+    plan_epoch: u64,
     /// Current field (`n×d`); row assignments are exact, so this always
     /// equals the field a rebuild-from-scratch oracle would hold.
     field: Matrix,
@@ -60,16 +128,15 @@ pub struct StreamingIntegrator {
 }
 
 impl StreamingIntegrator {
-    /// Open a session: validates the initial field against the
+    /// Open a session: validates the initial field against the shared
     /// integrator/plans pair and pays one full integration to seed the
     /// cached output.
     pub fn new(
-        tfi: Arc<TreeFieldIntegrator>,
-        plans: Arc<PreparedPlans>,
+        shared: Arc<SharedPlans>,
         field: Matrix,
         refresh_every: usize,
     ) -> Result<Self, FtfiError> {
-        let n = tfi.n();
+        let n = shared.with(|tfi, _| tfi.n())?;
         if field.rows() != n {
             return Err(FtfiError::ShapeMismatch { expected: n, got: field.rows() });
         }
@@ -80,10 +147,13 @@ impl StreamingIntegrator {
         }
         let d = field.cols();
         let mut out = Matrix::zeros(n, d);
-        tfi.integrate_prepared_into(&field, &plans, &mut out)?;
+        let plan_epoch = shared
+            .with(|tfi, plans| {
+                tfi.integrate_prepared_into(&field, plans, &mut out).map(|_| shared.epoch())
+            })??;
         Ok(StreamingIntegrator {
-            tfi,
-            plans,
+            shared,
+            plan_epoch,
             field,
             out,
             dx: Matrix::zeros(n, d),
@@ -150,28 +220,74 @@ impl StreamingIntegrator {
         }
         self.updates += 1;
         self.since_refresh += 1;
-        if self.refresh_every > 0 && self.since_refresh >= self.refresh_every {
-            self.refresh()?;
-        } else if !self.dirty.is_empty() {
-            self.tfi.integrate_delta_prepared_into(
-                &self.dirty,
-                &self.dx,
-                &self.plans,
-                &mut self.dout,
-            )?;
-            self.out.axpy(1.0, &self.dout);
+        let shared = Arc::clone(&self.shared);
+        let cadence = self.refresh_every > 0 && self.since_refresh >= self.refresh_every;
+        let mut refreshed = false;
+        shared.with(|tfi, plans| {
+            // Read under the read lock: the epoch cannot move while a
+            // re-plan is excluded, so it is consistent with `plans`.
+            let cur = shared.epoch();
+            if cur != self.plan_epoch || cadence {
+                // The plans moved under us (an edge re-plan through a
+                // sibling session) or the drift cadence fired: either
+                // way the cached output is recomputed bit-exactly from
+                // the current field.
+                tfi.integrate_prepared_into(&self.field, plans, &mut self.out)?;
+                self.plan_epoch = cur;
+                refreshed = true;
+            } else if !self.dirty.is_empty() {
+                tfi.integrate_delta_prepared_into(
+                    &self.dirty,
+                    &self.dx,
+                    plans,
+                    &mut self.dout,
+                )?;
+                self.out.axpy(1.0, &self.dout);
+            }
+            Ok::<(), FtfiError>(())
+        })??;
+        if refreshed {
+            self.since_refresh = 0;
+            self.refreshes += 1;
         }
         Ok(&self.out)
     }
 
     /// Force a full bit-exact re-integration of the current field (the
     /// drift policy calls this automatically every `refresh_every`
-    /// updates).
+    /// updates, and any update after an edge re-plan triggers it).
     pub fn refresh(&mut self) -> Result<&Matrix, FtfiError> {
-        self.tfi.integrate_prepared_into(&self.field, &self.plans, &mut self.out)?;
+        let shared = Arc::clone(&self.shared);
+        shared.with(|tfi, plans| {
+            self.plan_epoch = shared.epoch();
+            tfi.integrate_prepared_into(&self.field, plans, &mut self.out)
+        })??;
         self.since_refresh = 0;
         self.refreshes += 1;
         Ok(&self.out)
+    }
+
+    /// Reweight one tree edge of the shared metric (delegates to
+    /// [`SharedPlans::replan_edge`] — every session on this plan set
+    /// sees the change). When the weight actually changes, this
+    /// session's cached output is invalidated and refreshed bit-exactly
+    /// right here (counting toward [`StreamingIntegrator::refreshes`]);
+    /// sibling sessions refresh lazily on their next update. A rejected
+    /// replan (out-of-range vertex, non-tree edge, bad weight) returns
+    /// [`FtfiError::InvalidInput`] and leaves the plans, the tree and
+    /// this session untouched; reassigning the current weight is a
+    /// no-op.
+    pub fn update_edge(&mut self, u: usize, v: usize, w: f64) -> Result<ReplanStats, FtfiError> {
+        let st = self.shared.replan_edge(u, v, w)?;
+        if st.changed {
+            self.refresh()?;
+        }
+        Ok(st)
+    }
+
+    /// The shared integrator/plans cell this session rides.
+    pub fn shared(&self) -> &Arc<SharedPlans> {
+        &self.shared
     }
 
     /// The cached output (`integrate(field)` up to the bounded drift).
@@ -217,10 +333,12 @@ impl StreamingIntegrator {
     }
 
     /// Integrator statistics with the streaming counters filled in:
-    /// `delta_nodes_visited` from the shared tree (pool-scoped lifetime
-    /// aggregate — compare deltas), `delta_refreshes` from this session.
+    /// `delta_nodes_visited` and the replan counters from the shared
+    /// tree (pool-scoped lifetime aggregates — compare deltas),
+    /// `delta_refreshes` from this session. A poisoned plan cell yields
+    /// zeroed tree counters rather than a panic.
     pub fn stats(&self) -> ItStats {
-        let mut st = self.tfi.stats();
+        let mut st = self.shared.with(|tfi, _| tfi.stats()).unwrap_or_default();
         st.delta_refreshes = self.refreshes;
         st
     }
@@ -245,11 +363,11 @@ mod tests {
         let tree = random_tree(n, 0.1, 1.0, &mut rng);
         let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
         let tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(8).build().unwrap();
-        let tfi = Arc::new(tfi);
-        let plans = Arc::new(tfi.prepare_plans(&f, d).unwrap());
+        let plans = tfi.prepare_plans(&f, d).unwrap();
+        let shared = Arc::new(SharedPlans::new(tfi, plans));
         let brute = BruteForceIntegrator::from_tree(tree);
         let field = Matrix::randn(n, d, &mut rng);
-        let s = StreamingIntegrator::new(tfi, plans, field, refresh_every).unwrap();
+        let s = StreamingIntegrator::new(shared, field, refresh_every).unwrap();
         (s, brute, f)
     }
 
@@ -282,17 +400,18 @@ mod tests {
         let tree = random_tree(150, 0.1, 1.0, &mut rng);
         let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
         let tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(8).build().unwrap();
-        let tfi = Arc::new(tfi);
-        let plans = Arc::new(tfi.prepare_plans(&f, 2).unwrap());
+        let plans = tfi.prepare_plans(&f, 2).unwrap();
+        let shared = Arc::new(SharedPlans::new(tfi, plans));
         let field = Matrix::randn(150, 2, &mut rng);
-        let mut s =
-            StreamingIntegrator::new(Arc::clone(&tfi), Arc::clone(&plans), field, 5).unwrap();
+        let mut s = StreamingIntegrator::new(Arc::clone(&shared), field, 5).unwrap();
         let mut rng = Pcg::seed(4);
         for step in 1..=11 {
             let rows = [rng.below(150) as u32];
             let vals = Matrix::randn(1, 2, &mut rng);
             s.apply_update(&rows, &vals).unwrap();
-            let cold = tfi.integrate_prepared(s.field(), &plans).unwrap();
+            let cold = shared
+                .with(|tfi, plans| tfi.integrate_prepared(s.field(), plans).unwrap())
+                .unwrap();
             if step % 5 == 0 {
                 assert!(
                     *s.output() == cold,
@@ -373,17 +492,104 @@ mod tests {
         let mut rng = Pcg::seed(10);
         let tree = random_tree(20, 0.1, 1.0, &mut rng);
         let f = FDist::Identity;
-        let tfi = Arc::new(TreeFieldIntegrator::builder(&tree).build().unwrap());
-        let plans = Arc::new(tfi.prepare_plans(&f, 1).unwrap());
+        let tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
+        let plans = tfi.prepare_plans(&f, 1).unwrap();
+        let shared = Arc::new(SharedPlans::new(tfi, plans));
         assert!(matches!(
-            StreamingIntegrator::new(
-                Arc::clone(&tfi),
-                Arc::clone(&plans),
-                Matrix::zeros(19, 1),
-                4
-            ),
+            StreamingIntegrator::new(Arc::clone(&shared), Matrix::zeros(19, 1), 4),
             Err(FtfiError::ShapeMismatch { expected: 20, got: 19 })
         ));
-        assert!(StreamingIntegrator::new(tfi, plans, Matrix::zeros(20, 1), 4).is_ok());
+        assert!(StreamingIntegrator::new(shared, Matrix::zeros(20, 1), 4).is_ok());
+    }
+
+    #[test]
+    fn edge_replans_compose_with_field_updates() {
+        let mut rng = Pcg::seed(21);
+        let mut tree = random_tree(90, 0.1, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(8).build().unwrap();
+        let plans = tfi.prepare_plans(&f, 2).unwrap();
+        let shared = Arc::new(SharedPlans::new(tfi, plans));
+        let field = Matrix::randn(90, 2, &mut rng);
+        let mut s = StreamingIntegrator::new(Arc::clone(&shared), field, 6).unwrap();
+        let mut rng = Pcg::seed(22);
+        for step in 0..16 {
+            if step % 3 == 2 {
+                let (eu, ev, ew) = tree.edges()[rng.below(tree.edges().len())];
+                let w = ew * (0.5 + rng.uniform());
+                let st = s.update_edge(eu as usize, ev as usize, w).unwrap();
+                assert!(st.changed && st.nodes_visited >= 1, "step {step}");
+                assert!(tree.set_edge_weight(eu as usize, ev as usize, w).is_some());
+            } else {
+                let rows = [rng.below(90) as u32];
+                let vals = Matrix::randn(1, 2, &mut rng);
+                s.apply_update(&rows, &vals).unwrap();
+            }
+            // Oracle: brute-force on the *mutated* tree and current field.
+            let brute = BruteForceIntegrator::from_tree(tree.clone());
+            let want = brute.integrate(&f, s.field()).unwrap();
+            let rel = s.output().frobenius_diff(&want) / (1.0 + want.frobenius());
+            assert!(rel < 1e-8, "step {step}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn sibling_sessions_observe_a_replan_lazily() {
+        let mut rng = Pcg::seed(23);
+        let mut tree = random_tree(70, 0.1, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(8).build().unwrap();
+        let plans = tfi.prepare_plans(&f, 1).unwrap();
+        let shared = Arc::new(SharedPlans::new(tfi, plans));
+        let fa = Matrix::randn(70, 1, &mut rng);
+        let fb = Matrix::randn(70, 1, &mut rng);
+        let mut a = StreamingIntegrator::new(Arc::clone(&shared), fa, 0).unwrap();
+        let mut b = StreamingIntegrator::new(Arc::clone(&shared), fb, 0).unwrap();
+        let (eu, ev, ew) = tree.edges()[5];
+        a.update_edge(eu as usize, ev as usize, ew * 3.0).unwrap();
+        assert!(tree.set_edge_weight(eu as usize, ev as usize, ew * 3.0).is_some());
+        assert_eq!(a.refreshes(), 1, "the replanning session refreshes eagerly");
+        assert_eq!(b.refreshes(), 0, "siblings have not noticed yet");
+        // B's next update — even an empty one — notices the epoch bump
+        // and recomputes bit-exactly under the new weights.
+        b.apply_update(&[], &Matrix::zeros(0, 1)).unwrap();
+        assert_eq!(b.refreshes(), 1, "stale plans force a full refresh");
+        let brute = BruteForceIntegrator::from_tree(tree);
+        for (s, name) in [(&a, "a"), (&b, "b")] {
+            let want = brute.integrate(&f, s.field()).unwrap();
+            let rel = s.output().frobenius_diff(&want) / (1.0 + want.frobenius());
+            assert!(rel < 1e-8, "session {name}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn malformed_replans_fail_without_touching_plans_or_session() {
+        let (mut s, brute, f) = session(60, 2, 0, 24);
+        let before = s.output().clone();
+        let epoch = s.shared().epoch();
+        // Find a non-tree-adjacent pair for the rejection cases.
+        let n = s.n();
+        for (u, v, w) in [
+            (n, 0, 1.0),                // endpoint out of range
+            (0, n + 7, 1.0),            // endpoint out of range
+            (3, 3, 1.0),                // self-loop is never a tree edge
+            (0, 1, f64::NAN),           // bad weights on whatever (0,1) is
+            (0, 1, f64::INFINITY),
+            (0, 1, -1.0),
+            (0, 1, 0.0),
+        ] {
+            let got = s.update_edge(u, v, w);
+            assert!(
+                matches!(got, Err(FtfiError::InvalidInput(_))),
+                "({u}, {v}, {w}) must be rejected as InvalidInput, got {got:?}"
+            );
+        }
+        assert_eq!(s.shared().epoch(), epoch, "rejected replans must not bump the epoch");
+        assert_eq!(s.refreshes(), 0);
+        assert!(*s.output() == before, "rejected replans must not move the output");
+        // The session still serves updates against the untouched plans.
+        let out = s.apply_update(&[0], &Matrix::from_vec(1, 2, vec![1.0, 2.0])).unwrap().clone();
+        let want = brute.integrate(&f, s.field()).unwrap();
+        assert!(out.frobenius_diff(&want) / (1.0 + want.frobenius()) < 1e-8);
     }
 }

@@ -20,7 +20,10 @@
 //!   `integrate_delta*` family): a k-row field update refreshes the
 //!   cached integral exactly in O(k·polylog(n)·d + n·d) by linearity,
 //!   with a configurable bit-exact full-refresh drift policy — the
-//!   online/interactive serving scenario (`serve --streaming`);
+//!   online/interactive serving scenario (`serve --streaming`) — plus
+//!   O(log n) in-place edge re-plans for dynamic metrics
+//!   ([`ftfi::SharedPlans`], `TreeFieldIntegrator::replan_edge`,
+//!   `integrate --replan-edges`);
 //! - the full cordial-function multiplier suite (outer-product, Hankel/
 //!   FFT, rational multipoint, Cauchy-LDR, Vandermonde) plus the RFF and
 //!   NU-FFT approximate extensions;
@@ -61,7 +64,8 @@ pub mod tree;
 pub use ftfi::functions::FDist;
 pub use ftfi::{
     EnsembleFieldIntegrator, EnsembleMethod, FieldIntegrator, FtfiError, GraphFieldIntegrator,
-    Precision, PreparedIntegrator, StreamingIntegrator, TreeFieldIntegrator,
+    Precision, PreparedIntegrator, ReplanStats, SharedPlans, StreamingIntegrator,
+    TreeFieldIntegrator,
 };
 pub use graph::Graph;
 pub use linalg::matrix::Matrix;

@@ -4,6 +4,7 @@
 //! ftfi integrate  --n 5000 --f exp --repeat 8   FTFI vs brute; prepared-plan reuse
 //! ftfi integrate  --ensemble-trees 8            FRT/Bartal tree-ensemble route
 //! ftfi integrate  --delta-rows 16               sparse-delta vs full re-integration
+//! ftfi integrate  --replan-edges 4              in-place edge re-plan vs full rebuild
 //! ftfi serve      --requests 500 --batch 8      batched field-integration server
 //! ftfi serve      --backend ensemble            serve the tree-ensemble backend
 //! ftfi serve      --streaming --sessions 4      per-session sparse-update serving
@@ -16,7 +17,12 @@
 //! (`--refresh-every R`, `--max-sessions S`) that own a field and its
 //! cached integral and answer k-row updates through the delta fast
 //! path; `integrate --delta-rows k` compares one such update against a
-//! full prepared re-integration.
+//! full prepared re-integration. `integrate --replan-edges k` reweights
+//! `k` tree edges through the in-place O(log n) re-plan
+//! (`TreeFieldIntegrator::replan_edge_prepared`) and compares against a
+//! rebuild-from-scratch + re-prepare; `serve --streaming
+//! --replan-edges r` additionally streams `r` edge replans (wire opcode
+//! 2) through the server.
 //!
 //! `integrate` and `serve` accept `--threads N` (0 = auto: honour
 //! `FTFI_THREADS`, else all cores; 1 = serial) for the parallel
@@ -281,6 +287,91 @@ fn cmd_integrate_delta(args: &Args, k: usize) -> CliResult {
     Ok(())
 }
 
+/// The edge-replan route of `integrate`: reweight `k` tree edges
+/// through the in-place separator-walk re-plan and compare against a
+/// full rebuild-from-scratch + re-prepare — wall clock, nodes visited
+/// per replan, and the rebuild-equivalence drift of the served output.
+fn cmd_integrate_replan(args: &Args, k: usize) -> CliResult {
+    let n = args.get_usize("n", 4000);
+    let d = args.get_usize("channels", 4);
+    let repeat = args.get_usize("repeat", 8).max(1);
+    let f = parse_f(args.get_str("f", "invquad"), args.get_f64("lambda", 0.5))?;
+    let icfg = integrator_config(args)?;
+    let policy = icfg.to_policy()?;
+    let precision = icfg.to_precision()?;
+    let mut rng = Pcg::seed(args.get_usize("seed", 0) as u64);
+    let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
+    let mut tree = try_minimum_spanning_tree(&g)?;
+    let k = k.clamp(1, tree.edges().len());
+    let build = |tree: &ftfi::Tree| {
+        TreeFieldIntegrator::builder(tree)
+            .leaf_threshold(icfg.leaf_threshold)
+            .policy(policy.clone())
+            .threads(icfg.threads)
+            .precision(precision)
+            .build()
+    };
+    let mut tfi = build(&tree)?;
+    let mut plans = tfi.prepare_plans(&f, d)?;
+    let x = Matrix::randn(n, d, &mut rng);
+
+    // k distinct edges to reweight; timed passes flip each between its
+    // original weight and 1.5× (a same-weight replan is a no-op).
+    let picks: Vec<(usize, usize, f64)> = rng
+        .sample_distinct(tree.edges().len(), k)
+        .into_iter()
+        .map(|i| {
+            let (u, v, w) = tree.edges()[i];
+            (u as usize, v as usize, w)
+        })
+        .collect();
+
+    // Equivalence first: one replan pass must serve the same output as
+    // a rebuild-from-scratch on the mutated tree (bit-identical — the
+    // separator hierarchy is weight-independent).
+    for &(u, v, w) in &picks {
+        tfi.replan_edge_prepared(u, v, w * 1.5, &mut plans)?;
+        tree.set_edge_weight(u, v, w * 1.5)
+            .ok_or("edge vanished while replanning")?;
+    }
+    let mut out_replan = Matrix::zeros(n, d);
+    tfi.integrate_prepared_into(&x, &plans, &mut out_replan)?;
+    let rebuilt = build(&tree)?;
+    let rplans = rebuilt.prepare_plans(&f, d)?;
+    let mut out_rebuild = Matrix::zeros(n, d);
+    rebuilt.integrate_prepared_into(&x, &rplans, &mut out_rebuild)?;
+    let drift = out_replan.max_abs_diff(&out_rebuild);
+
+    let visits_before = tfi.stats().replan_nodes_visited;
+    let (_, t_replan) = time_once(|| {
+        for r in 0..repeat {
+            let scale = if r % 2 == 0 { 1.0 } else { 1.5 };
+            for &(u, v, w) in &picks {
+                tfi.replan_edge_prepared(u, v, w * scale, &mut plans).expect("replan edge");
+            }
+        }
+    });
+    let visits = (tfi.stats().replan_nodes_visited - visits_before) / (repeat * k);
+    let (_, t_full) = time_once(|| {
+        for _ in 0..repeat {
+            let t = build(&tree).expect("rebuild integrator");
+            t.prepare_plans(&f, d).expect("re-prepare plans");
+        }
+    });
+    println!(
+        "edge replan: n = {n}, d = {d}, k = {k}, f = {f:?} ({} threads)",
+        tfi.pool().threads()
+    );
+    println!(
+        "replan {:.3} ms/batch vs rebuild+prepare {:.3} ms ({:.1}x), {visits} nodes \
+         visited/replan, rebuild-equivalence max abs diff {drift:.2e}",
+        t_replan / repeat as f64 * 1e3,
+        t_full / repeat as f64 * 1e3,
+        t_full / t_replan.max(1e-12)
+    );
+    Ok(())
+}
+
 fn cmd_integrate(args: &Args) -> CliResult {
     let ecfg = ensemble_config(args)?;
     if ecfg.enabled() {
@@ -289,6 +380,10 @@ fn cmd_integrate(args: &Args) -> CliResult {
     if let Some(k) = args.get("delta-rows") {
         let k: usize = k.parse().map_err(|_| format!("bad --delta-rows {k:?}"))?;
         return cmd_integrate_delta(args, k);
+    }
+    if let Some(k) = args.get("replan-edges") {
+        let k: usize = k.parse().map_err(|_| format!("bad --replan-edges {k:?}"))?;
+        return cmd_integrate_replan(args, k);
     }
     let n = args.get_usize("n", 5000);
     let extra = args.get_usize("extra-edges", n / 2);
@@ -372,13 +467,15 @@ fn cmd_serve(args: &Args) -> CliResult {
 /// (session table, tree, frozen plans, work pool — all global to the
 /// server) behind an `Arc`, every worker dispatching set/update
 /// requests into it. Each simulated client opens a session and then
-/// mutates `--delta-rows` rows per tick.
+/// mutates `--delta-rows` rows per tick; `--replan-edges r` follows up
+/// with `r` in-place edge re-plans of the shared metric (opcode 2).
 fn cmd_serve_streaming(args: &Args) -> CliResult {
     let n = args.get_usize("n", 2000);
     let n_requests = args.get_usize("requests", 200);
     let batch = args.get_usize("batch", 8);
     let workers = args.get_usize("workers", 2);
     let k = args.get_usize("delta-rows", 4).min(n);
+    let replans = args.get_usize("replan-edges", 0);
     let f = parse_f(args.get_str("f", "exp"), args.get_f64("lambda", 0.5))?;
     let icfg = integrator_config(args)?;
     let policy = icfg.to_policy()?;
@@ -447,6 +544,28 @@ fn cmd_serve_streaming(args: &Args) -> CliResult {
         if h.wait().is_ok() {
             ok += 1;
         }
+    }
+    if replans > 0 {
+        // Stream in-place edge re-plans (wire opcode 2) over real tree
+        // edges; alternating scales keep every replan an actual change.
+        println!("submitting {replans} edge replans (op 2)...");
+        let edges = tree.edges().to_vec();
+        let rhandles: Vec<_> = (0..replans)
+            .map(|j| {
+                let (u, v, w) = edges[j % edges.len()];
+                let scale = if (j / edges.len()) % 2 == 0 { 1.5 } else { 1.0 };
+                let req =
+                    vec![2.0f32, (j % sessions) as f32, u as f32, v as f32, (w * scale) as f32];
+                server.submit_blocking(req).unwrap()
+            })
+            .collect();
+        let mut replan_ok = 0;
+        for h in rhandles {
+            if h.wait().is_ok() {
+                replan_ok += 1;
+            }
+        }
+        println!("replans acknowledged: {replan_ok}/{replans}");
     }
     let m = server.metrics();
     let um = exec.metrics();

@@ -35,10 +35,10 @@ pub mod atomic {
 }
 
 #[cfg(not(loom))]
-pub use std::sync::{Mutex, MutexGuard};
+pub use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 #[cfg(loom)]
-pub use loom::sync::{Mutex, MutexGuard};
+pub use loom::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// Scoped/plain threads (`loom::thread` under `cfg(loom)`, with a
 /// hand-rolled `scope` because loom has no structured-spawn API).

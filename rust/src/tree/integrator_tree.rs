@@ -119,8 +119,26 @@ pub struct IntegratorTree {
     pub(crate) nodes: Vec<ItNode>,
     pub(crate) n: usize,
     leaf_threshold: usize,
+    /// The underlying weighted tree (cloned at build). Kept so
+    /// [`IntegratorTree::replan_edge`] can retabulate pivot distances
+    /// after an edge-weight mutation without a caller-held tree handle.
+    tree: Tree,
     /// Unique instance id (see [`IT_IDS`]).
     id: u64,
+    /// Bumped once per committed edge re-plan. [`PreparedPlans`]
+    /// snapshot it at prepare/replan time; a mismatch means a handle's
+    /// tables predate a mutation, and every prepared integrate entry
+    /// point refuses the handle with a typed error.
+    replan_epoch: u64,
+    /// IT nodes visited by replan walks over this tree's lifetime
+    /// (**lifetime aggregate** — compare deltas, not absolutes). A
+    /// single edge re-plan visits only the O(log n) root-to-leaf path
+    /// whose side regions contain the edge.
+    replan_nodes_visited: usize,
+    /// Cross-term plans rebuilt by prepared replans over this tree's
+    /// lifetime (2 per affected internal node per replan; lifetime
+    /// aggregate like `replan_nodes_visited`).
+    replan_plan_rebuilds: usize,
     /// Cross-term plans built over this IT's lifetime (both by the
     /// re-planning `integrate` path — 2 per internal node per call — and
     /// once by `prepare`). Exposed through [`ItStats::plan_builds`]; the
@@ -199,6 +217,47 @@ pub struct ItStats {
     /// Zero at the bare-tree level (trees do not refresh); populated by
     /// `StreamingIntegrator::stats` from its session counter.
     pub delta_refreshes: usize,
+    /// IT nodes visited by [`IntegratorTree::replan_edge`] walks.
+    /// **Lifetime aggregate** — compare deltas, not absolutes. The
+    /// replan harness pins a single replan's delta at O(log n).
+    pub replan_nodes_visited: usize,
+    /// Cross-term plans rebuilt by [`PreparedPlans::replan_edge`]
+    /// (lifetime aggregate, 2 per affected internal node per replan).
+    pub replan_plan_rebuilds: usize,
+}
+
+/// What one [`IntegratorTree::replan_edge`] /
+/// [`PreparedPlans::replan_edge`] call actually did. `Default` is the
+/// no-op result (weight already current: nothing visited, nothing
+/// rebuilt, `changed == false`, no epoch bump).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplanStats {
+    /// False iff the new weight equalled the current one (a no-op).
+    pub changed: bool,
+    /// IT nodes on the walked root-to-leaf invalidation path.
+    pub nodes_visited: usize,
+    /// Side tables (pivot distances + groups) recomputed.
+    pub sides_rebuilt: usize,
+    /// Leaf distance matrices recomputed.
+    pub leaves_rebuilt: usize,
+    /// Cross-term plans rebuilt (0 for the raw tree-level replan; 2 per
+    /// affected internal node for the prepared replan).
+    pub plan_rebuilds: usize,
+}
+
+/// Staged (not yet applied) side/leaf retabulation for one edge
+/// re-plan: everything fallible happens against this buffer, the commit
+/// that installs it is infallible — so a rejected or failing replan
+/// leaves the tree and any plan handle bit-for-bit untouched.
+struct ReplanPatch {
+    /// The tree with the new edge weight already applied.
+    new_tree: Tree,
+    nodes_visited: usize,
+    /// `(node index, is_left, recomputed side)` for every internal node
+    /// on the invalidation path.
+    sides: Vec<(usize, bool, Side)>,
+    /// `(node index, recomputed dmat)` for the terminal leaf.
+    leaves: Vec<(usize, Vec<f64>)>,
 }
 
 /// Everything `f`-dependent, frozen at prepare time: per-internal-node
@@ -311,6 +370,14 @@ pub struct PreparedPlans {
     /// Id of the IntegratorTree instance these plans were built for —
     /// plans are not portable across trees, even same-shape ones.
     tree_id: u64,
+    /// The tree's `replan_epoch` these plans are synchronized with. A
+    /// tree-level `replan_edge` bumps the tree's epoch without touching
+    /// any handle, so stale handles are refused; the prepared
+    /// [`PreparedPlans::replan_edge`] re-synchronizes this handle.
+    tree_epoch: u64,
+    /// Field width the plans were built for (the planning cost model's
+    /// `d`); replan-time plan rebuilds reuse it.
+    channels: usize,
     plans_built: usize,
     sizes: WorkspaceSizes,
     /// Per-call workspaces (stock grows to the peak call concurrency).
@@ -390,6 +457,104 @@ impl PreparedPlans {
     fn return_scratch(&self, s: NodeScratch) {
         self.fork_scratch.put_back(s);
     }
+
+    /// The prepared twin of [`IntegratorTree::replan_edge`]: re-plan the
+    /// tree **and** this handle together, atomically. On top of the
+    /// tree-level side/leaf retabulation it rebuilds only the affected
+    /// nodes' frozen state — both cross plans (Chebyshev re-probe,
+    /// lattice index maps / FFT tables, rational prefix/suffix tables),
+    /// the `f(d)` coefficient tables and the terminal leaf's `f`-matrix
+    /// — then re-synchronizes the handle's epoch, so integrations keep
+    /// flowing with no full re-prepare. Workspace sizes only ratchet up
+    /// (monotone maxima), so warmed workspaces stay valid; a first call
+    /// after a growth may allocate once, after which the zero-alloc
+    /// steady state holds again (pinned by `tests/hotpath_alloc.rs`).
+    ///
+    /// Everything fallible — input validation and every
+    /// [`try_make_plan`] on the new distance tables — runs against
+    /// staging buffers first; only then is the patch committed. A
+    /// returned error therefore leaves both the tree and this handle
+    /// bit-for-bit untouched. A handle that is already stale (the tree
+    /// was re-planned behind its back) or foreign is refused.
+    pub fn replan_edge(
+        &mut self,
+        it: &mut IntegratorTree,
+        u: usize,
+        v: usize,
+        w: f64,
+    ) -> Result<ReplanStats, FtfiError> {
+        if self.tree_id != it.id {
+            return Err(FtfiError::InvalidInput(
+                "prepared plans were built for a different IntegratorTree".to_string(),
+            ));
+        }
+        if self.tree_epoch != it.replan_epoch {
+            return Err(FtfiError::InvalidInput(
+                "prepared plans are stale: the tree was re-planned after they were built"
+                    .to_string(),
+            ));
+        }
+        let patch = match it.stage_replan(u, v, w)? {
+            None => return Ok(ReplanStats::default()),
+            Some(p) => p,
+        };
+        // Stage every affected node's prepared twin before committing
+        // anything: a planning failure (e.g. a forced strategy that is
+        // inapplicable to the new distance tables) must leave the tree
+        // and this handle untouched.
+        let mut staged: Vec<(usize, PreparedNode)> =
+            Vec::with_capacity(patch.sides.len() + patch.leaves.len());
+        let mut built = 0usize;
+        for &(idx, is_left, ref new_side) in &patch.sides {
+            let (left_d, right_d): (&[f64], &[f64]) = match &it.nodes[idx] {
+                ItNode::Internal { left, right, .. } => {
+                    if is_left {
+                        (&new_side.d, &right.d)
+                    } else {
+                        (&left.d, &new_side.d)
+                    }
+                }
+                ItNode::Leaf { .. } => unreachable!("replan staged a side for a leaf node"),
+            };
+            let into_left = try_make_plan(&self.f, left_d, right_d, self.channels, &self.policy)?;
+            let into_right = try_make_plan(&self.f, right_d, left_d, self.channels, &self.policy)?;
+            built += 2;
+            staged.push((
+                idx,
+                PreparedNode::Internal {
+                    into_left,
+                    into_right,
+                    left_fd: left_d.iter().map(|&t| self.f.eval(t)).collect(),
+                    right_fd: right_d.iter().map(|&t| self.f.eval(t)).collect(),
+                },
+            ));
+        }
+        for &(idx, ref dmat) in &patch.leaves {
+            staged.push((
+                idx,
+                PreparedNode::Leaf { fmat: dmat.iter().map(|&t| self.f.eval(t)).collect() },
+            ));
+        }
+        // All fallible work done — commit tree and handle atomically.
+        let mut stats = it.commit_replan(patch);
+        for (idx, node) in staged {
+            if let PreparedNode::Internal { into_left, into_right, .. } = &node {
+                for plan in [into_left, into_right] {
+                    let (fft, cheb, rat) = plan_scratch_demand(plan);
+                    self.sizes.fft_len = self.sizes.fft_len.max(fft);
+                    self.sizes.cheb_rank = self.sizes.cheb_rank.max(cheb);
+                    self.sizes.rat_len = self.sizes.rat_len.max(rat);
+                }
+            }
+            self.nodes[idx] = node;
+        }
+        self.sizes.agg_rows = self.sizes.agg_rows.max(it.agg_rows_max);
+        self.tree_epoch = it.replan_epoch;
+        it.plan_builds.fetch_add(built, Ordering::Relaxed);
+        it.replan_plan_rebuilds += built;
+        stats.plan_rebuilds = built;
+        Ok(stats)
+    }
 }
 
 impl IntegratorTree {
@@ -407,7 +572,11 @@ impl IntegratorTree {
             nodes: Vec::new(),
             n,
             leaf_threshold: t,
+            tree: tree.clone(),
             id: IT_IDS.fetch_add(1, StdOrdering::Relaxed),
+            replan_epoch: 0,
+            replan_nodes_visited: 0,
+            replan_plan_rebuilds: 0,
             plan_builds: AtomicUsize::new(0),
             slot_src: Vec::new(),
             root_slot: Vec::new(),
@@ -761,6 +930,8 @@ impl IntegratorTree {
             nodes,
             n: self.n,
             tree_id: self.id,
+            tree_epoch: self.replan_epoch,
+            channels,
             plans_built: built,
             sizes,
             workspaces: ArenaPool::new(),
@@ -834,6 +1005,13 @@ impl IntegratorTree {
                 "prepared plans were built for a different IntegratorTree".to_string(),
             ));
         }
+        if plans.tree_epoch != self.replan_epoch {
+            // lint: allow(alloc-in-hot-path) — cold validation/error path.
+            return Err(FtfiError::InvalidInput(
+                "prepared plans are stale: the tree was re-planned after they were built"
+                    .to_string(),
+            ));
+        }
         if x.rows() != self.n {
             return Err(FtfiError::ShapeMismatch { expected: self.n, got: x.rows() });
         }
@@ -896,6 +1074,12 @@ impl IntegratorTree {
         if plans.tree_id != self.id {
             return Err(FtfiError::InvalidInput(
                 "prepared plans were built for a different IntegratorTree".to_string(),
+            ));
+        }
+        if plans.tree_epoch != self.replan_epoch {
+            return Err(FtfiError::InvalidInput(
+                "prepared plans are stale: the tree was re-planned after they were built"
+                    .to_string(),
             ));
         }
         if x.rows() != self.n {
@@ -977,6 +1161,13 @@ impl IntegratorTree {
         if plans.tree_id != self.id {
             return Err(FtfiError::InvalidInput(
                 "prepared plans were built for a different IntegratorTree".to_string(),
+            ));
+        }
+        if plans.tree_epoch != self.replan_epoch {
+            // lint: allow(alloc-in-hot-path) — cold validation/error path.
+            return Err(FtfiError::InvalidInput(
+                "prepared plans are stale: the tree was re-planned after they were built"
+                    .to_string(),
             ));
         }
         if dx.rows() != self.n {
@@ -1379,6 +1570,8 @@ impl IntegratorTree {
             nodes: self.nodes.len(),
             plan_builds: self.plan_builds.load(Ordering::Relaxed),
             delta_nodes_visited: self.delta_nodes_visited.load(Ordering::Relaxed),
+            replan_nodes_visited: self.replan_nodes_visited,
+            replan_plan_rebuilds: self.replan_plan_rebuilds,
             workspace_bytes: (2 * self.total_slots + self.agg_rows_max)
                 * std::mem::size_of::<f64>(),
             ..Default::default()
@@ -1407,6 +1600,168 @@ impl IntegratorTree {
                 self.stats_rec(*left_child, depth + 1, st);
                 self.stats_rec(*right_child, depth + 1, st);
             }
+        }
+    }
+
+    /// Re-plan a single edge-weight change **in place**: walk the
+    /// separator hierarchy from the root to the leaf block containing
+    /// the edge and retabulate only the affected nodes' side
+    /// pivot-distance tables (or the terminal leaf's distance matrix).
+    /// The separator hierarchy itself is weight-*independent* (centroids
+    /// and the component grouping use only subtree sizes and adjacency
+    /// order), so pivots, vertex orders and the whole slot layout /
+    /// vertex→slot CSR survive unchanged — the re-planned tree is
+    /// structurally identical to a from-scratch rebuild on the new
+    /// weights, and distinct-distance growth only pushes the monotone
+    /// `agg_rows_max` maximum (no workspace re-warm).
+    ///
+    /// Only one side per internal node can contain the edge (both
+    /// endpoints land in the same component of `S − pivot`, or one
+    /// endpoint *is* the pivot), so the walk is a single O(log n)
+    /// root-to-leaf path; retabulation cost is O(n) total over the
+    /// geometric side sizes, against the full rebuild's O(n log n).
+    ///
+    /// Setting the weight to its current value is a no-op: nothing is
+    /// visited or rebuilt and the replan epoch does not move. Any
+    /// committed change bumps [`Self::stats`]' `replan_epoch`, so
+    /// existing [`PreparedPlans`] handles become stale and are refused;
+    /// use [`PreparedPlans::replan_edge`] to re-plan tree and handle
+    /// together. Invalid input — out-of-range or non-adjacent `(u, v)`,
+    /// non-finite or non-positive `w` — returns a typed
+    /// [`FtfiError::InvalidInput`] and mutates nothing.
+    pub fn replan_edge(&mut self, u: usize, v: usize, w: f64) -> Result<ReplanStats, FtfiError> {
+        match self.stage_replan(u, v, w)? {
+            None => Ok(ReplanStats::default()),
+            Some(patch) => Ok(self.commit_replan(patch)),
+        }
+    }
+
+    /// Validate the mutation and stage the affected side/leaf tables
+    /// against a patch buffer without touching `self`. `Ok(None)` means
+    /// the weight is already current (no-op).
+    fn stage_replan(&self, u: usize, v: usize, w: f64) -> Result<Option<ReplanPatch>, FtfiError> {
+        if u >= self.n || v >= self.n {
+            return Err(FtfiError::InvalidInput(format!(
+                "replan endpoint out of range: edge ({u}, {v}) on a tree with n = {}",
+                self.n
+            )));
+        }
+        if !(w.is_finite() && w > 0.0) {
+            return Err(FtfiError::InvalidInput(format!(
+                "replan weight must be finite and positive, got {w}"
+            )));
+        }
+        let old = self.tree.edge_weight(u, v).ok_or_else(|| {
+            FtfiError::InvalidInput(format!(
+                "({u}, {v}) is not a tree edge — replan_edge only reweights existing edges"
+            ))
+        })?;
+        if w == old {
+            return Ok(None);
+        }
+        let mut new_tree = self.tree.clone();
+        let replaced = new_tree.set_edge_weight(u, v, w);
+        debug_assert_eq!(replaced, Some(old));
+        let mut patch =
+            ReplanPatch { new_tree, nodes_visited: 0, sides: Vec::new(), leaves: Vec::new() };
+        let verts: Vec<u32> = (0..self.n as u32).collect();
+        self.stage_walk(0, verts, u as u32, v as u32, &mut patch);
+        Ok(Some(patch))
+    }
+
+    /// One step of the invalidation walk: node `idx` covers the global
+    /// vertices `verts` (in node-local order) and contains both edge
+    /// endpoints. Stage the affected side (internal) or distance matrix
+    /// (leaf) computed against `patch.new_tree`, then descend into the
+    /// single child whose vertex set still contains the edge.
+    fn stage_walk(&self, idx: usize, verts: Vec<u32>, u: u32, v: u32, patch: &mut ReplanPatch) {
+        patch.nodes_visited += 1;
+        match &self.nodes[idx] {
+            ItNode::Leaf { .. } => {
+                let dmat = leaf_distances(&patch.new_tree, &verts);
+                patch.leaves.push((idx, dmat));
+            }
+            ItNode::Internal { left_child, right_child, left, right, .. } => {
+                let pivot_global = verts[left.ids[left.pivot as usize] as usize];
+                // The non-pivot endpoint decides the side: removing the
+                // pivot splits the node's sub-tree into components that
+                // each lie wholly in one side, and adjacent vertices
+                // share a component — so exactly one side's distance
+                // tables see the new weight.
+                let probe = if u == pivot_global { v } else { u };
+                let in_left = left.ids.iter().any(|&i| verts[i as usize] == probe);
+                let (side, is_left, child) =
+                    if in_left { (left, true, *left_child) } else { (right, false, *right_child) };
+                debug_assert!(
+                    u == pivot_global
+                        || v == pivot_global
+                        || side.ids.iter().any(|&i| verts[i as usize] == v),
+                    "edge endpoints must share a side"
+                );
+                let side_verts: Vec<u32> =
+                    side.ids.iter().map(|&i| verts[i as usize]).collect();
+                let mut node_local = std::collections::BTreeMap::new();
+                for (i, &g) in verts.iter().enumerate() {
+                    node_local.insert(g, i as u32);
+                }
+                let new_side = make_side(&patch.new_tree, &side_verts, pivot_global, &node_local);
+                debug_assert_eq!(
+                    new_side.ids, side.ids,
+                    "a replan must preserve the side's vertex order"
+                );
+                patch.sides.push((idx, is_left, new_side));
+                self.stage_walk(child, side_verts, u, v, patch);
+            }
+        }
+    }
+
+    /// Install a staged patch. Infallible by construction (strong
+    /// exception safety: every fallible step ran during staging).
+    fn commit_replan(&mut self, patch: ReplanPatch) -> ReplanStats {
+        let ReplanPatch { new_tree, nodes_visited, sides, leaves } = patch;
+        self.tree = new_tree;
+        let sides_rebuilt = sides.len();
+        let leaves_rebuilt = leaves.len();
+        let mut affected = Vec::with_capacity(sides.len() + leaves.len());
+        for (idx, is_left, side) in sides {
+            affected.push(idx);
+            match &mut self.nodes[idx] {
+                ItNode::Internal { left, right, .. } => {
+                    if is_left {
+                        *left = side;
+                    } else {
+                        *right = side;
+                    }
+                }
+                ItNode::Leaf { .. } => unreachable!("replan staged a side for a leaf node"),
+            }
+            // Distinct-distance counts may grow (or shrink) with the new
+            // weight; workspace sizing is a monotone maximum, so plan
+            // handles and warmed workspaces never need a re-warm.
+            if let ItNode::Internal { left, right, .. } = &self.nodes[idx] {
+                self.agg_rows_max = self.agg_rows_max.max(2 * (left.d.len() + right.d.len()));
+            }
+        }
+        for (idx, new_dmat) in leaves {
+            affected.push(idx);
+            match &mut self.nodes[idx] {
+                ItNode::Leaf { dmat, .. } => *dmat = new_dmat,
+                ItNode::Internal { .. } => {
+                    unreachable!("replan staged a distance matrix for an internal node")
+                }
+            }
+        }
+        self.replan_epoch += 1;
+        self.replan_nodes_visited += nodes_visited;
+        if invariants::enabled() {
+            invariants::check_replan_seam(self, &affected);
+        }
+        ReplanStats {
+            changed: true,
+            nodes_visited,
+            sides_rebuilt,
+            leaves_rebuilt,
+            plan_rebuilds: 0,
         }
     }
 }
@@ -2160,5 +2515,153 @@ mod tests {
         ));
         // …and the rightful owner still accepts them.
         assert!(ita.integrate_prepared(&x, &plans_a).is_ok());
+    }
+
+    /// Tentpole pin (bit level): the separator hierarchy is
+    /// weight-independent, so a prepared replan must leave the tree +
+    /// handle **bit-identical** to a from-scratch rebuild + re-prepare
+    /// on the mutated tree — for every strategy the default policy
+    /// dispatches to. Also pins the O(log n) walk budget.
+    #[test]
+    fn prepared_replan_is_bit_identical_to_from_scratch_rebuild() {
+        let mut rng = Pcg::seed(40);
+        for &n in &[5usize, 37, 400] {
+            let mut tree = random_tree(n, 0.1, 1.0, &mut rng);
+            let mut it = IntegratorTree::with_leaf_threshold(&tree, 8);
+            let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
+            let policy = CrossPolicy::default();
+            let mut plans = it.prepare(&f, 2, &policy).unwrap();
+            let x = Matrix::randn(n, 2, &mut rng);
+            let budget = 5 * (usize::BITS - (n - 1).leading_zeros()) as usize + 2;
+            for step in 0..4 {
+                let (u, v, w) = tree.edges()[(step * 7 + 3) % (n - 1)];
+                let nw = w * (1.25 + 0.1 * step as f64);
+                tree.set_edge_weight(u as usize, v as usize, nw).unwrap();
+                let st = plans.replan_edge(&mut it, u as usize, v as usize, nw).unwrap();
+                assert!(st.changed, "REPRO seed=40 n={n} step={step}");
+                assert!(
+                    st.nodes_visited <= budget,
+                    "REPRO seed=40 n={n} step={step}: visited {} > budget {budget}",
+                    st.nodes_visited
+                );
+                let got = it.integrate_prepared(&x, &plans).unwrap();
+                let fresh_it = IntegratorTree::with_leaf_threshold(&tree, 8);
+                let fresh_plans = fresh_it.prepare(&f, 2, &policy).unwrap();
+                let want = fresh_it.integrate_prepared(&x, &fresh_plans).unwrap();
+                assert!(
+                    got == want,
+                    "REPRO seed=40 n={n} step={step}: replanned output != rebuilt output"
+                );
+            }
+            let st = it.stats();
+            assert!(st.replan_nodes_visited >= 4, "walks must be counted");
+            assert!(
+                st.replan_nodes_visited <= 4 * budget,
+                "lifetime replan visits {} exceed 4 walks' budget",
+                st.replan_nodes_visited
+            );
+        }
+    }
+
+    #[test]
+    fn replan_to_current_weight_is_a_noop_rebuilding_nothing() {
+        let mut rng = Pcg::seed(41);
+        let tree = random_tree(120, 0.1, 1.0, &mut rng);
+        let mut it = IntegratorTree::with_leaf_threshold(&tree, 8);
+        let f = FDist::inverse_quadratic(0.5);
+        let mut plans = it.prepare(&f, 1, &CrossPolicy::default()).unwrap();
+        let x = Matrix::randn(120, 1, &mut rng);
+        let (u, v, w) = tree.edges()[5];
+        let builds_before = it.stats().plan_builds;
+        let st = plans.replan_edge(&mut it, u as usize, v as usize, w).unwrap();
+        assert!(!st.changed);
+        assert_eq!(st, ReplanStats::default(), "a same-weight replan must do nothing");
+        assert_eq!(it.stats().plan_builds, builds_before);
+        assert_eq!(it.stats().replan_nodes_visited, 0);
+        // No epoch bump: the handle is still accepted (raw level too).
+        assert!(it.integrate_prepared(&x, &plans).is_ok());
+        let st = it.replan_edge(u as usize, v as usize, w).unwrap();
+        assert!(!st.changed);
+        assert!(it.integrate_prepared(&x, &plans).is_ok());
+    }
+
+    /// Satellite fix pin: malformed replans are typed errors, not
+    /// panics, and a rejected replan leaves tree + handle bit-for-bit
+    /// untouched (strong exception safety).
+    #[test]
+    fn replan_validation_is_typed_and_leaves_state_untouched() {
+        let mut rng = Pcg::seed(42);
+        let tree = random_tree(60, 0.1, 1.0, &mut rng);
+        let mut it = IntegratorTree::with_leaf_threshold(&tree, 8);
+        let f = FDist::Exponential { lambda: -0.2, scale: 1.0 };
+        let mut plans = it.prepare(&f, 2, &CrossPolicy::default()).unwrap();
+        let x = Matrix::randn(60, 2, &mut rng);
+        let baseline = it.integrate_prepared(&x, &plans).unwrap();
+        // A non-adjacent pair always exists for n = 60 (max degree < 59).
+        let (na_u, na_v) = (0..60usize)
+            .flat_map(|a| (0..60usize).map(move |b| (a, b)))
+            .find(|&(a, b)| a != b && tree.edge_weight(a, b).is_none())
+            .unwrap();
+        let (eu, ev, _) = tree.edges()[0];
+        let bad: Vec<(usize, usize, f64)> = vec![
+            (60, 0, 1.0),                              // u out of range
+            (0, 77, 1.0),                              // v out of range
+            (3, 3, 1.0),                               // self-loop
+            (na_u, na_v, 1.0),                         // not tree-adjacent
+            (eu as usize, ev as usize, f64::NAN),      // NaN weight
+            (eu as usize, ev as usize, f64::INFINITY), // non-finite weight
+            (eu as usize, ev as usize, -1.0),          // negative weight
+            (eu as usize, ev as usize, 0.0),           // zero weight
+        ];
+        for &(u, v, w) in &bad {
+            assert!(
+                matches!(it.replan_edge(u, v, w), Err(FtfiError::InvalidInput(_))),
+                "raw replan ({u}, {v}, {w}) must be a typed error"
+            );
+            assert!(
+                matches!(plans.replan_edge(&mut it, u, v, w), Err(FtfiError::InvalidInput(_))),
+                "prepared replan ({u}, {v}, {w}) must be a typed error"
+            );
+        }
+        let after = it.integrate_prepared(&x, &plans).unwrap();
+        assert!(after == baseline, "rejected replans must not perturb tree or plans");
+        assert_eq!(it.stats().replan_nodes_visited, 0);
+        assert_eq!(it.stats().replan_plan_rebuilds, 0);
+    }
+
+    /// The replan seam: a tree-level replan bumps the epoch, so every
+    /// prepared surface refuses the now-stale handle instead of reading
+    /// tables that no longer match the tree.
+    #[test]
+    fn raw_replan_invalidates_existing_prepared_handles() {
+        let mut rng = Pcg::seed(43);
+        let tree = random_tree(90, 0.1, 1.0, &mut rng);
+        let mut it = IntegratorTree::with_leaf_threshold(&tree, 8);
+        let f = FDist::Identity;
+        let mut plans = it.prepare(&f, 1, &CrossPolicy::default()).unwrap();
+        let x = Matrix::randn(90, 1, &mut rng);
+        let (u, v, w) = tree.edges()[2];
+        let st = it.replan_edge(u as usize, v as usize, w * 2.0).unwrap();
+        assert!(st.changed && st.plan_rebuilds == 0);
+        assert!(matches!(
+            it.integrate_prepared(&x, &plans),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        assert!(matches!(
+            it.integrate_prepared_legacy(&x, &plans),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        assert!(matches!(
+            it.integrate_delta_prepared(&[0], &x, &plans),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        // A stale handle cannot replan either — only a fresh prepare
+        // resynchronizes.
+        assert!(matches!(
+            plans.replan_edge(&mut it, u as usize, v as usize, w * 3.0),
+            Err(FtfiError::InvalidInput(_))
+        ));
+        let plans2 = it.prepare(&f, 1, &CrossPolicy::default()).unwrap();
+        assert!(it.integrate_prepared(&x, &plans2).is_ok());
     }
 }

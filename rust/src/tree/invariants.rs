@@ -25,7 +25,7 @@
 //! This module is the crate's assertion machinery, so the unchecked-
 //! panic lint exempts it wholesale (see `xtask`).
 
-use super::integrator_tree::{IntegratorTree, ItNode, WorkspaceSizes};
+use super::integrator_tree::{IntegratorTree, ItNode, Side, WorkspaceSizes};
 
 /// Are the invariant audits active in this build/run?
 #[inline]
@@ -164,6 +164,64 @@ pub(crate) fn check_dirty_prefix(prefix: &[u32], updated_rows: usize) {
     );
 }
 
+/// Audit the seam a committed edge re-plan leaves behind: every patched
+/// node's freshly retabulated tables must satisfy the same local
+/// invariants `make_side` / `leaf_distances` guarantee at build time
+/// (sorted distinct distances anchored at the pivot's 0, a consistent
+/// distance-group CSR over the side's vertices, a zero-diagonal
+/// symmetric leaf matrix), and the structural skeleton a replan promises
+/// not to touch — slot layout, CSR, root slots — must still pass the
+/// full build-time audit.
+pub(crate) fn check_replan_seam(it: &IntegratorTree, affected: &[usize]) {
+    for &idx in affected {
+        match &it.nodes[idx] {
+            ItNode::Internal { left, right, .. } => {
+                check_side(idx, left);
+                check_side(idx, right);
+            }
+            ItNode::Leaf { size, dmat } => {
+                assert_eq!(dmat.len(), size * size, "leaf {idx}: dmat shape after replan");
+                for i in 0..*size {
+                    assert_eq!(dmat[i * size + i], 0.0, "leaf {idx}: nonzero diagonal");
+                    for j in 0..*size {
+                        let d = dmat[i * size + j];
+                        assert!(d.is_finite() && d >= 0.0, "leaf {idx}: bad distance {d}");
+                        assert_eq!(d, dmat[j * size + i], "leaf {idx}: asymmetric distances");
+                    }
+                }
+            }
+        }
+    }
+    // A replan only reweights: the slot layout must survive bit-for-bit.
+    check_tree(it);
+}
+
+/// The side-table half of [`check_replan_seam`]: the invariants every
+/// consumer of a [`Side`] assumes.
+fn check_side(idx: usize, side: &Side) {
+    let k = side.ids.len();
+    assert_eq!(side.id_d.len(), k, "node {idx}: id_d must cover the side");
+    assert_eq!(side.group_items.len(), k, "node {idx}: groups must cover the side");
+    assert_eq!(side.group_off.len(), side.d.len() + 1, "node {idx}: CSR offsets vs distances");
+    assert_eq!(side.d.first().copied(), Some(0.0), "node {idx}: d[0] must be the pivot's 0");
+    assert!(
+        side.d.windows(2).all(|w| w[0] < w[1] && w[1].is_finite()),
+        "node {idx}: distances must be finite and strictly increasing"
+    );
+    assert_eq!(
+        side.group_off[1] - side.group_off[0],
+        1,
+        "node {idx}: the pivot group must be a singleton"
+    );
+    assert_eq!(side.group_items[0], side.pivot, "node {idx}: group 0 must hold the pivot");
+    assert_eq!(side.group_off[0], 0, "node {idx}: CSR must start at 0");
+    assert_eq!(*side.group_off.last().unwrap() as usize, k, "node {idx}: CSR must end at k");
+    assert!(
+        side.id_d.iter().all(|&t| (t as usize) < side.d.len()),
+        "node {idx}: id_d points past the distance table"
+    );
+}
+
 /// Audit the workspace sizes frozen at prepare time: the slabs cover
 /// the slot layout, the aggregate arena covers the widest node, and the
 /// cross-multiplier scratch dominates every plan's declared demand
@@ -202,6 +260,29 @@ mod tests {
             let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
             it.prepare(&f, 2, &CrossPolicy::default()).expect("prepare on a valid tree");
         }
+    }
+
+    #[test]
+    fn replan_seam_audit_accepts_replans_and_rejects_corrupt_sides() {
+        let mut rng = Pcg::seed(12);
+        let tree = random_tree(80, 0.2, 1.5, &mut rng);
+        let mut it = IntegratorTree::with_leaf_threshold(&tree, 4);
+        let (u, v, w) = tree.edges()[7];
+        // The commit path runs the seam audit itself in debug builds;
+        // on top of that, the post-replan tree must pass the audit over
+        // EVERY node — replans may not disturb untouched ones either.
+        it.replan_edge(u as usize, v as usize, w * 3.0).expect("valid replan");
+        let all: Vec<usize> = (0..it.nodes.len()).collect();
+        check_replan_seam(&it, &all);
+        // A corrupted side (pivot distance knocked off 0) must trip it.
+        for node in &mut it.nodes {
+            if let ItNode::Internal { left, .. } = node {
+                left.d[0] = 0.5;
+                break;
+            }
+        }
+        let corrupt = std::panic::catch_unwind(|| check_replan_seam(&it, &all));
+        assert!(corrupt.is_err(), "a non-anchored side must fail the seam audit");
     }
 
     #[test]

@@ -67,6 +67,41 @@ impl Tree {
         self.edges.iter().map(|&(_, _, w)| w).sum()
     }
 
+    /// Weight of the tree edge `{u, v}`, or `None` when the vertices are
+    /// not tree-adjacent (or out of range).
+    pub fn edge_weight(&self, u: usize, v: usize) -> Option<f64> {
+        if u >= self.n || v >= self.n {
+            return None;
+        }
+        self.adj[u].iter().find(|&&(x, _)| x as usize == v).map(|&(_, w)| w)
+    }
+
+    /// Reassign the weight of the existing tree edge `{u, v}` (both
+    /// adjacency directions and the edge list). Returns the previous
+    /// weight, or `None` — leaving the tree untouched — when the edge
+    /// does not exist or the new weight is not finite and positive.
+    pub fn set_edge_weight(&mut self, u: usize, v: usize, w: f64) -> Option<f64> {
+        if !(w.is_finite() && w > 0.0) || self.edge_weight(u, v).is_none() {
+            return None;
+        }
+        let mut old = None;
+        for &(a, b) in &[(u, v), (v, u)] {
+            for e in &mut self.adj[a] {
+                if e.0 as usize == b {
+                    old = Some(e.1);
+                    e.1 = w;
+                }
+            }
+        }
+        for e in &mut self.edges {
+            if (e.0 as usize == u && e.1 as usize == v) || (e.0 as usize == v && e.1 as usize == u)
+            {
+                e.2 = w;
+            }
+        }
+        old
+    }
+
     fn is_connected(&self) -> bool {
         if self.n <= 1 {
             return true;
@@ -185,6 +220,25 @@ mod tests {
         let s = t.induced_subtree(&[1, 2, 3]);
         assert_eq!(s.n(), 3);
         assert!((s.distance(0, 2) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edge_weight_lookup_and_reassignment() {
+        let mut t = star();
+        assert_eq!(t.edge_weight(0, 2), Some(2.0));
+        assert_eq!(t.edge_weight(2, 0), Some(2.0));
+        assert_eq!(t.edge_weight(1, 2), None); // not tree-adjacent
+        assert_eq!(t.edge_weight(0, 9), None); // out of range
+        assert_eq!(t.set_edge_weight(2, 0, 5.0), Some(2.0));
+        assert_eq!(t.edge_weight(0, 2), Some(5.0));
+        // Both the adjacency and the edge list see the new weight.
+        assert!((t.distance(1, 2) - 6.0).abs() < 1e-12);
+        assert!(t.edges().iter().any(|&(a, b, w)| a.min(b) == 0 && a.max(b) == 2 && w == 5.0));
+        // Rejected mutations leave the tree untouched.
+        assert_eq!(t.set_edge_weight(1, 2, 1.0), None);
+        assert_eq!(t.set_edge_weight(0, 2, f64::NAN), None);
+        assert_eq!(t.set_edge_weight(0, 2, -1.0), None);
+        assert_eq!(t.edge_weight(0, 2), Some(5.0));
     }
 
     #[test]

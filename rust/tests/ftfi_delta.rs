@@ -28,7 +28,7 @@ use ftfi::graph::generators::{random_rational_tree, random_tree};
 use ftfi::linalg::matrix::Matrix;
 use ftfi::ml::rng::Pcg;
 use ftfi::tree::integrator_tree::PreparedPlans;
-use ftfi::{FieldIntegrator, FtfiError, StreamingIntegrator, TreeFieldIntegrator};
+use ftfi::{FieldIntegrator, FtfiError, SharedPlans, StreamingIntegrator, TreeFieldIntegrator};
 use std::sync::Arc;
 
 /// The size ladder of `tests/ftfi_property.rs`: singleton, single edge,
@@ -238,18 +238,14 @@ fn property_mutation_sequences_track_the_brute_oracle() {
             let tree = random_tree(n, 0.1, 1.0, &mut rng);
             let f = FDist::Exponential { lambda: rng.uniform_in(-0.8, -0.2), scale: 1.0 };
             let builder = TreeFieldIntegrator::builder(&tree).leaf_threshold(8);
-            let tfi = Arc::new(builder.threads(threads).build().unwrap());
-            let plans = Arc::new(tfi.prepare_plans(&f, d).unwrap());
+            let tfi = builder.threads(threads).build().unwrap();
+            let plans = tfi.prepare_plans(&f, d).unwrap();
             let brute = BruteForceIntegrator::from_tree(tree.clone());
             let refresh_every = 1 + rng.below(6);
             let field = Matrix::randn(n, d, &mut rng);
-            let mut session = StreamingIntegrator::new(
-                Arc::clone(&tfi),
-                Arc::clone(&plans),
-                field,
-                refresh_every,
-            )
-            .unwrap();
+            let shared = Arc::new(SharedPlans::new(tfi, plans));
+            let mut session =
+                StreamingIntegrator::new(Arc::clone(&shared), field, refresh_every).unwrap();
             for step in 0..15 {
                 let op = rng.below(8);
                 if op == 0 {
@@ -290,11 +286,10 @@ fn refresh_cadence_restores_bit_exact_state() {
         let tree = random_tree(n, 0.1, 1.0, &mut rng);
         let f = FDist::Exponential { lambda: -0.3, scale: 1.0 };
         let tfi = TreeFieldIntegrator::builder(&tree).threads(threads).build().unwrap();
-        let tfi = Arc::new(tfi);
-        let plans = Arc::new(tfi.prepare_plans(&f, 2).unwrap());
+        let plans = tfi.prepare_plans(&f, 2).unwrap();
+        let shared = Arc::new(SharedPlans::new(tfi, plans));
         let field = Matrix::randn(n, 2, &mut rng);
-        let mut session =
-            StreamingIntegrator::new(Arc::clone(&tfi), Arc::clone(&plans), field, r).unwrap();
+        let mut session = StreamingIntegrator::new(Arc::clone(&shared), field, r).unwrap();
         for round in 1..=3 {
             for _ in 0..r - 1 {
                 let (rows, _) = random_delta(n, 2, 1 + rng.below(4), &mut rng);
@@ -305,12 +300,70 @@ fn refresh_cadence_restores_bit_exact_state() {
             let (rows, _) = random_delta(n, 2, 1, &mut rng);
             let vals = Matrix::randn(1, 2, &mut rng);
             session.apply_update(&rows, &vals).unwrap();
-            let cold = tfi.integrate_prepared(session.field(), &plans).unwrap();
+            let cold = shared
+                .with(|tfi, plans| tfi.integrate_prepared(session.field(), plans))
+                .unwrap()
+                .unwrap();
             assert!(
                 *session.output() == cold,
                 "REPRO seed={seed} round={round}: post-refresh state must be bit-identical"
             );
             assert_eq!(session.stats().delta_refreshes, round);
+        }
+    }
+}
+
+/// Interleaved field deltas × edge re-plans: a session whose metric
+/// AND field both mutate (every third step reweights a tree edge
+/// through [`StreamingIntegrator::update_edge`], the rest apply sparse
+/// row updates) tracks a rebuild-from-scratch [`BruteForceIntegrator`]
+/// oracle on the *current* tree and field at every step, for
+/// threads ∈ {1, 4}.
+#[test]
+fn property_interleaved_deltas_and_replans_track_the_brute_oracle() {
+    // n = 1 has no edges to re-plan; the rest of the ladder applies.
+    for &n in &[2usize, 17, 64, 257] {
+        for &threads in &[1usize, 4] {
+            let seed = 900_000 + (n as u64) * 10 + threads as u64;
+            let mut rng = Pcg::seed(seed);
+            let d = 1 + rng.below(2);
+            let tree = random_tree(n, 0.1, 1.0, &mut rng);
+            let f = FDist::Exponential { lambda: rng.uniform_in(-0.8, -0.2), scale: 1.0 };
+            let tfi = TreeFieldIntegrator::builder(&tree)
+                .leaf_threshold(8)
+                .threads(threads)
+                .build()
+                .unwrap();
+            let plans = tfi.prepare_plans(&f, d).unwrap();
+            let shared = Arc::new(SharedPlans::new(tfi, plans));
+            let field = Matrix::randn(n, d, &mut rng);
+            let mut session = StreamingIntegrator::new(Arc::clone(&shared), field, 4).unwrap();
+            let mut cur = tree.clone();
+            for step in 0..12 {
+                if step % 3 == 2 {
+                    let (eu, ev, old) = cur.edges()[rng.below(cur.edges().len())];
+                    let (u, v) = (eu as usize, ev as usize);
+                    let w = old * rng.uniform_in(1.1, 1.9);
+                    let st = session.update_edge(u, v, w).unwrap();
+                    assert!(st.changed, "REPRO seed={seed} step={step}: replan must commit");
+                    cur.set_edge_weight(u, v, w).unwrap();
+                } else {
+                    let k = 1 + rng.below(n);
+                    let (rows, _) = random_delta(n, d, k, &mut rng);
+                    let vals = Matrix::randn(rows.len(), d, &mut rng);
+                    session.apply_update(&rows, &vals).unwrap();
+                }
+                // Fresh oracle on the current tree: the metric itself
+                // may have changed since the last step.
+                let brute = BruteForceIntegrator::from_tree(cur.clone());
+                let want = brute.integrate(&f, session.field()).unwrap();
+                let rel = rel_err(session.output(), &want);
+                assert!(
+                    rel < 1e-8,
+                    "REPRO seed={seed} n={n} threads={threads} step={step}: \
+                     interleaved session drifted to rel {rel}"
+                );
+            }
         }
     }
 }

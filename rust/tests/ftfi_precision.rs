@@ -27,8 +27,8 @@ use ftfi::graph::generators::{self, random_rational_tree, random_tree};
 use ftfi::linalg::matrix::Matrix;
 use ftfi::ml::rng::Pcg;
 use ftfi::{
-    EnsembleFieldIntegrator, FtfiError, GraphFieldIntegrator, Precision, StreamingIntegrator,
-    TreeFieldIntegrator,
+    EnsembleFieldIntegrator, FtfiError, GraphFieldIntegrator, Precision, SharedPlans,
+    StreamingIntegrator, TreeFieldIntegrator,
 };
 
 /// One f32 ulp at 1.0, as the f64 the comparisons run in.
@@ -191,20 +191,16 @@ fn streaming_refresh_restores_f64_refresh_state_within_budget() {
     let field = Matrix::randn(n, d, &mut rng);
     let refresh_every = 4;
     let make = |prec: Precision| {
-        let tfi = Arc::new(
-            TreeFieldIntegrator::builder(&tree).threads(1).precision(prec).build().unwrap(),
-        );
-        let plans = Arc::new(tfi.prepare_plans(&f, d).unwrap());
-        (tfi, plans)
+        let tfi = TreeFieldIntegrator::builder(&tree).threads(1).precision(prec).build().unwrap();
+        let plans = tfi.prepare_plans(&f, d).unwrap();
+        Arc::new(SharedPlans::new(tfi, plans))
     };
-    let (tfi64, plans64) = make(Precision::F64);
-    let (tfi32, plans32) = make(Precision::F32);
+    let shared64 = make(Precision::F64);
+    let shared32 = make(Precision::F32);
     let mut s64 =
-        StreamingIntegrator::new(Arc::clone(&tfi64), Arc::clone(&plans64), field.clone(), refresh_every)
-            .unwrap();
+        StreamingIntegrator::new(Arc::clone(&shared64), field.clone(), refresh_every).unwrap();
     let mut s32 =
-        StreamingIntegrator::new(Arc::clone(&tfi32), Arc::clone(&plans32), field.clone(), refresh_every)
-            .unwrap();
+        StreamingIntegrator::new(Arc::clone(&shared32), field.clone(), refresh_every).unwrap();
     for round in 1..=3 {
         for _ in 0..refresh_every {
             let k = 1 + rng.below(8);
@@ -221,7 +217,10 @@ fn streaming_refresh_restores_f64_refresh_state_within_budget() {
             rel < 1024.0 * ULP_F32,
             "round {round}: post-refresh f32 state drifted to rel {rel:.3e} from the f64 tier"
         );
-        let cold = tfi32.integrate_prepared(s32.field(), &plans32).unwrap();
+        let cold = shared32
+            .with(|tfi, plans| tfi.integrate_prepared(s32.field(), plans))
+            .unwrap()
+            .unwrap();
         assert!(
             *s32.output() == cold,
             "round {round}: f32-tier refresh must be bit-exact within its own tier"

@@ -1,0 +1,575 @@
+//! Replan / rebuild equivalence harness for the dynamic-metric edge
+//! re-plan subsystem (`TreeFieldIntegrator::replan_edge` and its
+//! prepared twin `replan_edge_prepared`, plus the shared streaming
+//! surface `StreamingIntegrator::update_edge`).
+//!
+//! The separator hierarchy is weight-*independent* (centroids and the
+//! component grouping use only subtree sizes and adjacency order), so
+//! an in-place re-plan yields a tree and plan handle structurally
+//! identical to a from-scratch rebuild on the mutated weights — same
+//! pivots, same vertex orders, same slot layout. The harness pins the
+//! consequence across seeded replan sequences interleaved with
+//! integrations, for every applicable forced `Strategy` × the `FDist`
+//! classes × threads ∈ {1, 4}:
+//!
+//! **ULP budget.** Replan and rebuild retabulate the same distance
+//! tables with the same deterministic kernels, so the exactly-planned
+//! classes (`Dense`/`Separable`/`Lattice`, and the default policy's
+//! routing) must match the rebuild **bit for bit**. The LDR coefficient
+//! pipelines are held to the per-strategy relative-Frobenius floors of
+//! `tests/ftfi_property.rs` as stated headroom — `RationalSum`/`Cauchy`
+//! 5e-6, `Chebyshev`/`Vandermonde` 1e-8 — though they too are observed
+//! bit-identical in practice.
+//!
+//! The walk itself is a single root-to-leaf separator path, so
+//! `nodes_visited` is held to `5·⌈log₂ n⌉ + 2` per replan.
+//!
+//! No proptest offline: seeded sweeps, every assertion leading with
+//! `REPRO seed=…` so `Pcg::seed(seed)` replays the exact case.
+
+use ftfi::ftfi::cordial::{CrossPolicy, Strategy};
+use ftfi::ftfi::functions::FDist;
+use ftfi::graph::generators::{random_rational_tree, random_tree};
+use ftfi::linalg::matrix::Matrix;
+use ftfi::ml::rng::Pcg;
+use ftfi::tree::Tree;
+use ftfi::{FtfiError, ReplanStats, SharedPlans, StreamingIntegrator, TreeFieldIntegrator};
+use std::sync::Arc;
+
+/// The size ladder of `tests/ftfi_property.rs`: singleton, single edge,
+/// one leaf, a few IT levels, above the batch-axis cutoff (odd).
+const SIZES: [usize; 5] = [1, 2, 17, 64, 257];
+
+/// Replans per (tree, f, strategy) combo in the sequence sweeps.
+const STEPS: usize = 3;
+
+/// Per-class replan-vs-rebuild budgets. `None` means exactly planned:
+/// the re-planned handle must reproduce the rebuild bit for bit.
+fn strategy_budget(s: Strategy) -> Option<f64> {
+    match s {
+        Strategy::RationalSum | Strategy::Cauchy => Some(5e-6),
+        Strategy::Chebyshev | Strategy::Vandermonde => Some(1e-8),
+        _ => None,
+    }
+}
+
+/// Per-class `FDist` representatives (mirrors `ftfi_property.rs`).
+fn f_cases(rng: &mut Pcg) -> Vec<FDist> {
+    vec![
+        FDist::Identity,
+        FDist::Polynomial(vec![rng.normal(), rng.normal(), rng.normal() * 0.3]),
+        FDist::Exponential { lambda: rng.uniform_in(-1.0, -0.1), scale: 1.0 },
+        FDist::Trig {
+            omega: rng.uniform_in(0.2, 1.5),
+            phase: rng.uniform_in(0.0, 1.0),
+            scale: 1.0,
+        },
+        FDist::inverse_quadratic(rng.uniform_in(0.1, 2.0)),
+        FDist::ExpOverLinear { lambda: rng.uniform_in(-0.5, 0.0), c: rng.uniform_in(0.5, 2.0) },
+        FDist::gaussian(rng.uniform_in(0.05, 0.5)),
+        FDist::Custom(std::sync::Arc::new(|x: f64| (0.4 * x).sin() / (1.0 + 0.3 * x))),
+    ]
+}
+
+fn rel_err(got: &Matrix, want: &Matrix) -> f64 {
+    got.frobenius_diff(want) / (1.0 + want.frobenius())
+}
+
+/// The per-replan invalidation-walk ceiling: one root-to-leaf separator
+/// path with generous headroom, `5·⌈log₂ n⌉ + 2`.
+fn visit_budget(n: usize) -> usize {
+    if n <= 1 {
+        2
+    } else {
+        5 * (usize::BITS - (n - 1).leading_zeros()) as usize + 2
+    }
+}
+
+/// From-scratch oracle: build + prepare on the mutated tree with the
+/// same knobs and integrate the same field.
+fn rebuild_integrate(
+    tree: &Tree,
+    policy: &CrossPolicy,
+    f: &FDist,
+    d: usize,
+    threads: usize,
+    x: &Matrix,
+) -> Matrix {
+    let tfi = TreeFieldIntegrator::builder(tree)
+        .leaf_threshold(8)
+        .policy(policy.clone())
+        .threads(threads)
+        .build()
+        .unwrap();
+    let plans = tfi.prepare_plans(f, d).unwrap();
+    tfi.integrate_prepared(x, &plans).unwrap()
+}
+
+/// Drive a seeded replan sequence through one prepared handle,
+/// mirroring every committed weight change on a plain [`Tree`] copy and
+/// comparing a prepared integration against the rebuild oracle after
+/// each step. Returns `false` when the forced strategy was inapplicable
+/// at prepare time (combo skipped).
+#[allow(clippy::too_many_arguments)]
+fn run_sequence(
+    tree0: &Tree,
+    policy: CrossPolicy,
+    f: &FDist,
+    d: usize,
+    threads: usize,
+    budget: Option<f64>,
+    rational_weights: bool,
+    rng: &mut Pcg,
+    label: &str,
+) -> bool {
+    let mut tfi = TreeFieldIntegrator::builder(tree0)
+        .leaf_threshold(8)
+        .policy(policy.clone())
+        .threads(threads)
+        .build()
+        .unwrap();
+    let mut plans = match tfi.prepare_plans(f, d) {
+        Err(FtfiError::StrategyInapplicable { .. }) => return false,
+        Err(e) => panic!("{label}: unexpected {e}"),
+        Ok(p) => p,
+    };
+    let compare = |got: &Matrix, want: &Matrix, ctx: String| match budget {
+        None => assert!(
+            got == want,
+            "{ctx}: re-planned handle must be bit-identical to a from-scratch rebuild"
+        ),
+        Some(tol) => {
+            let rel = rel_err(got, want);
+            assert!(rel < tol, "{ctx}: replan-vs-rebuild rel {rel} > {tol}");
+        }
+    };
+    let mut cur = tree0.clone();
+    let x = Matrix::randn(tree0.n(), d, rng);
+    for step in 0..STEPS {
+        if cur.edges().is_empty() {
+            break; // n ∈ {0, 1}: nothing to re-plan (covered separately).
+        }
+        let (eu, ev, old) = cur.edges()[rng.below(cur.edges().len())];
+        let (u, v) = (eu as usize, ev as usize);
+        let w = if rational_weights {
+            // Stay on the rational grid of `random_rational_tree` so the
+            // lattice / rational-sum strategies usually stay applicable.
+            (1 + rng.below(8)) as f64 / 4.0
+        } else {
+            old * if rng.below(2) == 0 { rng.uniform_in(0.45, 0.9) } else { rng.uniform_in(1.1, 1.9) }
+        };
+        let st = match tfi.replan_edge_prepared(u, v, w, &mut plans) {
+            // A forced strategy can be inapplicable to the *new* distance
+            // tables; the two-phase commit must then leave everything
+            // untouched — the handle keeps serving the old weights.
+            Err(FtfiError::StrategyInapplicable { .. }) => {
+                let still = tfi.integrate_prepared(&x, &plans).unwrap();
+                let oracle = rebuild_integrate(&cur, &policy, f, d, threads, &x);
+                compare(&still, &oracle, format!("{label} step={step} (rejected replan)"));
+                continue;
+            }
+            Err(e) => panic!("{label} step={step}: unexpected {e}"),
+            Ok(st) => st,
+        };
+        assert!(
+            st.nodes_visited <= visit_budget(cur.n()),
+            "{label} step={step}: replan visited {} nodes, budget {}",
+            st.nodes_visited,
+            visit_budget(cur.n())
+        );
+        if w == old {
+            assert_eq!(
+                st,
+                ReplanStats::default(),
+                "{label} step={step}: a same-weight replan must be a stat-free no-op"
+            );
+        } else {
+            assert!(st.changed, "{label} step={step}: a weight change must report changed");
+            assert_eq!(
+                cur.set_edge_weight(u, v, w),
+                Some(old),
+                "{label} step={step}: mirror tree rejected the same edge"
+            );
+        }
+        let got = tfi.integrate_prepared(&x, &plans).unwrap();
+        let want = rebuild_integrate(&cur, &policy, f, d, threads, &x);
+        compare(&got, &want, format!("{label} step={step}"));
+    }
+    true
+}
+
+/// Property: under the default policy, a re-planned handle reproduces
+/// the from-scratch rebuild **bit for bit** on every ladder size, every
+/// function class, threads ∈ {1, 4}.
+#[test]
+fn property_replan_sequences_are_bit_identical_to_rebuild_default_policy() {
+    for &n in &SIZES {
+        for &threads in &[1usize, 4] {
+            let seed = 910_000 + (n as u64) * 10 + threads as u64;
+            let mut rng = Pcg::seed(seed);
+            let d = 1 + rng.below(3);
+            let tree = random_tree(n, 0.05, 1.0, &mut rng);
+            for f in f_cases(&mut rng) {
+                let label = format!("REPRO seed={seed} n={n} d={d} threads={threads} {f:?}");
+                run_sequence(
+                    &tree,
+                    CrossPolicy::default(),
+                    &f,
+                    d,
+                    threads,
+                    None,
+                    false,
+                    &mut rng,
+                    &label,
+                );
+            }
+        }
+    }
+}
+
+/// Property: every *applicable* forced strategy tracks the rebuild
+/// oracle through replan sequences on rational-weight trees, within its
+/// stated budget (bit-identical for the exactly-planned classes), for
+/// threads ∈ {1, 4}. Inapplicable combos surface as the typed
+/// `StrategyInapplicable` and are skipped; a floor pins the sweep
+/// cannot degenerate into skipping everything.
+#[test]
+fn property_replan_matches_rebuild_for_every_applicable_forced_strategy() {
+    let all = [
+        Strategy::Dense,
+        Strategy::Separable,
+        Strategy::Lattice,
+        Strategy::RationalSum,
+        Strategy::Cauchy,
+        Strategy::Vandermonde,
+        Strategy::Chebyshev,
+    ];
+    let mut applicable = 0usize;
+    for &n in &SIZES {
+        for &threads in &[1usize, 4] {
+            let seed = 920_000 + (n as u64) * 10 + threads as u64;
+            let mut rng = Pcg::seed(seed);
+            let tree = random_rational_tree(n, 3, 4, &mut rng);
+            let d = 1 + rng.below(3);
+            for f in f_cases(&mut rng) {
+                for &s in &all {
+                    let policy =
+                        CrossPolicy { force: Some(s), dense_cutoff: 0, ..Default::default() };
+                    let label = format!(
+                        "REPRO seed={seed} n={n} d={d} threads={threads} {f:?} forced {s:?}"
+                    );
+                    if run_sequence(
+                        &tree,
+                        policy,
+                        &f,
+                        d,
+                        threads,
+                        strategy_budget(s),
+                        true,
+                        &mut rng,
+                        &label,
+                    ) {
+                        applicable += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert!(applicable >= 100, "only {applicable} (f, strategy) combos were applicable");
+}
+
+/// Threads must not change replanned outputs: two handles prepared
+/// under different pool widths, fed the identical replan sequence, stay
+/// bit-identical (and report identical [`ReplanStats`]).
+#[test]
+fn replanned_outputs_are_bit_identical_across_thread_counts() {
+    let seed = 930_001u64;
+    let mut rng = Pcg::seed(seed);
+    // n above the fork cutoff so the recursion actually forks.
+    let n = 1100;
+    let tree = random_tree(n, 0.1, 1.0, &mut rng);
+    let f = FDist::inverse_quadratic(0.5);
+    let mut serial = TreeFieldIntegrator::builder(&tree).threads(1).build().unwrap();
+    let mut par = TreeFieldIntegrator::builder(&tree).threads(4).build().unwrap();
+    let mut plans_s = serial.prepare_plans(&f, 2).unwrap();
+    let mut plans_p = par.prepare_plans(&f, 2).unwrap();
+    let x = Matrix::randn(n, 2, &mut rng);
+    let mut cur = tree.clone();
+    for step in 0..6 {
+        let (eu, ev, old) = cur.edges()[rng.below(cur.edges().len())];
+        let (u, v) = (eu as usize, ev as usize);
+        let w = old * rng.uniform_in(1.1, 1.9);
+        let a = serial.replan_edge_prepared(u, v, w, &mut plans_s).unwrap();
+        let b = par.replan_edge_prepared(u, v, w, &mut plans_p).unwrap();
+        assert_eq!(a, b, "REPRO seed={seed} step={step}: replan stats diverged across threads");
+        cur.set_edge_weight(u, v, w).unwrap();
+        let ya = serial.integrate_prepared(&x, &plans_s).unwrap();
+        let yb = par.integrate_prepared(&x, &plans_p).unwrap();
+        assert!(
+            ya == yb,
+            "REPRO seed={seed} step={step}: replanned output must be bit-identical across threads"
+        );
+    }
+}
+
+/// Degenerates: a singleton tree rejects every replan; the n = 2 single
+/// edge can be re-planned over and over (including the same-weight
+/// no-op, which must rebuild zero plans and leave every counter
+/// frozen); hammering one fixed edge through a weight sequence keeps
+/// tracking the rebuild bit for bit.
+#[test]
+fn degenerate_trees_repeated_edges_and_noop_replans() {
+    let seed = 940_001u64;
+    let mut rng = Pcg::seed(seed);
+
+    // n = 1: no edges — every replan is a typed rejection and the
+    // handle keeps serving.
+    let t1 = random_tree(1, 0.1, 1.0, &mut rng);
+    let mut tfi = TreeFieldIntegrator::builder(&t1).build().unwrap();
+    let mut plans = tfi.prepare_plans(&FDist::Identity, 1).unwrap();
+    for (u, v) in [(0usize, 0usize), (0, 1), (5, 0)] {
+        match tfi.replan_edge_prepared(u, v, 1.0, &mut plans) {
+            Err(FtfiError::InvalidInput(_)) => {}
+            other => panic!(
+                "REPRO seed={seed}: n=1 replan ({u}, {v}) must be InvalidInput, got {other:?}"
+            ),
+        }
+    }
+    let x1 = Matrix::randn(1, 1, &mut rng);
+    tfi.integrate_prepared(&x1, &plans).unwrap();
+
+    // n = 2: one edge, one leaf node. Repeated replans of the same edge
+    // each visit exactly that leaf and rebuild zero cross plans.
+    let t2 = random_tree(2, 0.5, 1.5, &mut rng);
+    let mut tfi = TreeFieldIntegrator::builder(&t2).build().unwrap();
+    let mut plans = tfi.prepare_plans(&FDist::gaussian(0.3), 2).unwrap();
+    let mut cur = t2.clone();
+    let x2 = Matrix::randn(2, 2, &mut rng);
+    for step in 0..4 {
+        let (eu, ev, old) = cur.edges()[0];
+        let (u, v) = (eu as usize, ev as usize);
+        let w = old * 1.25;
+        let st = tfi.replan_edge_prepared(u, v, w, &mut plans).unwrap();
+        assert!(
+            st.changed && st.nodes_visited == 1 && st.leaves_rebuilt == 1 && st.plan_rebuilds == 0,
+            "REPRO seed={seed} step={step}: n=2 replan must touch exactly the one leaf, got {st:?}"
+        );
+        cur.set_edge_weight(u, v, w).unwrap();
+        let got = tfi.integrate_prepared(&x2, &plans).unwrap();
+        let want = rebuild_integrate(&cur, &CrossPolicy::default(), &FDist::gaussian(0.3), 2, 1, &x2);
+        assert!(got == want, "REPRO seed={seed} step={step}: n=2 replan diverged from rebuild");
+    }
+    // Same-weight no-op: nothing visited, nothing rebuilt, every
+    // counter frozen, handle still current.
+    let before = tfi.stats();
+    let (eu, ev, old) = cur.edges()[0];
+    let st = tfi.replan_edge_prepared(eu as usize, ev as usize, old, &mut plans).unwrap();
+    assert_eq!(st, ReplanStats::default(), "REPRO seed={seed}: same-weight replan must be a no-op");
+    let after = tfi.stats();
+    assert_eq!(before.replan_nodes_visited, after.replan_nodes_visited);
+    assert_eq!(before.replan_plan_rebuilds, after.replan_plan_rebuilds);
+    assert_eq!(before.plan_builds, after.plan_builds);
+    tfi.integrate_prepared(&x2, &plans).unwrap();
+
+    // n = 33: hammer one fixed edge through a whole weight sequence.
+    let t3 = random_tree(33, 0.2, 1.0, &mut rng);
+    let mut tfi = TreeFieldIntegrator::builder(&t3).leaf_threshold(8).build().unwrap();
+    let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+    let mut plans = tfi.prepare_plans(&f, 2).unwrap();
+    let mut cur = t3.clone();
+    let x3 = Matrix::randn(33, 2, &mut rng);
+    let (eu, ev, w0) = t3.edges()[7];
+    let (u, v) = (eu as usize, ev as usize);
+    for (step, scale) in [0.5, 2.0, 0.25, 4.0, 0.5, 1.0].into_iter().enumerate() {
+        let w = w0 * scale;
+        let st = tfi.replan_edge_prepared(u, v, w, &mut plans).unwrap();
+        assert!(st.changed, "REPRO seed={seed} step={step}: consecutive weights always differ");
+        cur.set_edge_weight(u, v, w).unwrap();
+        let got = tfi.integrate_prepared(&x3, &plans).unwrap();
+        let want = rebuild_integrate(&cur, &CrossPolicy::default(), &f, 2, 1, &x3);
+        assert!(
+            got == want,
+            "REPRO seed={seed} step={step}: repeated same-edge replan diverged from rebuild"
+        );
+    }
+}
+
+/// Malformed replans — out-of-range endpoints, a non-adjacent pair, a
+/// self loop, non-finite / non-positive weights — return the typed
+/// [`FtfiError::InvalidInput`] on both the raw and prepared surfaces
+/// and leave the integrator, the handle and every counter untouched.
+#[test]
+fn validation_errors_are_typed_and_leave_the_integrator_untouched() {
+    let seed = 950_001u64;
+    let mut rng = Pcg::seed(seed);
+    let n = 40;
+    let tree = random_tree(n, 0.2, 1.0, &mut rng);
+    let f = FDist::inverse_quadratic(0.7);
+    let mut tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(8).build().unwrap();
+    let mut plans = tfi.prepare_plans(&f, 2).unwrap();
+    let x = Matrix::randn(n, 2, &mut rng);
+    let baseline = tfi.integrate_prepared(&x, &plans).unwrap();
+    let before = tfi.stats();
+    let (eu, ev, _) = tree.edges()[0];
+    let (u, v) = (eu as usize, ev as usize);
+    let mut non_adj = None;
+    'outer: for i in 0..n {
+        for j in 0..n {
+            if i != j && tree.edge_weight(i, j).is_none() {
+                non_adj = Some((i, j));
+                break 'outer;
+            }
+        }
+    }
+    let (na, nb) = non_adj.expect("a 40-vertex tree has non-adjacent pairs");
+    let bad: [(usize, usize, f64, &str); 8] = [
+        (n, 0, 1.0, "left endpoint out of range"),
+        (0, n + 3, 1.0, "right endpoint out of range"),
+        (na, nb, 1.0, "non-adjacent pair"),
+        (u, u, 1.0, "self loop"),
+        (u, v, f64::NAN, "NaN weight"),
+        (u, v, f64::INFINITY, "infinite weight"),
+        (u, v, -1.0, "negative weight"),
+        (u, v, 0.0, "zero weight"),
+    ];
+    for &(bu, bv, bw, what) in &bad {
+        match tfi.replan_edge(bu, bv, bw) {
+            Err(FtfiError::InvalidInput(_)) => {}
+            other => panic!("REPRO seed={seed}: raw replan with {what} must be InvalidInput, got {other:?}"),
+        }
+        match tfi.replan_edge_prepared(bu, bv, bw, &mut plans) {
+            Err(FtfiError::InvalidInput(_)) => {}
+            other => panic!(
+                "REPRO seed={seed}: prepared replan with {what} must be InvalidInput, got {other:?}"
+            ),
+        }
+        let still = tfi.integrate_prepared(&x, &plans).unwrap();
+        assert!(
+            still == baseline,
+            "REPRO seed={seed}: a rejected replan ({what}) must leave the output bit-unchanged"
+        );
+    }
+    let after = tfi.stats();
+    assert_eq!(before.replan_nodes_visited, after.replan_nodes_visited);
+    assert_eq!(before.replan_plan_rebuilds, after.replan_plan_rebuilds);
+    assert_eq!(before.plan_builds, after.plan_builds);
+}
+
+/// A raw replan (without the prepared twin) invalidates outstanding
+/// handles: their next use is the typed staleness error, and a freshly
+/// prepared handle matches the rebuild oracle bit for bit.
+#[test]
+fn raw_replans_invalidate_prepared_handles_with_a_typed_staleness_error() {
+    let seed = 960_001u64;
+    let mut rng = Pcg::seed(seed);
+    let n = 50;
+    let tree = random_tree(n, 0.2, 1.0, &mut rng);
+    let f = FDist::gaussian(0.2);
+    let mut tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(8).build().unwrap();
+    let mut plans = tfi.prepare_plans(&f, 2).unwrap();
+    let x = Matrix::randn(n, 2, &mut rng);
+    let (eu, ev, old) = tree.edges()[3];
+    let (u, v) = (eu as usize, ev as usize);
+    let st = tfi.replan_edge(u, v, old * 1.5).unwrap();
+    assert!(st.changed);
+    for err in [
+        tfi.integrate_prepared(&x, &plans).map(|_| ()).unwrap_err(),
+        tfi.replan_edge_prepared(u, v, old * 2.0, &mut plans).map(|_| ()).unwrap_err(),
+    ] {
+        match err {
+            FtfiError::InvalidInput(msg) => assert!(
+                msg.contains("stale"),
+                "REPRO seed={seed}: staleness error must say so, got: {msg}"
+            ),
+            other => panic!("REPRO seed={seed}: expected InvalidInput, got {other:?}"),
+        }
+    }
+    let mut cur = tree.clone();
+    cur.set_edge_weight(u, v, old * 1.5).unwrap();
+    let plans2 = tfi.prepare_plans(&f, 2).unwrap();
+    let got = tfi.integrate_prepared(&x, &plans2).unwrap();
+    let want = rebuild_integrate(&cur, &CrossPolicy::default(), &f, 2, 1, &x);
+    assert!(got == want, "REPRO seed={seed}: re-prepared handle must match the rebuild");
+}
+
+/// Streaming surface: `update_edge` re-plans the shared metric and
+/// refreshes the session bit-exactly — after every step the session
+/// output equals a cold integrator built from scratch on the mutated
+/// tree, and the replan counters aggregate into the session's
+/// `stats()`.
+#[test]
+fn streaming_update_edge_tracks_a_rebuilt_session_bit_for_bit() {
+    let seed = 970_001u64;
+    let mut rng = Pcg::seed(seed);
+    let n = 120;
+    let tree = random_tree(n, 0.1, 1.0, &mut rng);
+    let f = FDist::ExpOverLinear { lambda: -0.3, c: 1.0 };
+    let tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(8).build().unwrap();
+    let plans = tfi.prepare_plans(&f, 2).unwrap();
+    let shared = Arc::new(SharedPlans::new(tfi, plans));
+    let field = Matrix::randn(n, 2, &mut rng);
+    let mut session = StreamingIntegrator::new(Arc::clone(&shared), field, 5).unwrap();
+    let mut cur = tree.clone();
+    let mut total_visits = 0usize;
+    for step in 0..6 {
+        let (eu, ev, old) = cur.edges()[rng.below(cur.edges().len())];
+        let (u, v) = (eu as usize, ev as usize);
+        let w = old * rng.uniform_in(1.1, 1.9);
+        let st = session.update_edge(u, v, w).unwrap();
+        assert!(st.changed, "REPRO seed={seed} step={step}: weight change must commit");
+        assert!(
+            st.nodes_visited <= visit_budget(n),
+            "REPRO seed={seed} step={step}: visited {} nodes, budget {}",
+            st.nodes_visited,
+            visit_budget(n)
+        );
+        total_visits += st.nodes_visited;
+        cur.set_edge_weight(u, v, w).unwrap();
+        let want = rebuild_integrate(&cur, &CrossPolicy::default(), &f, 2, 1, session.field());
+        assert!(
+            *session.output() == want,
+            "REPRO seed={seed} step={step}: session must refresh bit-exactly after a replan"
+        );
+    }
+    assert_eq!(shared.epoch(), 6, "every committed replan bumps the shared epoch once");
+    assert_eq!(session.stats().replan_nodes_visited, total_visits);
+}
+
+/// The O(log n) claim at serving scale: on n = 2048 every replan visits
+/// at most `5·⌈log₂ n⌉ + 2` nodes, the per-replan stats aggregate
+/// exactly into the lifetime counter, and the handle still matches the
+/// rebuild bit for bit at the end of the sequence.
+#[test]
+fn replan_visits_are_logarithmic_and_aggregate_into_stats() {
+    let seed = 980_001u64;
+    let mut rng = Pcg::seed(seed);
+    let n = 2048;
+    let tree = random_tree(n, 0.1, 1.0, &mut rng);
+    let f = FDist::Exponential { lambda: -0.25, scale: 1.0 };
+    let mut tfi = TreeFieldIntegrator::builder(&tree).build().unwrap();
+    let mut plans = tfi.prepare_plans(&f, 2).unwrap();
+    let mut cur = tree.clone();
+    let mut total = 0usize;
+    for step in 0..12 {
+        let (eu, ev, old) = cur.edges()[rng.below(cur.edges().len())];
+        let (u, v) = (eu as usize, ev as usize);
+        let w = old * rng.uniform_in(1.1, 1.9);
+        let st = tfi.replan_edge_prepared(u, v, w, &mut plans).unwrap();
+        assert!(st.changed);
+        assert!(
+            (1..=visit_budget(n)).contains(&st.nodes_visited),
+            "REPRO seed={seed} step={step}: visited {} nodes, budget {}",
+            st.nodes_visited,
+            visit_budget(n)
+        );
+        total += st.nodes_visited;
+        cur.set_edge_weight(u, v, w).unwrap();
+    }
+    assert_eq!(tfi.stats().replan_nodes_visited, total);
+    let x = Matrix::randn(n, 2, &mut rng);
+    let got = tfi.integrate_prepared(&x, &plans).unwrap();
+    let oracle = TreeFieldIntegrator::builder(&cur).build().unwrap();
+    let oracle_plans = oracle.prepare_plans(&f, 2).unwrap();
+    let want = oracle.integrate_prepared(&x, &oracle_plans).unwrap();
+    assert!(got == want, "REPRO seed={seed}: 12-replan handle must still match a rebuild");
+}

@@ -124,14 +124,13 @@ fn cauchy_hot_path_is_allocation_free_when_warmed() {
 /// (delta staging, cached-output accumulation).
 #[test]
 fn delta_update_hot_path_is_allocation_free_when_warmed() {
-    use ftfi::StreamingIntegrator;
+    use ftfi::{SharedPlans, StreamingIntegrator};
     use std::sync::Arc;
     let mut rng = Pcg::seed(7);
     let tree = random_tree(900, 0.1, 1.0, &mut rng);
     let f = FDist::inverse_quadratic(0.5);
     let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().expect("valid tree");
-    let tfi = Arc::new(tfi);
-    let plans = Arc::new(tfi.prepare_plans(&f, 2).expect("plannable f"));
+    let plans = tfi.prepare_plans(&f, 2).expect("plannable f");
     let x = Matrix::randn(900, 2, &mut rng);
     let mut dout = Matrix::zeros(900, 2);
     let mut dx = Matrix::zeros(900, 2);
@@ -148,8 +147,9 @@ fn delta_update_hot_path_is_allocation_free_when_warmed() {
 
     // Session surface: refresh_every = 0 keeps every update on the
     // delta path; two warmed updates grow the dirty-list capacity.
-    let mut session = StreamingIntegrator::new(Arc::clone(&tfi), Arc::clone(&plans), x, 0)
-        .expect("valid session");
+    let shared = Arc::new(SharedPlans::new(tfi, plans));
+    let mut session =
+        StreamingIntegrator::new(Arc::clone(&shared), x, 0).expect("valid session");
     let vals = Matrix::from_vec(1, 2, vec![0.25, -1.0]);
     session.apply_update(&rows, &vals).expect("update");
     session.apply_update(&rows, &vals).expect("update");
@@ -157,6 +157,58 @@ fn delta_update_hot_path_is_allocation_free_when_warmed() {
     session.apply_update(&rows, &vals).expect("update");
     let during = allocs() - before;
     assert_eq!(during, 0, "warmed apply_update performed {during} heap allocations");
+}
+
+/// The post-replan hot path: an edge re-plan rebuilds O(log n) plans
+/// (allocating — that is the defined cold path), but the *serving*
+/// calls after it must return to the zero-allocation steady state. One
+/// warming call after the replan re-ensures the (monotone) workspace
+/// sizing; from the second call on, nothing allocates.
+#[test]
+fn prepared_integrate_after_a_replan_is_allocation_free_when_warmed() {
+    let mut rng = Pcg::seed(8);
+    let tree = random_tree(1000, 0.1, 1.0, &mut rng);
+    let f = FDist::inverse_quadratic(0.5);
+    let mut tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().expect("valid tree");
+    let mut plans = tfi.prepare_plans(&f, 2).expect("plannable f");
+    let x = Matrix::randn(1000, 2, &mut rng);
+    let mut out = Matrix::zeros(1000, 2);
+    // Warm the pre-replan steady state.
+    tfi.integrate_prepared_into(&x, &plans, &mut out).expect("integrate");
+    tfi.integrate_prepared_into(&x, &plans, &mut out).expect("integrate");
+
+    let (eu, ev, old) = tree.edges()[11];
+    let st = tfi.replan_edge_prepared(eu as usize, ev as usize, old * 1.7, &mut plans)
+        .expect("replan");
+    assert!(st.changed, "the replan must commit for this pin to mean anything");
+
+    // Re-warm once: a grown distinct-distance table may ratchet the
+    // workspace sizing, and the first post-replan call pays it.
+    tfi.integrate_prepared_into(&x, &plans, &mut out).expect("integrate");
+    tfi.integrate_prepared_into(&x, &plans, &mut out).expect("integrate");
+    let before = allocs();
+    tfi.integrate_prepared_into(&x, &plans, &mut out).expect("integrate");
+    let during = allocs() - before;
+    assert_eq!(
+        during, 0,
+        "warmed post-replan integrate_prepared_into performed {during} heap allocations"
+    );
+
+    // And the delta fast path too: replans must not knock the sparse
+    // pass off its zero-alloc contract either.
+    let mut dout = Matrix::zeros(1000, 2);
+    let mut dx = Matrix::zeros(1000, 2);
+    dx.set(77, 0, 0.5);
+    let rows = [77u32];
+    tfi.integrate_delta_prepared_into(&rows, &dx, &plans, &mut dout).expect("delta");
+    tfi.integrate_delta_prepared_into(&rows, &dx, &plans, &mut dout).expect("delta");
+    let before = allocs();
+    tfi.integrate_delta_prepared_into(&rows, &dx, &plans, &mut dout).expect("delta");
+    let during = allocs() - before;
+    assert_eq!(
+        during, 0,
+        "warmed post-replan k=1 delta performed {during} heap allocations"
+    );
 }
 
 /// Forced-separable exponential kernel: the rank-1 outer-product path

@@ -56,13 +56,19 @@ use std::process::ExitCode;
 const SUPPRESS_WINDOW: usize = 5;
 
 /// Hot-path functions under the zero-alloc contract that do not carry
-/// the `_into` suffix (the recursive workspace walkers and the pooled
-/// entry points), pinned by `tests/hotpath_alloc.rs`.
-const HOT_PATH_MANIFEST: [&str; 4] = [
+/// the `_into` suffix (the recursive workspace walkers, the pooled
+/// entry points, and the `SharedPlans` read-side wrapper every warmed
+/// streaming serve goes through after an edge re-plan), pinned by
+/// `tests/hotpath_alloc.rs`. The replan-adjacent `*_into` fns
+/// themselves (`leaf_apply_into`, `aggregate_into`, `combine_*_into`,
+/// and the post-replan `integrate_prepared_into` re-entry) are covered
+/// automatically by the `_into` suffix rule.
+const HOT_PATH_MANIFEST: [&str; 5] = [
     "integrate_ws",
     "integrate_ws_delta",
     "integrate_prepared_into_pooled",
     "integrate_delta_prepared_into_pooled",
+    "with",
 ];
 
 /// Tokens that can allocate. `checkout_workspace`/`checkout_scratch`
