@@ -1,0 +1,402 @@
+//! `loadgen` — open-loop serving load generator for the streaming
+//! stack, over the real TCP wire ([`ftfi::coordinator::TcpFront`]).
+//!
+//! Seeded Poisson arrivals with periodic bursts drive one typed-wire
+//! connection per client; every client owns a session and streams
+//! sparse updates (plus leases, re-sets and edge replans) through the
+//! [`ftfi::coordinator::retry_with_backoff`] helper, re-admitting
+//! itself after eviction and re-syncing after lost responses. With
+//! `--faults chaos` a seeded [`FaultPlan`] corrupts frames, drops and
+//! duplicates responses, injects latency, panics workers and
+//! disconnects clients mid-stream.
+//!
+//! The run writes `BENCH_serving.json` (override with `--out`): client
+//! latency percentiles (p50/p95/p99/p999 ms), shed/evict/protocol-error
+//! /retry counters, and a loss ledger reconciled against the injected
+//! fault counters — `lost_unexplained` must be 0, faults or no faults.
+//!
+//! ```text
+//! loadgen --clients 4 --requests 150 --rate 400 --faults chaos \
+//!         --max-sessions 3 --shed-after-ms 50 --seed 42
+//! ```
+
+use ftfi::cli::Args;
+use ftfi::coordinator::protocol::{self, StreamRequest, StreamResponse};
+use ftfi::coordinator::{
+    retry_with_backoff, BackoffPolicy, BatchExecutor, BatcherConfig, FaultPlan, Faults,
+    FaultyExecutor, InferenceServer, MetricsRegistry, RejectReason, RetryStep,
+    StreamingFieldExecutor, TcpFront,
+};
+use ftfi::ftfi::TreeFieldIntegrator;
+use ftfi::graph::generators;
+use ftfi::ml::rng::Pcg;
+use ftfi::FDist;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Per-client outcome counters, merged across clients at the end.
+#[derive(Default, Clone, Copy)]
+struct Stats {
+    attempts: u64,
+    ok: u64,
+    rejected: u64,
+    protocol_errors: u64,
+    errors: u64,
+    lost: u64,
+    strays: u64,
+    gave_up: u64,
+    retries: u64,
+}
+
+impl Stats {
+    fn merge(&mut self, o: &Stats) {
+        self.attempts += o.attempts;
+        self.ok += o.ok;
+        self.rejected += o.rejected;
+        self.protocol_errors += o.protocol_errors;
+        self.errors += o.errors;
+        self.lost += o.lost;
+        self.strays += o.strays;
+        self.gave_up += o.gave_up;
+        self.retries += o.retries;
+    }
+}
+
+/// One typed-wire connection with req-id matching. Responses that do
+/// not carry the awaited id (duplicates, strays from id-corrupted
+/// frames) are counted and skipped; a read timeout or torn stream
+/// returns `None` so the caller can count the loss and re-sync.
+struct Client {
+    addr: std::net::SocketAddr,
+    conn: TcpStream,
+    rd: BufReader<TcpStream>,
+    next_id: u64,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> std::io::Result<Client> {
+        let conn = TcpStream::connect(addr)?;
+        let _ = conn.set_nodelay(true);
+        conn.set_read_timeout(Some(Duration::from_millis(500)))?;
+        let rd = BufReader::new(conn.try_clone()?);
+        Ok(Client { addr, conn, rd, next_id: 0 })
+    }
+
+    fn reconnect(&mut self) -> bool {
+        match Client::connect(self.addr) {
+            Ok(mut fresh) => {
+                fresh.next_id = self.next_id;
+                *self = fresh;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn call(&mut self, req: &StreamRequest, strays: &mut u64) -> Option<StreamResponse> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let payload = protocol::encode_request(req, id);
+        if protocol::write_frame(&mut self.conn, &payload).is_err() {
+            return None;
+        }
+        loop {
+            match protocol::read_frame(&mut self.rd) {
+                Ok(Some(frame)) => match protocol::decode_response(&frame) {
+                    Ok((got, resp)) if got == id => return Some(resp),
+                    Ok(_) | Err(_) => *strays += 1,
+                },
+                Ok(None) | Err(_) => return None,
+            }
+        }
+    }
+}
+
+fn set_request(session: u32, n: usize, rng: &mut Pcg) -> StreamRequest {
+    StreamRequest::Set {
+        session,
+        rows: n as u32,
+        channels: 1,
+        values: (0..n).map(|_| rng.normal() as f32).collect(),
+    }
+}
+
+/// Drive one client: open-loop pacing, mixed traffic, backoff retries,
+/// eviction re-admission and lost-response re-sync. Returns the
+/// counters plus the end-to-end latency (seconds) of each success.
+#[allow(clippy::too_many_arguments)]
+fn drive_client(
+    addr: std::net::SocketAddr,
+    session: u32,
+    n: usize,
+    per_client: usize,
+    rate: f64,
+    seed: u64,
+    edges: Arc<Vec<(u32, u32, f64)>>,
+    faults: Option<Arc<Faults>>,
+) -> (Stats, Vec<f64>) {
+    let mut stats = Stats::default();
+    let mut lat = Vec::with_capacity(per_client);
+    let mut rng = Pcg::new(seed, 0x10AD ^ u64::from(session));
+    let mut client = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(_) => {
+            stats.gave_up = per_client as u64;
+            return (stats, lat);
+        }
+    };
+    let policy = BackoffPolicy::default();
+    let mut next_arrival = Instant::now();
+    for r in 0..per_client {
+        // Open-loop pacing: exponential inter-arrivals, with a
+        // back-to-back burst of 8 every 25 requests.
+        let in_burst = r % 25 < 8;
+        if !in_burst {
+            next_arrival += Duration::from_secs_f64(rng.exponential(rate));
+            let now = Instant::now();
+            if next_arrival > now {
+                std::thread::sleep(next_arrival - now);
+            }
+        }
+        // Fault: disconnect mid-stream, then recover by reconnecting
+        // and re-admitting the session.
+        if let Some(f) = faults.as_ref() {
+            if f.take_disconnect() && client.reconnect() {
+                let _ = client.call(&set_request(session, n, &mut rng), &mut stats.strays);
+            }
+        }
+        let req = match rng.below(20) {
+            0 => set_request(session, n, &mut rng),
+            1..=2 => StreamRequest::Lease { session },
+            3 => {
+                let (u, v, w) = edges[rng.below(edges.len())];
+                let scale = if rng.bool(0.5) { 1.25 } else { 0.8 };
+                StreamRequest::ReplanEdge { session, u, v, w: w * scale }
+            }
+            _ => {
+                let k = 4.min(n);
+                let start = rng.below(n);
+                StreamRequest::Update {
+                    session,
+                    rows: (0..k).map(|j| ((start + j) % n) as u32).collect(),
+                    channels: 1,
+                    values: (0..k).map(|_| rng.normal() as f32).collect(),
+                }
+            }
+        };
+        let t0 = Instant::now();
+        let (outcome, retries) = retry_with_backoff(&policy, seed ^ (r as u64), |_| {
+            stats.attempts += 1;
+            match client.call(&req, &mut stats.strays) {
+                Some(StreamResponse::Output { .. }) | Some(StreamResponse::Closed { .. }) => {
+                    RetryStep::Done(())
+                }
+                Some(StreamResponse::Rejected { reason: RejectReason::Evicted, .. }) => {
+                    stats.rejected += 1;
+                    // Re-admit the lease, then retry the request.
+                    let _ = client.call(&set_request(session, n, &mut rng), &mut stats.strays);
+                    RetryStep::Retry(())
+                }
+                Some(StreamResponse::Rejected { .. }) => {
+                    stats.rejected += 1;
+                    RetryStep::Retry(())
+                }
+                Some(StreamResponse::Error { message }) => {
+                    if message.starts_with(protocol::ERR_PROTOCOL_PREFIX) {
+                        stats.protocol_errors += 1;
+                    } else {
+                        stats.errors += 1;
+                    }
+                    RetryStep::Fail(())
+                }
+                None => {
+                    // Timeout or torn stream: the response is lost.
+                    // Re-sync framing with a fresh connection + lease.
+                    stats.lost += 1;
+                    if client.reconnect() {
+                        let _ = client.call(&set_request(session, n, &mut rng), &mut stats.strays);
+                        RetryStep::Retry(())
+                    } else {
+                        RetryStep::Fail(())
+                    }
+                }
+            }
+        });
+        stats.retries += u64::from(retries);
+        match outcome {
+            Ok(()) => {
+                stats.ok += 1;
+                lat.push(t0.elapsed().as_secs_f64());
+            }
+            Err(()) => stats.gave_up += 1,
+        }
+    }
+    (stats, lat)
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let n = args.get_usize("n", 200).max(2);
+    let clients = args.get_usize("clients", 4).max(1);
+    let per_client = args.get_usize("requests", 150).max(1);
+    let seed = args.get_usize("seed", 42) as u64;
+    let rate = args.get_f64("rate", 400.0).max(1.0);
+    let workers = args.get_usize("workers", 2).max(1);
+    let fault_mode = args.get_str("faults", "none");
+    let out = args.get_str("out", "BENCH_serving.json");
+    let max_sessions = args.get_usize("max-sessions", clients).max(1);
+    let shed_after_ms = args.get_usize("shed-after-ms", 50) as u64;
+
+    let plan = match fault_mode {
+        "none" => FaultPlan::off(),
+        "chaos" => FaultPlan::chaos(seed),
+        other => return Err(format!("unknown --faults {other:?} (none|chaos)").into()),
+    };
+    let faults = Faults::new(&plan);
+
+    let mut rng = Pcg::seed(seed);
+    let tree = generators::random_tree(n, 0.2, 1.0, &mut rng);
+    let edges = Arc::new(tree.edges().to_vec());
+    let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+    let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build()?;
+    let metrics = Arc::new(MetricsRegistry::new());
+    let exec = Arc::new(
+        StreamingFieldExecutor::new(tfi, &f, 1, 16, max_sessions, 8)?
+            .with_metrics(Arc::clone(&metrics)),
+    );
+    let factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>> = (0..workers)
+        .map(|_| {
+            let exec = Arc::clone(&exec);
+            let faults = faults.clone();
+            Box::new(move || match faults {
+                Some(f) => Box::new(FaultyExecutor::new(exec, f)) as Box<dyn BatchExecutor>,
+                None => Box::new(exec) as Box<dyn BatchExecutor>,
+            }) as Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>
+        })
+        .collect();
+    let server = Arc::new(InferenceServer::start_with_metrics(
+        factories,
+        BatcherConfig {
+            batch_size: 8,
+            batch_timeout: Duration::from_millis(2),
+            shed_after: (shed_after_ms > 0).then(|| Duration::from_millis(shed_after_ms)),
+        },
+        256,
+        Arc::clone(&metrics),
+    ));
+    let front = TcpFront::start(Arc::clone(&server), faults.clone(), "127.0.0.1:0")?;
+    let addr = front.local_addr();
+    println!(
+        "loadgen: {clients} clients x {per_client} requests at ~{rate:.0} req/s each, \
+         n = {n}, {workers} workers, {max_sessions} session slots, faults = {fault_mode}"
+    );
+
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let edges = Arc::clone(&edges);
+            let faults = faults.clone();
+            std::thread::spawn(move || {
+                drive_client(addr, c as u32, n, per_client, rate, seed, edges, faults)
+            })
+        })
+        .collect();
+    let mut stats = Stats::default();
+    let mut latencies = Vec::new();
+    for t in threads {
+        let (s, lat) = t.join().map_err(|_| "client thread panicked")?;
+        stats.merge(&s);
+        latencies.extend(lat);
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    front.stop();
+    metrics.record_retries(stats.retries);
+    let snap = metrics.snapshot();
+    let injected = faults.as_ref().map(|f| f.counters()).unwrap_or_default();
+
+    latencies.sort_by(f64::total_cmp);
+    let (p50, p95, p99, p999) = (
+        percentile(&latencies, 50.0) * 1e3,
+        percentile(&latencies, 95.0) * 1e3,
+        percentile(&latencies, 99.0) * 1e3,
+        percentile(&latencies, 99.9) * 1e3,
+    );
+    let requested = (clients * per_client) as u64;
+    // Every lost response must trace to an injected drop or to a stray
+    // (a response re-keyed by an id-corrupting frame flip).
+    let lost_unexplained = stats.lost.saturating_sub(injected.responses_dropped + stats.strays);
+    let throughput = stats.ok as f64 / elapsed;
+
+    println!(
+        "done in {elapsed:.2}s: {}/{requested} ok ({:.0} req/s), p50 {p50:.2}ms \
+         p95 {p95:.2}ms p99 {p99:.2}ms p99.9 {p999:.2}ms",
+        stats.ok, throughput
+    );
+    println!(
+        "client ledger: {} rejected, {} protocol errors, {} other errors, {} lost \
+         ({lost_unexplained} unexplained), {} strays, {} retries, {} gave up",
+        stats.rejected, stats.protocol_errors, stats.errors, stats.lost, stats.strays,
+        stats.retries, stats.gave_up
+    );
+    println!(
+        "server counters: {} shed, {} evicted, {} protocol errors, {} worker panics",
+        snap.requests_shed, snap.sessions_evicted, snap.protocol_errors, snap.worker_panics
+    );
+
+    let mut json = String::from("{\n  \"bench\": \"serving_soak\",\n");
+    json.push_str(&format!(
+        "  \"seed\": {seed}, \"clients\": {clients}, \"requested\": {requested}, \
+         \"faults\": \"{fault_mode}\",\n"
+    ));
+    json.push_str(&format!(
+        "  \"ok\": {}, \"rejected\": {}, \"protocol_errors_seen\": {}, \"errors\": {}, \
+         \"gave_up\": {},\n",
+        stats.ok, stats.rejected, stats.protocol_errors, stats.errors, stats.gave_up
+    ));
+    json.push_str(&format!(
+        "  \"lost\": {}, \"strays\": {}, \"lost_unexplained\": {lost_unexplained},\n",
+        stats.lost, stats.strays
+    ));
+    json.push_str(&format!(
+        "  \"p50_ms\": {p50:.3}, \"p95_ms\": {p95:.3}, \"p99_ms\": {p99:.3}, \
+         \"p999_ms\": {p999:.3},\n"
+    ));
+    json.push_str(&format!("  \"throughput_rps\": {throughput:.1},\n"));
+    json.push_str(&format!(
+        "  \"server\": {{ \"requests\": {}, \"requests_shed\": {}, \"sessions_evicted\": {}, \
+         \"protocol_errors\": {}, \"retries\": {}, \"worker_panics\": {} }},\n",
+        snap.requests, snap.requests_shed, snap.sessions_evicted, snap.protocol_errors,
+        snap.retries, snap.worker_panics
+    ));
+    json.push_str(&format!(
+        "  \"injected\": {{ \"frames_corrupted\": {}, \"responses_dropped\": {}, \
+         \"responses_duplicated\": {}, \"disconnects\": {}, \"delays\": {}, \
+         \"panics\": {} }}\n}}\n",
+        injected.frames_corrupted,
+        injected.responses_dropped,
+        injected.responses_duplicated,
+        injected.disconnects,
+        injected.delays_injected,
+        injected.panics_injected
+    ));
+    std::fs::write(out, json)?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -175,6 +175,23 @@ mod tests {
     }
 
     #[test]
+    fn wire_flag_binds_a_wire_name() {
+        // `--wire` selects the serving wire format (typed|legacy): it
+        // takes a value, must not swallow a following option, and stays
+        // out of [`BOOL_FLAGS`].
+        let a = parse("serve --streaming --wire legacy --requests 10");
+        assert_eq!(a.get_str("wire", "typed"), "legacy");
+        assert!(a.get_flag("streaming"));
+        assert_eq!(a.get_usize("requests", 0), 10);
+        let b = parse("serve --streaming --wire=typed file.txt");
+        assert_eq!(b.get_str("wire", "legacy"), "typed");
+        assert_eq!(b.positional, vec!["file.txt"]);
+        // Absent → the typed default.
+        let c = parse("serve --streaming");
+        assert_eq!(c.get_str("wire", "typed"), "typed");
+    }
+
+    #[test]
     fn non_bool_flags_still_consume_values() {
         let a = parse("integrate --n 100 --f exp");
         assert_eq!(a.get_usize("n", 0), 100);

@@ -289,11 +289,17 @@ pub struct StreamingConfig {
     pub refresh_every: usize,
     /// Session slots per streaming executor.
     pub max_sessions: usize,
+    /// In-flight updates a single session may hold before new ones are
+    /// rejected with `SessionBusy` (admission control).
+    pub max_pending: usize,
+    /// Queue age (milliseconds) past which a request is shed instead of
+    /// served (`0` = never shed).
+    pub shed_after_ms: u64,
 }
 
 impl Default for StreamingConfig {
     fn default() -> Self {
-        StreamingConfig { refresh_every: 64, max_sessions: 16 }
+        StreamingConfig { refresh_every: 64, max_sessions: 16, max_pending: 32, shed_after_ms: 0 }
     }
 }
 
@@ -303,6 +309,9 @@ impl StreamingConfig {
         StreamingConfig {
             refresh_every: c.get_usize("streaming.refresh_every", d.refresh_every),
             max_sessions: c.get_usize("streaming.max_sessions", d.max_sessions),
+            max_pending: c.get_usize("streaming.max_pending", d.max_pending),
+            shed_after_ms: c.get_usize("streaming.shed_after_ms", d.shed_after_ms as usize)
+                as u64,
         }
     }
 }
@@ -383,14 +392,22 @@ mod tests {
 
     #[test]
     fn streaming_config_roundtrip() {
-        let c = Config::parse("[streaming]\nrefresh_every = 8\nmax_sessions = 3\n").unwrap();
+        let c = Config::parse(
+            "[streaming]\nrefresh_every = 8\nmax_sessions = 3\nmax_pending = 5\n\
+             shed_after_ms = 40\n",
+        )
+        .unwrap();
         let sc = StreamingConfig::from_config(&c);
         assert_eq!(sc.refresh_every, 8);
         assert_eq!(sc.max_sessions, 3);
+        assert_eq!(sc.max_pending, 5);
+        assert_eq!(sc.shed_after_ms, 40);
         // Absent section → defaults.
         let d = StreamingConfig::from_config(&Config::default());
         assert_eq!(d.refresh_every, 64);
         assert_eq!(d.max_sessions, 16);
+        assert_eq!(d.max_pending, 32);
+        assert_eq!(d.shed_after_ms, 0);
         // refresh_every = 0 is a legal "never refresh" setting.
         let z = Config::parse("[streaming]\nrefresh_every = 0\n").unwrap();
         assert_eq!(StreamingConfig::from_config(&z).refresh_every, 0);

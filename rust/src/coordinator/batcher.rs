@@ -55,11 +55,20 @@ impl<T: BatchExecutor> BatchExecutor for std::sync::Arc<T> {
 pub struct BatcherConfig {
     pub batch_size: usize,
     pub batch_timeout: Duration,
+    /// Deadline-based load shedding: a request that has been queued
+    /// longer than this by dispatch time is answered with a typed shed
+    /// error instead of being executed (its batch-mates still run).
+    /// `None` disables shedding (the pre-PR-9 behaviour).
+    pub shed_after: Option<Duration>,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { batch_size: 8, batch_timeout: Duration::from_millis(2) }
+        BatcherConfig {
+            batch_size: 8,
+            batch_timeout: Duration::from_millis(2),
+            shed_after: None,
+        }
     }
 }
 
@@ -93,11 +102,14 @@ impl Batcher {
         let deadline = Instant::now() + self.cfg.batch_timeout;
         let mut batch = vec![first];
         while batch.len() < self.cfg.batch_size {
-            let now = Instant::now();
-            if now >= deadline {
+            // `saturating_duration_since` instead of `deadline - now`:
+            // the clock can pass `deadline` between a check and the
+            // subtraction, and Instant subtraction panics on underflow.
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            match rx.recv_timeout(remaining) {
                 Ok(req) => batch.push(req),
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -109,22 +121,65 @@ impl Batcher {
     /// Run one batch through the executor and fan responses out —
     /// per request, so one bad request cannot fail its batch-mates
     /// unless the executor genuinely fails as a unit.
+    ///
+    /// Robustness duties (PR 9): requests past their `shed_after`
+    /// deadline are answered with a typed shed error *before* the
+    /// executor runs, and a panicking executor is contained with
+    /// `catch_unwind` so every request still receives exactly one
+    /// response (an error, never silence).
     pub fn dispatch(
         &self,
         batch: Vec<PendingRequest>,
         exec: &dyn BatchExecutor,
         metrics: &super::metrics::MetricsRegistry,
     ) {
-        let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+        let mut live: Vec<PendingRequest> = Vec::with_capacity(batch.len());
+        for req in batch {
+            let aged = self.cfg.shed_after.is_some_and(|limit| req.enqueued_at.elapsed() > limit);
+            if aged {
+                metrics.record_shed();
+                metrics.queue_exit();
+                let _ = req.respond.send(Err(format!(
+                    "{}deadline exceeded in queue",
+                    crate::coordinator::protocol::ERR_SHED_PREFIX
+                )));
+            } else {
+                live.push(req);
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        let inputs: Vec<Vec<f32>> = live.iter().map(|r| r.input.clone()).collect();
         let t0 = Instant::now();
-        let results = exec.execute_each(&inputs);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec.execute_each(&inputs)
+        }));
         let exec_secs = t0.elapsed().as_secs_f64();
-        metrics.record_batch(batch.len(), exec_secs);
-        debug_assert_eq!(results.len(), batch.len());
-        for (req, res) in batch.into_iter().zip(results) {
+        metrics.record_batch(live.len(), exec_secs);
+        let results = match outcome {
+            Ok(results) => {
+                debug_assert_eq!(results.len(), live.len());
+                results
+            }
+            Err(cause) => {
+                // A worker panic must not drop response channels on the
+                // floor: fan a typed error out to every request so the
+                // exactly-one-response invariant holds.
+                metrics.record_worker_panic();
+                let what = cause
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| cause.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic payload".to_string());
+                live.iter().map(|_| Err(format!("worker panic: {what}"))).collect()
+            }
+        };
+        for (req, res) in live.into_iter().zip(results) {
             if res.is_ok() {
                 metrics.record_latency(req.enqueued_at.elapsed().as_secs_f64());
             }
+            metrics.queue_exit();
             let _ = req.respond.send(res);
         }
     }
@@ -169,6 +224,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             batch_size: 3,
             batch_timeout: Duration::from_millis(50),
+            shed_after: None,
         });
         let batch = b.next_batch(&rx).unwrap();
         assert_eq!(batch.len(), 3);
@@ -185,6 +241,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             batch_size: 64,
             batch_timeout: Duration::from_millis(5),
+            shed_after: None,
         });
         let t0 = Instant::now();
         let batch = b.next_batch(&rx).unwrap();
@@ -205,6 +262,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             batch_size: 4,
             batch_timeout: Duration::from_secs(10),
+            shed_after: None,
         });
         let t0 = Instant::now();
         let batch = b.next_batch(&rx).unwrap();
@@ -229,6 +287,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             batch_size: 8,
             batch_timeout: Duration::from_millis(40),
+            shed_after: None,
         });
         let t0 = Instant::now();
         let batch = b.next_batch(&rx).unwrap();
@@ -261,6 +320,86 @@ mod tests {
         let snap = metrics.snapshot();
         assert_eq!(snap.requests, 2);
         assert_eq!(snap.batches, 1);
+    }
+
+    /// Regression for the deadline race: if the producer keeps feeding
+    /// requests right at the timeout boundary, `next_batch` used to
+    /// compute `deadline - now` after a staleness check, and the clock
+    /// could pass `deadline` in between — panicking on Duration
+    /// underflow. With a zero timeout every iteration sits exactly on
+    /// the boundary, so this loop would have tripped the old code.
+    #[test]
+    fn zero_timeout_boundary_never_panics() {
+        let b = Batcher::new(BatcherConfig {
+            batch_size: 64,
+            batch_timeout: Duration::ZERO,
+            shed_after: None,
+        });
+        for round in 0..200 {
+            let (tx, rx) = mpsc::channel();
+            for i in 0..4 {
+                let (r, keep) = req(i as f32);
+                std::mem::forget(keep);
+                tx.send(r).unwrap();
+            }
+            let batch = b.next_batch(&rx).expect("queued requests present");
+            assert!(!batch.is_empty(), "round {round}: boundary batch must not be empty");
+        }
+    }
+
+    /// Requests older than `shed_after` are answered with a typed shed
+    /// error before execution; fresh batch-mates still run normally.
+    #[test]
+    fn dispatch_sheds_aged_requests_only() {
+        let b = Batcher::new(BatcherConfig {
+            batch_size: 8,
+            batch_timeout: Duration::from_millis(1),
+            shed_after: Some(Duration::from_millis(20)),
+        });
+        let metrics = MetricsRegistry::new();
+        let (mut stale, stale_rx) = req(1.0);
+        stale.enqueued_at = Instant::now() - Duration::from_millis(200);
+        let (fresh, fresh_rx) = req(3.0);
+        b.dispatch(vec![stale, fresh], &Echo { batch: 8 }, &metrics);
+        let shed = stale_rx.recv().unwrap().unwrap_err();
+        assert!(
+            shed.starts_with(crate::coordinator::protocol::ERR_SHED_PREFIX),
+            "shed error must carry the typed prefix, got: {shed}"
+        );
+        assert_eq!(fresh_rx.recv().unwrap().unwrap(), vec![6.0]);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests_shed, 1);
+        assert_eq!(snap.requests, 1, "only the fresh request counts as served");
+    }
+
+    /// A panicking executor must not swallow responses: every request
+    /// in the batch receives an error and the panic counter moves.
+    #[test]
+    fn dispatch_contains_worker_panics() {
+        struct Blows;
+        impl BatchExecutor for Blows {
+            fn max_batch(&self) -> usize {
+                4
+            }
+            fn execute(&self, _: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+                panic!("injected for test");
+            }
+        }
+        let b = Batcher::new(BatcherConfig::default());
+        let metrics = MetricsRegistry::new();
+        let (r1, rx1) = req(1.0);
+        let (r2, rx2) = req(2.0);
+        // Silence the default panic hook for the intentional panic so
+        // test output stays readable; restore it afterwards.
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        b.dispatch(vec![r1, r2], &Blows, &metrics);
+        std::panic::set_hook(hook);
+        let e1 = rx1.recv().unwrap().unwrap_err();
+        let e2 = rx2.recv().unwrap().unwrap_err();
+        assert!(e1.contains("worker panic"), "got: {e1}");
+        assert!(e2.contains("injected for test"), "got: {e2}");
+        assert_eq!(metrics.snapshot().worker_panics, 1);
     }
 
     #[test]

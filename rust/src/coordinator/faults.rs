@@ -1,0 +1,368 @@
+//! Deterministic fault injection for the serving stack: a seeded
+//! [`FaultPlan`] drives frame corruption, response drops/duplication,
+//! client disconnects, injected latency and worker panics — the chaos
+//! harness behind `tests/serving_faults.rs` and the `loadgen` soak.
+//!
+//! Zero cost when off: [`Faults::new`] returns `None` for an all-zero
+//! plan, so the serving paths carry an `Option<Arc<Faults>>` that is
+//! `None` in production and never rolls a die.
+//!
+//! Injection points (and who applies them):
+//!
+//! | fault              | site                          | detected by            |
+//! |--------------------|-------------------------------|------------------------|
+//! | corrupt_frame      | [`FaultyExecutor`] / TCP front| frame checksum         |
+//! | drop_response      | TCP response writer           | client req-id ledger   |
+//! | duplicate_response | TCP response writer           | client req-id ledger   |
+//! | disconnect         | loadgen client (mid-stream)   | reconnect + re-lease   |
+//! | latency            | [`FaultyExecutor`]            | latency percentiles    |
+//! | panic_worker       | [`FaultyExecutor`]            | batcher `catch_unwind` |
+//!
+//! Every probability draw flows through one seeded [`Pcg`] behind a
+//! mutex, so a `(plan, seed)` pair replays the same fault schedule for
+//! a serialized request sequence — the REPRO contract of the chaos
+//! test.
+
+use super::batcher::BatchExecutor;
+use super::protocol;
+use crate::ml::rng::Pcg;
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::Mutex;
+use std::time::Duration;
+
+/// Seeded fault schedule. All probabilities are per-event in `[0, 1]`;
+/// an all-zero plan is "off" and costs nothing at runtime.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// RNG seed: the same `(plan, seed)` replays the same schedule.
+    pub seed: u64,
+    /// Probability a request frame is corrupted (one byte flipped)
+    /// before it reaches the decoder.
+    pub corrupt_frame: f64,
+    /// Probability the TCP writer silently drops a response frame.
+    pub drop_response: f64,
+    /// Probability the TCP writer sends a response frame twice.
+    pub duplicate_response: f64,
+    /// Probability a loadgen client disconnects mid-stream.
+    pub disconnect: f64,
+    /// Probability a request's execution is delayed by `latency_ms`.
+    pub latency: f64,
+    /// Injected delay magnitude (only read when `latency` fires).
+    pub latency_ms: u64,
+    /// Probability the worker panics *before* touching session state
+    /// (the batcher's `catch_unwind` must fan it out as per-request
+    /// errors without losing a response or poisoning a session).
+    pub panic_worker: f64,
+}
+
+impl FaultPlan {
+    /// All faults disabled.
+    pub fn off() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Is every fault probability zero?
+    pub fn is_off(&self) -> bool {
+        self.corrupt_frame == 0.0
+            && self.drop_response == 0.0
+            && self.duplicate_response == 0.0
+            && self.disconnect == 0.0
+            && self.latency == 0.0
+            && self.panic_worker == 0.0
+    }
+
+    /// A moderate mixed schedule for soaks: every fault class enabled
+    /// at rates low enough that most traffic still succeeds.
+    pub fn chaos(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            corrupt_frame: 0.02,
+            drop_response: 0.01,
+            duplicate_response: 0.01,
+            disconnect: 0.002,
+            latency: 0.02,
+            latency_ms: 2,
+            panic_worker: 0.005,
+        }
+    }
+}
+
+/// Point-in-time injection counters (what the plan actually did).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    pub frames_corrupted: u64,
+    pub responses_dropped: u64,
+    pub responses_duplicated: u64,
+    pub disconnects: u64,
+    pub delays_injected: u64,
+    pub panics_injected: u64,
+}
+
+/// Runtime fault injector: the seeded die plus injection counters.
+pub struct Faults {
+    plan: FaultPlan,
+    rng: Mutex<Pcg>,
+    frames_corrupted: AtomicU64,
+    responses_dropped: AtomicU64,
+    responses_duplicated: AtomicU64,
+    disconnects: AtomicU64,
+    delays_injected: AtomicU64,
+    panics_injected: AtomicU64,
+}
+
+impl Faults {
+    /// Build the injector — `None` when the plan is off, so disabled
+    /// fault config is zero-cost on every serving path.
+    pub fn new(plan: &FaultPlan) -> Option<std::sync::Arc<Faults>> {
+        if plan.is_off() {
+            return None;
+        }
+        Some(std::sync::Arc::new(Faults {
+            plan: plan.clone(),
+            rng: Mutex::new(Pcg::new(plan.seed, 0xFA17)),
+            frames_corrupted: AtomicU64::new(0),
+            responses_dropped: AtomicU64::new(0),
+            responses_duplicated: AtomicU64::new(0),
+            disconnects: AtomicU64::new(0),
+            delays_injected: AtomicU64::new(0),
+            panics_injected: AtomicU64::new(0),
+        }))
+    }
+
+    /// The schedule this injector runs.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// One Bernoulli draw plus a u32 payload for site selection, from
+    /// the shared seeded stream. Poison recovery: the RNG state is
+    /// always valid, so a panicked sibling must not silence faults.
+    fn roll(&self, p: f64) -> Option<u32> {
+        if p <= 0.0 {
+            return None;
+        }
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+        if rng.uniform() < p {
+            Some(rng.next_u32())
+        } else {
+            None
+        }
+    }
+
+    /// Maybe flip one byte of a frame payload (checksum territory —
+    /// never the first byte, so the frame still parses far enough to
+    /// reach the checksum). Returns whether corruption was applied.
+    pub fn corrupt_payload(&self, payload: &mut [u8]) -> bool {
+        if payload.len() < 2 {
+            return false;
+        }
+        match self.roll(self.plan.corrupt_frame) {
+            Some(die) => {
+                let at = 1 + (die as usize) % (payload.len() - 1);
+                payload[at] ^= 1u8 << (die % 8);
+                self.frames_corrupted.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Pre-execution hook: inject latency, then maybe panic the worker.
+    /// The panic fires *before* any session state is touched, so the
+    /// exactly-one-response and session-integrity invariants survive it.
+    pub fn before_execute(&self) {
+        if self.roll(self.plan.latency).is_some() {
+            self.delays_injected.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(self.plan.latency_ms));
+        }
+        if self.roll(self.plan.panic_worker).is_some() {
+            self.panics_injected.fetch_add(1, Ordering::Relaxed);
+            // lint: allow(unchecked-panic) — the whole point of this
+            // injector: a deliberate worker panic the batcher's
+            // catch_unwind must convert into per-request errors.
+            panic!("fault-injected worker panic");
+        }
+    }
+
+    /// Should the TCP writer drop the next response frame?
+    pub fn take_drop_response(&self) -> bool {
+        let hit = self.roll(self.plan.drop_response).is_some();
+        if hit {
+            self.responses_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Should the TCP writer send the next response frame twice?
+    pub fn take_duplicate_response(&self) -> bool {
+        let hit = self.roll(self.plan.duplicate_response).is_some();
+        if hit {
+            self.responses_duplicated.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Should a loadgen client tear its connection down now?
+    pub fn take_disconnect(&self) -> bool {
+        let hit = self.roll(self.plan.disconnect).is_some();
+        if hit {
+            self.disconnects.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Injection counters so far.
+    pub fn counters(&self) -> FaultCounters {
+        FaultCounters {
+            frames_corrupted: self.frames_corrupted.load(Ordering::Relaxed),
+            responses_dropped: self.responses_dropped.load(Ordering::Relaxed),
+            responses_duplicated: self.responses_duplicated.load(Ordering::Relaxed),
+            disconnects: self.disconnects.load(Ordering::Relaxed),
+            delays_injected: self.delays_injected.load(Ordering::Relaxed),
+            panics_injected: self.panics_injected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A [`BatchExecutor`] wrapper that injects request-path faults
+/// (latency, worker panics, frame corruption) in front of `inner`.
+/// Corruption targets typed-wire word payloads (flipping a byte the
+/// checksum must catch) and falls back to NaN-poisoning a legacy value
+/// — either way the request must fail alone, typed.
+pub struct FaultyExecutor<E: BatchExecutor> {
+    inner: E,
+    faults: std::sync::Arc<Faults>,
+}
+
+impl<E: BatchExecutor> FaultyExecutor<E> {
+    pub fn new(inner: E, faults: std::sync::Arc<Faults>) -> Self {
+        FaultyExecutor { inner, faults }
+    }
+
+    fn maul(&self, input: &[f32]) -> Vec<f32> {
+        let mut words = input.to_vec();
+        if protocol::is_typed_words(&words) && words.len() > 2 {
+            if let Some(die) = self.faults.roll(self.faults.plan.corrupt_frame) {
+                // Flip a byte inside the payload words (past magic +
+                // length, so the frame still reaches the checksum).
+                let at = 2 + (die as usize) % (words.len() - 2);
+                let bits = words[at].to_bits() ^ (1u32 << (die % 32));
+                words[at] = f32::from_bits(bits);
+                self.faults.frames_corrupted.fetch_add(1, Ordering::Relaxed);
+            }
+        } else if !words.is_empty() && self.faults.roll(self.faults.plan.corrupt_frame).is_some() {
+            let last = words.len() - 1;
+            words[last] = f32::NAN;
+            self.faults.frames_corrupted.fetch_add(1, Ordering::Relaxed);
+        }
+        words
+    }
+}
+
+impl<E: BatchExecutor> BatchExecutor for FaultyExecutor<E> {
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        self.execute_each(inputs).into_iter().collect()
+    }
+
+    fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
+        self.faults.before_execute();
+        let mauled: Vec<Vec<f32>> = inputs.iter().map(|i| self.maul(i)).collect();
+        self.inner.execute_each(&mauled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_plan_builds_no_injector() {
+        assert!(FaultPlan::off().is_off());
+        assert!(Faults::new(&FaultPlan::off()).is_none());
+        assert!(!FaultPlan::chaos(1).is_off());
+        assert!(Faults::new(&FaultPlan::chaos(1)).is_some());
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_schedule() {
+        let plan = FaultPlan { seed: 9, corrupt_frame: 0.5, ..FaultPlan::default() };
+        let run = || {
+            let f = Faults::new(&plan).expect("plan is on");
+            (0..64).map(|_| f.roll(plan.corrupt_frame).is_some()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "seeded schedules must replay bit-identically");
+        let other = Faults::new(&FaultPlan { seed: 10, ..plan.clone() }).expect("on");
+        let b: Vec<bool> = (0..64).map(|_| other.roll(plan.corrupt_frame).is_some()).collect();
+        assert_ne!(run(), b, "a different seed must give a different schedule");
+    }
+
+    #[test]
+    fn corruption_always_breaks_the_checksum() {
+        let plan = FaultPlan { seed: 3, corrupt_frame: 1.0, ..FaultPlan::default() };
+        let faults = Faults::new(&plan).expect("on");
+        for id in 0..32u64 {
+            let req = protocol::StreamRequest::Update {
+                session: 1,
+                rows: vec![0, 2],
+                channels: 1,
+                values: vec![0.5, -0.5],
+            };
+            let mut payload = protocol::encode_request(&req, id);
+            assert!(faults.corrupt_payload(&mut payload));
+            assert!(
+                protocol::decode_request(&payload).is_err(),
+                "flipped byte must never decode cleanly (id {id})"
+            );
+        }
+        assert_eq!(faults.counters().frames_corrupted, 32);
+    }
+
+    #[test]
+    fn faulty_executor_panic_is_injected_before_delegation() {
+        struct Inner;
+        impl BatchExecutor for Inner {
+            fn max_batch(&self) -> usize {
+                1
+            }
+            fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+                Ok(inputs.to_vec())
+            }
+        }
+        let plan = FaultPlan { seed: 1, panic_worker: 1.0, ..FaultPlan::default() };
+        let faults = Faults::new(&plan).expect("on");
+        let exec = FaultyExecutor::new(Inner, std::sync::Arc::clone(&faults));
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec.execute_each(&[vec![1.0]])
+        }));
+        assert!(caught.is_err(), "panic_worker = 1.0 must panic");
+        assert_eq!(faults.counters().panics_injected, 1);
+    }
+
+    #[test]
+    fn counters_track_each_fault_class() {
+        let plan = FaultPlan {
+            seed: 5,
+            drop_response: 1.0,
+            duplicate_response: 1.0,
+            disconnect: 1.0,
+            latency: 1.0,
+            latency_ms: 0,
+            ..FaultPlan::default()
+        };
+        let f = Faults::new(&plan).expect("on");
+        assert!(f.take_drop_response());
+        assert!(f.take_duplicate_response());
+        assert!(f.take_disconnect());
+        f.before_execute(); // latency only (panic_worker = 0)
+        let c = f.counters();
+        assert_eq!(c.responses_dropped, 1);
+        assert_eq!(c.responses_duplicated, 1);
+        assert_eq!(c.disconnects, 1);
+        assert_eq!(c.delays_injected, 1);
+        assert_eq!(c.panics_injected, 0);
+    }
+}

@@ -32,6 +32,7 @@
 
 use super::batcher::BatchExecutor;
 use super::metrics::{MetricsRegistry, MetricsSnapshot};
+use super::protocol::{self, RejectReason, StreamRequest, StreamResponse};
 use crate::ftfi::functions::FDist;
 use crate::ftfi::streaming::{SharedPlans, StreamingIntegrator};
 use crate::ftfi::{FieldIntegrator, FtfiError, TreeFieldIntegrator};
@@ -40,8 +41,10 @@ use crate::linalg::matrix::Matrix;
 use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
 // Session locks come from the crate-wide sync shim so loom can model the
 // set-vs-update race; Arc deliberately stays `std` (see `crate::sync`).
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::sync::Mutex;
 use crate::tree::integrator_tree::PreparedPlans;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -184,43 +187,59 @@ pub const STREAM_OP_UPDATE: f32 = 1.0;
 /// of the shared metric (every session sees the change).
 pub const STREAM_OP_REPLAN: f32 = 2.0;
 
-/// Parse a non-negative integral f32 below `limit` (session ids, row
-/// counts and row indices on the f32 wire; integers are exact in f32 up
-/// to 2²⁴, far above any supported `n`).
-fn parse_index(v: f32, limit: usize, what: &str) -> Result<usize, String> {
-    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || (v as usize) >= limit {
-        return Err(format!("{what} {v} invalid (expected an integer in 0..{limit})"));
-    }
-    Ok(v as usize)
+/// Default bound on concurrently in-flight updates per session before
+/// admission control answers `Rejected { SessionBusy }`.
+pub const DEFAULT_MAX_PENDING: usize = 32;
+
+/// One leased session: the integrator behind its serialising mutex,
+/// plus the admission-control state (in-flight counter, LRU stamp).
+struct SessionEntry {
+    cell: Mutex<StreamingIntegrator>,
+    pending: AtomicUsize,
+    last_used: AtomicU64,
 }
 
 /// Serve the streaming/online workload: per-session
-/// [`StreamingIntegrator`]s (bounded by `max_sessions`) sharing one
-/// tree, one frozen plan set and one work pool. Requests ride the
-/// coordinator's `Vec<f32>` wire:
+/// [`StreamingIntegrator`]s sharing one tree, one frozen plan set and
+/// one work pool. Requests ride the coordinator's `Vec<f32>` queue in
+/// one of two encodings, told apart by the first word:
 ///
-/// ```text
-/// set:    [0.0, session, field…]            field = n·d values, d = len/n
-/// update: [1.0, session, k, row…, values…]  k rows then k·d values
-/// replan: [2.0, session, u, v, w]           reweight tree edge {u, v}
-/// ```
+/// - **Typed** ([`protocol`]): a NaN-boxed frame payload carrying a
+///   [`StreamRequest`] (`Set`/`Update`/`ReplanEdge`/`Close`/`Lease`);
+///   the response is a [`StreamResponse`] frame with the request's id
+///   echoed. Decode failures return `Err("protocol: …")`, which the
+///   server boundary maps to `ServerError::Protocol` — the frame fails
+///   alone.
+/// - **Legacy** (`[op, session, …]` f32, the `--wire legacy` shim):
+///   parsed into the same typed enum by [`protocol::legacy_to_request`]
+///   at this boundary, answered with the bare `n·d` output vector the
+///   old wire promised.
 ///
-/// All three return the session's full `n·d` output. Updates run the
-/// sparse delta fast path with the session's `refresh_every` drift
-/// policy; replans reweight one edge of the *shared* metric in place
-/// (the O(log n) in-place re-plan, see DESIGN.md "Dynamic graphs & edge
-/// re-plans") — the issuing session's output is refreshed eagerly and
-/// returned, sibling sessions refresh lazily on their next request. A
-/// malformed request (unknown opcode/session, bad row, non-tree edge,
-/// bad weight, shape mismatch) fails alone — the session keeps its
-/// state, the shared plans stay untouched, and batch-mates keep their
-/// responses. Sessions are `Mutex`-guarded, so concurrent batch fan-out
-/// over *different* sessions parallelises while same-session updates
-/// serialise (arrival order within one fused batch is unspecified —
-/// clients that need ordering submit one in-flight update per session).
-/// Lock ordering: the session mutex is always taken before the shared
-/// plan lock (never the reverse), so update/replan interleavings cannot
-/// deadlock.
+/// **Admission control**: sessions are *leased* entries in a
+/// `max_sessions`-bounded table keyed by client-chosen `u32` ids. A
+/// `Set` for a new id evicts the least-recently-used lease when the
+/// table is full (the victim's later requests get a typed
+/// `Rejected { Evicted }` until it re-`Set`s — the evicted-id ledger
+/// holds one entry per distinct evicted id and is cleared by re-`Set`
+/// or `Close`). Per-session in-flight updates are bounded by
+/// `max_pending`; excess gets `Rejected { SessionBusy }`.
+///
+/// Updates run the sparse delta fast path with the session's
+/// `refresh_every` drift policy; replans reweight one edge of the
+/// *shared* metric in place (the O(log n) in-place re-plan, see
+/// DESIGN.md "Dynamic graphs & edge re-plans") — the issuing session's
+/// output is refreshed eagerly and returned, sibling sessions refresh
+/// lazily on their next request. A malformed request (unknown
+/// opcode/session, bad row, non-tree edge, bad weight, shape mismatch)
+/// fails alone — the session keeps its state, the shared plans stay
+/// untouched, and batch-mates keep their responses. Sessions are
+/// `Mutex`-guarded, so concurrent batch fan-out over *different*
+/// sessions parallelises while same-session updates serialise (arrival
+/// order within one fused batch is unspecified — clients that need
+/// ordering submit one in-flight update per session). Lock ordering:
+/// session table before evicted ledger, session mutex before the shared
+/// plan lock (never the reverse), so update/replan/evict interleavings
+/// cannot deadlock.
 pub struct StreamingFieldExecutor {
     shared: Arc<SharedPlans>,
     /// Cached from the integrator at construction (the integrator now
@@ -230,7 +249,11 @@ pub struct StreamingFieldExecutor {
     pool: Arc<WorkPool>,
     refresh_every: usize,
     max_batch: usize,
-    sessions: Vec<Mutex<Option<StreamingIntegrator>>>,
+    capacity: usize,
+    max_pending: usize,
+    sessions: Mutex<BTreeMap<u32, Arc<SessionEntry>>>,
+    evicted: Mutex<BTreeSet<u32>>,
+    clock: AtomicU64,
     metrics: Arc<MetricsRegistry>,
 }
 
@@ -250,7 +273,6 @@ impl StreamingFieldExecutor {
         let n = tfi.n();
         let precision = plans.precision();
         let pool = Arc::clone(tfi.pool());
-        let sessions = (0..max_sessions.max(1)).map(|_| Mutex::new(None)).collect();
         Ok(StreamingFieldExecutor {
             shared: Arc::new(SharedPlans::new(tfi, plans)),
             n,
@@ -258,9 +280,29 @@ impl StreamingFieldExecutor {
             pool,
             refresh_every,
             max_batch: max_batch.max(1),
-            sessions,
+            capacity: max_sessions.max(1),
+            max_pending: DEFAULT_MAX_PENDING,
+            sessions: Mutex::new(BTreeMap::new()),
+            evicted: Mutex::new(BTreeSet::new()),
+            clock: AtomicU64::new(0),
             metrics: Arc::new(MetricsRegistry::new()),
         })
+    }
+
+    /// Bound the per-session in-flight update count (admission control;
+    /// 0 is clamped to 1 — a session that can never accept an update
+    /// could never serve).
+    pub fn with_max_pending(mut self, max_pending: usize) -> Self {
+        self.max_pending = max_pending.max(1);
+        self
+    }
+
+    /// Record into a caller-provided registry (share it with the
+    /// server via `InferenceServer::start_with_metrics`, so evictions
+    /// and decode failures land in the snapshot the server reports).
+    pub fn with_metrics(mut self, metrics: Arc<MetricsRegistry>) -> Self {
+        self.metrics = metrics;
+        self
     }
 
     /// Number of vertices a session field must cover.
@@ -268,9 +310,9 @@ impl StreamingFieldExecutor {
         self.n
     }
 
-    /// Session slots.
+    /// Session lease capacity.
     pub fn max_sessions(&self) -> usize {
-        self.sessions.len()
+        self.capacity
     }
 
     /// The serving tier inherited from the integrator at plan-freeze
@@ -292,93 +334,285 @@ impl StreamingFieldExecutor {
         &self.metrics
     }
 
-    fn run_one(&self, input: &[f32]) -> Result<Vec<f32>, String> {
-        if input.len() < 2 {
-            return Err("streaming request needs [op, session, …]".to_string());
+    /// Advance the LRU clock and stamp `entry` as just-used.
+    fn bump(&self, entry: &SessionEntry) {
+        let t = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        entry.last_used.store(t, Ordering::Relaxed);
+    }
+
+    /// Resolve a session id to its leased entry, or the typed response
+    /// explaining why it has none (`Rejected { Evicted }` for victims
+    /// of LRU pressure, an `Error` for ids never `Set`). Table-lock
+    /// poisoning is recovered — the map structure is always valid.
+    fn lookup(&self, session: u32) -> Result<Arc<SessionEntry>, StreamResponse> {
+        let table = self.sessions.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(entry) = table.get(&session) {
+            let entry = Arc::clone(entry);
+            drop(table);
+            self.bump(&entry);
+            return Ok(entry);
         }
-        let sid = parse_index(input[1], self.sessions.len(), "session")?;
-        if input[0] == STREAM_OP_SET {
-            self.run_set(sid, &input[2..])
-        } else if input[0] == STREAM_OP_UPDATE {
-            let t0 = Instant::now();
-            let out = self.run_update(sid, &input[2..])?;
-            self.metrics.record_update_latency(t0.elapsed().as_secs_f64());
-            Ok(out)
-        } else if input[0] == STREAM_OP_REPLAN {
-            self.run_replan(sid, &input[2..])
+        drop(table);
+        let evicted = self.evicted.lock().unwrap_or_else(|e| e.into_inner());
+        if evicted.contains(&session) {
+            Err(StreamResponse::Rejected {
+                reason: RejectReason::Evicted,
+                retry_after_hint_ms: 1,
+            })
         } else {
-            Err(format!("unknown streaming opcode {} (0 = set, 1 = update, 2 = replan)", input[0]))
+            Err(StreamResponse::Error {
+                message: format!("session {session} not initialised (send a set request first)"),
+            })
         }
     }
 
-    fn run_set(&self, sid: usize, payload: &[f32]) -> Result<Vec<f32>, String> {
+    /// Execute one typed request against the session table. Every
+    /// outcome is a typed response — this method never panics and never
+    /// poisons a session on a failed request.
+    pub fn execute_request(&self, req: &StreamRequest) -> StreamResponse {
+        match req {
+            StreamRequest::Set { session, rows, channels, values } => {
+                self.exec_set(*session, *rows, *channels, values)
+            }
+            StreamRequest::Update { session, rows, channels, values } => {
+                let t0 = Instant::now();
+                let resp = self.exec_update(*session, rows, *channels, values);
+                if matches!(resp, StreamResponse::Output { .. }) {
+                    self.metrics.record_update_latency(t0.elapsed().as_secs_f64());
+                }
+                resp
+            }
+            StreamRequest::ReplanEdge { session, u, v, w } => {
+                self.exec_replan(*session, *u, *v, *w)
+            }
+            StreamRequest::Close { session } => self.exec_close(*session),
+            StreamRequest::Lease { session } => self.exec_lease(*session),
+        }
+    }
+
+    fn exec_set(&self, session: u32, rows: u32, channels: u32, values: &[f32]) -> StreamResponse {
         let n = self.n;
-        if n == 0 || payload.is_empty() || payload.len() % n != 0 {
-            return Err(FtfiError::ShapeMismatch { expected: n, got: payload.len() }.to_string());
+        if rows as usize != n || channels == 0 {
+            return StreamResponse::Error {
+                message: FtfiError::ShapeMismatch { expected: n, got: values.len() }.to_string(),
+            };
         }
-        let d = payload.len() / n;
-        let field = Matrix::from_vec(n, d, payload.iter().map(|&v| v as f64).collect());
-        let session =
-            StreamingIntegrator::new(Arc::clone(&self.shared), field, self.refresh_every)
-                .map_err(|e| e.to_string())?;
-        let out = session.output().data().iter().map(|&v| v as f32).collect();
-        // A poisoned slot means another request panicked mid-session;
-        // fail this request instead of cascading the panic.
-        let mut guard = self.sessions[sid]
-            .lock()
-            .map_err(|_| format!("session {sid} poisoned by an earlier panic"))?;
-        *guard = Some(session);
-        Ok(out)
+        let d = channels as usize;
+        let field = Matrix::from_vec(n, d, values.iter().map(|&v| v as f64).collect());
+        let integ =
+            match StreamingIntegrator::new(Arc::clone(&self.shared), field, self.refresh_every) {
+                Ok(s) => s,
+                Err(e) => return StreamResponse::Error { message: e.to_string() },
+            };
+        let out: Vec<f32> = integ.output().data().iter().map(|&v| v as f32).collect();
+        let mut table = self.sessions.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(entry) = table.get(&session) {
+            // Re-`Set` of a live lease: swap the integrator in place so
+            // concurrent same-session requests stay serialised.
+            let entry = Arc::clone(entry);
+            drop(table);
+            match entry.cell.lock() {
+                Ok(mut cell) => *cell = integ,
+                Err(_) => {
+                    return StreamResponse::Error {
+                        message: format!("session {session} poisoned by an earlier panic"),
+                    }
+                }
+            }
+            self.bump(&entry);
+        } else {
+            if table.len() >= self.capacity {
+                // LRU eviction: the victim's id moves to the evicted
+                // ledger so its later requests get a typed rejection.
+                let victim = table
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                    .map(|(&id, _)| id);
+                if let Some(victim) = victim {
+                    table.remove(&victim);
+                    self.evicted.lock().unwrap_or_else(|e| e.into_inner()).insert(victim);
+                    self.metrics.record_eviction();
+                }
+            }
+            let entry = Arc::new(SessionEntry {
+                cell: Mutex::new(integ),
+                pending: AtomicUsize::new(0),
+                last_used: AtomicU64::new(0),
+            });
+            self.bump(&entry);
+            table.insert(session, entry);
+            drop(table);
+            // A re-`Set` re-admits a previously evicted id.
+            self.evicted.lock().unwrap_or_else(|e| e.into_inner()).remove(&session);
+        }
+        StreamResponse::Output { session, rows, channels, values: out }
     }
 
-    /// `[u, v, w]` payload: reweight the tree edge `{u, v}` to `w`.
-    /// The session mutex is taken *before* the shared plan lock (the
-    /// crate-wide lock order); validation failures surface as this
-    /// request's error with the plans and every session untouched.
-    fn run_replan(&self, sid: usize, payload: &[f32]) -> Result<Vec<f32>, String> {
-        if payload.len() != 3 {
-            return Err(format!("replan needs [u, v, w], got {} values", payload.len()));
+    fn exec_update(
+        &self,
+        session: u32,
+        rows: &[u32],
+        channels: u32,
+        values: &[f32],
+    ) -> StreamResponse {
+        let entry = match self.lookup(session) {
+            Ok(e) => e,
+            Err(resp) => return resp,
+        };
+        // Bounded per-session in-flight updates: the counter spans the
+        // cell-lock wait, so a flooded session sheds instead of growing
+        // an unbounded convoy on its mutex.
+        if entry.pending.fetch_add(1, Ordering::Relaxed) >= self.max_pending {
+            entry.pending.fetch_sub(1, Ordering::Relaxed);
+            return StreamResponse::Rejected {
+                reason: RejectReason::SessionBusy,
+                retry_after_hint_ms: 2,
+            };
         }
-        let u = parse_index(payload[0], self.n, "vertex")?;
-        let v = parse_index(payload[1], self.n, "vertex")?;
-        let w = payload[2] as f64;
-        let mut guard = self.sessions[sid]
-            .lock()
-            .map_err(|_| format!("session {sid} poisoned by an earlier panic"))?;
-        let session = guard
-            .as_mut()
-            .ok_or_else(|| format!("session {sid} not initialised (send a set request first)"))?;
-        session.update_edge(u, v, w).map_err(|e| e.to_string())?;
-        Ok(session.output().data().iter().map(|&v| v as f32).collect())
+        let resp = self.exec_update_locked(&entry, session, rows, channels, values);
+        entry.pending.fetch_sub(1, Ordering::Relaxed);
+        resp
     }
 
-    fn run_update(&self, sid: usize, payload: &[f32]) -> Result<Vec<f32>, String> {
+    fn exec_update_locked(
+        &self,
+        entry: &SessionEntry,
+        session: u32,
+        rows: &[u32],
+        channels: u32,
+        values: &[f32],
+    ) -> StreamResponse {
         let n = self.n;
-        if payload.is_empty() {
-            return Err("update needs [k, rows…, values…]".to_string());
+        for &r in rows {
+            if r as usize >= n {
+                return StreamResponse::Error {
+                    message: format!("row {r} invalid (expected an integer in 0..{n})"),
+                };
+            }
         }
-        let k = parse_index(payload[0], n + 1, "row count")?;
-        if payload.len() < 1 + k {
-            return Err(format!("update lists {k} rows but carries {}", payload.len() - 1));
+        let mut cell = match entry.cell.lock() {
+            Ok(c) => c,
+            Err(_) => {
+                return StreamResponse::Error {
+                    message: format!("session {session} poisoned by an earlier panic"),
+                }
+            }
+        };
+        let d = cell.channels();
+        // channels = 0 is the legacy shim's "infer from the session";
+        // a typed non-zero width must match the lease it addresses.
+        if channels != 0 && channels as usize != d {
+            return StreamResponse::Error {
+                message: format!("update width {channels} does not match the session's {d}"),
+            };
         }
-        let mut rows = Vec::with_capacity(k);
-        for &r in &payload[1..1 + k] {
-            rows.push(parse_index(r, n, "row")? as u32);
+        let k = rows.len();
+        if values.len() != k * d {
+            return StreamResponse::Error {
+                message: FtfiError::ShapeMismatch { expected: k * d, got: values.len() }
+                    .to_string(),
+            };
         }
-        let vals = &payload[1 + k..];
-        let mut guard = self.sessions[sid]
-            .lock()
-            .map_err(|_| format!("session {sid} poisoned by an earlier panic"))?;
-        let session = guard
-            .as_mut()
-            .ok_or_else(|| format!("session {sid} not initialised (send a set request first)"))?;
-        let d = session.channels();
-        if vals.len() != k * d {
-            return Err(FtfiError::ShapeMismatch { expected: k * d, got: vals.len() }.to_string());
+        let vm = Matrix::from_vec(k, d, values.iter().map(|&v| v as f64).collect());
+        match cell.apply_update(rows, &vm) {
+            Ok(out) => StreamResponse::Output {
+                session,
+                rows: n as u32,
+                channels: d as u32,
+                values: out.data().iter().map(|&v| v as f32).collect(),
+            },
+            Err(e) => StreamResponse::Error { message: e.to_string() },
         }
-        let values = Matrix::from_vec(k, d, vals.iter().map(|&v| v as f64).collect());
-        let out = session.apply_update(&rows, &values).map_err(|e| e.to_string())?;
-        Ok(out.data().iter().map(|&v| v as f32).collect())
+    }
+
+    /// Reweight the tree edge `{u, v}` to `w`. The session mutex is
+    /// taken *before* the shared plan lock (the crate-wide lock order);
+    /// validation failures surface as this request's typed error with
+    /// the plans and every session untouched.
+    fn exec_replan(&self, session: u32, u: u32, v: u32, w: f64) -> StreamResponse {
+        let n = self.n;
+        if u as usize >= n || v as usize >= n {
+            return StreamResponse::Error {
+                message: format!("vertex invalid (expected an integer in 0..{n})"),
+            };
+        }
+        let entry = match self.lookup(session) {
+            Ok(e) => e,
+            Err(resp) => return resp,
+        };
+        let mut cell = match entry.cell.lock() {
+            Ok(c) => c,
+            Err(_) => {
+                return StreamResponse::Error {
+                    message: format!("session {session} poisoned by an earlier panic"),
+                }
+            }
+        };
+        if let Err(e) = cell.update_edge(u as usize, v as usize, w) {
+            return StreamResponse::Error { message: e.to_string() };
+        }
+        StreamResponse::Output {
+            session,
+            rows: n as u32,
+            channels: cell.channels() as u32,
+            values: cell.output().data().iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Release a lease. Idempotent: closing an unknown or already
+    /// evicted id still acknowledges with `Closed`.
+    fn exec_close(&self, session: u32) -> StreamResponse {
+        self.sessions.lock().unwrap_or_else(|e| e.into_inner()).remove(&session);
+        self.evicted.lock().unwrap_or_else(|e| e.into_inner()).remove(&session);
+        StreamResponse::Closed { session }
+    }
+
+    /// Touch a lease and return its current (possibly lazily-stale)
+    /// output.
+    fn exec_lease(&self, session: u32) -> StreamResponse {
+        let entry = match self.lookup(session) {
+            Ok(e) => e,
+            Err(resp) => return resp,
+        };
+        let cell = match entry.cell.lock() {
+            Ok(c) => c,
+            Err(_) => {
+                return StreamResponse::Error {
+                    message: format!("session {session} poisoned by an earlier panic"),
+                }
+            }
+        };
+        StreamResponse::Output {
+            session,
+            rows: self.n as u32,
+            channels: cell.channels() as u32,
+            values: cell.output().data().iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// One queue request, either encoding. Typed frames answer with
+    /// typed response frames (decode failures become `protocol:`-tagged
+    /// errors); legacy frames answer with the bare output vector the
+    /// old wire promised.
+    fn run_one(&self, input: &[f32]) -> Result<Vec<f32>, String> {
+        if protocol::is_typed_words(input) {
+            let (req_id, req) = protocol::words_to_payload(input)
+                .and_then(|payload| protocol::decode_request(&payload))
+                .map_err(|e| {
+                    self.metrics.record_protocol_error();
+                    format!("{}{e}", protocol::ERR_PROTOCOL_PREFIX)
+                })?;
+            let resp = self.execute_request(&req);
+            Ok(protocol::payload_to_words(&protocol::encode_response(&resp, req_id)))
+        } else {
+            let req = protocol::legacy_to_request(input, self.n)?;
+            match self.execute_request(&req) {
+                StreamResponse::Output { values, .. } => Ok(values),
+                StreamResponse::Closed { .. } => Ok(Vec::new()),
+                StreamResponse::Rejected { reason, .. } => Err(format!("rejected: {reason:?}")),
+                StreamResponse::Error { message } => Err(message),
+            }
+        }
     }
 }
 
@@ -462,7 +696,11 @@ mod tests {
                 Box::new(PreparedFieldExecutor::new(tfi, &f, 1, 4).expect("plannable f"))
                     as Box<dyn BatchExecutor>
             })],
-            BatcherConfig { batch_size: 1, batch_timeout: Duration::from_millis(1) },
+            BatcherConfig {
+                batch_size: 1,
+                batch_timeout: Duration::from_millis(1),
+                shed_after: None,
+            },
             64,
         );
         // Wrong-length field: must come back as ServerError::Exec (the
@@ -686,7 +924,11 @@ mod tests {
             .collect();
         let server = InferenceServer::start(
             factories,
-            BatcherConfig { batch_size: 4, batch_timeout: Duration::from_millis(1) },
+            BatcherConfig {
+                batch_size: 4,
+                batch_timeout: Duration::from_millis(1),
+                shed_after: None,
+            },
             64,
         );
         let field = vec![1.0f32; n];
@@ -714,6 +956,202 @@ mod tests {
         assert_eq!(m.updates, 20, "every update must be recorded");
         assert!(m.update_p50 > 0.0 && m.update_p50 <= m.update_p95);
         assert!(m.update_p95 <= m.update_p99);
+    }
+
+    /// Satellite (deprecation shim): the legacy f32 wire and the typed
+    /// wire must produce bit-identical outputs for ops 0/1/2 — the shim
+    /// parses into the same enum and runs the same execution path.
+    #[test]
+    fn legacy_shim_matches_typed_wire_on_ops_0_1_2() {
+        let n = 20;
+        let mut rng = Pcg::seed(17);
+        let tree = generators::random_tree(n, 0.2, 1.0, &mut rng);
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let build = || {
+            let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build().unwrap();
+            StreamingFieldExecutor::new(tfi, &f, 1, 2, 4, 8).unwrap()
+        };
+        let legacy = build();
+        let typed = build(); // same tree → same metric
+        let (eu, ev, _) = tree.edges()[2];
+        let field: Vec<f32> = (0..n).map(|i| (i as f32 * 0.15).sin()).collect();
+        let via_typed = |exec: &StreamingFieldExecutor, req: StreamRequest, id: u64| {
+            let words = protocol::request_words(&req, id);
+            let out = exec.run_one(&words).expect("typed request");
+            let (got_id, resp) = protocol::response_from_words(&out).expect("typed response");
+            assert_eq!(got_id, id, "response must echo the request id");
+            match resp {
+                StreamResponse::Output { values, .. } => values,
+                other => panic!("expected Output, got {other:?}"),
+            }
+        };
+        // op 0: set
+        let l = legacy.run_one(&set_req(1, &field)).unwrap();
+        let t = via_typed(
+            &typed,
+            StreamRequest::Set {
+                session: 1,
+                rows: n as u32,
+                channels: 1,
+                values: field.clone(),
+            },
+            100,
+        );
+        assert_eq!(l, t, "set: shim and typed wire must agree bit-for-bit");
+        // op 1: update (legacy infers the width; typed states it)
+        let l = legacy.run_one(&update_req(1, &[4, 9], &[2.5, -1.0])).unwrap();
+        let t = via_typed(
+            &typed,
+            StreamRequest::Update {
+                session: 1,
+                rows: vec![4, 9],
+                channels: 1,
+                values: vec![2.5, -1.0],
+            },
+            101,
+        );
+        assert_eq!(l, t, "update: shim and typed wire must agree bit-for-bit");
+        // op 2: replan (the legacy wire carries the weight as f32 —
+        // feed the typed path the same f32-rounded weight)
+        let l = legacy
+            .run_one(&[STREAM_OP_REPLAN, 1.0, eu as f32, ev as f32, 1.5])
+            .unwrap();
+        let t = via_typed(
+            &typed,
+            StreamRequest::ReplanEdge {
+                session: 1,
+                u: eu,
+                v: ev,
+                w: 1.5f32 as f64,
+            },
+            102,
+        );
+        assert_eq!(l, t, "replan: shim and typed wire must agree bit-for-bit");
+    }
+
+    /// LRU admission: filling the table evicts the least-recently-used
+    /// lease, the victim gets a typed `Rejected { Evicted }`, and a
+    /// re-`Set` re-admits it with correct state.
+    #[test]
+    fn lru_eviction_rejects_typed_and_recovers_on_re_set() {
+        let n = 16;
+        let exec = stream_exec(n, 0, 2, 18); // capacity 2
+        let field: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+        let set = |sid: u32| StreamRequest::Set {
+            session: sid,
+            rows: n as u32,
+            channels: 1,
+            values: field.clone(),
+        };
+        assert!(matches!(exec.execute_request(&set(10)), StreamResponse::Output { .. }));
+        assert!(matches!(exec.execute_request(&set(11)), StreamResponse::Output { .. }));
+        // Touch 10 so 11 is the LRU victim when 12 arrives.
+        assert!(matches!(
+            exec.execute_request(&StreamRequest::Lease { session: 10 }),
+            StreamResponse::Output { .. }
+        ));
+        assert!(matches!(exec.execute_request(&set(12)), StreamResponse::Output { .. }));
+        assert_eq!(exec.metrics().sessions_evicted, 1);
+        match exec.execute_request(&StreamRequest::Update {
+            session: 11,
+            rows: vec![0],
+            channels: 1,
+            values: vec![1.0],
+        }) {
+            StreamResponse::Rejected { reason: RejectReason::Evicted, .. } => {}
+            other => panic!("evicted session must be rejected typed, got {other:?}"),
+        }
+        // Survivors are untouched; the victim recovers via re-Set — and
+        // behaves exactly like a session that was never evicted.
+        assert!(matches!(
+            exec.execute_request(&StreamRequest::Lease { session: 10 }),
+            StreamResponse::Output { .. }
+        ));
+        // Re-Set evicts the current LRU (12) to make room — 11 is live
+        // again with fresh state.
+        assert!(matches!(exec.execute_request(&set(11)), StreamResponse::Output { .. }));
+        let upd = StreamRequest::Update {
+            session: 11,
+            rows: vec![3],
+            channels: 1,
+            values: vec![7.0],
+        };
+        let got = match exec.execute_request(&upd) {
+            StreamResponse::Output { values, .. } => values,
+            other => panic!("re-admitted session must serve, got {other:?}"),
+        };
+        let oracle = stream_exec(n, 0, 2, 18);
+        assert!(matches!(oracle.execute_request(&set(11)), StreamResponse::Output { .. }));
+        let want = match oracle.execute_request(&upd) {
+            StreamResponse::Output { values, .. } => values,
+            other => panic!("oracle must serve, got {other:?}"),
+        };
+        assert_eq!(got, want, "re-admitted session must be bit-identical to a fresh one");
+    }
+
+    /// The per-session pending bound sheds with `SessionBusy` instead
+    /// of queueing without limit, and the close/lease lifecycle is
+    /// idempotent.
+    #[test]
+    fn session_busy_close_and_lease_lifecycle() {
+        let n = 16;
+        let exec = stream_exec(n, 0, 2, 19).with_max_pending(1);
+        let field: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+        let set = StreamRequest::Set { session: 5, rows: n as u32, channels: 1, values: field };
+        assert!(matches!(exec.execute_request(&set), StreamResponse::Output { .. }));
+        // Saturate the pending counter by hand (as a stalled in-flight
+        // update would) — the next update must shed typed.
+        {
+            let entry = exec.lookup(5).expect("leased");
+            entry.pending.fetch_add(1, Ordering::Relaxed);
+            match exec.execute_request(&StreamRequest::Update {
+                session: 5,
+                rows: vec![0],
+                channels: 1,
+                values: vec![1.0],
+            }) {
+                StreamResponse::Rejected { reason: RejectReason::SessionBusy, .. } => {}
+                other => panic!("saturated session must shed, got {other:?}"),
+            }
+            entry.pending.fetch_sub(1, Ordering::Relaxed);
+        }
+        // Back under the bound: updates flow again.
+        assert!(matches!(
+            exec.execute_request(&StreamRequest::Update {
+                session: 5,
+                rows: vec![0],
+                channels: 1,
+                values: vec![1.0],
+            }),
+            StreamResponse::Output { .. }
+        ));
+        // Mismatched typed width fails alone.
+        match exec.execute_request(&StreamRequest::Update {
+            session: 5,
+            rows: vec![0],
+            channels: 3,
+            values: vec![1.0, 2.0, 3.0],
+        }) {
+            StreamResponse::Error { message } => {
+                assert!(message.contains("width"), "got: {message}")
+            }
+            other => panic!("width mismatch must error, got {other:?}"),
+        }
+        // Close is idempotent; a closed session is gone (not evicted).
+        assert_eq!(
+            exec.execute_request(&StreamRequest::Close { session: 5 }),
+            StreamResponse::Closed { session: 5 }
+        );
+        assert_eq!(
+            exec.execute_request(&StreamRequest::Close { session: 5 }),
+            StreamResponse::Closed { session: 5 }
+        );
+        match exec.execute_request(&StreamRequest::Lease { session: 5 }) {
+            StreamResponse::Error { message } => {
+                assert!(message.contains("not initialised"), "got: {message}")
+            }
+            other => panic!("closed session must read as uninitialised, got {other:?}"),
+        }
     }
 
     /// Ensemble serving path: the generic executor over an

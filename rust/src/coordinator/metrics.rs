@@ -34,6 +34,17 @@ pub struct MetricsRegistry {
     /// workload and must not be averaged into full-integration requests.
     updates: AtomicU64,
     update_hist: Mutex<[u64; BUCKETS]>,
+    /// Robustness counters (PR 9): typed decode failures, admission
+    /// evictions/sheds, client retries and caught worker panics — the
+    /// fault-tolerance surface of the serving stack.
+    protocol_errors: AtomicU64,
+    sessions_evicted: AtomicU64,
+    requests_shed: AtomicU64,
+    retries: AtomicU64,
+    worker_panics: AtomicU64,
+    /// Gauge: requests accepted into the bounded queue and not yet
+    /// dispatched (incremented on submit, decremented per response).
+    queue_depth: AtomicU64,
     started: std::time::Instant,
 }
 
@@ -56,6 +67,19 @@ pub struct MetricsSnapshot {
     pub update_p50: f64,
     pub update_p95: f64,
     pub update_p99: f64,
+    /// Typed wire frames that failed to decode (checksum, version,
+    /// truncation, unknown kind).
+    pub protocol_errors: u64,
+    /// Session leases evicted under `max_sessions` pressure.
+    pub sessions_evicted: u64,
+    /// Requests shed by the deadline-based load-shedding policy.
+    pub requests_shed: u64,
+    /// Client-side retries reported through `record_retries`.
+    pub retries: u64,
+    /// Worker panics caught by the batcher and fanned out as errors.
+    pub worker_panics: u64,
+    /// Gauge: accepted-but-undispatched requests right now.
+    pub queue_depth: u64,
 }
 
 impl MetricsRegistry {
@@ -68,8 +92,53 @@ impl MetricsRegistry {
             latency_hist: Mutex::new([0; BUCKETS]),
             updates: AtomicU64::new(0),
             update_hist: Mutex::new([0; BUCKETS]),
+            protocol_errors: AtomicU64::new(0),
+            sessions_evicted: AtomicU64::new(0),
+            requests_shed: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
             started: std::time::Instant::now(),
         }
+    }
+
+    /// One typed wire frame failed to decode.
+    pub fn record_protocol_error(&self) {
+        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One session lease was evicted under `max_sessions` pressure.
+    pub fn record_eviction(&self) {
+        self.sessions_evicted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request was shed past its deadline.
+    pub fn record_shed(&self) {
+        self.requests_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A client performed `n` retries for one logical request.
+    pub fn record_retries(&self, n: u64) {
+        self.retries.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// The batcher caught one worker panic.
+    pub fn record_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request entered the bounded submit queue.
+    pub fn queue_enter(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request left the queue (response sent or shed). Saturating:
+    /// dispatch paths that bypass `queue_enter` (direct batcher unit
+    /// tests) must not wrap the gauge.
+    pub fn queue_exit(&self) {
+        let _ = self
+            .queue_depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
     }
 
     pub fn record_batch(&self, items: usize, exec_secs: f64) {
@@ -132,6 +201,12 @@ impl MetricsRegistry {
             update_p50: Self::percentile(&uhist, updates, 0.50),
             update_p95: Self::percentile(&uhist, updates, 0.95),
             update_p99: Self::percentile(&uhist, updates, 0.99),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            sessions_evicted: self.sessions_evicted.load(Ordering::Relaxed),
+            requests_shed: self.requests_shed.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
         }
     }
 }
@@ -201,6 +276,54 @@ mod tests {
         assert!(s.update_p50 < 0.005, "p50={}", s.update_p50);
         assert!(s.update_p99 > 0.1, "p99={}", s.update_p99);
         assert!(s.latency_p50 > 5.0, "request percentile must stay separate");
+    }
+
+    /// Robustness counters are independent of each other and of the
+    /// latency paths (PR 5 isolation style): bumping one must not move
+    /// any other, and the queue gauge is saturating, never wrapping.
+    #[test]
+    fn robustness_counters_are_isolated() {
+        let m = MetricsRegistry::new();
+        let zero = m.snapshot();
+        assert_eq!(
+            (zero.protocol_errors, zero.sessions_evicted, zero.requests_shed),
+            (0, 0, 0)
+        );
+        assert_eq!((zero.retries, zero.worker_panics, zero.queue_depth), (0, 0, 0));
+        m.record_protocol_error();
+        m.record_protocol_error();
+        m.record_eviction();
+        m.record_shed();
+        m.record_retries(5);
+        m.record_worker_panic();
+        m.queue_enter();
+        m.queue_enter();
+        m.queue_exit();
+        let s = m.snapshot();
+        assert_eq!(s.protocol_errors, 2);
+        assert_eq!(s.sessions_evicted, 1);
+        assert_eq!(s.requests_shed, 1);
+        assert_eq!(s.retries, 5);
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.queue_depth, 1);
+        // None of the above may leak into the request/update paths.
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.updates, 0);
+        assert_eq!(s.latency_p50, 0.0);
+        assert_eq!(s.update_p50, 0.0);
+        // The gauge saturates at zero instead of wrapping.
+        m.queue_exit();
+        m.queue_exit();
+        m.queue_exit();
+        assert_eq!(m.snapshot().queue_depth, 0);
+        // And latency recording leaves the robustness counters alone.
+        m.record_latency(0.001);
+        m.record_update_latency(0.001);
+        let s2 = m.snapshot();
+        assert_eq!(s2.protocol_errors, 2);
+        assert_eq!(s2.requests_shed, 1);
+        assert_eq!(s2.requests, 1);
+        assert_eq!(s2.updates, 1);
     }
 
     #[test]

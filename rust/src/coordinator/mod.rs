@@ -13,12 +13,26 @@
 //! is a trait so unit tests run against a mock while the examples plug in
 //! the PJRT-backed [`crate::runtime::Executable`].
 
+//! Robustness layer (PR 9): requests ride a typed, checksummed wire
+//! ([`protocol`]) with admission control (leased sessions, LRU
+//! eviction, deadline shedding) in front of the executors, and a
+//! seeded fault injector ([`faults`]) plus a TCP front-end
+//! ([`server::TcpFront`]) prove the exactly-one-response invariant
+//! under fire — see DESIGN.md "Serving robustness".
+
 pub mod batcher;
+pub mod faults;
 pub mod field;
 pub mod metrics;
+pub mod protocol;
 pub mod server;
 
 pub use batcher::{BatchExecutor, Batcher, BatcherConfig};
+pub use faults::{FaultCounters, FaultPlan, Faults, FaultyExecutor};
 pub use field::{FieldExecutor, PreparedFieldExecutor, StreamingFieldExecutor};
 pub use metrics::MetricsRegistry;
-pub use server::{InferenceServer, ServerError};
+pub use protocol::{
+    retry_with_backoff, BackoffPolicy, ProtocolError, RejectReason, RetryStep, StreamRequest,
+    StreamResponse,
+};
+pub use server::{InferenceServer, ServerError, TcpFront};

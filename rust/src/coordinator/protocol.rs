@@ -1,0 +1,1033 @@
+//! Typed streaming wire protocol: length-prefixed, versioned,
+//! checksummed binary frames carrying [`StreamRequest`] /
+//! [`StreamResponse`] values — the replacement for the legacy
+//! `[op, session, …]` f32 encoding (kept as a deprecation shim behind
+//! `--wire legacy`, parsed into the typed enum at the boundary by
+//! [`legacy_to_request`]).
+//!
+//! ## Frame layout
+//!
+//! Every frame on a byte stream is `[u32 len][payload…]` (little
+//! endian). The payload is:
+//!
+//! ```text
+//! offset  size  field
+//! 0       1     version        (WIRE_VERSION = 1)
+//! 1       1     kind           (request: 0 set, 1 update, 2 replan,
+//!                               3 close, 4 lease;
+//!                               response: 0 output, 1 closed,
+//!                               2 rejected, 3 error)
+//! 2       2     flags          (reserved, must be 0)
+//! 4       4     checksum       (FNV-1a over the payload with this
+//!                               field zeroed)
+//! 8       8     req_id         (client-chosen, echoed on the response)
+//! 16      …     body           (kind-specific, see the codecs below)
+//! ```
+//!
+//! Row indices and session ids are `u32` on this wire — lifting the
+//! legacy encoding's 2²⁴ f32-exactness cap on `n`. A malformed payload
+//! decodes to a typed [`ProtocolError`], which the serving stack maps
+//! to `ServerError::Protocol`: the frame fails alone, never poisoning a
+//! session or its batch-mates.
+//!
+//! ## Queue transport
+//!
+//! The coordinator's submit queue is `Vec<f32>` end to end. Typed
+//! frames ride it losslessly via [`payload_to_words`]: the payload
+//! bytes are packed 4-per-word through `f32::from_bits`, preceded by a
+//! NaN-boxed magic word ([`WIRE_MAGIC`]) no legacy opcode can collide
+//! with (legacy `input[0]` is 0.0/1.0/2.0) and the byte length. No
+//! arithmetic ever touches these words, so the bit patterns (including
+//! NaN payloads) survive the channel round trip exactly.
+
+use crate::ml::rng::Pcg;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Protocol version carried by every frame.
+pub const WIRE_VERSION: u8 = 1;
+
+/// First word of a typed request/response on the `Vec<f32>` queue: a
+/// quiet-NaN bit pattern (exponent all-ones, payload `F7F1`) that no
+/// legacy opcode (finite 0.0/1.0/2.0) can produce.
+pub const WIRE_MAGIC: u32 = 0x7FC0_F7F1;
+
+/// Ceiling on one frame's payload size (64 MiB): a corrupted or hostile
+/// length prefix fails fast instead of asking the allocator for 4 GiB.
+pub const MAX_FRAME: usize = 1 << 26;
+
+/// Error-string prefix the executor uses for typed decode failures on
+/// the in-process path; [`crate::coordinator::ServerError`] maps it to
+/// `ServerError::Protocol`.
+pub const ERR_PROTOCOL_PREFIX: &str = "protocol: ";
+
+/// Error-string prefix the batcher uses for deadline-shed requests; the
+/// TCP front-end maps it to `Rejected {{ DeadlineExceeded }}`.
+pub const ERR_SHED_PREFIX: &str = "shed: ";
+
+/// Payload header bytes before the kind-specific body.
+const HEADER: usize = 16;
+
+/// One typed streaming request. `session` ids are client-chosen `u32`
+/// keys into the executor's leased session table (not slot indices).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamRequest {
+    /// Install (or overwrite) a session's full `rows × channels` field.
+    Set { session: u32, rows: u32, channels: u32, values: Vec<f32> },
+    /// Sparse row update through the delta fast path. `channels = 0`
+    /// means "infer from the session" (the legacy shim's encoding);
+    /// a non-zero value must match the session's width.
+    Update { session: u32, rows: Vec<u32>, channels: u32, values: Vec<f32> },
+    /// Reweight one tree edge of the shared metric in place.
+    ReplanEdge { session: u32, u: u32, v: u32, w: f64 },
+    /// Release a session's lease (idempotent).
+    Close { session: u32 },
+    /// Touch a session's lease and return its current output.
+    Lease { session: u32 },
+}
+
+impl StreamRequest {
+    /// The session id every request variant addresses.
+    pub fn session(&self) -> u32 {
+        match self {
+            StreamRequest::Set { session, .. }
+            | StreamRequest::Update { session, .. }
+            | StreamRequest::ReplanEdge { session, .. }
+            | StreamRequest::Close { session }
+            | StreamRequest::Lease { session } => *session,
+        }
+    }
+}
+
+/// Why a request was rejected by admission control (all retryable —
+/// after the hinted delay, and after a re-`Set` for `Evicted`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The server's bounded submit queue is full.
+    Backpressure,
+    /// The session's bounded per-session update queue is full.
+    SessionBusy,
+    /// The session's lease was evicted under `max_sessions` pressure;
+    /// re-`Set` to re-admit.
+    Evicted,
+    /// The request aged past the load-shedding deadline while queued.
+    DeadlineExceeded,
+}
+
+impl RejectReason {
+    fn code(self) -> u8 {
+        match self {
+            RejectReason::Backpressure => 0,
+            RejectReason::SessionBusy => 1,
+            RejectReason::Evicted => 2,
+            RejectReason::DeadlineExceeded => 3,
+        }
+    }
+
+    fn from_code(code: u8) -> Result<Self, ProtocolError> {
+        match code {
+            0 => Ok(RejectReason::Backpressure),
+            1 => Ok(RejectReason::SessionBusy),
+            2 => Ok(RejectReason::Evicted),
+            3 => Ok(RejectReason::DeadlineExceeded),
+            other => Err(ProtocolError::Malformed(format!("unknown reject reason {other}"))),
+        }
+    }
+}
+
+/// One typed streaming response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamResponse {
+    /// The session's full `rows × channels` output.
+    Output { session: u32, rows: u32, channels: u32, values: Vec<f32> },
+    /// The session's lease was released (idempotent acknowledgement).
+    Closed { session: u32 },
+    /// Admission control turned the request away; retry after the hint
+    /// (re-`Set` first when the reason is `Evicted`).
+    Rejected { reason: RejectReason, retry_after_hint_ms: u32 },
+    /// The request failed (validation, session state, worker death);
+    /// not retryable as-is.
+    Error { message: String },
+}
+
+/// Typed decode failures. Every variant fails the offending frame alone.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// The payload ended before the advertised structure did.
+    Truncated { needed: usize, got: usize },
+    /// The length prefix exceeds [`MAX_FRAME`].
+    FrameTooLarge(usize),
+    /// Unknown protocol version byte.
+    BadVersion(u8),
+    /// Checksum mismatch — the frame was corrupted in flight.
+    BadChecksum { expected: u32, got: u32 },
+    /// Unknown request/response kind byte.
+    UnknownKind(u8),
+    /// Structurally invalid body (bad counts, non-utf8 message, …).
+    Malformed(String),
+    /// The underlying byte stream failed mid-frame.
+    Io(String),
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::Truncated { needed, got } => {
+                write!(f, "truncated frame: needed {needed} bytes, got {got}")
+            }
+            ProtocolError::FrameTooLarge(n) => {
+                write!(f, "frame of {n} bytes exceeds the {MAX_FRAME}-byte cap")
+            }
+            ProtocolError::BadVersion(v) => {
+                write!(f, "unsupported wire version {v} (expected {WIRE_VERSION})")
+            }
+            ProtocolError::BadChecksum { expected, got } => {
+                write!(
+                    f,
+                    "checksum mismatch: frame says {expected:#010x}, body hashes to {got:#010x}"
+                )
+            }
+            ProtocolError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            ProtocolError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            ProtocolError::Io(m) => write!(f, "stream error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+// ---------------------------------------------------------------------
+// Checksums and primitive codecs
+// ---------------------------------------------------------------------
+
+/// FNV-1a (32-bit) over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Payload checksum: FNV-1a over the whole payload with the checksum
+/// field (bytes 4..8) treated as zero.
+fn payload_checksum(payload: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for (i, &b) in payload.iter().enumerate() {
+        let b = if (4..8).contains(&i) { 0 } else { b };
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtocolError> {
+        let end = self.at.checked_add(n).ok_or(ProtocolError::FrameTooLarge(usize::MAX))?;
+        if end > self.buf.len() {
+            return Err(ProtocolError::Truncated { needed: end, got: self.buf.len() });
+        }
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtocolError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, ProtocolError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtocolError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>, ProtocolError> {
+        let bytes = count.checked_mul(4).ok_or(ProtocolError::FrameTooLarge(usize::MAX))?;
+        let b = self.take(bytes)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    }
+
+    fn u32s(&mut self, count: usize) -> Result<Vec<u32>, ProtocolError> {
+        let bytes = count.checked_mul(4).ok_or(ProtocolError::FrameTooLarge(usize::MAX))?;
+        let b = self.take(bytes)?;
+        Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.at..];
+        self.at = self.buf.len();
+        s
+    }
+
+    fn done(&self) -> Result<(), ProtocolError> {
+        if self.at != self.buf.len() {
+            return Err(ProtocolError::Malformed(format!(
+                "{} trailing bytes after the body",
+                self.buf.len() - self.at
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    for &v in vs {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+fn finish_payload(kind: u8, req_id: u64, body: Vec<u8>) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(HEADER + body.len());
+    payload.push(WIRE_VERSION);
+    payload.push(kind);
+    payload.extend_from_slice(&[0, 0]); // flags (reserved)
+    payload.extend_from_slice(&[0, 0, 0, 0]); // checksum placeholder
+    payload.extend_from_slice(&req_id.to_le_bytes());
+    payload.extend_from_slice(&body);
+    let sum = payload_checksum(&payload);
+    payload[4..8].copy_from_slice(&sum.to_le_bytes());
+    payload
+}
+
+/// Validate the common header; returns `(kind, req_id, body)`.
+fn open_payload(payload: &[u8]) -> Result<(u8, u64, &[u8]), ProtocolError> {
+    if payload.len() < HEADER {
+        return Err(ProtocolError::Truncated { needed: HEADER, got: payload.len() });
+    }
+    if payload[0] != WIRE_VERSION {
+        return Err(ProtocolError::BadVersion(payload[0]));
+    }
+    let expected = u32::from_le_bytes([payload[4], payload[5], payload[6], payload[7]]);
+    let got = payload_checksum(payload);
+    if expected != got {
+        return Err(ProtocolError::BadChecksum { expected, got });
+    }
+    let req_id = u64::from_le_bytes([
+        payload[8], payload[9], payload[10], payload[11], payload[12], payload[13], payload[14],
+        payload[15],
+    ]);
+    Ok((payload[1], req_id, &payload[HEADER..]))
+}
+
+/// Best-effort req-id peek (no checksum/version validation): lets the
+/// response path echo the id even when the body is corrupt.
+pub fn peek_req_id(payload: &[u8]) -> Option<u64> {
+    if payload.len() < HEADER {
+        return None;
+    }
+    Some(u64::from_le_bytes([
+        payload[8], payload[9], payload[10], payload[11], payload[12], payload[13], payload[14],
+        payload[15],
+    ]))
+}
+
+// ---------------------------------------------------------------------
+// Request / response codecs
+// ---------------------------------------------------------------------
+
+/// Encode one request into a frame payload (no length prefix).
+pub fn encode_request(req: &StreamRequest, req_id: u64) -> Vec<u8> {
+    let (kind, body) = match req {
+        StreamRequest::Set { session, rows, channels, values } => {
+            let mut b = Vec::with_capacity(12 + 4 * values.len());
+            put_u32(&mut b, *session);
+            put_u32(&mut b, *rows);
+            put_u32(&mut b, *channels);
+            put_f32s(&mut b, values);
+            (0u8, b)
+        }
+        StreamRequest::Update { session, rows, channels, values } => {
+            let mut b = Vec::with_capacity(12 + 4 * (rows.len() + values.len()));
+            put_u32(&mut b, *session);
+            put_u32(&mut b, rows.len() as u32);
+            put_u32(&mut b, *channels);
+            for &r in rows {
+                put_u32(&mut b, r);
+            }
+            put_f32s(&mut b, values);
+            (1u8, b)
+        }
+        StreamRequest::ReplanEdge { session, u, v, w } => {
+            let mut b = Vec::with_capacity(20);
+            put_u32(&mut b, *session);
+            put_u32(&mut b, *u);
+            put_u32(&mut b, *v);
+            b.extend_from_slice(&w.to_le_bytes());
+            (2u8, b)
+        }
+        StreamRequest::Close { session } => {
+            let mut b = Vec::with_capacity(4);
+            put_u32(&mut b, *session);
+            (3u8, b)
+        }
+        StreamRequest::Lease { session } => {
+            let mut b = Vec::with_capacity(4);
+            put_u32(&mut b, *session);
+            (4u8, b)
+        }
+    };
+    finish_payload(kind, req_id, body)
+}
+
+/// Decode one request payload into `(req_id, request)`.
+pub fn decode_request(payload: &[u8]) -> Result<(u64, StreamRequest), ProtocolError> {
+    let (kind, req_id, body) = open_payload(payload)?;
+    let mut c = Cursor::new(body);
+    let req = match kind {
+        0 => {
+            let session = c.u32()?;
+            let rows = c.u32()?;
+            let channels = c.u32()?;
+            let count = (rows as usize)
+                .checked_mul(channels as usize)
+                .ok_or_else(|| ProtocolError::Malformed("rows × channels overflows".into()))?;
+            let values = c.f32s(count)?;
+            StreamRequest::Set { session, rows, channels, values }
+        }
+        1 => {
+            let session = c.u32()?;
+            let k = c.u32()? as usize;
+            let channels = c.u32()?;
+            let rows = c.u32s(k)?;
+            // channels = 0 ("infer from session"): values run to the
+            // end of the body; otherwise exactly k × channels.
+            let values = if channels == 0 {
+                let rest = c.rest();
+                if rest.len() % 4 != 0 {
+                    return Err(ProtocolError::Malformed("update values not 4-byte aligned".into()));
+                }
+                rest.chunks_exact(4)
+                    .map(|b| f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
+                    .collect()
+            } else {
+                let count = k
+                    .checked_mul(channels as usize)
+                    .ok_or_else(|| ProtocolError::Malformed("k × channels overflows".into()))?;
+                c.f32s(count)?
+            };
+            StreamRequest::Update { session, rows, channels, values }
+        }
+        2 => {
+            let session = c.u32()?;
+            let u = c.u32()?;
+            let v = c.u32()?;
+            let w = c.f64()?;
+            StreamRequest::ReplanEdge { session, u, v, w }
+        }
+        3 => StreamRequest::Close { session: c.u32()? },
+        4 => StreamRequest::Lease { session: c.u32()? },
+        other => return Err(ProtocolError::UnknownKind(other)),
+    };
+    c.done()?;
+    Ok((req_id, req))
+}
+
+/// Encode one response into a frame payload (no length prefix).
+pub fn encode_response(resp: &StreamResponse, req_id: u64) -> Vec<u8> {
+    let (kind, body) = match resp {
+        StreamResponse::Output { session, rows, channels, values } => {
+            let mut b = Vec::with_capacity(12 + 4 * values.len());
+            put_u32(&mut b, *session);
+            put_u32(&mut b, *rows);
+            put_u32(&mut b, *channels);
+            put_f32s(&mut b, values);
+            (0u8, b)
+        }
+        StreamResponse::Closed { session } => {
+            let mut b = Vec::with_capacity(4);
+            put_u32(&mut b, *session);
+            (1u8, b)
+        }
+        StreamResponse::Rejected { reason, retry_after_hint_ms } => {
+            let mut b = Vec::with_capacity(8);
+            b.push(reason.code());
+            b.extend_from_slice(&[0, 0, 0]); // pad
+            put_u32(&mut b, *retry_after_hint_ms);
+            (2u8, b)
+        }
+        StreamResponse::Error { message } => (3u8, message.as_bytes().to_vec()),
+    };
+    finish_payload(kind, req_id, body)
+}
+
+/// Decode one response payload into `(req_id, response)`.
+pub fn decode_response(payload: &[u8]) -> Result<(u64, StreamResponse), ProtocolError> {
+    let (kind, req_id, body) = open_payload(payload)?;
+    let mut c = Cursor::new(body);
+    let resp = match kind {
+        0 => {
+            let session = c.u32()?;
+            let rows = c.u32()?;
+            let channels = c.u32()?;
+            let count = (rows as usize)
+                .checked_mul(channels as usize)
+                .ok_or_else(|| ProtocolError::Malformed("rows × channels overflows".into()))?;
+            let values = c.f32s(count)?;
+            StreamResponse::Output { session, rows, channels, values }
+        }
+        1 => StreamResponse::Closed { session: c.u32()? },
+        2 => {
+            let head = c.take(4)?;
+            let reason = RejectReason::from_code(head[0])?;
+            let retry_after_hint_ms = c.u32()?;
+            StreamResponse::Rejected { reason, retry_after_hint_ms }
+        }
+        3 => {
+            let message = String::from_utf8(c.rest().to_vec())
+                .map_err(|_| ProtocolError::Malformed("error message is not utf-8".into()))?;
+            StreamResponse::Error { message }
+        }
+        other => return Err(ProtocolError::UnknownKind(other)),
+    };
+    c.done()?;
+    Ok((req_id, resp))
+}
+
+// ---------------------------------------------------------------------
+// Byte-stream framing
+// ---------------------------------------------------------------------
+
+/// Write one `[u32 len][payload]` frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<bool, ProtocolError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(ProtocolError::Truncated { needed: buf.len(), got: filled });
+            }
+            Ok(k) => filled += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ProtocolError::Io(e.to_string())),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame's payload. `Ok(None)` on a clean EOF at a frame
+/// boundary; EOF mid-frame is [`ProtocolError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>, ProtocolError> {
+    let mut len_buf = [0u8; 4];
+    if !read_exact_or_eof(r, &mut len_buf)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(ProtocolError::FrameTooLarge(len));
+    }
+    let mut payload = vec![0u8; len];
+    if !read_exact_or_eof(r, &mut payload)? && len > 0 {
+        return Err(ProtocolError::Truncated { needed: len, got: 0 });
+    }
+    Ok(Some(payload))
+}
+
+// ---------------------------------------------------------------------
+// f32-word transport (the in-process queue path)
+// ---------------------------------------------------------------------
+
+/// Is this `Vec<f32>` request a typed frame (vs the legacy encoding)?
+pub fn is_typed_words(input: &[f32]) -> bool {
+    input.first().is_some_and(|w| w.to_bits() == WIRE_MAGIC)
+}
+
+/// Pack a frame payload into queue words: `[magic, byte_len, data…]`,
+/// 4 payload bytes per data word via `f32::from_bits`.
+pub fn payload_to_words(payload: &[u8]) -> Vec<f32> {
+    let mut words = Vec::with_capacity(2 + payload.len().div_ceil(4));
+    words.push(f32::from_bits(WIRE_MAGIC));
+    words.push(f32::from_bits(payload.len() as u32));
+    for chunk in payload.chunks(4) {
+        let mut b = [0u8; 4];
+        b[..chunk.len()].copy_from_slice(chunk);
+        words.push(f32::from_bits(u32::from_le_bytes(b)));
+    }
+    words
+}
+
+/// Unpack queue words back into the frame payload.
+pub fn words_to_payload(words: &[f32]) -> Result<Vec<u8>, ProtocolError> {
+    if words.len() < 2 || !is_typed_words(words) {
+        return Err(ProtocolError::Malformed("not a typed-wire word sequence".into()));
+    }
+    let len = words[1].to_bits() as usize;
+    if len > MAX_FRAME {
+        return Err(ProtocolError::FrameTooLarge(len));
+    }
+    let data = &words[2..];
+    if data.len() != len.div_ceil(4) {
+        return Err(ProtocolError::Truncated { needed: len.div_ceil(4), got: data.len() });
+    }
+    let mut payload = Vec::with_capacity(len);
+    for w in data {
+        payload.extend_from_slice(&w.to_bits().to_le_bytes());
+    }
+    payload.truncate(len);
+    Ok(payload)
+}
+
+/// Convenience: encode a request straight to queue words.
+pub fn request_words(req: &StreamRequest, req_id: u64) -> Vec<f32> {
+    payload_to_words(&encode_request(req, req_id))
+}
+
+/// Convenience: decode queue words straight to `(req_id, response)`.
+pub fn response_from_words(words: &[f32]) -> Result<(u64, StreamResponse), ProtocolError> {
+    decode_response(&words_to_payload(words)?)
+}
+
+// ---------------------------------------------------------------------
+// Legacy-wire shim
+// ---------------------------------------------------------------------
+
+/// Parse a non-negative integral f32 below `limit` (the legacy wire's
+/// index encoding; integers are exact in f32 up to 2²⁴).
+fn parse_index(v: f32, limit: usize, what: &str) -> Result<usize, String> {
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || (v as usize) >= limit {
+        return Err(format!("{what} {v} invalid (expected an integer in 0..{limit})"));
+    }
+    Ok(v as usize)
+}
+
+/// Session ids on the legacy f32 wire stay exact up to 2²⁴.
+const LEGACY_SESSION_LIMIT: usize = 1 << 24;
+
+/// Parse one legacy `[op, session, …]` f32 request into the typed enum
+/// — the `--wire legacy` deprecation shim. `n` is the executor's vertex
+/// count (the legacy `set` encoding infers `channels` from it, and row
+/// indices are bounds-checked against it).
+pub fn legacy_to_request(input: &[f32], n: usize) -> Result<StreamRequest, String> {
+    if input.len() < 2 {
+        return Err("streaming request needs [op, session, …]".to_string());
+    }
+    let session = parse_index(input[1], LEGACY_SESSION_LIMIT, "session")? as u32;
+    if input[0] == 0.0 {
+        let payload = &input[2..];
+        if n == 0 || payload.is_empty() || payload.len() % n != 0 {
+            return Err(crate::ftfi::FtfiError::ShapeMismatch { expected: n, got: payload.len() }
+                .to_string());
+        }
+        let d = payload.len() / n;
+        Ok(StreamRequest::Set {
+            session,
+            rows: n as u32,
+            channels: d as u32,
+            values: payload.to_vec(),
+        })
+    } else if input[0] == 1.0 {
+        let payload = &input[2..];
+        if payload.is_empty() {
+            return Err("update needs [k, rows…, values…]".to_string());
+        }
+        let k = parse_index(payload[0], n + 1, "row count")?;
+        if payload.len() < 1 + k {
+            return Err(format!("update lists {k} rows but carries {}", payload.len() - 1));
+        }
+        let mut rows = Vec::with_capacity(k);
+        for &r in &payload[1..1 + k] {
+            rows.push(parse_index(r, n, "row")? as u32);
+        }
+        // channels = 0: the executor infers the width from the session
+        // (the legacy wire never carried it).
+        Ok(StreamRequest::Update { session, rows, channels: 0, values: payload[1 + k..].to_vec() })
+    } else if input[0] == 2.0 {
+        let payload = &input[2..];
+        if payload.len() != 3 {
+            return Err(format!("replan needs [u, v, w], got {} values", payload.len()));
+        }
+        let u = parse_index(payload[0], n, "vertex")? as u32;
+        let v = parse_index(payload[1], n, "vertex")? as u32;
+        Ok(StreamRequest::ReplanEdge { session, u, v, w: payload[2] as f64 })
+    } else {
+        Err(format!("unknown streaming opcode {} (0 = set, 1 = update, 2 = replan)", input[0]))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client-side retry with jittered exponential backoff
+// ---------------------------------------------------------------------
+
+/// Backoff policy for [`retry_with_backoff`]: full-jitter exponential
+/// delays (`uniform(0, min(max_delay, base·factor^attempt))`) capped by
+/// both an attempt count and a total sleep budget.
+#[derive(Debug, Clone)]
+pub struct BackoffPolicy {
+    /// First-retry delay ceiling.
+    pub base: Duration,
+    /// Exponential growth factor per retry.
+    pub factor: f64,
+    /// Per-retry delay ceiling.
+    pub max_delay: Duration,
+    /// Maximum attempts (1 = no retries).
+    pub max_attempts: u32,
+    /// Total sleep budget across all retries.
+    pub budget: Duration,
+}
+
+impl Default for BackoffPolicy {
+    fn default() -> Self {
+        BackoffPolicy {
+            base: Duration::from_millis(1),
+            factor: 2.0,
+            max_delay: Duration::from_millis(50),
+            max_attempts: 8,
+            budget: Duration::from_secs(2),
+        }
+    }
+}
+
+/// One attempt's verdict inside [`retry_with_backoff`].
+pub enum RetryStep<T, E> {
+    /// Success — stop retrying.
+    Done(T),
+    /// Transient failure — back off and try again.
+    Retry(E),
+    /// Permanent failure — stop immediately.
+    Fail(E),
+}
+
+/// Run `op` under the policy; returns the final result plus the number
+/// of retries performed (for the `retries` metric). Jitter is seeded —
+/// the same `(policy, seed)` replays the same delay schedule.
+pub fn retry_with_backoff<T, E>(
+    policy: &BackoffPolicy,
+    seed: u64,
+    mut op: impl FnMut(u32) -> RetryStep<T, E>,
+) -> (Result<T, E>, u32) {
+    let mut rng = Pcg::new(seed, 0xB0FF);
+    let mut slept = Duration::ZERO;
+    let mut retries = 0u32;
+    loop {
+        match op(retries) {
+            RetryStep::Done(v) => return (Ok(v), retries),
+            RetryStep::Fail(e) => return (Err(e), retries),
+            RetryStep::Retry(e) => {
+                if retries + 1 >= policy.max_attempts.max(1) {
+                    return (Err(e), retries);
+                }
+                let cap = (policy.base.as_secs_f64() * policy.factor.powi(retries as i32))
+                    .min(policy.max_delay.as_secs_f64());
+                let delay = Duration::from_secs_f64(cap * rng.uniform());
+                if slept + delay > policy.budget {
+                    return (Err(e), retries);
+                }
+                std::thread::sleep(delay);
+                slept += delay;
+                retries += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: StreamRequest, id: u64) {
+        let payload = encode_request(&req, id);
+        let (got_id, got) = decode_request(&payload).expect("decode");
+        assert_eq!(got_id, id);
+        assert_eq!(got, req);
+        // And through the word transport.
+        let words = payload_to_words(&payload);
+        assert!(is_typed_words(&words));
+        let back = words_to_payload(&words).expect("unpack");
+        assert_eq!(back, payload);
+    }
+
+    #[test]
+    fn request_roundtrips_all_kinds() {
+        roundtrip_request(
+            StreamRequest::Set {
+                session: 7,
+                rows: 3,
+                channels: 2,
+                values: vec![1.0, -2.5, 0.0, 3.25, f32::MIN_POSITIVE, 9.0],
+            },
+            42,
+        );
+        roundtrip_request(
+            StreamRequest::Update {
+                session: u32::MAX,
+                rows: vec![0, 99, 1 << 25], // above the legacy 2²⁴ cap
+                channels: 2,
+                values: vec![1.0; 6],
+            },
+            u64::MAX,
+        );
+        roundtrip_request(
+            StreamRequest::ReplanEdge { session: 0, u: 5, v: 6, w: 0.123456789012345 },
+            0,
+        );
+        roundtrip_request(StreamRequest::Close { session: 3 }, 1);
+        roundtrip_request(StreamRequest::Lease { session: 4 }, 2);
+    }
+
+    #[test]
+    fn response_roundtrips_all_kinds() {
+        for (resp, id) in [
+            (
+                StreamResponse::Output {
+                    session: 1,
+                    rows: 2,
+                    channels: 1,
+                    values: vec![1.5, -2.5],
+                },
+                9u64,
+            ),
+            (StreamResponse::Closed { session: 8 }, 10),
+            (
+                StreamResponse::Rejected {
+                    reason: RejectReason::Evicted,
+                    retry_after_hint_ms: 25,
+                },
+                11,
+            ),
+            (StreamResponse::Error { message: "session 3 not initialised".into() }, 12),
+        ] {
+            let payload = encode_response(&resp, id);
+            let (got_id, got) = decode_response(&payload).expect("decode");
+            assert_eq!(got_id, id);
+            assert_eq!(got, resp);
+            let (wid, wresp) = response_from_words(&payload_to_words(&payload)).expect("words");
+            assert_eq!(wid, id);
+            assert_eq!(wresp, resp);
+        }
+    }
+
+    #[test]
+    fn every_reject_reason_roundtrips() {
+        for reason in [
+            RejectReason::Backpressure,
+            RejectReason::SessionBusy,
+            RejectReason::Evicted,
+            RejectReason::DeadlineExceeded,
+        ] {
+            let payload = encode_response(
+                &StreamResponse::Rejected { reason, retry_after_hint_ms: 7 },
+                1,
+            );
+            match decode_response(&payload).expect("decode").1 {
+                StreamResponse::Rejected { reason: got, retry_after_hint_ms: 7 } => {
+                    assert_eq!(got, reason)
+                }
+                other => panic!("expected Rejected, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn corrupted_payload_fails_the_checksum() {
+        let payload = encode_request(
+            &StreamRequest::Set { session: 1, rows: 2, channels: 1, values: vec![1.0, 2.0] },
+            5,
+        );
+        for at in [0usize, 1, 9, HEADER, payload.len() - 1] {
+            let mut bad = payload.clone();
+            bad[at] ^= 0x40;
+            let err = decode_request(&bad).expect_err("corruption must be detected");
+            match err {
+                ProtocolError::BadChecksum { .. } | ProtocolError::BadVersion(_) => {}
+                other => panic!("byte {at}: expected checksum/version error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_fail_typed() {
+        // Truncated header.
+        assert!(matches!(
+            decode_request(&[1, 0, 0]),
+            Err(ProtocolError::Truncated { .. })
+        ));
+        // Unknown kind (re-checksummed so the kind check is reached).
+        let bogus = finish_payload(9, 1, vec![]);
+        assert!(matches!(decode_request(&bogus), Err(ProtocolError::UnknownKind(9))));
+        // Bad version.
+        let mut payload = encode_request(&StreamRequest::Close { session: 0 }, 1);
+        payload[0] = 99;
+        let sum = payload_checksum(&payload);
+        payload[4..8].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode_request(&payload), Err(ProtocolError::BadVersion(99))));
+        // Body shorter than the advertised counts.
+        let truncated = finish_payload(0, 1, {
+            let mut b = Vec::new();
+            put_u32(&mut b, 0); // session
+            put_u32(&mut b, 100); // rows
+            put_u32(&mut b, 100); // channels — but no values follow
+            b
+        });
+        assert!(matches!(decode_request(&truncated), Err(ProtocolError::Truncated { .. })));
+        // Trailing garbage after a well-formed body.
+        let trailing = finish_payload(3, 1, {
+            let mut b = Vec::new();
+            put_u32(&mut b, 0);
+            b.push(0xAB);
+            b
+        });
+        assert!(matches!(decode_request(&trailing), Err(ProtocolError::Malformed(_))));
+    }
+
+    #[test]
+    fn frame_io_roundtrips_and_reports_clean_eof() {
+        let a = encode_request(&StreamRequest::Lease { session: 1 }, 7);
+        let b = encode_response(&StreamResponse::Closed { session: 1 }, 7);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &a).unwrap();
+        write_frame(&mut wire, &b).unwrap();
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some(&a[..]));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some(&b[..]));
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF at a frame boundary");
+        // EOF mid-frame is truncation, not a clean close.
+        let mut torn = &wire[..wire.len() - 3];
+        assert!(read_frame(&mut torn).unwrap().is_some());
+        assert!(matches!(read_frame(&mut torn), Err(ProtocolError::Truncated { .. })));
+        // A hostile length prefix fails fast.
+        let mut huge = &[0xFF, 0xFF, 0xFF, 0xFF][..];
+        assert!(matches!(read_frame(&mut huge), Err(ProtocolError::FrameTooLarge(_))));
+    }
+
+    #[test]
+    fn word_transport_is_lossless_for_all_byte_lengths() {
+        for len in 0..9usize {
+            let payload: Vec<u8> =
+                (0..len as u8).map(|b| b.wrapping_mul(37).wrapping_add(1)).collect();
+            let words = payload_to_words(&payload);
+            assert_eq!(words_to_payload(&words).unwrap(), payload, "len {len}");
+        }
+        // Legacy requests never look typed.
+        assert!(!is_typed_words(&[0.0, 1.0, 2.0]));
+        assert!(!is_typed_words(&[2.0, 0.0, 1.0, 2.0, 0.5]));
+        assert!(!is_typed_words(&[]));
+        // Word-count mismatch is typed, not a panic.
+        let mut words = payload_to_words(&[1, 2, 3, 4, 5]);
+        words.pop();
+        assert!(matches!(words_to_payload(&words), Err(ProtocolError::Truncated { .. })));
+    }
+
+    #[test]
+    fn legacy_shim_parses_the_old_wire() {
+        let n = 8;
+        // set
+        let mut set = vec![0.0f32, 3.0];
+        set.extend((0..n).map(|i| i as f32));
+        assert_eq!(
+            legacy_to_request(&set, n).unwrap(),
+            StreamRequest::Set {
+                session: 3,
+                rows: 8,
+                channels: 1,
+                values: (0..n).map(|i| i as f32).collect(),
+            }
+        );
+        // update (channels = 0: infer from session)
+        let upd = vec![1.0f32, 2.0, 2.0, 1.0, 5.0, 0.25, -0.5];
+        assert_eq!(
+            legacy_to_request(&upd, n).unwrap(),
+            StreamRequest::Update {
+                session: 2,
+                rows: vec![1, 5],
+                channels: 0,
+                values: vec![0.25, -0.5],
+            }
+        );
+        // replan
+        let rep = vec![2.0f32, 0.0, 1.0, 2.0, 0.75];
+        assert_eq!(
+            legacy_to_request(&rep, n).unwrap(),
+            StreamRequest::ReplanEdge { session: 0, u: 1, v: 2, w: 0.75 }
+        );
+        // Malformed cases fail with strings, never panic.
+        assert!(legacy_to_request(&[], n).is_err());
+        assert!(legacy_to_request(&[3.0, 0.0, 1.0], n).is_err()); // unknown opcode
+        assert!(legacy_to_request(&[1.0, 0.0, 2.5, 1.0], n).is_err()); // fractional k
+        assert!(legacy_to_request(&[1.0, 0.0, 1.0, 99.0, 1.0], n).is_err()); // row ≥ n
+        assert!(legacy_to_request(&[2.0, 0.0, 0.0, 1.0], n).is_err()); // truncated replan
+        assert!(legacy_to_request(&[0.0, 0.0, 1.0, 2.0, 3.0], n).is_err()); // len % n != 0
+        assert!(legacy_to_request(&[1.0, f32::NAN, 0.0], n).is_err()); // NaN session
+    }
+
+    #[test]
+    fn peek_req_id_survives_body_corruption() {
+        let mut payload = encode_request(&StreamRequest::Close { session: 1 }, 0xDEAD_BEEF);
+        let last = payload.len() - 1;
+        payload[last] ^= 0xFF; // corrupt the body, not the id
+        assert!(decode_request(&payload).is_err());
+        assert_eq!(peek_req_id(&payload), Some(0xDEAD_BEEF));
+        assert_eq!(peek_req_id(&[1, 2, 3]), None);
+    }
+
+    #[test]
+    fn backoff_retries_are_capped_and_seeded() {
+        let policy = BackoffPolicy {
+            base: Duration::from_micros(50),
+            factor: 2.0,
+            max_delay: Duration::from_micros(400),
+            max_attempts: 4,
+            budget: Duration::from_secs(1),
+        };
+        // Always-transient: exhausts the attempt cap.
+        let (res, retries) = retry_with_backoff::<(), _>(&policy, 7, |_| RetryStep::Retry("full"));
+        assert_eq!(res, Err("full"));
+        assert_eq!(retries, 3, "max_attempts = 4 ⇒ 3 retries");
+        // Succeeds on the third attempt.
+        let (res, retries) = retry_with_backoff(&policy, 7, |a| {
+            if a == 2 {
+                RetryStep::Done(a)
+            } else {
+                RetryStep::Retry("again")
+            }
+        });
+        assert_eq!(res, Ok(2));
+        assert_eq!(retries, 2);
+        // Fatal errors stop immediately.
+        let (res, retries) = retry_with_backoff::<(), _>(&policy, 7, |_| RetryStep::Fail("perm"));
+        assert_eq!(res, Err("perm"));
+        assert_eq!(retries, 0);
+        // A zero budget forbids any sleep ⇒ at most one attempt's retry.
+        let broke = BackoffPolicy { budget: Duration::ZERO, ..policy };
+        let t0 = std::time::Instant::now();
+        let (res, retries) = retry_with_backoff::<(), _>(&broke, 7, |_| RetryStep::Retry("x"));
+        assert_eq!(res, Err("x"));
+        assert_eq!(retries, 0);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Standard FNV-1a 32-bit test vectors.
+        assert_eq!(fnv1a(b""), 0x811c_9dc5);
+        assert_eq!(fnv1a(b"a"), 0xe40c_292c);
+        assert_eq!(fnv1a(b"foobar"), 0xbf9c_f968);
+    }
+}

@@ -3,6 +3,7 @@
 
 use super::batcher::{BatchExecutor, Batcher, BatcherConfig, PendingRequest};
 use super::metrics::MetricsRegistry;
+use super::protocol;
 // Mutex and the closing flag come from the crate-wide sync shim so loom
 // builds model the worker handoff; Arc and mpsc stay `std` deliberately
 // (see `crate::sync` module docs).
@@ -10,7 +11,7 @@ use crate::sync::atomic::{AtomicBool, Ordering};
 use crate::sync::Mutex;
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Submission/response errors.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -21,6 +22,12 @@ pub enum ServerError {
     Closed,
     /// Model execution failed.
     Exec(String),
+    /// The request frame failed to decode (version, checksum,
+    /// structure). The frame fails alone — no session or batch-mate is
+    /// touched — and retrying the identical bytes cannot succeed.
+    Protocol(String),
+    /// `wait_timeout` elapsed before the response arrived.
+    Timeout,
 }
 
 impl std::fmt::Display for ServerError {
@@ -29,7 +36,19 @@ impl std::fmt::Display for ServerError {
             ServerError::Backpressure => write!(f, "queue full (backpressure)"),
             ServerError::Closed => write!(f, "server closed"),
             ServerError::Exec(e) => write!(f, "execution failed: {e}"),
+            ServerError::Protocol(e) => write!(f, "protocol error: {e}"),
+            ServerError::Timeout => write!(f, "timed out waiting for the response"),
         }
+    }
+}
+
+/// Map an executor error string onto the typed boundary: the
+/// [`protocol::ERR_PROTOCOL_PREFIX`] convention carries decode failures
+/// across the string-typed response channel.
+fn map_exec_error(e: String) -> ServerError {
+    match e.strip_prefix(protocol::ERR_PROTOCOL_PREFIX) {
+        Some(rest) => ServerError::Protocol(rest.to_string()),
+        None => ServerError::Exec(e),
     }
 }
 
@@ -65,11 +84,23 @@ impl InferenceServer {
         cfg: BatcherConfig,
         queue_capacity: usize,
     ) -> Self {
+        Self::start_with_metrics(factories, cfg, queue_capacity, Arc::new(MetricsRegistry::new()))
+    }
+
+    /// Like [`InferenceServer::start`] but with a caller-provided
+    /// metrics registry, so stateful executors (the streaming session
+    /// table) can record evictions and decode failures into the same
+    /// snapshot the server reports.
+    pub fn start_with_metrics(
+        factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>>,
+        cfg: BatcherConfig,
+        queue_capacity: usize,
+        metrics: Arc<MetricsRegistry>,
+    ) -> Self {
         // lint: allow(unchecked-panic) — a documented construction
         // precondition: a server with zero workers can never serve, and
         // failing at startup (not at first submit) is the useful spot.
         assert!(!factories.is_empty());
-        let metrics = Arc::new(MetricsRegistry::new());
         let (submit_tx, submit_rx) = mpsc::sync_channel::<PendingRequest>(queue_capacity);
         let (batch_tx, batch_rx) = mpsc::channel::<Vec<PendingRequest>>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
@@ -135,7 +166,10 @@ impl InferenceServer {
         let (tx, rx) = mpsc::channel();
         let req = PendingRequest { input, respond: tx, enqueued_at: Instant::now() };
         match self.submit_tx.try_send(req) {
-            Ok(()) => Ok(ResponseHandle { rx }),
+            Ok(()) => {
+                self.metrics.queue_enter();
+                Ok(ResponseHandle { rx })
+            }
             Err(mpsc::TrySendError::Full(_)) => Err(ServerError::Backpressure),
             Err(mpsc::TrySendError::Disconnected(_)) => Err(ServerError::Closed),
         }
@@ -146,12 +180,19 @@ impl InferenceServer {
         let (tx, rx) = mpsc::channel();
         let req = PendingRequest { input, respond: tx, enqueued_at: Instant::now() };
         self.submit_tx.send(req).map_err(|_| ServerError::Closed)?;
+        self.metrics.queue_enter();
         Ok(ResponseHandle { rx })
     }
 
     /// Current metrics snapshot.
     pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The live metrics registry — shared with front-ends (the TCP
+    /// acceptor) and stateful executors.
+    pub fn registry(&self) -> Arc<MetricsRegistry> {
+        Arc::clone(&self.metrics)
     }
 
     /// Graceful shutdown: stop accepting, drain, join.
@@ -193,10 +234,232 @@ impl ResponseHandle {
     pub fn wait(self) -> Result<Vec<f32>, ServerError> {
         match self.rx.recv() {
             Ok(Ok(v)) => Ok(v),
-            Ok(Err(e)) => Err(ServerError::Exec(e)),
+            Ok(Err(e)) => Err(map_exec_error(e)),
             Err(_) => Err(ServerError::Closed),
         }
     }
+
+    /// Block until the response arrives or `timeout` elapses. The chaos
+    /// harness leans on this: a lost response fails the test with
+    /// [`ServerError::Timeout`] instead of hanging it forever.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Vec<f32>, ServerError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(e)) => Err(map_exec_error(e)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServerError::Timeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServerError::Closed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// TCP front-end
+// ---------------------------------------------------------------------
+
+/// Retry hint carried on `Rejected` responses: long enough to let one
+/// batch window drain, short enough that backoff stays responsive.
+const RETRY_HINT_MS: u32 = 5;
+
+/// A TCP acceptor serving the typed wire protocol over real sockets:
+/// `[u32 len][payload]` frames in, one response frame per request out,
+/// in request order per connection. Admission failures become typed
+/// `Rejected` frames; undecodable frames become typed `Error` frames
+/// carrying the decode failure — the connection survives both.
+///
+/// Response-path faults (drop/duplicate, from an attached
+/// [`super::faults::Faults`]) are applied at the writer, which is
+/// exactly where a lossy network would apply them — the client's
+/// req-id ledger is what detects and explains them.
+pub struct TcpFront {
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<std::sync::Mutex<Vec<std::net::TcpStream>>>,
+    handlers: Arc<std::sync::Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl TcpFront {
+    /// Bind `bind` (e.g. `"127.0.0.1:0"`) and start accepting. The
+    /// front holds its own `Arc` to the server; shut the front down
+    /// before the server so in-flight requests drain.
+    pub fn start(
+        server: Arc<InferenceServer>,
+        faults: Option<Arc<super::faults::Faults>>,
+        bind: &str,
+    ) -> std::io::Result<TcpFront> {
+        let listener = std::net::TcpListener::bind(bind)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<std::sync::Mutex<Vec<std::net::TcpStream>>> = Arc::default();
+        let handlers: Arc<std::sync::Mutex<Vec<JoinHandle<()>>>> = Arc::default();
+
+        let accept_stop = Arc::clone(&stop);
+        let accept_conns = Arc::clone(&conns);
+        let accept_handlers = Arc::clone(&handlers);
+        let accept = std::thread::Builder::new()
+            .name("ftfi-tcp-accept".into())
+            .spawn(move || loop {
+                if accept_stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let _ = stream.set_nonblocking(false);
+                        let _ = stream.set_nodelay(true);
+                        if let Ok(clone) = stream.try_clone() {
+                            if let Ok(mut guard) = accept_conns.lock() {
+                                guard.push(clone);
+                            }
+                        }
+                        let server = Arc::clone(&server);
+                        let faults = faults.clone();
+                        let spawned = std::thread::Builder::new()
+                            .name("ftfi-tcp-conn".into())
+                            .spawn(move || serve_connection(&server, faults.as_deref(), stream));
+                        if let (Ok(handle), Ok(mut guard)) = (spawned, accept_handlers.lock()) {
+                            guard.push(handle);
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            })
+            // lint: allow(unchecked-panic) — OS thread-spawn failure at
+            // front-end startup is unrecoverable for the caller anyway.
+            .expect("spawn tcp acceptor");
+
+        Ok(TcpFront { local_addr, stop, accept: Some(accept), conns, handlers })
+    }
+
+    /// The bound address (useful with a `:0` bind).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, tear live connections down and join all threads.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Ok(mut guard) = self.conns.lock() {
+            for conn in guard.drain(..) {
+                let _ = conn.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        if let Ok(mut guard) = self.handlers.lock() {
+            for h in guard.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for TcpFront {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_inner();
+        }
+    }
+}
+
+/// One connection's serve loop: frames are handled serially, so every
+/// request on the connection gets exactly one response, in order —
+/// clients open more connections for concurrency (loadgen does).
+fn serve_connection(
+    server: &InferenceServer,
+    faults: Option<&super::faults::Faults>,
+    stream: std::net::TcpStream,
+) {
+    let metrics = server.registry();
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = std::io::BufReader::new(reader_stream);
+    let mut writer = std::io::BufWriter::new(stream);
+    loop {
+        let mut payload = match protocol::read_frame(&mut reader) {
+            Ok(Some(p)) => p,
+            // Clean EOF or a torn stream: either way the connection is
+            // over; already-answered requests are unaffected.
+            Ok(None) | Err(_) => return,
+        };
+        if let Some(f) = faults {
+            f.corrupt_payload(&mut payload);
+        }
+        let req_id = protocol::peek_req_id(&payload).unwrap_or(0);
+        let response = match protocol::decode_request(&payload) {
+            Err(e) => {
+                // Undecodable frames fail alone, without consuming a
+                // queue slot — the typed Error echoes the peeked id.
+                metrics.record_protocol_error();
+                protocol::StreamResponse::Error {
+                    message: format!("{}{e}", protocol::ERR_PROTOCOL_PREFIX),
+                }
+            }
+            Ok(_) => match server.submit(protocol::payload_to_words(&payload)) {
+                Err(ServerError::Backpressure) => protocol::StreamResponse::Rejected {
+                    reason: protocol::RejectReason::Backpressure,
+                    retry_after_hint_ms: RETRY_HINT_MS,
+                },
+                Err(e) => protocol::StreamResponse::Error { message: e.to_string() },
+                Ok(handle) => match handle.wait() {
+                    Ok(words) => match protocol::words_to_payload(&words) {
+                        Ok(resp_payload) => {
+                            if write_response(&mut writer, &resp_payload, faults).is_err() {
+                                return;
+                            }
+                            continue;
+                        }
+                        Err(e) => protocol::StreamResponse::Error {
+                            message: format!("{}{e}", protocol::ERR_PROTOCOL_PREFIX),
+                        },
+                    },
+                    Err(ServerError::Exec(e))
+                        if e.starts_with(protocol::ERR_SHED_PREFIX) =>
+                    {
+                        protocol::StreamResponse::Rejected {
+                            reason: protocol::RejectReason::DeadlineExceeded,
+                            retry_after_hint_ms: RETRY_HINT_MS,
+                        }
+                    }
+                    Err(e) => protocol::StreamResponse::Error { message: e.to_string() },
+                },
+            },
+        };
+        let resp_payload = protocol::encode_response(&response, req_id);
+        if write_response(&mut writer, &resp_payload, faults).is_err() {
+            return;
+        }
+    }
+}
+
+/// Write one response frame, applying writer-side response faults
+/// (silent drop, duplication) when an injector is attached.
+fn write_response<W: std::io::Write>(
+    w: &mut W,
+    payload: &[u8],
+    faults: Option<&super::faults::Faults>,
+) -> std::io::Result<()> {
+    if let Some(f) = faults {
+        if f.take_drop_response() {
+            return Ok(());
+        }
+        protocol::write_frame(w, payload)?;
+        if f.take_duplicate_response() {
+            protocol::write_frame(w, payload)?;
+        }
+        return Ok(());
+    }
+    protocol::write_frame(w, payload)
 }
 
 #[cfg(test)]
@@ -215,7 +478,7 @@ mod tests {
     }
 
     fn cfg() -> BatcherConfig {
-        BatcherConfig { batch_size: 4, batch_timeout: Duration::from_millis(1) }
+        BatcherConfig { batch_size: 4, batch_timeout: Duration::from_millis(1), shed_after: None }
     }
 
     #[test]
@@ -273,7 +536,11 @@ mod tests {
         }
         let server = InferenceServer::start(
             vec![Box::new(|| Box::new(Slow) as Box<dyn BatchExecutor>)],
-            BatcherConfig { batch_size: 1, batch_timeout: Duration::from_millis(0) },
+            BatcherConfig {
+                batch_size: 1,
+                batch_timeout: Duration::from_millis(0),
+                shed_after: None,
+            },
             2,
         );
         // Flood: some submissions must hit Backpressure.
@@ -313,7 +580,11 @@ mod tests {
         }
         let server = InferenceServer::start(
             vec![Box::new(|| Box::new(SlowDoubler) as Box<dyn BatchExecutor>)],
-            BatcherConfig { batch_size: 4, batch_timeout: Duration::from_millis(1) },
+            BatcherConfig {
+                batch_size: 4,
+                batch_timeout: Duration::from_millis(1),
+                shed_after: None,
+            },
             64,
         );
         let handles: Vec<_> =
@@ -345,7 +616,11 @@ mod tests {
         }
         let server = InferenceServer::start(
             vec![Box::new(|| Box::new(Slow) as Box<dyn BatchExecutor>)],
-            BatcherConfig { batch_size: 1, batch_timeout: Duration::from_millis(0) },
+            BatcherConfig {
+                batch_size: 1,
+                batch_timeout: Duration::from_millis(0),
+                shed_after: None,
+            },
             2,
         );
         let mut handles = Vec::new();
@@ -364,6 +639,139 @@ mod tests {
                 Err(e) => panic!("unexpected response after drop: {e}"),
             }
         }
+    }
+
+    #[test]
+    fn exec_error_prefixes_map_to_typed_variants() {
+        match map_exec_error(format!("{}bad checksum", protocol::ERR_PROTOCOL_PREFIX)) {
+            ServerError::Protocol(m) => assert_eq!(m, "bad checksum"),
+            other => panic!("expected Protocol, got {other:?}"),
+        }
+        match map_exec_error("plain failure".to_string()) {
+            ServerError::Exec(m) => assert_eq!(m, "plain failure"),
+            other => panic!("expected Exec, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_timeout_reports_lost_responses() {
+        struct Stall;
+        impl BatchExecutor for Stall {
+            fn max_batch(&self) -> usize {
+                1
+            }
+            fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+                std::thread::sleep(Duration::from_millis(200));
+                Ok(inputs.to_vec())
+            }
+        }
+        let server = InferenceServer::start(
+            vec![Box::new(|| Box::new(Stall) as Box<dyn BatchExecutor>)],
+            cfg(),
+            8,
+        );
+        let h = server.submit(vec![1.0]).unwrap();
+        assert_eq!(
+            h.wait_timeout(Duration::from_millis(5)).unwrap_err(),
+            ServerError::Timeout
+        );
+        // A response that does arrive in time comes back intact.
+        let h2 = server.submit(vec![2.0]).unwrap();
+        assert_eq!(h2.wait_timeout(Duration::from_secs(10)).unwrap(), vec![2.0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn queue_depth_gauge_returns_to_zero_after_drain() {
+        let server = InferenceServer::start(vec![Box::new(|| Box::new(Doubler) as Box<dyn BatchExecutor>)], cfg(), 64);
+        let handles: Vec<_> =
+            (0..10).map(|i| server.submit_blocking(vec![i as f32]).unwrap()).collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        assert_eq!(server.metrics().queue_depth, 0, "drained queue must gauge zero");
+        server.shutdown();
+    }
+
+    /// An executor that speaks the typed wire: decodes each request and
+    /// answers with a deterministic `Output` frame.
+    struct TypedEcho;
+    impl BatchExecutor for TypedEcho {
+        fn max_batch(&self) -> usize {
+            4
+        }
+        fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+            Ok(inputs
+                .iter()
+                .map(|words| {
+                    let payload = protocol::words_to_payload(words).expect("typed words");
+                    let (id, req) = protocol::decode_request(&payload).expect("typed request");
+                    let resp = protocol::StreamResponse::Output {
+                        session: req.session(),
+                        rows: 1,
+                        channels: 1,
+                        values: vec![req.session() as f32 + 0.5],
+                    };
+                    protocol::payload_to_words(&protocol::encode_response(&resp, id))
+                })
+                .collect())
+        }
+    }
+
+    #[test]
+    fn tcp_front_serves_typed_frames_and_survives_corrupt_ones() {
+        let server = Arc::new(InferenceServer::start(
+            vec![Box::new(|| Box::new(TypedEcho) as Box<dyn BatchExecutor>)],
+            cfg(),
+            64,
+        ));
+        let front = TcpFront::start(Arc::clone(&server), None, "127.0.0.1:0").unwrap();
+        let mut conn = std::net::TcpStream::connect(front.local_addr()).unwrap();
+        let mut rd = std::io::BufReader::new(conn.try_clone().unwrap());
+
+        // A well-formed request round-trips with its id echoed.
+        let req = protocol::StreamRequest::Lease { session: 6 };
+        protocol::write_frame(&mut conn, &protocol::encode_request(&req, 71)).unwrap();
+        let payload = protocol::read_frame(&mut rd).unwrap().expect("response frame");
+        let (id, resp) = protocol::decode_response(&payload).unwrap();
+        assert_eq!(id, 71);
+        assert_eq!(
+            resp,
+            protocol::StreamResponse::Output {
+                session: 6,
+                rows: 1,
+                channels: 1,
+                values: vec![6.5],
+            }
+        );
+
+        // A corrupted frame gets a typed protocol Error — and the
+        // connection stays usable for the next request.
+        let mut bad = protocol::encode_request(&req, 72);
+        let last = bad.len() - 1;
+        bad[last] ^= 0x10;
+        protocol::write_frame(&mut conn, &bad).unwrap();
+        let payload = protocol::read_frame(&mut rd).unwrap().expect("error frame");
+        let (id, resp) = protocol::decode_response(&payload).unwrap();
+        assert_eq!(id, 72, "the peeked req id must survive body corruption");
+        match resp {
+            protocol::StreamResponse::Error { message } => {
+                assert!(
+                    message.starts_with(protocol::ERR_PROTOCOL_PREFIX),
+                    "got: {message}"
+                );
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+        assert_eq!(server.metrics().protocol_errors, 1);
+
+        protocol::write_frame(&mut conn, &protocol::encode_request(&req, 73)).unwrap();
+        let payload = protocol::read_frame(&mut rd).unwrap().expect("post-corruption frame");
+        assert_eq!(protocol::decode_response(&payload).unwrap().0, 73);
+
+        drop(conn);
+        drop(rd);
+        front.stop();
     }
 
     #[test]

@@ -22,7 +22,12 @@
 //! (`TreeFieldIntegrator::replan_edge_prepared`) and compares against a
 //! rebuild-from-scratch + re-prepare; `serve --streaming
 //! --replan-edges r` additionally streams `r` edge replans (wire opcode
-//! 2) through the server.
+//! 2) through the server. `serve --streaming --wire typed|legacy`
+//! selects the checksummed binary protocol (default; seeded-backoff
+//! retries on backpressure) or the original float-opcode frames;
+//! `--max-pending P` and `--shed-after-ms D` (config:
+//! `streaming.max_pending` / `streaming.shed_after_ms`) bound the
+//! per-session queue and the queue age before load shedding.
 //!
 //! `integrate` and `serve` accept `--threads N` (0 = auto: honour
 //! `FTFI_THREADS`, else all cores; 1 = serial) for the parallel
@@ -43,8 +48,9 @@ use ftfi::bench_util::time_once;
 use ftfi::cli::Args;
 use ftfi::config::{Config, EnsembleConfig, IntegratorConfig, StreamingConfig};
 use ftfi::coordinator::{
-    BatchExecutor, BatcherConfig, FieldExecutor, InferenceServer, PreparedFieldExecutor,
-    StreamingFieldExecutor,
+    protocol, retry_with_backoff, BackoffPolicy, BatchExecutor, BatcherConfig, FieldExecutor,
+    InferenceServer, MetricsRegistry, PreparedFieldExecutor, RetryStep, ServerError,
+    StreamRequest, StreamResponse, StreamingFieldExecutor,
 };
 use ftfi::ftfi::brute::{BruteForceIntegrator, BruteTreeIntegrator};
 use ftfi::ftfi::functions::FDist;
@@ -221,6 +227,12 @@ fn streaming_config(args: &Args) -> Result<StreamingConfig, Box<dyn std::error::
     }
     if let Some(s) = args.get("max-sessions") {
         cfg.max_sessions = s.parse().map_err(|_| format!("bad --max-sessions {s:?}"))?;
+    }
+    if let Some(p) = args.get("max-pending") {
+        cfg.max_pending = p.parse().map_err(|_| format!("bad --max-pending {p:?}"))?;
+    }
+    if let Some(s) = args.get("shed-after-ms") {
+        cfg.shed_after_ms = s.parse().map_err(|_| format!("bad --shed-after-ms {s:?}"))?;
     }
     Ok(cfg)
 }
@@ -468,7 +480,12 @@ fn cmd_serve(args: &Args) -> CliResult {
 /// server) behind an `Arc`, every worker dispatching set/update
 /// requests into it. Each simulated client opens a session and then
 /// mutates `--delta-rows` rows per tick; `--replan-edges r` follows up
-/// with `r` in-place edge re-plans of the shared metric (opcode 2).
+/// with `r` in-place edge re-plans of the shared metric.
+///
+/// `--wire typed` (the default) speaks the checksummed binary protocol
+/// of [`ftfi::coordinator::protocol`] with seeded-backoff retries on
+/// backpressure; `--wire legacy` keeps the original float-opcode frames
+/// (parsed into the same typed requests at the executor boundary).
 fn cmd_serve_streaming(args: &Args) -> CliResult {
     let n = args.get_usize("n", 2000);
     let n_requests = args.get_usize("requests", 200);
@@ -476,6 +493,12 @@ fn cmd_serve_streaming(args: &Args) -> CliResult {
     let workers = args.get_usize("workers", 2);
     let k = args.get_usize("delta-rows", 4).min(n);
     let replans = args.get_usize("replan-edges", 0);
+    let wire = args.get_str("wire", "typed");
+    let typed = match wire {
+        "typed" => true,
+        "legacy" => false,
+        other => return Err(format!("unknown --wire {other:?} (typed|legacy)").into()),
+    };
     let f = parse_f(args.get_str("f", "exp"), args.get_f64("lambda", 0.5))?;
     let icfg = integrator_config(args)?;
     let policy = icfg.to_policy()?;
@@ -492,17 +515,24 @@ fn cmd_serve_streaming(args: &Args) -> CliResult {
         .pool(Arc::clone(&pool))
         .precision(icfg.to_precision()?)
         .build()?;
-    let exec = Arc::new(StreamingFieldExecutor::new(
-        tfi,
-        &f,
-        1,
-        scfg.refresh_every,
-        scfg.max_sessions,
-        batch.max(1),
-    )?);
+    // One registry shared by the executor (update latency, evictions,
+    // protocol errors) and the server (queue, shed, retries).
+    let metrics = Arc::new(MetricsRegistry::new());
+    let exec = Arc::new(
+        StreamingFieldExecutor::new(
+            tfi,
+            &f,
+            1,
+            scfg.refresh_every,
+            scfg.max_sessions,
+            batch.max(1),
+        )?
+        .with_max_pending(scfg.max_pending)
+        .with_metrics(Arc::clone(&metrics)),
+    );
     println!(
-        "streaming serve: f = {f:?}, n = {n}, {sessions} sessions (refresh every {}, \
-         {workers} workers, {} integration threads shared)",
+        "streaming serve: f = {f:?}, n = {n}, {sessions} sessions on the {wire} wire \
+         (refresh every {}, {workers} workers, {} integration threads shared)",
         scfg.refresh_every,
         pool.threads()
     );
@@ -516,69 +546,141 @@ fn cmd_serve_streaming(args: &Args) -> CliResult {
             }) as Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>
         })
         .collect();
-    let server = InferenceServer::start(
+    let shed_after = (scfg.shed_after_ms > 0).then(|| Duration::from_millis(scfg.shed_after_ms));
+    let server = InferenceServer::start_with_metrics(
         factories,
-        BatcherConfig { batch_size: batch.max(1), batch_timeout: Duration::from_millis(2) },
+        BatcherConfig {
+            batch_size: batch.max(1),
+            batch_timeout: Duration::from_millis(2),
+            shed_after,
+        },
         1024,
+        Arc::clone(&metrics),
     );
+
+    // Non-blocking submit under seeded exponential backoff: the bounded
+    // queue's Backpressure is the one retryable submit error.
+    let submit = |req: Vec<f32>, seed: u64| {
+        let (res, retries) = retry_with_backoff(&BackoffPolicy::default(), seed, |_| {
+            match server.submit(req.clone()) {
+                Ok(h) => RetryStep::Done(h),
+                Err(ServerError::Backpressure) => RetryStep::Retry(ServerError::Backpressure),
+                Err(e) => RetryStep::Fail(e),
+            }
+        });
+        if retries > 0 {
+            metrics.record_retries(u64::from(retries));
+        }
+        res.map_err(|e| e.to_string())
+    };
+    // Classify a response as (served, rejected-by-admission). On the
+    // legacy wire rejections surface as plain exec errors.
+    let classify = |res: Result<Vec<f32>, ServerError>| match res {
+        Ok(words) if typed => match protocol::response_from_words(&words) {
+            Ok((_, StreamResponse::Rejected { .. })) => (false, true),
+            Ok((_, StreamResponse::Error { .. })) | Err(_) => (false, false),
+            Ok(_) => (true, false),
+        },
+        Ok(_) => (true, false),
+        Err(_) => (false, false),
+    };
 
     // Open every session (full-field set), then stream updates.
     for s in 0..sessions {
-        let mut req = vec![0.0f32, s as f32];
-        req.extend((0..n).map(|_| rng.normal() as f32));
-        server.submit_blocking(req).unwrap().wait().map_err(|e| e.to_string())?;
-    }
-    println!("submitting {n_requests} updates of k = {k} rows (batch {batch})...");
-    let handles: Vec<_> = (0..n_requests)
-        .map(|i| {
-            let mut req = vec![1.0f32, (i % sessions) as f32, k as f32];
-            // Rows i·k.. wrap around the vertex set: distinct within one
-            // update, drifting across updates.
-            req.extend((0..k).map(|j| ((i * k + j) % n) as f32));
-            req.extend((0..k).map(|_| rng.normal() as f32));
-            server.submit_blocking(req).unwrap()
-        })
-        .collect();
-    let mut ok = 0;
-    for h in handles {
-        if h.wait().is_ok() {
-            ok += 1;
+        let values: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let req = if typed {
+            protocol::request_words(
+                &StreamRequest::Set { session: s as u32, rows: n as u32, channels: 1, values },
+                s as u64,
+            )
+        } else {
+            let mut req = vec![0.0f32, s as f32];
+            req.extend(values);
+            req
+        };
+        if !classify(submit(req, s as u64)?.wait()).0 {
+            return Err(format!("session {s} failed to open").into());
         }
     }
+    println!("submitting {n_requests} updates of k = {k} rows (batch {batch})...");
+    let mut handles = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        // Rows i·k.. wrap around the vertex set: distinct within one
+        // update, drifting across updates.
+        let rows: Vec<u32> = (0..k).map(|j| ((i * k + j) % n) as u32).collect();
+        let values: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let req = if typed {
+            protocol::request_words(
+                &StreamRequest::Update {
+                    session: (i % sessions) as u32,
+                    rows,
+                    channels: 1,
+                    values,
+                },
+                100 + i as u64,
+            )
+        } else {
+            let mut req = vec![1.0f32, (i % sessions) as f32, k as f32];
+            req.extend(rows.iter().map(|&r| r as f32));
+            req.extend(values);
+            req
+        };
+        handles.push(submit(req, 100 + i as u64)?);
+    }
+    let (mut ok, mut rejected) = (0usize, 0usize);
+    for h in handles {
+        let (served, shed) = classify(h.wait());
+        ok += usize::from(served);
+        rejected += usize::from(shed);
+    }
     if replans > 0 {
-        // Stream in-place edge re-plans (wire opcode 2) over real tree
-        // edges; alternating scales keep every replan an actual change.
-        println!("submitting {replans} edge replans (op 2)...");
+        // Stream in-place edge re-plans over real tree edges;
+        // alternating scales keep every replan an actual change.
+        println!("submitting {replans} edge replans...");
         let edges = tree.edges().to_vec();
-        let rhandles: Vec<_> = (0..replans)
-            .map(|j| {
-                let (u, v, w) = edges[j % edges.len()];
-                let scale = if (j / edges.len()) % 2 == 0 { 1.5 } else { 1.0 };
-                let req =
-                    vec![2.0f32, (j % sessions) as f32, u as f32, v as f32, (w * scale) as f32];
-                server.submit_blocking(req).unwrap()
-            })
-            .collect();
+        let mut rhandles = Vec::with_capacity(replans);
+        for j in 0..replans {
+            let (u, v, w) = edges[j % edges.len()];
+            let scale = if (j / edges.len()) % 2 == 0 { 1.5 } else { 1.0 };
+            let req = if typed {
+                protocol::request_words(
+                    &StreamRequest::ReplanEdge {
+                        session: (j % sessions) as u32,
+                        u,
+                        v,
+                        w: w * scale,
+                    },
+                    10_000 + j as u64,
+                )
+            } else {
+                vec![2.0f32, (j % sessions) as f32, u as f32, v as f32, (w * scale) as f32]
+            };
+            rhandles.push(submit(req, 10_000 + j as u64)?);
+        }
         let mut replan_ok = 0;
         for h in rhandles {
-            if h.wait().is_ok() {
+            if classify(h.wait()).0 {
                 replan_ok += 1;
             }
         }
         println!("replans acknowledged: {replan_ok}/{replans}");
     }
     let m = server.metrics();
-    let um = exec.metrics();
     println!(
-        "served {ok}/{n_requests}: {:.0} req/s, request p50 {:.1}ms p95 {:.1}ms; \
-         update p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms ({} updates recorded)",
+        "served {ok}/{n_requests} ({rejected} rejected by admission): {:.0} req/s, \
+         request p50 {:.1}ms p95 {:.1}ms; update p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms \
+         ({} updates recorded)",
         m.throughput_rps,
         m.latency_p50 * 1e3,
         m.latency_p95 * 1e3,
-        um.update_p50 * 1e3,
-        um.update_p95 * 1e3,
-        um.update_p99 * 1e3,
-        um.updates
+        m.update_p50 * 1e3,
+        m.update_p95 * 1e3,
+        m.update_p99 * 1e3,
+        m.updates
+    );
+    println!(
+        "robustness counters: {} protocol errors, {} evictions, {} shed, {} retries",
+        m.protocol_errors, m.sessions_evicted, m.requests_shed, m.retries
     );
     server.shutdown();
     Ok(())
@@ -635,7 +737,11 @@ fn cmd_serve_ensemble(args: &Args) -> CliResult {
         .collect();
     let server = InferenceServer::start(
         factories,
-        BatcherConfig { batch_size: batch.max(1), batch_timeout: Duration::from_millis(2) },
+        BatcherConfig {
+            batch_size: batch.max(1),
+            batch_timeout: Duration::from_millis(2),
+            shed_after: None,
+        },
         1024,
     );
     println!("submitting {n_requests} requests (batch {batch})...");
@@ -710,7 +816,11 @@ fn cmd_serve_field(args: &Args) -> CliResult {
         .collect();
     let server = InferenceServer::start(
         factories,
-        BatcherConfig { batch_size: batch.max(1), batch_timeout: Duration::from_millis(2) },
+        BatcherConfig {
+            batch_size: batch.max(1),
+            batch_timeout: Duration::from_millis(2),
+            shed_after: None,
+        },
         1024,
     );
     println!("submitting {n_requests} requests (batch {batch})...");
@@ -809,7 +919,11 @@ fn cmd_serve_topvit(args: &Args) -> CliResult {
                 .expect("load TopViT");
             Box::new(TopVitExecutor::new(model, 8)) as Box<dyn BatchExecutor>
         })],
-        BatcherConfig { batch_size: batch.min(8), batch_timeout: Duration::from_millis(2) },
+        BatcherConfig {
+            batch_size: batch.min(8),
+            batch_timeout: Duration::from_millis(2),
+            shed_after: None,
+        },
         1024,
     );
     let mut rng = Pcg::seed(3);

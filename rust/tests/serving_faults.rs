@@ -1,0 +1,316 @@
+//! Chaos harness for the fault-tolerant serving stack: randomized,
+//! seeded fault schedules driven through the real server (and the real
+//! TCP front-end) asserting the two robustness invariants of
+//! DESIGN.md "Serving robustness":
+//!
+//! 1. **Exactly one response** — every accepted request resolves with
+//!    exactly one outcome (a typed response or a typed error); lost
+//!    responses surface as `ServerError::Timeout`, never as a hang.
+//! 2. **Session-state integrity** — after any fault schedule, replaying
+//!    only the requests that actually executed into a freshly-built
+//!    oracle reproduces every response and the final per-session
+//!    outputs bit-identically.
+//!
+//! Every assertion carries a `REPRO:` message with the schedule seed
+//! and worker count, so a failure replays deterministically.
+
+use ftfi::coordinator::protocol::{self, StreamRequest, StreamResponse};
+use ftfi::coordinator::{
+    BatchExecutor, BatcherConfig, FaultPlan, Faults, FaultyExecutor, InferenceServer,
+    ServerError, StreamingFieldExecutor, TcpFront,
+};
+use ftfi::ftfi::TreeFieldIntegrator;
+use ftfi::graph::generators;
+use ftfi::ml::rng::Pcg;
+use ftfi::{FDist, Tree};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Vertex count of every chaos tree: small enough that 200 schedules
+/// stay fast, large enough that updates and replans do real work.
+const N: usize = 24;
+
+fn build_exec(tree: &Tree) -> StreamingFieldExecutor {
+    let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
+    let tfi = TreeFieldIntegrator::builder(tree).threads(1).build().unwrap();
+    StreamingFieldExecutor::new(tfi, &f, 1, 4, 3, 4).unwrap().with_max_pending(4)
+}
+
+fn set_req(session: u32, rng: &mut Pcg) -> StreamRequest {
+    StreamRequest::Set {
+        session,
+        rows: N as u32,
+        channels: 1,
+        values: (0..N).map(|_| rng.normal() as f32).collect(),
+    }
+}
+
+fn update_req(session: u32, rng: &mut Pcg) -> StreamRequest {
+    let k = 1 + rng.below(3);
+    let start = rng.below(N);
+    StreamRequest::Update {
+        session,
+        rows: (0..k).map(|j| ((start + j) % N) as u32).collect(),
+        channels: 1,
+        values: (0..k).map(|_| rng.normal() as f32).collect(),
+    }
+}
+
+/// A seeded mixed request script: opens three sessions, then streams
+/// updates, replans, leases, closes, re-sets (including a fourth
+/// session id, so LRU eviction fires) and deliberately invalid rows
+/// (so typed `Error` responses replay too).
+fn make_script(seed: u64, edges: &[(u32, u32, f64)]) -> Vec<StreamRequest> {
+    let mut rng = Pcg::new(seed, 0x5C21);
+    let mut reqs = Vec::new();
+    for s in 0..3u32 {
+        reqs.push(set_req(s, &mut rng));
+    }
+    for _ in 0..30 {
+        let session = rng.below(4) as u32;
+        reqs.push(match rng.below(10) {
+            0 => set_req(session, &mut rng),
+            1..=5 => update_req(session, &mut rng),
+            6 => {
+                let (u, v, w) = edges[rng.below(edges.len())];
+                let scale = if rng.bool(0.5) { 1.5 } else { 0.75 };
+                StreamRequest::ReplanEdge { session, u, v, w: w * scale }
+            }
+            7 => StreamRequest::Lease { session },
+            8 => StreamRequest::Close { session },
+            _ => StreamRequest::Update {
+                session,
+                rows: vec![999],
+                channels: 1,
+                values: vec![1.0],
+            },
+        });
+    }
+    reqs
+}
+
+/// One schedule: serialized submit→wait traffic through a real server
+/// whose workers wrap the shared executor in a seeded [`FaultyExecutor`]
+/// (request corruption, injected latency, worker panics). Serialization
+/// makes the fault schedule — and therefore the executed subsequence —
+/// deterministic, which is what lets the oracle replay bit-identically.
+fn run_schedule(seed: u64, workers: usize) {
+    let repro = format!("REPRO: serving_faults schedule seed={seed} workers={workers}");
+    let mut tree_rng = Pcg::seed(seed);
+    let tree = generators::random_tree(N, 0.2, 1.0, &mut tree_rng);
+    let live = Arc::new(build_exec(&tree));
+    let oracle = build_exec(&tree);
+    let plan = FaultPlan {
+        seed,
+        corrupt_frame: 0.15,
+        latency: 0.05,
+        latency_ms: 1,
+        panic_worker: 0.05,
+        ..FaultPlan::default()
+    };
+    let faults = Faults::new(&plan).expect("plan is on");
+    let factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>> = (0..workers)
+        .map(|_| {
+            let exec = Arc::clone(&live);
+            let faults = Arc::clone(&faults);
+            Box::new(move || {
+                Box::new(FaultyExecutor::new(exec, faults)) as Box<dyn BatchExecutor>
+            }) as Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>
+        })
+        .collect();
+    let server = InferenceServer::start(
+        factories,
+        BatcherConfig {
+            batch_size: 4,
+            batch_timeout: Duration::from_millis(1),
+            shed_after: None,
+        },
+        64,
+    );
+
+    let script = make_script(seed, tree.edges());
+    let mut outcomes: Vec<Option<StreamResponse>> = Vec::with_capacity(script.len());
+    let (mut corrupted, mut panicked) = (0u64, 0u64);
+    for (i, req) in script.iter().enumerate() {
+        let words = protocol::request_words(req, i as u64);
+        let handle = server
+            .submit_blocking(words)
+            .unwrap_or_else(|e| panic!("submit failed: {e}; {repro}"));
+        match handle.wait_timeout(Duration::from_secs(30)) {
+            Ok(words) => {
+                let (id, resp) = protocol::response_from_words(&words)
+                    .unwrap_or_else(|e| panic!("undecodable response: {e}; {repro}"));
+                assert_eq!(id, i as u64, "response must echo the request id; {repro}");
+                outcomes.push(Some(resp));
+            }
+            Err(ServerError::Protocol(_)) => {
+                corrupted += 1;
+                outcomes.push(None);
+            }
+            Err(ServerError::Exec(e)) if e.starts_with("worker panic") => {
+                panicked += 1;
+                outcomes.push(None);
+            }
+            Err(ServerError::Timeout) => {
+                panic!("request {i} lost its response (exactly-one violated); {repro}")
+            }
+            Err(e) => panic!("request {i} unexpected error: {e}; {repro}"),
+        }
+    }
+    server.shutdown();
+
+    // Every failure must be explained by an injected fault, exactly.
+    let c = faults.counters();
+    assert_eq!(corrupted, c.frames_corrupted, "unexplained decode failures; {repro}");
+    assert_eq!(panicked, c.panics_injected, "unexplained worker panics; {repro}");
+
+    // Replaying the executed subsequence into a fresh oracle reproduces
+    // every response bit-identically (corrupted and panicked requests
+    // never touched session state, so they are skipped).
+    for (req, outcome) in script.iter().zip(&outcomes) {
+        if let Some(live_resp) = outcome {
+            let oracle_resp = oracle.execute_request(req);
+            assert_eq!(&oracle_resp, live_resp, "response diverged from the oracle; {repro}");
+        }
+    }
+    // Post-fault session state matches the rebuilt oracle bit-exactly.
+    for s in 0..4u32 {
+        let probe = StreamRequest::Lease { session: s };
+        assert_eq!(
+            live.execute_request(&probe),
+            oracle.execute_request(&probe),
+            "session {s} state diverged from the rebuilt oracle; {repro}"
+        );
+    }
+}
+
+/// 100 seeds × worker counts {1, 4} = 200 randomized fault schedules.
+/// Injected worker panics are expected here, so the global panic hook
+/// is silenced for the duration (assertion payloads still surface
+/// through the harness).
+#[test]
+fn two_hundred_fault_schedules_keep_every_invariant() {
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let result = std::panic::catch_unwind(|| {
+        for seed in 0..100u64 {
+            for workers in [1usize, 4] {
+                run_schedule(seed, workers);
+            }
+        }
+    });
+    std::panic::set_hook(prev_hook);
+    if let Err(payload) = result {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+/// Response-path faults over the real TCP front: every missing response
+/// is explained by the drop counter and every extra one by the
+/// duplicate counter — `lost_unexplained` is zero by construction.
+#[test]
+fn tcp_response_faults_are_fully_explained_by_the_ledger() {
+    let mut rng = Pcg::seed(77);
+    let tree = generators::random_tree(N, 0.2, 1.0, &mut rng);
+    let exec = Arc::new(build_exec(&tree));
+    let factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>> = vec![Box::new({
+        let exec = Arc::clone(&exec);
+        move || Box::new(exec) as Box<dyn BatchExecutor>
+    })];
+    let server = Arc::new(InferenceServer::start(
+        factories,
+        BatcherConfig {
+            batch_size: 4,
+            batch_timeout: Duration::from_millis(1),
+            shed_after: None,
+        },
+        64,
+    ));
+    let plan = FaultPlan {
+        seed: 77,
+        drop_response: 0.15,
+        duplicate_response: 0.15,
+        ..FaultPlan::default()
+    };
+    let faults = Faults::new(&plan).expect("plan is on");
+    let front =
+        TcpFront::start(Arc::clone(&server), Some(Arc::clone(&faults)), "127.0.0.1:0").unwrap();
+
+    let mut conn = std::net::TcpStream::connect(front.local_addr()).unwrap();
+    let mut rd = std::io::BufReader::new(conn.try_clone().unwrap());
+    let mut script_rng = Pcg::new(77, 0xC11E);
+    let total = 61u64;
+    protocol::write_frame(&mut conn, &protocol::encode_request(&set_req(0, &mut script_rng), 0))
+        .unwrap();
+    for id in 1..total {
+        let req = if script_rng.bool(0.5) {
+            update_req(0, &mut script_rng)
+        } else {
+            StreamRequest::Lease { session: 0 }
+        };
+        protocol::write_frame(&mut conn, &protocol::encode_request(&req, id)).unwrap();
+    }
+    // Half-close: the handler drains every pipelined frame, answers
+    // each (minus drops, plus duplicates), then hits clean EOF.
+    conn.shutdown(std::net::Shutdown::Write).unwrap();
+
+    let mut counts = std::collections::BTreeMap::<u64, u64>::new();
+    let mut received = 0u64;
+    while let Some(payload) = protocol::read_frame(&mut rd).unwrap() {
+        let (id, resp) = protocol::decode_response(&payload).unwrap();
+        assert!(id < total, "unknown response id {id}");
+        assert!(matches!(resp, StreamResponse::Output { .. }), "got {resp:?}");
+        *counts.entry(id).or_insert(0) += 1;
+        received += 1;
+    }
+    let c = faults.counters();
+    let unique = counts.len() as u64;
+    let dupes: u64 = counts.values().map(|&n| n - 1).sum();
+    assert!(counts.values().all(|&n| n <= 2), "a response is sent at most twice");
+    assert_eq!(unique + c.responses_dropped, total, "losses beyond the drop counter");
+    assert_eq!(dupes, c.responses_duplicated, "extras beyond the duplicate counter");
+    assert_eq!(received, total - c.responses_dropped + c.responses_duplicated);
+    front.stop();
+}
+
+/// A client that tears its connection down mid-frame must not take the
+/// front-end with it: the next connection still round-trips.
+#[test]
+fn disconnect_mid_frame_leaves_the_server_serving() {
+    use std::io::Write;
+    let mut rng = Pcg::seed(9);
+    let tree = generators::random_tree(N, 0.2, 1.0, &mut rng);
+    let exec = Arc::new(build_exec(&tree));
+    let factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>> = vec![Box::new({
+        let exec = Arc::clone(&exec);
+        move || Box::new(exec) as Box<dyn BatchExecutor>
+    })];
+    let server = Arc::new(InferenceServer::start(
+        factories,
+        BatcherConfig {
+            batch_size: 4,
+            batch_timeout: Duration::from_millis(1),
+            shed_after: None,
+        },
+        64,
+    ));
+    let front = TcpFront::start(Arc::clone(&server), None, "127.0.0.1:0").unwrap();
+
+    // A torn frame: the length prefix promises more bytes than arrive.
+    let mut conn = std::net::TcpStream::connect(front.local_addr()).unwrap();
+    let payload = protocol::encode_request(&set_req(0, &mut rng), 1);
+    conn.write_all(&(payload.len() as u32).to_le_bytes()).unwrap();
+    conn.write_all(&payload[..payload.len() / 2]).unwrap();
+    drop(conn);
+
+    // A fresh connection still serves end to end.
+    let mut conn2 = std::net::TcpStream::connect(front.local_addr()).unwrap();
+    let mut rd = std::io::BufReader::new(conn2.try_clone().unwrap());
+    protocol::write_frame(&mut conn2, &protocol::encode_request(&set_req(0, &mut rng), 2))
+        .unwrap();
+    let resp = protocol::read_frame(&mut rd).unwrap().expect("response frame");
+    let (id, resp) = protocol::decode_response(&resp).unwrap();
+    assert_eq!(id, 2);
+    assert!(matches!(resp, StreamResponse::Output { .. }), "got {resp:?}");
+    front.stop();
+}

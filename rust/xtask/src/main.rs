@@ -1214,6 +1214,16 @@ mod tests {
         let f = lint_source("ot/foo.rs", src);
         assert_eq!(rules(&f), vec!["unchecked-panic"]);
         assert!(f[0].strict);
+        // The serving wire protocol and the fault injector sit on the
+        // failure path by definition: a panic there takes down exactly
+        // the machinery meant to contain failures, so both are pinned
+        // strict (via the coordinator/ prefix) on purpose.
+        for rel in ["coordinator/protocol.rs", "coordinator/faults.rs"] {
+            assert!(panic_strict(rel), "{rel} must stay panic-strict");
+            let f = lint_source(rel, src);
+            assert_eq!(rules(&f), vec!["unchecked-panic"]);
+            assert!(f[0].strict, "{rel} finding must be strict");
+        }
         // …and advisory elsewhere.
         let f = lint_source("ml/foo.rs", src);
         assert_eq!(rules(&f), vec!["unchecked-panic"]);
