@@ -34,15 +34,18 @@
 //!   reference kernels, d ∈ {1, 8, 64}) + f32-serving-tier drift, with
 //!   pre-timing f64 bit-identity / f32-budget asserts and
 //!   `BENCH_simd.json`;
+//! - multi-graph plan cache + fused delta batching (16 sessions over
+//!   G ∈ {1, 4, 16} cached graphs, fused vs unfused update runs), with
+//!   pre- and post-timing bit-identity asserts and `BENCH_cache.json`;
 //!
 //! Run: `cargo bench --bench ablations`. The CI bench-smoke job runs
 //! `cargo bench --bench ablations -- --quick`, which executes only the
-//! cheap parallel-scaling, ensemble-scaling, hot-path, delta, replan
-//! and lane-kernel sweeps and emits `BENCH_parallel.json` +
-//! `BENCH_ensemble.json` + `BENCH_hotpath.json` + `BENCH_delta.json` +
-//! `BENCH_replan.json` + `BENCH_simd.json` as the perf-trajectory
-//! artifacts; `cargo xtask bench-gate` then checks every artifact
-//! against `benches/thresholds.json`.
+//! cheap parallel-scaling, ensemble-scaling, hot-path, delta, replan,
+//! lane-kernel and cache-fusion sweeps and emits `BENCH_parallel.json`
+//! + `BENCH_ensemble.json` + `BENCH_hotpath.json` + `BENCH_delta.json`
+//! + `BENCH_replan.json` + `BENCH_simd.json` + `BENCH_cache.json` as
+//! the perf-trajectory artifacts; `cargo xtask bench-gate` then checks
+//! every artifact against `benches/thresholds.json`.
 
 use ftfi::bench_util::{banner, bench, time_once, Table};
 use ftfi::ftfi::cordial::{cross_apply, cross_apply_dense, CrossPolicy, Strategy};
@@ -758,6 +761,233 @@ fn simd_scaling(quick: bool) {
     println!("wrote BENCH_simd.json (f64 bit-identity + f32 budget asserted before timing)");
 }
 
+/// Tentpole bench (PR 10): multi-graph prepared-plan cache + fused
+/// delta batching. Drives the streaming serving executor over 16
+/// sessions spread round-robin across G ∈ {1, 4, 16} cached graphs,
+/// every batch window carrying a 4-update run per session, fused vs
+/// unfused. Before anything is timed it asserts the two executors are
+/// bit-identical: on the final member of every update run and on every
+/// session's full lease state after every window (non-final members of
+/// a fused run carry the post-run output by documented contract — the
+/// exhaustive churn harness lives in tests/serving_cache.rs). The same
+/// lease probe re-runs *after* timing, so the timed iterations are
+/// covered too. Always writes `BENCH_cache.json`; the bench-gate step
+/// checks fusion speedups, fused-update/rows-saved counters and cache
+/// hit counts against `benches/thresholds.json`.
+fn cache_fusion(quick: bool) {
+    use ftfi::config::CacheConfig;
+    use ftfi::coordinator::protocol::{self, StreamRequest};
+    use ftfi::coordinator::{BatchExecutor, MetricsRegistry, StreamingFieldExecutor};
+    use std::sync::Arc;
+
+    let n = 1000;
+    let d = 2usize;
+    let sessions: u32 = 16;
+    let run = 4usize; // updates per session per window — what fusion collapses
+    banner(&format!(
+        "Ablation: plan cache + update fusion (n = {n}, d = {d}, {sessions} sessions, threads = 1)"
+    ));
+    let (warmup, runs) = if quick { (1, 3) } else { (2, 7) };
+    let table = Table::new(
+        &["G", "unfused (ms)", "fused (ms)", "speedup", "rows saved", "hits", "misses"],
+        &[4, 13, 11, 8, 11, 6, 7],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for &g in &[1usize, 4, 16] {
+        // G same-sized trees; graph 0 is the executors' default, the
+        // rest resolve through `OpenGraph` and the plan cache.
+        let trees: Vec<ftfi::Tree> = (0..g)
+            .map(|gi| {
+                let mut trng = Pcg::seed(0xBE7A ^ (0xCA00 + gi as u64));
+                generators::random_tree(n, 0.2, 1.0, &mut trng)
+            })
+            .collect();
+        let f = FDist::Exponential { lambda: -0.45, scale: 1.0 };
+        let build = |fuse: bool, metrics: &Arc<MetricsRegistry>| {
+            let tfi =
+                TreeFieldIntegrator::builder(&trees[0]).threads(1).build().expect("valid tree");
+            StreamingFieldExecutor::new(tfi, &f, d, 0, sessions as usize, 64)
+                .expect("plannable f")
+                .with_cache(CacheConfig { max_graphs: 16, max_bytes_mb: 0, fuse_updates: fuse })
+                .with_metrics(Arc::clone(metrics))
+        };
+        let mf = Arc::new(MetricsRegistry::new());
+        let mu = Arc::new(MetricsRegistry::new());
+        let fused = build(true, &mf);
+        let unfused = build(false, &mu);
+
+        let mut rng = Pcg::seed(0xCAFE + g as u64);
+        let mut next_id = 0u64;
+        // Each session updates rows drawn from a fixed 32-row pool, so
+        // the cumulative dirty set — and with it the per-window delta
+        // cost — stays bounded across the timed iterations.
+        let pools: Vec<Vec<u32>> = (0..sessions)
+            .map(|_| (0..32).map(|_| rng.below(n) as u32).collect())
+            .collect();
+        let admit = |rng: &mut Pcg| -> Vec<StreamRequest> {
+            let mut w = Vec::new();
+            for s in 0..sessions {
+                let gi = s as usize % g;
+                if gi > 0 {
+                    let t = &trees[gi];
+                    w.push(StreamRequest::OpenGraph {
+                        session: s,
+                        n: t.n() as u32,
+                        edges: t.edges().to_vec(),
+                    });
+                }
+                w.push(StreamRequest::Set {
+                    session: s,
+                    rows: n as u32,
+                    channels: d as u32,
+                    values: (0..n * d).map(|_| rng.normal() as f32).collect(),
+                });
+            }
+            w
+        };
+        let update_window = |rng: &mut Pcg, pools: &[Vec<u32>]| -> Vec<StreamRequest> {
+            let mut w = Vec::new();
+            for s in 0..sessions {
+                for _ in 0..run {
+                    let k = 8usize;
+                    let pool = &pools[s as usize];
+                    w.push(StreamRequest::Update {
+                        session: s,
+                        rows: (0..k).map(|_| pool[rng.below(pool.len())]).collect(),
+                        channels: d as u32,
+                        values: (0..k * d).map(|_| rng.normal() as f32).collect(),
+                    });
+                }
+            }
+            w
+        };
+        let encode = |w: &[StreamRequest], next_id: &mut u64| -> Vec<Vec<f32>> {
+            w.iter()
+                .map(|r| {
+                    let id = *next_id;
+                    *next_id += 1;
+                    protocol::request_words(r, id)
+                })
+                .collect()
+        };
+        // Bit-exact comparison of raw response frames (request ids are
+        // identical by construction, payload floats compare by bits).
+        let assert_frames_eq = |a: &Result<Vec<f32>, String>,
+                                b: &Result<Vec<f32>, String>,
+                                what: &str| match (a, b) {
+            (Ok(fa), Ok(fb)) => {
+                let ba: Vec<u32> = fa.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = fb.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ba, bb, "G={g} {what}: fused and unfused frames diverged");
+            }
+            (a, b) => assert_eq!(a, b, "G={g} {what}: fused and unfused results diverged"),
+        };
+        let lease_probe = |next_id: &mut u64| {
+            let probes: Vec<StreamRequest> =
+                (0..sessions).map(|s| StreamRequest::Lease { session: s }).collect();
+            let words = encode(&probes, next_id);
+            let a = fused.execute_each(&words);
+            let b = unfused.execute_each(&words);
+            for (ra, rb) in a.iter().zip(&b) {
+                assert_frames_eq(ra, rb, "lease probe");
+            }
+        };
+
+        // Pre-timing bit-identity gate: admission, a re-open wave (the
+        // cache-hit path: every session re-resolves its already-cached
+        // graph), then mixed update windows — final-member responses
+        // and full lease state compared after every window.
+        for wave in 0..2 {
+            let words = encode(&admit(&mut rng), &mut next_id);
+            let a = fused.execute_each(&words);
+            let b = unfused.execute_each(&words);
+            for (ra, rb) in a.iter().zip(&b) {
+                assert_frames_eq(ra, rb, if wave == 0 { "admission" } else { "re-open wave" });
+            }
+        }
+        for _ in 0..2 {
+            let words = encode(&update_window(&mut rng, &pools), &mut next_id);
+            let a = fused.execute_each(&words);
+            let b = unfused.execute_each(&words);
+            for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
+                assert!(ra.is_ok(), "G={g}: update {i} failed: {ra:?}");
+                if i % run == run - 1 {
+                    assert_frames_eq(ra, rb, "update-run final member");
+                }
+            }
+            lease_probe(&mut next_id);
+        }
+        let sf = mf.snapshot();
+        let su = mu.snapshot();
+        assert!(sf.fused_updates > 0, "G={g}: fused executor never fused a run");
+        assert_eq!(su.fused_updates, 0, "G={g}: unfused executor must not fuse");
+        assert_eq!(
+            (sf.cache_hits, sf.cache_misses),
+            (su.cache_hits, su.cache_misses),
+            "G={g}: serial cache traffic must be identical"
+        );
+
+        // Timing: both executors replay the same pre-encoded windows
+        // the same number of times (bench = warmup + runs calls), so
+        // their states stay aligned for the post-timing lease probe.
+        let timed: Vec<Vec<Vec<f32>>> =
+            (0..4).map(|_| encode(&update_window(&mut rng, &pools), &mut next_id)).collect();
+        let t_unfused = bench(warmup, runs, || {
+            for w in &timed {
+                for r in unfused.execute_each(w) {
+                    r.expect("unfused update");
+                }
+            }
+        });
+        let t_fused = bench(warmup, runs, || {
+            for w in &timed {
+                for r in fused.execute_each(w) {
+                    r.expect("fused update");
+                }
+            }
+        });
+        lease_probe(&mut next_id);
+
+        let sf = mf.snapshot();
+        let lookups = sf.cache_hits + sf.cache_misses;
+        let hit_rate =
+            if lookups == 0 { 1.0 } else { sf.cache_hits as f64 / lookups as f64 };
+        let speedup = t_unfused.median / t_fused.median.max(1e-12);
+        table.row(&[
+            g.to_string(),
+            format!("{:.3}", t_unfused.median * 1e3),
+            format!("{:.3}", t_fused.median * 1e3),
+            format!("{speedup:.2}x"),
+            sf.fusion_rows_saved.to_string(),
+            sf.cache_hits.to_string(),
+            sf.cache_misses.to_string(),
+        ]);
+        json_rows.push(format!(
+            "    {{\"graphs\": {g}, \"unfused_s\": {:.6}, \"fused_s\": {:.6}, \
+             \"speedup\": {speedup:.3}, \"fused_updates\": {}, \"fusion_rows_saved\": {}, \
+             \"cache_hits\": {}, \"cache_misses\": {}, \"cache_evictions\": {}, \
+             \"cache_hit_rate\": {hit_rate:.4}}}",
+            t_unfused.median,
+            t_fused.median,
+            sf.fused_updates,
+            sf.fusion_rows_saved,
+            sf.cache_hits,
+            sf.cache_misses,
+            sf.cache_evictions,
+        ));
+    }
+    let mut json = String::from("{\n  \"bench\": \"cache_fusion\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n}, \"d\": {d}, \"sessions\": {sessions}, \"run_len\": {run}, \
+         \"threads\": 1, \"quick\": {quick},\n"
+    ));
+    json.push_str("  \"bit_identical_fused_vs_unfused\": true,\n  \"results\": [\n");
+    json.push_str(&json_rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    std::fs::write("BENCH_cache.json", &json).expect("write BENCH_cache.json");
+    println!("wrote BENCH_cache.json (fused vs unfused bit-identity asserted before timing)");
+}
+
 fn strategy_crossover() {
     banner("Ablation: cross-multiplier strategies, C in R^{k x l}, d=4");
     let table =
@@ -907,6 +1137,7 @@ fn main() {
         delta_scaling(true);
         replan_scaling(true);
         simd_scaling(true);
+        cache_fusion(true);
         return;
     }
     leaf_threshold_sweep();
@@ -917,6 +1148,7 @@ fn main() {
     delta_scaling(false);
     replan_scaling(false);
     simd_scaling(false);
+    cache_fusion(false);
     strategy_crossover();
     rff_sweep();
     fig9_cubes();

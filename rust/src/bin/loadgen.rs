@@ -1,26 +1,33 @@
 //! `loadgen` — open-loop serving load generator for the streaming
 //! stack, over the real TCP wire ([`ftfi::coordinator::TcpFront`]).
 //!
-//! Seeded Poisson arrivals with periodic bursts drive one typed-wire
-//! connection per client; every client owns a session and streams
-//! sparse updates (plus leases, re-sets and edge replans) through the
-//! [`ftfi::coordinator::retry_with_backoff`] helper, re-admitting
-//! itself after eviction and re-syncing after lost responses. With
-//! `--faults chaos` a seeded [`FaultPlan`] corrupts frames, drops and
-//! duplicates responses, injects latency, panics workers and
-//! disconnects clients mid-stream.
+//! Seeded Poisson arrivals drive one typed-wire connection per client;
+//! each client multiplexes a slice of `--sessions` sessions, binding
+//! every session to graph `session % --graphs` (graph 0 is the server
+//! default, the rest are opened through `OpenGraph` and resolved by the
+//! prepared-plan cache). Traffic is bursty per-session update *trains*:
+//! a pipelined run of sparse updates for one session written
+//! back-to-back — the shape the server's delta fusion collapses into a
+//! single pass — interleaved with leases, re-sets and edge replans
+//! through the [`ftfi::coordinator::retry_with_backoff`] helper,
+//! re-admitting (re-open + re-set) after eviction and re-syncing after
+//! lost responses. With `--faults chaos` a seeded [`FaultPlan`]
+//! corrupts frames, drops and duplicates responses, injects latency,
+//! panics workers and disconnects clients mid-stream.
 //!
 //! The run writes `BENCH_serving.json` (override with `--out`): client
 //! latency percentiles (p50/p95/p99/p999 ms), shed/evict/protocol-error
-//! /retry counters, and a loss ledger reconciled against the injected
-//! fault counters — `lost_unexplained` must be 0, faults or no faults.
+//! /retry counters, plan-cache hit/miss/eviction + fusion counters, and
+//! a loss ledger reconciled against the injected fault counters —
+//! `lost_unexplained` must be 0, faults or no faults.
 //!
 //! ```text
-//! loadgen --clients 4 --requests 150 --rate 400 --faults chaos \
-//!         --max-sessions 3 --shed-after-ms 50 --seed 42
+//! loadgen --clients 4 --sessions 2000 --graphs 8 --requests 5200 \
+//!         --cache-graphs 8 --rate 300 --seed 42
 //! ```
 
 use ftfi::cli::Args;
+use ftfi::config::CacheConfig;
 use ftfi::coordinator::protocol::{self, StreamRequest, StreamResponse};
 use ftfi::coordinator::{
     retry_with_backoff, BackoffPolicy, BatchExecutor, BatcherConfig, FaultPlan, Faults,
@@ -120,6 +127,51 @@ impl Client {
             }
         }
     }
+
+    /// Pipeline a train: write every frame back-to-back, then collect
+    /// responses by id (out-of-order tolerated) until all arrive or the
+    /// read times out. `Err(())` means the write itself failed — no
+    /// frame reached the server, so nothing was *lost*, the caller
+    /// should reconnect and replay. Slots still `None` after a timeout
+    /// are genuine losses.
+    fn call_train(
+        &mut self,
+        reqs: &[StreamRequest],
+        strays: &mut u64,
+    ) -> Result<Vec<Option<StreamResponse>>, ()> {
+        let ids: Vec<u64> = reqs
+            .iter()
+            .map(|_| {
+                let id = self.next_id;
+                self.next_id += 1;
+                id
+            })
+            .collect();
+        for (req, &id) in reqs.iter().zip(&ids) {
+            let payload = protocol::encode_request(req, id);
+            if protocol::write_frame(&mut self.conn, &payload).is_err() {
+                return Err(());
+            }
+        }
+        let mut out: Vec<Option<StreamResponse>> = vec![None; reqs.len()];
+        let mut got = 0;
+        while got < reqs.len() {
+            match protocol::read_frame(&mut self.rd) {
+                Ok(Some(frame)) => match protocol::decode_response(&frame) {
+                    Ok((rid, resp)) => match ids.iter().position(|&i| i == rid) {
+                        Some(pos) if out[pos].is_none() => {
+                            out[pos] = Some(resp);
+                            got += 1;
+                        }
+                        _ => *strays += 1,
+                    },
+                    Err(_) => *strays += 1,
+                },
+                Ok(None) | Err(_) => break,
+            }
+        }
+        Ok(out)
+    }
 }
 
 fn set_request(session: u32, n: usize, rng: &mut Pcg) -> StreamRequest {
@@ -131,23 +183,123 @@ fn set_request(session: u32, n: usize, rng: &mut Pcg) -> StreamRequest {
     }
 }
 
-/// Drive one client: open-loop pacing, mixed traffic, backoff retries,
-/// eviction re-admission and lost-response re-sync. Returns the
-/// counters plus the end-to-end latency (seconds) of each success.
+fn open_request(session: u32, n: usize, edges: &[(u32, u32, f64)]) -> StreamRequest {
+    StreamRequest::OpenGraph { session, n: n as u32, edges: edges.to_vec() }
+}
+
+/// Re-admit a session after eviction or a lost-response re-sync: bind
+/// its graph again (sessions off the default graph must re-open, or the
+/// bare `Set` would silently rebind them to graph 0), then re-seed the
+/// field. Bookkeeping traffic — not counted against the request budget.
+fn readmit(
+    client: &mut Client,
+    session: u32,
+    n: usize,
+    gi: usize,
+    graphs: &[Arc<Vec<(u32, u32, f64)>>],
+    rng: &mut Pcg,
+    strays: &mut u64,
+) {
+    if gi > 0 {
+        let _ = client.call(&open_request(session, n, &graphs[gi]), strays);
+    }
+    let _ = client.call(&set_request(session, n, rng), strays);
+}
+
+/// Drive one request to completion with backoff retries, eviction
+/// re-admission and lost-response re-sync; counts the outcome and
+/// records the latency on success.
+#[allow(clippy::too_many_arguments)]
+fn execute_one(
+    policy: &BackoffPolicy,
+    client: &mut Client,
+    req: &StreamRequest,
+    session: u32,
+    n: usize,
+    gi: usize,
+    graphs: &[Arc<Vec<(u32, u32, f64)>>],
+    rng: &mut Pcg,
+    stats: &mut Stats,
+    lat: &mut Vec<f64>,
+    retry_seed: u64,
+) -> bool {
+    let t0 = Instant::now();
+    let (outcome, retries) = retry_with_backoff(policy, retry_seed, |_| {
+        stats.attempts += 1;
+        match client.call(req, &mut stats.strays) {
+            Some(StreamResponse::Output { .. }) | Some(StreamResponse::Closed { .. }) => {
+                RetryStep::Done(())
+            }
+            Some(StreamResponse::Rejected { reason: RejectReason::Evicted, .. }) => {
+                stats.rejected += 1;
+                readmit(client, session, n, gi, graphs, rng, &mut stats.strays);
+                RetryStep::Retry(())
+            }
+            Some(StreamResponse::Rejected { .. }) => {
+                stats.rejected += 1;
+                RetryStep::Retry(())
+            }
+            Some(StreamResponse::Error { message }) => {
+                if message.starts_with(protocol::ERR_PROTOCOL_PREFIX) {
+                    stats.protocol_errors += 1;
+                } else {
+                    stats.errors += 1;
+                }
+                RetryStep::Fail(())
+            }
+            None => {
+                // Timeout or torn stream: the response is lost.
+                // Re-sync framing with a fresh connection + re-admit.
+                stats.lost += 1;
+                if client.reconnect() {
+                    readmit(client, session, n, gi, graphs, rng, &mut stats.strays);
+                    RetryStep::Retry(())
+                } else {
+                    RetryStep::Fail(())
+                }
+            }
+        }
+    });
+    stats.retries += u64::from(retries);
+    match outcome {
+        Ok(()) => {
+            stats.ok += 1;
+            lat.push(t0.elapsed().as_secs_f64());
+            true
+        }
+        Err(()) => {
+            stats.gave_up += 1;
+            false
+        }
+    }
+}
+
+/// Drive one client thread: round-robin over its session slice, one
+/// bursty update train per visit (first visit opens the session's graph
+/// and seeds its field), with leases / re-sets / replans sprinkled in.
+/// Returns the counters plus the end-to-end latency (seconds) of each
+/// success (one sample per train, one per single request).
 #[allow(clippy::too_many_arguments)]
 fn drive_client(
     addr: std::net::SocketAddr,
-    session: u32,
+    client_idx: usize,
+    clients: usize,
+    sessions: usize,
     n: usize,
     per_client: usize,
     rate: f64,
     seed: u64,
-    edges: Arc<Vec<(u32, u32, f64)>>,
+    graphs: Arc<Vec<Arc<Vec<(u32, u32, f64)>>>>,
     faults: Option<Arc<Faults>>,
 ) -> (Stats, Vec<f64>) {
     let mut stats = Stats::default();
     let mut lat = Vec::with_capacity(per_client);
-    let mut rng = Pcg::new(seed, 0x10AD ^ u64::from(session));
+    let owned: Vec<u32> = (client_idx as u32..sessions as u32).step_by(clients).collect();
+    if owned.is_empty() {
+        return (stats, lat);
+    }
+    let mut admitted = vec![false; owned.len()];
+    let mut rng = Pcg::new(seed, 0x10AD ^ client_idx as u64);
     let mut client = match Client::connect(addr) {
         Ok(c) => c,
         Err(_) => {
@@ -157,33 +309,76 @@ fn drive_client(
     };
     let policy = BackoffPolicy::default();
     let mut next_arrival = Instant::now();
-    for r in 0..per_client {
-        // Open-loop pacing: exponential inter-arrivals, with a
-        // back-to-back burst of 8 every 25 requests.
-        let in_burst = r % 25 < 8;
-        if !in_burst {
-            next_arrival += Duration::from_secs_f64(rng.exponential(rate));
-            let now = Instant::now();
-            if next_arrival > now {
-                std::thread::sleep(next_arrival - now);
-            }
+    let mut issued = 0usize;
+    let mut train = 0usize;
+    while issued < per_client {
+        let si = train % owned.len();
+        train += 1;
+        let session = owned[si];
+        let gi = session as usize % graphs.len();
+        // Open-loop pacing: one exponential inter-arrival per train,
+        // scaled so the *per-request* rate stays ~`rate`; the train
+        // itself is written back-to-back (that is the burst).
+        next_arrival += Duration::from_secs_f64(rng.exponential(rate / 8.0));
+        let now = Instant::now();
+        if next_arrival > now {
+            std::thread::sleep(next_arrival - now);
         }
         // Fault: disconnect mid-stream, then recover by reconnecting
         // and re-admitting the session.
         if let Some(f) = faults.as_ref() {
             if f.take_disconnect() && client.reconnect() {
-                let _ = client.call(&set_request(session, n, &mut rng), &mut stats.strays);
+                readmit(&mut client, session, n, gi, &graphs, &mut rng, &mut stats.strays);
             }
         }
-        let req = match rng.below(20) {
-            0 => set_request(session, n, &mut rng),
-            1..=2 => StreamRequest::Lease { session },
-            3 => {
-                let (u, v, w) = edges[rng.below(edges.len())];
-                let scale = if rng.bool(0.5) { 1.25 } else { 0.8 };
-                StreamRequest::ReplanEdge { session, u, v, w: w * scale }
+        // First visit: bind the graph (OpenGraph for non-default
+        // graphs), then seed the field. Both count against the budget.
+        if !admitted[si] {
+            if gi > 0 {
+                let req = open_request(session, n, &graphs[gi]);
+                execute_one(
+                    &policy, &mut client, &req, session, n, gi, &graphs, &mut rng, &mut stats,
+                    &mut lat, seed ^ issued as u64,
+                );
+                issued += 1;
+                if issued >= per_client {
+                    break;
+                }
             }
-            _ => {
+            let req = set_request(session, n, &mut rng);
+            execute_one(
+                &policy, &mut client, &req, session, n, gi, &graphs, &mut rng, &mut stats,
+                &mut lat, seed ^ issued as u64,
+            );
+            issued += 1;
+            admitted[si] = true;
+            continue;
+        }
+        // Occasional singles keep the non-update paths hot.
+        if rng.below(20) < 3 {
+            let req = match rng.below(4) {
+                0 => set_request(session, n, &mut rng),
+                1 => {
+                    let edges = &graphs[gi];
+                    let (u, v, w) = edges[rng.below(edges.len())];
+                    let scale = if rng.bool(0.5) { 1.25 } else { 0.8 };
+                    StreamRequest::ReplanEdge { session, u, v, w: w * scale }
+                }
+                _ => StreamRequest::Lease { session },
+            };
+            execute_one(
+                &policy, &mut client, &req, session, n, gi, &graphs, &mut rng, &mut stats,
+                &mut lat, seed ^ issued as u64,
+            );
+            issued += 1;
+            continue;
+        }
+        // The bursty per-session update train: a pipelined run of
+        // sparse updates for this one session — the server fuses all of
+        // them that land in one batch window into a single delta pass.
+        let burst = 8.min(per_client - issued).max(1);
+        let reqs: Vec<StreamRequest> = (0..burst)
+            .map(|_| {
                 let k = 4.min(n);
                 let start = rng.below(n);
                 StreamRequest::Update {
@@ -192,24 +387,53 @@ fn drive_client(
                     channels: 1,
                     values: (0..k).map(|_| rng.normal() as f32).collect(),
                 }
+            })
+            .collect();
+        let t0 = Instant::now();
+        stats.attempts += burst as u64;
+        let resps = match client.call_train(&reqs, &mut stats.strays) {
+            Ok(r) => r,
+            Err(()) => {
+                // The write failed before anything reached the server:
+                // nothing was lost — reconnect and replay every member
+                // through the retrying single path.
+                if client.reconnect() {
+                    readmit(&mut client, session, n, gi, &graphs, &mut rng, &mut stats.strays);
+                }
+                for req in &reqs {
+                    issued += 1;
+                    execute_one(
+                        &policy, &mut client, req, session, n, gi, &graphs, &mut rng, &mut stats,
+                        &mut lat, seed ^ issued as u64,
+                    );
+                }
+                continue;
             }
         };
-        let t0 = Instant::now();
-        let (outcome, retries) = retry_with_backoff(&policy, seed ^ (r as u64), |_| {
-            stats.attempts += 1;
-            match client.call(&req, &mut stats.strays) {
+        let train_ok = resps
+            .iter()
+            .filter(|r| matches!(r, Some(StreamResponse::Output { .. })))
+            .count();
+        if train_ok > 0 {
+            // One latency sample for the whole pipelined round trip.
+            lat.push(t0.elapsed().as_secs_f64());
+        }
+        let mut resynced = false;
+        for (req, resp) in reqs.iter().zip(resps) {
+            issued += 1;
+            match resp {
                 Some(StreamResponse::Output { .. }) | Some(StreamResponse::Closed { .. }) => {
-                    RetryStep::Done(())
+                    stats.ok += 1;
                 }
-                Some(StreamResponse::Rejected { reason: RejectReason::Evicted, .. }) => {
+                Some(StreamResponse::Rejected { reason, .. }) => {
                     stats.rejected += 1;
-                    // Re-admit the lease, then retry the request.
-                    let _ = client.call(&set_request(session, n, &mut rng), &mut stats.strays);
-                    RetryStep::Retry(())
-                }
-                Some(StreamResponse::Rejected { .. }) => {
-                    stats.rejected += 1;
-                    RetryStep::Retry(())
+                    if matches!(reason, RejectReason::Evicted) {
+                        readmit(&mut client, session, n, gi, &graphs, &mut rng, &mut stats.strays);
+                    }
+                    execute_one(
+                        &policy, &mut client, req, session, n, gi, &graphs, &mut rng, &mut stats,
+                        &mut lat, seed ^ issued as u64,
+                    );
                 }
                 Some(StreamResponse::Error { message }) => {
                     if message.starts_with(protocol::ERR_PROTOCOL_PREFIX) {
@@ -217,28 +441,27 @@ fn drive_client(
                     } else {
                         stats.errors += 1;
                     }
-                    RetryStep::Fail(())
+                    stats.gave_up += 1;
                 }
                 None => {
-                    // Timeout or torn stream: the response is lost.
-                    // Re-sync framing with a fresh connection + lease.
+                    // A response never arrived for this member: count
+                    // the loss once, re-sync once per train, and replay
+                    // through the retrying single path.
                     stats.lost += 1;
-                    if client.reconnect() {
-                        let _ = client.call(&set_request(session, n, &mut rng), &mut stats.strays);
-                        RetryStep::Retry(())
-                    } else {
-                        RetryStep::Fail(())
+                    if !resynced {
+                        resynced = true;
+                        if client.reconnect() {
+                            readmit(
+                                &mut client, session, n, gi, &graphs, &mut rng, &mut stats.strays,
+                            );
+                        }
                     }
+                    execute_one(
+                        &policy, &mut client, req, session, n, gi, &graphs, &mut rng, &mut stats,
+                        &mut lat, seed ^ issued as u64,
+                    );
                 }
             }
-        });
-        stats.retries += u64::from(retries);
-        match outcome {
-            Ok(()) => {
-                stats.ok += 1;
-                lat.push(t0.elapsed().as_secs_f64());
-            }
-            Err(()) => stats.gave_up += 1,
         }
     }
     (stats, lat)
@@ -261,7 +484,15 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let workers = args.get_usize("workers", 2).max(1);
     let fault_mode = args.get_str("faults", "none");
     let out = args.get_str("out", "BENCH_serving.json");
-    let max_sessions = args.get_usize("max-sessions", clients).max(1);
+    let sessions = args.get_usize("sessions", clients).max(1);
+    let n_graphs = args.get_usize("graphs", 1).max(1);
+    let cache_graphs = args.get_usize("cache-graphs", 8).max(1);
+    let fuse_updates = match args.get_str("fuse-updates", "on") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => return Err(format!("unknown --fuse-updates {other:?} (on|off)").into()),
+    };
+    let max_sessions = args.get_usize("max-sessions", sessions).max(1);
     let shed_after_ms = args.get_usize("shed-after-ms", 50) as u64;
 
     let plan = match fault_mode {
@@ -273,12 +504,23 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 
     let mut rng = Pcg::seed(seed);
     let tree = generators::random_tree(n, 0.2, 1.0, &mut rng);
-    let edges = Arc::new(tree.edges().to_vec());
+    // Graph 0 is the server default; the rest are opened through
+    // `OpenGraph` and live in the prepared-plan cache. All share `n` so
+    // sessions can migrate between them without re-shaping.
+    let graphs: Arc<Vec<Arc<Vec<(u32, u32, f64)>>>> = Arc::new(
+        std::iter::once(Arc::new(tree.edges().to_vec()))
+            .chain((1..n_graphs).map(|gi| {
+                let mut grng = Pcg::seed(seed ^ (0x06A0 + gi as u64));
+                Arc::new(generators::random_tree(n, 0.2, 1.0, &mut grng).edges().to_vec())
+            }))
+            .collect(),
+    );
     let f = FDist::Exponential { lambda: -0.5, scale: 1.0 };
     let tfi = TreeFieldIntegrator::builder(&tree).threads(1).build()?;
     let metrics = Arc::new(MetricsRegistry::new());
     let exec = Arc::new(
         StreamingFieldExecutor::new(tfi, &f, 1, 16, max_sessions, 8)?
+            .with_cache(CacheConfig { max_graphs: cache_graphs, max_bytes_mb: 0, fuse_updates })
             .with_metrics(Arc::clone(&metrics)),
     );
     let factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>> = (0..workers)
@@ -305,16 +547,18 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let addr = front.local_addr();
     println!(
         "loadgen: {clients} clients x {per_client} requests at ~{rate:.0} req/s each, \
-         n = {n}, {workers} workers, {max_sessions} session slots, faults = {fault_mode}"
+         {sessions} sessions over {n_graphs} graphs (cache {cache_graphs}, fusion {}), \
+         n = {n}, {workers} workers, {max_sessions} session slots, faults = {fault_mode}",
+        if fuse_updates { "on" } else { "off" }
     );
 
     let t0 = Instant::now();
     let threads: Vec<_> = (0..clients)
         .map(|c| {
-            let edges = Arc::clone(&edges);
+            let graphs = Arc::clone(&graphs);
             let faults = faults.clone();
             std::thread::spawn(move || {
-                drive_client(addr, c as u32, n, per_client, rate, seed, edges, faults)
+                drive_client(addr, c, clients, sessions, n, per_client, rate, seed, graphs, faults)
             })
         })
         .collect();
@@ -343,6 +587,9 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     // (a response re-keyed by an id-corrupting frame flip).
     let lost_unexplained = stats.lost.saturating_sub(injected.responses_dropped + stats.strays);
     let throughput = stats.ok as f64 / elapsed;
+    let lookups = snap.cache_hits + snap.cache_misses;
+    let hit_rate =
+        if lookups == 0 { 1.0 } else { snap.cache_hits as f64 / lookups as f64 };
 
     println!(
         "done in {elapsed:.2}s: {}/{requested} ok ({:.0} req/s), p50 {p50:.2}ms \
@@ -359,11 +606,22 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         "server counters: {} shed, {} evicted, {} protocol errors, {} worker panics",
         snap.requests_shed, snap.sessions_evicted, snap.protocol_errors, snap.worker_panics
     );
+    println!(
+        "plan cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, {} resident; \
+         fusion: {} updates fused, {} delta rows saved",
+        snap.cache_hits,
+        snap.cache_misses,
+        hit_rate * 100.0,
+        snap.cache_evictions,
+        snap.cache_graphs,
+        snap.fused_updates,
+        snap.fusion_rows_saved
+    );
 
     let mut json = String::from("{\n  \"bench\": \"serving_soak\",\n");
     json.push_str(&format!(
-        "  \"seed\": {seed}, \"clients\": {clients}, \"requested\": {requested}, \
-         \"faults\": \"{fault_mode}\",\n"
+        "  \"seed\": {seed}, \"clients\": {clients}, \"sessions\": {sessions}, \
+         \"graphs\": {n_graphs}, \"requested\": {requested}, \"faults\": \"{fault_mode}\",\n"
     ));
     json.push_str(&format!(
         "  \"ok\": {}, \"rejected\": {}, \"protocol_errors_seen\": {}, \"errors\": {}, \
@@ -379,6 +637,18 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
          \"p999_ms\": {p999:.3},\n"
     ));
     json.push_str(&format!("  \"throughput_rps\": {throughput:.1},\n"));
+    json.push_str(&format!(
+        "  \"cache\": {{ \"hits\": {}, \"misses\": {}, \"hit_rate\": {hit_rate:.4}, \
+         \"evictions\": {}, \"resident_graphs\": {}, \"bytes\": {}, \"fused_updates\": {}, \
+         \"fusion_rows_saved\": {} }},\n",
+        snap.cache_hits,
+        snap.cache_misses,
+        snap.cache_evictions,
+        snap.cache_graphs,
+        snap.cache_bytes,
+        snap.fused_updates,
+        snap.fusion_rows_saved
+    ));
     json.push_str(&format!(
         "  \"server\": {{ \"requests\": {}, \"requests_shed\": {}, \"sessions_evicted\": {}, \
          \"protocol_errors\": {}, \"retries\": {}, \"worker_panics\": {} }},\n",

@@ -316,6 +316,41 @@ impl StreamingConfig {
     }
 }
 
+/// Typed plan-cache configuration (`[cache]` section): the knobs of the
+/// multi-graph prepared-plan LRU
+/// ([`crate::coordinator::PlanCache`]) and of delta fusion in the
+/// streaming executor.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Prepared graphs the LRU may hold (`OpenGraph`-resolved entries;
+    /// the server's default graph is pinned and does not count).
+    pub max_graphs: usize,
+    /// Estimated-byte budget for the cache (`0` = unbounded): entries
+    /// are evicted LRU-first until the estimate fits.
+    pub max_bytes_mb: usize,
+    /// Fuse all of one session's `Update`s landing in a batch window
+    /// into a single delta pass (bit-identical to serving them one by
+    /// one; see DESIGN.md "Multi-graph cache & update fusion").
+    pub fuse_updates: bool,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { max_graphs: 8, max_bytes_mb: 0, fuse_updates: true }
+    }
+}
+
+impl CacheConfig {
+    pub fn from_config(c: &Config) -> Self {
+        let d = CacheConfig::default();
+        CacheConfig {
+            max_graphs: c.get_usize("cache.max_graphs", d.max_graphs),
+            max_bytes_mb: c.get_usize("cache.max_bytes_mb", d.max_bytes_mb),
+            fuse_updates: c.get_bool("cache.fuse_updates", d.fuse_updates),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -411,6 +446,24 @@ mod tests {
         // refresh_every = 0 is a legal "never refresh" setting.
         let z = Config::parse("[streaming]\nrefresh_every = 0\n").unwrap();
         assert_eq!(StreamingConfig::from_config(&z).refresh_every, 0);
+    }
+
+    #[test]
+    fn cache_config_roundtrip() {
+        let c = Config::parse("[cache]\nmax_graphs = 3\nmax_bytes_mb = 64\nfuse_updates = off\n")
+            .unwrap();
+        let cc = CacheConfig::from_config(&c);
+        assert_eq!(cc.max_graphs, 3);
+        assert_eq!(cc.max_bytes_mb, 64);
+        assert!(!cc.fuse_updates);
+        // Absent section → defaults (fusion on, unbounded bytes).
+        let d = CacheConfig::from_config(&Config::default());
+        assert_eq!(d.max_graphs, 8);
+        assert_eq!(d.max_bytes_mb, 0);
+        assert!(d.fuse_updates);
+        // `on` spelling binds too (the CLI passes flag values through).
+        let on = Config::parse("[cache]\nfuse_updates = on\n").unwrap();
+        assert!(CacheConfig::from_config(&on).fuse_updates);
     }
 
     #[test]

@@ -32,6 +32,19 @@ pub trait BatchExecutor: 'static {
             Err(e) => inputs.iter().map(|_| Err(e.clone())).collect(),
         }
     }
+
+    /// Fusion grouping key for deadline-shed accounting. Requests in
+    /// one dispatch batch that share a `Some` key are executed as one
+    /// fused group by `execute_each` (e.g. same-session streaming
+    /// updates), so the batcher treats them as a unit: the group is
+    /// shed only when *every* member has aged past the deadline — a
+    /// mixed group executes whole, aged members riding their fresh
+    /// group-mates' fused pass — and a shed group counts **once** in
+    /// `requests_shed`. `None` (the default) keeps the pre-fusion
+    /// per-request shed semantics.
+    fn fuse_key(&self, _input: &[f32]) -> Option<u64> {
+        None
+    }
 }
 
 /// Shared executors: workers wrap one *stateful* executor (e.g. the
@@ -47,6 +60,9 @@ impl<T: BatchExecutor> BatchExecutor for std::sync::Arc<T> {
     }
     fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
         (**self).execute_each(inputs)
+    }
+    fn fuse_key(&self, input: &[f32]) -> Option<u64> {
+        (**self).fuse_key(input)
     }
 }
 
@@ -134,18 +150,57 @@ impl Batcher {
         metrics: &super::metrics::MetricsRegistry,
     ) {
         let mut live: Vec<PendingRequest> = Vec::with_capacity(batch.len());
-        for req in batch {
-            let aged = self.cfg.shed_after.is_some_and(|limit| req.enqueued_at.elapsed() > limit);
-            if aged {
-                metrics.record_shed();
-                metrics.queue_exit();
-                let _ = req.respond.send(Err(format!(
-                    "{}deadline exceeded in queue",
-                    crate::coordinator::protocol::ERR_SHED_PREFIX
-                )));
-            } else {
-                live.push(req);
+        if let Some(limit) = self.cfg.shed_after {
+            // Shed accounting is fuse-group aware: requests sharing a
+            // `fuse_key` execute as one fused pass downstream, so the
+            // group sheds as a unit — only when every member aged (a
+            // mixed group executes whole; its aged members ride the
+            // fused pass) — and a shed group counts once. Ages come from
+            // one `now` through `saturating_duration_since`, so a
+            // request whose `enqueued_at` sits in the future (clock
+            // skew, test injection) reads age zero instead of panicking
+            // on Duration underflow.
+            let now = Instant::now();
+            let mut group_all_aged: std::collections::BTreeMap<u64, bool> =
+                std::collections::BTreeMap::new();
+            let flags: Vec<(bool, Option<u64>)> = batch
+                .iter()
+                .map(|req| {
+                    let aged = now.saturating_duration_since(req.enqueued_at) > limit;
+                    let key = exec.fuse_key(&req.input);
+                    if let Some(k) = key {
+                        group_all_aged.entry(k).and_modify(|a| *a &= aged).or_insert(aged);
+                    }
+                    (aged, key)
+                })
+                .collect();
+            let mut shed_groups: std::collections::BTreeSet<u64> =
+                std::collections::BTreeSet::new();
+            for (req, (aged, key)) in batch.into_iter().zip(flags) {
+                let shed = match key {
+                    Some(k) => group_all_aged[&k],
+                    None => aged,
+                };
+                if shed {
+                    match key {
+                        Some(k) => {
+                            if shed_groups.insert(k) {
+                                metrics.record_shed();
+                            }
+                        }
+                        None => metrics.record_shed(),
+                    }
+                    metrics.queue_exit();
+                    let _ = req.respond.send(Err(format!(
+                        "{}deadline exceeded in queue",
+                        crate::coordinator::protocol::ERR_SHED_PREFIX
+                    )));
+                } else {
+                    live.push(req);
+                }
             }
+        } else {
+            live = batch;
         }
         if live.is_empty() {
             return;
@@ -370,6 +425,89 @@ mod tests {
         let snap = metrics.snapshot();
         assert_eq!(snap.requests_shed, 1);
         assert_eq!(snap.requests, 1, "only the fresh request counts as served");
+    }
+
+    /// An executor whose first input word is the fuse key: models the
+    /// streaming executor's same-session update grouping.
+    struct FusedEcho;
+
+    impl BatchExecutor for FusedEcho {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+            Ok(inputs.iter().map(|v| v.iter().map(|x| x * 2.0).collect()).collect())
+        }
+        fn fuse_key(&self, input: &[f32]) -> Option<u64> {
+            Some(input[0] as u64)
+        }
+    }
+
+    /// Fused-group shed accounting: a group sheds as a unit only when
+    /// *every* member aged past the deadline, and a shed group counts
+    /// once in `requests_shed` — not once per member. A mixed group
+    /// (one stale + one fresh member) executes whole: the stale member
+    /// rides its fresh group-mate's fused pass.
+    #[test]
+    fn fused_group_sheds_as_a_unit_and_counts_once() {
+        let b = Batcher::new(BatcherConfig {
+            batch_size: 8,
+            batch_timeout: Duration::from_millis(1),
+            shed_after: Some(Duration::from_millis(20)),
+        });
+        let metrics = MetricsRegistry::new();
+        // Group 1: both members stale → shed together, counted once.
+        let (mut a1, a1_rx) = req(1.0);
+        a1.enqueued_at = Instant::now() - Duration::from_millis(200);
+        let (mut a2, a2_rx) = req(1.0);
+        a2.enqueued_at = Instant::now() - Duration::from_millis(300);
+        // Group 2: one stale, one fresh → executes whole.
+        let (mut b1, b1_rx) = req(2.0);
+        b1.enqueued_at = Instant::now() - Duration::from_millis(200);
+        let (b2, b2_rx) = req(2.0);
+        b.dispatch(vec![a1, a2, b1, b2], &FusedEcho, &metrics);
+        for rx in [a1_rx, a2_rx] {
+            let e = rx.recv().unwrap().unwrap_err();
+            assert!(
+                e.starts_with(crate::coordinator::protocol::ERR_SHED_PREFIX),
+                "all-aged group member must shed typed, got: {e}"
+            );
+        }
+        assert_eq!(
+            b1_rx.recv().unwrap().unwrap(),
+            vec![4.0],
+            "aged member of a mixed group must ride its group-mates' pass"
+        );
+        assert_eq!(b2_rx.recv().unwrap().unwrap(), vec![4.0]);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests_shed, 1, "a shed fused group counts once");
+        assert_eq!(snap.requests, 2, "the mixed group executes whole");
+    }
+
+    /// Saturating age arithmetic: a request stamped with a *future*
+    /// `enqueued_at` (clock skew, test injection) must read as age zero
+    /// — neither shed nor a Duration-underflow panic — even under a
+    /// zero shed deadline, where every age comparison sits exactly on
+    /// the boundary.
+    #[test]
+    fn future_enqueued_at_reads_age_zero_and_is_never_shed() {
+        let b = Batcher::new(BatcherConfig {
+            batch_size: 8,
+            batch_timeout: Duration::from_millis(1),
+            shed_after: Some(Duration::ZERO),
+        });
+        let metrics = MetricsRegistry::new();
+        let (mut future, future_rx) = req(3.0);
+        future.enqueued_at = Instant::now() + Duration::from_secs(3600);
+        b.dispatch(vec![future], &Echo { batch: 8 }, &metrics);
+        assert_eq!(
+            future_rx.recv().unwrap().unwrap(),
+            vec![6.0],
+            "a future-stamped request is age zero, not shed"
+        );
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests_shed, 0);
+        assert_eq!(snap.requests, 1);
     }
 
     /// A panicking executor must not swallow responses: every request

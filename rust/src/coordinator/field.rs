@@ -33,6 +33,7 @@
 use super::batcher::BatchExecutor;
 use super::metrics::{MetricsRegistry, MetricsSnapshot};
 use super::protocol::{self, RejectReason, StreamRequest, StreamResponse};
+use crate::config::CacheConfig;
 use crate::ftfi::functions::FDist;
 use crate::ftfi::streaming::{SharedPlans, StreamingIntegrator};
 use crate::ftfi::{FieldIntegrator, FtfiError, TreeFieldIntegrator};
@@ -43,7 +44,8 @@ use crate::runtime::pool::{WorkPool, PAR_MAP_MIN_N};
 // set-vs-update race; Arc deliberately stays `std` (see `crate::sync`).
 use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::sync::Mutex;
-use crate::tree::integrator_tree::PreparedPlans;
+use crate::tree::integrator_tree::{PreparedPlans, WorkspaceSizes};
+use crate::tree::Tree;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Instant;
@@ -191,6 +193,154 @@ pub const STREAM_OP_REPLAN: f32 = 2.0;
 /// admission control answers `Rejected { SessionBusy }`.
 pub const DEFAULT_MAX_PENDING: usize = 32;
 
+/// Leaf threshold every cache-built graph is preprocessed with (the
+/// builder default). It is part of the canonical graph key, so a future
+/// knob cannot silently alias plans built under different thresholds.
+const GRAPH_LEAF_THRESHOLD: usize = 32;
+
+/// One cached graph: its shared plan cell plus the LRU/byte-budget
+/// bookkeeping.
+struct CacheEntry {
+    shared: Arc<SharedPlans>,
+    /// Estimated resident bytes (prewarmed workspaces + one in-flight).
+    bytes: usize,
+    last_used: u64,
+}
+
+struct CacheState {
+    /// Canonical graph key (see `StreamingFieldExecutor::graph_key`) →
+    /// entry. A full byte key — not a fixed-width hash — so two distinct
+    /// graphs can never collide into a wrong-graph answer.
+    map: BTreeMap<Vec<u8>, CacheEntry>,
+    /// LRU clock (monotone per cache operation).
+    clock: u64,
+    /// Sum of entry byte estimates.
+    bytes: usize,
+    /// Element-wise maxima of the entries' [`WorkspaceSizes`]; every
+    /// entry's pools are prewarmed at these, so a session migrating
+    /// between cached graphs re-warms zero allocations.
+    maxima: Option<WorkspaceSizes>,
+}
+
+/// LRU cache of prepared graph entries — the multi-graph serving path.
+/// Keyed by the canonical serialized graph (vertex count, sorted
+/// `(min, max, weight-bits)` edges, build-option fingerprint), bounded
+/// by an entry count and an optional byte budget (`[cache]` config).
+/// Eviction only drops the cache's `Arc` — sessions riding the evicted
+/// plans keep theirs and stay correct; the entry is rebuilt on the next
+/// miss. Lock order: cache state, then (for prewarming) a plan cell's
+/// read lock — the cache lock is never taken while a session or plan
+/// lock is held.
+pub struct PlanCache {
+    state: Mutex<CacheState>,
+    max_graphs: usize,
+    /// `0` = unbounded.
+    max_bytes: usize,
+    /// Idle workspaces stocked per entry at the cache-wide maxima.
+    prewarm: usize,
+}
+
+impl PlanCache {
+    fn new(max_graphs: usize, max_bytes: usize, prewarm: usize) -> Self {
+        PlanCache {
+            state: Mutex::new(CacheState {
+                map: BTreeMap::new(),
+                clock: 0,
+                bytes: 0,
+                maxima: None,
+            }),
+            max_graphs: max_graphs.max(1),
+            max_bytes,
+            prewarm: prewarm.max(1),
+        }
+    }
+
+    /// The serving hot path (xtask hot-path manifest): resolve a
+    /// canonical key to its plan cell and stamp the LRU clock. No
+    /// allocation — the key was built by the caller, the hit hands back
+    /// an `Arc`.
+    fn cache_lookup(&self, key: &[u8]) -> Option<Arc<SharedPlans>> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.clock += 1;
+        let clock = st.clock;
+        let entry = st.map.get_mut(key)?;
+        entry.last_used = clock;
+        Some(Arc::clone(&entry.shared))
+    }
+
+    /// Insert a freshly built entry, prewarm it (and, when the
+    /// cache-wide maxima grew, top every resident entry up) at the
+    /// maxima, then evict LRU-first down to the entry/byte budgets.
+    /// Returns `(evicted, graphs, bytes)` for the metrics gauges.
+    fn insert(
+        &self,
+        key: Vec<u8>,
+        shared: &Arc<SharedPlans>,
+        bytes: usize,
+        sizes: WorkspaceSizes,
+        d: usize,
+    ) -> (u64, u64, u64) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.clock += 1;
+        let clock = st.clock;
+        let (maxima, grew) = match st.maxima {
+            None => (sizes, false),
+            Some(m) => {
+                let folded = m.max_with(&sizes);
+                let grew = folded.slab_rows > m.slab_rows
+                    || folded.agg_rows > m.agg_rows
+                    || folded.fft_len > m.fft_len
+                    || folded.cheb_rank > m.cheb_rank
+                    || folded.rat_len > m.rat_len;
+                (folded, grew)
+            }
+        };
+        st.maxima = Some(maxima);
+        let _ = shared.with(|_, plans| plans.prewarm(self.prewarm, &maxima, d));
+        if grew {
+            for entry in st.map.values() {
+                let _ = entry.shared.with(|_, plans| plans.prewarm(self.prewarm, &maxima, d));
+            }
+        }
+        if let Some(old) = st.map.insert(key, CacheEntry {
+            shared: Arc::clone(shared),
+            bytes,
+            last_used: clock,
+        }) {
+            st.bytes -= old.bytes;
+        }
+        st.bytes += bytes;
+        let mut evicted = 0u64;
+        while st.map.len() > self.max_graphs
+            || (self.max_bytes > 0 && st.bytes > self.max_bytes && st.map.len() > 1)
+        {
+            // LRU victim; the just-inserted entry carries the max clock
+            // so it can only be the victim when it is the sole resident
+            // (and then the count guard keeps it).
+            let victim = st
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = st.map.remove(&k) {
+                        st.bytes -= e.bytes;
+                        evicted += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        (evicted, st.map.len() as u64, st.bytes as u64)
+    }
+
+    /// Resident graph count (tests).
+    pub fn graphs(&self) -> usize {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).map.len()
+    }
+}
+
 /// One leased session: the integrator behind its serialising mutex,
 /// plus the admission-control state (in-flight counter, LRU stamp).
 struct SessionEntry {
@@ -241,16 +391,35 @@ struct SessionEntry {
 /// plan lock (never the reverse), so update/replan/evict interleavings
 /// cannot deadlock.
 pub struct StreamingFieldExecutor {
+    /// The *default* graph's plan cell: what the constructor's
+    /// integrator serves, what legacy frames and sessions that never
+    /// sent an `OpenGraph` resolve to. Pinned for the executor's
+    /// lifetime — it does not count against the cache budgets.
     shared: Arc<SharedPlans>,
     /// Cached from the integrator at construction (the integrator now
     /// lives inside the plan cell; these never change afterwards).
+    /// `n` is the *default* graph's vertex count — cached graphs carry
+    /// their own, read per session.
     n: usize,
     precision: Precision,
     pool: Arc<WorkPool>,
+    /// Frozen per-executor build inputs, reused to prepare every
+    /// cache-built graph (so all entries share one `f`/width/tier —
+    /// the per-graph degrees of freedom live in the canonical key).
+    f: FDist,
+    channels: usize,
     refresh_every: usize,
     max_batch: usize,
     capacity: usize,
     max_pending: usize,
+    /// Fuse same-session `Update` runs within one batch window into a
+    /// single delta pass (`[cache] fuse_updates`, default on).
+    fuse: bool,
+    cache: PlanCache,
+    /// `OpenGraph` bindings awaiting their session's next `Set`
+    /// (bounded by `capacity`; an overflowing stash drops an arbitrary
+    /// stale binding — its client simply re-opens).
+    pending_open: Mutex<BTreeMap<u32, (Arc<SharedPlans>, usize)>>,
     sessions: Mutex<BTreeMap<u32, Arc<SessionEntry>>>,
     evicted: Mutex<BTreeSet<u32>>,
     clock: AtomicU64,
@@ -273,20 +442,50 @@ impl StreamingFieldExecutor {
         let n = tfi.n();
         let precision = plans.precision();
         let pool = Arc::clone(tfi.pool());
+        let cache_cfg = CacheConfig::default();
+        let prewarm = pool.threads().max(1);
         Ok(StreamingFieldExecutor {
             shared: Arc::new(SharedPlans::new(tfi, plans)),
             n,
             precision,
             pool,
+            f: f.clone(),
+            channels: channels.max(1),
             refresh_every,
             max_batch: max_batch.max(1),
             capacity: max_sessions.max(1),
             max_pending: DEFAULT_MAX_PENDING,
+            fuse: cache_cfg.fuse_updates,
+            cache: PlanCache::new(
+                cache_cfg.max_graphs,
+                cache_cfg.max_bytes_mb.saturating_mul(1024 * 1024),
+                prewarm,
+            ),
+            pending_open: Mutex::new(BTreeMap::new()),
             sessions: Mutex::new(BTreeMap::new()),
             evicted: Mutex::new(BTreeSet::new()),
             clock: AtomicU64::new(0),
             metrics: Arc::new(MetricsRegistry::new()),
         })
+    }
+
+    /// Configure the multi-graph plan cache and the fusion switch from
+    /// a `[cache]` section ([`CacheConfig`]): entry/byte budgets for
+    /// `OpenGraph`-built graphs, and whether same-session update runs
+    /// within one batch window fuse into a single delta pass.
+    pub fn with_cache(mut self, cfg: CacheConfig) -> Self {
+        self.fuse = cfg.fuse_updates;
+        self.cache = PlanCache::new(
+            cfg.max_graphs,
+            cfg.max_bytes_mb.saturating_mul(1024 * 1024),
+            self.pool.threads().max(1),
+        );
+        self
+    }
+
+    /// The multi-graph plan cache (tests and gauges).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.cache
     }
 
     /// Bound the per-session in-flight update count (admission control;
@@ -387,12 +586,212 @@ impl StreamingFieldExecutor {
             }
             StreamRequest::Close { session } => self.exec_close(*session),
             StreamRequest::Lease { session } => self.exec_lease(*session),
+            StreamRequest::OpenGraph { session, n, edges } => {
+                self.exec_open(*session, *n, edges)
+            }
         }
     }
 
+    /// Canonicalize an `OpenGraph` edge list into the cache key:
+    /// `n`, the build-option fingerprint (leaf threshold + serving
+    /// tier), then the edges sorted as `(min, max, weight-bits)`. The
+    /// full validation a later `Tree::from_edges` would assert runs
+    /// here fallibly — count, vertex range, positive finite weights,
+    /// spanning connectivity — so a malformed graph fails its frame
+    /// typed instead of panicking a worker.
+    fn graph_key(&self, n: usize, edges: &[(u32, u32, f64)]) -> Result<Vec<u8>, String> {
+        if n == 0 || edges.len() != n - 1 {
+            return Err(format!(
+                "open-graph: a tree on {n} vertices needs {} edges, got {}",
+                n.saturating_sub(1),
+                edges.len()
+            ));
+        }
+        let mut es: Vec<(u32, u32, u64)> = Vec::with_capacity(edges.len());
+        for &(u, v, w) in edges {
+            if u as usize >= n || v as usize >= n || u == v {
+                return Err(format!(
+                    "open-graph: edge ({u},{v}) invalid (vertices must be distinct and < {n})"
+                ));
+            }
+            if !w.is_finite() || w <= 0.0 {
+                return Err(format!(
+                    "open-graph: edge ({u},{v}) has non-positive or non-finite weight {w}"
+                ));
+            }
+            es.push((u.min(v), u.max(v), w.to_bits()));
+        }
+        es.sort_unstable();
+        // Union-find connectivity: n-1 cycle-free edges on n vertices
+        // form a spanning tree.
+        let mut parent: Vec<u32> = (0..n as u32).collect();
+        fn find(parent: &mut [u32], mut x: u32) -> u32 {
+            while parent[x as usize] != x {
+                parent[x as usize] = parent[parent[x as usize] as usize];
+                x = parent[x as usize];
+            }
+            x
+        }
+        for &(u, v, _) in &es {
+            let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+            if ru == rv {
+                return Err(format!(
+                    "open-graph: edge ({u},{v}) closes a cycle — the edge list is not a tree"
+                ));
+            }
+            parent[ru as usize] = rv;
+        }
+        let mut key = Vec::with_capacity(17 + 16 * es.len());
+        key.extend_from_slice(&(n as u64).to_le_bytes());
+        key.extend_from_slice(&(GRAPH_LEAF_THRESHOLD as u64).to_le_bytes());
+        key.push(match self.precision {
+            Precision::F64 => 0,
+            Precision::F32 => 1,
+        });
+        for (u, v, wb) in es {
+            key.extend_from_slice(&u.to_le_bytes());
+            key.extend_from_slice(&v.to_le_bytes());
+            key.extend_from_slice(&wb.to_le_bytes());
+        }
+        Ok(key)
+    }
+
+    /// Build a cache entry for an already-validated edge list: tree →
+    /// integrator (sharing the executor's pool and tier) → prepared
+    /// plans, all under the executor's frozen `f`/width.
+    fn open_graph_build(
+        &self,
+        n: usize,
+        edges: &[(u32, u32, f64)],
+    ) -> Result<(Arc<SharedPlans>, WorkspaceSizes, usize), String> {
+        let tree = Tree::from_edges(n, edges);
+        let tfi = TreeFieldIntegrator::builder(&tree)
+            .leaf_threshold(GRAPH_LEAF_THRESHOLD)
+            .pool(Arc::clone(&self.pool))
+            .precision(self.precision)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let plans = tfi.prepare_plans(&self.f, self.channels).map_err(|e| e.to_string())?;
+        let sizes = plans.sizes();
+        let bytes = plans
+            .workspace_bytes(self.channels)
+            .saturating_mul(self.cache.prewarm + 1);
+        Ok((Arc::new(SharedPlans::new(tfi, plans)), sizes, bytes))
+    }
+
+    /// Bind `session` to the graph given by its edge list. The graph is
+    /// resolved through the plan cache (hit: an LRU stamp; miss: build +
+    /// prepare + prewarm + LRU eviction down to the budgets). A live
+    /// same-size session migrates in place — its field carries over and
+    /// the refreshed output is returned. A live different-size session
+    /// cannot carry its field: its lease is dropped and the binding is
+    /// stashed (like a new session's) for the client's next `Set`, which
+    /// is acknowledged with an empty `Output { channels: 0 }`.
+    fn exec_open(&self, session: u32, n: u32, edges: &[(u32, u32, f64)]) -> StreamResponse {
+        let nv = n as usize;
+        let key = match self.graph_key(nv, edges) {
+            Ok(k) => k,
+            Err(message) => return StreamResponse::Error { message },
+        };
+        let resolved = match self.cache.cache_lookup(&key) {
+            Some(s) => {
+                self.metrics.record_cache_hit();
+                s
+            }
+            None => {
+                self.metrics.record_cache_miss();
+                let (s, sizes, bytes) = match self.open_graph_build(nv, edges) {
+                    Ok(t) => t,
+                    Err(message) => return StreamResponse::Error { message },
+                };
+                let (evicted, graphs, bytes_now) =
+                    self.cache.insert(key, &s, bytes, sizes, self.channels);
+                if evicted > 0 {
+                    self.metrics.record_cache_evictions(evicted);
+                }
+                self.metrics.set_cache_usage(graphs, bytes_now);
+                s
+            }
+        };
+        let live = {
+            let table = self.sessions.lock().unwrap_or_else(|e| e.into_inner());
+            table.get(&session).map(Arc::clone)
+        };
+        if let Some(entry) = live {
+            let mut cell = match entry.cell.lock() {
+                Ok(c) => c,
+                Err(_) => {
+                    return StreamResponse::Error {
+                        message: format!("session {session} poisoned by an earlier panic"),
+                    }
+                }
+            };
+            if cell.n() == nv {
+                self.bump(&entry);
+                if let Err(e) = cell.migrate(resolved).map(|_| ()) {
+                    return StreamResponse::Error { message: e.to_string() };
+                }
+                return StreamResponse::Output {
+                    session,
+                    rows: n,
+                    channels: cell.channels() as u32,
+                    values: cell.output().data().iter().map(|&v| v as f32).collect(),
+                };
+            }
+            drop(cell);
+            self.sessions.lock().unwrap_or_else(|e| e.into_inner()).remove(&session);
+        }
+        let mut pend = self.pending_open.lock().unwrap_or_else(|e| e.into_inner());
+        if pend.len() >= self.capacity && !pend.contains_key(&session) {
+            if let Some(&stale) = pend.keys().next() {
+                pend.remove(&stale);
+            }
+        }
+        pend.insert(session, (resolved, nv));
+        StreamResponse::Output { session, rows: n, channels: 0, values: Vec::new() }
+    }
+
     fn exec_set(&self, session: u32, rows: u32, channels: u32, values: &[f32]) -> StreamResponse {
-        let n = self.n;
+        // Resolve the session's graph binding: a pending `OpenGraph`
+        // wins, else a live lease keeps its current graph, else the
+        // default graph — the pre-cache behavior.
+        let pending =
+            self.pending_open.lock().unwrap_or_else(|e| e.into_inner()).remove(&session);
+        let from_pending = pending.is_some();
+        let (shared, n) = match pending {
+            Some(b) => b,
+            None => {
+                let live = {
+                    let table = self.sessions.lock().unwrap_or_else(|e| e.into_inner());
+                    table.get(&session).map(Arc::clone)
+                };
+                match live {
+                    Some(entry) => match entry.cell.lock() {
+                        Ok(c) => (Arc::clone(c.shared()), c.n()),
+                        Err(_) => {
+                            return StreamResponse::Error {
+                                message: format!(
+                                    "session {session} poisoned by an earlier panic"
+                                ),
+                            }
+                        }
+                    },
+                    None => (Arc::clone(&self.shared), self.n),
+                }
+            }
+        };
+        // A failed Set must not consume the binding the client opened:
+        // restore it so the retry lands on the intended graph.
+        let restore = |shared: Arc<SharedPlans>, n: usize| {
+            if from_pending {
+                self.pending_open
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .insert(session, (shared, n));
+            }
+        };
         if rows as usize != n || channels == 0 {
+            restore(shared, n);
             return StreamResponse::Error {
                 message: FtfiError::ShapeMismatch { expected: n, got: values.len() }.to_string(),
             };
@@ -400,9 +799,12 @@ impl StreamingFieldExecutor {
         let d = channels as usize;
         let field = Matrix::from_vec(n, d, values.iter().map(|&v| v as f64).collect());
         let integ =
-            match StreamingIntegrator::new(Arc::clone(&self.shared), field, self.refresh_every) {
+            match StreamingIntegrator::new(Arc::clone(&shared), field, self.refresh_every) {
                 Ok(s) => s,
-                Err(e) => return StreamResponse::Error { message: e.to_string() },
+                Err(e) => {
+                    restore(shared, n);
+                    return StreamResponse::Error { message: e.to_string() };
+                }
             };
         let out: Vec<f32> = integ.output().data().iter().map(|&v| v as f32).collect();
         let mut table = self.sessions.lock().unwrap_or_else(|e| e.into_inner());
@@ -482,14 +884,6 @@ impl StreamingFieldExecutor {
         channels: u32,
         values: &[f32],
     ) -> StreamResponse {
-        let n = self.n;
-        for &r in rows {
-            if r as usize >= n {
-                return StreamResponse::Error {
-                    message: format!("row {r} invalid (expected an integer in 0..{n})"),
-                };
-            }
-        }
         let mut cell = match entry.cell.lock() {
             Ok(c) => c,
             Err(_) => {
@@ -498,6 +892,16 @@ impl StreamingFieldExecutor {
                 }
             }
         };
+        // Validate against the *session's* graph (multi-graph sessions
+        // carry their own vertex count, not the default graph's).
+        let n = cell.n();
+        for &r in rows {
+            if r as usize >= n {
+                return StreamResponse::Error {
+                    message: format!("row {r} invalid (expected an integer in 0..{n})"),
+                };
+            }
+        }
         let d = cell.channels();
         // channels = 0 is the legacy shim's "infer from the session";
         // a typed non-zero width must match the lease it addresses.
@@ -530,12 +934,6 @@ impl StreamingFieldExecutor {
     /// validation failures surface as this request's typed error with
     /// the plans and every session untouched.
     fn exec_replan(&self, session: u32, u: u32, v: u32, w: f64) -> StreamResponse {
-        let n = self.n;
-        if u as usize >= n || v as usize >= n {
-            return StreamResponse::Error {
-                message: format!("vertex invalid (expected an integer in 0..{n})"),
-            };
-        }
         let entry = match self.lookup(session) {
             Ok(e) => e,
             Err(resp) => return resp,
@@ -548,6 +946,12 @@ impl StreamingFieldExecutor {
                 }
             }
         };
+        let n = cell.n();
+        if u as usize >= n || v as usize >= n {
+            return StreamResponse::Error {
+                message: format!("vertex invalid (expected an integer in 0..{n})"),
+            };
+        }
         if let Err(e) = cell.update_edge(u as usize, v as usize, w) {
             return StreamResponse::Error { message: e.to_string() };
         }
@@ -564,6 +968,7 @@ impl StreamingFieldExecutor {
     fn exec_close(&self, session: u32) -> StreamResponse {
         self.sessions.lock().unwrap_or_else(|e| e.into_inner()).remove(&session);
         self.evicted.lock().unwrap_or_else(|e| e.into_inner()).remove(&session);
+        self.pending_open.lock().unwrap_or_else(|e| e.into_inner()).remove(&session);
         StreamResponse::Closed { session }
     }
 
@@ -584,10 +989,121 @@ impl StreamingFieldExecutor {
         };
         StreamResponse::Output {
             session,
-            rows: self.n as u32,
+            rows: cell.n() as u32,
             channels: cell.channels() as u32,
             values: cell.output().data().iter().map(|&v| v as f32).collect(),
         }
+    }
+
+    /// Execute a whole batch window of `Update`s for one session as a
+    /// single fused delta pass ([`StreamingIntegrator::apply_updates_fused`]).
+    /// Members keep their FIFO order and full per-member semantics — a
+    /// malformed member fails alone, refresh cadences fire per logical
+    /// update — and every successful member is answered with the
+    /// post-window output (the wire already declares within-batch
+    /// ordering unspecified, so intermediate snapshots were never
+    /// observable contract). The fused group holds ONE admission slot
+    /// (it occupies the session mutex once), mirroring the batcher's
+    /// group-at-once shed accounting.
+    fn exec_update_group(
+        &self,
+        session: u32,
+        members: &[(&[u32], u32, &[f32])],
+    ) -> Vec<StreamResponse> {
+        let t0 = Instant::now();
+        let entry = match self.lookup(session) {
+            Ok(e) => e,
+            Err(resp) => return members.iter().map(|_| resp.clone()).collect(),
+        };
+        if entry.pending.fetch_add(1, Ordering::Relaxed) >= self.max_pending {
+            entry.pending.fetch_sub(1, Ordering::Relaxed);
+            return members
+                .iter()
+                .map(|_| StreamResponse::Rejected {
+                    reason: RejectReason::SessionBusy,
+                    retry_after_hint_ms: 2,
+                })
+                .collect();
+        }
+        let out = self.exec_update_group_locked(&entry, session, members, t0);
+        entry.pending.fetch_sub(1, Ordering::Relaxed);
+        out
+    }
+
+    fn exec_update_group_locked(
+        &self,
+        entry: &SessionEntry,
+        session: u32,
+        members: &[(&[u32], u32, &[f32])],
+        t0: Instant,
+    ) -> Vec<StreamResponse> {
+        let mut cell = match entry.cell.lock() {
+            Ok(c) => c,
+            Err(_) => {
+                let message = format!("session {session} poisoned by an earlier panic");
+                return members
+                    .iter()
+                    .map(|_| StreamResponse::Error { message: message.clone() })
+                    .collect();
+            }
+        };
+        let n = cell.n();
+        let d = cell.channels();
+        // Executor-level validation per member (row range, width, value
+        // count) — failures stage nothing and fail alone, exactly as a
+        // one-by-one `exec_update` would answer them.
+        let mut staged: Vec<Result<(&[u32], Matrix), String>> = Vec::with_capacity(members.len());
+        for &(rows, channels, values) in members {
+            if let Some(&r) = rows.iter().find(|&&r| r as usize >= n) {
+                staged.push(Err(format!("row {r} invalid (expected an integer in 0..{n})")));
+                continue;
+            }
+            if channels != 0 && channels as usize != d {
+                staged.push(Err(format!(
+                    "update width {channels} does not match the session's {d}"
+                )));
+                continue;
+            }
+            let k = rows.len();
+            if values.len() != k * d {
+                staged.push(Err(FtfiError::ShapeMismatch { expected: k * d, got: values.len() }
+                    .to_string()));
+                continue;
+            }
+            let vm = Matrix::from_vec(k, d, values.iter().map(|&v| v as f64).collect());
+            staged.push(Ok((rows, vm)));
+        }
+        let fusable: Vec<(&[u32], &Matrix)> = staged
+            .iter()
+            .filter_map(|m| m.as_ref().ok().map(|(rows, vm)| (*rows, vm)))
+            .collect();
+        let (verdicts, stats) = cell.apply_updates_fused(&fusable);
+        self.metrics.record_fusion(stats.fused as u64, stats.rows_saved as u64);
+        let out_values: Vec<f32> = cell.output().data().iter().map(|&v| v as f32).collect();
+        drop(cell);
+        let latency = t0.elapsed().as_secs_f64();
+        let mut verdicts = verdicts.into_iter();
+        staged
+            .into_iter()
+            .map(|m| match m {
+                Err(message) => StreamResponse::Error { message },
+                Ok(_) => match verdicts.next() {
+                    Some(Ok(())) => {
+                        self.metrics.record_update_latency(latency);
+                        StreamResponse::Output {
+                            session,
+                            rows: n as u32,
+                            channels: d as u32,
+                            values: out_values.clone(),
+                        }
+                    }
+                    Some(Err(e)) => StreamResponse::Error { message: e.to_string() },
+                    None => StreamResponse::Error {
+                        message: "fused window dropped a member".to_string(),
+                    },
+                },
+            })
+            .collect()
     }
 
     /// One queue request, either encoding. Typed frames answer with
@@ -616,6 +1132,114 @@ impl StreamingFieldExecutor {
     }
 }
 
+/// One batch-window frame after the single decode pass of
+/// `execute_each`: which wire it arrived on (typed frames answer with
+/// response frames even on failure; legacy frames answer bare), or the
+/// decode failure that already answers it.
+enum Decoded {
+    Typed { req_id: u64, req: StreamRequest },
+    Legacy { req: StreamRequest },
+    Fail(String),
+}
+
+impl Decoded {
+    fn request(&self) -> Option<&StreamRequest> {
+        match self {
+            Decoded::Typed { req, .. } | Decoded::Legacy { req } => Some(req),
+            Decoded::Fail(_) => None,
+        }
+    }
+
+    fn is_update(&self) -> bool {
+        matches!(self.request(), Some(StreamRequest::Update { .. }))
+    }
+
+    /// Encode a typed response back onto the frame's wire.
+    fn finish(&self, resp: StreamResponse) -> Result<Vec<f32>, String> {
+        match self {
+            Decoded::Typed { req_id, .. } => {
+                Ok(protocol::payload_to_words(&protocol::encode_response(&resp, *req_id)))
+            }
+            Decoded::Legacy { .. } => match resp {
+                StreamResponse::Output { values, .. } => Ok(values),
+                StreamResponse::Closed { .. } => Ok(Vec::new()),
+                StreamResponse::Rejected { reason, .. } => Err(format!("rejected: {reason:?}")),
+                StreamResponse::Error { message } => Err(message),
+            },
+            Decoded::Fail(e) => Err(e.clone()),
+        }
+    }
+}
+
+impl StreamingFieldExecutor {
+    fn decode_one(&self, input: &[f32]) -> Decoded {
+        if protocol::is_typed_words(input) {
+            match protocol::words_to_payload(input)
+                .and_then(|payload| protocol::decode_request(&payload))
+            {
+                Ok((req_id, req)) => Decoded::Typed { req_id, req },
+                Err(e) => {
+                    self.metrics.record_protocol_error();
+                    Decoded::Fail(format!("{}{e}", protocol::ERR_PROTOCOL_PREFIX))
+                }
+            }
+        } else {
+            match protocol::legacy_to_request(input, self.n) {
+                Ok(req) => Decoded::Legacy { req },
+                Err(e) => Decoded::Fail(e),
+            }
+        }
+    }
+
+    /// Run one session's FIFO chain of batch-window frames. Maximal
+    /// runs of `Update`s (uninterrupted, for this session, by any other
+    /// request kind) fuse into one delta pass when fusion is on; every
+    /// other request executes one-by-one in chain order.
+    fn run_chain(
+        &self,
+        chain: &[usize],
+        decoded: &[Decoded],
+    ) -> Vec<(usize, Result<Vec<f32>, String>)> {
+        let mut out = Vec::with_capacity(chain.len());
+        let mut i = 0;
+        while i < chain.len() {
+            if self.fuse && decoded[chain[i]].is_update() {
+                let mut j = i + 1;
+                while j < chain.len() && decoded[chain[j]].is_update() {
+                    j += 1;
+                }
+                if j - i > 1 {
+                    let idxs = &chain[i..j];
+                    let mut session = 0u32;
+                    let members: Vec<(&[u32], u32, &[f32])> = idxs
+                        .iter()
+                        .filter_map(|&k| match decoded[k].request() {
+                            Some(StreamRequest::Update { session: s, rows, channels, values }) => {
+                                session = *s;
+                                Some((rows.as_slice(), *channels, values.as_slice()))
+                            }
+                            _ => None,
+                        })
+                        .collect();
+                    let resps = self.exec_update_group(session, &members);
+                    for (&k, resp) in idxs.iter().zip(resps) {
+                        out.push((k, decoded[k].finish(resp)));
+                    }
+                    i = j;
+                    continue;
+                }
+            }
+            let idx = chain[i];
+            if let Some(req) = decoded[idx].request() {
+                let resp = self.execute_request(req);
+                out.push((idx, decoded[idx].finish(resp)));
+            }
+            i += 1;
+        }
+        out
+    }
+}
+
 impl BatchExecutor for StreamingFieldExecutor {
     fn max_batch(&self) -> usize {
         self.max_batch
@@ -625,14 +1249,69 @@ impl BatchExecutor for StreamingFieldExecutor {
         self.execute_each(inputs).into_iter().collect()
     }
 
-    /// Requests fail independently and fan out across the integrator's
-    /// pool; per-session mutexes serialise same-session updates while
-    /// distinct sessions proceed in parallel.
+    /// Requests fail independently. Frames are decoded once, partitioned
+    /// into per-session FIFO chains, and the chains fan out across the
+    /// integrator's pool — same-session requests now execute in arrival
+    /// order (previously "unspecified within a batch"), while distinct
+    /// sessions proceed in parallel. Within a chain, runs of `Update`s
+    /// fuse into a single delta pass (see `exec_update_group`) unless
+    /// fusion is configured off.
     fn execute_each(&self, inputs: &[Vec<f32>]) -> Vec<Result<Vec<f32>, String>> {
-        if self.n < PAR_MAP_MIN_N {
-            return inputs.iter().map(|input| self.run_one(input)).collect();
+        let decoded: Vec<Decoded> = inputs.iter().map(|input| self.decode_one(input)).collect();
+        let mut chain_of: BTreeMap<u32, usize> = BTreeMap::new();
+        let mut chains: Vec<Vec<usize>> = Vec::new();
+        let mut results: Vec<Option<Result<Vec<f32>, String>>> =
+            inputs.iter().map(|_| None).collect();
+        for (i, d) in decoded.iter().enumerate() {
+            match d {
+                Decoded::Fail(e) => results[i] = Some(Err(e.clone())),
+                Decoded::Typed { req, .. } | Decoded::Legacy { req } => {
+                    let sid = req.session();
+                    let c = *chain_of.entry(sid).or_insert_with(|| {
+                        chains.push(Vec::new());
+                        chains.len() - 1
+                    });
+                    chains[c].push(i);
+                }
+            }
         }
-        self.pool.map(inputs, |_, input| self.run_one(input))
+        let runs: Vec<Vec<(usize, Result<Vec<f32>, String>)>> =
+            if self.n < PAR_MAP_MIN_N || chains.len() < 2 {
+                chains.iter().map(|c| self.run_chain(c, &decoded)).collect()
+            } else {
+                self.pool.map(&chains, |_, c| self.run_chain(c, &decoded))
+            };
+        for run in runs {
+            for (i, r) in run {
+                results[i] = Some(r);
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|| Err("request dropped by the batch window".to_string())))
+            .collect()
+    }
+
+    /// Shed-accounting fusion key: typed or legacy `Update` frames for
+    /// one session share a key, so the batcher sheds a fused group as a
+    /// unit (only when *every* member aged) and counts it once. Other
+    /// kinds — and any frame when fusion is off — shed per-request.
+    fn fuse_key(&self, input: &[f32]) -> Option<u64> {
+        if !self.fuse {
+            return None;
+        }
+        let req = if protocol::is_typed_words(input) {
+            protocol::words_to_payload(input)
+                .and_then(|payload| protocol::decode_request(&payload))
+                .ok()?
+                .1
+        } else {
+            protocol::legacy_to_request(input, self.n).ok()?
+        };
+        match req {
+            StreamRequest::Update { session, .. } => Some(u64::from(session)),
+            _ => None,
+        }
     }
 }
 
@@ -1152,6 +1831,262 @@ mod tests {
             }
             other => panic!("closed session must read as uninitialised, got {other:?}"),
         }
+    }
+
+    fn open_req(sid: u32, n: usize, edges: &[(u32, u32, f64)]) -> StreamRequest {
+        StreamRequest::OpenGraph { session: sid, n: n as u32, edges: edges.to_vec() }
+    }
+
+    fn tree_for(n: usize, seed: u64) -> crate::tree::Tree {
+        let mut rng = Pcg::seed(seed);
+        generators::random_tree(n, 0.2, 1.0, &mut rng)
+    }
+
+    /// A fresh oracle executor built directly over `tree` with the same
+    /// build options the plan cache uses (leaf threshold, one thread).
+    fn oracle_over(tree: &crate::tree::Tree) -> StreamingFieldExecutor {
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let tfi = TreeFieldIntegrator::builder(tree)
+            .leaf_threshold(32)
+            .threads(1)
+            .build()
+            .unwrap();
+        StreamingFieldExecutor::new(tfi, &f, 1, 0, 4, 8).unwrap()
+    }
+
+    /// `OpenGraph` + `Set` binds a session to a cache-built graph whose
+    /// responses are bit-identical to an executor built directly over
+    /// that graph; a second open of the same edge list is a cache hit
+    /// resolving to the same entry.
+    #[test]
+    fn open_graph_set_serves_the_cached_graph_bit_exactly() {
+        let n = 24;
+        let exec = stream_exec(n, 0, 4, 61);
+        let t2 = tree_for(n, 62);
+        let edges = t2.edges().to_vec();
+        match exec.execute_request(&open_req(1, n, &edges)) {
+            StreamResponse::Output { session: 1, channels: 0, values, .. } => {
+                assert!(values.is_empty(), "the open ack carries no field")
+            }
+            other => panic!("open must ack with an empty Output, got {other:?}"),
+        }
+        assert_eq!(exec.metrics().cache_misses, 1);
+        assert_eq!(exec.plan_cache().graphs(), 1);
+        let field: Vec<f32> = (0..n).map(|i| (i as f32 * 0.15).sin()).collect();
+        let set = |sid: u32| StreamRequest::Set {
+            session: sid,
+            rows: n as u32,
+            channels: 1,
+            values: field.clone(),
+        };
+        let got = match exec.execute_request(&set(1)) {
+            StreamResponse::Output { values, .. } => values,
+            other => panic!("set after open must serve, got {other:?}"),
+        };
+        let oracle = oracle_over(&t2);
+        let want = match oracle.execute_request(&set(1)) {
+            StreamResponse::Output { values, .. } => values,
+            other => panic!("oracle must serve, got {other:?}"),
+        };
+        assert_eq!(got, want, "cached-graph output must match a directly built executor");
+        // Same edge list again (another session): a hit, not a rebuild.
+        assert!(matches!(
+            exec.execute_request(&open_req(2, n, &edges)),
+            StreamResponse::Output { channels: 0, .. }
+        ));
+        let m = exec.metrics();
+        assert_eq!((m.cache_hits, m.cache_misses), (1, 1));
+        assert_eq!(exec.plan_cache().graphs(), 1);
+        let got2 = match exec.execute_request(&set(2)) {
+            StreamResponse::Output { values, .. } => values,
+            other => panic!("second session must serve, got {other:?}"),
+        };
+        assert_eq!(got2, want, "both sessions ride one cached entry");
+        // A session that never opened still serves the default graph.
+        assert!(matches!(exec.execute_request(&set(3)), StreamResponse::Output { .. }));
+    }
+
+    /// `OpenGraph` on a live same-size session migrates it in place:
+    /// the field carries over and the returned output is bit-identical
+    /// to a fresh session opened on the target graph with that field.
+    #[test]
+    fn open_graph_migrates_a_live_session_in_place() {
+        let n = 24;
+        let exec = stream_exec(n, 0, 4, 63);
+        let field: Vec<f32> = (0..n).map(|i| (i as f32 * 0.2).cos()).collect();
+        let set = StreamRequest::Set {
+            session: 9,
+            rows: n as u32,
+            channels: 1,
+            values: field.clone(),
+        };
+        assert!(matches!(exec.execute_request(&set), StreamResponse::Output { .. }));
+        let t2 = tree_for(n, 64);
+        let got = match exec.execute_request(&open_req(9, n, t2.edges())) {
+            StreamResponse::Output { channels: 1, values, .. } => values,
+            other => panic!("migrating open must return the refreshed output, got {other:?}"),
+        };
+        let oracle = oracle_over(&t2);
+        let want = match oracle.execute_request(&set) {
+            StreamResponse::Output { values, .. } => values,
+            other => panic!("oracle must serve, got {other:?}"),
+        };
+        assert_eq!(got, want, "migrated output must match a fresh session on the target");
+        // The migrated session keeps serving updates against the new graph.
+        let upd = StreamRequest::Update { session: 9, rows: vec![3], channels: 1, values: vec![2.0] };
+        let got = match exec.execute_request(&upd) {
+            StreamResponse::Output { values, .. } => values,
+            other => panic!("post-migration update must serve, got {other:?}"),
+        };
+        let want = match oracle.execute_request(&upd) {
+            StreamResponse::Output { values, .. } => values,
+            other => panic!("oracle must serve, got {other:?}"),
+        };
+        assert_eq!(got, want);
+    }
+
+    /// Malformed edge lists fail their frame typed — nothing is cached,
+    /// no worker panics (the validation runs before `Tree::from_edges`
+    /// ever would).
+    #[test]
+    fn open_graph_rejects_malformed_edge_lists_typed() {
+        let n = 8;
+        let exec = stream_exec(n, 0, 4, 65);
+        let bad: Vec<(Vec<(u32, u32, f64)>, &str)> = vec![
+            (vec![(0, 1, 1.0)], "needs"),                                // wrong count
+            (vec![(0, 1, 1.0), (1, 2, 1.0), (0, 2, 1.0)], "cycle"),      // cycle, 3 = n-1 for n=4
+            (vec![(0, 0, 1.0), (1, 2, 1.0), (2, 3, 1.0)], "distinct"),   // self-loop
+            (vec![(0, 9, 1.0), (1, 2, 1.0), (2, 3, 1.0)], "distinct"),   // out of range
+            (vec![(0, 1, f64::NAN), (1, 2, 1.0), (2, 3, 1.0)], "weight"),
+            (vec![(0, 1, -1.0), (1, 2, 1.0), (2, 3, 1.0)], "weight"),
+        ];
+        for (edges, needle) in bad {
+            let nv = if edges.len() == 1 { 8 } else { 4 };
+            match exec.execute_request(&open_req(1, nv, &edges)) {
+                StreamResponse::Error { message } => assert!(
+                    message.contains("open-graph") && message.contains(needle),
+                    "edges {edges:?}: got message {message:?}"
+                ),
+                other => panic!("edges {edges:?} must be rejected typed, got {other:?}"),
+            }
+        }
+        let m = exec.metrics();
+        assert_eq!((m.cache_hits, m.cache_misses), (0, 0), "rejects never touch the cache");
+        assert_eq!(exec.plan_cache().graphs(), 0);
+    }
+
+    /// Evicting a graph from the plan cache must not poison sessions
+    /// riding it: they keep their `Arc` and keep answering bit-exactly;
+    /// only the *cache* forgets the entry (the next open rebuilds it).
+    #[test]
+    fn cache_eviction_never_poisons_in_flight_sessions() {
+        let n = 24;
+        let exec = stream_exec(n, 0, 4, 66).with_cache(CacheConfig {
+            max_graphs: 1,
+            max_bytes_mb: 0,
+            fuse_updates: true,
+        });
+        let ta = tree_for(n, 67);
+        let tb = tree_for(n, 68);
+        let field: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).sin()).collect();
+        let set = |sid: u32| StreamRequest::Set {
+            session: sid,
+            rows: n as u32,
+            channels: 1,
+            values: field.clone(),
+        };
+        assert!(matches!(
+            exec.execute_request(&open_req(1, n, ta.edges())),
+            StreamResponse::Output { .. }
+        ));
+        assert!(matches!(exec.execute_request(&set(1)), StreamResponse::Output { .. }));
+        // Opening B evicts A from the single-entry cache…
+        assert!(matches!(
+            exec.execute_request(&open_req(2, n, tb.edges())),
+            StreamResponse::Output { .. }
+        ));
+        assert!(matches!(exec.execute_request(&set(2)), StreamResponse::Output { .. }));
+        let m = exec.metrics();
+        assert_eq!(m.cache_evictions, 1);
+        assert_eq!(exec.plan_cache().graphs(), 1);
+        // …but session 1 still rides A's plans, bit-exactly.
+        let upd = StreamRequest::Update { session: 1, rows: vec![5], channels: 1, values: vec![3.0] };
+        let got = match exec.execute_request(&upd) {
+            StreamResponse::Output { values, .. } => values,
+            other => panic!("evicted-graph session must keep serving, got {other:?}"),
+        };
+        let oracle = oracle_over(&ta);
+        assert!(matches!(oracle.execute_request(&set(1)), StreamResponse::Output { .. }));
+        let want = match oracle.execute_request(&upd) {
+            StreamResponse::Output { values, .. } => values,
+            other => panic!("oracle must serve, got {other:?}"),
+        };
+        assert_eq!(got, want, "eviction must never produce a wrong-graph answer");
+        // Re-opening A is a miss (it was evicted) that rebuilds cleanly.
+        assert!(matches!(
+            exec.execute_request(&open_req(3, n, ta.edges())),
+            StreamResponse::Output { channels: 0, .. }
+        ));
+        assert_eq!(exec.metrics().cache_misses, 3);
+    }
+
+    /// A batch window of same-session updates fuses into one delta pass
+    /// whose post-window state is bit-identical to unfused serving, and
+    /// the fusion counters record the saved work. Fused members are all
+    /// answered with the post-window output (within-batch ordering is
+    /// unspecified on this wire), so the comparison anchors on the last
+    /// member and the leased session state.
+    #[test]
+    fn fused_batch_window_matches_unfused_serving() {
+        let n = 20;
+        let fused = stream_exec(n, 3, 4, 69);
+        let unfused = stream_exec(n, 3, 4, 69).with_cache(CacheConfig {
+            max_graphs: 8,
+            max_bytes_mb: 0,
+            fuse_updates: false,
+        });
+        let field: Vec<f32> = (0..n).map(|i| (i as f32 * 0.15).sin()).collect();
+        let window: Vec<Vec<f32>> = vec![
+            update_req(0, &[2, 5], &[1.0, -2.0]),
+            update_req(0, &[5], &[4.0]),
+            update_req(0, &[11, 2, 11], &[0.5, 1.5, -0.5]),
+        ];
+        for exec in [&fused, &unfused] {
+            exec.run_one(&set_req(0, &field)).unwrap();
+        }
+        let rf = fused.execute_each(&window);
+        let ru = unfused.execute_each(&window);
+        assert!(rf.iter().all(|r| r.is_ok()) && ru.iter().all(|r| r.is_ok()));
+        let last_u = ru.last().unwrap().as_ref().unwrap();
+        for (i, r) in rf.iter().enumerate() {
+            assert_eq!(
+                r.as_ref().unwrap(),
+                last_u,
+                "member {i}: fused responses carry the post-window output"
+            );
+        }
+        // The leased state agrees bit-for-bit.
+        let lease = StreamRequest::Lease { session: 0 };
+        let (a, b) = match (fused.execute_request(&lease), unfused.execute_request(&lease)) {
+            (
+                StreamResponse::Output { values: a, .. },
+                StreamResponse::Output { values: b, .. },
+            ) => (a, b),
+            other => panic!("lease must serve, got {other:?}"),
+        };
+        assert_eq!(a, b, "fused and unfused sessions must hold identical state");
+        let mf = fused.metrics();
+        assert_eq!(mf.fused_updates, 3);
+        assert!(mf.fusion_rows_saved >= 2, "got {}", mf.fusion_rows_saved);
+        assert_eq!(mf.updates, 3, "every member records an update latency");
+        let mu = unfused.metrics();
+        assert_eq!((mu.fused_updates, mu.fusion_rows_saved), (0, 0));
+        // A later single update keeps both sessions in lockstep (the
+        // cadence counters advanced identically through the window).
+        let tail = update_req(0, &[7], &[9.0]);
+        let tf = fused.run_one(&tail).unwrap();
+        let tu = unfused.run_one(&tail).unwrap();
+        assert_eq!(tf, tu, "refresh cadence must fire identically after a fused window");
     }
 
     /// Ensemble serving path: the generic executor over an

@@ -45,6 +45,19 @@ pub struct MetricsRegistry {
     /// Gauge: requests accepted into the bounded queue and not yet
     /// dispatched (incremented on submit, decremented per response).
     queue_depth: AtomicU64,
+    /// Plan-cache counters (PR 10): graph resolutions served from /
+    /// missed by the prepared-plan LRU, entries dropped under capacity
+    /// or byte pressure, and gauges of the current cache footprint.
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
+    cache_graphs: AtomicU64,
+    cache_bytes: AtomicU64,
+    /// Delta-fusion counters (PR 10): logical updates absorbed into
+    /// fused delta passes and the dirty-row applications those passes
+    /// saved versus serving each update individually.
+    fused_updates: AtomicU64,
+    fusion_rows_saved: AtomicU64,
     started: std::time::Instant,
 }
 
@@ -80,6 +93,20 @@ pub struct MetricsSnapshot {
     pub worker_panics: u64,
     /// Gauge: accepted-but-undispatched requests right now.
     pub queue_depth: u64,
+    /// Graph resolutions served from the prepared-plan cache.
+    pub cache_hits: u64,
+    /// Graph resolutions that had to build + prepare a new entry.
+    pub cache_misses: u64,
+    /// Cache entries dropped under capacity / byte-budget pressure.
+    pub cache_evictions: u64,
+    /// Gauge: graphs currently resident in the plan cache.
+    pub cache_graphs: u64,
+    /// Gauge: estimated bytes currently held by the plan cache.
+    pub cache_bytes: u64,
+    /// Logical updates that were absorbed into fused delta passes.
+    pub fused_updates: u64,
+    /// Dirty-row applications saved by fusing versus one-pass-per-update.
+    pub fusion_rows_saved: u64,
 }
 
 impl MetricsRegistry {
@@ -98,8 +125,43 @@ impl MetricsRegistry {
             retries: AtomicU64::new(0),
             worker_panics: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
+            cache_graphs: AtomicU64::new(0),
+            cache_bytes: AtomicU64::new(0),
+            fused_updates: AtomicU64::new(0),
+            fusion_rows_saved: AtomicU64::new(0),
             started: std::time::Instant::now(),
         }
+    }
+
+    /// One graph resolution was served by a cached prepared entry.
+    pub fn record_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One graph resolution missed and built + prepared a new entry.
+    pub fn record_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` cache entries were evicted under capacity / byte pressure.
+    pub fn record_cache_evictions(&self, n: u64) {
+        self.cache_evictions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Refresh the cache-footprint gauges after a resolution.
+    pub fn set_cache_usage(&self, graphs: u64, bytes: u64) {
+        self.cache_graphs.store(graphs, Ordering::Relaxed);
+        self.cache_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    /// A fused delta pass absorbed `updates` logical updates and saved
+    /// `rows_saved` dirty-row applications over serving them one by one.
+    pub fn record_fusion(&self, updates: u64, rows_saved: u64) {
+        self.fused_updates.fetch_add(updates, Ordering::Relaxed);
+        self.fusion_rows_saved.fetch_add(rows_saved, Ordering::Relaxed);
     }
 
     /// One typed wire frame failed to decode.
@@ -207,6 +269,13 @@ impl MetricsRegistry {
             retries: self.retries.load(Ordering::Relaxed),
             worker_panics: self.worker_panics.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            cache_graphs: self.cache_graphs.load(Ordering::Relaxed),
+            cache_bytes: self.cache_bytes.load(Ordering::Relaxed),
+            fused_updates: self.fused_updates.load(Ordering::Relaxed),
+            fusion_rows_saved: self.fusion_rows_saved.load(Ordering::Relaxed),
         }
     }
 }
@@ -324,6 +393,45 @@ mod tests {
         assert_eq!(s2.requests_shed, 1);
         assert_eq!(s2.requests, 1);
         assert_eq!(s2.updates, 1);
+    }
+
+    /// Cache and fusion counters are independent of each other, of the
+    /// robustness counters and of the latency paths; the footprint
+    /// gauges overwrite instead of accumulating.
+    #[test]
+    fn cache_and_fusion_counters_are_isolated() {
+        let m = MetricsRegistry::new();
+        let zero = m.snapshot();
+        assert_eq!((zero.cache_hits, zero.cache_misses, zero.cache_evictions), (0, 0, 0));
+        assert_eq!((zero.cache_graphs, zero.cache_bytes), (0, 0));
+        assert_eq!((zero.fused_updates, zero.fusion_rows_saved), (0, 0));
+        m.record_cache_hit();
+        m.record_cache_hit();
+        m.record_cache_miss();
+        m.record_cache_evictions(3);
+        m.set_cache_usage(4, 1024);
+        m.set_cache_usage(2, 512); // gauges overwrite
+        m.record_fusion(5, 17);
+        m.record_fusion(2, 0);
+        let s = m.snapshot();
+        assert_eq!(s.cache_hits, 2);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.cache_evictions, 3);
+        assert_eq!(s.cache_graphs, 2);
+        assert_eq!(s.cache_bytes, 512);
+        assert_eq!(s.fused_updates, 7);
+        assert_eq!(s.fusion_rows_saved, 17);
+        // Nothing leaks into the request/update/robustness counters.
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.updates, 0);
+        assert_eq!((s.sessions_evicted, s.requests_shed, s.protocol_errors), (0, 0, 0));
+        // And the robustness paths leave the cache counters alone.
+        m.record_shed();
+        m.record_eviction();
+        let s2 = m.snapshot();
+        assert_eq!(s2.cache_hits, 2);
+        assert_eq!(s2.cache_evictions, 3);
+        assert_eq!(s2.sessions_evicted, 1);
     }
 
     #[test]

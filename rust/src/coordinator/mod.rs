@@ -29,7 +29,7 @@ pub mod server;
 
 pub use batcher::{BatchExecutor, Batcher, BatcherConfig};
 pub use faults::{FaultCounters, FaultPlan, Faults, FaultyExecutor};
-pub use field::{FieldExecutor, PreparedFieldExecutor, StreamingFieldExecutor};
+pub use field::{FieldExecutor, PlanCache, PreparedFieldExecutor, StreamingFieldExecutor};
 pub use metrics::MetricsRegistry;
 pub use protocol::{
     retry_with_backoff, BackoffPolicy, ProtocolError, RejectReason, RetryStep, StreamRequest,

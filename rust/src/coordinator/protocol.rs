@@ -14,7 +14,7 @@
 //! offset  size  field
 //! 0       1     version        (WIRE_VERSION = 1)
 //! 1       1     kind           (request: 0 set, 1 update, 2 replan,
-//!                               3 close, 4 lease;
+//!                               3 close, 4 lease, 5 open-graph;
 //!                               response: 0 output, 1 closed,
 //!                               2 rejected, 3 error)
 //! 2       2     flags          (reserved, must be 0)
@@ -84,6 +84,15 @@ pub enum StreamRequest {
     Close { session: u32 },
     /// Touch a session's lease and return its current output.
     Lease { session: u32 },
+    /// Bind a session to a graph given by its weighted edge list (the
+    /// multi-graph plan-cache path). The server canonicalises the edges
+    /// into a cache key, building and preparing the graph only on a
+    /// miss. A later `Set` on the session integrates against this graph;
+    /// re-opening a live session onto a same-`n` graph migrates it in
+    /// place (bit-exact full refresh on the new metric). Sessions that
+    /// never open a graph resolve to the server's default graph — the
+    /// pre-cache behavior, which is also all the legacy shim can reach.
+    OpenGraph { session: u32, n: u32, edges: Vec<(u32, u32, f64)> },
 }
 
 impl StreamRequest {
@@ -94,7 +103,8 @@ impl StreamRequest {
             | StreamRequest::Update { session, .. }
             | StreamRequest::ReplanEdge { session, .. }
             | StreamRequest::Close { session }
-            | StreamRequest::Lease { session } => *session,
+            | StreamRequest::Lease { session }
+            | StreamRequest::OpenGraph { session, .. } => *session,
         }
     }
 }
@@ -386,6 +396,18 @@ pub fn encode_request(req: &StreamRequest, req_id: u64) -> Vec<u8> {
             put_u32(&mut b, *session);
             (4u8, b)
         }
+        StreamRequest::OpenGraph { session, n, edges } => {
+            let mut b = Vec::with_capacity(12 + 16 * edges.len());
+            put_u32(&mut b, *session);
+            put_u32(&mut b, *n);
+            put_u32(&mut b, edges.len() as u32);
+            for &(u, v, w) in edges {
+                put_u32(&mut b, u);
+                put_u32(&mut b, v);
+                b.extend_from_slice(&w.to_le_bytes());
+            }
+            (5u8, b)
+        }
     };
     finish_payload(kind, req_id, body)
 }
@@ -437,6 +459,19 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, StreamRequest), ProtocolEr
         }
         3 => StreamRequest::Close { session: c.u32()? },
         4 => StreamRequest::Lease { session: c.u32()? },
+        5 => {
+            let session = c.u32()?;
+            let n = c.u32()?;
+            let m = c.u32()? as usize;
+            let mut edges = Vec::with_capacity(m.min(MAX_FRAME / 16));
+            for _ in 0..m {
+                let u = c.u32()?;
+                let v = c.u32()?;
+                let w = c.f64()?;
+                edges.push((u, v, w));
+            }
+            StreamRequest::OpenGraph { session, n, edges }
+        }
         other => return Err(ProtocolError::UnknownKind(other)),
     };
     c.done()?;
@@ -790,6 +825,39 @@ mod tests {
         );
         roundtrip_request(StreamRequest::Close { session: 3 }, 1);
         roundtrip_request(StreamRequest::Lease { session: 4 }, 2);
+        roundtrip_request(
+            StreamRequest::OpenGraph {
+                session: 9,
+                n: 4,
+                edges: vec![(0, 1, 1.0), (1, 2, 0.25), (2, 3, 7.125e-3)],
+            },
+            3,
+        );
+        // Degenerate graphs stay representable (n = 1 has no edges).
+        roundtrip_request(StreamRequest::OpenGraph { session: 0, n: 1, edges: vec![] }, 4);
+    }
+
+    #[test]
+    fn open_graph_truncated_edge_list_fails_typed() {
+        let full = encode_request(
+            &StreamRequest::OpenGraph { session: 1, n: 3, edges: vec![(0, 1, 1.0), (1, 2, 2.0)] },
+            8,
+        );
+        // Advertise two edges but carry only one (re-checksummed so the
+        // body check, not the checksum, is what trips).
+        let truncated = finish_payload(5, 8, {
+            let mut b = Vec::new();
+            put_u32(&mut b, 1); // session
+            put_u32(&mut b, 3); // n
+            put_u32(&mut b, 2); // edge count
+            put_u32(&mut b, 0);
+            put_u32(&mut b, 1);
+            b.extend_from_slice(&1.0f64.to_le_bytes());
+            b
+        });
+        assert!(matches!(decode_request(&truncated), Err(ProtocolError::Truncated { .. })));
+        // And the well-formed frame still decodes.
+        assert!(decode_request(&full).is_ok());
     }
 
     #[test]

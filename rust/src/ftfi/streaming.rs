@@ -21,6 +21,18 @@
 //! **bit-identical** to a cold `integrate` of the current field (pinned
 //! by the mutation-sequence tests). `refresh_every = 0` disables the
 //! policy (delta-only, drift unbounded).
+//!
+//! **Cumulative-from-base materialisation (PR 10).** The session keeps
+//! `base` — the output at the last refresh — and a *cumulative* dirty
+//! set / delta matrix covering every write since then; each update
+//! materialises `out = base + integrate(Δ_cumulative)` in one delta
+//! pass instead of accumulating one rounding layer per update. Because
+//! the delta staging (`dx += new − old`, first-seen dirty order) runs
+//! the identical floating-point op sequence whether updates are applied
+//! one call at a time or fused into a window
+//! ([`StreamingIntegrator::apply_updates_fused`]), the materialised
+//! output after the window is **bit-identical** either way — fusion is
+//! a pure work-skipping optimisation, pinned by `tests/serving_cache.rs`.
 
 use crate::ftfi::error::FtfiError;
 use crate::ftfi::TreeFieldIntegrator;
@@ -109,22 +121,39 @@ pub struct StreamingIntegrator {
     /// equals the field a rebuild-from-scratch oracle would hold.
     field: Matrix,
     /// Cached `integrate(field)` (exact after a refresh, within the
-    /// accumulated-rounding drift budget between refreshes).
+    /// single-delta-pass rounding budget between refreshes).
     out: Matrix,
-    /// Dense delta staging: only the rows touched by the current update
-    /// are meaningful; they are re-zeroed on first touch per update.
+    /// Output at the last full refresh: every materialisation rebuilds
+    /// `out = base + integrate(Δ_cumulative)` from here, so drift never
+    /// compounds across updates and fused windows are bit-identical to
+    /// unfused ones.
+    base: Matrix,
+    /// Dense delta staging, cumulative since `base`: only the rows in
+    /// `dirty` are meaningful; they are re-zeroed on first touch per
+    /// refresh era.
     dx: Matrix,
     /// Delta-output buffer (`Δout = integrate(Δ)`).
     dout: Matrix,
-    /// Unique rows touched by the current update.
+    /// Unique rows touched since the last refresh, in first-seen order.
     dirty: Vec<u32>,
-    /// Per-vertex epoch stamps deduplicating rows within one update.
+    /// Per-vertex era stamps deduplicating rows within one refresh era.
     stamp: Vec<u32>,
     epoch: u32,
     refresh_every: usize,
     since_refresh: usize,
     updates: usize,
     refreshes: usize,
+}
+
+/// Outcome counters of one (possibly fused) update window — see
+/// [`StreamingIntegrator::apply_updates_fused`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FusionStats {
+    /// Successful logical updates the window absorbed.
+    pub fused: usize,
+    /// Dirty-row delta applications skipped versus serving each member
+    /// through its own `apply_update` call.
+    pub rows_saved: usize,
 }
 
 impl StreamingIntegrator {
@@ -151,16 +180,18 @@ impl StreamingIntegrator {
             .with(|tfi, plans| {
                 tfi.integrate_prepared_into(&field, plans, &mut out).map(|_| shared.epoch())
             })??;
+        let base = out.clone();
         Ok(StreamingIntegrator {
             shared,
             plan_epoch,
             field,
             out,
+            base,
             dx: Matrix::zeros(n, d),
             dout: Matrix::zeros(n, d),
             dirty: Vec::new(),
             stamp: vec![0; n],
-            epoch: 0,
+            epoch: 1,
             refresh_every,
             since_refresh: 0,
             updates: 0,
@@ -171,11 +202,141 @@ impl StreamingIntegrator {
     /// Apply a sparse update: set the listed field rows to `values`
     /// (`rows.len()×d`; duplicate rows within one call apply in order,
     /// last write wins) and return the refreshed output. Runs the delta
-    /// fast path unless this update hits the `refresh_every` boundary,
-    /// in which case the output is recomputed bit-exactly from the
-    /// current field. A failed update (bad row / shape) changes nothing
-    /// — the session stays serviceable.
+    /// fast path unless this update hits the `refresh_every` boundary
+    /// (or a sibling session re-planned an edge), in which case the
+    /// output is recomputed bit-exactly from the current field. A
+    /// failed update (bad row / shape) changes nothing — the session
+    /// stays serviceable. Allocation-free when warmed: this is the
+    /// one-member form of [`StreamingIntegrator::apply_updates_fused`]
+    /// — the identical staging / refresh / delta op sequence, without
+    /// the window's per-member verdict vector.
     pub fn apply_update(&mut self, rows: &[u32], values: &Matrix) -> Result<&Matrix, FtfiError> {
+        let shared = Arc::clone(&self.shared);
+        shared.with(|tfi, plans| -> Result<(), FtfiError> {
+            let cur = shared.epoch();
+            let stale = cur != self.plan_epoch;
+            self.stage(rows, values)?;
+            self.updates += 1;
+            self.since_refresh += 1;
+            let cadence = self.refresh_every > 0 && self.since_refresh >= self.refresh_every;
+            if stale || cadence {
+                tfi.integrate_prepared_into(&self.field, plans, &mut self.out)?;
+                self.base.data_mut().copy_from_slice(self.out.data());
+                self.clear_dirty();
+                self.plan_epoch = cur;
+                self.since_refresh = 0;
+                self.refreshes += 1;
+            } else if !self.dirty.is_empty() {
+                tfi.integrate_delta_prepared_into(&self.dirty, &self.dx, plans, &mut self.dout)?;
+                self.out.data_mut().copy_from_slice(self.base.data());
+                self.out.axpy(1.0, &self.dout);
+            }
+            Ok(())
+        })??;
+        Ok(&self.out)
+    }
+
+    /// Apply a whole batch window of updates for this session in one
+    /// fused pass. Members apply in FIFO order with full per-member
+    /// semantics — duplicate rows last-write-wins, a malformed member
+    /// fails alone without staging anything, the `refresh_every` cadence
+    /// fires at exactly the members it would fire at under one-by-one
+    /// [`StreamingIntegrator::apply_update`] calls — but the cumulative
+    /// delta pass and the `base → out` materialisation run only once,
+    /// at the end of the window (or at each refresh boundary inside it).
+    /// The output after the window is **bit-identical** to applying the
+    /// members through individual calls: the staging arithmetic is the
+    /// same op sequence either way, and intermediate materialisations
+    /// never feed back into the state. Returns one verdict per member
+    /// plus the fusion savings ([`FusionStats::rows_saved`] counts the
+    /// dirty rows of every skipped intermediate pass).
+    pub fn apply_updates_fused(
+        &mut self,
+        updates: &[(&[u32], &Matrix)],
+    ) -> (Vec<Result<(), FtfiError>>, FusionStats) {
+        let mut results = Vec::with_capacity(updates.len());
+        let mut stats = FusionStats::default();
+        if updates.is_empty() {
+            return (results, stats);
+        }
+        let shared = Arc::clone(&self.shared);
+        let run = shared.with(|tfi, plans| -> Result<(), FtfiError> {
+            // The read lock is held for the whole window, so the plan
+            // epoch cannot move mid-window: staleness (an edge re-plan
+            // through a sibling session) is noticed once, up front —
+            // exactly where the first unfused call would notice it.
+            let cur = shared.epoch();
+            let mut stale = cur != self.plan_epoch;
+            let mut pending = false;
+            for (i, (rows, values)) in updates.iter().enumerate() {
+                if let Err(e) = self.stage(rows, values) {
+                    results.push(Err(e));
+                    continue;
+                }
+                self.updates += 1;
+                self.since_refresh += 1;
+                let cadence =
+                    self.refresh_every > 0 && self.since_refresh >= self.refresh_every;
+                if stale || cadence {
+                    // Refresh boundary: recompute bit-exactly from the
+                    // current field and start a new delta era, exactly
+                    // as the unfused call at this member would.
+                    tfi.integrate_prepared_into(&self.field, plans, &mut self.out)?;
+                    self.base.data_mut().copy_from_slice(self.out.data());
+                    self.clear_dirty();
+                    self.plan_epoch = cur;
+                    self.since_refresh = 0;
+                    self.refreshes += 1;
+                    stale = false;
+                    pending = false;
+                } else {
+                    if i + 1 < updates.len() {
+                        // This member's delta pass is fused away — in
+                        // unfused serving it would have re-integrated
+                        // the whole cumulative dirty set.
+                        stats.rows_saved += self.dirty.len();
+                    }
+                    pending = true;
+                }
+                stats.fused += 1;
+                results.push(Ok(()));
+            }
+            if pending && !self.dirty.is_empty() {
+                tfi.integrate_delta_prepared_into(&self.dirty, &self.dx, plans, &mut self.dout)?;
+                self.out.data_mut().copy_from_slice(self.base.data());
+                self.out.axpy(1.0, &self.dout);
+            }
+            Ok(())
+        });
+        let err = match run {
+            Ok(Ok(())) => None,
+            Ok(Err(e)) | Err(e) => Some(e),
+        };
+        if let Some(e) = err {
+            // A mid-window integration failure (poisoned plan cell) is a
+            // session-level fault: the cached output can no longer be
+            // trusted, so every member that did not already fail its own
+            // validation reports the window error.
+            let msg = format!("fused window failed: {e}");
+            for r in results.iter_mut() {
+                if r.is_ok() {
+                    *r = Err(FtfiError::InvalidInput(msg.clone()));
+                }
+            }
+            while results.len() < updates.len() {
+                results.push(Err(FtfiError::InvalidInput(msg.clone())));
+            }
+            stats = FusionStats::default();
+        }
+        (results, stats)
+    }
+
+    /// Validate one update and stage its writes: Δ row `+= new − old`
+    /// (accumulated across duplicates and across the whole refresh era),
+    /// and the field row itself is *assigned* — the session field always
+    /// bit-matches a rebuild-from-scratch oracle's. A validation failure
+    /// stages nothing.
+    fn stage(&mut self, rows: &[u32], values: &Matrix) -> Result<(), FtfiError> {
         let n = self.field.rows();
         let d = self.field.cols();
         if values.rows() != rows.len() {
@@ -194,15 +355,6 @@ impl StreamingIntegrator {
                 )));
             }
         }
-        // Stage: Δ row = new − old (accumulated across duplicates), and
-        // the field row itself is *assigned* — the session field always
-        // bit-matches a rebuild-from-scratch oracle's.
-        self.epoch = self.epoch.wrapping_add(1);
-        if self.epoch == 0 {
-            self.stamp.iter_mut().for_each(|s| *s = 0);
-            self.epoch = 1;
-        }
-        self.dirty.clear();
         for (i, &v) in rows.iter().enumerate() {
             let vi = v as usize;
             if self.stamp[vi] != self.epoch {
@@ -218,39 +370,18 @@ impl StreamingIntegrator {
                 old_row[c] = new_row[c];
             }
         }
-        self.updates += 1;
-        self.since_refresh += 1;
-        let shared = Arc::clone(&self.shared);
-        let cadence = self.refresh_every > 0 && self.since_refresh >= self.refresh_every;
-        let mut refreshed = false;
-        shared.with(|tfi, plans| {
-            // Read under the read lock: the epoch cannot move while a
-            // re-plan is excluded, so it is consistent with `plans`.
-            let cur = shared.epoch();
-            if cur != self.plan_epoch || cadence {
-                // The plans moved under us (an edge re-plan through a
-                // sibling session) or the drift cadence fired: either
-                // way the cached output is recomputed bit-exactly from
-                // the current field.
-                tfi.integrate_prepared_into(&self.field, plans, &mut self.out)?;
-                self.plan_epoch = cur;
-                refreshed = true;
-            } else if !self.dirty.is_empty() {
-                tfi.integrate_delta_prepared_into(
-                    &self.dirty,
-                    &self.dx,
-                    plans,
-                    &mut self.dout,
-                )?;
-                self.out.axpy(1.0, &self.dout);
-            }
-            Ok::<(), FtfiError>(())
-        })??;
-        if refreshed {
-            self.since_refresh = 0;
-            self.refreshes += 1;
+        Ok(())
+    }
+
+    /// Start a new delta era (the cumulative dirty set resets; row
+    /// stamps are invalidated by bumping the era counter).
+    fn clear_dirty(&mut self) {
+        self.dirty.clear();
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
         }
-        Ok(&self.out)
     }
 
     /// Force a full bit-exact re-integration of the current field (the
@@ -262,8 +393,39 @@ impl StreamingIntegrator {
             self.plan_epoch = shared.epoch();
             tfi.integrate_prepared_into(&self.field, plans, &mut self.out)
         })??;
+        self.base.data_mut().copy_from_slice(self.out.data());
+        self.clear_dirty();
         self.since_refresh = 0;
         self.refreshes += 1;
+        Ok(&self.out)
+    }
+
+    /// Rebind this session to a different shared plan cell over the
+    /// *same* graph size and channel count (the multi-graph cache path:
+    /// a client re-opens its session onto another cached graph). The
+    /// field carries over unchanged and the output is re-integrated
+    /// bit-exactly under the new plans (counting toward
+    /// [`StreamingIntegrator::refreshes`]). All session buffers are
+    /// reused — a migration between cached graphs allocates nothing.
+    /// On shape mismatch or integration failure the session is restored
+    /// onto its previous plans, still serviceable.
+    pub fn migrate(&mut self, to: Arc<SharedPlans>) -> Result<&Matrix, FtfiError> {
+        let (n, d) = to.with(|_, plans| (plans.n(), plans.channels()))?;
+        if n != self.field.rows() {
+            return Err(FtfiError::ShapeMismatch { expected: self.field.rows(), got: n });
+        }
+        if d != self.field.cols() {
+            return Err(FtfiError::InvalidInput(format!(
+                "target plans prepared for {d} channels, session field has {}",
+                self.field.cols()
+            )));
+        }
+        let old = std::mem::replace(&mut self.shared, to);
+        if let Err(e) = self.refresh().map(|_| ()) {
+            self.shared = old;
+            self.refresh()?;
+            return Err(e);
+        }
         Ok(&self.out)
     }
 
@@ -560,6 +722,127 @@ mod tests {
             let rel = s.output().frobenius_diff(&want) / (1.0 + want.frobenius());
             assert!(rel < 1e-8, "session {name}: rel {rel}");
         }
+    }
+
+    /// Fusing a window of updates into one delta pass must be
+    /// **bit-identical** to applying the members through individual
+    /// `apply_update` calls — including when the `refresh_every`
+    /// cadence fires mid-window and when a malformed member fails
+    /// alone. This is the core contract the serving-side fusion
+    /// (`StreamingFieldExecutor::exec_update_group`) rides on.
+    #[test]
+    fn fused_windows_are_bit_identical_to_sequential_calls() {
+        for (seed, refresh_every) in [(31u64, 0usize), (32, 3), (33, 1)] {
+            let n = 80;
+            let d = 2;
+            let (mut fused, _, _) = session(n, d, refresh_every, seed);
+            let (mut seq, _, _) = session(n, d, refresh_every, seed);
+            let mut rng = Pcg::seed(seed ^ 0x5eed);
+            for window in 0..6 {
+                let members: Vec<(Vec<u32>, Matrix)> = (0..4)
+                    .map(|_| {
+                        let k = 1 + rng.below(3);
+                        // Deliberately allow duplicates within and
+                        // across members.
+                        let rows: Vec<u32> = (0..k).map(|_| rng.below(n) as u32).collect();
+                        let vals = Matrix::randn(k, d, &mut rng);
+                        (rows, vals)
+                    })
+                    .collect();
+                let refs: Vec<(&[u32], &Matrix)> =
+                    members.iter().map(|(r, v)| (r.as_slice(), v)).collect();
+                let (verdicts, stats) = fused.apply_updates_fused(&refs);
+                assert!(verdicts.iter().all(|v| v.is_ok()), "window {window}");
+                assert_eq!(stats.fused, members.len());
+                for (rows, vals) in &members {
+                    seq.apply_update(rows, vals).unwrap();
+                }
+                assert!(
+                    *fused.output() == *seq.output(),
+                    "REPRO seed={seed} refresh_every={refresh_every} window={window}: \
+                     fused output must be bit-identical to sequential"
+                );
+                assert!(*fused.field() == *seq.field());
+                assert_eq!(fused.refreshes(), seq.refreshes());
+                assert_eq!(fused.updates_since_refresh(), seq.updates_since_refresh());
+                assert_eq!(fused.updates_applied(), seq.updates_applied());
+            }
+            if refresh_every == 0 {
+                // No cadence refresh ever fires, so every non-last
+                // member's delta pass is fused away.
+                let refs: Vec<(&[u32], &Matrix)> = Vec::new();
+                let (v, s) = fused.apply_updates_fused(&refs);
+                assert!(v.is_empty() && s == FusionStats::default());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_window_member_failures_stay_isolated() {
+        let (mut fused, _, _) = session(50, 2, 0, 41);
+        let (mut seq, _, _) = session(50, 2, 0, 41);
+        let good_a = (vec![3u32, 9], Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]));
+        let bad = (vec![50u32], Matrix::zeros(1, 2)); // row out of range
+        let good_b = (vec![7u32], Matrix::from_vec(1, 2, vec![-1.0, 0.5]));
+        let refs: Vec<(&[u32], &Matrix)> = vec![
+            (good_a.0.as_slice(), &good_a.1),
+            (bad.0.as_slice(), &bad.1),
+            (good_b.0.as_slice(), &good_b.1),
+        ];
+        let (verdicts, stats) = fused.apply_updates_fused(&refs);
+        assert!(verdicts[0].is_ok());
+        assert!(matches!(verdicts[1], Err(FtfiError::InvalidInput(_))));
+        assert!(verdicts[2].is_ok());
+        assert_eq!(stats.fused, 2, "only successful members count");
+        assert!(stats.rows_saved >= 1, "the first member's pass was fused away");
+        seq.apply_update(&good_a.0, &good_a.1).unwrap();
+        assert!(seq.apply_update(&bad.0, &bad.1).is_err());
+        seq.apply_update(&good_b.0, &good_b.1).unwrap();
+        assert!(*fused.output() == *seq.output(), "failed member must not skew the window");
+        assert_eq!(fused.updates_applied(), 2);
+    }
+
+    /// Migration rebinds a session to another plan cell of the same
+    /// shape: the field carries over, the output is re-integrated
+    /// bit-exactly under the new plans, and a shape-mismatched target
+    /// leaves the session serviceable on its old plans.
+    #[test]
+    fn migrate_rebinds_to_a_same_shape_cell_bit_exactly() {
+        let n = 60;
+        let d = 2;
+        let f = FDist::Exponential { lambda: -0.4, scale: 1.0 };
+        let cell = |seed: u64, n: usize| {
+            let mut rng = Pcg::seed(seed);
+            let tree = random_tree(n, 0.1, 1.0, &mut rng);
+            let tfi = TreeFieldIntegrator::builder(&tree).leaf_threshold(8).build().unwrap();
+            let plans = tfi.prepare_plans(&f, d).unwrap();
+            Arc::new(SharedPlans::new(tfi, plans))
+        };
+        let a = cell(51, n);
+        let b = cell(52, n);
+        let mut rng = Pcg::seed(53);
+        let field = Matrix::randn(n, d, &mut rng);
+        let mut s = StreamingIntegrator::new(Arc::clone(&a), field.clone(), 0).unwrap();
+        s.apply_update(&[5], &Matrix::from_vec(1, d, vec![2.0, -3.0])).unwrap();
+        let carried = s.field().clone();
+        s.migrate(Arc::clone(&b)).unwrap();
+        assert_eq!(s.refreshes(), 1, "migration pays one full refresh");
+        assert!(*s.field() == carried, "the field must carry over unchanged");
+        let fresh = StreamingIntegrator::new(Arc::clone(&b), carried, 0).unwrap();
+        assert!(
+            *s.output() == *fresh.output(),
+            "migrated output must be bit-identical to a fresh session on the target"
+        );
+        // A wrong-size target is rejected and the session stays on `b`.
+        let small = cell(54, n / 2);
+        let before = s.output().clone();
+        assert!(matches!(
+            s.migrate(small),
+            Err(FtfiError::ShapeMismatch { .. })
+        ));
+        assert!(Arc::ptr_eq(s.shared(), &b), "failed migration must not rebind");
+        assert!(*s.output() == before);
+        s.apply_update(&[1], &Matrix::from_vec(1, d, vec![0.5, 0.5])).unwrap();
     }
 
     #[test]

@@ -28,6 +28,11 @@
 //! `--max-pending P` and `--shed-after-ms D` (config:
 //! `streaming.max_pending` / `streaming.shed_after_ms`) bound the
 //! per-session queue and the queue age before load shedding.
+//! `serve --streaming --graphs G` spreads the sessions over `G`
+//! distinct graphs opened through the multi-graph plan cache
+//! (`--cache-graphs N`, `--cache-bytes-mb B`, config: the `[cache]`
+//! section; typed wire only), and `--fuse-updates on|off` toggles the
+//! batch-window delta fusion (bit-identical either way).
 //!
 //! `integrate` and `serve` accept `--threads N` (0 = auto: honour
 //! `FTFI_THREADS`, else all cores; 1 = serial) for the parallel
@@ -46,7 +51,7 @@
 
 use ftfi::bench_util::time_once;
 use ftfi::cli::Args;
-use ftfi::config::{Config, EnsembleConfig, IntegratorConfig, StreamingConfig};
+use ftfi::config::{CacheConfig, Config, EnsembleConfig, IntegratorConfig, StreamingConfig};
 use ftfi::coordinator::{
     protocol, retry_with_backoff, BackoffPolicy, BatchExecutor, BatcherConfig, FieldExecutor,
     InferenceServer, MetricsRegistry, PreparedFieldExecutor, RetryStep, ServerError,
@@ -233,6 +238,29 @@ fn streaming_config(args: &Args) -> Result<StreamingConfig, Box<dyn std::error::
     }
     if let Some(s) = args.get("shed-after-ms") {
         cfg.shed_after_ms = s.parse().map_err(|_| format!("bad --shed-after-ms {s:?}"))?;
+    }
+    Ok(cfg)
+}
+
+/// Resolve the multi-graph plan-cache knobs from `--config` (the
+/// `[cache]` section) plus direct CLI overrides.
+fn cache_config(args: &Args) -> Result<CacheConfig, Box<dyn std::error::Error>> {
+    let mut cfg = match args.get("config") {
+        Some(path) => CacheConfig::from_config(&Config::load(path)?),
+        None => CacheConfig::default(),
+    };
+    if let Some(g) = args.get("cache-graphs") {
+        cfg.max_graphs = g.parse().map_err(|_| format!("bad --cache-graphs {g:?}"))?;
+    }
+    if let Some(b) = args.get("cache-bytes-mb") {
+        cfg.max_bytes_mb = b.parse().map_err(|_| format!("bad --cache-bytes-mb {b:?}"))?;
+    }
+    if let Some(v) = args.get("fuse-updates") {
+        cfg.fuse_updates = match v {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => return Err(format!("bad --fuse-updates {other:?} (on|off)").into()),
+        };
     }
     Ok(cfg)
 }
@@ -503,7 +531,12 @@ fn cmd_serve_streaming(args: &Args) -> CliResult {
     let icfg = integrator_config(args)?;
     let policy = icfg.to_policy()?;
     let scfg = streaming_config(args)?;
+    let ccfg = cache_config(args)?;
     let sessions = args.get_usize("sessions", 4).clamp(1, scfg.max_sessions.max(1));
+    let graphs = args.get_usize("graphs", 1).max(1);
+    if graphs > 1 && !typed {
+        return Err("--graphs > 1 needs --wire typed (OpenGraph has no legacy opcode)".into());
+    }
 
     let mut rng = Pcg::seed(7);
     let g = generators::path_plus_random_edges(n, n / 2, &mut rng);
@@ -527,15 +560,27 @@ fn cmd_serve_streaming(args: &Args) -> CliResult {
             scfg.max_sessions,
             batch.max(1),
         )?
+        .with_cache(ccfg.clone())
         .with_max_pending(scfg.max_pending)
         .with_metrics(Arc::clone(&metrics)),
     );
     println!(
-        "streaming serve: f = {f:?}, n = {n}, {sessions} sessions on the {wire} wire \
-         (refresh every {}, {workers} workers, {} integration threads shared)",
+        "streaming serve: f = {f:?}, n = {n}, {sessions} sessions over {graphs} graph(s) \
+         on the {wire} wire (plan cache {} graphs, fusion {}, refresh every {}, \
+         {workers} workers, {} integration threads shared)",
+        ccfg.max_graphs,
+        if ccfg.fuse_updates { "on" } else { "off" },
         scfg.refresh_every,
         pool.threads()
     );
+    // Graph 0 is the default (built into the executor); graphs 1..G are
+    // opened through the plan cache with client-supplied edge lists.
+    let extra_graphs: Vec<Vec<(u32, u32, f64)>> = (1..graphs)
+        .map(|gi| {
+            let mut grng = Pcg::seed(1000 + gi as u64);
+            generators::random_tree(n, 0.2, 1.0, &mut grng).edges().to_vec()
+        })
+        .collect();
 
     let factories: Vec<Box<dyn FnOnce() -> Box<dyn BatchExecutor> + Send>> = (0..workers
         .max(1))
@@ -585,8 +630,24 @@ fn cmd_serve_streaming(args: &Args) -> CliResult {
         Err(_) => (false, false),
     };
 
-    // Open every session (full-field set), then stream updates.
+    // Open every session (OpenGraph for sessions bound to a non-default
+    // graph, then a full-field set), then stream updates.
     for s in 0..sessions {
+        let gi = s % graphs;
+        if gi > 0 {
+            let edges = &extra_graphs[gi - 1];
+            let req = protocol::request_words(
+                &StreamRequest::OpenGraph {
+                    session: s as u32,
+                    n: n as u32,
+                    edges: edges.clone(),
+                },
+                50_000 + s as u64,
+            );
+            if !classify(submit(req, 50_000 + s as u64)?.wait()).0 {
+                return Err(format!("session {s} failed to open graph {gi}").into());
+            }
+        }
         let values: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
         let req = if typed {
             protocol::request_words(
@@ -681,6 +742,16 @@ fn cmd_serve_streaming(args: &Args) -> CliResult {
     println!(
         "robustness counters: {} protocol errors, {} evictions, {} shed, {} retries",
         m.protocol_errors, m.sessions_evicted, m.requests_shed, m.retries
+    );
+    println!(
+        "plan cache: {} hits / {} misses / {} evictions ({} resident graphs); \
+         fusion: {} updates fused, {} delta rows saved",
+        m.cache_hits,
+        m.cache_misses,
+        m.cache_evictions,
+        m.cache_graphs,
+        m.fused_updates,
+        m.fusion_rows_saved
     );
     server.shutdown();
     Ok(())

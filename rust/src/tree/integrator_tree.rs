@@ -287,7 +287,7 @@ enum PreparedNode {
 /// aggregate rows from its side tables, the FFT length / Chebyshev rank
 /// from the maxima over the built plans.
 #[derive(Clone, Copy, Debug, Default)]
-pub(crate) struct WorkspaceSizes {
+pub struct WorkspaceSizes {
     /// Rows of each field slab (`total_slots` of the tree).
     pub(crate) slab_rows: usize,
     /// Rows of the per-task aggregate bump arena.
@@ -305,6 +305,24 @@ pub(crate) struct WorkspaceSizes {
     /// `linalg/lanes.rs`. Frozen at prepare time so one plan handle
     /// can never mix tiers across calls.
     pub(crate) precision: Precision,
+}
+
+impl WorkspaceSizes {
+    /// Element-wise maximum with another size vector (the plan cache
+    /// prewarms every entry's pools at the cache-wide maxima, so a
+    /// session migrating between cached graphs re-warms nothing).
+    /// Precision is not a size and must agree; callers keep cache
+    /// entries tier-homogeneous.
+    pub fn max_with(&self, other: &WorkspaceSizes) -> WorkspaceSizes {
+        WorkspaceSizes {
+            slab_rows: self.slab_rows.max(other.slab_rows),
+            agg_rows: self.agg_rows.max(other.agg_rows),
+            fft_len: self.fft_len.max(other.fft_len),
+            cheb_rank: self.cheb_rank.max(other.cheb_rank),
+            rat_len: self.rat_len.max(other.rat_len),
+            precision: self.precision,
+        }
+    }
 }
 
 /// Per-task scratch: the aggregate bump arena (one internal node's
@@ -426,6 +444,59 @@ impl PreparedPlans {
         f64s * std::mem::size_of::<f64>()
             + self.sizes.fft_len * 16
             + (self.sizes.slab_rows + 1) * std::mem::size_of::<u32>()
+    }
+
+    /// Field width the plans were built for (the planning cost model's
+    /// `d`).
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// The frozen workspace arena sizes (the plan cache folds these
+    /// with [`WorkspaceSizes::max_with`] into cache-wide maxima for
+    /// pool prewarming; the allocation pins in `tests/hotpath_alloc.rs`
+    /// do the same fold by hand).
+    pub fn sizes(&self) -> WorkspaceSizes {
+        self.sizes
+    }
+
+    /// Stock the workspace and fork-scratch pools with at least `count`
+    /// idle items each, every one grown to `sizes` (element-wise at
+    /// least this plan set's own sizes) for a `d`-channel field. Called
+    /// by the multi-graph plan cache on insert and whenever the
+    /// cache-wide maxima grow, so warmed calls — including a session's
+    /// first call after migrating onto this entry — pop a fully-sized
+    /// buffer and allocate nothing.
+    pub fn prewarm(&self, count: usize, sizes: &WorkspaceSizes, d: usize) {
+        let target = self.sizes.max_with(sizes);
+        let rows = target.slab_rows * d;
+        let mut held = Vec::with_capacity(count);
+        for _ in 0..count {
+            let mut ws = self.workspaces.checkout(Workspace::new);
+            if ws.slab_in.len() < rows {
+                ws.slab_in.resize(rows, 0.0);
+            }
+            if ws.slab_out.len() < rows {
+                ws.slab_out.resize(rows, 0.0);
+            }
+            if ws.dirty_prefix.len() < target.slab_rows + 1 {
+                ws.dirty_prefix.resize(target.slab_rows + 1, 0);
+            }
+            ws.scratch.ensure(&target, d);
+            held.push(ws);
+        }
+        for ws in held {
+            self.workspaces.put_back(ws);
+        }
+        let mut forks = Vec::with_capacity(count);
+        for _ in 0..count {
+            let mut s = self.fork_scratch.checkout(NodeScratch::new);
+            s.ensure(&target, d);
+            forks.push(s);
+        }
+        for s in forks {
+            self.fork_scratch.put_back(s);
+        }
     }
 
     fn checkout_workspace(&self, d: usize) -> Workspace {

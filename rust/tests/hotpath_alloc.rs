@@ -211,6 +211,61 @@ fn prepared_integrate_after_a_replan_is_allocation_free_when_warmed() {
     );
 }
 
+/// The multi-graph migration hot path: a session migrating onto a
+/// graph whose plans were prewarmed the way the serving plan cache
+/// prewarms them — workspace and fork-scratch pools stocked at the
+/// *cache-wide* size maxima (`WorkspaceSizes::max_with` fold) — must
+/// re-warm nothing. Both the migration itself (a full integrate on the
+/// target plus the base swap) and the first delta update after it are
+/// pinned at zero allocations, on the session's *first* ever touch of
+/// the target graph.
+#[test]
+fn migration_onto_a_prewarmed_cached_graph_is_allocation_free() {
+    use ftfi::{SharedPlans, StreamingIntegrator};
+    use std::sync::Arc;
+    let n = 900;
+    let mut rng = Pcg::seed(10);
+    let tree_a = random_tree(n, 0.1, 1.0, &mut rng);
+    let tree_b = random_tree(n, 0.15, 1.2, &mut rng);
+    let f = FDist::inverse_quadratic(0.5);
+    let tfi_a = TreeFieldIntegrator::builder(&tree_a).threads(1).build().expect("valid tree");
+    let tfi_b = TreeFieldIntegrator::builder(&tree_b).threads(1).build().expect("valid tree");
+    let plans_a = tfi_a.prepare_plans(&f, 2).expect("plannable f");
+    let plans_b = tfi_b.prepare_plans(&f, 2).expect("plannable f");
+    // What `PlanCache::insert` does for both entries: fold the
+    // cache-wide maxima and stock each pool at them.
+    let maxima = plans_a.sizes().max_with(&plans_b.sizes());
+    plans_a.prewarm(1, &maxima, 2);
+    plans_b.prewarm(1, &maxima, 2);
+    let a = Arc::new(SharedPlans::new(tfi_a, plans_a));
+    let b = Arc::new(SharedPlans::new(tfi_b, plans_b));
+
+    let x = Matrix::randn(n, 2, &mut rng);
+    let mut session = StreamingIntegrator::new(Arc::clone(&a), x, 0).expect("valid session");
+    // Warm the session surface on A only: two updates grow the
+    // dirty-list capacity; graph B stays untouched by this session.
+    let rows = [17u32];
+    let vals = Matrix::from_vec(1, 2, vec![0.25, -1.0]);
+    session.apply_update(&rows, &vals).expect("update");
+    session.apply_update(&rows, &vals).expect("update");
+
+    let before = allocs();
+    session.migrate(Arc::clone(&b)).expect("migrate");
+    let during = allocs() - before;
+    assert_eq!(
+        during, 0,
+        "first migration onto a prewarmed cached graph performed {during} heap allocations"
+    );
+
+    let before = allocs();
+    session.apply_update(&rows, &vals).expect("update");
+    let during = allocs() - before;
+    assert_eq!(
+        during, 0,
+        "first post-migration update performed {during} heap allocations"
+    );
+}
+
 /// Forced-separable exponential kernel: the rank-1 outer-product path
 /// with its arena accumulator.
 #[test]

@@ -1,0 +1,457 @@
+//! Session-churn equivalence harness for the multi-graph prepared-plan
+//! cache and fused delta batching (DESIGN.md "Multi-graph cache &
+//! update fusion").
+//!
+//! Randomized, seeded schedules of open-graph / set / update / replan /
+//! close / evict traffic over G graphs × S sessions are driven through
+//! [`StreamingFieldExecutor::execute_each`] in batch windows, and three
+//! invariants are pinned:
+//!
+//! 1. **Fusion is invisible** — a fused executor and an unfused one fed
+//!    the *identical* window sequence agree bit-for-bit: on every
+//!    response except the non-final members of a fused update run
+//!    (which by contract carry the post-run output), and on every
+//!    session's full lease state after every window.
+//! 2. **The cache is invisible** — a session that resolved its graph
+//!    through the plan cache (hits, misses, migrations and all) ends
+//!    bit-identical to a replay into a freshly-built executor whose
+//!    *default* graph is that session's graph (no cache involved).
+//! 3. **Eviction never poisons in-flight sessions** — under a
+//!    one-entry cache thrashed by competing opens, sessions holding
+//!    evicted entries keep serving, and their outputs still match the
+//!    fresh-built oracle.
+//!
+//! Every assertion carries a `REPRO:` message with the schedule seed
+//! and thread count, so a failure replays deterministically.
+
+use ftfi::config::CacheConfig;
+use ftfi::coordinator::protocol::{self, StreamRequest, StreamResponse};
+use ftfi::coordinator::{BatchExecutor, MetricsRegistry, StreamingFieldExecutor};
+use ftfi::ftfi::TreeFieldIntegrator;
+use ftfi::graph::generators;
+use ftfi::ml::rng::Pcg;
+use ftfi::{FDist, Tree};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// `G` same-sized trees; graph 0 is the executor's default, the rest
+/// resolve through `OpenGraph` and the plan cache.
+fn graphs_for(n: usize, g: usize, seed: u64) -> Vec<Tree> {
+    (0..g)
+        .map(|gi| {
+            let mut rng = Pcg::seed(seed ^ (0xC0DE + gi as u64));
+            generators::random_tree(n, 0.2, 1.0, &mut rng)
+        })
+        .collect()
+}
+
+fn build_exec(
+    tree: &Tree,
+    threads: usize,
+    refresh_every: usize,
+    capacity: usize,
+    max_graphs: usize,
+    fuse: bool,
+    metrics: &Arc<MetricsRegistry>,
+) -> StreamingFieldExecutor {
+    let f = FDist::Exponential { lambda: -0.45, scale: 1.0 };
+    let tfi = TreeFieldIntegrator::builder(tree).threads(threads).build().unwrap();
+    StreamingFieldExecutor::new(tfi, &f, 1, refresh_every, capacity, 16)
+        .unwrap()
+        .with_cache(CacheConfig { max_graphs, max_bytes_mb: 0, fuse_updates: fuse })
+        .with_metrics(Arc::clone(metrics))
+}
+
+fn set_req(session: u32, n: usize, rng: &mut Pcg) -> StreamRequest {
+    StreamRequest::Set {
+        session,
+        rows: n as u32,
+        channels: 1,
+        values: (0..n).map(|_| rng.normal() as f32).collect(),
+    }
+}
+
+fn update_req(session: u32, n: usize, rng: &mut Pcg) -> StreamRequest {
+    // Duplicate rows are allowed: staging telescopes per-row deltas.
+    let k = 1 + rng.below(4);
+    StreamRequest::Update {
+        session,
+        rows: (0..k).map(|_| rng.below(n) as u32).collect(),
+        channels: 1,
+        values: (0..k).map(|_| rng.normal() as f32).collect(),
+    }
+}
+
+fn open_req(session: u32, tree: &Tree) -> StreamRequest {
+    StreamRequest::OpenGraph {
+        session,
+        n: tree.n() as u32,
+        edges: tree.edges().to_vec(),
+    }
+}
+
+/// Drive one batch window through `execute_each`, decoding every typed
+/// response. Request ids are globally sequential so both executors in a
+/// comparison see identical frames.
+fn run_window(
+    exec: &StreamingFieldExecutor,
+    window: &[StreamRequest],
+    next_id: &mut u64,
+    repro: &str,
+) -> Vec<(u64, StreamResponse)> {
+    let words: Vec<Vec<f32>> = window
+        .iter()
+        .map(|r| {
+            let id = *next_id;
+            *next_id += 1;
+            protocol::request_words(r, id)
+        })
+        .collect();
+    exec.execute_each(&words)
+        .iter()
+        .map(|res| match res {
+            Ok(out) => protocol::response_from_words(out)
+                .unwrap_or_else(|e| panic!("undecodable response: {e}; {repro}")),
+            Err(e) => panic!("well-formed frame failed to decode: {e}; {repro}"),
+        })
+        .collect()
+}
+
+/// Bit-exact response comparison: float payloads are compared by their
+/// bit patterns (so `-0.0` vs `0.0` or a NaN sneak-in still fails).
+fn assert_resp_bits_eq(a: &StreamResponse, b: &StreamResponse, what: &str, repro: &str) {
+    if let (
+        StreamResponse::Output { session: sa, rows: ra, channels: ca, values: va },
+        StreamResponse::Output { session: sb, rows: rb, channels: cb, values: vb },
+    ) = (a, b)
+    {
+        assert_eq!((sa, ra, ca), (sb, rb, cb), "{what}: output shape diverged; {repro}");
+        let ba: Vec<u32> = va.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = vb.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ba, bb, "{what}: output bits diverged; {repro}");
+    } else {
+        assert_eq!(a, b, "{what}: responses diverged; {repro}");
+    }
+}
+
+/// Which indices of a window are comparable between a fused and an
+/// unfused run: everything except the non-final members of each maximal
+/// same-session update run (those carry the post-run output when
+/// fused, a progressive output when not — by documented contract).
+fn comparable_mask(window: &[StreamRequest]) -> Vec<bool> {
+    let mut cmp = vec![true; window.len()];
+    let mut pending: BTreeMap<u32, usize> = BTreeMap::new();
+    for (i, r) in window.iter().enumerate() {
+        let s = r.session();
+        if matches!(r, StreamRequest::Update { .. }) {
+            if let Some(prev) = pending.insert(s, i) {
+                cmp[prev] = false;
+            }
+        } else {
+            pending.remove(&s);
+        }
+    }
+    cmp
+}
+
+/// A seeded churn schedule: an admission window (every session opens
+/// its home graph and seeds a field), then `len` windows mixing naked
+/// re-opens (live migration / pending rebinds), re-sets, updates,
+/// leases, closes — plus solo replan windows, kept solo so the epoch
+/// every window observes is deterministic under parallel chains.
+#[allow(clippy::too_many_arguments)]
+fn make_windows(
+    seed: u64,
+    n: usize,
+    graphs: &[Tree],
+    sessions: u32,
+    len: usize,
+    with_close: bool,
+    with_replan: bool,
+) -> Vec<Vec<StreamRequest>> {
+    let mut rng = Pcg::new(seed, 0x51ED);
+    let mut windows = Vec::new();
+    let mut first = Vec::new();
+    for s in 0..sessions {
+        let gi = s as usize % graphs.len();
+        if gi > 0 {
+            first.push(open_req(s, &graphs[gi]));
+        }
+        first.push(set_req(s, n, &mut rng));
+    }
+    windows.push(first);
+    for _ in 0..len {
+        if with_replan && rng.below(5) == 0 {
+            let s = rng.below(sessions as usize) as u32;
+            let g = &graphs[rng.below(graphs.len())];
+            let (u, v, w) = g.edges()[rng.below(g.edges().len())];
+            let scale = if rng.bool(0.5) { 1.3 } else { 0.7 };
+            windows.push(vec![StreamRequest::ReplanEdge { session: s, u, v, w: w * scale }]);
+            continue;
+        }
+        let size = 1 + rng.below(6);
+        let mut w = Vec::new();
+        for _ in 0..size {
+            let s = rng.below(sessions as usize) as u32;
+            w.push(match rng.below(12) {
+                0 => set_req(s, n, &mut rng),
+                1 => open_req(s, &graphs[rng.below(graphs.len())]),
+                2 => StreamRequest::Lease { session: s },
+                3 if with_close => StreamRequest::Close { session: s },
+                _ => update_req(s, n, &mut rng),
+            });
+        }
+        windows.push(w);
+    }
+    windows
+}
+
+/// One churn schedule, fused vs unfused, window for window.
+fn run_fusion_schedule(seed: u64, threads: usize, n: usize, sessions: u32, capacity: usize) -> u64 {
+    let repro = format!("REPRO: serving_cache fusion schedule seed={seed} threads={threads}");
+    let graphs = graphs_for(n, 4, seed);
+    let fused_metrics = Arc::new(MetricsRegistry::new());
+    let plain_metrics = Arc::new(MetricsRegistry::new());
+    let fused = build_exec(&graphs[0], threads, 3, capacity, 8, true, &fused_metrics);
+    let plain = build_exec(&graphs[0], threads, 3, capacity, 8, false, &plain_metrics);
+    let windows = make_windows(seed, n, &graphs, sessions, 10, true, true);
+
+    let (mut id_a, mut id_b) = (0u64, 0u64);
+    for (wi, window) in windows.iter().enumerate() {
+        let got_fused = run_window(&fused, window, &mut id_a, &repro);
+        let got_plain = run_window(&plain, window, &mut id_b, &repro);
+        let cmp = comparable_mask(window);
+        for (i, ((ida, ra), (idb, rb))) in got_fused.iter().zip(&got_plain).enumerate() {
+            assert_eq!(ida, idb, "request ids desynced; {repro}");
+            if cmp[i] {
+                assert_resp_bits_eq(ra, rb, &format!("window {wi} response {i}"), &repro);
+            }
+        }
+        // Full session state after every window, bit for bit.
+        for s in 0..sessions {
+            let probe = StreamRequest::Lease { session: s };
+            assert_resp_bits_eq(
+                &fused.execute_request(&probe),
+                &plain.execute_request(&probe),
+                &format!("window {wi} lease of session {s}"),
+                &repro,
+            );
+        }
+    }
+    let (fa, fb) = (fused_metrics.snapshot(), plain_metrics.snapshot());
+    if threads == 1 {
+        // Serial windows resolve cache traffic in identical order.
+        assert_eq!(fa.cache_hits, fb.cache_hits, "cache hits diverged; {repro}");
+        assert_eq!(fa.cache_misses, fb.cache_misses, "cache misses diverged; {repro}");
+        assert_eq!(fa.cache_evictions, fb.cache_evictions, "cache evictions diverged; {repro}");
+    }
+    assert_eq!(fb.fused_updates, 0, "the unfused executor must not fuse; {repro}");
+    fa.fused_updates
+}
+
+/// The main harness: serial schedules with session-slot eviction
+/// pressure (capacity < sessions) plus parallel-chain schedules on a
+/// graph large enough to cross the fan-out cutoff. Fused runs must
+/// actually fuse somewhere across the sweep, or the harness is
+/// vacuous.
+#[test]
+fn churn_schedules_fused_matches_unfused_bit_for_bit() {
+    let mut total_fused = 0u64;
+    for seed in 0..30u64 {
+        total_fused += run_fusion_schedule(seed, 1, 24, 6, 4);
+    }
+    for seed in 100..108u64 {
+        // n = 256 ≥ PAR_MAP_MIN_N: chains genuinely fan out. Session
+        // capacity covers every session — LRU victim choice under
+        // racing clock stamps is the one schedule-level nondeterminism,
+        // so slot eviction stays a serial-schedule concern.
+        total_fused += run_fusion_schedule(seed, 4, 256, 5, 8);
+    }
+    assert!(total_fused > 0, "REPRO: no schedule ever fused an update run — harness is vacuous");
+}
+
+/// Replay log for the fresh-built-oracle pin: the session's home graph
+/// plus every state-changing request since its last `Set`.
+struct SessionLog {
+    graph: usize,
+    requests: Vec<StreamRequest>,
+}
+
+/// Schedule generator for the oracle pin: rebinds are always an
+/// `OpenGraph` immediately followed by a `Set` for the same session, so
+/// each session's state is fully determined by (home graph, last `Set`,
+/// subsequent updates) — the exact subsequence the oracle replays. No
+/// replans and no closes: every logged request must have executed.
+fn make_pinnable_windows(
+    seed: u64,
+    n: usize,
+    graphs: &[Tree],
+    sessions: u32,
+    len: usize,
+) -> (Vec<Vec<StreamRequest>>, Vec<SessionLog>) {
+    let mut rng = Pcg::new(seed, 0x0A0C);
+    let mut windows = Vec::new();
+    let mut logs: Vec<SessionLog> = (0..sessions)
+        .map(|s| SessionLog { graph: s as usize % graphs.len(), requests: Vec::new() })
+        .collect();
+    let mut first = Vec::new();
+    for s in 0..sessions {
+        let gi = logs[s as usize].graph;
+        if gi > 0 {
+            first.push(open_req(s, &graphs[gi]));
+        }
+        let set = set_req(s, n, &mut rng);
+        logs[s as usize].requests.push(set.clone());
+        first.push(set);
+    }
+    windows.push(first);
+    for _ in 0..len {
+        let size = 1 + rng.below(5);
+        let mut w = Vec::new();
+        for _ in 0..size {
+            let s = rng.below(sessions as usize) as u32;
+            let log = &mut logs[s as usize];
+            match rng.below(10) {
+                0 => {
+                    // Rebind: open + set as an adjacent pair. The log
+                    // restarts — state before a `Set` is overwritten.
+                    let gi = rng.below(graphs.len());
+                    if gi > 0 {
+                        w.push(open_req(s, &graphs[gi]));
+                    }
+                    let set = set_req(s, n, &mut rng);
+                    log.graph = gi;
+                    log.requests.clear();
+                    log.requests.push(set.clone());
+                    w.push(set);
+                }
+                1 => w.push(StreamRequest::Lease { session: s }),
+                _ => {
+                    let u = update_req(s, n, &mut rng);
+                    log.requests.push(u.clone());
+                    w.push(u);
+                }
+            }
+        }
+        windows.push(w);
+    }
+    (windows, logs)
+}
+
+/// Replay a session's log into a fresh executor whose *default* graph
+/// is the session's graph — no `OpenGraph`, no cache — and return its
+/// final lease.
+fn fresh_oracle_lease(
+    tree: &Tree,
+    threads: usize,
+    session: u32,
+    log: &[StreamRequest],
+    repro: &str,
+) -> StreamResponse {
+    let metrics = Arc::new(MetricsRegistry::new());
+    let oracle = build_exec(tree, threads, 3, 1, 8, false, &metrics);
+    for req in log {
+        let resp = oracle.execute_request(req);
+        assert!(
+            matches!(resp, StreamResponse::Output { .. }),
+            "oracle replay rejected a logged request: {resp:?}; {repro}"
+        );
+    }
+    oracle.execute_request(&StreamRequest::Lease { session })
+}
+
+/// Invariant 2: cached, migrated, fused serving pins bit-exactly to a
+/// per-graph fresh-built oracle.
+#[test]
+fn cached_sessions_match_a_fresh_built_per_graph_oracle() {
+    for (seed, threads, n) in [(7u64, 1usize, 24usize), (8, 1, 24), (9, 4, 256)] {
+        let repro = format!("REPRO: serving_cache oracle pin seed={seed} threads={threads}");
+        let sessions = 4u32;
+        let graphs = graphs_for(n, 3, seed);
+        let metrics = Arc::new(MetricsRegistry::new());
+        let live = build_exec(&graphs[0], threads, 3, 8, 8, true, &metrics);
+        let (windows, logs) = make_pinnable_windows(seed, n, &graphs, sessions, 8);
+        let mut next_id = 0u64;
+        for window in &windows {
+            run_window(&live, window, &mut next_id, &repro);
+        }
+        for (s, log) in logs.iter().enumerate() {
+            let live_lease = live.execute_request(&StreamRequest::Lease { session: s as u32 });
+            let oracle_lease =
+                fresh_oracle_lease(&graphs[log.graph], threads, s as u32, &log.requests, &repro);
+            assert_resp_bits_eq(
+                &live_lease,
+                &oracle_lease,
+                &format!("session {s} (graph {})", log.graph),
+                &repro,
+            );
+        }
+        let snap = metrics.snapshot();
+        assert!(snap.cache_misses >= 2, "both non-default graphs must have been built; {repro}");
+    }
+}
+
+/// Invariant 3: a one-entry cache thrashed by competing opens keeps
+/// every in-flight session serving, and their state still pins to the
+/// fresh-built oracle — eviction only drops the cache's reference.
+#[test]
+fn eviction_thrash_never_poisons_in_flight_sessions() {
+    let (seed, threads, n) = (66u64, 1usize, 24usize);
+    let repro = format!("REPRO: serving_cache eviction thrash seed={seed}");
+    let graphs = graphs_for(n, 3, seed);
+    let metrics = Arc::new(MetricsRegistry::new());
+    let live = build_exec(&graphs[0], threads, 3, 8, 1, true, &metrics);
+    let mut rng = Pcg::new(seed, 0xE71C);
+    let mut next_id = 0u64;
+
+    // Sessions 1 and 2 live on graphs 1 and 2; opening the second
+    // evicts the first's entry from the one-slot cache immediately.
+    let mut logs: Vec<SessionLog> = Vec::new();
+    for s in 1..=2u32 {
+        let set = set_req(s, n, &mut rng);
+        run_window(
+            &live,
+            &[open_req(s, &graphs[s as usize]), set.clone()],
+            &mut next_id,
+            &repro,
+        );
+        logs.push(SessionLog { graph: s as usize, requests: vec![set] });
+    }
+    for round in 0..6 {
+        // Session 3 churns the cache: re-open graph 1 then graph 2,
+        // forcing an eviction (and a rebuild miss) every round.
+        let churn_graph = 1 + round % 2;
+        run_window(
+            &live,
+            &[open_req(3, &graphs[churn_graph]), set_req(3, n, &mut rng)],
+            &mut next_id,
+            &repro,
+        );
+        let mut window = Vec::new();
+        for s in 1..=2u32 {
+            let u = update_req(s, n, &mut rng);
+            logs[s as usize - 1].requests.push(u.clone());
+            window.push(u);
+        }
+        for (i, (_, resp)) in run_window(&live, &window, &mut next_id, &repro).iter().enumerate() {
+            assert!(
+                matches!(resp, StreamResponse::Output { .. }),
+                "round {round}: in-flight session {} stopped serving: {resp:?}; {repro}",
+                i + 1
+            );
+        }
+    }
+    for (s, log) in logs.iter().enumerate() {
+        let session = s as u32 + 1;
+        assert_resp_bits_eq(
+            &live.execute_request(&StreamRequest::Lease { session }),
+            &fresh_oracle_lease(&graphs[log.graph], threads, session, &log.requests, &repro),
+            &format!("thrashed session {session}"),
+            &repro,
+        );
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(live.plan_cache().graphs(), 1, "cache must hold exactly its budget; {repro}");
+    assert!(snap.cache_evictions >= 5, "churn must actually evict; {repro}");
+    assert!(snap.cache_misses >= 6, "every re-open of an evicted graph rebuilds; {repro}");
+}

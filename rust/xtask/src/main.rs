@@ -62,13 +62,16 @@ const SUPPRESS_WINDOW: usize = 5;
 /// `tests/hotpath_alloc.rs`. The replan-adjacent `*_into` fns
 /// themselves (`leaf_apply_into`, `aggregate_into`, `combine_*_into`,
 /// and the post-replan `integrate_prepared_into` re-entry) are covered
-/// automatically by the `_into` suffix rule.
-const HOT_PATH_MANIFEST: [&str; 5] = [
+/// automatically by the `_into` suffix rule. `cache_lookup` is the
+/// plan-cache hit path every `OpenGraph` resolves through: a hit must
+/// stay key-compare + LRU-stamp + `Arc::clone`, never a rebuild.
+const HOT_PATH_MANIFEST: [&str; 6] = [
     "integrate_ws",
     "integrate_ws_delta",
     "integrate_prepared_into_pooled",
     "integrate_delta_prepared_into_pooled",
     "with",
+    "cache_lookup",
 ];
 
 /// Tokens that can allocate. `checkout_workspace`/`checkout_scratch`
